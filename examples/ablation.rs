@@ -1,0 +1,105 @@
+//! Ablation study for the design choices DESIGN.md §5 calls out:
+//!
+//!   A. partitioning scheme (equal / unequal / random) at scale —
+//!      does the landmark *locality* matter, or is any chunking fine?
+//!   B. weighted vs unweighted global stage — do local-center member
+//!      counts carry useful mass information?
+//!   C. compression/quality trade-off — inertia degradation vs c.
+//!
+//! ```sh
+//! cargo run --release --example ablation [--size 50000]
+//! ```
+
+use parsample::data::synthetic::paper_scaling_dataset;
+use parsample::partition::Scheme;
+use parsample::pipeline::{
+    traditional_kmeans_restarts, PipelineConfig, SubclusterPipeline,
+};
+use parsample::util::benchkit::print_table;
+
+fn arg(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v.parse().expect("bad integer"))
+        .unwrap_or(default)
+}
+
+fn main() -> parsample::Result<()> {
+    let m = arg("--size", 50_000);
+    let k = m / 500;
+    let data = paper_scaling_dataset(m, 21)?;
+    let base = traditional_kmeans_restarts(&data, k, 25, 0, 1)?;
+    println!("workload: M={m}, K={k}; traditional inertia {:.3}\n", base.inertia);
+
+    // --- A: scheme ablation ---
+    let mut rows = Vec::new();
+    for scheme in [Scheme::Equal, Scheme::Unequal, Scheme::Random] {
+        let cfg = PipelineConfig::builder()
+            .scheme(scheme)
+            .compression(5.0)
+            .final_k(k)
+            .weighted_global(true)
+            .build()?;
+        let t0 = std::time::Instant::now();
+        let r = SubclusterPipeline::new(cfg).run(&data)?;
+        rows.push(vec![
+            format!("{scheme:?}"),
+            format!("{:.2}", t0.elapsed().as_secs_f64()),
+            format!("{:.2}x", r.inertia / base.inertia),
+            format!("{}", r.num_groups),
+            format!("{}", r.local_centers),
+        ]);
+    }
+    print_table(
+        "A — partitioning scheme (c=5, weighted global)",
+        &["scheme", "seconds", "inertia vs trad", "groups", "local centers"],
+        &rows,
+    );
+
+    // --- B: weighted vs unweighted global ---
+    let mut rows = Vec::new();
+    for weighted in [true, false] {
+        let cfg = PipelineConfig::builder()
+            .compression(5.0)
+            .final_k(k)
+            .weighted_global(weighted)
+            .build()?;
+        let r = SubclusterPipeline::new(cfg).run(&data)?;
+        rows.push(vec![
+            if weighted { "weighted (counts)" } else { "unweighted" }.into(),
+            format!("{:.2}x", r.inertia / base.inertia),
+        ]);
+    }
+    print_table(
+        "B — global stage weighting (unequal, c=5)",
+        &["global stage", "inertia vs trad"],
+        &rows,
+    );
+
+    // --- C: compression/quality trade-off ---
+    let mut rows = Vec::new();
+    for c in [2.0f32, 5.0, 10.0, 20.0, 50.0] {
+        let cfg = PipelineConfig::builder()
+            .compression(c)
+            .final_k(k)
+            .weighted_global(true)
+            .build()?;
+        match SubclusterPipeline::new(cfg).run(&data) {
+            Ok(r) => rows.push(vec![
+                format!("{c}"),
+                format!("{:.2}", r.timings.total_ms / 1e3),
+                format!("{:.2}x", r.inertia / base.inertia),
+                format!("{}", r.local_centers),
+            ]),
+            Err(e) => rows.push(vec![format!("{c}"), "—".into(), format!("({e})"), "—".into()]),
+        }
+    }
+    print_table(
+        "C — compression vs quality (unequal, weighted)",
+        &["compression", "seconds", "inertia vs trad", "local centers"],
+        &rows,
+    );
+    Ok(())
+}

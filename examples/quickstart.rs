@@ -1,0 +1,52 @@
+//! Quickstart: the public API in ~40 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Clusters Iris with the paper's pipeline (unequal subclustering,
+//! 6 groups, 6× compression) and compares against traditional k-means.
+
+use parsample::data::builtin;
+use parsample::eval;
+use parsample::partition::Scheme;
+use parsample::pipeline::{traditional_kmeans, PipelineConfig, SubclusterPipeline};
+
+fn main() -> parsample::Result<()> {
+    // 1. a labelled dataset (150 points, 4 attributes, 3 classes)
+    let data = builtin::iris();
+
+    // 2. configure the paper's pipeline
+    let cfg = PipelineConfig::builder()
+        .scheme(Scheme::Unequal)  // Algorithm 2
+        .num_groups(6)            // paper's Table-1 setting
+        .compression(6.0)         // 6x compression
+        .final_k(3)
+        .weighted_global(true)    // weight pooled centers by member count
+        .build()?;
+
+    // 3. run it
+    let result = SubclusterPipeline::new(cfg).run(&data)?;
+    println!(
+        "pipeline : {} groups -> {} local centers -> 3 final clusters",
+        result.num_groups, result.local_centers
+    );
+    println!("timings  : {}", result.timings.summary());
+
+    // 4. score against ground truth (the paper's Table-1 metric)
+    let truth = data.labels().expect("iris is labelled");
+    println!(
+        "pipeline : {}/150 correctly clustered (inertia {:.4})",
+        eval::correct_count(&result.labels, truth)?,
+        result.inertia
+    );
+
+    // 5. the traditional baseline for comparison
+    let base = traditional_kmeans(&data, 3, 50, 0)?;
+    println!(
+        "baseline : {}/150 correctly clustered (inertia {:.4})",
+        eval::correct_count(&base.labels, truth)?,
+        base.inertia
+    );
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Serving demo: boot the clustering job server, drive it with
+//! concurrent clients over TCP, report latency/throughput + stats.
+//!
+//! ```sh
+//! cargo run --release --example service_demo [--requests 24] [--clients 4]
+//! ```
+//!
+//! Shows the L3 runtime behaving like a service: bounded-queue
+//! backpressure, JSON-lines protocol, per-request latency, and the
+//! scheduler's counters at the end.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use parsample::coordinator::SchedulerConfig;
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::server::{Client, Server};
+use parsample::util::json::Json;
+
+fn arg(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v.parse().expect("bad integer arg"))
+        .unwrap_or(default)
+}
+
+fn main() -> parsample::Result<()> {
+    let requests = arg("--requests", 24);
+    let clients = arg("--clients", 4);
+
+    // ephemeral port; bounded queue so overload rejects instead of piling
+    let server = Server::start(
+        "127.0.0.1:0",
+        SchedulerConfig { queue_depth: 8, ..Default::default() },
+    )?;
+    let addr = server.addr();
+    println!("server on {addr} | {clients} clients x {requests} total requests");
+
+    let sent = Arc::new(AtomicU64::new(0));
+    let ok = Arc::new(AtomicU64::new(0));
+    let rejected = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let sent = Arc::clone(&sent);
+            let ok = Arc::clone(&ok);
+            let rejected = Arc::clone(&rejected);
+            s.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                loop {
+                    let id = sent.fetch_add(1, Ordering::SeqCst);
+                    if id >= requests as u64 {
+                        break;
+                    }
+                    // each request is a fresh 4-blob dataset
+                    let data = make_blobs(&BlobSpec {
+                        num_points: 2000,
+                        num_clusters: 4,
+                        dims: 2,
+                        std: 0.05,
+                        extent: 10.0,
+                        seed: id,
+                    })
+                    .unwrap();
+                    let points: Vec<String> = (0..data.len())
+                        .map(|i| {
+                            let r = data.row(i);
+                            format!("[{},{}]", r[0], r[1])
+                        })
+                        .collect();
+                    let req = format!(
+                        "{{\"cmd\":\"cluster\",\"id\":{id},\"points\":[{}],\"k\":4,\
+                         \"scheme\":\"unequal\",\"compression\":5,\"num_groups\":4}}",
+                        points.join(",")
+                    );
+                    let t = Instant::now();
+                    let resp = client.call(&req).expect("call");
+                    let v = Json::parse(&resp).expect("json response");
+                    let latency = t.elapsed().as_secs_f64() * 1e3;
+                    if v.get("ok") == Some(&Json::Bool(true)) {
+                        ok.fetch_add(1, Ordering::SeqCst);
+                        println!(
+                            "client {c}: job {id} ok in {latency:.1} ms (inertia {:.3})",
+                            v.get("inertia").and_then(Json::as_f64).unwrap_or(f64::NAN)
+                        );
+                    } else {
+                        rejected.fetch_add(1, Ordering::SeqCst);
+                        println!(
+                            "client {c}: job {id} rejected: {}",
+                            v.get("error").and_then(Json::as_str).unwrap_or("?")
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    let wall = t0.elapsed().as_secs_f64();
+    let done = ok.load(Ordering::SeqCst);
+    println!(
+        "\n{done}/{requests} ok, {} rejected | wall {wall:.2}s | throughput {:.1} req/s",
+        rejected.load(Ordering::SeqCst),
+        done as f64 / wall
+    );
+    println!(
+        "latency histogram: p50 {} us | p99 {} us | mean {:.0} us | max {} us",
+        server.latency.quantile_us(0.5),
+        server.latency.quantile_us(0.99),
+        server.latency.mean_us(),
+        server.latency.max_us()
+    );
+
+    // query server-side stats over the wire
+    let mut client = Client::connect(addr)?;
+    println!("stats: {}", client.call("{\"cmd\":\"stats\"}")?);
+    Ok(())
+}

@@ -1,0 +1,137 @@
+"""AOT compiler: lower the L2 model to HLO text + manifest for the rust runtime.
+
+Run once at build time (``make artifacts``); python never appears on the
+request path.  For every shape bucket in ``BUCKETS`` this lowers
+``model.kmeans_run`` and writes ``artifacts/<name>.hlo.txt`` plus a
+``manifest.json`` that tells the rust registry (rust/src/runtime/registry.rs)
+which executable fits a given (n, d, k) request.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  Lowered with
+``return_tuple=True`` so the rust side unwraps one tuple.
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+from dataclasses import asdict, dataclass
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import kmeans_run
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One AOT shape bucket (see DESIGN.md §6).
+
+    b: sub-regions per dispatch, n: padded points/region, d: padded
+    attributes, k: padded center slots, iters: Lloyd iterations baked
+    into the executable.
+    """
+
+    name: str
+    b: int
+    n: int
+    d: int
+    k: int
+    iters: int
+
+
+# Keep in sync with DESIGN.md §6 and rust/src/runtime/manifest.rs tests.
+# Local buckets keep k/n = 0.25 so the paper's smallest compression value
+# (c=5, hence k_i = n_i/5) always fits after the batcher's group
+# splitting; the xl bucket trades ratio for capacity (c >= 16).
+BUCKETS: tuple[Bucket, ...] = (
+    # local stage, small datasets (Iris/Seeds: G=6 regions, <=64 pts each)
+    Bucket("local_s", b=8, n=64, d=8, k=16, iters=10),
+    # local stage, mid-size regions
+    Bucket("local_m", b=8, n=512, d=8, k=128, iters=10),
+    # local stage, T2/T3 regions at low compression (c >= 4)
+    Bucket("local_l", b=8, n=2048, d=8, k=512, iters=10),
+    # local stage, big regions at high compression (c >= 16)
+    Bucket("local_xl", b=4, n=8192, d=8, k=512, iters=10),
+    # global stage over pooled local centers (small/medium experiments)
+    Bucket("global_m", b=1, n=16384, d=8, k=256, iters=20),
+    # global stage for T2/T3: up to 100k pooled centers, K up to 1024
+    Bucket("global_l", b=1, n=131072, d=8, k=1024, iters=12),
+)
+
+
+def lower_bucket(bucket: Bucket) -> str:
+    """Lower one bucket to HLO text."""
+    f32 = jax.numpy.float32
+    points = jax.ShapeDtypeStruct((bucket.b, bucket.n, bucket.d), f32)
+    weights = jax.ShapeDtypeStruct((bucket.b, bucket.n), f32)
+    init = jax.ShapeDtypeStruct((bucket.b, bucket.k, bucket.d), f32)
+    fn = functools.partial(kmeans_run, iters=bucket.iters, interpret=True)
+    lowered = jax.jit(fn).lower(points, weights, init)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def bucket_manifest_entry(bucket: Bucket, filename: str, hlo_text: str) -> dict:
+    """Manifest record the rust registry consumes; shapes are explicit so
+    the rust side never has to parse HLO to size its buffers."""
+    b, n, d, k = bucket.b, bucket.n, bucket.d, bucket.k
+    return {
+        **asdict(bucket),
+        "file": filename,
+        "sha256": hashlib.sha256(hlo_text.encode()).hexdigest(),
+        "inputs": [
+            {"name": "points", "shape": [b, n, d], "dtype": "f32"},
+            {"name": "weights", "shape": [b, n], "dtype": "f32"},
+            {"name": "init_centers", "shape": [b, k, d], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "centers", "shape": [b, k, d], "dtype": "f32"},
+            {"name": "labels", "shape": [b, n], "dtype": "i32"},
+            {"name": "counts", "shape": [b, k], "dtype": "f32"},
+            {"name": "inertia", "shape": [b], "dtype": "f32"},
+        ],
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="lower a single bucket by name")
+    parser.add_argument(
+        "--out", default=None, help="(legacy) ignored; kept for Makefile compat"
+    )
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for bucket in BUCKETS:
+        if args.only and bucket.name != args.only:
+            continue
+        hlo = lower_bucket(bucket)
+        filename = f"{bucket.name}.hlo.txt"
+        path = os.path.join(args.out_dir, filename)
+        with open(path, "w") as f:
+            f.write(hlo)
+        entries.append(bucket_manifest_entry(bucket, filename, hlo))
+        print(f"lowered {bucket.name}: {len(hlo)} chars -> {path}")
+
+    manifest = {"version": 1, "buckets": entries}
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path} ({len(entries)} buckets)")
+
+
+if __name__ == "__main__":
+    main()

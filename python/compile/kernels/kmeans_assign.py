@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: the k-means assignment + accumulation hot-spot.
+
+This is the paper's *device part*.  The CUDA original ran one thread
+block per sub-region with the centers staged in shared memory; here one
+**grid step** handles one (sub-region, point-tile) pair with the centers
+block resident in VMEM and the point tile streamed HBM->VMEM via
+BlockSpec (see DESIGN.md §Hardware-Adaptation).
+
+The distance computation uses the expansion
+``|x|^2 - 2 x.c^T + |c|^2`` so the inner product lands on the MXU
+(bf16/f32 systolic matmul) instead of a broadcast-subtract that would
+run on the VPU.  Per-cluster sums are accumulated with a second matmul
+(``onehot^T @ x``), which is also MXU-shaped.
+
+MUST be lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md).  Grid iteration is
+sequential in interpret mode and on real TPU, so the revisit-accumulate
+pattern on the stats outputs is well defined.
+
+VMEM estimate per grid step (f32):
+    x tile        TN*D*4
+  + centers       K*D*4
+  + dist/onehot   2*TN*K*4
+  + sums          K*D*4
+which for the largest bucket (TN=512, K=1024, D=8) is ~4.3 MiB — well
+under the 16 MiB/core budget; see DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile_n(n: int) -> int:
+    """Point-tile size: whole region when small, 512-row tiles otherwise.
+
+    512 rows keeps the dist/onehot scratch (2*TN*K*4B) inside VMEM for
+    K up to 2048 while still feeding the MXU full 128-lane tiles.
+    """
+    for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % cand == 0 and cand <= n:
+            return cand
+    return 1
+
+
+def _assign_kernel(x_ref, c_ref, w_ref, labels_ref, sums_ref, counts_ref, inertia_ref):
+    """One grid step: tile ``t`` of sub-region ``b``.
+
+    Block shapes (leading 1 is the squeezed batch slot):
+      x [1,TN,D]  c [1,K,D]  w [1,TN]
+      labels [1,TN]  sums [1,K,D]  counts [1,K]  inertia [1]
+    """
+    x = x_ref[0]                                   # [TN, D]
+    c = c_ref[0]                                   # [K, D]
+    w = w_ref[0]                                   # [TN]
+    k = c.shape[0]
+
+    xn = jnp.sum(x * x, axis=1, keepdims=True)     # [TN, 1]
+    cn = jnp.sum(c * c, axis=1)[None, :]           # [1, K]
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(xn - 2.0 * xc + cn, 0.0)      # [TN, K]
+
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    min_d2 = jnp.min(d2, axis=1)
+    labels_ref[0] = labels
+
+    onehot = (labels[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(jnp.float32) * w[:, None]               # [TN, K]
+    part_sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    part_counts = jnp.sum(onehot, axis=0)
+    part_inertia = jnp.sum(min_d2 * w)
+
+    tile = pl.program_id(1)
+
+    @pl.when(tile == 0)
+    def _init():
+        sums_ref[0] = part_sums
+        counts_ref[0] = part_counts
+        inertia_ref[0] = part_inertia
+
+    @pl.when(tile != 0)
+    def _accum():
+        sums_ref[0] += part_sums
+        counts_ref[0] += part_counts
+        inertia_ref[0] += part_inertia
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kmeans_assign(points, centers, weights, *, interpret: bool = True):
+    """Batched assignment pass over padded sub-regions.
+
+    points f32[B,N,D], centers f32[B,K,D], weights f32[B,N] ->
+      (labels i32[B,N], sums f32[B,K,D], counts f32[B,K], inertia f32[B])
+
+    Semantics are exactly ``ref.assign_stats`` (tested in
+    python/tests/test_kernel.py, hypothesis-swept over shapes).
+    """
+    b, n, d = points.shape
+    _, k, _ = centers.shape
+    tn = _tile_n(n)
+    grid = (b, n // tn)
+
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tn, d), lambda bi, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, k, d), lambda bi, ti: (bi, 0, 0)),
+            pl.BlockSpec((1, tn), lambda bi, ti: (bi, ti)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tn), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((1, k, d), lambda bi, ti: (bi, 0, 0)),
+            pl.BlockSpec((1, k), lambda bi, ti: (bi, 0)),
+            pl.BlockSpec((1,), lambda bi, ti: (bi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(points, centers, weights)

@@ -1,0 +1,83 @@
+"""Pure-jnp correctness oracle for the k-means device code.
+
+Every function here is the *reference semantics* that both the Pallas
+kernel (``kmeans_assign.py``) and the batched model (``model.py``) are
+tested against in ``python/tests/``.  Nothing in this file is lowered
+into artifacts; it exists only so correctness has a single, obviously
+correct definition.
+
+Conventions (shared with the rust coordinator, see rust/src/runtime):
+  * points   f32[B, N, D]  — padded sub-regions, row-major
+  * weights  f32[B, N]     — 1.0 for real points, 0.0 for padding
+  * centers  f32[B, K, D]  — padded center slots
+  * labels   i32[B, N]     — nearest-center index (padding gets a label
+                             too; it is weight-masked out of every sum)
+  * empty clusters keep their previous center (count == 0 rule)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(points: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """Squared euclidean distances, expansion form.
+
+    points f32[..., N, D], centers f32[..., K, D] -> f32[..., N, K].
+
+    Uses ``|x|^2 - 2 x.c + |c|^2`` (the MXU-friendly form the kernel
+    uses) rather than a broadcast-subtract, so the oracle and the kernel
+    share rounding behaviour; clamped at zero like the kernel.
+    """
+    xn = jnp.sum(points * points, axis=-1, keepdims=True)          # [...,N,1]
+    cn = jnp.sum(centers * centers, axis=-1)[..., None, :]          # [...,1,K]
+    xc = jnp.matmul(points, jnp.swapaxes(centers, -1, -2))          # [...,N,K]
+    return jnp.maximum(xn - 2.0 * xc + cn, 0.0)
+
+
+def assign(points, centers):
+    """labels i32[..., N]: index of the nearest center."""
+    return jnp.argmin(pairwise_sq_dists(points, centers), axis=-1).astype(jnp.int32)
+
+
+def assign_stats(points, centers, weights):
+    """One full assignment pass: labels + the statistics the update needs.
+
+    Returns (labels i32[...,N], sums f32[...,K,D], counts f32[...,K],
+    inertia f32[...]) — all weight-masked.
+    """
+    d2 = pairwise_sq_dists(points, centers)
+    labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    min_d2 = jnp.min(d2, axis=-1)
+    k = centers.shape[-2]
+    onehot = jnp.equal(
+        labels[..., None], jnp.arange(k, dtype=jnp.int32)
+    ).astype(points.dtype) * weights[..., None]                     # [...,N,K]
+    sums = jnp.matmul(jnp.swapaxes(onehot, -1, -2), points)         # [...,K,D]
+    counts = jnp.sum(onehot, axis=-2)                               # [...,K]
+    inertia = jnp.sum(min_d2 * weights, axis=-1)                    # [...]
+    return labels, sums, counts, inertia
+
+
+def update(centers, sums, counts):
+    """New centers; empty clusters keep the previous center."""
+    denom = jnp.maximum(counts[..., None], 1.0)
+    return jnp.where(counts[..., None] > 0.0, sums / denom, centers)
+
+
+def lloyd_step(points, weights, centers):
+    """One Lloyd iteration. Returns (new_centers, labels, counts, inertia)."""
+    labels, sums, counts, inertia = assign_stats(points, centers, weights)
+    return update(centers, sums, counts), labels, counts, inertia
+
+
+def lloyd(points, weights, init_centers, iters: int):
+    """``iters`` Lloyd iterations, then a final assignment pass so the
+    returned labels/counts/inertia are consistent with the returned
+    centers. Matches model.kmeans_run exactly.
+    """
+    centers = init_centers
+    for _ in range(iters):
+        centers, _, _, _ = lloyd_step(points, weights, centers)
+    labels, _, counts, inertia = assign_stats(points, centers, weights)
+    return centers, labels, counts, inertia

@@ -1,0 +1,60 @@
+"""L2: the batched k-means compute graph lowered into the artifacts.
+
+This is the whole *device part* of the paper as one jitted function:
+``iters`` Lloyd iterations over a batch of padded sub-regions, with the
+assignment hot-spot delegated to the L1 Pallas kernel
+(``kernels.kmeans_assign``) so kernel + surrounding graph lower into a
+single HLO module.
+
+The iteration loop is a ``lax.scan`` (not an unrolled python loop) so
+the lowered module stays small for any ``iters`` — see DESIGN.md §7.
+A final assignment pass after the scan makes the returned labels /
+counts / inertia consistent with the returned centers.
+
+Exactly mirrors ``kernels.ref.lloyd`` (tested in tests/test_model.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.kmeans_assign import kmeans_assign
+
+
+def kmeans_step(points, weights, centers, *, interpret: bool = True):
+    """One Lloyd iteration: assign (Pallas) + masked centroid update.
+
+    Empty clusters (count == 0 after weight masking) keep their previous
+    center — same rule as the rust native backend and ref.update.
+    """
+    labels, sums, counts, inertia = kmeans_assign(
+        points, centers, weights, interpret=interpret
+    )
+    denom = jnp.maximum(counts[..., None], 1.0)
+    new_centers = jnp.where(counts[..., None] > 0.0, sums / denom, centers)
+    return new_centers, labels, counts, inertia
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def kmeans_run(points, weights, init_centers, *, iters: int, interpret: bool = True):
+    """The artifact entrypoint.
+
+    points f32[B,N,D], weights f32[B,N], init_centers f32[B,K,D] ->
+      (centers f32[B,K,D], labels i32[B,N], counts f32[B,K], inertia f32[B])
+    """
+
+    def body(centers, _):
+        new_centers, _, _, _ = kmeans_step(
+            points, weights, centers, interpret=interpret
+        )
+        return new_centers, None
+
+    centers, _ = lax.scan(body, init_centers, None, length=iters)
+    labels, _, counts, inertia = kmeans_assign(
+        points, centers, weights, interpret=interpret
+    )
+    return centers, labels, counts, inertia

@@ -1,0 +1,99 @@
+"""AOT pipeline sanity: bucket lowering, manifest integrity, and HLO-text
+round-trip constraints the rust runtime relies on."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import BUCKETS, Bucket, bucket_manifest_entry, lower_bucket
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestBucketTable:
+    def test_names_unique(self):
+        names = [b.name for b in BUCKETS]
+        assert len(names) == len(set(names))
+
+    def test_shapes_positive_and_sane(self):
+        for b in BUCKETS:
+            assert b.b >= 1 and b.n >= 1 and b.d >= 1 and b.k >= 1
+            assert b.k <= b.n, f"{b.name}: more center slots than points"
+            assert 1 <= b.iters <= 64
+
+    def test_covers_paper_workloads(self):
+        """The bucket table must fit every experiment in DESIGN.md §5."""
+        def fits(n, d, k):
+            return any(b.n >= n and b.d >= d and b.k >= k for b in BUCKETS)
+
+        assert fits(25, 4, 5)        # Iris local: 150/6 pts, 150/6/6≈5 centers
+        assert fits(35, 7, 6)        # Seeds local
+        assert fits(150, 4, 3)       # Iris global
+        assert fits(100_000, 2, 1000)  # T2 global stage @500k, c=5
+        assert fits(5000, 2, 1000 // 8 + 1)  # T2 local region
+
+    def test_vmem_budget(self):
+        """DESIGN.md §7 estimate: per-grid-step VMEM <= 16 MiB."""
+        for b in BUCKETS:
+            tn = min(512, b.n)
+            vmem = 4 * (tn * b.d + b.k * b.d * 2 + 2 * tn * b.k + tn)
+            assert vmem <= 16 * 2**20, f"{b.name}: {vmem} bytes"
+
+
+class TestLowering:
+    def test_smallest_bucket_lowers_to_text(self):
+        hlo = lower_bucket(Bucket("tiny", b=1, n=8, d=2, k=2, iters=2))
+        assert hlo.startswith("HloModule")
+        # scan must stay rolled: a while loop, not `iters` unrolled bodies
+        assert "while" in hlo
+
+    def test_entry_has_three_params_tuple_root(self):
+        hlo = lower_bucket(Bucket("tiny", b=1, n=8, d=2, k=2, iters=1))
+        entry = [l for l in hlo.splitlines() if "ENTRY" in l]
+        assert entry, "no ENTRY computation"
+        # rust side passes exactly (points, weights, init_centers)
+        params = [l for l in hlo.split("ENTRY")[1].splitlines() if "parameter(" in l]
+        assert len(params) == 3
+
+    def test_manifest_entry_shapes(self):
+        b = Bucket("tiny", b=2, n=8, d=3, k=4, iters=1)
+        e = bucket_manifest_entry(b, "tiny.hlo.txt", "HloModule x")
+        assert e["inputs"][0]["shape"] == [2, 8, 3]
+        assert e["inputs"][1]["shape"] == [2, 8]
+        assert e["inputs"][2]["shape"] == [2, 4, 3]
+        assert e["outputs"][0]["shape"] == [2, 4, 3]
+        assert e["outputs"][1]["dtype"] == "i32"
+        assert len(e["sha256"]) == 64
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    """Validate the artifacts/ directory the rust runtime will load."""
+
+    def _manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_bucket_present(self):
+        m = self._manifest()
+        names = {e["name"] for e in m["buckets"]}
+        assert names == {b.name for b in BUCKETS}
+
+    def test_files_exist_and_are_hlo_text(self):
+        for e in self._manifest()["buckets"]:
+            path = os.path.join(ARTIFACTS, e["file"])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), f"{path} is not HLO text"
+
+    def test_manifest_hashes_match_files(self):
+        import hashlib
+
+        for e in self._manifest()["buckets"]:
+            with open(os.path.join(ARTIFACTS, e["file"]), "rb") as f:
+                assert hashlib.sha256(f.read()).hexdigest() == e["sha256"]

@@ -1,0 +1,168 @@
+"""L1 correctness: Pallas kmeans_assign vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the device code.  Hypothesis
+sweeps the shape space (B, N, D, K), padding ratios, and degenerate
+inputs; every property asserts allclose (or exact equality for integer
+outputs) against kernels.ref.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.kmeans_assign import kmeans_assign, _tile_n
+
+ATOL = 1e-4
+RTOL = 1e-4
+
+
+def _case(seed, b, n, d, k, pad_frac=0.0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    points = rng.normal(scale=scale, size=(b, n, d)).astype(np.float32)
+    centers = rng.normal(scale=scale, size=(b, k, d)).astype(np.float32)
+    weights = np.ones((b, n), dtype=np.float32)
+    n_pad = int(n * pad_frac)
+    if n_pad:
+        weights[:, n - n_pad :] = 0.0
+        points[:, n - n_pad :, :] = 0.0
+    return jnp.asarray(points), jnp.asarray(centers), jnp.asarray(weights)
+
+
+def _check(points, centers, weights):
+    l_k, s_k, c_k, i_k = kmeans_assign(points, centers, weights)
+    l_r, s_r, c_r, i_r = ref.assign_stats(points, centers, weights)
+    np.testing.assert_array_equal(np.asarray(l_k), np.asarray(l_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), atol=0, rtol=0)
+    np.testing.assert_allclose(np.asarray(i_k), np.asarray(i_r), atol=ATOL, rtol=RTOL)
+
+
+class TestFixedShapes:
+    """Deterministic cases covering each AOT bucket geometry."""
+
+    @pytest.mark.parametrize(
+        "b,n,d,k",
+        [
+            (1, 8, 2, 2),        # minimal
+            (8, 64, 8, 16),      # local_s bucket
+            (2, 1024, 8, 64),    # local_m geometry (reduced batch for speed)
+            (1, 2048, 8, 128),   # global-ish geometry
+            (3, 96, 5, 7),       # non-power-of-two everything
+            (4, 33, 3, 5),       # odd N -> forces small tile
+            (1, 512, 1, 4),      # single attribute
+            (1, 16, 7, 16),      # K == N
+        ],
+    )
+    def test_matches_ref(self, b, n, d, k):
+        _check(*_case(0, b, n, d, k))
+
+    def test_with_padding(self):
+        _check(*_case(1, 4, 128, 6, 9, pad_frac=0.25))
+
+    def test_all_padding_region(self):
+        """A fully-padded region must contribute zero counts/inertia."""
+        points, centers, weights = _case(2, 3, 64, 4, 8)
+        weights = weights.at[1].set(0.0)
+        _, _, counts, inertia = kmeans_assign(points, centers, weights)
+        assert float(jnp.sum(counts[1])) == 0.0
+        assert float(inertia[1]) == 0.0
+        _check(points, centers, weights)
+
+    def test_identical_points(self):
+        """All points identical: one cluster takes everything."""
+        points = jnp.ones((2, 32, 4), jnp.float32)
+        centers = jnp.stack(
+            [jnp.ones((8, 4), jnp.float32), jnp.zeros((8, 4), jnp.float32)]
+        ) * jnp.arange(8, dtype=jnp.float32)[None, :, None]
+        weights = jnp.ones((2, 32), jnp.float32)
+        _check(points, centers, weights)
+
+    def test_duplicate_centers_tie_break(self):
+        """Exact-duplicate centers: argmin must take the lowest index,
+        matching both jnp.argmin in the oracle and the rust backend."""
+        points, _, weights = _case(3, 2, 64, 4, 8)
+        rng = np.random.default_rng(3)
+        base = rng.normal(size=(1, 4, 4)).astype(np.float32)
+        centers = jnp.asarray(np.concatenate([base, base], axis=1).repeat(2, axis=0))
+        labels, _, _, _ = kmeans_assign(points, centers, weights)
+        assert int(jnp.max(labels)) < 4  # duplicates (idx 4..7) never win
+        _check(points, centers, weights)
+
+    def test_large_magnitudes(self):
+        _check(*_case(4, 2, 64, 4, 8, scale=1e3))
+
+    def test_tiny_magnitudes(self):
+        _check(*_case(5, 2, 64, 4, 8, scale=1e-3))
+
+    def test_counts_sum_to_weights(self):
+        points, centers, weights = _case(6, 4, 256, 3, 12, pad_frac=0.1)
+        _, _, counts, _ = kmeans_assign(points, centers, weights)
+        np.testing.assert_allclose(
+            np.asarray(jnp.sum(counts, axis=1)),
+            np.asarray(jnp.sum(weights, axis=1)),
+            rtol=0,
+            atol=0,
+        )
+
+    def test_sums_match_scatter(self):
+        """sums[k] must equal the literal masked scatter-add of points."""
+        points, centers, weights = _case(7, 2, 128, 4, 6)
+        labels, sums, _, _ = kmeans_assign(points, centers, weights)
+        pts, lbl, w = map(np.asarray, (points, labels, weights))
+        expect = np.zeros((2, 6, 4), np.float32)
+        for b in range(2):
+            for i in range(128):
+                expect[b, lbl[b, i]] += pts[b, i] * w[b, i]
+        np.testing.assert_allclose(np.asarray(sums), expect, atol=1e-3, rtol=1e-4)
+
+
+class TestTileSelection:
+    def test_divides(self):
+        for n in [1, 2, 7, 64, 96, 100, 512, 1000, 1024, 8192, 131072]:
+            tn = _tile_n(n)
+            assert n % tn == 0 and 1 <= tn <= 512
+
+    def test_prefers_large_tiles(self):
+        assert _tile_n(1024) == 512
+        assert _tile_n(64) == 64
+        assert _tile_n(131072) == 512
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 4),
+    n=st.integers(1, 160),
+    d=st.integers(1, 9),
+    k=st.integers(1, 24),
+    pad=st.floats(0.0, 0.9),
+)
+def test_hypothesis_shape_sweep(seed, b, n, d, k, pad):
+    """Property: kernel == oracle for arbitrary shapes & padding."""
+    _check(*_case(seed, b, n, d, k, pad_frac=pad))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([64, 128, 512, 1024]),
+    k=st.sampled_from([8, 64, 128]),
+)
+def test_hypothesis_bucket_geometries(seed, n, k):
+    """Property: bucket-like power-of-two geometries (multi-tile paths)."""
+    _check(*_case(seed, 2, n, 8, k, pad_frac=0.3))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 8))
+def test_hypothesis_labels_are_nearest(seed, d):
+    """Property: every reported label is a true argmin under brute force."""
+    points, centers, weights = _case(seed, 2, 40, d, 6)
+    labels, _, _, _ = kmeans_assign(points, centers, weights)
+    pts, cts, lbl = map(np.asarray, (points, centers, labels))
+    d2 = ((pts[:, :, None, :] - cts[:, None, :, :]) ** 2).sum(-1)
+    best = d2.min(axis=2)
+    chosen = np.take_along_axis(d2, lbl[:, :, None], axis=2)[:, :, 0]
+    np.testing.assert_allclose(chosen, best, atol=1e-4, rtol=1e-4)

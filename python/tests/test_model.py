@@ -1,0 +1,124 @@
+"""L2 correctness: model.kmeans_run (scan + Pallas) vs kernels.ref.lloyd,
+plus convergence properties of the Lloyd loop itself."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import kmeans_run, kmeans_step
+
+
+def _blobs(seed, b, n, d, k_true, spread=0.05):
+    """Batch of b padded regions, each a mixture of k_true tight blobs."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-1, 1, size=(b, k_true, d))
+    assign = rng.integers(0, k_true, size=(b, n))
+    pts = centers[np.arange(b)[:, None], assign] + rng.normal(
+        scale=spread, size=(b, n, d)
+    )
+    return jnp.asarray(pts.astype(np.float32))
+
+
+def _init_first_k(points, k):
+    return points[:, :k, :]
+
+
+class TestAgainstOracle:
+    @pytest.mark.parametrize("iters", [0, 1, 3, 7])
+    def test_matches_ref_lloyd(self, iters):
+        points = _blobs(0, 2, 80, 4, 5)
+        weights = jnp.ones(points.shape[:2], jnp.float32)
+        init = _init_first_k(points, 8)
+        c_m, l_m, n_m, i_m = kmeans_run(points, weights, init, iters=iters)
+        c_r, l_r, n_r, i_r = ref.lloyd(points, weights, init, iters)
+        np.testing.assert_allclose(np.asarray(c_m), np.asarray(c_r), atol=1e-4, rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(l_m), np.asarray(l_r))
+        np.testing.assert_allclose(np.asarray(n_m), np.asarray(n_r), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(i_m), np.asarray(i_r), atol=1e-3, rtol=1e-4)
+
+    def test_matches_ref_with_padding(self):
+        points = _blobs(1, 3, 64, 3, 4)
+        weights = jnp.asarray(
+            (np.random.default_rng(1).random((3, 64)) > 0.3).astype(np.float32)
+        )
+        init = _init_first_k(points, 6)
+        c_m, l_m, n_m, i_m = kmeans_run(points, weights, init, iters=5)
+        c_r, l_r, n_r, i_r = ref.lloyd(points, weights, init, 5)
+        np.testing.assert_allclose(np.asarray(c_m), np.asarray(c_r), atol=1e-4, rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(l_m), np.asarray(l_r))
+
+
+class TestLloydProperties:
+    def test_inertia_decreases(self):
+        """Lloyd's invariant: inertia is non-increasing over iterations."""
+        points = _blobs(2, 1, 256, 2, 8, spread=0.1)
+        weights = jnp.ones(points.shape[:2], jnp.float32)
+        init = _init_first_k(points, 8)
+        prev = np.inf
+        for iters in range(0, 9, 2):
+            _, _, _, inertia = kmeans_run(points, weights, init, iters=iters)
+            cur = float(inertia[0])
+            assert cur <= prev + 1e-3, f"inertia rose at iters={iters}"
+            prev = cur
+
+    def test_recovers_separated_blobs(self):
+        """K=k_true, far-apart blobs, init on distinct blobs: near-zero inertia."""
+        rng = np.random.default_rng(3)
+        k = 4
+        true_c = np.array([[0, 0], [10, 0], [0, 10], [10, 10]], np.float32)
+        assign = np.repeat(np.arange(k), 32)
+        pts = true_c[assign] + rng.normal(scale=0.05, size=(128, 2)).astype(np.float32)
+        points = jnp.asarray(pts[None])
+        weights = jnp.ones((1, 128), jnp.float32)
+        init = jnp.asarray(true_c[None] + 1.0)
+        centers, _, counts, inertia = kmeans_run(points, weights, init, iters=8)
+        got = np.sort(np.asarray(centers[0]), axis=0)
+        np.testing.assert_allclose(got, np.sort(true_c, axis=0), atol=0.15)
+        np.testing.assert_allclose(np.asarray(counts[0]), 32.0, atol=0)
+        assert float(inertia[0]) < 128 * 0.05**2 * 2 * 4
+
+    def test_empty_cluster_keeps_center(self):
+        """A center far from all points must survive unchanged."""
+        points = jnp.asarray(
+            np.random.default_rng(4).normal(size=(1, 64, 2)).astype(np.float32)
+        )
+        weights = jnp.ones((1, 64), jnp.float32)
+        far = jnp.asarray([[[1e6, 1e6]]], jnp.float32)
+        init = jnp.concatenate([points[:, :3, :], far], axis=1)
+        centers, _, counts, _ = kmeans_run(points, weights, init, iters=4)
+        np.testing.assert_allclose(np.asarray(centers[0, 3]), [1e6, 1e6])
+        assert float(counts[0, 3]) == 0.0
+
+    def test_step_composes_to_run(self):
+        """iters applications of kmeans_step == kmeans_run's centers."""
+        points = _blobs(5, 2, 48, 3, 4)
+        weights = jnp.ones(points.shape[:2], jnp.float32)
+        centers = _init_first_k(points, 6)
+        for _ in range(3):
+            centers, _, _, _ = kmeans_step(points, weights, centers)
+        c_run, _, _, _ = kmeans_run(points, weights, _init_first_k(points, 6), iters=3)
+        np.testing.assert_allclose(
+            np.asarray(centers), np.asarray(c_run), atol=1e-5, rtol=1e-5
+        )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 3),
+    n=st.integers(8, 96),
+    d=st.integers(1, 6),
+    k=st.integers(1, 10),
+    iters=st.integers(0, 5),
+)
+def test_hypothesis_model_vs_oracle(seed, b, n, d, k, iters):
+    k = min(k, n)
+    points = _blobs(seed, b, n, d, max(2, min(4, n)))
+    weights = jnp.ones((b, n), jnp.float32)
+    init = points[:, :k, :]
+    c_m, l_m, n_m, i_m = kmeans_run(points, weights, init, iters=iters)
+    c_r, l_r, n_r, i_r = ref.lloyd(points, weights, init, iters)
+    np.testing.assert_allclose(np.asarray(c_m), np.asarray(c_r), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(i_m), np.asarray(i_r), atol=1e-2, rtol=1e-3)

@@ -1,0 +1,93 @@
+//! Bench: Figures 1–2 machinery + ablations.
+//!
+//! * partitioner cost: equal vs unequal vs random across sizes (the
+//!   figures' subclustering step);
+//! * §V layout ablation: row-major vs column-major flatten+reconstruct;
+//! * scaler ablation: min-max vs z-score fit_transform.
+
+use parsample::data::layout::{flatten, reconstruct, MemoryOrder};
+use parsample::data::scaling::{MinMaxScaler, Scaler, ZScoreScaler};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::partition::{Partitioner, Scheme};
+use parsample::util::benchkit::{black_box, print_table, Bench};
+
+fn main() {
+    let bench = Bench::new(1, 7);
+
+    // --- partitioner cost (figures' grouping step) ---
+    let mut rows = Vec::new();
+    for m in [10_000usize, 100_000, 500_000] {
+        let data = make_blobs(&BlobSpec {
+            num_points: m,
+            num_clusters: (m / 500).max(2),
+            dims: 2,
+            std: 0.08,
+            extent: 50.0,
+            seed: 1,
+        })
+        .unwrap();
+        let scaled = MinMaxScaler::new().fit_transform(&data).unwrap();
+        let g = (m / 1500).clamp(2, 4096);
+        for scheme in [Scheme::Equal, Scheme::Unequal, Scheme::Random] {
+            let p = scheme.build(0);
+            let stats = bench.run(&format!("partition/{}/{m}", p.name()), || {
+                p.partition(&scaled, g).unwrap()
+            });
+            rows.push(vec![
+                p.name().into(),
+                format!("{m}"),
+                format!("{g}"),
+                format!("{:.3}", stats.mean_ms()),
+            ]);
+        }
+    }
+    print_table(
+        "Partitioner cost (figures 1-2 grouping step)",
+        &["scheme", "points", "groups", "mean ms"],
+        &rows,
+    );
+
+    // --- §V layout ablation ---
+    let data = make_blobs(&BlobSpec {
+        num_points: 200_000,
+        num_clusters: 64,
+        dims: 8,
+        std: 0.1,
+        extent: 10.0,
+        seed: 2,
+    })
+    .unwrap();
+    let indices: Vec<usize> = (0..data.len()).step_by(2).collect();
+    let mut rows = Vec::new();
+    for (name, order) in [("row-major", MemoryOrder::RowMajor), ("col-major", MemoryOrder::ColMajor)] {
+        let f = bench.run(&format!("flatten/{name}"), || {
+            black_box(flatten(&data, &indices, order))
+        });
+        let flat = flatten(&data, &indices, order);
+        let r = bench.run(&format!("reconstruct/{name}"), || {
+            black_box(reconstruct(&flat, indices.len(), data.dims(), order).unwrap())
+        });
+        rows.push(vec![
+            name.into(),
+            format!("{:.3}", f.mean_ms()),
+            format!("{:.3}", r.mean_ms()),
+        ]);
+    }
+    print_table(
+        "§V layout ablation (100k x 8 selection)",
+        &["order", "flatten ms", "reconstruct ms"],
+        &rows,
+    );
+
+    // --- scaler ablation ---
+    let mut rows = Vec::new();
+    let s1 = bench.run("scaler/minmax", || {
+        MinMaxScaler::new().fit_transform(&data).unwrap()
+    });
+    let s2 = bench.run("scaler/zscore", || {
+        ZScoreScaler::new().fit_transform(&data).unwrap()
+    });
+    rows.push(vec!["min-max".into(), format!("{:.3}", s1.mean_ms())]);
+    rows.push(vec!["z-score".into(), format!("{:.3}", s2.mean_ms())]);
+    print_table("Scaler ablation (200k x 8)", &["scaler", "fit+transform ms"], &rows);
+}

@@ -1,0 +1,79 @@
+//! Bench: runtime micro-benchmarks — PJRT dispatch vs the native mirror
+//! per AOT bucket, plus compile (warm-up) cost.
+//!
+//! This is the bench behind EXPERIMENTS.md §Perf L3: how much of the
+//! request path is device compute vs coordinator overhead.  Skips
+//! gracefully when artifacts/ has not been built.
+
+use parsample::runtime::{Backend, DeviceBatch, NativeBackend, PjrtBackend};
+use parsample::util::benchkit::{print_table, Bench};
+use parsample::util::rng::Pcg32;
+
+fn bucket_batch(spec: &parsample::runtime::BucketSpec, fill: f64, seed: u64) -> DeviceBatch {
+    let (b, n, d, k) = (spec.b, spec.n, spec.d, spec.k);
+    let real_n = ((n as f64) * fill) as usize;
+    let real_k = (real_n / 5).max(1).min(k);
+    let mut rng = Pcg32::seeded(seed);
+    let mut points = vec![0.0f32; b * n * d];
+    let mut weights = vec![0.0f32; b * n];
+    let mut init = vec![1e12f32; b * k * d];
+    for slot in 0..b {
+        for i in 0..real_n {
+            for j in 0..d {
+                points[slot * n * d + i * d + j] = rng.uniform(0.0, 1.0);
+            }
+            weights[slot * n + i] = 1.0;
+        }
+        for c in 0..real_k {
+            for j in 0..d {
+                init[slot * k * d + c * d + j] = points[slot * n * d + c * d + j];
+            }
+        }
+    }
+    DeviceBatch { b, n, d, k, iters: spec.iters, points, weights, init }
+}
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping kernel_dispatch: run `make artifacts` first");
+        return;
+    }
+    let pjrt = PjrtBackend::load(&dir).unwrap();
+    let native = NativeBackend::new(parsample::util::threadpool::default_workers());
+    let bench = Bench::new(1, 5);
+    let mut rows = Vec::new();
+
+    for spec in &pjrt.manifest().buckets.clone() {
+        // skip the giant global bucket in the default bench profile
+        if spec.n > 20_000 && std::env::var("PARSAMPLE_BENCH_FULL").is_err() {
+            continue;
+        }
+        let batch = bucket_batch(spec, 0.75, 3);
+
+        // compile cost (one-time per process)
+        let t0 = std::time::Instant::now();
+        pjrt.warm(&spec.name).unwrap();
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let p = bench.run(&format!("pjrt/{}", spec.name), || {
+            pjrt.run_in_bucket(&spec.name, &batch).unwrap()
+        });
+        let nv = bench.run(&format!("native/{}", spec.name), || {
+            native.run_batch(&batch).unwrap()
+        });
+        rows.push(vec![
+            spec.name.clone(),
+            format!("{}x{}x{}x{}", spec.b, spec.n, spec.d, spec.k),
+            format!("{compile_ms:.0}"),
+            format!("{:.2}", p.mean_ms()),
+            format!("{:.2}", nv.mean_ms()),
+            format!("{:.2}x", p.mean_ms() / nv.mean_ms()),
+        ]);
+    }
+    print_table(
+        "Runtime dispatch: PJRT (interpret-mode pallas) vs native mirror",
+        &["bucket", "BxNxDxK", "compile ms", "pjrt ms", "native ms", "pjrt/native"],
+        &rows,
+    );
+}

@@ -1,0 +1,70 @@
+//! Bench: Table 1 — accuracy + wall time on Iris and Seeds(sim).
+//!
+//! Regenerates the paper's accuracy table (see also
+//! examples/iris_accuracy.rs) and times each method; the accuracy
+//! numbers are printed alongside so the bench output alone reproduces
+//! the table.  Run: `cargo bench --bench table1_accuracy`
+
+use parsample::data::{builtin, Dataset};
+use parsample::eval;
+use parsample::partition::Scheme;
+use parsample::pipeline::{traditional_kmeans, PipelineConfig, SubclusterPipeline};
+use parsample::util::benchkit::{print_table, Bench};
+
+fn pipeline_labels(data: &Dataset, scheme: Scheme) -> Vec<u32> {
+    let cfg = PipelineConfig::builder()
+        .scheme(scheme)
+        .num_groups(6)
+        .compression(6.0)
+        .final_k(3)
+        .weighted_global(true)
+        .build()
+        .unwrap();
+    SubclusterPipeline::new(cfg).run(data).unwrap().labels
+}
+
+fn main() {
+    let bench = Bench::new(1, 10);
+    let mut rows = Vec::new();
+    for (name, data, paper) in [
+        ("iris", builtin::iris(), [133u64, 138, 138]),
+        ("seeds", builtin::seeds_sim(0), [187, 191, 191]),
+    ] {
+        let truth = data.labels().unwrap().to_vec();
+        let m = data.len();
+
+        let stats = bench.run(&format!("{name}/standard_kmeans"), || {
+            traditional_kmeans(&data, 3, 100, 0).unwrap()
+        });
+        let labels = traditional_kmeans(&data, 3, 100, 0).unwrap().labels;
+        rows.push(vec![
+            name.into(),
+            "standard".into(),
+            format!("{}/{m}", eval::correct_count(&labels, &truth).unwrap()),
+            format!("{}", paper[0]),
+            format!("{:.3}", stats.mean_ms()),
+        ]);
+
+        for (label, scheme, pc) in [
+            ("equal", Scheme::Equal, paper[1]),
+            ("unequal", Scheme::Unequal, paper[2]),
+        ] {
+            let stats = bench.run(&format!("{name}/{label}_pipeline"), || {
+                pipeline_labels(&data, scheme)
+            });
+            let labels = pipeline_labels(&data, scheme);
+            rows.push(vec![
+                name.into(),
+                label.into(),
+                format!("{}/{m}", eval::correct_count(&labels, &truth).unwrap()),
+                format!("{pc}"),
+                format!("{:.3}", stats.mean_ms()),
+            ]);
+        }
+    }
+    print_table(
+        "Table 1 — accuracy (measured vs paper) and time",
+        &["dataset", "method", "correct", "paper", "mean ms"],
+        &rows,
+    );
+}

@@ -1,0 +1,61 @@
+//! Bench: Table 2 — traditional vs parallel k-means across dataset
+//! sizes (2-D, 500 points/cluster, K = M/500).
+//!
+//! Default sizes are scaled down so `cargo bench` finishes quickly;
+//! the full paper sizes run with:
+//!   PARSAMPLE_BENCH_FULL=1 cargo bench --bench table2_scaling
+//! (the full 500k traditional run takes minutes on CPU — that IS the
+//! paper's point).  See EXPERIMENTS.md §T2 for the recorded full run.
+
+use parsample::data::synthetic::paper_scaling_dataset;
+use parsample::partition::Scheme;
+use parsample::pipeline::{traditional_kmeans_restarts, PipelineConfig, SubclusterPipeline};
+use parsample::util::benchkit::{print_table, Bench};
+
+fn main() {
+    let full = std::env::var("PARSAMPLE_BENCH_FULL").is_ok();
+    let sizes: &[usize] = if full {
+        &[100_000, 250_000, 500_000]
+    } else {
+        &[20_000, 50_000, 100_000]
+    };
+    let paper = [
+        (100_000usize, 2.328, 2.78),
+        (250_000, 25.6, 4.96),
+        (500_000, 156.8, 6.2),
+    ];
+    let bench = Bench::heavy();
+    let mut rows = Vec::new();
+    for &m in sizes {
+        let k = m / 500;
+        let data = paper_scaling_dataset(m, 42).unwrap();
+
+        let t_trad = bench.run(&format!("traditional/{m}"), || {
+            traditional_kmeans_restarts(&data, k, 25, 0, 1).unwrap()
+        });
+
+        let cfg = PipelineConfig::builder()
+            .scheme(Scheme::Unequal)
+            .compression(5.0)
+            .final_k(k)
+            .weighted_global(true)
+            .build()
+            .unwrap();
+        let pipeline = SubclusterPipeline::new(cfg);
+        let t_par = bench.run(&format!("parallel/{m}"), || pipeline.run(&data).unwrap());
+
+        let paper_row = paper.iter().find(|(pm, _, _)| *pm == m);
+        rows.push(vec![
+            format!("{m}"),
+            format!("{:.2}", t_trad.mean_ms() / 1e3),
+            format!("{:.2}", t_par.mean_ms() / 1e3),
+            format!("{:.1}x", t_trad.mean_ms() / t_par.mean_ms()),
+            paper_row.map_or("—".into(), |(_, a, b)| format!("{a} vs {b}")),
+        ]);
+    }
+    print_table(
+        "Table 2 — execution time in seconds (measured | paper C2075)",
+        &["size", "traditional", "parallel", "speedup", "paper t vs p"],
+        &rows,
+    );
+}

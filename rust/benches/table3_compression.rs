@@ -1,0 +1,47 @@
+//! Bench: Table 3 — execution time vs compression value.
+//!
+//! Paper (500k elements): c=5 → 6.2 s, c=10 → 5.76 s, c=15 → 4.83 s,
+//! c=20 → (blank); time must decrease monotonically with c because the
+//! global stage sees M/c pooled centers.
+//!
+//! Defaults to 100k; `PARSAMPLE_BENCH_FULL=1` runs the paper's 500k.
+
+use parsample::data::synthetic::paper_scaling_dataset;
+use parsample::partition::Scheme;
+use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
+use parsample::util::benchkit::{print_table, Bench};
+
+fn main() {
+    let full = std::env::var("PARSAMPLE_BENCH_FULL").is_ok();
+    let m: usize = if full { 500_000 } else { 100_000 };
+    let k = m / 500;
+    let paper = [(5, "6.2"), (10, "5.76"), (15, "4.83"), (20, "(blank)")];
+    let data = paper_scaling_dataset(m, 42).unwrap();
+    let bench = Bench::heavy();
+
+    let mut rows = Vec::new();
+    for (c, paper_s) in paper {
+        let cfg = PipelineConfig::builder()
+            .scheme(Scheme::Unequal)
+            .compression(c as f32)
+            .final_k(k)
+            .weighted_global(true)
+            .build()
+            .unwrap();
+        let pipeline = SubclusterPipeline::new(cfg);
+        let stats = bench.run(&format!("compression/{c}"), || pipeline.run(&data).unwrap());
+        let r = pipeline.run(&data).unwrap();
+        rows.push(vec![
+            format!("{c}"),
+            format!("{:.2}", stats.mean_ms() / 1e3),
+            format!("{}", r.local_centers),
+            format!("{:.1}", r.achieved_compression(m)),
+            paper_s.into(),
+        ]);
+    }
+    print_table(
+        &format!("Table 3 — execution time vs compression (M={m})"),
+        &["compression", "seconds", "local centers", "achieved c", "paper s (500k)"],
+        &rows,
+    );
+}

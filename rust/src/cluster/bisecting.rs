@@ -1,0 +1,220 @@
+//! Bisecting k-means (Savaresi & Boley [5] in the paper) — the
+//! divisive baseline the paper positions its subclustering against.
+//!
+//! Repeatedly split the cluster with the largest inertia into two via
+//! 2-means until K clusters exist.  Accurate but serial and expensive —
+//! exactly the trade-off §I cites ("highly accurate ... but expensive").
+
+use crate::cluster::kmeans::{lloyd, inertia_of, KMeansConfig, KMeansResult};
+use crate::cluster::{Clusterer, InitMethod};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+/// Bisecting k-means configuration.
+#[derive(Debug, Clone)]
+pub struct BisectingKMeans {
+    /// Lloyd iterations per 2-means split.
+    pub split_iters: usize,
+    /// Restarts per split; best-of by inertia.
+    pub split_trials: usize,
+    pub seed: u64,
+}
+
+impl Default for BisectingKMeans {
+    fn default() -> Self {
+        BisectingKMeans { split_iters: 20, split_trials: 2, seed: 0 }
+    }
+}
+
+impl BisectingKMeans {
+    pub fn run(&self, points: &[f32], dims: usize, k: usize) -> Result<KMeansResult> {
+        let m = points.len() / dims;
+        if k == 0 || k > m {
+            return Err(Error::Config(format!("k={k} invalid for {m} points")));
+        }
+        // clusters as index lists; start with everything in one cluster
+        let mut clusters: Vec<Vec<usize>> = vec![(0..m).collect()];
+        let mut cluster_inertia: Vec<f64> = vec![f64::INFINITY];
+        // clusters that produced a degenerate (one-sided) split are
+        // permanently retired from splitting or the loop never ends
+        let mut splittable: Vec<bool> = vec![true];
+
+        while clusters.len() < k {
+            // pick the cluster with the largest inertia that is splittable
+            let target = match (0..clusters.len())
+                .filter(|&c| splittable[c] && clusters[c].len() >= 2)
+                .max_by(|&a, &b| {
+                    cluster_inertia[a]
+                        .partial_cmp(&cluster_inertia[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                }) {
+                Some(t) => t,
+                None => break, // nothing splittable; fewer than k clusters
+            };
+            let members = clusters[target].clone();
+            let sub: Vec<f32> = members
+                .iter()
+                .flat_map(|&i| points[i * dims..(i + 1) * dims].iter().copied())
+                .collect();
+
+            // best-of 2-means split
+            let mut best: Option<KMeansResult> = None;
+            for trial in 0..self.split_trials {
+                let cfg = KMeansConfig {
+                    k: 2,
+                    max_iters: self.split_iters,
+                    tol: 1e-8,
+                    init: InitMethod::KMeansPlusPlus,
+                    seed: self.seed ^ (trial as u64).wrapping_mul(0x9e37_79b9),
+                };
+                let r = lloyd(&sub, dims, &cfg)?;
+                if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {
+                    best = Some(r);
+                }
+            }
+            let split = best.expect("split_trials >= 1");
+            let (mut left, mut right) = (Vec::new(), Vec::new());
+            for (local, &global) in members.iter().enumerate() {
+                if split.labels[local] == 0 {
+                    left.push(global);
+                } else {
+                    right.push(global);
+                }
+            }
+            // a degenerate split (all points one side) retires the cluster
+            if left.is_empty() || right.is_empty() {
+                clusters[target] = members;
+                splittable[target] = false;
+                continue;
+            }
+            let li = sub_inertia(points, dims, &left);
+            let ri = sub_inertia(points, dims, &right);
+            clusters[target] = left;
+            cluster_inertia[target] = li;
+            clusters.push(right);
+            cluster_inertia.push(ri);
+            splittable.push(true);
+        }
+
+        // assemble a KMeansResult: centers are cluster means
+        let kk = clusters.len();
+        let mut centers = vec![0.0f32; kk * dims];
+        let mut counts = vec![0u32; kk];
+        let mut labels = vec![0u32; m];
+        for (c, members) in clusters.iter().enumerate() {
+            counts[c] = members.len() as u32;
+            for &i in members {
+                labels[i] = c as u32;
+                for j in 0..dims {
+                    centers[c * dims + j] += points[i * dims + j];
+                }
+            }
+            if !members.is_empty() {
+                let inv = 1.0 / members.len() as f32;
+                for j in 0..dims {
+                    centers[c * dims + j] *= inv;
+                }
+            }
+        }
+        let inertia = inertia_of(points, dims, &centers);
+        Ok(KMeansResult { centers, labels, counts, inertia, iterations: kk })
+    }
+}
+
+fn sub_inertia(points: &[f32], dims: usize, members: &[usize]) -> f64 {
+    if members.is_empty() {
+        return 0.0;
+    }
+    let mut mean = vec![0.0f32; dims];
+    for &i in members {
+        for j in 0..dims {
+            mean[j] += points[i * dims + j];
+        }
+    }
+    mean.iter_mut().for_each(|x| *x /= members.len() as f32);
+    members
+        .iter()
+        .map(|&i| crate::distance::sq_euclidean(&points[i * dims..(i + 1) * dims], &mean) as f64)
+        .sum()
+}
+
+impl Clusterer for BisectingKMeans {
+    fn cluster(&self, data: &Dataset, k: usize) -> Result<KMeansResult> {
+        self.run(data.as_slice(), data.dims(), k)
+    }
+
+    fn name(&self) -> &'static str {
+        "bisecting-kmeans"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_blobs, BlobSpec};
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let ds = make_blobs(&BlobSpec {
+            num_points: 400,
+            num_clusters: 4,
+            dims: 2,
+            std: 0.05,
+            extent: 10.0,
+            seed: 3,
+        })
+        .unwrap();
+        let r = BisectingKMeans::default().run(ds.as_slice(), 2, 4).unwrap();
+        assert_eq!(r.counts.len(), 4);
+        assert_eq!(r.counts.iter().sum::<u32>(), 400);
+        assert_eq!(r.counts, vec![100; 4]);
+    }
+
+    #[test]
+    fn k1_returns_global_mean() {
+        let pts = vec![0.0, 0.0, 4.0, 0.0];
+        let r = BisectingKMeans::default().run(&pts, 2, 1).unwrap();
+        assert_eq!(r.centers, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn handles_duplicates_gracefully() {
+        let pts = vec![1.0f32; 20]; // 10 identical 2-d points
+        let r = BisectingKMeans::default().run(&pts, 2, 4).unwrap();
+        // can't split identical points into 4 real clusters; must not hang
+        assert!(r.counts.iter().sum::<u32>() == 10);
+    }
+
+    #[test]
+    fn inertia_better_or_close_to_plain_kmeans() {
+        let ds = make_blobs(&BlobSpec {
+            num_points: 600,
+            num_clusters: 6,
+            dims: 3,
+            std: 0.3,
+            extent: 5.0,
+            seed: 11,
+        })
+        .unwrap();
+        let bi = BisectingKMeans::default().run(ds.as_slice(), 3, 6).unwrap();
+        let km = lloyd(
+            ds.as_slice(),
+            3,
+            &KMeansConfig { k: 6, max_iters: 50, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            bi.inertia < km.inertia * 2.0,
+            "bisecting {} vs kmeans {}",
+            bi.inertia,
+            km.inertia
+        );
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let pts = vec![0.0; 6];
+        assert!(BisectingKMeans::default().run(&pts, 2, 0).is_err());
+        assert!(BisectingKMeans::default().run(&pts, 2, 4).is_err());
+    }
+}

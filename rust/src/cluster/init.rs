@@ -1,0 +1,182 @@
+//! Center initialization strategies for Lloyd's algorithm.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// How the K initial centers are chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitMethod {
+    /// First K points in data order.  Deterministic; what the device
+    /// path uses so native/PJRT parity is exact.
+    FirstK,
+    /// K distinct points uniformly at random.
+    Random,
+    /// k-means++ (Arthur & Vassilvitskii 2007): D²-weighted seeding.
+    KMeansPlusPlus,
+}
+
+impl InitMethod {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "first-k" | "firstk" => Ok(InitMethod::FirstK),
+            "random" => Ok(InitMethod::Random),
+            "kmeans++" | "plusplus" | "k-means++" => Ok(InitMethod::KMeansPlusPlus),
+            other => Err(Error::Config(format!("unknown init method '{other}'"))),
+        }
+    }
+}
+
+/// Produce K initial centers (flat K×D buffer) from `points` (M×D).
+pub fn initial_centers(
+    points: &[f32],
+    dims: usize,
+    k: usize,
+    method: InitMethod,
+    seed: u64,
+) -> Result<Vec<f32>> {
+    let m = points.len() / dims;
+    if k == 0 {
+        return Err(Error::Config("k must be > 0".into()));
+    }
+    if k > m {
+        return Err(Error::Config(format!("k={k} exceeds {m} points")));
+    }
+    let take = |idx: &[usize]| -> Vec<f32> {
+        let mut c = Vec::with_capacity(k * dims);
+        for &i in idx {
+            c.extend_from_slice(&points[i * dims..(i + 1) * dims]);
+        }
+        c
+    };
+    match method {
+        InitMethod::FirstK => Ok(points[..k * dims].to_vec()),
+        InitMethod::Random => {
+            let mut rng = Pcg32::new(seed, 0x1417);
+            Ok(take(&rng.sample_indices(m, k)))
+        }
+        InitMethod::KMeansPlusPlus => {
+            let mut rng = Pcg32::new(seed, 0x2b2b);
+            let mut chosen = Vec::with_capacity(k);
+            chosen.push(rng.below(m));
+            // running min distance to the chosen set
+            let mut d2 = vec![f32::INFINITY; m];
+            while chosen.len() < k {
+                let last = *chosen.last().unwrap();
+                let lc = &points[last * dims..(last + 1) * dims];
+                for i in 0..m {
+                    let d = crate::distance::sq_euclidean(
+                        &points[i * dims..(i + 1) * dims],
+                        lc,
+                    );
+                    if d < d2[i] {
+                        d2[i] = d;
+                    }
+                }
+                match rng.weighted_index(&d2) {
+                    Some(next) => chosen.push(next),
+                    // all mass at zero (duplicates) -> fall back to any unchosen
+                    None => {
+                        let next = (0..m).find(|i| !chosen.contains(i)).ok_or_else(|| {
+                            Error::Cluster("k-means++ ran out of points".into())
+                        })?;
+                        chosen.push(next);
+                    }
+                }
+            }
+            Ok(take(&chosen))
+        }
+    }
+}
+
+/// Sanity helper used by tests: is every center one of the input points?
+#[cfg(test)]
+fn centers_are_points(centers: &[f32], points: &[f32], dims: usize) -> bool {
+    centers.chunks_exact(dims).all(|c| {
+        points
+            .chunks_exact(dims)
+            .any(|p| p == c)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_points(m: usize, dims: usize) -> Vec<f32> {
+        (0..m * dims).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn first_k_takes_prefix() {
+        let pts = grid_points(5, 2);
+        let c = initial_centers(&pts, 2, 3, InitMethod::FirstK, 0).unwrap();
+        assert_eq!(c, &pts[..6]);
+    }
+
+    #[test]
+    fn random_picks_distinct_points() {
+        let pts = grid_points(20, 3);
+        let c = initial_centers(&pts, 3, 8, InitMethod::Random, 42).unwrap();
+        assert_eq!(c.len(), 24);
+        assert!(centers_are_points(&c, &pts, 3));
+        // distinct rows
+        let rows: Vec<&[f32]> = c.chunks_exact(3).collect();
+        for i in 0..rows.len() {
+            for j in i + 1..rows.len() {
+                assert_ne!(rows[i], rows[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn plusplus_prefers_spread() {
+        // two far blobs; after choosing a seed in one blob, ++ must pick
+        // the second center from the other blob with overwhelming prob.
+        let mut pts = vec![];
+        for i in 0..50 {
+            pts.extend([i as f32 * 1e-3, 0.0]);
+        }
+        for i in 0..50 {
+            pts.extend([100.0 + i as f32 * 1e-3, 0.0]);
+        }
+        for seed in 0..10 {
+            let c = initial_centers(&pts, 2, 2, InitMethod::KMeansPlusPlus, seed).unwrap();
+            let (a, b) = (c[0], c[2]);
+            assert!(
+                (a < 50.0) != (b < 50.0),
+                "seed {seed}: both centers in one blob ({a}, {b})"
+            );
+        }
+    }
+
+    #[test]
+    fn plusplus_handles_all_duplicates() {
+        let pts = vec![1.0f32; 12]; // 6 identical 2-d points
+        let c = initial_centers(&pts, 2, 3, InitMethod::KMeansPlusPlus, 0).unwrap();
+        assert_eq!(c, vec![1.0; 6]);
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let pts = grid_points(3, 2);
+        assert!(initial_centers(&pts, 2, 0, InitMethod::FirstK, 0).is_err());
+        assert!(initial_centers(&pts, 2, 4, InitMethod::FirstK, 0).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let pts = grid_points(30, 2);
+        for m in [InitMethod::Random, InitMethod::KMeansPlusPlus] {
+            let a = initial_centers(&pts, 2, 5, m, 9).unwrap();
+            let b = initial_centers(&pts, 2, 5, m, 9).unwrap();
+            assert_eq!(a, b, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn parse() {
+        assert_eq!(InitMethod::parse("kmeans++").unwrap(), InitMethod::KMeansPlusPlus);
+        assert_eq!(InitMethod::parse("first-k").unwrap(), InitMethod::FirstK);
+        assert!(InitMethod::parse("zeros").is_err());
+    }
+}

@@ -1,0 +1,297 @@
+//! Lloyd's k-means — the paper's "traditional Kmeans" baseline and the
+//! global-stage clusterer.
+//!
+//! Operates on flat row-major buffers so the coordinator can run it on
+//! sub-region views without copies.  Semantics match the device kernel
+//! exactly when configured with `InitMethod::FirstK`, `tol = 0`, and a
+//! fixed iteration count (the parity tests in
+//! rust/tests/integration_runtime.rs rely on this):
+//! squared-euclidean assignment, argmin ties to the lowest index, and
+//! empty clusters keeping their previous center.
+
+use crate::cluster::init::{initial_centers, InitMethod};
+use crate::error::{Error, Result};
+
+/// Lloyd's algorithm configuration.
+#[derive(Debug, Clone)]
+pub struct KMeansConfig {
+    /// Number of centers.
+    pub k: usize,
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// Stop when the max squared center shift falls below this
+    /// (0.0 disables the check: always run `max_iters` — device parity).
+    pub tol: f32,
+    pub init: InitMethod,
+    pub seed: u64,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        KMeansConfig {
+            k: 8,
+            max_iters: 50,
+            tol: 1e-6,
+            init: InitMethod::KMeansPlusPlus,
+            seed: 0,
+        }
+    }
+}
+
+impl KMeansConfig {
+    /// Config matching the AOT device executables: FirstK init, fixed
+    /// iteration count, no early stop.
+    pub fn device_parity(k: usize, iters: usize) -> Self {
+        KMeansConfig { k, max_iters: iters, tol: 0.0, init: InitMethod::FirstK, seed: 0 }
+    }
+}
+
+/// Output of one clustering run.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    /// K×D row-major centers.
+    pub centers: Vec<f32>,
+    /// Nearest-center index per point.
+    pub labels: Vec<u32>,
+    /// Points per center.
+    pub counts: Vec<u32>,
+    /// Sum of squared distances to assigned centers.
+    pub inertia: f64,
+    /// Lloyd iterations actually performed.
+    pub iterations: usize,
+}
+
+/// Run Lloyd's algorithm on `points` (flat M×D row-major).
+pub fn lloyd(points: &[f32], dims: usize, cfg: &KMeansConfig) -> Result<KMeansResult> {
+    if dims == 0 || points.len() % dims != 0 {
+        return Err(Error::Data("points buffer not a multiple of dims".into()));
+    }
+    let m = points.len() / dims;
+    if m == 0 {
+        return Err(Error::Data("cannot cluster zero points".into()));
+    }
+    if cfg.k == 0 || cfg.k > m {
+        return Err(Error::Config(format!("k={} invalid for {m} points", cfg.k)));
+    }
+    let centers = initial_centers(points, dims, cfg.k, cfg.init, cfg.seed)?;
+    lloyd_from(points, dims, centers, cfg.max_iters, cfg.tol)
+}
+
+/// Lloyd's from explicit initial centers (used by the pipeline's global
+/// stage to seed from local centers, and by parity tests).
+pub fn lloyd_from(
+    points: &[f32],
+    dims: usize,
+    mut centers: Vec<f32>,
+    max_iters: usize,
+    tol: f32,
+) -> Result<KMeansResult> {
+    let m = points.len() / dims;
+    let k = centers.len() / dims;
+    if centers.len() % dims != 0 || k == 0 {
+        return Err(Error::Config("centers buffer not a multiple of dims".into()));
+    }
+    let mut labels = vec![0u32; m];
+    let mut counts = vec![0u32; k];
+    let mut sums = vec![0.0f32; k * dims];
+    let mut iterations = 0;
+
+    for _ in 0..max_iters {
+        iterations += 1;
+        assign_all(points, dims, &centers, &mut labels);
+        accumulate(points, dims, &labels, &mut sums, &mut counts);
+
+        // Update step; track the largest center movement for tol.
+        let mut max_shift = 0.0f32;
+        for c in 0..k {
+            if counts[c] == 0 {
+                continue; // empty cluster keeps its center (device rule)
+            }
+            let inv = 1.0 / counts[c] as f32;
+            let mut shift = 0.0f32;
+            for j in 0..dims {
+                let new = sums[c * dims + j] * inv;
+                let old = centers[c * dims + j];
+                shift += (new - old) * (new - old);
+                centers[c * dims + j] = new;
+            }
+            max_shift = max_shift.max(shift);
+        }
+        if tol > 0.0 && max_shift <= tol {
+            break;
+        }
+    }
+
+    // Final assignment consistent with final centers (mirrors model.py).
+    assign_all(points, dims, &centers, &mut labels);
+    counts.iter_mut().for_each(|c| *c = 0);
+    let mut inertia = 0.0f64;
+    let cnorm = crate::distance::center_norms(&centers, dims);
+    for i in 0..m {
+        let (c, d) = crate::distance::nearest_sq_with_norms(
+            &points[i * dims..(i + 1) * dims],
+            &centers,
+            &cnorm,
+            dims,
+        );
+        debug_assert_eq!(c as u32, labels[i]);
+        counts[c] += 1;
+        inertia += d as f64;
+    }
+
+    Ok(KMeansResult { centers, labels, counts, inertia, iterations })
+}
+
+/// Assignment step over all points (center norms hoisted — §Perf L3-2).
+fn assign_all(points: &[f32], dims: usize, centers: &[f32], labels: &mut [u32]) {
+    let cnorm = crate::distance::center_norms(centers, dims);
+    for (i, p) in points.chunks_exact(dims).enumerate() {
+        labels[i] = crate::distance::nearest_sq_with_norms(p, centers, &cnorm, dims).0 as u32;
+    }
+}
+
+/// Accumulate per-cluster sums and counts (buffers are zeroed here).
+fn accumulate(points: &[f32], dims: usize, labels: &[u32], sums: &mut [f32], counts: &mut [u32]) {
+    sums.iter_mut().for_each(|s| *s = 0.0);
+    counts.iter_mut().for_each(|c| *c = 0);
+    for (i, p) in points.chunks_exact(dims).enumerate() {
+        let c = labels[i] as usize;
+        counts[c] += 1;
+        for j in 0..dims {
+            sums[c * dims + j] += p[j];
+        }
+    }
+}
+
+/// Total within-cluster sum of squares of `points` against `centers`.
+pub fn inertia_of(points: &[f32], dims: usize, centers: &[f32]) -> f64 {
+    points
+        .chunks_exact(dims)
+        .map(|p| crate::distance::nearest_sq(p, centers, dims).1 as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn two_blobs(n_per: usize) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(5);
+        let mut pts = Vec::new();
+        for _ in 0..n_per {
+            pts.extend([rng.normal() * 0.1, rng.normal() * 0.1]);
+        }
+        for _ in 0..n_per {
+            pts.extend([10.0 + rng.normal() * 0.1, 10.0 + rng.normal() * 0.1]);
+        }
+        pts
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let pts = two_blobs(100);
+        let cfg = KMeansConfig { k: 2, ..Default::default() };
+        let r = lloyd(&pts, 2, &cfg).unwrap();
+        assert_eq!(r.counts.iter().sum::<u32>(), 200);
+        assert_eq!(r.counts, vec![100, 100]);
+        // one center near (0,0), the other near (10,10)
+        let mut cs: Vec<&[f32]> = r.centers.chunks_exact(2).collect();
+        cs.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+        assert!(cs[0][0].abs() < 0.5 && cs[0][1].abs() < 0.5);
+        assert!((cs[1][0] - 10.0).abs() < 0.5 && (cs[1][1] - 10.0).abs() < 0.5);
+        assert!(r.inertia < 10.0);
+    }
+
+    #[test]
+    fn labels_match_nearest_center() {
+        let pts = two_blobs(50);
+        let r = lloyd(&pts, 2, &KMeansConfig { k: 4, ..Default::default() }).unwrap();
+        for (i, p) in pts.chunks_exact(2).enumerate() {
+            let (c, _) = crate::distance::nearest_sq(p, &r.centers, 2);
+            assert_eq!(r.labels[i], c as u32);
+        }
+    }
+
+    #[test]
+    fn inertia_non_increasing_in_iters() {
+        let pts = two_blobs(200);
+        let mut prev = f64::INFINITY;
+        for iters in [1, 2, 4, 8, 16] {
+            let cfg = KMeansConfig {
+                k: 5,
+                max_iters: iters,
+                tol: 0.0,
+                init: InitMethod::FirstK,
+                seed: 0,
+            };
+            let r = lloyd(&pts, 2, &cfg).unwrap();
+            assert!(r.inertia <= prev + 1e-6, "iters={iters}: {} > {prev}", r.inertia);
+            prev = r.inertia;
+        }
+    }
+
+    #[test]
+    fn tol_stops_early() {
+        let pts = two_blobs(100);
+        let cfg = KMeansConfig { k: 2, max_iters: 100, tol: 1e-4, ..Default::default() };
+        let r = lloyd(&pts, 2, &cfg).unwrap();
+        assert!(r.iterations < 100, "should converge well before 100 iters");
+    }
+
+    #[test]
+    fn empty_cluster_keeps_center() {
+        // k=3 on two tight blobs with FirstK init: whichever center goes
+        // empty must stay where it was.
+        let pts = vec![0.0, 0.0, 0.1, 0.0, 10.0, 10.0, 10.1, 10.0];
+        let centers = vec![0.0, 0.0, 10.0, 10.0, 500.0, 500.0];
+        let r = lloyd_from(&pts, 2, centers, 5, 0.0).unwrap();
+        assert_eq!(r.counts[2], 0);
+        assert_eq!(&r.centers[4..6], &[500.0, 500.0]);
+    }
+
+    #[test]
+    fn k_equals_m_zero_inertia() {
+        let pts = vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0];
+        let cfg = KMeansConfig { k: 3, init: InitMethod::FirstK, ..Default::default() };
+        let r = lloyd(&pts, 2, &cfg).unwrap();
+        assert_eq!(r.inertia, 0.0);
+        assert_eq!(r.counts, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn single_cluster_is_mean() {
+        let pts = vec![0.0, 0.0, 2.0, 0.0, 4.0, 6.0];
+        let cfg = KMeansConfig { k: 1, init: InitMethod::FirstK, ..Default::default() };
+        let r = lloyd(&pts, 2, &cfg).unwrap();
+        assert!((r.centers[0] - 2.0).abs() < 1e-6);
+        assert!((r.centers[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(lloyd(&[1.0, 2.0, 3.0], 2, &KMeansConfig::default()).is_err());
+        assert!(lloyd(&[], 2, &KMeansConfig::default()).is_err());
+        let pts = vec![0.0; 8];
+        assert!(lloyd(&pts, 2, &KMeansConfig { k: 5, ..Default::default() }).is_err());
+        assert!(lloyd(&pts, 2, &KMeansConfig { k: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn device_parity_config_is_deterministic() {
+        let pts = two_blobs(64);
+        let a = lloyd(&pts, 2, &KMeansConfig::device_parity(4, 10)).unwrap();
+        let b = lloyd(&pts, 2, &KMeansConfig::device_parity(4, 10)).unwrap();
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.iterations, 10);
+    }
+
+    #[test]
+    fn inertia_of_matches_result() {
+        let pts = two_blobs(80);
+        let r = lloyd(&pts, 2, &KMeansConfig { k: 3, ..Default::default() }).unwrap();
+        let i = inertia_of(&pts, 2, &r.centers);
+        assert!((i - r.inertia).abs() < 1e-3);
+    }
+}

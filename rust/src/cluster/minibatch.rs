@@ -1,0 +1,136 @@
+//! Mini-batch k-means (Sculley 2010) — a modern streaming baseline for
+//! the ablation benches: how close does the paper's sample-then-cluster
+//! scheme get to a streaming approximation at similar cost?
+
+use crate::cluster::init::{initial_centers, InitMethod};
+use crate::cluster::kmeans::{inertia_of, KMeansResult};
+use crate::cluster::Clusterer;
+use crate::data::Dataset;
+use crate::distance::nearest_sq;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// Mini-batch k-means configuration.
+#[derive(Debug, Clone)]
+pub struct MiniBatchKMeans {
+    pub batch_size: usize,
+    pub iters: usize,
+    pub init: InitMethod,
+    pub seed: u64,
+}
+
+impl Default for MiniBatchKMeans {
+    fn default() -> Self {
+        MiniBatchKMeans { batch_size: 1024, iters: 100, init: InitMethod::KMeansPlusPlus, seed: 0 }
+    }
+}
+
+impl MiniBatchKMeans {
+    pub fn run(&self, points: &[f32], dims: usize, k: usize) -> Result<KMeansResult> {
+        let m = points.len() / dims;
+        if k == 0 || k > m {
+            return Err(Error::Config(format!("k={k} invalid for {m} points")));
+        }
+        if self.batch_size == 0 {
+            return Err(Error::Config("batch_size must be > 0".into()));
+        }
+        let b = self.batch_size.min(m);
+        let mut rng = Pcg32::new(self.seed, 0xba7c);
+        let mut centers = initial_centers(points, dims, k, self.init, self.seed)?;
+        let mut per_center_counts = vec![0u64; k];
+
+        for _ in 0..self.iters {
+            for _ in 0..b {
+                let i = rng.below(m);
+                let p = &points[i * dims..(i + 1) * dims];
+                let (c, _) = nearest_sq(p, &centers, dims);
+                per_center_counts[c] += 1;
+                // per-center learning rate 1/n_c (Sculley's update)
+                let eta = 1.0 / per_center_counts[c] as f32;
+                for j in 0..dims {
+                    centers[c * dims + j] += eta * (p[j] - centers[c * dims + j]);
+                }
+            }
+        }
+
+        // final full assignment
+        let mut labels = vec![0u32; m];
+        let mut counts = vec![0u32; k];
+        for (i, p) in points.chunks_exact(dims).enumerate() {
+            let (c, _) = nearest_sq(p, &centers, dims);
+            labels[i] = c as u32;
+            counts[c] += 1;
+        }
+        let inertia = inertia_of(points, dims, &centers);
+        Ok(KMeansResult { centers, labels, counts, inertia, iterations: self.iters })
+    }
+}
+
+impl Clusterer for MiniBatchKMeans {
+    fn cluster(&self, data: &Dataset, k: usize) -> Result<KMeansResult> {
+        self.run(data.as_slice(), data.dims(), k)
+    }
+
+    fn name(&self) -> &'static str {
+        "minibatch-kmeans"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::kmeans::{lloyd, KMeansConfig};
+    use crate::data::synthetic::{make_blobs, BlobSpec};
+
+    #[test]
+    fn approximates_full_kmeans_on_blobs() {
+        let ds = make_blobs(&BlobSpec {
+            num_points: 3000,
+            num_clusters: 5,
+            dims: 2,
+            std: 0.1,
+            extent: 8.0,
+            seed: 7,
+        })
+        .unwrap();
+        let mb = MiniBatchKMeans { batch_size: 256, iters: 30, ..Default::default() }
+            .run(ds.as_slice(), 2, 5)
+            .unwrap();
+        let full = lloyd(ds.as_slice(), 2, &KMeansConfig { k: 5, ..Default::default() }).unwrap();
+        // within 20% of full Lloyd's inertia on easy blobs
+        assert!(
+            mb.inertia < full.inertia * 1.2 + 1.0,
+            "minibatch {} vs full {}",
+            mb.inertia,
+            full.inertia
+        );
+    }
+
+    #[test]
+    fn counts_cover_all_points() {
+        let ds = make_blobs(&BlobSpec { num_points: 500, num_clusters: 3, seed: 1, ..Default::default() })
+            .unwrap();
+        let r = MiniBatchKMeans::default().run(ds.as_slice(), 2, 3).unwrap();
+        assert_eq!(r.counts.iter().sum::<u32>(), 500);
+        assert_eq!(r.labels.len(), 500);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = make_blobs(&BlobSpec { num_points: 400, num_clusters: 4, seed: 2, ..Default::default() })
+            .unwrap();
+        let cfg = MiniBatchKMeans { seed: 5, ..Default::default() };
+        let a = cfg.run(ds.as_slice(), 2, 4).unwrap();
+        let b = cfg.run(ds.as_slice(), 2, 4).unwrap();
+        assert_eq!(a.centers, b.centers);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let pts = vec![0.0; 8];
+        assert!(MiniBatchKMeans::default().run(&pts, 2, 0).is_err());
+        assert!(MiniBatchKMeans { batch_size: 0, ..Default::default() }
+            .run(&pts, 2, 2)
+            .is_err());
+    }
+}

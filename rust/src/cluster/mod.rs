@@ -1,0 +1,40 @@
+//! Clustering algorithms (host-side / baseline implementations).
+//!
+//! [`kmeans::lloyd`] is the paper's "traditional Kmeans" baseline and
+//! also the final global-stage clusterer.  [`bisecting`] and
+//! [`minibatch`] are the comparison algorithms the paper's related-work
+//! section discusses (Savaresi et al. [5]) plus a modern streaming
+//! baseline, both wired into the ablation benches.
+
+pub mod bisecting;
+pub mod init;
+pub mod kmeans;
+pub mod minibatch;
+
+pub use init::InitMethod;
+pub use kmeans::{lloyd, KMeansConfig, KMeansResult};
+
+use crate::data::Dataset;
+use crate::error::Result;
+
+/// Anything that can produce K centers from a dataset.
+pub trait Clusterer {
+    fn cluster(&self, data: &Dataset, k: usize) -> Result<KMeansResult>;
+    fn name(&self) -> &'static str;
+}
+
+/// Lloyd's as a [`Clusterer`].
+#[derive(Debug, Clone)]
+pub struct KMeansClusterer(pub KMeansConfig);
+
+impl Clusterer for KMeansClusterer {
+    fn cluster(&self, data: &Dataset, k: usize) -> Result<KMeansResult> {
+        let mut cfg = self.0.clone();
+        cfg.k = k;
+        lloyd(data.as_slice(), data.dims(), &cfg)
+    }
+
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+}

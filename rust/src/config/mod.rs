@@ -1,0 +1,321 @@
+//! Config system: a TOML-subset parser (offline image has no `toml`
+//! crate — see DESIGN.md §3) + typed application config with file,
+//! environment, and CLI overlays, in that precedence order.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"…"`), integer, float, and boolean values, `#` comments.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::partition::Scheme;
+use crate::pipeline::PipelineConfig;
+use crate::runtime::BackendKind;
+
+/// One parsed `key = value`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    fn as_f32(&self) -> Option<f32> {
+        match self {
+            Value::Float(f) => Some(*f as f32),
+            Value::Int(i) => Some(*i as f32),
+            _ => None,
+        }
+    }
+
+    fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> value` map.
+pub type Table = BTreeMap<String, Value>;
+
+/// Parse the TOML subset.
+pub fn parse_toml_lite(text: &str) -> Result<Table> {
+    let mut out = Table::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(Error::Config(format!("line {}: empty section", lineno + 1)));
+            }
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| {
+            Error::Config(format!("line {}: expected key = value", lineno + 1))
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full_key, parse_value(value.trim(), lineno + 1)?);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: '#' inside quoted strings is not supported
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Config(format!("line {lineno}: unterminated string")))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(Error::Config(format!("line {lineno}: cannot parse value '{s}'")))
+}
+
+/// Application config assembled from file + env + CLI.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    pub pipeline: PipelineConfig,
+    /// Server bind address.
+    pub server_addr: String,
+    /// Scheduler queue depth (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            pipeline: PipelineConfig::default(),
+            server_addr: "127.0.0.1:7077".to_string(),
+            queue_depth: 16,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Load from a TOML-lite file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<AppConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let table = parse_toml_lite(&text)?;
+        Self::from_table(&table)
+    }
+
+    /// Build from a parsed table (see tests for the schema).
+    pub fn from_table(table: &Table) -> Result<AppConfig> {
+        let mut cfg = AppConfig::default();
+        for (key, value) in table {
+            cfg.apply(key, value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `section.key` setting.
+    pub fn apply(&mut self, key: &str, value: &Value) -> Result<()> {
+        let bad = |what: &str| Error::Config(format!("{key}: expected {what}"));
+        match key {
+            "pipeline.scheme" => {
+                self.pipeline.scheme =
+                    Scheme::parse(value.as_str().ok_or_else(|| bad("string"))?)?;
+            }
+            "pipeline.num_groups" => {
+                self.pipeline.num_groups = Some(value.as_usize().ok_or_else(|| bad("usize"))?);
+            }
+            "pipeline.compression" => {
+                self.pipeline.compression = value.as_f32().ok_or_else(|| bad("number"))?;
+            }
+            "pipeline.final_k" => {
+                self.pipeline.final_k = value.as_usize().ok_or_else(|| bad("usize"))?;
+            }
+            "pipeline.scale" => {
+                self.pipeline.scale = value.as_bool().ok_or_else(|| bad("bool"))?;
+            }
+            "pipeline.backend" => {
+                self.pipeline.backend =
+                    BackendKind::parse(value.as_str().ok_or_else(|| bad("string"))?)?;
+            }
+            "pipeline.artifacts_dir" => {
+                self.pipeline.artifacts_dir =
+                    PathBuf::from(value.as_str().ok_or_else(|| bad("string"))?);
+            }
+            "pipeline.workers" => {
+                self.pipeline.workers = value.as_usize().ok_or_else(|| bad("usize"))?.max(1);
+            }
+            "pipeline.global_iters" => {
+                self.pipeline.global_iters = value.as_usize().ok_or_else(|| bad("usize"))?;
+            }
+            "pipeline.weighted_global" => {
+                self.pipeline.weighted_global = value.as_bool().ok_or_else(|| bad("bool"))?;
+            }
+            "pipeline.seed" => {
+                self.pipeline.seed = value.as_usize().ok_or_else(|| bad("usize"))? as u64;
+            }
+            "server.addr" => {
+                self.server_addr = value.as_str().ok_or_else(|| bad("string"))?.to_string();
+            }
+            "server.queue_depth" => {
+                self.queue_depth = value.as_usize().ok_or_else(|| bad("usize"))?.max(1);
+            }
+            other => {
+                return Err(Error::Config(format!("unknown config key '{other}'")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Overlay `PARSAMPLE_*` environment variables
+    /// (e.g. `PARSAMPLE_PIPELINE_BACKEND=pjrt`).
+    pub fn apply_env(&mut self) -> Result<()> {
+        for (k, v) in std::env::vars() {
+            if let Some(rest) = k.strip_prefix("PARSAMPLE_") {
+                let key = rest.to_lowercase().replacen('_', ".", 1);
+                // values from env are strings; try bool/int/float first
+                let value = parse_value(&v, 0)
+                    .or_else(|_| parse_value(&format!("\"{v}\""), 0))?;
+                self.apply(&key, &value)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse_toml_lite(
+            r#"
+            # experiment preset
+            [pipeline]
+            scheme = "equal"
+            final_k = 3
+            compression = 6.5
+            scale = true
+
+            [server]
+            addr = "0.0.0.0:9000"
+            queue_depth = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t["pipeline.scheme"], Value::Str("equal".into()));
+        assert_eq!(t["pipeline.final_k"], Value::Int(3));
+        assert_eq!(t["pipeline.compression"], Value::Float(6.5));
+        assert_eq!(t["pipeline.scale"], Value::Bool(true));
+        assert_eq!(t["server.addr"], Value::Str("0.0.0.0:9000".into()));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let t = parse_toml_lite("a = 1 # trailing\n\n# full line\nb = \"x # not comment\"\n").unwrap();
+        assert_eq!(t["a"], Value::Int(1));
+        assert_eq!(t["b"], Value::Str("x # not comment".into()));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(parse_toml_lite("just a line").is_err());
+        assert!(parse_toml_lite("[]\n").is_err());
+        assert!(parse_toml_lite("x = \"unterminated").is_err());
+        assert!(parse_toml_lite("x = what").is_err());
+        assert!(parse_toml_lite(" = 3").is_err());
+    }
+
+    #[test]
+    fn builds_app_config() {
+        let t = parse_toml_lite(
+            r#"
+            [pipeline]
+            scheme = "unequal"
+            backend = "native"
+            final_k = 5
+            num_groups = 12
+            weighted_global = true
+            [server]
+            queue_depth = 3
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_table(&t).unwrap();
+        assert_eq!(cfg.pipeline.final_k, 5);
+        assert_eq!(cfg.pipeline.num_groups, Some(12));
+        assert!(cfg.pipeline.weighted_global);
+        assert_eq!(cfg.queue_depth, 3);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let t = parse_toml_lite("[pipeline]\nbanana = 1\n").unwrap();
+        assert!(AppConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn wrong_types_rejected() {
+        let t = parse_toml_lite("[pipeline]\nfinal_k = \"three\"\n").unwrap();
+        assert!(AppConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("parsample_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.toml");
+        std::fs::write(&path, "[pipeline]\nfinal_k = 9\nbackend = \"pjrt\"\n").unwrap();
+        let cfg = AppConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.pipeline.final_k, 9);
+        assert_eq!(cfg.pipeline.backend, BackendKind::Pjrt);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,442 @@
+//! Batcher: variable-size sub-regions → fixed-shape device batches.
+//!
+//! The CUDA original launched one block per sub-region with exact
+//! shapes.  AOT compilation fixes shapes ahead of time, so the batcher
+//! does what a serving system's continuous batcher does for requests:
+//!
+//! 1. **split** any group too large for the bucket table (recursively
+//!    halving; each half gets its proportional share of local centers),
+//! 2. **route** each group to the cheapest fitting bucket,
+//! 3. **pack** up to `bucket.b` groups per dispatch,
+//! 4. **pad** points with weight-0 rows and center slots with a far
+//!    sentinel (never wins an argmin against real data),
+//! 5. **unpack** device outputs back to per-group local centers.
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::runtime::{BucketSpec, DeviceBatch, DeviceOutput, Manifest};
+
+/// Coordinates of one group inside a dispatch.
+#[derive(Debug, Clone)]
+pub struct GroupSlot {
+    /// Index into the original partition's group list.
+    pub group_idx: usize,
+    /// Batch slot this group occupies.
+    pub slot: usize,
+    /// Real (unpadded) point count.
+    pub n: usize,
+    /// Real (unpadded) local center count.
+    pub k: usize,
+    /// Row indices of this group's points in the source dataset.
+    pub indices: Vec<usize>,
+}
+
+/// One device dispatch: a bucket-shaped batch plus the bookkeeping to
+/// unpack its outputs.
+#[derive(Debug, Clone)]
+pub struct Dispatch {
+    pub bucket: String,
+    pub batch: DeviceBatch,
+    pub groups: Vec<GroupSlot>,
+}
+
+/// Unpacked result for one group.
+#[derive(Debug, Clone)]
+pub struct LocalResult {
+    pub group_idx: usize,
+    /// k×D local centers (real slots only, device dims trimmed to D).
+    pub centers: Vec<f32>,
+    /// Weighted member count per local center.
+    pub counts: Vec<f32>,
+    /// Within-group inertia.
+    pub inertia: f32,
+}
+
+/// Sentinel coordinate for padded center slots: far enough that no
+/// real (feature-scaled, so O(1)-sized) point ever argmins to it, small
+/// enough that |c|² stays finite in f32 (1e12² · 8 ≈ 8e24 ≪ 3.4e38).
+pub const PAD_CENTER: f32 = 1e12;
+
+/// The batcher. Holds the bucket table (from the manifest) it routes
+/// against.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    buckets: Vec<BucketSpec>,
+    /// Split recursion guard.
+    max_split_depth: usize,
+}
+
+impl Batcher {
+    pub fn new(manifest: &Manifest) -> Self {
+        Batcher { buckets: manifest.buckets.clone(), max_split_depth: 24 }
+    }
+
+    /// Build from an explicit bucket table (tests).
+    pub fn from_buckets(buckets: Vec<BucketSpec>) -> Self {
+        Batcher { buckets, max_split_depth: 24 }
+    }
+
+    fn pick(&self, n: usize, d: usize, k: usize) -> Option<&BucketSpec> {
+        self.buckets
+            .iter()
+            .filter(|b| b.fits(n, d, k))
+            .min_by_key(|b| b.cost())
+    }
+
+    /// Plan dispatches for the local-clustering stage.
+    ///
+    /// `groups[i]` are dataset row indices; group i wants
+    /// `ceil(len/compression)` local centers.  Groups that fit no bucket
+    /// are split recursively (both halves keep `group_idx`, so their
+    /// centers pool together on unpack — equivalent to having had more
+    /// groups, which is exactly the paper's own knob).
+    pub fn plan(
+        &self,
+        data: &Dataset,
+        groups: &[Vec<usize>],
+        compression: f32,
+    ) -> Result<Vec<Dispatch>> {
+        if compression < 1.0 {
+            return Err(Error::Config(format!(
+                "compression {compression} must be >= 1"
+            )));
+        }
+        let d = data.dims();
+        // 1+2: split until routable, collect (bucket name, slot meta)
+        let mut routed: Vec<(String, GroupSlot)> = Vec::new();
+        for (gi, idx) in groups.iter().enumerate() {
+            if idx.is_empty() {
+                continue;
+            }
+            self.route_group(gi, idx, d, compression, 0, &mut routed)?;
+        }
+        // 3: pack per bucket
+        let mut dispatches: Vec<Dispatch> = Vec::new();
+        // group routed slots by bucket name, preserving order
+        let mut by_bucket: Vec<(String, Vec<GroupSlot>)> = Vec::new();
+        for (bucket, slot) in routed {
+            match by_bucket.iter_mut().find(|(b, _)| *b == bucket) {
+                Some((_, v)) => v.push(slot),
+                None => by_bucket.push((bucket, vec![slot])),
+            }
+        }
+        for (bucket_name, slots) in by_bucket {
+            let bucket = self
+                .buckets
+                .iter()
+                .find(|b| b.name == bucket_name)
+                .expect("routed to existing bucket");
+            for chunk in slots.chunks(bucket.b) {
+                dispatches.push(self.pack(data, bucket, chunk)?);
+            }
+        }
+        Ok(dispatches)
+    }
+
+    /// Plan exact-shape dispatches (native backend): one dispatch per
+    /// group, b=1, no point/center padding at all.  Groups larger than
+    /// `max_group` are split (same pooling semantics as bucket splits).
+    pub fn plan_exact(
+        data: &Dataset,
+        groups: &[Vec<usize>],
+        compression: f32,
+        iters: usize,
+        max_group: usize,
+    ) -> Result<Vec<Dispatch>> {
+        if compression < 1.0 {
+            return Err(Error::Config(format!(
+                "compression {compression} must be >= 1"
+            )));
+        }
+        let d = data.dims();
+        let mut dispatches = Vec::new();
+        for (gi, idx) in groups.iter().enumerate() {
+            if idx.is_empty() {
+                continue;
+            }
+            for chunk in idx.chunks(max_group.max(1)) {
+                let n = chunk.len();
+                let k = local_k(n, compression);
+                let mut points = Vec::with_capacity(n * d);
+                for &src in chunk {
+                    points.extend_from_slice(data.row(src));
+                }
+                // evenly-strided init: deterministic like FirstK but
+                // immune to sorted group order (the equal partitioner
+                // emits distance-sorted shells; seeding the first k
+                // rows would pile every center at the inner edge)
+                let mut init = Vec::with_capacity(k * d);
+                for c in 0..k {
+                    let row = c * n / k;
+                    init.extend_from_slice(&points[row * d..(row + 1) * d]);
+                }
+                dispatches.push(Dispatch {
+                    bucket: format!("exact_{n}x{k}"),
+                    batch: DeviceBatch {
+                        b: 1,
+                        n,
+                        d,
+                        k,
+                        iters,
+                        points,
+                        weights: vec![1.0; n],
+                        init,
+                    },
+                    groups: vec![GroupSlot {
+                        group_idx: gi,
+                        slot: 0,
+                        n,
+                        k,
+                        indices: chunk.to_vec(),
+                    }],
+                });
+            }
+        }
+        Ok(dispatches)
+    }
+
+    fn route_group(
+        &self,
+        group_idx: usize,
+        indices: &[usize],
+        d: usize,
+        compression: f32,
+        depth: usize,
+        out: &mut Vec<(String, GroupSlot)>,
+    ) -> Result<()> {
+        let n = indices.len();
+        let k = local_k(n, compression);
+        if let Some(bucket) = self.pick(n, d, k) {
+            out.push((
+                bucket.name.clone(),
+                GroupSlot { group_idx, slot: 0, n, k, indices: indices.to_vec() },
+            ));
+            return Ok(());
+        }
+        if depth >= self.max_split_depth || n < 2 {
+            return Err(Error::NoBucket { n, d, k });
+        }
+        let mid = n / 2;
+        self.route_group(group_idx, &indices[..mid], d, compression, depth + 1, out)?;
+        self.route_group(group_idx, &indices[mid..], d, compression, depth + 1, out)
+    }
+
+    /// 4: pad one chunk of groups into a bucket-shaped batch.
+    fn pack(&self, data: &Dataset, bucket: &BucketSpec, slots: &[GroupSlot]) -> Result<Dispatch> {
+        debug_assert!(slots.len() <= bucket.b);
+        let (b, n, d, k) = (bucket.b, bucket.n, bucket.d, bucket.k);
+        let src_d = data.dims();
+        let mut points = vec![0.0f32; b * n * d];
+        let mut weights = vec![0.0f32; b * n];
+        let mut init = vec![PAD_CENTER; b * k * d];
+        let mut groups = Vec::with_capacity(slots.len());
+
+        for (slot_idx, slot) in slots.iter().enumerate() {
+            let p_base = slot_idx * n * d;
+            for (row, &src) in slot.indices.iter().enumerate() {
+                let dst = p_base + row * d;
+                points[dst..dst + src_d].copy_from_slice(data.row(src));
+                weights[slot_idx * n + row] = 1.0;
+            }
+            // Evenly-strided init from the group's own points (see
+            // plan_exact: FirstK on distance-sorted shells is degenerate).
+            let c_base = slot_idx * k * d;
+            for c in 0..slot.k {
+                let src = slot.indices[c * slot.indices.len() / slot.k];
+                let dst = c_base + c * d;
+                init[dst..dst + src_d].copy_from_slice(data.row(src));
+                // zero the padded attribute lanes (PAD_CENTER would
+                // otherwise dominate the distance)
+                for j in src_d..d {
+                    init[dst + j] = 0.0;
+                }
+            }
+            groups.push(GroupSlot { slot: slot_idx, ..slot.clone() });
+        }
+
+        Ok(Dispatch {
+            bucket: bucket.name.clone(),
+            batch: DeviceBatch {
+                b,
+                n,
+                d,
+                k,
+                iters: bucket.iters,
+                points,
+                weights,
+                init,
+            },
+            groups,
+        })
+    }
+
+    /// 5: unpack one dispatch's device output into per-group results.
+    /// Associated (not `&self`): works for bucket and exact dispatches.
+    pub fn unpack(dispatch: &Dispatch, out: &DeviceOutput, src_d: usize) -> Vec<LocalResult> {
+        let (n, d, k) = (dispatch.batch.n, dispatch.batch.d, dispatch.batch.k);
+        let _ = n;
+        dispatch
+            .groups
+            .iter()
+            .map(|g| {
+                let c_base = g.slot * k * d;
+                let mut centers = Vec::with_capacity(g.k * src_d);
+                let mut counts = Vec::with_capacity(g.k);
+                for c in 0..g.k {
+                    let row = &out.centers[c_base + c * d..c_base + c * d + src_d];
+                    centers.extend_from_slice(row);
+                    counts.push(out.counts[g.slot * k + c]);
+                }
+                LocalResult {
+                    group_idx: g.group_idx,
+                    centers,
+                    counts,
+                    inertia: out.inertia[g.slot],
+                }
+            })
+            .collect()
+    }
+}
+
+/// Local-center count for a group of `n` under compression `c`.
+pub fn local_k(n: usize, compression: f32) -> usize {
+    ((n as f32 / compression).ceil() as usize).clamp(1, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::runtime::{Backend, NativeBackend};
+
+    fn bucket(name: &str, b: usize, n: usize, d: usize, k: usize) -> BucketSpec {
+        BucketSpec {
+            name: name.into(),
+            b,
+            n,
+            d,
+            k,
+            iters: 5,
+            file: format!("{name}.hlo.txt"),
+            sha256: String::new(),
+        }
+    }
+
+    fn batcher() -> Batcher {
+        Batcher::from_buckets(vec![
+            bucket("s", 4, 16, 4, 4),
+            bucket("l", 2, 64, 4, 16),
+        ])
+    }
+
+    fn line_data(m: usize) -> Dataset {
+        Dataset::from_rows(&(0..m).map(|i| vec![i as f32, 0.0]).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn local_k_math() {
+        assert_eq!(local_k(25, 6.0), 5);
+        assert_eq!(local_k(10, 5.0), 2);
+        assert_eq!(local_k(3, 10.0), 1);
+        assert_eq!(local_k(7, 1.0), 7);
+    }
+
+    #[test]
+    fn routes_to_cheapest_bucket() {
+        let b = batcher();
+        let data = line_data(40);
+        let groups = vec![(0..10).collect::<Vec<_>>(), (10..40).collect()];
+        let plan = b.plan(&data, &groups, 4.0).unwrap();
+        // group 0 (n=10,k=3) -> bucket s; group 1 (n=30,k=8) -> bucket l
+        assert_eq!(plan.len(), 2);
+        let names: Vec<&str> = plan.iter().map(|p| p.bucket.as_str()).collect();
+        assert!(names.contains(&"s") && names.contains(&"l"));
+    }
+
+    #[test]
+    fn packs_multiple_groups_per_dispatch() {
+        let b = batcher();
+        let data = line_data(40);
+        // 5 groups of 8: bucket s holds 4 per dispatch -> 2 dispatches
+        let groups: Vec<Vec<usize>> = (0..5).map(|g| (g * 8..(g + 1) * 8).collect()).collect();
+        let plan = b.plan(&data, &groups, 4.0).unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].groups.len(), 4);
+        assert_eq!(plan[1].groups.len(), 1);
+        assert_eq!(plan[0].batch.b, 4); // batch is always bucket-shaped
+    }
+
+    #[test]
+    fn splits_oversized_groups() {
+        let b = batcher();
+        let data = line_data(200);
+        let groups = vec![(0..200).collect::<Vec<_>>()]; // no bucket holds 200
+        let plan = b.plan(&data, &groups, 4.0).unwrap();
+        let total_points: usize = plan
+            .iter()
+            .flat_map(|p| p.groups.iter().map(|g| g.n))
+            .sum();
+        assert_eq!(total_points, 200);
+        // every chunk belongs to the original group 0
+        assert!(plan.iter().all(|p| p.groups.iter().all(|g| g.group_idx == 0)));
+        // every chunk fits its bucket
+        for p in &plan {
+            for g in &p.groups {
+                assert!(g.n <= p.batch.n && g.k <= p.batch.k);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_is_inert_through_native_backend() {
+        let b = batcher();
+        // 6 real points in a group padded to n=16, k slots padded to 4
+        let data = Dataset::from_rows(&[
+            vec![0.0, 0.0],
+            vec![0.1, 0.0],
+            vec![10.0, 0.0],
+            vec![10.1, 0.0],
+            vec![20.0, 0.0],
+            vec![20.1, 0.0],
+        ])
+        .unwrap();
+        let groups = vec![(0..6).collect::<Vec<_>>()];
+        let plan = b.plan(&data, &groups, 2.0).unwrap();
+        assert_eq!(plan.len(), 1);
+        let out = NativeBackend::serial().run_batch(&plan[0].batch).unwrap();
+        let results = Batcher::unpack(&plan[0], &out, 2);
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.centers.len(), 3 * 2); // k=3 centers, 2 real dims
+        // counts must cover exactly the 6 real points
+        assert_eq!(r.counts.iter().sum::<f32>(), 6.0);
+        // no center got dragged toward the pad sentinel
+        assert!(r.centers.iter().all(|&c| c.abs() < 100.0));
+    }
+
+    #[test]
+    fn empty_groups_are_skipped() {
+        let b = batcher();
+        let data = line_data(8);
+        let groups = vec![vec![], (0..8).collect::<Vec<_>>(), vec![]];
+        let plan = b.plan(&data, &groups, 2.0).unwrap();
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].groups.len(), 1);
+        assert_eq!(plan[0].groups[0].group_idx, 1);
+    }
+
+    #[test]
+    fn rejects_bad_compression() {
+        let b = batcher();
+        let data = line_data(8);
+        assert!(b.plan(&data, &[vec![0, 1]], 0.5).is_err());
+    }
+
+    #[test]
+    fn unsatisfiable_when_dims_exceed_buckets() {
+        let b = batcher();
+        let data = Dataset::from_rows(&vec![vec![0.0; 9]; 4]).unwrap(); // d=9 > 4
+        let err = b.plan(&data, &[vec![0, 1, 2, 3]], 2.0).unwrap_err();
+        assert!(matches!(err, Error::NoBucket { .. }));
+    }
+}

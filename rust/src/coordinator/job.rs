@@ -1,0 +1,79 @@
+//! Job types shared by the scheduler and the server.
+
+use crate::partition::Scheme;
+use crate::runtime::BackendKind;
+
+/// A clustering job as submitted over the wire or from the CLI.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    /// Caller-chosen id echoed back in the result.
+    pub id: u64,
+    /// Flat row-major points.
+    pub points: Vec<f32>,
+    pub dims: usize,
+    /// Final number of centers.
+    pub k: usize,
+    /// Partitioning scheme for the local stage.
+    pub scheme: Scheme,
+    /// Sub-regions (None = auto).
+    pub num_groups: Option<usize>,
+    /// Paper's compression value c (local centers = region size / c).
+    pub compression: f32,
+    pub seed: u64,
+}
+
+impl JobRequest {
+    /// A request with the experiment defaults (unequal, auto groups, c=6).
+    pub fn simple(id: u64, points: Vec<f32>, dims: usize, k: usize) -> Self {
+        JobRequest {
+            id,
+            points,
+            dims,
+            k,
+            scheme: Scheme::Unequal,
+            num_groups: None,
+            compression: 6.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Result delivered back to the submitter.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    /// k×D centers in the *original* coordinate system.
+    pub centers: Vec<f32>,
+    /// Cluster id per input point.
+    pub labels: Vec<u32>,
+    pub inertia: f64,
+    pub elapsed_ms: f64,
+    /// Which backend executed the local stage.
+    pub backend: BackendKind,
+}
+
+/// Lifecycle of a job inside the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    /// Rejected at submission (queue full — backpressure).
+    Rejected,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_defaults() {
+        let j = JobRequest::simple(7, vec![0.0; 10], 2, 3);
+        assert_eq!(j.id, 7);
+        assert_eq!(j.k, 3);
+        assert_eq!(j.scheme, Scheme::Unequal);
+        assert!(j.num_groups.is_none());
+        assert_eq!(j.compression, 6.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! The coordinator: the paper's host-side orchestration grown into a
+//! runtime.
+//!
+//! * [`batcher`] — packs variable-size sub-regions into the fixed-shape
+//!   padded batches the AOT executables expect (§V's flattening plus
+//!   bucket selection, group splitting, weight masks, sentinel centers).
+//! * [`scheduler`] — a dedicated dispatch thread that owns the device
+//!   backend (PJRT handles are not `Send`) and serves clustering jobs
+//!   from a bounded queue; workers for the native path.
+//! * [`job`] — job spec/result types shared with the server.
+
+pub mod batcher;
+pub mod job;
+pub mod scheduler;
+
+pub use batcher::{Batcher, Dispatch, GroupSlot, LocalResult};
+pub use job::{JobRequest, JobResult, JobStatus};
+pub use scheduler::{Scheduler, SchedulerConfig};

@@ -1,0 +1,283 @@
+//! Scheduler: a dedicated dispatch thread owning the device backend.
+//!
+//! PJRT handles are not `Send`, so the backend is constructed *inside*
+//! the scheduler thread and jobs flow to it through a bounded queue
+//! (`std::sync::mpsc::sync_channel`) — the queue bound is the server's
+//! backpressure mechanism: when it is full, [`Scheduler::submit`]
+//! returns `Err` immediately instead of blocking the accept loop.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::job::{JobRequest, JobResult};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::pipeline::{PipelineConfig, SubclusterPipeline};
+use crate::runtime::BackendKind;
+use crate::telemetry::Counters;
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Queue bound: jobs admitted but not yet finished.
+    pub queue_depth: usize,
+    pub backend: BackendKind,
+    pub artifacts_dir: std::path::PathBuf,
+    /// Worker threads for native/assignment stages inside the pipeline.
+    pub workers: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            queue_depth: 16,
+            backend: BackendKind::Native,
+            artifacts_dir: std::path::PathBuf::from(crate::pipeline::DEFAULT_ARTIFACTS),
+            workers: crate::util::threadpool::default_workers(),
+        }
+    }
+}
+
+type Reply = SyncSender<Result<JobResult>>;
+
+/// Handle to the dispatch thread.
+pub struct Scheduler {
+    tx: Option<SyncSender<(JobRequest, Reply)>>,
+    handle: Option<JoinHandle<()>>,
+    pub counters: Arc<Counters>,
+}
+
+impl Scheduler {
+    /// Spawn the dispatch thread.
+    pub fn start(cfg: SchedulerConfig) -> Scheduler {
+        let (tx, rx) = sync_channel::<(JobRequest, Reply)>(cfg.queue_depth);
+        let counters = Arc::new(Counters::default());
+        let thread_counters = Arc::clone(&counters);
+        let handle = std::thread::spawn(move || dispatch_loop(cfg, rx, thread_counters));
+        Scheduler { tx: Some(tx), handle: Some(handle), counters }
+    }
+
+    /// Submit a job.  Returns a receiver for the result, or an
+    /// overload error when the queue is full (backpressure).
+    pub fn submit(&self, job: JobRequest) -> Result<Receiver<Result<JobResult>>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("scheduler stopped".into()))?;
+        match tx.try_send((job, reply_tx)) {
+            Ok(()) => {
+                self.counters
+                    .requests
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(reply_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.counters
+                    .rejected
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Err(Error::Server("queue full".into()))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::Coordinator("scheduler thread died".into()))
+            }
+        }
+    }
+
+    /// Submit and block until the result arrives.
+    pub fn run_blocking(&self, job: JobRequest) -> Result<JobResult> {
+        let rx = self.submit(job)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("scheduler dropped reply".into()))?
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatch_loop(
+    cfg: SchedulerConfig,
+    rx: Receiver<(JobRequest, Reply)>,
+    counters: Arc<Counters>,
+) {
+    // Pipelines are cached per (scheme, groups, compression, k) so the
+    // PJRT client and compiled executables are reused across jobs.
+    let mut pipelines: Vec<(PipelineKey, SubclusterPipeline)> = Vec::new();
+
+    while let Ok((job, reply)) = rx.recv() {
+        let t0 = Instant::now();
+        let result = run_job(&cfg, &mut pipelines, &job).map(|mut r| {
+            r.elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+            r
+        });
+        use std::sync::atomic::Ordering::Relaxed;
+        match &result {
+            Ok(r) => {
+                counters.completed.fetch_add(1, Relaxed);
+                counters
+                    .points_clustered
+                    .fetch_add(r.labels.len() as u64, Relaxed);
+            }
+            Err(_) => {
+                counters.errors.fetch_add(1, Relaxed);
+            }
+        }
+        let _ = reply.send(result); // submitter may have gone away; fine
+    }
+}
+
+#[derive(PartialEq)]
+struct PipelineKey {
+    scheme: crate::partition::Scheme,
+    num_groups: Option<usize>,
+    compression_milli: u32,
+    final_k: usize,
+    seed: u64,
+}
+
+fn run_job(
+    cfg: &SchedulerConfig,
+    pipelines: &mut Vec<(PipelineKey, SubclusterPipeline)>,
+    job: &JobRequest,
+) -> Result<JobResult> {
+    let data = Dataset::new(job.points.clone(), job.dims)?;
+    let key = PipelineKey {
+        scheme: job.scheme,
+        num_groups: job.num_groups,
+        compression_milli: (job.compression * 1000.0) as u32,
+        final_k: job.k,
+        seed: job.seed,
+    };
+    if !pipelines.iter().any(|(k, _)| *k == key) {
+        let mut b = PipelineConfig::builder()
+            .scheme(job.scheme)
+            .compression(job.compression)
+            .final_k(job.k)
+            .backend(cfg.backend)
+            .artifacts_dir(cfg.artifacts_dir.clone())
+            .workers(cfg.workers)
+            .seed(job.seed);
+        if let Some(g) = job.num_groups {
+            b = b.num_groups(g);
+        }
+        let pipeline = SubclusterPipeline::new(b.build()?);
+        pipelines.push((key, pipeline));
+        // LRU-ish cap so a scan over parameters can't hoard memory
+        if pipelines.len() > 8 {
+            pipelines.remove(0);
+        }
+    }
+    let pipeline = &pipelines
+        .iter()
+        .find(|(k, _)| {
+            *k == PipelineKey {
+                scheme: job.scheme,
+                num_groups: job.num_groups,
+                compression_milli: (job.compression * 1000.0) as u32,
+                final_k: job.k,
+                seed: job.seed,
+            }
+        })
+        .expect("inserted above")
+        .1;
+    let r = pipeline.run(&data)?;
+    Ok(JobResult {
+        id: job.id,
+        centers: r.centers,
+        labels: r.labels,
+        inertia: r.inertia,
+        elapsed_ms: 0.0, // stamped by the dispatch loop
+        backend: cfg.backend,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_blobs, BlobSpec};
+
+    fn points(m: usize, seed: u64) -> Vec<f32> {
+        make_blobs(&BlobSpec {
+            num_points: m,
+            num_clusters: 4,
+            dims: 2,
+            std: 0.05,
+            extent: 10.0,
+            seed,
+        })
+        .unwrap()
+        .as_slice()
+        .to_vec()
+    }
+
+    #[test]
+    fn runs_a_job() {
+        let s = Scheduler::start(SchedulerConfig::default());
+        let mut job = JobRequest::simple(1, points(800, 0), 2, 4);
+        job.num_groups = Some(4);
+        job.compression = 4.0;
+        let r = s.run_blocking(job).unwrap();
+        assert_eq!(r.id, 1);
+        assert_eq!(r.centers.len(), 8);
+        assert_eq!(r.labels.len(), 800);
+        assert!(r.elapsed_ms > 0.0);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(s.counters.completed.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn propagates_job_errors() {
+        let s = Scheduler::start(SchedulerConfig::default());
+        // k > points
+        let job = JobRequest::simple(2, points(10, 1), 2, 50);
+        assert!(s.run_blocking(job).is_err());
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(s.counters.errors.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn queue_full_rejects() {
+        let s = Scheduler::start(SchedulerConfig { queue_depth: 1, ..Default::default() });
+        // big enough jobs that the queue backs up
+        let mk = |id| {
+            let mut j = JobRequest::simple(id, points(20_000, id), 2, 8);
+            j.num_groups = Some(8);
+            j
+        };
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for id in 0..12 {
+            match s.submit(mk(id)) {
+                Ok(rx) => receivers.push(rx),
+                Err(Error::Server(_)) => rejected += 1,
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        // drain what was accepted
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+        assert!(rejected > 0, "expected at least one backpressure rejection");
+    }
+
+    #[test]
+    fn reuses_pipelines_across_jobs() {
+        let s = Scheduler::start(SchedulerConfig::default());
+        for id in 0..3 {
+            let mut j = JobRequest::simple(id, points(500, id), 2, 4);
+            j.num_groups = Some(4);
+            let r = s.run_blocking(j).unwrap();
+            assert_eq!(r.id, id);
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(s.counters.completed.load(Relaxed), 3);
+    }
+}

@@ -1,0 +1,214 @@
+//! The core `Dataset` container: a dense row-major f32 matrix with
+//! optional ground-truth labels (needed for the paper's Table-1
+//! "correctly clustered" counts).
+
+use crate::error::{Error, Result};
+
+/// M×D points, row-major, plus optional class labels of length M.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    points: Vec<f32>,
+    dims: usize,
+    labels: Option<Vec<usize>>,
+}
+
+impl Dataset {
+    /// Build from a flat row-major buffer.
+    pub fn new(points: Vec<f32>, dims: usize) -> Result<Self> {
+        if dims == 0 {
+            return Err(Error::Data("dims must be > 0".into()));
+        }
+        if points.len() % dims != 0 {
+            return Err(Error::Data(format!(
+                "buffer length {} is not a multiple of dims {}",
+                points.len(),
+                dims
+            )));
+        }
+        if points.iter().any(|x| !x.is_finite()) {
+            return Err(Error::Data("non-finite value in dataset".into()));
+        }
+        Ok(Dataset { points, dims, labels: None })
+    }
+
+    /// Build from rows.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Result<Self> {
+        let dims = rows.first().map(|r| r.len()).unwrap_or(0);
+        if rows.iter().any(|r| r.len() != dims) {
+            return Err(Error::Data("ragged rows".into()));
+        }
+        Self::new(rows.concat(), dims.max(1))
+    }
+
+    /// Attach ground-truth labels (len must equal `len()`).
+    pub fn with_labels(mut self, labels: Vec<usize>) -> Result<Self> {
+        if labels.len() != self.len() {
+            return Err(Error::Data(format!(
+                "{} labels for {} points",
+                labels.len(),
+                self.len()
+            )));
+        }
+        self.labels = Some(labels);
+        Ok(self)
+    }
+
+    /// Number of points M.
+    pub fn len(&self) -> usize {
+        self.points.len() / self.dims
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Attribute count D.
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Row view of point `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.points[i * self.dims..(i + 1) * self.dims]
+    }
+
+    /// The flat row-major buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.points
+    }
+
+    /// Mutable flat buffer (used by scalers).
+    pub(crate) fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.points
+    }
+
+    pub fn labels(&self) -> Option<&[usize]> {
+        self.labels.as_deref()
+    }
+
+    /// Number of distinct ground-truth classes, if labelled.
+    pub fn num_classes(&self) -> Option<usize> {
+        self.labels
+            .as_ref()
+            .map(|ls| ls.iter().copied().max().map(|m| m + 1).unwrap_or(0))
+    }
+
+    /// New dataset containing `indices` (labels carried along).
+    pub fn select(&self, indices: &[usize]) -> Result<Dataset> {
+        let mut points = Vec::with_capacity(indices.len() * self.dims);
+        for &i in indices {
+            if i >= self.len() {
+                return Err(Error::Data(format!("index {i} out of range")));
+            }
+            points.extend_from_slice(self.row(i));
+        }
+        let mut ds = Dataset { points, dims: self.dims, labels: None };
+        if let Some(ls) = &self.labels {
+            ds.labels = Some(indices.iter().map(|&i| ls[i]).collect());
+        }
+        Ok(ds)
+    }
+
+    /// Keep only the listed attribute columns (for figure projections).
+    pub fn project(&self, cols: &[usize]) -> Result<Dataset> {
+        if cols.iter().any(|&c| c >= self.dims) {
+            return Err(Error::Data("projection column out of range".into()));
+        }
+        let mut points = Vec::with_capacity(self.len() * cols.len());
+        for i in 0..self.len() {
+            let row = self.row(i);
+            points.extend(cols.iter().map(|&c| row[c]));
+        }
+        Ok(Dataset { points, dims: cols.len(), labels: self.labels.clone() })
+    }
+
+    /// Per-attribute minimum (the paper's point **L**).
+    pub fn min_corner(&self) -> Vec<f32> {
+        self.corner(f32::min, f32::INFINITY)
+    }
+
+    /// Per-attribute maximum (the paper's point **H**).
+    pub fn max_corner(&self) -> Vec<f32> {
+        self.corner(f32::max, f32::NEG_INFINITY)
+    }
+
+    fn corner(&self, fold: fn(f32, f32) -> f32, init: f32) -> Vec<f32> {
+        let mut corner = vec![init; self.dims];
+        for i in 0..self.len() {
+            for (c, &v) in corner.iter_mut().zip(self.row(i)) {
+                *c = fold(*c, v);
+            }
+        }
+        corner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Dataset {
+        Dataset::from_rows(&[
+            vec![0.0, 10.0],
+            vec![1.0, 20.0],
+            vec![2.0, 5.0],
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let d = small();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dims(), 2);
+        assert_eq!(d.row(1), &[1.0, 20.0]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(Dataset::new(vec![1.0, 2.0, 3.0], 2).is_err());
+        assert!(Dataset::new(vec![1.0], 0).is_err());
+        assert!(Dataset::from_rows(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite() {
+        assert!(Dataset::new(vec![1.0, f32::NAN], 2).is_err());
+        assert!(Dataset::new(vec![1.0, f32::INFINITY], 2).is_err());
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let d = small().with_labels(vec![0, 1, 1]).unwrap();
+        assert_eq!(d.labels(), Some(&[0, 1, 1][..]));
+        assert_eq!(d.num_classes(), Some(2));
+        assert!(small().with_labels(vec![0]).is_err());
+    }
+
+    #[test]
+    fn select_carries_labels() {
+        let d = small().with_labels(vec![7, 8, 9].iter().map(|&x| x % 3).collect()).unwrap();
+        let s = d.select(&[2, 0]).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(0), &[2.0, 5.0]);
+        assert_eq!(s.labels(), Some(&[0, 1][..]));
+        assert!(d.select(&[5]).is_err());
+    }
+
+    #[test]
+    fn corners() {
+        let d = small();
+        assert_eq!(d.min_corner(), vec![0.0, 5.0]);
+        assert_eq!(d.max_corner(), vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn project_columns() {
+        let d = Dataset::from_rows(&[vec![1., 2., 3.], vec![4., 5., 6.]]).unwrap();
+        let p = d.project(&[2, 0]).unwrap();
+        assert_eq!(p.row(0), &[3., 1.]);
+        assert_eq!(p.row(1), &[6., 4.]);
+        assert!(d.project(&[3]).is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! §V of the paper: host↔device memory layout.
+//!
+//! The CUDA host flattened each sub-region's 2-D array into one 1-D
+//! buffer either **row-major** (datum-contiguous) or **column-major**
+//! (attribute-contiguous), and the device reconstructed it.  We keep
+//! both paths and bench them against each other (`fig_partition`
+//! bench); the PJRT path consumes row-major, which is why the batcher
+//! defaults to it.
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+/// Flattening order for a 2-D (M points × D attrs) block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryOrder {
+    /// All attributes of a datum in consecutive locations.
+    RowMajor,
+    /// All values of one attribute in consecutive locations.
+    ColMajor,
+}
+
+impl MemoryOrder {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "row" | "row-major" => Ok(MemoryOrder::RowMajor),
+            "col" | "column" | "col-major" => Ok(MemoryOrder::ColMajor),
+            other => Err(Error::Config(format!("unknown memory order '{other}'"))),
+        }
+    }
+}
+
+/// Flatten the selected `indices` of `data` into a 1-D buffer, writing
+/// into `out` (cleared first).  This is the "generate the 1-D array
+/// while subgrouping" optimization from §V — selection and flattening
+/// are one pass, no intermediate per-group 2-D arrays.
+pub fn flatten_into(data: &Dataset, indices: &[usize], order: MemoryOrder, out: &mut Vec<f32>) {
+    let d = data.dims();
+    out.clear();
+    out.reserve(indices.len() * d);
+    match order {
+        MemoryOrder::RowMajor => {
+            for &i in indices {
+                out.extend_from_slice(data.row(i));
+            }
+        }
+        MemoryOrder::ColMajor => {
+            for c in 0..d {
+                out.extend(indices.iter().map(|&i| data.row(i)[c]));
+            }
+        }
+    }
+}
+
+/// Allocating variant of [`flatten_into`].
+pub fn flatten(data: &Dataset, indices: &[usize], order: MemoryOrder) -> Vec<f32> {
+    let mut out = Vec::new();
+    flatten_into(data, indices, order, &mut out);
+    out
+}
+
+/// Device-side reconstruction (§V): turn a flat buffer back into row-major
+/// M×D.  `RowMajor` input is a copy; `ColMajor` input is a transpose
+/// ("read one value, skip M locations, ...").
+pub fn reconstruct(flat: &[f32], m: usize, d: usize, order: MemoryOrder) -> Result<Vec<f32>> {
+    if flat.len() != m * d {
+        return Err(Error::Data(format!(
+            "flat buffer has {} values, expected {}x{}",
+            flat.len(),
+            m,
+            d
+        )));
+    }
+    Ok(match order {
+        MemoryOrder::RowMajor => flat.to_vec(),
+        MemoryOrder::ColMajor => {
+            let mut out = vec![0.0; m * d];
+            for c in 0..d {
+                for i in 0..m {
+                    out[i * d + c] = flat[c * m + i];
+                }
+            }
+            out
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data() -> Dataset {
+        Dataset::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn row_major_flatten() {
+        assert_eq!(
+            flatten(&data(), &[0, 2], MemoryOrder::RowMajor),
+            vec![1.0, 2.0, 5.0, 6.0]
+        );
+    }
+
+    #[test]
+    fn col_major_flatten() {
+        assert_eq!(
+            flatten(&data(), &[0, 2], MemoryOrder::ColMajor),
+            vec![1.0, 5.0, 2.0, 6.0]
+        );
+    }
+
+    #[test]
+    fn reconstruct_inverts_flatten_both_orders() {
+        let d = data();
+        let idx = [2, 0, 1];
+        let expect = flatten(&d, &idx, MemoryOrder::RowMajor);
+        for order in [MemoryOrder::RowMajor, MemoryOrder::ColMajor] {
+            let flat = flatten(&d, &idx, order);
+            let back = reconstruct(&flat, idx.len(), d.dims(), order).unwrap();
+            assert_eq!(back, expect, "order {order:?}");
+        }
+    }
+
+    #[test]
+    fn reconstruct_checks_length() {
+        assert!(reconstruct(&[1.0; 5], 2, 3, MemoryOrder::RowMajor).is_err());
+    }
+
+    #[test]
+    fn empty_selection() {
+        assert!(flatten(&data(), &[], MemoryOrder::ColMajor).is_empty());
+        assert_eq!(reconstruct(&[], 0, 4, MemoryOrder::ColMajor).unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn parse_order() {
+        assert_eq!(MemoryOrder::parse("row").unwrap(), MemoryOrder::RowMajor);
+        assert_eq!(MemoryOrder::parse("col-major").unwrap(), MemoryOrder::ColMajor);
+        assert!(MemoryOrder::parse("diag").is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! Dataset I/O: CSV (with optional trailing label column) and a raw
+//! little-endian f32 binary format for large synthetic workloads.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+/// Load a CSV of floats. If `label_col` is set, that column is parsed
+/// as an integer class label instead of a feature.  Lines starting with
+/// `#` and blank lines are skipped; an optional non-numeric header row
+/// is auto-detected and skipped.
+pub fn load_csv(path: impl AsRef<Path>, label_col: Option<usize>) -> Result<Dataset> {
+    let file = File::open(path.as_ref())?;
+    parse_csv(BufReader::new(file), label_col)
+}
+
+/// CSV parsing split out for in-memory tests.
+pub fn parse_csv<R: BufRead>(reader: R, label_col: Option<usize>) -> Result<Dataset> {
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: std::result::Result<Vec<f32>, _> = fields
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| Some(*i) != label_col)
+            .map(|(_, f)| f.parse::<f32>())
+            .collect();
+        let feats = match parsed {
+            Ok(v) => v,
+            Err(_) if rows.is_empty() && lineno == 0 => continue, // header row
+            Err(e) => {
+                return Err(Error::Data(format!("line {}: {e}", lineno + 1)));
+            }
+        };
+        if let Some(lc) = label_col {
+            let raw = fields
+                .get(lc)
+                .ok_or_else(|| Error::Data(format!("line {}: missing label", lineno + 1)))?;
+            let label = raw
+                .parse::<f32>()
+                .map_err(|e| Error::Data(format!("line {}: label: {e}", lineno + 1)))?;
+            labels.push(label as usize);
+        }
+        rows.push(feats);
+    }
+    let ds = Dataset::from_rows(&rows)?;
+    if label_col.is_some() {
+        ds.with_labels(labels)
+    } else {
+        Ok(ds)
+    }
+}
+
+/// Write a dataset as CSV (labels appended as the last column if present).
+pub fn save_csv(data: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    for i in 0..data.len() {
+        let row = data.row(i);
+        let mut line = row
+            .iter()
+            .map(|x| format!("{x}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        if let Some(ls) = data.labels() {
+            line.push_str(&format!(",{}", ls[i]));
+        }
+        writeln!(w, "{line}")?;
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"PSAMPLE1";
+
+/// Save in the raw binary format: magic, u64 M, u64 D, u8 has_labels,
+/// M*D little-endian f32, then (if labelled) M u64 labels.
+pub fn save_binary(data: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(data.len() as u64).to_le_bytes())?;
+    w.write_all(&(data.dims() as u64).to_le_bytes())?;
+    w.write_all(&[data.labels().is_some() as u8])?;
+    for &x in data.as_slice() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    if let Some(ls) = data.labels() {
+        for &l in ls {
+            w.write_all(&(l as u64).to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load the raw binary format written by [`save_binary`].
+pub fn load_binary(path: impl AsRef<Path>) -> Result<Dataset> {
+    let mut r = BufReader::new(File::open(path.as_ref())?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        return Err(Error::Data("bad magic: not a parsample binary file".into()));
+    }
+    let m = read_u64(&mut r)? as usize;
+    let d = read_u64(&mut r)? as usize;
+    let mut has_labels = [0u8; 1];
+    r.read_exact(&mut has_labels)?;
+    let mut buf = vec![0u8; m * d * 4];
+    r.read_exact(&mut buf)?;
+    let points: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let ds = Dataset::new(points, d)?;
+    if has_labels[0] == 1 {
+        let mut labels = Vec::with_capacity(m);
+        for _ in 0..m {
+            labels.push(read_u64(&mut r)? as usize);
+        }
+        ds.with_labels(labels)
+    } else {
+        Ok(ds)
+    }
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_plain_csv() {
+        let ds = parse_csv(Cursor::new("1.0,2.0\n3.0,4.0\n"), None).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert!(ds.labels().is_none());
+    }
+
+    #[test]
+    fn parses_label_column() {
+        let ds = parse_csv(Cursor::new("1.0,2.0,0\n3.0,4.0,1\n"), Some(2)).unwrap();
+        assert_eq!(ds.dims(), 2);
+        assert_eq!(ds.labels(), Some(&[0, 1][..]));
+    }
+
+    #[test]
+    fn skips_header_comments_blanks() {
+        let text = "x,y\n# comment\n\n1,2\n3,4\n";
+        let ds = parse_csv(Cursor::new(text), None).unwrap();
+        assert_eq!(ds.len(), 2);
+    }
+
+    #[test]
+    fn rejects_mid_file_garbage() {
+        assert!(parse_csv(Cursor::new("1,2\nfoo,bar\n"), None).is_err());
+    }
+
+    #[test]
+    fn csv_roundtrip_via_tempfile() {
+        let dir = std::env::temp_dir().join(format!("parsample_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let ds = Dataset::from_rows(&[vec![1.5, -2.0], vec![0.0, 9.0]])
+            .unwrap()
+            .with_labels(vec![1, 0])
+            .unwrap();
+        save_csv(&ds, &path).unwrap();
+        let back = load_csv(&path, Some(2)).unwrap();
+        assert_eq!(back, ds);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("parsample_bin_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let ds = Dataset::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]])
+            .unwrap()
+            .with_labels(vec![2, 7])
+            .unwrap();
+        save_binary(&ds, &path).unwrap();
+        assert_eq!(load_binary(&path).unwrap(), ds);
+        // and without labels
+        let ds2 = Dataset::from_rows(&vec![vec![0.5; 3]; 4]).unwrap();
+        save_binary(&ds2, &path).unwrap();
+        assert_eq!(load_binary(&path).unwrap(), ds2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("parsample_mag_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC123").unwrap();
+        assert!(load_binary(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,15 @@
+//! Datasets and everything the paper's *host part* does to them before
+//! the device sees a byte: loading, synthesis, feature scaling (step 1
+//! of both Algorithms), and the §V row/column-major flattening.
+
+pub mod builtin;
+pub mod dataset;
+pub mod layout;
+pub mod loader;
+pub mod scaling;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use layout::{flatten, reconstruct, MemoryOrder};
+pub use scaling::{MinMaxScaler, Scaler, ZScoreScaler};
+pub use synthetic::{BlobSpec, make_blobs};

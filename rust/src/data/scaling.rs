@@ -1,0 +1,214 @@
+//! Feature scaling — step 1 of both of the paper's algorithms.
+//!
+//! Both partitioners assume scaled input so that the corner landmarks
+//! `L`/`H` are meaningful across attributes with different units.
+//! Scalers are invertible so pipeline output centers can be mapped back
+//! to the original coordinate system.
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+/// A fitted, invertible per-attribute transform.
+pub trait Scaler {
+    /// Fit on `data` and return the transformed copy.
+    fn fit_transform(&mut self, data: &Dataset) -> Result<Dataset>;
+    /// Apply the fitted transform to one point in place.
+    fn transform_point(&self, point: &mut [f32]);
+    /// Undo the transform on one point in place.
+    fn inverse_point(&self, point: &mut [f32]);
+}
+
+/// Min-max scaling to [0, 1] (the paper's choice: the corners L and H
+/// become the all-zeros and all-ones points).
+#[derive(Debug, Clone, Default)]
+pub struct MinMaxScaler {
+    mins: Vec<f32>,
+    ranges: Vec<f32>, // 0 for constant attributes (transform maps to 0)
+}
+
+impl MinMaxScaler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn fitted(&self) -> bool {
+        !self.mins.is_empty()
+    }
+}
+
+impl Scaler for MinMaxScaler {
+    fn fit_transform(&mut self, data: &Dataset) -> Result<Dataset> {
+        if data.is_empty() {
+            return Err(Error::Data("cannot fit scaler on empty dataset".into()));
+        }
+        self.mins = data.min_corner();
+        let maxs = data.max_corner();
+        self.ranges = maxs
+            .iter()
+            .zip(&self.mins)
+            .map(|(&hi, &lo)| hi - lo)
+            .collect();
+        let mut out = data.clone();
+        let dims = data.dims();
+        for row in out.as_mut_slice().chunks_mut(dims) {
+            self.transform_point(row);
+        }
+        Ok(out)
+    }
+
+    fn transform_point(&self, point: &mut [f32]) {
+        debug_assert!(self.fitted());
+        for ((x, &lo), &r) in point.iter_mut().zip(&self.mins).zip(&self.ranges) {
+            *x = if r > 0.0 { (*x - lo) / r } else { 0.0 };
+        }
+    }
+
+    fn inverse_point(&self, point: &mut [f32]) {
+        debug_assert!(self.fitted());
+        for ((x, &lo), &r) in point.iter_mut().zip(&self.mins).zip(&self.ranges) {
+            *x = if r > 0.0 { *x * r + lo } else { lo };
+        }
+    }
+}
+
+/// Z-score standardization (extension; ablation vs min-max in the
+/// fig_partition bench).
+#[derive(Debug, Clone, Default)]
+pub struct ZScoreScaler {
+    means: Vec<f32>,
+    stds: Vec<f32>,
+}
+
+impl ZScoreScaler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scaler for ZScoreScaler {
+    fn fit_transform(&mut self, data: &Dataset) -> Result<Dataset> {
+        if data.is_empty() {
+            return Err(Error::Data("cannot fit scaler on empty dataset".into()));
+        }
+        let (m, d) = (data.len(), data.dims());
+        let mut means = vec![0.0f64; d];
+        for i in 0..m {
+            for (acc, &v) in means.iter_mut().zip(data.row(i)) {
+                *acc += v as f64;
+            }
+        }
+        for acc in &mut means {
+            *acc /= m as f64;
+        }
+        let mut vars = vec![0.0f64; d];
+        for i in 0..m {
+            for ((acc, &mu), &v) in vars.iter_mut().zip(&means).zip(data.row(i)) {
+                *acc += (v as f64 - mu).powi(2);
+            }
+        }
+        self.means = means.iter().map(|&x| x as f32).collect();
+        self.stds = vars
+            .iter()
+            .map(|&v| ((v / m as f64).sqrt()) as f32)
+            .collect();
+        let mut out = data.clone();
+        for row in out.as_mut_slice().chunks_mut(d) {
+            self.transform_point(row);
+        }
+        Ok(out)
+    }
+
+    fn transform_point(&self, point: &mut [f32]) {
+        for ((x, &mu), &s) in point.iter_mut().zip(&self.means).zip(&self.stds) {
+            *x = if s > 0.0 { (*x - mu) / s } else { 0.0 };
+        }
+    }
+
+    fn inverse_point(&self, point: &mut [f32]) {
+        for ((x, &mu), &s) in point.iter_mut().zip(&self.means).zip(&self.stds) {
+            *x = if s > 0.0 { *x * s + mu } else { mu };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data() -> Dataset {
+        Dataset::from_rows(&[
+            vec![0.0, 100.0, 5.0],
+            vec![10.0, 200.0, 5.0],
+            vec![5.0, 150.0, 5.0],
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn minmax_maps_to_unit_box() {
+        let mut s = MinMaxScaler::new();
+        let t = s.fit_transform(&data()).unwrap();
+        assert_eq!(t.min_corner(), vec![0.0, 0.0, 0.0]);
+        // constant attribute collapses to 0, others reach 1
+        assert_eq!(t.max_corner(), vec![1.0, 1.0, 0.0]);
+        assert_eq!(t.row(2), &[0.5, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn minmax_inverse_roundtrips() {
+        let d = data();
+        let mut s = MinMaxScaler::new();
+        let t = s.fit_transform(&d).unwrap();
+        for i in 0..d.len() {
+            let mut p = t.row(i).to_vec();
+            s.inverse_point(&mut p);
+            for (a, b) in p.iter().zip(d.row(i)) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn minmax_transform_point_matches_fit() {
+        let d = data();
+        let mut s = MinMaxScaler::new();
+        let t = s.fit_transform(&d).unwrap();
+        let mut p = d.row(1).to_vec();
+        s.transform_point(&mut p);
+        assert_eq!(&p[..], t.row(1));
+    }
+
+    #[test]
+    fn zscore_standardizes() {
+        let mut s = ZScoreScaler::new();
+        let t = s.fit_transform(&data()).unwrap();
+        let d = t.dims();
+        for c in 0..2 {
+            let mean: f32 = (0..t.len()).map(|i| t.row(i)[c]).sum::<f32>() / 3.0;
+            assert!(mean.abs() < 1e-6);
+        }
+        // constant column -> zeros
+        assert!((0..t.len()).all(|i| t.row(i)[d - 1] == 0.0));
+    }
+
+    #[test]
+    fn zscore_inverse_roundtrips() {
+        let d = data();
+        let mut s = ZScoreScaler::new();
+        let t = s.fit_transform(&d).unwrap();
+        for i in 0..d.len() {
+            let mut p = t.row(i).to_vec();
+            s.inverse_point(&mut p);
+            for (a, b) in p.iter().zip(d.row(i)) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let empty = Dataset::new(vec![], 2).unwrap();
+        assert!(MinMaxScaler::new().fit_transform(&empty).is_err());
+        assert!(ZScoreScaler::new().fit_transform(&empty).is_err());
+    }
+}

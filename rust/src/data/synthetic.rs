@@ -1,0 +1,178 @@
+//! Synthetic workload generator — the paper's §VI test data.
+//!
+//! The evaluation uses 2-D Gaussian blob datasets of 100k/250k/500k
+//! points with **500 points per cluster** (so K = M/500 grows with M —
+//! the reason traditional k-means explodes to 156 s at 500k).
+//! [`paper_scaling_dataset`] reproduces exactly that construction;
+//! [`make_blobs`] is the general generator.
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// Specification for a Gaussian blob mixture.
+#[derive(Debug, Clone)]
+pub struct BlobSpec {
+    /// Total number of points M.
+    pub num_points: usize,
+    /// Number of blobs (ground-truth clusters).
+    pub num_clusters: usize,
+    /// Attribute count D.
+    pub dims: usize,
+    /// Standard deviation of each blob.
+    pub std: f32,
+    /// Blob centers are drawn uniformly from [-extent, extent]^D.
+    pub extent: f32,
+    /// PRNG seed (fully deterministic output).
+    pub seed: u64,
+}
+
+impl Default for BlobSpec {
+    fn default() -> Self {
+        BlobSpec {
+            num_points: 10_000,
+            num_clusters: 20,
+            dims: 2,
+            std: 0.05,
+            extent: 10.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a labelled Gaussian blob dataset.
+///
+/// Points are dealt round-robin to blobs so every blob gets
+/// ⌈M/K⌉ or ⌊M/K⌋ points, then the order is shuffled so partitioners
+/// cannot exploit generation order.
+pub fn make_blobs(spec: &BlobSpec) -> Result<Dataset> {
+    if spec.num_clusters == 0 || spec.num_points == 0 || spec.dims == 0 {
+        return Err(Error::Config("blob spec must have points/clusters/dims > 0".into()));
+    }
+    if spec.num_clusters > spec.num_points {
+        return Err(Error::Config(format!(
+            "more clusters ({}) than points ({})",
+            spec.num_clusters, spec.num_points
+        )));
+    }
+    let mut rng = Pcg32::seeded(spec.seed);
+    let k = spec.num_clusters;
+    let d = spec.dims;
+
+    // Blob centers.
+    let mut centers = Vec::with_capacity(k * d);
+    for _ in 0..k * d {
+        centers.push(rng.uniform(-spec.extent, spec.extent));
+    }
+
+    // Assignment order, shuffled.
+    let mut owner: Vec<usize> = (0..spec.num_points).map(|i| i % k).collect();
+    rng.shuffle(&mut owner);
+
+    let mut points = Vec::with_capacity(spec.num_points * d);
+    for &c in &owner {
+        for j in 0..d {
+            points.push(centers[c * d + j] + rng.normal() * spec.std);
+        }
+    }
+    Dataset::new(points, d)?.with_labels(owner)
+}
+
+/// The exact §VI scaling workload: 2-D, 500 points per cluster.
+/// `size` ∈ {100_000, 250_000, 500_000} in the paper.
+pub fn paper_scaling_dataset(size: usize, seed: u64) -> Result<Dataset> {
+    if size % 500 != 0 {
+        return Err(Error::Config(format!(
+            "paper workload size {size} must be a multiple of 500"
+        )));
+    }
+    make_blobs(&BlobSpec {
+        num_points: size,
+        num_clusters: size / 500,
+        dims: 2,
+        std: 0.08,
+        // Centers spread over a wide box so 1000 clusters at 500k
+        // still have meaningful (if overlapping) structure, like the
+        // paper's generator.
+        extent: 50.0,
+        seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = BlobSpec { num_points: 500, num_clusters: 5, seed: 3, ..Default::default() };
+        assert_eq!(make_blobs(&spec).unwrap(), make_blobs(&spec).unwrap());
+        let other = make_blobs(&BlobSpec { seed: 4, ..spec }).unwrap();
+        assert_ne!(make_blobs(&spec).unwrap(), other);
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let ds = make_blobs(&BlobSpec {
+            num_points: 103,
+            num_clusters: 10,
+            dims: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(ds.len(), 103);
+        assert_eq!(ds.dims(), 3);
+        assert_eq!(ds.num_classes(), Some(10));
+        // round-robin deal: sizes differ by at most 1
+        let mut counts = vec![0usize; 10];
+        for &l in ds.labels().unwrap() {
+            counts[l] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10 || c == 11), "{counts:?}");
+    }
+
+    #[test]
+    fn blobs_are_tight_around_distinct_centers() {
+        let ds = make_blobs(&BlobSpec {
+            num_points: 2000,
+            num_clusters: 4,
+            dims: 2,
+            std: 0.01,
+            extent: 10.0,
+            seed: 9,
+        })
+        .unwrap();
+        // within-class spread must be tiny relative to extent
+        let labels = ds.labels().unwrap().to_vec();
+        for k in 0..4 {
+            let idx: Vec<usize> =
+                (0..ds.len()).filter(|&i| labels[i] == k).collect();
+            let sub = ds.select(&idx).unwrap();
+            let lo = sub.min_corner();
+            let hi = sub.max_corner();
+            for (l, h) in lo.iter().zip(&hi) {
+                assert!(h - l < 0.2, "class {k} spread {}", h - l);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_workload_shape() {
+        let ds = paper_scaling_dataset(5000, 1).unwrap();
+        assert_eq!(ds.len(), 5000);
+        assert_eq!(ds.dims(), 2);
+        assert_eq!(ds.num_classes(), Some(10));
+        assert!(paper_scaling_dataset(1234, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(make_blobs(&BlobSpec { num_points: 0, ..Default::default() }).is_err());
+        assert!(make_blobs(&BlobSpec {
+            num_points: 3,
+            num_clusters: 5,
+            ..Default::default()
+        })
+        .is_err());
+    }
+}

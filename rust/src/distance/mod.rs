@@ -1,0 +1,265 @@
+//! Similarity measures for sub-grouping and clustering.
+//!
+//! §II of the paper: "The similarity measure could be a distance
+//! measure like Euclidean distance, Manhattan distance or anything."
+//! The device path is squared-euclidean (the MXU expansion); the host
+//! partitioners and native clusterer accept any [`Metric`].
+
+/// A point-to-point distance measure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Metric {
+    /// Straight-line distance.
+    Euclidean,
+    /// Squared euclidean — same argmin as euclidean, no sqrt; this is
+    /// what the device kernel computes.
+    SqEuclidean,
+    /// L1 / city-block.
+    Manhattan,
+    /// L∞ / maximum coordinate difference.
+    Chebyshev,
+    /// 1 − cosine similarity (0 for identical directions).
+    Cosine,
+    /// General Lp norm, p ≥ 1.
+    Minkowski(f32),
+}
+
+impl Metric {
+    /// Distance between two points of equal dimension.
+    #[inline]
+    pub fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match *self {
+            Metric::Euclidean => sq_euclidean(a, b).sqrt(),
+            Metric::SqEuclidean => sq_euclidean(a, b),
+            Metric::Manhattan => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .sum(),
+            Metric::Chebyshev => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f32::max),
+            Metric::Cosine => {
+                let (mut dot, mut na, mut nb) = (0.0f32, 0.0f32, 0.0f32);
+                for (x, y) in a.iter().zip(b) {
+                    dot += x * y;
+                    na += x * x;
+                    nb += y * y;
+                }
+                if na == 0.0 || nb == 0.0 {
+                    // degenerate zero vector: maximally dissimilar unless both zero
+                    return if na == nb { 0.0 } else { 1.0 };
+                }
+                1.0 - dot / (na.sqrt() * nb.sqrt())
+            }
+            Metric::Minkowski(p) => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs().powf(p))
+                .sum::<f32>()
+                .powf(1.0 / p),
+        }
+    }
+
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> crate::error::Result<Metric> {
+        use crate::error::Error;
+        match s {
+            "euclidean" | "l2" => Ok(Metric::Euclidean),
+            "sq-euclidean" | "sqeuclidean" | "l2sq" => Ok(Metric::SqEuclidean),
+            "manhattan" | "l1" | "cityblock" => Ok(Metric::Manhattan),
+            "chebyshev" | "linf" => Ok(Metric::Chebyshev),
+            "cosine" => Ok(Metric::Cosine),
+            other => {
+                if let Some(p) = other.strip_prefix("minkowski:") {
+                    let p: f32 = p
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad minkowski p '{p}'")))?;
+                    if p < 1.0 {
+                        return Err(Error::Config("minkowski p must be >= 1".into()));
+                    }
+                    Ok(Metric::Minkowski(p))
+                } else {
+                    Err(Error::Config(format!("unknown metric '{other}'")))
+                }
+            }
+        }
+    }
+}
+
+/// Hot-path squared euclidean distance.  Written as a single fold so
+/// LLVM auto-vectorizes; the 4-lane manual unroll below measured ~1.6×
+/// over the naive zip on x86-64 (see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn sq_euclidean(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let mut acc = [0.0f32; 4];
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let base = i * 4;
+        for lane in 0..4 {
+            let d = a[base + lane] - b[base + lane];
+            acc[lane] += d * d;
+        }
+    }
+    let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        total += d * d;
+    }
+    total
+}
+
+/// Index + distance of the nearest of `centers` (D-strided flat buffer)
+/// to `point`, under squared euclidean.  Ties break to the lowest index
+/// (same rule as jnp.argmin in the device kernel).
+#[inline]
+pub fn nearest_sq(point: &[f32], centers: &[f32], dims: usize) -> (usize, f32) {
+    debug_assert!(!centers.is_empty());
+    let mut best = (0usize, f32::INFINITY);
+    for (k, c) in centers.chunks_exact(dims).enumerate() {
+        let d = sq_euclidean(point, c);
+        if d < best.1 {
+            best = (k, d);
+        }
+    }
+    best
+}
+
+/// Nearest center under squared euclidean with precomputed |c|^2 norms
+/// (hoists the center-norm term out of per-point loops — §Perf L3-2).
+/// Tie-breaks to the lowest index exactly like [`nearest_sq`].
+#[inline]
+pub fn nearest_sq_with_norms(
+    point: &[f32],
+    centers: &[f32],
+    cnorm: &[f32],
+    dims: usize,
+) -> (usize, f32) {
+    let pn: f32 = point.iter().map(|x| x * x).sum();
+    let mut best = (0usize, f32::INFINITY);
+    for (c, cc) in centers.chunks_exact(dims).enumerate() {
+        let mut dot = 0.0f32;
+        for j in 0..dims {
+            dot += point[j] * cc[j];
+        }
+        let d = (pn - 2.0 * dot + cnorm[c]).max(0.0);
+        if d < best.1 {
+            best = (c, d);
+        }
+    }
+    best
+}
+
+/// Precompute |c|^2 for every center row.
+pub fn center_norms(centers: &[f32], dims: usize) -> Vec<f32> {
+    centers
+        .chunks_exact(dims)
+        .map(|cc| cc.iter().map(|x| x * x).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: &[f32] = &[1.0, 2.0, 3.0];
+    const B: &[f32] = &[4.0, 6.0, 3.0];
+
+    #[test]
+    fn euclidean_family() {
+        assert_eq!(Metric::SqEuclidean.dist(A, B), 25.0);
+        assert_eq!(Metric::Euclidean.dist(A, B), 5.0);
+        assert_eq!(Metric::Manhattan.dist(A, B), 7.0);
+        assert_eq!(Metric::Chebyshev.dist(A, B), 4.0);
+    }
+
+    #[test]
+    fn minkowski_interpolates() {
+        let m1 = Metric::Minkowski(1.0).dist(A, B);
+        let m2 = Metric::Minkowski(2.0).dist(A, B);
+        assert!((m1 - 7.0).abs() < 1e-5);
+        assert!((m2 - 5.0).abs() < 1e-5);
+        // p=inf limit approached from below
+        let m8 = Metric::Minkowski(8.0).dist(A, B);
+        assert!(m8 > 4.0 && m8 < 5.0);
+    }
+
+    #[test]
+    fn cosine_cases() {
+        assert!((Metric::Cosine.dist(&[1.0, 0.0], &[2.0, 0.0])).abs() < 1e-6);
+        assert!((Metric::Cosine.dist(&[1.0, 0.0], &[0.0, 3.0]) - 1.0).abs() < 1e-6);
+        assert!((Metric::Cosine.dist(&[1.0, 0.0], &[-1.0, 0.0]) - 2.0).abs() < 1e-6);
+        assert_eq!(Metric::Cosine.dist(&[0.0, 0.0], &[0.0, 0.0]), 0.0);
+        assert_eq!(Metric::Cosine.dist(&[0.0, 0.0], &[1.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn identity_of_indiscernibles() {
+        for m in [
+            Metric::Euclidean,
+            Metric::SqEuclidean,
+            Metric::Manhattan,
+            Metric::Chebyshev,
+            Metric::Minkowski(3.0),
+        ] {
+            assert_eq!(m.dist(A, A), 0.0, "{m:?}");
+            assert!(m.dist(A, B) > 0.0, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn symmetry() {
+        for m in [
+            Metric::Euclidean,
+            Metric::Manhattan,
+            Metric::Chebyshev,
+            Metric::Cosine,
+            Metric::Minkowski(2.5),
+        ] {
+            assert!((m.dist(A, B) - m.dist(B, A)).abs() < 1e-6, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn sq_euclidean_handles_odd_lengths() {
+        for n in 0..9 {
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i * 2) as f32).collect();
+            let expect: f32 = (0..n).map(|i| (i as f32).powi(2)).sum();
+            assert_eq!(sq_euclidean(&a, &b), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn nearest_breaks_ties_low() {
+        let centers = [0.0, 0.0, 2.0, 0.0, 0.0, 0.0]; // c0 == c2
+        let (k, d) = nearest_sq(&[0.1, 0.0], &centers, 2);
+        assert_eq!(k, 0);
+        assert!((d - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nearest_with_norms_matches_nearest_sq() {
+        let centers: Vec<f32> = (0..24).map(|i| (i as f32 * 0.37).sin()).collect();
+        let cn = center_norms(&centers, 3);
+        for s in 0..20 {
+            let p: Vec<f32> = (0..3).map(|j| ((s * 3 + j) as f32 * 0.53).cos()).collect();
+            assert_eq!(
+                nearest_sq_with_norms(&p, &centers, &cn, 3).0,
+                nearest_sq(&p, &centers, 3).0
+            );
+        }
+    }
+
+    #[test]
+    fn parse_all() {
+        assert_eq!(Metric::parse("l2").unwrap(), Metric::Euclidean);
+        assert_eq!(Metric::parse("manhattan").unwrap(), Metric::Manhattan);
+        assert_eq!(Metric::parse("minkowski:3").unwrap(), Metric::Minkowski(3.0));
+        assert!(Metric::parse("minkowski:0.5").is_err());
+        assert!(Metric::parse("hamming").is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! Unified error type for the `parsample` crate.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes surfaced by the public API.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Malformed or inconsistent dataset (shape mismatch, empty, NaN...).
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// Invalid configuration (k > M, zero groups, bad compression...).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A clustering routine could not make progress.
+    #[error("clustering error: {0}")]
+    Cluster(String),
+
+    /// The AOT artifact registry had no bucket fitting a request.
+    #[error("no AOT bucket fits request (n={n}, d={d}, k={k}); rebuild artifacts or use the native backend")]
+    NoBucket { n: usize, d: usize, k: usize },
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest problems (missing file, hash mismatch, bad JSON).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Coordinator scheduling failure (queue closed, worker panicked).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Server protocol violation or overload rejection.
+    #[error("server error: {0}")]
+    Server(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error(transparent)]
+    Json(#[from] crate::util::json::JsonError),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,184 @@
+//! Hungarian algorithm (Kuhn–Munkres, O(n³) potentials formulation).
+//!
+//! Table 1 of the paper reports "correctly clustered" point counts
+//! (133/150 etc.).  That requires the best one-to-one matching between
+//! predicted cluster ids and ground-truth classes — which is an
+//! assignment problem on the contingency table.
+
+/// Solve min-cost assignment on an n×m cost matrix (n rows ≤ m cols,
+/// row-major).  Returns `assign[row] = col` minimizing total cost.
+///
+/// Classic shortest-augmenting-path with potentials (e-maxx / LAPJV
+/// style), O(n²m).
+pub fn min_cost_assignment(cost: &[f64], n: usize, m: usize) -> Vec<usize> {
+    assert!(n <= m, "need rows <= cols (pad the matrix)");
+    assert_eq!(cost.len(), n * m);
+    const INF: f64 = f64::INFINITY;
+    // 1-based potentials over rows (u) and cols (v); way[j] = previous
+    // column on the augmenting path; p[j] = row matched to column j.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; m + 1];
+    let mut p = vec![0usize; m + 1]; // 0 = unmatched
+    let mut way = vec![0usize; m + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; m + 1];
+        let mut used = vec![false; m + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=m {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[(i0 - 1) * m + (j - 1)] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=m {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // augment along the path
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assign = vec![usize::MAX; n];
+    for j in 1..=m {
+        if p[j] != 0 {
+            assign[p[j] - 1] = j - 1;
+        }
+    }
+    assign
+}
+
+/// Maximize total *reward* on an n×m matrix by negating into
+/// [`min_cost_assignment`].  n ≤ m required.
+pub fn max_reward_assignment(reward: &[f64], n: usize, m: usize) -> Vec<usize> {
+    let cost: Vec<f64> = reward.iter().map(|&r| -r).collect();
+    min_cost_assignment(&cost, n, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_when_diagonal_cheapest() {
+        #[rustfmt::skip]
+        let cost = [
+            1.0, 9.0, 9.0,
+            9.0, 1.0, 9.0,
+            9.0, 9.0, 1.0,
+        ];
+        assert_eq!(min_cost_assignment(&cost, 3, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn picks_off_diagonal_optimum() {
+        #[rustfmt::skip]
+        let cost = [
+            4.0, 1.0, 3.0,
+            2.0, 0.0, 5.0,
+            3.0, 2.0, 2.0,
+        ];
+        // optimal: r0->c1(1) r1->c0(2) r2->c2(2) = 5
+        assert_eq!(min_cost_assignment(&cost, 3, 3), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn rectangular_rows_less_than_cols() {
+        #[rustfmt::skip]
+        let cost = [
+            5.0, 1.0, 9.0, 7.0,
+            9.0, 9.0, 2.0, 7.0,
+        ];
+        let a = min_cost_assignment(&cost, 2, 4);
+        assert_eq!(a, vec![1, 2]);
+    }
+
+    #[test]
+    fn max_reward_flips() {
+        #[rustfmt::skip]
+        let reward = [
+            10.0, 1.0,
+            1.0, 10.0,
+        ];
+        assert_eq!(max_reward_assignment(&reward, 2, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn assignment_is_a_matching() {
+        // random-ish 5x7 costs; verify output is injective and in range
+        let cost: Vec<f64> = (0..35).map(|i| ((i * 37) % 11) as f64).collect();
+        let a = min_cost_assignment(&cost, 5, 7);
+        let mut seen = std::collections::HashSet::new();
+        for &c in &a {
+            assert!(c < 7);
+            assert!(seen.insert(c), "column {c} assigned twice");
+        }
+    }
+
+    #[test]
+    fn optimal_on_brute_forceable_instance() {
+        // 4x4: check against exhaustive search
+        let cost: Vec<f64> = vec![
+            7.0, 3.0, 6.0, 9.0,
+            2.0, 8.0, 4.0, 9.0,
+            5.0, 2.0, 5.0, 3.0,
+            9.0, 4.0, 8.0, 0.0,
+        ];
+        let a = min_cost_assignment(&cost, 4, 4);
+        let total: f64 = a.iter().enumerate().map(|(r, &c)| cost[r * 4 + c]).sum();
+        // brute force
+        let mut best = f64::INFINITY;
+        let perms = permutations(&[0, 1, 2, 3]);
+        for p in perms {
+            let t: f64 = p.iter().enumerate().map(|(r, &c)| cost[r * 4 + c]).sum();
+            best = best.min(t);
+        }
+        assert_eq!(total, best);
+    }
+
+    fn permutations(xs: &[usize]) -> Vec<Vec<usize>> {
+        if xs.len() <= 1 {
+            return vec![xs.to_vec()];
+        }
+        let mut out = Vec::new();
+        for (i, &x) in xs.iter().enumerate() {
+            let mut rest = xs.to_vec();
+            rest.remove(i);
+            for mut p in permutations(&rest) {
+                p.insert(0, x);
+                out.push(p);
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,296 @@
+//! Clustering quality metrics.
+//!
+//! [`correct_count`] is the paper's Table-1 metric: the number of
+//! points whose predicted cluster maps to their true class under the
+//! optimal one-to-one matching (Hungarian on the contingency table).
+//! Purity, NMI, ARI and a sampled silhouette round out the suite for
+//! the extended benches.
+
+pub mod hungarian;
+
+use crate::error::{Error, Result};
+
+/// Contingency table: rows = predicted clusters, cols = true classes.
+#[derive(Debug, Clone)]
+pub struct Contingency {
+    pub table: Vec<u64>,
+    pub num_pred: usize,
+    pub num_true: usize,
+    pub total: u64,
+}
+
+impl Contingency {
+    pub fn build(pred: &[u32], truth: &[usize]) -> Result<Contingency> {
+        if pred.len() != truth.len() {
+            return Err(Error::Data(format!(
+                "{} predictions vs {} labels",
+                pred.len(),
+                truth.len()
+            )));
+        }
+        if pred.is_empty() {
+            return Err(Error::Data("empty label arrays".into()));
+        }
+        let num_pred = pred.iter().map(|&p| p as usize).max().unwrap() + 1;
+        let num_true = truth.iter().copied().max().unwrap() + 1;
+        let mut table = vec![0u64; num_pred * num_true];
+        for (&p, &t) in pred.iter().zip(truth) {
+            table[p as usize * num_true + t] += 1;
+        }
+        Ok(Contingency { table, num_pred, num_true, total: pred.len() as u64 })
+    }
+
+    #[inline]
+    fn at(&self, p: usize, t: usize) -> u64 {
+        self.table[p * self.num_true + t]
+    }
+
+    fn row_sums(&self) -> Vec<u64> {
+        (0..self.num_pred)
+            .map(|p| (0..self.num_true).map(|t| self.at(p, t)).sum())
+            .collect()
+    }
+
+    fn col_sums(&self) -> Vec<u64> {
+        (0..self.num_true)
+            .map(|t| (0..self.num_pred).map(|p| self.at(p, t)).sum())
+            .collect()
+    }
+}
+
+/// The paper's Table-1 number: points correctly clustered under the
+/// optimal cluster→class matching.  When there are more clusters than
+/// classes the extra clusters simply match nothing (their points count
+/// as errors), and vice versa.
+pub fn correct_count(pred: &[u32], truth: &[usize]) -> Result<u64> {
+    let c = Contingency::build(pred, truth)?;
+    // pad to a square reward matrix so rows <= cols holds
+    let n = c.num_pred.max(c.num_true);
+    let mut reward = vec![0.0f64; n * n];
+    for p in 0..c.num_pred {
+        for t in 0..c.num_true {
+            reward[p * n + t] = c.at(p, t) as f64;
+        }
+    }
+    let assign = hungarian::max_reward_assignment(&reward, n, n);
+    let mut correct = 0u64;
+    for p in 0..c.num_pred {
+        let t = assign[p];
+        if t < c.num_true {
+            correct += c.at(p, t);
+        }
+    }
+    Ok(correct)
+}
+
+/// Fraction of points in their cluster's majority class.
+pub fn purity(pred: &[u32], truth: &[usize]) -> Result<f64> {
+    let c = Contingency::build(pred, truth)?;
+    let majority: u64 = (0..c.num_pred)
+        .map(|p| (0..c.num_true).map(|t| c.at(p, t)).max().unwrap_or(0))
+        .sum();
+    Ok(majority as f64 / c.total as f64)
+}
+
+/// Normalized mutual information (arithmetic-mean normalization).
+pub fn nmi(pred: &[u32], truth: &[usize]) -> Result<f64> {
+    let c = Contingency::build(pred, truth)?;
+    let n = c.total as f64;
+    let rows = c.row_sums();
+    let cols = c.col_sums();
+    let mut mi = 0.0f64;
+    for p in 0..c.num_pred {
+        for t in 0..c.num_true {
+            let nij = c.at(p, t) as f64;
+            if nij > 0.0 {
+                mi += nij / n * ((nij * n) / (rows[p] as f64 * cols[t] as f64)).ln();
+            }
+        }
+    }
+    let h = |sums: &[u64]| -> f64 {
+        sums.iter()
+            .filter(|&&s| s > 0)
+            .map(|&s| {
+                let f = s as f64 / n;
+                -f * f.ln()
+            })
+            .sum()
+    };
+    let (hp, ht) = (h(&rows), h(&cols));
+    if hp == 0.0 && ht == 0.0 {
+        return Ok(1.0); // both partitions trivial and identical
+    }
+    let denom = (hp + ht) / 2.0;
+    Ok(if denom == 0.0 { 0.0 } else { (mi / denom).clamp(0.0, 1.0) })
+}
+
+/// Adjusted Rand index.
+pub fn ari(pred: &[u32], truth: &[usize]) -> Result<f64> {
+    let c = Contingency::build(pred, truth)?;
+    let choose2 = |x: u64| -> f64 { (x as f64) * (x as f64 - 1.0) / 2.0 };
+    let sum_ij: f64 = c.table.iter().map(|&x| choose2(x)).sum();
+    let sum_a: f64 = c.row_sums().iter().map(|&x| choose2(x)).sum();
+    let sum_b: f64 = c.col_sums().iter().map(|&x| choose2(x)).sum();
+    let total = choose2(c.total);
+    let expected = sum_a * sum_b / total;
+    let max_index = (sum_a + sum_b) / 2.0;
+    if (max_index - expected).abs() < 1e-12 {
+        return Ok(1.0); // degenerate: both partitions trivial
+    }
+    Ok((sum_ij - expected) / (max_index - expected))
+}
+
+/// Mean silhouette coefficient over a sample of at most `sample` points
+/// (exact silhouette is O(M²); the sample keeps the metric usable on
+/// the 500k workloads).  Deterministic for a given seed.
+pub fn silhouette_sampled(
+    points: &[f32],
+    dims: usize,
+    labels: &[u32],
+    sample: usize,
+    seed: u64,
+) -> Result<f64> {
+    let m = points.len() / dims;
+    if labels.len() != m {
+        return Err(Error::Data("labels length mismatch".into()));
+    }
+    let k = labels.iter().map(|&l| l as usize).max().unwrap_or(0) + 1;
+    if k < 2 {
+        return Err(Error::Data("silhouette needs >= 2 clusters".into()));
+    }
+    let mut rng = crate::util::rng::Pcg32::new(seed, 0x5110);
+    let idx: Vec<usize> = if m <= sample {
+        (0..m).collect()
+    } else {
+        rng.sample_indices(m, sample)
+    };
+    let mut total = 0.0f64;
+    let mut used = 0usize;
+    for &i in &idx {
+        let li = labels[i] as usize;
+        // mean distance to every cluster
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0u64; k];
+        let pi = &points[i * dims..(i + 1) * dims];
+        for j in 0..m {
+            if j == i {
+                continue;
+            }
+            let d = crate::distance::sq_euclidean(pi, &points[j * dims..(j + 1) * dims])
+                .sqrt() as f64;
+            sums[labels[j] as usize] += d;
+            counts[labels[j] as usize] += 1;
+        }
+        if counts[li] == 0 {
+            continue; // singleton cluster: silhouette undefined, skip
+        }
+        let a = sums[li] / counts[li] as f64;
+        let b = (0..k)
+            .filter(|&c| c != li && counts[c] > 0)
+            .map(|c| sums[c] / counts[c] as f64)
+            .fold(f64::INFINITY, f64::min);
+        if !b.is_finite() {
+            continue;
+        }
+        total += (b - a) / a.max(b);
+        used += 1;
+    }
+    if used == 0 {
+        return Err(Error::Data("no valid silhouette samples".into()));
+    }
+    Ok(total / used as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering_scores_top() {
+        let pred = [0u32, 0, 1, 1, 2, 2];
+        let truth = [0usize, 0, 1, 1, 2, 2];
+        assert_eq!(correct_count(&pred, &truth).unwrap(), 6);
+        assert_eq!(purity(&pred, &truth).unwrap(), 1.0);
+        assert!((nmi(&pred, &truth).unwrap() - 1.0).abs() < 1e-9);
+        assert!((ari(&pred, &truth).unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn permuted_ids_still_perfect() {
+        // same partition, different ids: metrics must be label-invariant
+        let pred = [2u32, 2, 0, 0, 1, 1];
+        let truth = [0usize, 0, 1, 1, 2, 2];
+        assert_eq!(correct_count(&pred, &truth).unwrap(), 6);
+        assert!((ari(&pred, &truth).unwrap() - 1.0).abs() < 1e-9);
+        assert!((nmi(&pred, &truth).unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_mistake_counts() {
+        let pred = [0u32, 0, 0, 1, 1, 1];
+        let truth = [0usize, 0, 1, 1, 1, 1];
+        assert_eq!(correct_count(&pred, &truth).unwrap(), 5);
+        assert!((purity(&pred, &truth).unwrap() - 5.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_clusters_than_classes() {
+        // 4 clusters, 2 classes: two clusters go unmatched
+        let pred = [0u32, 1, 2, 3];
+        let truth = [0usize, 0, 1, 1];
+        // best matching: one of {0,1}->class0 (1 pt), one of {2,3}->class1 (1 pt)
+        assert_eq!(correct_count(&pred, &truth).unwrap(), 2);
+    }
+
+    #[test]
+    fn more_classes_than_clusters() {
+        let pred = [0u32, 0, 1, 1];
+        let truth = [0usize, 1, 2, 3];
+        assert_eq!(correct_count(&pred, &truth).unwrap(), 2);
+    }
+
+    #[test]
+    fn random_labels_near_zero_ari() {
+        // deterministic pseudo-random labelling
+        let mut rng = crate::util::rng::Pcg32::seeded(3);
+        let n = 3000;
+        let pred: Vec<u32> = (0..n).map(|_| rng.below(3) as u32).collect();
+        let truth: Vec<usize> = (0..n).map(|_| rng.below(3)).collect();
+        let a = ari(&pred, &truth).unwrap();
+        assert!(a.abs() < 0.05, "ari {a}");
+        let s = nmi(&pred, &truth).unwrap();
+        assert!(s < 0.05, "nmi {s}");
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        assert!(correct_count(&[0u32], &[0usize, 1]).is_err());
+        assert!(purity(&[], &[]).is_err());
+    }
+
+    #[test]
+    fn silhouette_separated_vs_mixed() {
+        // two tight far blobs, correct labels -> silhouette near 1
+        let mut pts = Vec::new();
+        for i in 0..20 {
+            pts.extend([i as f32 * 0.01, 0.0]);
+        }
+        for i in 0..20 {
+            pts.extend([100.0 + i as f32 * 0.01, 0.0]);
+        }
+        let good: Vec<u32> = (0..40).map(|i| (i >= 20) as u32).collect();
+        let s = silhouette_sampled(&pts, 2, &good, 100, 0).unwrap();
+        assert!(s > 0.95, "good labels silhouette {s}");
+        // scrambled labels -> much worse
+        let bad: Vec<u32> = (0..40).map(|i| (i % 2) as u32).collect();
+        let sb = silhouette_sampled(&pts, 2, &bad, 100, 0).unwrap();
+        assert!(sb < 0.1, "bad labels silhouette {sb}");
+    }
+
+    #[test]
+    fn silhouette_needs_two_clusters() {
+        let pts = vec![0.0f32; 10];
+        let labels = vec![0u32; 5];
+        assert!(silhouette_sampled(&pts, 2, &labels, 10, 0).is_err());
+    }
+}

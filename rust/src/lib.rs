@@ -1,0 +1,47 @@
+//! # parsample
+//!
+//! A production-grade reproduction of **"A parallel sampling based
+//! clustering"** (Sastry & Netti, 2014) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate):** the paper's *host part* — dataset handling,
+//!   feature scaling, the equal/unequal landmark partitioners, batching
+//!   of sub-regions into fixed-shape device dispatches, a worker pool,
+//!   the global clustering stage, a job server, CLI and telemetry —
+//!   plus the traditional-k-means baseline every table compares against.
+//! * **L2/L1 (python/, build-time only):** the *device part* — batched
+//!   Lloyd iterations with a Pallas assignment kernel, AOT-lowered to
+//!   HLO text that [`runtime`] loads and executes via PJRT.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
+//! use parsample::data::builtin;
+//!
+//! let data = builtin::iris();
+//! let cfg = PipelineConfig::builder()
+//!     .num_groups(6)
+//!     .compression(6.0)
+//!     .final_k(3)
+//!     .build()
+//!     .unwrap();
+//! let result = SubclusterPipeline::new(cfg).run(&data).unwrap();
+//! println!("inertia {}", result.inertia);
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod distance;
+pub mod error;
+pub mod eval;
+pub mod partition;
+pub mod pipeline;
+pub mod runtime;
+pub mod server;
+pub mod telemetry;
+pub mod util;
+
+pub use error::{Error, Result};

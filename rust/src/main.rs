@@ -1,0 +1,344 @@
+//! `parsample` CLI — the leader entrypoint.
+//!
+//! ```text
+//! parsample cluster   --data iris --k 3 [--scheme unequal --groups 6 ...]
+//! parsample baseline  --data iris --k 3            traditional k-means
+//! parsample generate  --size 100000 --out d.bin    paper §VI workload
+//! parsample partition --data iris --groups 6       dump group sizes
+//! parsample serve     [--addr 127.0.0.1:7077]      job server
+//! parsample buckets                                 show AOT bucket table
+//! ```
+//!
+//! Arg parsing is hand-rolled (no clap in the offline image).
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use parsample::config::AppConfig;
+use parsample::coordinator::SchedulerConfig;
+use parsample::data::{builtin, loader, synthetic, Dataset};
+use parsample::error::{Error, Result};
+use parsample::eval;
+use parsample::partition::Scheme;
+use parsample::pipeline::{traditional_kmeans, PipelineConfig, SubclusterPipeline};
+use parsample::runtime::{BackendKind, Manifest};
+use parsample::server::Server;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(rest)?;
+    match cmd.as_str() {
+        "cluster" => cmd_cluster(&flags),
+        "baseline" => cmd_baseline(&flags),
+        "generate" => cmd_generate(&flags),
+        "partition" => cmd_partition(&flags),
+        "serve" => cmd_serve(&flags),
+        "buckets" => cmd_buckets(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}' (try help)"))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "parsample — parallel sampling-based clustering (Sastry & Netti 2014)\n\n\
+         commands:\n\
+         \x20 cluster   --data <iris|seeds|file.csv|file.bin> --k K [--scheme equal|unequal|random]\n\
+         \x20           [--groups G] [--compression C] [--backend native|pjrt] [--workers W]\n\
+         \x20           [--artifacts DIR] [--seed S] [--config cfg.toml] [--eval] [--out FILE]\n\
+         \x20 baseline  --data ... --k K [--iters N] [--seed S] [--eval]   traditional k-means\n\
+         \x20 generate  --size M [--seed S] --out FILE[.csv|.bin]          paper synthetic workload\n\
+         \x20 partition --data ... --groups G [--scheme ...]               dump group sizes\n\
+         \x20 serve     [--addr HOST:PORT] [--backend ...] [--queue N]     JSON-lines job server\n\
+         \x20 buckets   [--artifacts DIR]                                  AOT bucket table"
+    );
+}
+
+/// Parsed `--flag value` pairs (plus boolean `--flag`).
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --flag, got '{arg}'")))?;
+            let next_is_value = args
+                .get(i + 1)
+                .map(|v| !v.starts_with("--"))
+                .unwrap_or(false);
+            if next_is_value {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Flags(map))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(String::as_str)
+    }
+
+    fn required(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| Error::Config(format!("missing required --{key}")))
+    }
+
+    fn usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| Error::Config(format!("--{key}: bad integer '{v}'")))
+            })
+            .transpose()
+    }
+
+    fn f32(&self, key: &str) -> Result<Option<f32>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| Error::Config(format!("--{key}: bad number '{v}'")))
+            })
+            .transpose()
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+}
+
+fn load_data(flags: &Flags) -> Result<Dataset> {
+    let spec = flags.required("data")?;
+    if let Ok(ds) = builtin::by_name(spec) {
+        return Ok(ds);
+    }
+    if spec.ends_with(".csv") {
+        let label_col = flags.usize("label-col")?;
+        loader::load_csv(spec, label_col)
+    } else if spec.ends_with(".bin") {
+        loader::load_binary(spec)
+    } else {
+        Err(Error::Config(format!(
+            "--data '{spec}' is neither a builtin (iris, seeds) nor a .csv/.bin path"
+        )))
+    }
+}
+
+fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
+    // precedence: defaults < config file < env < CLI flags
+    let mut app = match flags.get("config") {
+        Some(path) => AppConfig::from_file(path)?,
+        None => AppConfig::default(),
+    };
+    app.apply_env()?;
+    let mut b = PipelineConfig::builder()
+        .scheme(app.pipeline.scheme)
+        .compression(app.pipeline.compression)
+        .final_k(app.pipeline.final_k)
+        .backend(app.pipeline.backend)
+        .artifacts_dir(app.pipeline.artifacts_dir.clone())
+        .workers(app.pipeline.workers)
+        .scale(app.pipeline.scale)
+        .weighted_global(app.pipeline.weighted_global)
+        .global_iters(app.pipeline.global_iters)
+        .seed(app.pipeline.seed);
+    if let Some(g) = app.pipeline.num_groups {
+        b = b.num_groups(g);
+    }
+    if let Some(s) = flags.get("scheme") {
+        b = b.scheme(Scheme::parse(s)?);
+    }
+    if let Some(g) = flags.usize("groups")? {
+        b = b.num_groups(g);
+    }
+    if let Some(c) = flags.f32("compression")? {
+        b = b.compression(c);
+    }
+    if let Some(k) = flags.usize("k")? {
+        b = b.final_k(k);
+    }
+    if let Some(be) = flags.get("backend") {
+        b = b.backend(BackendKind::parse(be)?);
+    }
+    if let Some(dir) = flags.get("artifacts") {
+        b = b.artifacts_dir(dir);
+    }
+    if let Some(w) = flags.usize("workers")? {
+        b = b.workers(w);
+    }
+    if let Some(s) = flags.usize("seed")? {
+        b = b.seed(s as u64);
+    }
+    if flags.bool("weighted-global") {
+        b = b.weighted_global(true);
+    }
+    b.build()
+}
+
+fn report_eval(data: &Dataset, labels: &[u32]) -> Result<()> {
+    if let Some(truth) = data.labels() {
+        let correct = eval::correct_count(labels, truth)?;
+        println!(
+            "correct {}/{} | purity {:.4} | nmi {:.4} | ari {:.4}",
+            correct,
+            data.len(),
+            eval::purity(labels, truth)?,
+            eval::nmi(labels, truth)?,
+            eval::ari(labels, truth)?
+        );
+    } else {
+        println!("(no ground-truth labels; skipping accuracy metrics)");
+    }
+    Ok(())
+}
+
+fn cmd_cluster(flags: &Flags) -> Result<()> {
+    let data = load_data(flags)?;
+    let cfg = pipeline_config(flags)?;
+    let pipeline = SubclusterPipeline::new(cfg);
+    let result = pipeline.run(&data)?;
+    println!(
+        "pipeline: {} points -> {} groups -> {} local centers -> k={} | inertia {:.6}",
+        data.len(),
+        result.num_groups,
+        result.local_centers,
+        result.counts.len(),
+        result.inertia
+    );
+    println!("timings: {}", result.timings.summary());
+    if flags.bool("eval") {
+        report_eval(&data, &result.labels)?;
+    }
+    if let Some(out) = flags.get("out") {
+        let centers = Dataset::new(result.centers.clone(), data.dims())?;
+        loader::save_csv(&centers, out)?;
+        println!("centers written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_baseline(flags: &Flags) -> Result<()> {
+    let data = load_data(flags)?;
+    let k = flags
+        .usize("k")?
+        .ok_or_else(|| Error::Config("missing --k".into()))?;
+    let iters = flags.usize("iters")?.unwrap_or(50);
+    let seed = flags.usize("seed")?.unwrap_or(0) as u64;
+    let t0 = std::time::Instant::now();
+    let r = traditional_kmeans(&data, k, iters, seed)?;
+    println!(
+        "traditional kmeans: {} points, k={k}, {} iters | inertia {:.6} | {:.1} ms",
+        data.len(),
+        r.iterations,
+        r.inertia,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    if flags.bool("eval") {
+        report_eval(&data, &r.labels)?;
+    }
+    Ok(())
+}
+
+fn cmd_generate(flags: &Flags) -> Result<()> {
+    let size = flags
+        .usize("size")?
+        .ok_or_else(|| Error::Config("missing --size".into()))?;
+    let seed = flags.usize("seed")?.unwrap_or(0) as u64;
+    let out = flags.required("out")?;
+    let ds = synthetic::paper_scaling_dataset(size, seed)?;
+    if out.ends_with(".csv") {
+        loader::save_csv(&ds, out)?;
+    } else {
+        loader::save_binary(&ds, out)?;
+    }
+    println!(
+        "wrote {} points ({} clusters of ~500) to {out}",
+        ds.len(),
+        ds.num_classes().unwrap_or(0)
+    );
+    Ok(())
+}
+
+fn cmd_partition(flags: &Flags) -> Result<()> {
+    let data = load_data(flags)?;
+    let groups = flags.usize("groups")?.unwrap_or(6);
+    let scheme = Scheme::parse(flags.get("scheme").unwrap_or("unequal"))?;
+    let seed = flags.usize("seed")?.unwrap_or(0) as u64;
+    let mut scaler = parsample::data::MinMaxScaler::new();
+    use parsample::data::scaling::Scaler;
+    let scaled = scaler.fit_transform(&data)?;
+    let p = scheme.build(seed).partition(&scaled, groups)?;
+    println!(
+        "{:?} partitioning: {} points into {} groups, sizes {:?}",
+        scheme,
+        data.len(),
+        p.num_groups(),
+        p.sizes()
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let mut app = match flags.get("config") {
+        Some(path) => AppConfig::from_file(path)?,
+        None => AppConfig::default(),
+    };
+    app.apply_env()?;
+    let addr = flags.get("addr").unwrap_or(&app.server_addr).to_string();
+    let backend = match flags.get("backend") {
+        Some(b) => BackendKind::parse(b)?,
+        None => app.pipeline.backend,
+    };
+    let cfg = SchedulerConfig {
+        queue_depth: flags.usize("queue")?.unwrap_or(app.queue_depth),
+        backend,
+        artifacts_dir: flags
+            .get("artifacts")
+            .map(Into::into)
+            .unwrap_or(app.pipeline.artifacts_dir),
+        workers: flags.usize("workers")?.unwrap_or(app.pipeline.workers),
+    };
+    let server = Server::start(&addr, cfg)?;
+    println!("parsample serving on {} (backend {:?})", server.addr(), backend);
+    println!("protocol: one JSON object per line; see rust/src/server/protocol.rs");
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_buckets(flags: &Flags) -> Result<()> {
+    let dir = flags.get("artifacts").unwrap_or("artifacts");
+    let m = Manifest::load(dir)?;
+    println!("{:<10} {:>4} {:>8} {:>4} {:>6} {:>6}  file", "bucket", "B", "N", "D", "K", "iters");
+    for b in &m.buckets {
+        println!(
+            "{:<10} {:>4} {:>8} {:>4} {:>6} {:>6}  {}",
+            b.name, b.b, b.n, b.d, b.k, b.iters, b.file
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Algorithm 1 — equal sized subclustering.
+//!
+//! Feature-scale (done upstream), take the min-corner landmark **L**,
+//! then repeatedly gather the `N = ⌈M/G⌉` remaining points closest to
+//! L into a group and remove them.  Because L never moves, one sort of
+//! all points by distance-to-L followed by chunking is exactly
+//! equivalent to the paper's iterative gather-and-remove loop, and
+//! turns the O(G·M log M) loop into a single O(M log M) pass (the §Perf
+//! win recorded in EXPERIMENTS.md).  Groups come out as concentric
+//! shells around L (figure 1's banding).
+
+use crate::data::Dataset;
+use crate::distance::Metric;
+use crate::error::{Error, Result};
+use crate::partition::{landmark, Partition, Partitioner};
+
+/// Algorithm 1 implementation.
+#[derive(Debug, Clone)]
+pub struct EqualPartitioner {
+    /// Similarity measure to the landmark (§II: "could be anything").
+    pub metric: Metric,
+}
+
+impl EqualPartitioner {
+    pub fn new() -> Self {
+        EqualPartitioner { metric: Metric::SqEuclidean }
+    }
+
+    pub fn with_metric(metric: Metric) -> Self {
+        EqualPartitioner { metric }
+    }
+}
+
+impl Default for EqualPartitioner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Partitioner for EqualPartitioner {
+    fn partition(&self, data: &Dataset, num_groups: usize) -> Result<Partition> {
+        let m = data.len();
+        if num_groups == 0 {
+            return Err(Error::Config("num_groups must be > 0".into()));
+        }
+        if m == 0 {
+            return Err(Error::Data("cannot partition an empty dataset".into()));
+        }
+        let g = num_groups.min(m);
+        let l = landmark::min_corner(data);
+
+        // Distance of every point to L, then a stable argsort.  Stability
+        // plus the index tiebreak makes the partition fully deterministic.
+        let mut order: Vec<(f32, usize)> = (0..m)
+            .map(|i| (self.metric.dist(data.row(i), &l), i))
+            .collect();
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1)));
+
+        // Chunk into G shells of N points (last shell takes the remainder).
+        let n = m.div_ceil(g);
+        let groups: Vec<Vec<usize>> = order
+            .chunks(n)
+            .map(|chunk| chunk.iter().map(|&(_, i)| i).collect())
+            .collect();
+        Partition::new(groups, m)
+    }
+
+    fn name(&self) -> &'static str {
+        "equal"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_blobs, BlobSpec};
+
+    fn line_dataset(m: usize) -> Dataset {
+        // points at x = 0, 1, ..., m-1 so distance-to-L order is the identity
+        Dataset::from_rows(&(0..m).map(|i| vec![i as f32, 0.0]).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn groups_are_equal_sized() {
+        let p = EqualPartitioner::new().partition(&line_dataset(12), 4).unwrap();
+        assert_eq!(p.sizes(), vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn remainder_goes_to_last_group() {
+        let p = EqualPartitioner::new().partition(&line_dataset(10), 4).unwrap();
+        assert_eq!(p.sizes(), vec![3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn shells_order_by_distance_to_min_corner() {
+        let p = EqualPartitioner::new().partition(&line_dataset(9), 3).unwrap();
+        assert_eq!(p.groups()[0], vec![0, 1, 2]);
+        assert_eq!(p.groups()[1], vec![3, 4, 5]);
+        assert_eq!(p.groups()[2], vec![6, 7, 8]);
+    }
+
+    #[test]
+    fn covers_all_points_on_blobs() {
+        let ds = make_blobs(&BlobSpec { num_points: 503, num_clusters: 7, seed: 5, ..Default::default() })
+            .unwrap();
+        let p = EqualPartitioner::new().partition(&ds, 6).unwrap();
+        assert_eq!(p.num_groups(), 6);
+        assert_eq!(p.total_points(), 503);
+        // Partition::new validated the disjoint cover already; spot-check sizes
+        let sizes = p.sizes();
+        assert!(sizes[..5].iter().all(|&s| s == 84), "{sizes:?}");
+        assert_eq!(sizes[5], 503 - 5 * 84);
+    }
+
+    #[test]
+    fn more_groups_than_points_clamps() {
+        let p = EqualPartitioner::new().partition(&line_dataset(3), 10).unwrap();
+        assert_eq!(p.num_groups(), 3);
+        assert_eq!(p.sizes(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn single_group_is_whole_dataset() {
+        let p = EqualPartitioner::new().partition(&line_dataset(5), 1).unwrap();
+        assert_eq!(p.num_groups(), 1);
+        assert_eq!(p.groups()[0].len(), 5);
+    }
+
+    #[test]
+    fn deterministic_with_duplicate_points() {
+        let ds = Dataset::from_rows(&vec![vec![1.0, 1.0]; 20]).unwrap();
+        let a = EqualPartitioner::new().partition(&ds, 4).unwrap();
+        let b = EqualPartitioner::new().partition(&ds, 4).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.sizes(), vec![5, 5, 5, 5]);
+    }
+
+    #[test]
+    fn manhattan_metric_changes_shells() {
+        // Under L1, (3,3) [d=6] is farther from L=(0,0) than (4,0) [d=4];
+        // under squared L2 it's closer (18 > 16 -> actually farther too)...
+        // pick points where the two orders genuinely differ:
+        // a=(2.0,2.0): L1=4, L2sq=8 ; b=(0,3): L1=3, L2sq=9
+        let ds = Dataset::from_rows(&[vec![0.0, 0.0], vec![2.0, 2.0], vec![0.0, 3.0]]).unwrap();
+        let l1 = EqualPartitioner::with_metric(Metric::Manhattan)
+            .partition(&ds, 3)
+            .unwrap();
+        let l2 = EqualPartitioner::with_metric(Metric::SqEuclidean)
+            .partition(&ds, 3)
+            .unwrap();
+        assert_eq!(l1.groups()[1], vec![2]); // L1: (0,3) is nearer than (2,2)
+        assert_eq!(l2.groups()[1], vec![1]); // L2: (2,2) is nearer than (0,3)
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(EqualPartitioner::new().partition(&line_dataset(5), 0).is_err());
+        let empty = Dataset::new(vec![], 2).unwrap();
+        assert!(EqualPartitioner::new().partition(&empty, 3).is_err());
+    }
+}

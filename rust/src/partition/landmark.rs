@@ -1,0 +1,95 @@
+//! Landmark construction shared by both of the paper's algorithms.
+
+use crate::data::Dataset;
+use crate::distance::Metric;
+
+/// The paper's point **L**: per-attribute minimum over the dataset.
+pub fn min_corner(data: &Dataset) -> Vec<f32> {
+    data.min_corner()
+}
+
+/// The paper's point **H**: per-attribute maximum over the dataset.
+pub fn max_corner(data: &Dataset) -> Vec<f32> {
+    data.max_corner()
+}
+
+/// Algorithm 2 step 5: divide the segment L→H into `g` landmark points.
+///
+/// Landmarks are placed at the centers of `g` equal sub-segments
+/// (t = (i + ½)/g) rather than at the endpoints, so each landmark sits
+/// inside the dense diagonal band rather than at the extreme corners —
+/// this is the "landmarks in the dense regions" intent of §III.  For
+/// g = 1 this degenerates to the midpoint.
+pub fn segment_landmarks(lo: &[f32], hi: &[f32], g: usize) -> Vec<Vec<f32>> {
+    assert!(g > 0, "need at least one landmark");
+    assert_eq!(lo.len(), hi.len());
+    (0..g)
+        .map(|i| {
+            let t = (i as f32 + 0.5) / g as f32;
+            lo.iter().zip(hi).map(|(&l, &h)| l + t * (h - l)).collect()
+        })
+        .collect()
+}
+
+/// Index of the landmark nearest to `point` under `metric`
+/// (ties to the lowest index).
+pub fn nearest_landmark(point: &[f32], landmarks: &[Vec<f32>], metric: Metric) -> usize {
+    let mut best = (0usize, f32::INFINITY);
+    for (i, lm) in landmarks.iter().enumerate() {
+        let d = metric.dist(point, lm);
+        if d < best.1 {
+            best = (i, d);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    #[test]
+    fn corners() {
+        let d = Dataset::from_rows(&[vec![1.0, 9.0], vec![3.0, 2.0]]).unwrap();
+        assert_eq!(min_corner(&d), vec![1.0, 2.0]);
+        assert_eq!(max_corner(&d), vec![3.0, 9.0]);
+    }
+
+    #[test]
+    fn landmarks_are_evenly_spaced_on_segment() {
+        let lms = segment_landmarks(&[0.0, 0.0], &[1.0, 2.0], 4);
+        assert_eq!(lms.len(), 4);
+        // centers of quarters: t = .125, .375, .625, .875
+        assert_eq!(lms[0], vec![0.125, 0.25]);
+        assert_eq!(lms[3], vec![0.875, 1.75]);
+        // consecutive gaps equal
+        for w in lms.windows(2) {
+            let gap: Vec<f32> = w[1].iter().zip(&w[0]).map(|(a, b)| a - b).collect();
+            assert!((gap[0] - 0.25).abs() < 1e-6 && (gap[1] - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn single_landmark_is_midpoint() {
+        let lms = segment_landmarks(&[0.0], &[2.0], 1);
+        assert_eq!(lms, vec![vec![1.0]]);
+    }
+
+    #[test]
+    fn nearest_landmark_picks_closest() {
+        let lms = vec![vec![0.0, 0.0], vec![1.0, 1.0], vec![2.0, 2.0]];
+        assert_eq!(nearest_landmark(&[0.1, 0.0], &lms, Metric::Euclidean), 0);
+        assert_eq!(nearest_landmark(&[1.2, 0.9], &lms, Metric::Euclidean), 1);
+        assert_eq!(nearest_landmark(&[9.0, 9.0], &lms, Metric::Euclidean), 2);
+    }
+
+    #[test]
+    fn nearest_landmark_metric_sensitivity() {
+        // Chebyshev vs Manhattan can disagree on the winner.
+        let lms = vec![vec![2.0, 0.0], vec![1.4, 1.4]];
+        let p = [0.0, 0.0];
+        assert_eq!(nearest_landmark(&p, &lms, Metric::Chebyshev), 1);
+        assert_eq!(nearest_landmark(&p, &lms, Metric::Manhattan), 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! The paper's contribution at the host layer: landmark-based
+//! sub-division of the dataset into regions that can be clustered
+//! independently (and therefore in parallel).
+//!
+//! * [`EqualPartitioner`] — Algorithm 1: shells of equal size around
+//!   the min-corner landmark L.
+//! * [`UnequalPartitioner`] — Algorithm 2: nearest of G landmarks on
+//!   the L→H diagonal (robust to outliers; region sizes vary).
+//! * [`RandomPartitioner`] — ablation baseline (no locality at all).
+//!
+//! All partitioners expect **feature-scaled** input (step 1 of both
+//! algorithms); the pipeline applies [`crate::data::MinMaxScaler`]
+//! before calling them.
+
+pub mod equal;
+pub mod landmark;
+pub mod random;
+pub mod unequal;
+
+pub use equal::EqualPartitioner;
+pub use random::RandomPartitioner;
+pub use unequal::UnequalPartitioner;
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+/// A disjoint cover of the dataset's indices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    groups: Vec<Vec<usize>>,
+    total: usize,
+}
+
+impl Partition {
+    /// Wrap raw groups, validating that they form a disjoint cover of
+    /// `0..total` (every point in exactly one group).
+    pub fn new(groups: Vec<Vec<usize>>, total: usize) -> Result<Self> {
+        let mut seen = vec![false; total];
+        let mut count = 0usize;
+        for g in &groups {
+            for &i in g {
+                if i >= total {
+                    return Err(Error::Data(format!("partition index {i} >= {total}")));
+                }
+                if seen[i] {
+                    return Err(Error::Data(format!("point {i} in two groups")));
+                }
+                seen[i] = true;
+                count += 1;
+            }
+        }
+        if count != total {
+            return Err(Error::Data(format!(
+                "partition covers {count} of {total} points"
+            )));
+        }
+        Ok(Partition { groups, total })
+    }
+
+    pub fn groups(&self) -> &[Vec<usize>] {
+        &self.groups
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn total_points(&self) -> usize {
+        self.total
+    }
+
+    /// Sizes of each group.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.groups.iter().map(Vec::len).collect()
+    }
+
+    /// Group id for every point (inverse mapping).
+    pub fn membership(&self) -> Vec<usize> {
+        let mut m = vec![0usize; self.total];
+        for (g, idx) in self.groups.iter().enumerate() {
+            for &i in idx {
+                m[i] = g;
+            }
+        }
+        m
+    }
+
+    /// Drop empty groups (unequal partitioning can produce them when a
+    /// landmark attracts no points).
+    pub fn without_empty(mut self) -> Self {
+        self.groups.retain(|g| !g.is_empty());
+        self
+    }
+}
+
+/// A sub-division strategy.
+pub trait Partitioner {
+    /// Split `data` (assumed feature-scaled) into at most `num_groups`
+    /// disjoint groups covering every point.
+    fn partition(&self, data: &Dataset, num_groups: usize) -> Result<Partition>;
+
+    /// Human-readable name for telemetry and bench rows.
+    fn name(&self) -> &'static str;
+}
+
+/// Scheme selector used by config/CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    Equal,
+    Unequal,
+    Random,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Result<Scheme> {
+        match s {
+            "equal" => Ok(Scheme::Equal),
+            "unequal" => Ok(Scheme::Unequal),
+            "random" => Ok(Scheme::Random),
+            other => Err(Error::Config(format!("unknown scheme '{other}'"))),
+        }
+    }
+
+    /// Instantiate the partitioner for this scheme.
+    pub fn build(self, seed: u64) -> Box<dyn Partitioner + Send + Sync> {
+        match self {
+            Scheme::Equal => Box::new(EqualPartitioner::new()),
+            Scheme::Unequal => Box::new(UnequalPartitioner::new()),
+            Scheme::Random => Box::new(RandomPartitioner::new(seed)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_validates_cover() {
+        assert!(Partition::new(vec![vec![0, 1], vec![2]], 3).is_ok());
+        // missing point
+        assert!(Partition::new(vec![vec![0], vec![2]], 3).is_err());
+        // duplicate point
+        assert!(Partition::new(vec![vec![0, 1], vec![1, 2]], 3).is_err());
+        // out of range
+        assert!(Partition::new(vec![vec![0, 3]], 3).is_err());
+    }
+
+    #[test]
+    fn membership_inverts_groups() {
+        let p = Partition::new(vec![vec![2, 0], vec![1], vec![]], 3).unwrap();
+        assert_eq!(p.membership(), vec![0, 1, 0]);
+        assert_eq!(p.sizes(), vec![2, 1, 0]);
+        let p = p.without_empty();
+        assert_eq!(p.num_groups(), 2);
+    }
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(Scheme::parse("equal").unwrap(), Scheme::Equal);
+        assert_eq!(Scheme::parse("unequal").unwrap(), Scheme::Unequal);
+        assert_eq!(Scheme::parse("random").unwrap(), Scheme::Random);
+        assert!(Scheme::parse("spectral").is_err());
+    }
+}

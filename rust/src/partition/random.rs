@@ -1,0 +1,72 @@
+//! Random partitioner — the no-locality ablation baseline.
+//!
+//! Shuffles indices and deals them into G equal chunks.  Used by the
+//! fig_partition bench to isolate how much of the pipeline's accuracy
+//! comes from the *locality* of the paper's landmark schemes versus
+//! plain data-parallel chunking.
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::partition::{Partition, Partitioner};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct RandomPartitioner {
+    pub seed: u64,
+}
+
+impl RandomPartitioner {
+    pub fn new(seed: u64) -> Self {
+        RandomPartitioner { seed }
+    }
+}
+
+impl Partitioner for RandomPartitioner {
+    fn partition(&self, data: &Dataset, num_groups: usize) -> Result<Partition> {
+        let m = data.len();
+        if num_groups == 0 {
+            return Err(Error::Config("num_groups must be > 0".into()));
+        }
+        if m == 0 {
+            return Err(Error::Data("cannot partition an empty dataset".into()));
+        }
+        let g = num_groups.min(m);
+        let mut idx: Vec<usize> = (0..m).collect();
+        Pcg32::new(self.seed, 0x9a47).shuffle(&mut idx);
+        let n = m.div_ceil(g);
+        let groups = idx.chunks(n).map(<[usize]>::to_vec).collect();
+        Partition::new(groups, m)
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_blobs, BlobSpec};
+
+    #[test]
+    fn covers_and_balances() {
+        let ds = make_blobs(&BlobSpec { num_points: 100, num_clusters: 4, seed: 0, ..Default::default() })
+            .unwrap();
+        let p = RandomPartitioner::new(7).partition(&ds, 6).unwrap();
+        assert_eq!(p.total_points(), 100);
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 100);
+        assert!(sizes.iter().all(|&s| s == 17 || s == 15), "{sizes:?}");
+    }
+
+    #[test]
+    fn seed_determinism() {
+        let ds = make_blobs(&BlobSpec { num_points: 50, num_clusters: 2, seed: 0, ..Default::default() })
+            .unwrap();
+        let a = RandomPartitioner::new(1).partition(&ds, 3).unwrap();
+        let b = RandomPartitioner::new(1).partition(&ds, 3).unwrap();
+        let c = RandomPartitioner::new(2).partition(&ds, 3).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

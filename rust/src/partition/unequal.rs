@@ -1,0 +1,247 @@
+//! Algorithm 2 — unequal sized subclustering.
+//!
+//! Take the min corner **L** and max corner **H**, place G landmarks on
+//! the segment L→H ([`landmark::segment_landmarks`]), and group every
+//! point with its nearest landmark.  Region sizes follow the data
+//! density along the diagonal, which keeps outliers from hijacking
+//! whole groups (§III's motivation).  One pass over the data, O(M·G·D).
+
+use crate::data::Dataset;
+use crate::distance::Metric;
+use crate::error::{Error, Result};
+use crate::partition::{landmark, Partition, Partitioner};
+
+/// Algorithm 2 implementation.
+#[derive(Debug, Clone)]
+pub struct UnequalPartitioner {
+    pub metric: Metric,
+    /// Drop groups that attracted no points (default true; the batcher
+    /// has no use for empty regions).
+    pub drop_empty: bool,
+}
+
+impl UnequalPartitioner {
+    pub fn new() -> Self {
+        UnequalPartitioner { metric: Metric::SqEuclidean, drop_empty: true }
+    }
+
+    pub fn with_metric(metric: Metric) -> Self {
+        UnequalPartitioner { metric, drop_empty: true }
+    }
+
+    /// Keep empty groups (figure harness wants stable group ids).
+    pub fn keep_empty(mut self) -> Self {
+        self.drop_empty = false;
+        self
+    }
+}
+
+impl Default for UnequalPartitioner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Pick the landmark index nearest to projection parameter `s`,
+/// checking `cand`'s neighbours so f32 rounding at the cell boundary
+/// can't disagree with the brute-force scan's lowest-index tie-break.
+#[inline]
+fn nearest_on_segment(s: f32, cand: usize, g: usize) -> usize {
+    let t = |i: usize| (i as f32 + 0.5) / g as f32;
+    let mut best = cand.saturating_sub(1);
+    let mut best_d = (t(best) - s).abs();
+    for i in cand..(cand + 2).min(g) {
+        let d = (t(i) - s).abs();
+        if d < best_d {
+            best = i;
+            best_d = d;
+        }
+    }
+    best
+}
+
+impl Partitioner for UnequalPartitioner {
+    fn partition(&self, data: &Dataset, num_groups: usize) -> Result<Partition> {
+        let m = data.len();
+        if num_groups == 0 {
+            return Err(Error::Config("num_groups must be > 0".into()));
+        }
+        if m == 0 {
+            return Err(Error::Data("cannot partition an empty dataset".into()));
+        }
+        let lo = landmark::min_corner(data);
+        let hi = landmark::max_corner(data);
+
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); num_groups];
+        if matches!(self.metric, Metric::Euclidean | Metric::SqEuclidean) {
+            // §Perf fast path (EXPERIMENTS.md §Perf L3-1): the landmarks
+            // all lie on the segment L→H, so the euclidean-nearest
+            // landmark is fully determined by the scalar projection
+            // s = (p−L)·v / |v|² with v = H−L: landmark i has parameter
+            // t_i = (i+½)/G, so i* = clamp(⌊s·G⌋).  O(M·D) instead of
+            // O(M·G·D) — 170x at the paper's 500k/G=333 workload.
+            let v: Vec<f32> = hi.iter().zip(&lo).map(|(h, l)| h - l).collect();
+            let v2: f32 = v.iter().map(|x| x * x).sum();
+            if v2 == 0.0 {
+                // degenerate: all points identical -> one group
+                groups[0] = (0..m).collect();
+            } else {
+                let inv_v2 = 1.0 / v2;
+                let g_f = num_groups as f32;
+                for i in 0..m {
+                    let row = data.row(i);
+                    let mut dot = 0.0f32;
+                    for j in 0..row.len() {
+                        dot += (row[j] - lo[j]) * v[j];
+                    }
+                    let s = dot * inv_v2;
+                    // nearest t_i = (idx+0.5)/G; ties break to the lower
+                    // index exactly like the brute-force scan
+                    let idx = (s * g_f - 0.5).round() as isize;
+                    let idx = idx.clamp(0, num_groups as isize - 1) as usize;
+                    // guard the f32 rounding boundary against the scan's
+                    // tie-break by checking the 1-D neighbours
+                    let best = nearest_on_segment(s, idx, num_groups);
+                    groups[best].push(i);
+                }
+            }
+        } else {
+            // generic metric: brute-force scan over the landmarks
+            let landmarks = landmark::segment_landmarks(&lo, &hi, num_groups);
+            for i in 0..m {
+                let g = landmark::nearest_landmark(data.row(i), &landmarks, self.metric);
+                groups[g].push(i);
+            }
+        }
+        let p = Partition::new(groups, m)?;
+        Ok(if self.drop_empty { p.without_empty() } else { p })
+    }
+
+    fn name(&self) -> &'static str {
+        "unequal"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_blobs, BlobSpec};
+
+    #[test]
+    fn groups_follow_density() {
+        // Dense knot near origin, one far outlier: the outlier must NOT
+        // get a whole shell to itself beyond its own landmark cell.
+        let mut rows: Vec<Vec<f32>> = (0..99)
+            .map(|i| vec![(i % 10) as f32 * 0.01, (i / 10) as f32 * 0.01])
+            .collect();
+        rows.push(vec![10.0, 10.0]); // outlier
+        let ds = Dataset::from_rows(&rows).unwrap();
+        let p = UnequalPartitioner::new().partition(&ds, 4).unwrap();
+        // the dense knot collapses into the landmark cell nearest L
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 100);
+        assert!(sizes[0] == 99, "dense cell sizes {sizes:?}");
+        assert!(sizes.last() == Some(&1));
+    }
+
+    #[test]
+    fn covers_all_points() {
+        let ds = make_blobs(&BlobSpec { num_points: 777, num_clusters: 5, seed: 2, ..Default::default() })
+            .unwrap();
+        let p = UnequalPartitioner::new().partition(&ds, 6).unwrap();
+        assert_eq!(p.total_points(), 777);
+        assert_eq!(p.sizes().iter().sum::<usize>(), 777);
+    }
+
+    #[test]
+    fn uniform_line_gives_roughly_equal_cells() {
+        let ds = Dataset::from_rows(
+            &(0..1000).map(|i| vec![i as f32 / 1000.0]).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        let p = UnequalPartitioner::new().partition(&ds, 5).unwrap();
+        for &s in &p.sizes() {
+            assert!((180..=220).contains(&s), "sizes {:?}", p.sizes());
+        }
+    }
+
+    #[test]
+    fn empty_groups_dropped_by_default_kept_on_request() {
+        // Two tight far-apart blobs with G=8: middle landmarks get nothing.
+        let mut rows = vec![vec![0.0, 0.0]; 50];
+        rows.extend(vec![vec![1.0, 1.0]; 50]);
+        let ds = Dataset::from_rows(&rows).unwrap();
+        let dropped = UnequalPartitioner::new().partition(&ds, 8).unwrap();
+        assert!(dropped.num_groups() < 8);
+        let kept = UnequalPartitioner::new()
+            .keep_empty()
+            .partition(&ds, 8)
+            .unwrap();
+        assert_eq!(kept.num_groups(), 8);
+        assert!(kept.sizes().iter().any(|&s| s == 0));
+    }
+
+    #[test]
+    fn single_group() {
+        let ds = make_blobs(&BlobSpec { num_points: 60, num_clusters: 3, seed: 1, ..Default::default() })
+            .unwrap();
+        let p = UnequalPartitioner::new().partition(&ds, 1).unwrap();
+        assert_eq!(p.num_groups(), 1);
+        assert_eq!(p.groups()[0].len(), 60);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = make_blobs(&BlobSpec { num_points: 300, num_clusters: 4, seed: 8, ..Default::default() })
+            .unwrap();
+        let a = UnequalPartitioner::new().partition(&ds, 5).unwrap();
+        let b = UnequalPartitioner::new().partition(&ds, 5).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fast_path_matches_bruteforce_scan() {
+        // property: the projection fast path must agree with the
+        // brute-force landmark scan for euclidean metrics
+        use crate::partition::landmark;
+        for seed in 0..12 {
+            let ds = make_blobs(&BlobSpec {
+                num_points: 150 + (seed as usize * 37) % 200,
+                num_clusters: 3 + (seed as usize % 4),
+                dims: 1 + (seed as usize % 5),
+                std: 0.2,
+                extent: 5.0,
+                seed,
+            })
+            .unwrap();
+            let g = 2 + (seed as usize % 7);
+            let fast = UnequalPartitioner::new().keep_empty().partition(&ds, g).unwrap();
+            // brute force reference
+            let lo = ds.min_corner();
+            let hi = ds.max_corner();
+            let lms = landmark::segment_landmarks(&lo, &hi, g);
+            let mut expect: Vec<Vec<usize>> = vec![Vec::new(); g];
+            for i in 0..ds.len() {
+                let gi = landmark::nearest_landmark(ds.row(i), &lms, Metric::SqEuclidean);
+                expect[gi].push(i);
+            }
+            assert_eq!(fast.groups(), &expect[..], "seed {seed} g {g}");
+        }
+    }
+
+    #[test]
+    fn all_identical_points_single_group() {
+        let ds = Dataset::from_rows(&vec![vec![3.0, 3.0]; 40]).unwrap();
+        let p = UnequalPartitioner::new().partition(&ds, 5).unwrap();
+        assert_eq!(p.num_groups(), 1);
+        assert_eq!(p.groups()[0].len(), 40);
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        let ds = Dataset::from_rows(&[vec![1.0]]).unwrap();
+        assert!(UnequalPartitioner::new().partition(&ds, 0).is_err());
+        let empty = Dataset::new(vec![], 3).unwrap();
+        assert!(UnequalPartitioner::new().partition(&empty, 2).is_err());
+    }
+}

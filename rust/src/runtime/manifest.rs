@@ -1,0 +1,225 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.  Shapes are explicit in the JSON so the runtime
+//! never parses HLO to size its buffers.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One AOT shape bucket (mirrors aot.py's `Bucket`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketSpec {
+    pub name: String,
+    /// Sub-regions per dispatch.
+    pub b: usize,
+    /// Padded points per region.
+    pub n: usize,
+    /// Padded attribute count.
+    pub d: usize,
+    /// Padded center slots.
+    pub k: usize,
+    /// Lloyd iterations baked into the executable.
+    pub iters: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub sha256: String,
+}
+
+impl BucketSpec {
+    /// Does a (points, dims, centers) request fit in this bucket?
+    pub fn fits(&self, n: usize, d: usize, k: usize) -> bool {
+        self.n >= n && self.d >= d && self.k >= k
+    }
+
+    /// Padded-footprint cost of running a request in this bucket —
+    /// the registry picks the fitting bucket with the smallest cost.
+    pub fn cost(&self) -> usize {
+        self.b * self.n * (self.d + self.k)
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<BucketSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (split out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text)
+            .map_err(|e| Error::Artifact(format!("manifest.json: {e}")))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Artifact("manifest missing version".into()))?;
+        if version != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let entries = root
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest missing buckets".into()))?;
+        let mut buckets = Vec::with_capacity(entries.len());
+        for e in entries {
+            buckets.push(parse_bucket(e)?);
+        }
+        if buckets.is_empty() {
+            return Err(Error::Artifact("manifest has no buckets".into()));
+        }
+        let mut names: Vec<&str> = buckets.iter().map(|b| b.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != buckets.len() {
+            return Err(Error::Artifact("duplicate bucket names".into()));
+        }
+        Ok(Manifest { dir, buckets })
+    }
+
+    /// Absolute path of a bucket's HLO file.
+    pub fn hlo_path(&self, bucket: &BucketSpec) -> PathBuf {
+        self.dir.join(&bucket.file)
+    }
+
+    /// Cheapest bucket fitting (n, d, k), if any.
+    pub fn pick(&self, n: usize, d: usize, k: usize) -> Option<&BucketSpec> {
+        self.buckets
+            .iter()
+            .filter(|b| b.fits(n, d, k))
+            .min_by_key(|b| b.cost())
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&BucketSpec> {
+        self.buckets.iter().find(|b| b.name == name)
+    }
+}
+
+fn parse_bucket(e: &Json) -> Result<BucketSpec> {
+    let field = |k: &str| -> Result<usize> {
+        e.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Artifact(format!("bucket missing integer field '{k}'")))
+    };
+    let sfield = |k: &str| -> Result<String> {
+        e.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| Error::Artifact(format!("bucket missing string field '{k}'")))
+    };
+    let spec = BucketSpec {
+        name: sfield("name")?,
+        b: field("b")?,
+        n: field("n")?,
+        d: field("d")?,
+        k: field("k")?,
+        iters: field("iters")?,
+        file: sfield("file")?,
+        sha256: sfield("sha256")?,
+    };
+    if spec.b == 0 || spec.n == 0 || spec.d == 0 || spec.k == 0 || spec.iters == 0 {
+        return Err(Error::Artifact(format!("bucket '{}' has zero dims", spec.name)));
+    }
+    if spec.k > spec.n {
+        return Err(Error::Artifact(format!(
+            "bucket '{}': more center slots than points",
+            spec.name
+        )));
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "buckets": [
+        {"name": "a", "b": 2, "n": 16, "d": 4, "k": 4, "iters": 5,
+         "file": "a.hlo.txt", "sha256": "00"},
+        {"name": "b", "b": 1, "n": 1024, "d": 8, "k": 64, "iters": 10,
+         "file": "b.hlo.txt", "sha256": "11"}
+      ]
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_buckets() {
+        let m = manifest();
+        assert_eq!(m.buckets.len(), 2);
+        assert_eq!(m.buckets[0].name, "a");
+        assert_eq!(m.buckets[1].n, 1024);
+        assert_eq!(
+            m.hlo_path(&m.buckets[0]),
+            PathBuf::from("/tmp/artifacts/a.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn pick_chooses_cheapest_fit() {
+        let m = manifest();
+        assert_eq!(m.pick(10, 3, 2).unwrap().name, "a");
+        assert_eq!(m.pick(100, 4, 4).unwrap().name, "b");
+        assert!(m.pick(5000, 4, 4).is_none());
+        assert!(m.pick(10, 16, 2).is_none());
+    }
+
+    #[test]
+    fn by_name() {
+        let m = manifest();
+        assert!(m.by_name("a").is_some());
+        assert!(m.by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        let dir = PathBuf::from("/tmp");
+        assert!(Manifest::parse("{}", dir.clone()).is_err());
+        assert!(Manifest::parse(r#"{"version": 9, "buckets": []}"#, dir.clone()).is_err());
+        assert!(Manifest::parse(r#"{"version": 1, "buckets": []}"#, dir.clone()).is_err());
+        // duplicate names
+        let dup = r#"{"version":1,"buckets":[
+          {"name":"x","b":1,"n":8,"d":2,"k":2,"iters":1,"file":"x","sha256":""},
+          {"name":"x","b":1,"n":8,"d":2,"k":2,"iters":1,"file":"x","sha256":""}]}"#;
+        assert!(Manifest::parse(dup, dir.clone()).is_err());
+        // k > n
+        let kn = r#"{"version":1,"buckets":[
+          {"name":"x","b":1,"n":4,"d":2,"k":8,"iters":1,"file":"x","sha256":""}]}"#;
+        assert!(Manifest::parse(kn, dir).is_err());
+    }
+
+    #[test]
+    fn fits_and_cost() {
+        let b = BucketSpec {
+            name: "t".into(),
+            b: 2,
+            n: 16,
+            d: 4,
+            k: 4,
+            iters: 1,
+            file: "t".into(),
+            sha256: String::new(),
+        };
+        assert!(b.fits(16, 4, 4));
+        assert!(!b.fits(17, 4, 4));
+        assert_eq!(b.cost(), 2 * 16 * 8);
+    }
+}

@@ -1,0 +1,153 @@
+//! Device runtime: the bridge between the rust coordinator and the
+//! AOT-compiled JAX/Pallas executables.
+//!
+//! Two interchangeable [`Backend`]s run the *same* batched-k-means
+//! contract (`points[B,N,D], weights[B,N], init[B,K,D] → centers,
+//! labels, counts, inertia`):
+//!
+//! * [`PjrtBackend`] — loads `artifacts/*.hlo.txt` via the `xla` crate
+//!   (PJRT CPU client), compiles lazily per bucket, executes on the
+//!   request path.  Python is never involved.
+//! * [`NativeBackend`] — pure-rust mirror of the device semantics
+//!   (init passed in, fixed iterations, empty centers kept,
+//!   argmin ties to lowest index).  Parity between the two is enforced
+//!   by `rust/tests/integration_runtime.rs`.
+
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+
+pub use manifest::{BucketSpec, Manifest};
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use crate::error::{Error, Result};
+
+/// A padded batch of sub-regions ready for device dispatch.
+#[derive(Debug, Clone)]
+pub struct DeviceBatch {
+    /// Batch slots (B).
+    pub b: usize,
+    /// Padded points per region (N).
+    pub n: usize,
+    /// Padded attributes (D).
+    pub d: usize,
+    /// Padded center slots (K).
+    pub k: usize,
+    /// Lloyd iterations to run.
+    pub iters: usize,
+    /// f32[B,N,D] row-major.
+    pub points: Vec<f32>,
+    /// f32[B,N]; 1.0 = real point, 0.0 = padding.
+    pub weights: Vec<f32>,
+    /// f32[B,K,D] initial centers.
+    pub init: Vec<f32>,
+}
+
+impl DeviceBatch {
+    /// Validate buffer lengths against the declared shape.
+    pub fn validate(&self) -> Result<()> {
+        let (b, n, d, k) = (self.b, self.n, self.d, self.k);
+        if b == 0 || n == 0 || d == 0 || k == 0 || self.iters == 0 {
+            return Err(Error::Data("device batch has a zero dimension".into()));
+        }
+        if self.points.len() != b * n * d {
+            return Err(Error::Data(format!(
+                "points buffer {} != {}x{}x{}",
+                self.points.len(),
+                b,
+                n,
+                d
+            )));
+        }
+        if self.weights.len() != b * n {
+            return Err(Error::Data("weights buffer shape mismatch".into()));
+        }
+        if self.init.len() != b * k * d {
+            return Err(Error::Data("init centers buffer shape mismatch".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Output of one device dispatch.
+#[derive(Debug, Clone)]
+pub struct DeviceOutput {
+    /// f32[B,K,D] final centers.
+    pub centers: Vec<f32>,
+    /// i32[B,N] final assignment (padding rows get arbitrary labels).
+    pub labels: Vec<i32>,
+    /// f32[B,K] weighted member counts.
+    pub counts: Vec<f32>,
+    /// f32[B] weighted inertia.
+    pub inertia: Vec<f32>,
+}
+
+/// A device capable of running the batched k-means contract.
+pub trait Backend {
+    fn run_batch(&self, batch: &DeviceBatch) -> Result<DeviceOutput>;
+    fn name(&self) -> &'static str;
+}
+
+/// Backend selection for config/CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust mirror (fast on CPU, no artifacts needed).
+    Native,
+    /// AOT PJRT executables from `artifacts/`.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => Err(Error::Config(format!("unknown backend '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_batch() -> DeviceBatch {
+        // B=1, N=4, D=2, K=2: two pairs of points around (0,0) and (10,10)
+        DeviceBatch {
+            b: 1,
+            n: 4,
+            d: 2,
+            k: 2,
+            iters: 3,
+            points: vec![0.0, 0.0, 0.2, 0.0, 10.0, 10.0, 10.2, 10.0],
+            weights: vec![1.0; 4],
+            init: vec![0.0, 0.0, 10.0, 10.0],
+        }
+    }
+
+    #[test]
+    fn validate_accepts_consistent() {
+        assert!(tiny_batch().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_mismatch() {
+        let mut b = tiny_batch();
+        b.points.pop();
+        assert!(b.validate().is_err());
+        let mut b = tiny_batch();
+        b.weights.push(1.0);
+        assert!(b.validate().is_err());
+        let mut b = tiny_batch();
+        b.k = 0;
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("cuda").is_err());
+    }
+}

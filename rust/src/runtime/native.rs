@@ -1,0 +1,326 @@
+//! Native backend: bit-faithful rust mirror of the device semantics.
+//!
+//! Exists for three reasons: (1) parity testing the PJRT path against
+//! an independent implementation, (2) running without artifacts, and
+//! (3) a fair "what does the coordinator cost" baseline for the §Perf
+//! pass.  Semantics mirrored from `python/compile/model.py`:
+//! squared-euclidean in the |x|²−2x·c+|c|² expansion, argmin ties to
+//! the lowest index, weighted sums/counts, empty centers keep their
+//! value, `iters` full Lloyd steps then one final assignment pass.
+
+use crate::error::Result;
+use crate::runtime::{Backend, DeviceBatch, DeviceOutput};
+use crate::util::threadpool::parallel_map;
+
+/// Pure-rust device mirror.  `workers` bounds the threads used across
+/// batch slots (the CUDA "one block per sub-region" parallelism).
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    pub workers: usize,
+}
+
+impl NativeBackend {
+    pub fn new(workers: usize) -> Self {
+        NativeBackend { workers: workers.max(1) }
+    }
+
+    /// Single-threaded instance (parity tests want determinism anyway;
+    /// outputs are identical regardless of workers).
+    pub fn serial() -> Self {
+        NativeBackend { workers: 1 }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn run_batch(&self, batch: &DeviceBatch) -> Result<DeviceOutput> {
+        batch.validate()?;
+        let (b, n, d, k) = (batch.b, batch.n, batch.d, batch.k);
+        let slots: Vec<usize> = (0..b).collect();
+        let results = parallel_map(&slots, self.workers, |_, &slot| {
+            run_slot(
+                &batch.points[slot * n * d..(slot + 1) * n * d],
+                &batch.weights[slot * n..(slot + 1) * n],
+                &batch.init[slot * k * d..(slot + 1) * k * d],
+                n,
+                d,
+                k,
+                batch.iters,
+            )
+        });
+
+        let mut out = DeviceOutput {
+            centers: Vec::with_capacity(b * k * d),
+            labels: Vec::with_capacity(b * n),
+            counts: Vec::with_capacity(b * k),
+            inertia: Vec::with_capacity(b),
+        };
+        for r in results {
+            let slot = r.map_err(crate::error::Error::Coordinator)?;
+            out.centers.extend(slot.centers);
+            out.labels.extend(slot.labels);
+            out.counts.extend(slot.counts);
+            out.inertia.push(slot.inertia);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+struct SlotOutput {
+    centers: Vec<f32>,
+    labels: Vec<i32>,
+    counts: Vec<f32>,
+    inertia: f32,
+}
+
+/// One batch slot = one sub-region's full Lloyd run.
+fn run_slot(
+    points: &[f32],
+    weights: &[f32],
+    init: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+    iters: usize,
+) -> SlotOutput {
+    let mut centers = init.to_vec();
+    let mut labels = vec![0i32; n];
+    let mut counts = vec![0.0f32; k];
+    let mut sums = vec![0.0f32; k * d];
+
+    for _ in 0..iters {
+        assign_pass(points, weights, &centers, n, d, k, &mut labels, &mut sums, &mut counts);
+        // update: empty centers keep their previous value
+        for c in 0..k {
+            if counts[c] > 0.0 {
+                let inv = 1.0 / counts[c];
+                for j in 0..d {
+                    centers[c * d + j] = sums[c * d + j] * inv;
+                }
+            }
+        }
+    }
+    // final assignment pass consistent with final centers
+    let inertia =
+        assign_pass(points, weights, &centers, n, d, k, &mut labels, &mut sums, &mut counts);
+    SlotOutput { centers, labels, counts, inertia }
+}
+
+/// Assignment + accumulation, mirroring the Pallas kernel's expansion
+/// form exactly (|x|² − 2x·c + |c|², clamped at 0).  Returns weighted
+/// inertia; fills labels/sums/counts.
+///
+/// §Perf L3-3 (EXPERIMENTS.md): the inner distance sweep is dispatched
+/// to a const-generic body for D ≤ 8 so the compiler fully unrolls and
+/// vectorizes the per-center dot product (~1.9x on the 2-D paper
+/// workloads vs the dynamic-D loop).
+#[allow(clippy::too_many_arguments)]
+fn assign_pass(
+    points: &[f32],
+    weights: &[f32],
+    centers: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+    labels: &mut [i32],
+    sums: &mut [f32],
+    counts: &mut [f32],
+) -> f32 {
+    match d {
+        1 => assign_pass_const::<1>(points, weights, centers, n, k, labels, sums, counts),
+        2 => assign_pass_const::<2>(points, weights, centers, n, k, labels, sums, counts),
+        3 => assign_pass_const::<3>(points, weights, centers, n, k, labels, sums, counts),
+        4 => assign_pass_const::<4>(points, weights, centers, n, k, labels, sums, counts),
+        5 => assign_pass_const::<5>(points, weights, centers, n, k, labels, sums, counts),
+        6 => assign_pass_const::<6>(points, weights, centers, n, k, labels, sums, counts),
+        7 => assign_pass_const::<7>(points, weights, centers, n, k, labels, sums, counts),
+        8 => assign_pass_const::<8>(points, weights, centers, n, k, labels, sums, counts),
+        _ => assign_pass_dyn(points, weights, centers, n, d, k, labels, sums, counts),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn assign_pass_const<const D: usize>(
+    points: &[f32],
+    weights: &[f32],
+    centers: &[f32],
+    n: usize,
+    k: usize,
+    labels: &mut [i32],
+    sums: &mut [f32],
+    counts: &mut [f32],
+) -> f32 {
+    sums.iter_mut().for_each(|x| *x = 0.0);
+    counts.iter_mut().for_each(|x| *x = 0.0);
+    let mut cnorm = vec![0.0f32; k];
+    for (c, cc) in centers.chunks_exact(D).enumerate() {
+        cnorm[c] = cc.iter().map(|x| x * x).sum();
+    }
+    let mut inertia = 0.0f32;
+    for i in 0..n {
+        let w = weights[i];
+        if w == 0.0 {
+            // padding row: skip the whole distance sweep.  The device
+            // assigns pads a real (unused) label; native reports 0 —
+            // parity tests compare real rows only.
+            labels[i] = 0;
+            continue;
+        }
+        let mut p = [0.0f32; D];
+        p.copy_from_slice(&points[i * D..(i + 1) * D]);
+        let xn: f32 = p.iter().map(|x| x * x).sum();
+        let mut best = (0usize, f32::INFINITY);
+        for (c, cc) in centers.chunks_exact(D).enumerate() {
+            let mut dot = 0.0f32;
+            for j in 0..D {
+                dot += p[j] * cc[j];
+            }
+            let dist = (xn - 2.0 * dot + cnorm[c]).max(0.0);
+            if dist < best.1 {
+                best = (c, dist);
+            }
+        }
+        labels[i] = best.0 as i32;
+        counts[best.0] += w;
+        inertia += best.1 * w;
+        for j in 0..D {
+            sums[best.0 * D + j] += p[j] * w;
+        }
+    }
+    inertia
+}
+
+#[allow(clippy::too_many_arguments)]
+fn assign_pass_dyn(
+    points: &[f32],
+    weights: &[f32],
+    centers: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+    labels: &mut [i32],
+    sums: &mut [f32],
+    counts: &mut [f32],
+) -> f32 {
+    sums.iter_mut().for_each(|x| *x = 0.0);
+    counts.iter_mut().for_each(|x| *x = 0.0);
+    let mut cnorm = vec![0.0f32; k];
+    for c in 0..k {
+        let cc = &centers[c * d..(c + 1) * d];
+        cnorm[c] = cc.iter().map(|x| x * x).sum();
+    }
+    let mut inertia = 0.0f32;
+    for i in 0..n {
+        let w = weights[i];
+        if w == 0.0 {
+            labels[i] = 0;
+            continue;
+        }
+        let p = &points[i * d..(i + 1) * d];
+        let xn: f32 = p.iter().map(|x| x * x).sum();
+        let mut best = (0usize, f32::INFINITY);
+        for c in 0..k {
+            let cc = &centers[c * d..(c + 1) * d];
+            let dot: f32 = p.iter().zip(cc).map(|(a, b)| a * b).sum();
+            let dist = (xn - 2.0 * dot + cnorm[c]).max(0.0);
+            if dist < best.1 {
+                best = (c, dist);
+            }
+        }
+        labels[i] = best.0 as i32;
+        counts[best.0] += w;
+        inertia += best.1 * w;
+        for j in 0..d {
+            sums[best.0 * d + j] += p[j] * w;
+        }
+    }
+    inertia
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch_two_slots() -> DeviceBatch {
+        // slot 0: blobs at 0 and 10; slot 1: blobs at -5 and 5
+        let mut points = vec![
+            0.0, 0.0, 0.2, 0.0, 10.0, 10.0, 10.2, 10.0, // slot 0
+            -5.0, 0.0, -5.2, 0.0, 5.0, 0.0, 5.2, 0.0, // slot 1
+        ];
+        let init = vec![
+            0.0, 0.0, 10.0, 10.0, // slot 0
+            -5.0, 0.0, 5.0, 0.0, // slot 1
+        ];
+        DeviceBatch {
+            b: 2,
+            n: 4,
+            d: 2,
+            k: 2,
+            iters: 4,
+            points: std::mem::take(&mut points),
+            weights: vec![1.0; 8],
+            init,
+        }
+    }
+
+    #[test]
+    fn converges_per_slot() {
+        let out = NativeBackend::serial().run_batch(&batch_two_slots()).unwrap();
+        // slot 0 centers: (0.1, 0) and (10.1, 10)
+        assert!((out.centers[0] - 0.1).abs() < 1e-5);
+        assert!((out.centers[2] - 10.1).abs() < 1e-5);
+        // slot 1 centers: (-5.1, 0) and (5.1, 0)
+        assert!((out.centers[4] + 5.1).abs() < 1e-5);
+        assert!((out.centers[6] - 5.1).abs() < 1e-5);
+        assert_eq!(out.labels[..4], [0, 0, 1, 1]);
+        assert_eq!(out.counts, vec![2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(out.inertia.len(), 2);
+    }
+
+    #[test]
+    fn padding_is_ignored() {
+        let mut b = batch_two_slots();
+        // pad slot 0's last point out
+        b.weights[3] = 0.0;
+        let out = NativeBackend::serial().run_batch(&b).unwrap();
+        assert_eq!(out.counts[1], 1.0); // only (10,10) remains in cluster 1
+        assert!((out.centers[2] - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_center_keeps_value() {
+        let b = DeviceBatch {
+            b: 1,
+            n: 2,
+            d: 1,
+            k: 2,
+            iters: 3,
+            points: vec![1.0, 1.2],
+            weights: vec![1.0, 1.0],
+            init: vec![1.0, 99.0],
+        };
+        let out = NativeBackend::serial().run_batch(&b).unwrap();
+        assert_eq!(out.centers[1], 99.0);
+        assert_eq!(out.counts[1], 0.0);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_result() {
+        let b = batch_two_slots();
+        let serial = NativeBackend::serial().run_batch(&b).unwrap();
+        let parallel = NativeBackend::new(8).run_batch(&b).unwrap();
+        assert_eq!(serial.centers, parallel.centers);
+        assert_eq!(serial.labels, parallel.labels);
+        assert_eq!(serial.inertia, parallel.inertia);
+    }
+
+    #[test]
+    fn zero_iters_rejected_by_validate() {
+        let mut b = batch_two_slots();
+        b.iters = 0;
+        assert!(NativeBackend::serial().run_batch(&b).is_err());
+    }
+}

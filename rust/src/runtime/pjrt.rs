@@ -1,0 +1,151 @@
+//! PJRT backend: load AOT HLO-text artifacts, compile once per bucket,
+//! execute on the request path.  Python never runs here.
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo.rs does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Executables are compiled lazily on first use and cached; the PJRT
+//! handles are not `Send`, so a [`PjrtBackend`] lives on the thread
+//! that created it (the coordinator dispatch thread — device-level
+//! parallelism comes from batching B regions per dispatch, mirroring
+//! the paper's one-block-per-region CUDA launch, not from host threads).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::{Backend, BucketSpec, DeviceBatch, DeviceOutput, Manifest};
+
+/// AOT-artifact-backed device.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    // bucket name -> compiled executable (lazy)
+    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Compile + execute statistics for telemetry.
+    pub dispatches: std::cell::Cell<u64>,
+}
+
+impl PjrtBackend {
+    /// Create from an artifacts directory (reads manifest.json).
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            dispatches: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Cheapest bucket fitting a (n, d, k) request.
+    pub fn pick_bucket(&self, n: usize, d: usize, k: usize) -> Result<&BucketSpec> {
+        self.manifest
+            .pick(n, d, k)
+            .ok_or(Error::NoBucket { n, d, k })
+    }
+
+    /// Ensure a bucket's executable is compiled (warm-up path; also
+    /// called lazily by [`Self::run_batch`]).
+    pub fn warm(&self, bucket_name: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(bucket_name) {
+            return Ok(());
+        }
+        let bucket = self
+            .manifest
+            .by_name(bucket_name)
+            .ok_or_else(|| Error::Artifact(format!("no bucket '{bucket_name}'")))?;
+        let path = self.manifest.hlo_path(bucket);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            Error::Artifact(format!("loading {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables
+            .borrow_mut()
+            .insert(bucket_name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Which buckets are currently compiled (telemetry/tests).
+    pub fn warmed(&self) -> Vec<String> {
+        self.executables.borrow().keys().cloned().collect()
+    }
+
+    /// Run a batch in a specific bucket.  The batch must already be
+    /// padded to the bucket's exact shape and request the bucket's
+    /// baked iteration count (the batcher guarantees both).
+    pub fn run_in_bucket(&self, bucket_name: &str, batch: &DeviceBatch) -> Result<DeviceOutput> {
+        batch.validate()?;
+        let bucket = self
+            .manifest
+            .by_name(bucket_name)
+            .ok_or_else(|| Error::Artifact(format!("no bucket '{bucket_name}'")))?
+            .clone();
+        if (batch.b, batch.n, batch.d, batch.k) != (bucket.b, bucket.n, bucket.d, bucket.k) {
+            return Err(Error::Runtime(format!(
+                "batch shape ({},{},{},{}) != bucket '{}' shape ({},{},{},{})",
+                batch.b, batch.n, batch.d, batch.k, bucket.name, bucket.b, bucket.n, bucket.d, bucket.k
+            )));
+        }
+        if batch.iters != bucket.iters {
+            return Err(Error::Runtime(format!(
+                "batch requests {} iters but bucket '{}' bakes {}",
+                batch.iters, bucket.name, bucket.iters
+            )));
+        }
+        self.warm(bucket_name)?;
+        let executables = self.executables.borrow();
+        let exe = executables.get(bucket_name).expect("warmed above");
+
+        let (b, n, d, k) = (batch.b as i64, batch.n as i64, batch.d as i64, batch.k as i64);
+        let points = xla::Literal::vec1(&batch.points).reshape(&[b, n, d])?;
+        let weights = xla::Literal::vec1(&batch.weights).reshape(&[b, n])?;
+        let init = xla::Literal::vec1(&batch.init).reshape(&[b, k, d])?;
+
+        let result = exe.execute::<xla::Literal>(&[points, weights, init])?[0][0]
+            .to_literal_sync()?;
+        self.dispatches.set(self.dispatches.get() + 1);
+        // aot.py lowers with return_tuple=True: 1 tuple of 4 outputs
+        let (centers, labels, counts, inertia) = result.to_tuple4()?;
+        Ok(DeviceOutput {
+            centers: centers.to_vec::<f32>()?,
+            labels: labels.to_vec::<i32>()?,
+            counts: counts.to_vec::<f32>()?,
+            inertia: inertia.to_vec::<f32>()?,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    /// Pick the bucket by shape and run.  Requires the batch to already
+    /// match a bucket exactly; use the coordinator's batcher to pad
+    /// arbitrary workloads into bucket shapes.
+    fn run_batch(&self, batch: &DeviceBatch) -> Result<DeviceOutput> {
+        let bucket = self
+            .manifest
+            .buckets
+            .iter()
+            .find(|bk| {
+                (bk.b, bk.n, bk.d, bk.k, bk.iters)
+                    == (batch.b, batch.n, batch.d, batch.k, batch.iters)
+            })
+            .ok_or(Error::NoBucket { n: batch.n, d: batch.d, k: batch.k })?
+            .name
+            .clone();
+        self.run_in_bucket(&bucket, batch)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,163 @@
+//! Clustering job server: JSON-lines over TCP, bounded-queue
+//! backpressure, request latency telemetry.
+//!
+//! The offline image ships no async runtime (no tokio — DESIGN.md §3),
+//! so the server is a std::net accept loop with one handler thread per
+//! connection capped by the scheduler's bounded queue: when the
+//! dispatch queue is full, requests get an immediate
+//! `{"ok":false,"error":"queue full"}` instead of piling up.
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::{Scheduler, SchedulerConfig};
+use crate::error::{Error, Result};
+use crate::telemetry::LatencyHistogram;
+use protocol::{encode_error, encode_pong, encode_result, encode_stats, parse_request, Request};
+
+/// Handle to a running server.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    pub latency: Arc<LatencyHistogram>,
+}
+
+impl Server {
+    /// Bind and start serving.  `addr` may use port 0 for an ephemeral
+    /// port; the bound address is available via [`Server::addr`].
+    pub fn start(addr: &str, scheduler_cfg: SchedulerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Server(format!("bind {addr}: {e}")))?;
+        let bound = listener
+            .local_addr()
+            .map_err(|e| Error::Server(e.to_string()))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let latency = Arc::new(LatencyHistogram::new());
+
+        let accept_stop = Arc::clone(&stop);
+        let accept_latency = Arc::clone(&latency);
+        let accept_handle = std::thread::spawn(move || {
+            // the scheduler (and its PJRT client) lives on this thread's
+            // children; one scheduler serves all connections
+            let scheduler = Arc::new(Scheduler::start(scheduler_cfg));
+            let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+            for stream in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(stream) => {
+                        let scheduler = Arc::clone(&scheduler);
+                        let latency = Arc::clone(&accept_latency);
+                        let stop = Arc::clone(&accept_stop);
+                        handlers.push(std::thread::spawn(move || {
+                            let _ = handle_connection(stream, &scheduler, &latency, &stop);
+                        }));
+                    }
+                    Err(_) => continue,
+                }
+                handlers.retain(|h| !h.is_finished());
+            }
+            for h in handlers {
+                let _ = h.join();
+            }
+        });
+
+        Ok(Server { addr: bound, stop, accept_handle: Some(accept_handle), latency })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    scheduler: &Scheduler,
+    latency: &LatencyHistogram,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        let response = match parse_request(&line) {
+            Ok(Request::Ping) => encode_pong(),
+            Ok(Request::Stats) => encode_stats(&scheduler.counters.snapshot()),
+            Ok(Request::Cluster(job)) => {
+                let id = job.id;
+                let dims = job.dims;
+                match scheduler.run_blocking(job) {
+                    Ok(result) => encode_result(&result, dims),
+                    Err(e) => encode_error(Some(id), &e.to_string()),
+                }
+            }
+            Err(e) => encode_error(None, &e.to_string()),
+        };
+        latency.record(t0.elapsed());
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+/// Minimal blocking client for examples and tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Server(format!("connect {addr}: {e}")))?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request line, read one response line.
+    pub fn call(&mut self, request: &str) -> Result<String> {
+        self.writer.write_all(request.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(Error::Server("connection closed".into()));
+        }
+        Ok(line.trim_end().to_string())
+    }
+}

@@ -1,0 +1,200 @@
+//! Wire protocol: JSON-lines over TCP.
+//!
+//! Requests (one JSON object per line):
+//! ```json
+//! {"cmd":"cluster","id":1,"points":[[1.0,2.0],...],"k":3,
+//!  "scheme":"unequal","compression":6,"num_groups":6,"seed":0}
+//! {"cmd":"ping"}
+//! {"cmd":"stats"}
+//! ```
+//! Responses: `{"id":1,"ok":true,...}` / `{"ok":false,"error":"..."}`.
+
+use crate::coordinator::job::{JobRequest, JobResult};
+use crate::error::{Error, Result};
+use crate::partition::Scheme;
+use crate::util::json::Json;
+
+/// Parsed client request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Cluster(JobRequest),
+    Ping,
+    Stats,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line).map_err(|e| Error::Server(format!("bad json: {e}")))?;
+    let cmd = v
+        .get("cmd")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Server("missing cmd".into()))?;
+    match cmd {
+        "ping" => Ok(Request::Ping),
+        "stats" => Ok(Request::Stats),
+        "cluster" => {
+            let id = v.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let rows = v
+                .get("points")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Server("missing points".into()))?;
+            if rows.is_empty() {
+                return Err(Error::Server("empty points".into()));
+            }
+            let dims = rows[0]
+                .as_arr()
+                .ok_or_else(|| Error::Server("points must be arrays".into()))?
+                .len();
+            if dims == 0 {
+                return Err(Error::Server("zero-dimension points".into()));
+            }
+            let mut points = Vec::with_capacity(rows.len() * dims);
+            for r in rows {
+                let row = r
+                    .as_arr()
+                    .ok_or_else(|| Error::Server("points must be arrays".into()))?;
+                if row.len() != dims {
+                    return Err(Error::Server("ragged points".into()));
+                }
+                for x in row {
+                    points.push(
+                        x.as_f64()
+                            .ok_or_else(|| Error::Server("non-numeric point".into()))?
+                            as f32,
+                    );
+                }
+            }
+            let k = v
+                .get("k")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Server("missing k".into()))?;
+            let mut job = JobRequest::simple(id, points, dims, k);
+            if let Some(s) = v.get("scheme").and_then(Json::as_str) {
+                job.scheme = Scheme::parse(s)?;
+            }
+            if let Some(c) = v.get("compression").and_then(Json::as_f64) {
+                job.compression = c as f32;
+            }
+            if let Some(g) = v.get("num_groups").and_then(Json::as_usize) {
+                job.num_groups = Some(g);
+            }
+            if let Some(s) = v.get("seed").and_then(Json::as_usize) {
+                job.seed = s as u64;
+            }
+            Ok(Request::Cluster(job))
+        }
+        other => Err(Error::Server(format!("unknown cmd '{other}'"))),
+    }
+}
+
+/// Encode a successful cluster response.
+pub fn encode_result(r: &JobResult, dims: usize) -> String {
+    let centers: Vec<Json> = r
+        .centers
+        .chunks(dims)
+        .map(Json::arr_f32)
+        .collect();
+    let labels: Vec<Json> = r.labels.iter().map(|&l| Json::num(l as f64)).collect();
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("ok", Json::Bool(true)),
+        ("centers", Json::Arr(centers)),
+        ("labels", Json::Arr(labels)),
+        ("inertia", Json::num(r.inertia)),
+        ("elapsed_ms", Json::num(r.elapsed_ms)),
+    ])
+    .to_string()
+}
+
+/// Encode an error response.
+pub fn encode_error(id: Option<u64>, msg: &str) -> String {
+    let mut fields = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id", Json::num(id as f64)));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Encode pong / stats.
+pub fn encode_pong() -> String {
+    Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string()
+}
+
+pub fn encode_stats(counters: &[(&str, u64)]) -> String {
+    let mut fields: Vec<(&str, Json)> = vec![("ok", Json::Bool(true))];
+    for (k, v) in counters {
+        fields.push((k, Json::num(*v as f64)));
+    }
+    Json::obj(fields).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BackendKind;
+
+    #[test]
+    fn parses_cluster_request() {
+        let line = r#"{"cmd":"cluster","id":9,"points":[[1,2],[3,4],[5,6]],"k":2,
+                       "scheme":"equal","compression":3,"num_groups":2,"seed":5}"#
+            .replace('\n', " ");
+        match parse_request(&line).unwrap() {
+            Request::Cluster(j) => {
+                assert_eq!(j.id, 9);
+                assert_eq!(j.dims, 2);
+                assert_eq!(j.points, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+                assert_eq!(j.k, 2);
+                assert_eq!(j.scheme, Scheme::Equal);
+                assert_eq!(j.compression, 3.0);
+                assert_eq!(j.num_groups, Some(2));
+                assert_eq!(j.seed, 5);
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_ping_and_stats() {
+        assert!(matches!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), Request::Ping));
+        assert!(matches!(parse_request(r#"{"cmd":"stats"}"#).unwrap(), Request::Stats));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"cmd":"fly"}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"cluster","k":2}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"cluster","points":[],"k":2}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"cluster","points":[[1,2],[3]],"k":1}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"cluster","points":[["a"]],"k":1}"#).is_err());
+    }
+
+    #[test]
+    fn encodes_roundtrippable_result() {
+        let r = JobResult {
+            id: 4,
+            centers: vec![1.0, 2.0, 3.0, 4.0],
+            labels: vec![0, 1, 1],
+            inertia: 0.5,
+            elapsed_ms: 12.0,
+            backend: BackendKind::Native,
+        };
+        let s = encode_result(&r, 2);
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("centers").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("labels").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn encodes_error() {
+        let s = encode_error(Some(3), "queue full");
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("queue full"));
+    }
+}

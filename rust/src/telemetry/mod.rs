@@ -1,0 +1,207 @@
+//! Lightweight metrics: stage timers, counters, and latency histograms
+//! for the coordinator and server.  No external deps; everything is
+//! plain atomics so it can be shared across worker threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Wall-clock timings of each pipeline stage, in milliseconds.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageTimings {
+    pub scale_ms: f64,
+    pub partition_ms: f64,
+    pub batching_ms: f64,
+    pub local_ms: f64,
+    pub global_ms: f64,
+    pub total_ms: f64,
+}
+
+impl StageTimings {
+    /// One-line table row for EXPERIMENTS.md / bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "scale {:.1}ms | partition {:.1}ms | batch {:.1}ms | local {:.1}ms | global {:.1}ms | total {:.1}ms",
+            self.scale_ms, self.partition_ms, self.batching_ms, self.local_ms, self.global_ms, self.total_ms
+        )
+    }
+}
+
+/// Scope timer: `let _t = Timer::start(&mut slot);` records on drop.
+pub struct Timer<'a> {
+    start: Instant,
+    slot: &'a mut f64,
+}
+
+impl<'a> Timer<'a> {
+    pub fn start(slot: &'a mut f64) -> Self {
+        Timer { start: Instant::now(), slot }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        *self.slot += self.start.elapsed().as_secs_f64() * 1e3;
+    }
+}
+
+/// Time a closure, adding the elapsed milliseconds to `slot`.
+pub fn timed<T>(slot: &mut f64, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    *slot += t0.elapsed().as_secs_f64() * 1e3;
+    out
+}
+
+/// Monotonic counter set shared across threads (server metrics).
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub errors: AtomicU64,
+    pub points_clustered: AtomicU64,
+    pub device_dispatches: AtomicU64,
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("requests", self.requests.load(Ordering::Relaxed)),
+            ("completed", self.completed.load(Ordering::Relaxed)),
+            ("rejected", self.rejected.load(Ordering::Relaxed)),
+            ("errors", self.errors.load(Ordering::Relaxed)),
+            ("points_clustered", self.points_clustered.load(Ordering::Relaxed)),
+            ("device_dispatches", self.device_dispatches.load(Ordering::Relaxed)),
+        ]
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (1 µs .. ~1000 s).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    // bucket i covers [2^i, 2^(i+1)) microseconds
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..30).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_records() {
+        let mut slot = 0.0;
+        {
+            let _t = Timer::start(&mut slot);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(slot >= 9.0, "slot={slot}");
+    }
+
+    #[test]
+    fn timed_accumulates() {
+        let mut slot = 0.0;
+        let out = timed(&mut slot, || 42);
+        assert_eq!(out, 42);
+        timed(&mut slot, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(slot >= 4.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 2, 4, 8, 16, 32, 64] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 7);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(h.mean_us() > 1000.0);
+        assert!(h.max_us() >= 64_000);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn counters_snapshot() {
+        let c = Counters::default();
+        c.requests.fetch_add(3, Ordering::Relaxed);
+        let snap = c.snapshot();
+        assert!(snap.contains(&("requests", 3)));
+    }
+
+    #[test]
+    fn stage_summary_formats() {
+        let t = StageTimings { total_ms: 12.5, ..Default::default() };
+        assert!(t.summary().contains("total 12.5ms"));
+    }
+}

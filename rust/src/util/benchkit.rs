@@ -1,0 +1,153 @@
+//! Minimal benchmark harness (replacement for `criterion`, which the
+//! offline image doesn't ship).  Each `rust/benches/*.rs` binary uses
+//! this to produce stable, machine-parsable rows:
+//!
+//! ```text
+//! bench <name> | n=5 | mean 12.34 ms | median 12.10 ms | min 11.90 ms | max 13.00 ms
+//! ```
+//!
+//! Design choices: wall-clock `Instant`, a fixed warmup count, and a
+//! caller-chosen sample count (experiments at 500k points cannot afford
+//! criterion's adaptive hundreds of samples).
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the collected samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or_default()
+    }
+
+    pub fn max(&self) -> Duration {
+        self.samples.iter().max().copied().unwrap_or_default()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean().as_secs_f64() * 1e3
+    }
+
+    /// The standard output row.
+    pub fn row(&self) -> String {
+        format!(
+            "bench {} | n={} | mean {:.3} ms | median {:.3} ms | min {:.3} ms | max {:.3} ms",
+            self.name,
+            self.samples.len(),
+            self.mean().as_secs_f64() * 1e3,
+            self.median().as_secs_f64() * 1e3,
+            self.min().as_secs_f64() * 1e3,
+            self.max().as_secs_f64() * 1e3,
+        )
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    warmup: usize,
+    samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 1, samples: 5 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bench { warmup, samples: samples.max(1) }
+    }
+
+    /// Quick profile for expensive end-to-end runs.
+    pub fn heavy() -> Self {
+        Bench { warmup: 0, samples: 3 }
+    }
+
+    /// Time `f`, printing and returning the stats.  The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let stats = Stats { name: name.to_string(), samples };
+        println!("{}", stats.row());
+        stats
+    }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper kept local so bench
+/// binaries don't need the unstable-adjacent import).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a markdown-style table (used by the table benches to emit the
+/// exact rows EXPERIMENTS.md records).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let b = Bench::new(0, 3);
+        let s = b.run("noop", || 1 + 1);
+        assert_eq!(s.samples.len(), 3);
+        assert!(s.min() <= s.median() && s.median() <= s.max());
+    }
+
+    #[test]
+    fn row_formats() {
+        let s = Stats {
+            name: "x".into(),
+            samples: vec![Duration::from_millis(10), Duration::from_millis(20)],
+        };
+        let row = s.row();
+        assert!(row.contains("bench x"));
+        assert!(row.contains("n=2"));
+    }
+
+    #[test]
+    fn median_of_odd() {
+        let s = Stats {
+            name: "m".into(),
+            samples: vec![
+                Duration::from_millis(30),
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+            ],
+        };
+        assert_eq!(s.median(), Duration::from_millis(20));
+    }
+}

@@ -1,0 +1,12 @@
+//! From-scratch substrates that a networked build would pull from
+//! crates.io (`rand`, `serde_json`, `rayon`).  The offline vendor set
+//! only ships the `xla` closure, so these are first-class modules here
+//! (DESIGN.md §3): a seeded PRNG with the distributions the workload
+//! generators need, a JSON value parser/emitter for the artifact
+//! manifest and the wire protocol, and a scoped thread pool for the
+//! coordinator.
+
+pub mod benchkit;
+pub mod json;
+pub mod rng;
+pub mod threadpool;

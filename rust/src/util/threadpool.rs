@@ -1,0 +1,247 @@
+//! Scoped thread pool + parallel map (replacement for `rayon`).
+//!
+//! The coordinator dispatches device batches and local-clustering jobs
+//! through this.  Two entry points:
+//!
+//! * [`parallel_map`] — one-shot scoped fan-out over a slice with a
+//!   bounded worker count (work-stealing via an atomic cursor).
+//! * [`ThreadPool`] — a persistent pool with a submission queue, used by
+//!   the server so request handling threads are reused across jobs.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+/// Map `f` over `items` using up to `workers` OS threads.
+///
+/// Results come back in input order.  Panics in `f` are caught per-item
+/// and surfaced as `Err(msg)` so one bad region cannot take down the
+/// whole experiment run (failure-injection tests rely on this).
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<Result<R, String>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, item)| run_caught(&f, i, item))
+            .collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    // SAFETY-free approach: collect (index, result) pairs per worker and
+    // write them under one lock at the end of each worker's life.
+    thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let mut local: Vec<(usize, Result<R, String>)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, run_caught(&f, i, &items[i])));
+                }
+                let mut guard = slots.lock().unwrap();
+                for (i, r) in local {
+                    guard[i] = Some(r);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|slot| slot.expect("worker missed a slot")).collect()
+}
+
+fn run_caught<T, R, F>(f: &F, i: usize, item: &T) -> Result<R, String>
+where
+    F: Fn(usize, &T) -> R,
+{
+    catch_unwind(AssertUnwindSafe(|| f(i, item))).map_err(|e| {
+        let msg = e
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| e.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "worker panicked".to_string());
+        format!("task {i} panicked: {msg}")
+    })
+}
+
+/// Default worker count: all available parallelism.
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent FIFO thread pool with graceful shutdown and a
+/// pending-job counter (the server's backpressure signal).
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => {
+                            // Panics are contained per-job.
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                            let (lock, cvar) = &*pending;
+                            *lock.lock().unwrap() -= 1;
+                            cvar.notify_all();
+                        }
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), handles, pending }
+    }
+
+    /// Queue a job. Returns the number of jobs now pending (including
+    /// running ones) so callers can apply backpressure.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) -> usize {
+        let (lock, _) = &*self.pending;
+        let depth = {
+            let mut g = lock.lock().unwrap();
+            *g += 1;
+            *g
+        };
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("pool receiver dropped");
+        depth
+    }
+
+    /// Jobs queued or running right now.
+    pub fn pending(&self) -> usize {
+        *self.pending.0.lock().unwrap()
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut g = lock.lock().unwrap();
+        while *g > 0 {
+            g = cvar.wait(g).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(*r.as_ref().unwrap(), i * 2);
+        }
+    }
+
+    #[test]
+    fn map_single_worker_matches() {
+        let items: Vec<usize> = (0..20).collect();
+        let a = parallel_map(&items, 1, |i, &x| x + i);
+        let b = parallel_map(&items, 7, |i, &x| x + i);
+        assert_eq!(
+            a.iter().map(|r| *r.as_ref().unwrap()).collect::<Vec<_>>(),
+            b.iter().map(|r| *r.as_ref().unwrap()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn map_catches_panics() {
+        let items = vec![1, 2, 3];
+        let out = parallel_map(&items, 2, |_, &x| {
+            if x == 2 {
+                panic!("boom on {x}");
+            }
+            x
+        });
+        assert!(out[0].is_ok());
+        assert!(out[1].as_ref().unwrap_err().contains("boom"));
+        assert!(out[2].is_ok());
+    }
+
+    #[test]
+    fn map_empty_input() {
+        let out: Vec<Result<i32, String>> = parallel_map(&[] as &[i32], 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_actually_parallel() {
+        // 8 tasks each sleeping 50ms on 8 workers should take ~50ms, not 400.
+        let items = vec![(); 8];
+        let t0 = std::time::Instant::now();
+        parallel_map(&items, 8, |_, _| {
+            thread::sleep(std::time::Duration::from_millis(50))
+        });
+        assert!(t0.elapsed() < std::time::Duration::from_millis(300));
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_waits() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn pool_survives_job_panic() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("job panic"));
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration: the full pipeline against the paper's claims on
+//! realistic (scaled-down) workloads, plus failure injection.
+
+use parsample::data::builtin;
+use parsample::data::synthetic::{make_blobs, paper_scaling_dataset, BlobSpec};
+use parsample::eval;
+use parsample::partition::Scheme;
+use parsample::pipeline::{
+    traditional_kmeans, PipelineConfig, SubclusterPipeline,
+};
+
+/// T1 regime: subclustered accuracy within a few points of (or above)
+/// the standard-kmeans baseline on both labelled datasets.
+#[test]
+fn table1_regime_holds() {
+    for (name, data, min_correct) in [
+        ("iris", builtin::iris(), 130u64),
+        ("seeds", builtin::seeds_sim(0), 185),
+    ] {
+        let truth = data.labels().unwrap().to_vec();
+        let base = traditional_kmeans(&data, 3, 100, 0).unwrap();
+        let base_correct = eval::correct_count(&base.labels, &truth).unwrap();
+        assert!(
+            base_correct >= min_correct,
+            "{name}: baseline {base_correct} below the paper regime"
+        );
+        for scheme in [Scheme::Equal, Scheme::Unequal] {
+            let cfg = PipelineConfig::builder()
+                .scheme(scheme)
+                .num_groups(6)
+                .compression(6.0)
+                .final_k(3)
+                .weighted_global(true)
+                .build()
+                .unwrap();
+            let r = SubclusterPipeline::new(cfg).run(&data).unwrap();
+            let correct = eval::correct_count(&r.labels, &truth).unwrap();
+            // paper: subclustered >= standard; allow a small margin
+            assert!(
+                correct + 4 >= base_correct,
+                "{name} {scheme:?}: {correct} well below baseline {base_correct}"
+            );
+        }
+    }
+}
+
+/// T2 regime (scaled down): the pipeline's advantage grows with M
+/// because K = M/500 grows while the pipeline's cost is ~linear.
+#[test]
+fn table2_speedup_grows_with_size() {
+    let time = |f: &mut dyn FnMut()| {
+        let t0 = std::time::Instant::now();
+        f();
+        t0.elapsed().as_secs_f64()
+    };
+    let mut ratios = Vec::new();
+    for m in [20_000usize, 80_000] {
+        let k = m / 500;
+        let data = paper_scaling_dataset(m, 7).unwrap();
+        let trad = time(&mut || {
+            parsample::pipeline::traditional_kmeans_restarts(&data, k, 25, 0, 1).unwrap();
+        });
+        let cfg = PipelineConfig::builder()
+            .compression(5.0)
+            .final_k(k)
+            .weighted_global(true)
+            .build()
+            .unwrap();
+        let pipeline = SubclusterPipeline::new(cfg);
+        let par = time(&mut || {
+            pipeline.run(&data).unwrap();
+        });
+        ratios.push(trad / par);
+    }
+    assert!(
+        ratios[1] > ratios[0],
+        "speedup must grow with M: {ratios:?}"
+    );
+}
+
+/// T3 regime: higher compression -> fewer local centers -> faster,
+/// monotone across the paper's sweep.
+#[test]
+fn table3_compression_reduces_centers_monotonically() {
+    let data = paper_scaling_dataset(30_000, 5).unwrap();
+    let mut centers = Vec::new();
+    for c in [5.0f32, 10.0, 15.0, 20.0] {
+        let cfg = PipelineConfig::builder()
+            .compression(c)
+            .final_k(60)
+            .build()
+            .unwrap();
+        let r = SubclusterPipeline::new(cfg).run(&data).unwrap();
+        centers.push(r.local_centers);
+        let achieved = r.achieved_compression(30_000);
+        assert!(
+            achieved >= c as f64 * 0.5,
+            "achieved compression {achieved} far below requested {c}"
+        );
+    }
+    assert!(
+        centers.windows(2).all(|w| w[1] < w[0]),
+        "local centers must shrink with compression: {centers:?}"
+    );
+}
+
+/// Quality guard across the compression sweep: inertia within 2x of
+/// the traditional baseline even at c=20.
+#[test]
+fn compression_quality_degrades_gracefully() {
+    let data = paper_scaling_dataset(20_000, 3).unwrap();
+    let k = 40;
+    let base = parsample::pipeline::traditional_kmeans_restarts(&data, k, 25, 0, 1).unwrap();
+    for c in [5.0f32, 20.0] {
+        let cfg = PipelineConfig::builder()
+            .compression(c)
+            .final_k(k)
+            .weighted_global(true)
+            .build()
+            .unwrap();
+        let r = SubclusterPipeline::new(cfg).run(&data).unwrap();
+        assert!(
+            r.inertia < base.inertia * 2.0,
+            "c={c}: inertia {} vs baseline {}",
+            r.inertia,
+            base.inertia
+        );
+    }
+}
+
+/// Failure injection: non-finite data, degenerate configs, and
+/// constant datasets must fail cleanly or produce sane output — never
+/// panic or hang.
+#[test]
+fn failure_injection_degenerate_inputs() {
+    use parsample::data::Dataset;
+    // constant dataset: scaling collapses, but clustering must succeed
+    let constant = Dataset::new(vec![2.5f32; 200], 2).unwrap();
+    let cfg = PipelineConfig::builder()
+        .final_k(2)
+        .num_groups(3)
+        .compression(2.0)
+        .build()
+        .unwrap();
+    let r = SubclusterPipeline::new(cfg).run(&constant).unwrap();
+    assert_eq!(r.counts.iter().sum::<u32>(), 100);
+
+    // single point
+    let single = Dataset::new(vec![1.0, 2.0], 2).unwrap();
+    let cfg = PipelineConfig::builder()
+        .final_k(1)
+        .num_groups(1)
+        .compression(1.0)
+        .build()
+        .unwrap();
+    let r = SubclusterPipeline::new(cfg).run(&single).unwrap();
+    assert_eq!(r.labels, vec![0]);
+
+    // NaN rejected at dataset construction
+    assert!(Dataset::new(vec![f32::NAN, 0.0], 2).is_err());
+}
+
+/// The three schemes agree on easy, well-separated data.
+#[test]
+fn schemes_agree_on_easy_data() {
+    let data = make_blobs(&BlobSpec {
+        num_points: 2000,
+        num_clusters: 4,
+        dims: 2,
+        std: 0.02,
+        extent: 20.0,
+        seed: 13,
+    })
+    .unwrap();
+    let truth = data.labels().unwrap().to_vec();
+    for scheme in [Scheme::Equal, Scheme::Unequal, Scheme::Random] {
+        let cfg = PipelineConfig::builder()
+            .scheme(scheme)
+            .final_k(4)
+            .num_groups(5)
+            .compression(5.0)
+            .weighted_global(true)
+            .build()
+            .unwrap();
+        let r = SubclusterPipeline::new(cfg).run(&data).unwrap();
+        let ari = eval::ari(&r.labels, &truth).unwrap();
+        assert!(ari > 0.99, "{scheme:?}: ari {ari} on trivially separable data");
+    }
+}
+
+/// Determinism: identical config + data -> identical output.
+#[test]
+fn pipeline_is_deterministic() {
+    let data = paper_scaling_dataset(10_000, 11).unwrap();
+    let mk = || {
+        let cfg = PipelineConfig::builder()
+            .final_k(20)
+            .compression(5.0)
+            .seed(99)
+            .build()
+            .unwrap();
+        SubclusterPipeline::new(cfg).run(&data).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.centers, b.centers);
+    assert_eq!(a.labels, b.labels);
+    assert_eq!(a.inertia, b.inertia);
+}

@@ -1,0 +1,240 @@
+//! Integration: the PJRT backend loads the AOT artifacts, executes
+//! them, and agrees with the native mirror (the CORE cross-layer
+//! correctness signal of the whole three-layer stack).
+//!
+//! Requires `make artifacts` to have been run (skips otherwise).
+
+use parsample::coordinator::batcher::{local_k, Batcher};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::runtime::{Backend, DeviceBatch, NativeBackend, PjrtBackend};
+use parsample::util::rng::Pcg32;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// Build a bucket-shaped batch with `real_n` real points per slot.
+#[allow(clippy::too_many_arguments)]
+fn padded_batch(
+    b: usize,
+    n: usize,
+    d: usize,
+    k: usize,
+    iters: usize,
+    real_n: usize,
+    real_d: usize,
+    real_k: usize,
+    seed: u64,
+) -> DeviceBatch {
+    let mut rng = Pcg32::seeded(seed);
+    let mut points = vec![0.0f32; b * n * d];
+    let mut weights = vec![0.0f32; b * n];
+    let mut init = vec![1e12f32; b * k * d];
+    for slot in 0..b {
+        for i in 0..real_n {
+            for j in 0..real_d {
+                points[slot * n * d + i * d + j] = rng.uniform(0.0, 1.0);
+            }
+            weights[slot * n + i] = 1.0;
+        }
+        for c in 0..real_k {
+            for j in 0..d {
+                init[slot * k * d + c * d + j] = if j < real_d {
+                    points[slot * n * d + c * d + j]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+    DeviceBatch { b, n, d, k, iters, points, weights, init }
+}
+
+fn assert_outputs_match(
+    pjrt: &parsample::runtime::DeviceOutput,
+    native: &parsample::runtime::DeviceOutput,
+    batch: &DeviceBatch,
+    tol: f32,
+) {
+    assert_eq!(pjrt.centers.len(), native.centers.len());
+    for (i, (a, b)) in pjrt.centers.iter().zip(&native.centers).enumerate() {
+        assert!(
+            (a - b).abs() <= tol * (1.0 + a.abs()),
+            "center[{i}]: pjrt {a} vs native {b}"
+        );
+    }
+    // labels compared on real rows only (native skips pad rows)
+    for slot in 0..batch.b {
+        for i in 0..batch.n {
+            if batch.weights[slot * batch.n + i] != 0.0 {
+                assert_eq!(
+                    pjrt.labels[slot * batch.n + i],
+                    native.labels[slot * batch.n + i],
+                    "label mismatch at slot {slot} row {i}"
+                );
+            }
+        }
+    }
+    for (a, b) in pjrt.counts.iter().zip(&native.counts) {
+        assert!((a - b).abs() < 0.5, "counts: {a} vs {b}");
+    }
+    for (a, b) in pjrt.inertia.iter().zip(&native.inertia) {
+        assert!((a - b).abs() <= tol * 10.0 * (1.0 + a.abs()), "inertia: {a} vs {b}");
+    }
+}
+
+#[test]
+fn manifest_loads_and_buckets_compile() {
+    let dir = require_artifacts!();
+    let backend = PjrtBackend::load(&dir).unwrap();
+    assert_eq!(backend.platform().to_lowercase(), "cpu");
+    assert!(backend.manifest().buckets.len() >= 5);
+    // warm the smallest bucket explicitly
+    backend.warm("local_s").unwrap();
+    assert!(backend.warmed().contains(&"local_s".to_string()));
+}
+
+#[test]
+fn pjrt_matches_native_on_local_s() {
+    let dir = require_artifacts!();
+    let backend = PjrtBackend::load(&dir).unwrap();
+    let spec = backend.manifest().by_name("local_s").unwrap().clone();
+    let batch = padded_batch(
+        spec.b, spec.n, spec.d, spec.k, spec.iters, 40, 4, 8, // 40 real pts, d=4, k=8
+        7,
+    );
+    let out_pjrt = backend.run_in_bucket("local_s", &batch).unwrap();
+    let out_native = NativeBackend::serial().run_batch(&batch).unwrap();
+    assert_outputs_match(&out_pjrt, &out_native, &batch, 1e-4);
+}
+
+#[test]
+fn pjrt_matches_native_on_local_m_partial_batch() {
+    let dir = require_artifacts!();
+    let backend = PjrtBackend::load(&dir).unwrap();
+    let spec = backend.manifest().by_name("local_m").unwrap().clone();
+    // only 3 of the B slots carry real data; rest fully padded
+    let mut batch = padded_batch(
+        spec.b, spec.n, spec.d, spec.k, spec.iters, 300, 2, 60, 11,
+    );
+    for slot in 3..spec.b {
+        for i in 0..spec.n {
+            batch.weights[slot * spec.n + i] = 0.0;
+        }
+    }
+    let out_pjrt = backend.run_in_bucket("local_m", &batch).unwrap();
+    let out_native = NativeBackend::new(4).run_batch(&batch).unwrap();
+    assert_outputs_match(&out_pjrt, &out_native, &batch, 1e-3);
+    // fully-padded slots contribute nothing
+    for slot in 3..spec.b {
+        assert_eq!(out_pjrt.inertia[slot], 0.0);
+        let counts = &out_pjrt.counts[slot * spec.k..(slot + 1) * spec.k];
+        assert!(counts.iter().all(|&c| c == 0.0));
+    }
+}
+
+#[test]
+fn pjrt_through_batcher_on_blobs() {
+    let dir = require_artifacts!();
+    let backend = PjrtBackend::load(&dir).unwrap();
+    let data = make_blobs(&BlobSpec {
+        num_points: 400,
+        num_clusters: 5,
+        dims: 2,
+        std: 0.05,
+        extent: 1.0,
+        seed: 3,
+    })
+    .unwrap();
+    // scale to [0,1] like the pipeline does
+    use parsample::data::scaling::{MinMaxScaler, Scaler};
+    let scaled = MinMaxScaler::new().fit_transform(&data).unwrap();
+    let groups: Vec<Vec<usize>> = (0..4)
+        .map(|g| (g * 100..(g + 1) * 100).collect())
+        .collect();
+    let batcher = Batcher::new(backend.manifest());
+    let dispatches = batcher.plan(&scaled, &groups, 5.0).unwrap();
+    assert!(!dispatches.is_empty());
+    let mut total_counts = 0.0f32;
+    for d in &dispatches {
+        let out = backend.run_in_bucket(&d.bucket, &d.batch).unwrap();
+        let native = NativeBackend::serial().run_batch(&d.batch).unwrap();
+        assert_outputs_match(&out, &native, &d.batch, 1e-3);
+        for r in Batcher::unpack(d, &out, 2) {
+            total_counts += r.counts.iter().sum::<f32>();
+            assert_eq!(r.centers.len(), r.counts.len() * 2);
+            assert_eq!(r.counts.len(), local_k(100, 5.0));
+        }
+    }
+    assert_eq!(total_counts, 400.0, "every real point accounted once");
+}
+
+#[test]
+fn run_batch_routes_by_shape() {
+    let dir = require_artifacts!();
+    let backend = PjrtBackend::load(&dir).unwrap();
+    let spec = backend.manifest().by_name("local_s").unwrap().clone();
+    let batch = padded_batch(spec.b, spec.n, spec.d, spec.k, spec.iters, 20, 3, 4, 5);
+    let out = backend.run_batch(&batch).unwrap();
+    assert_eq!(out.inertia.len(), spec.b);
+    // wrong iteration count is rejected
+    let mut bad = batch.clone();
+    bad.iters += 1;
+    assert!(backend.run_batch(&bad).is_err());
+}
+
+#[test]
+fn full_pipeline_pjrt_backend_end_to_end() {
+    let dir = require_artifacts!();
+    use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
+    use parsample::runtime::BackendKind;
+    let data = make_blobs(&BlobSpec {
+        num_points: 1200,
+        num_clusters: 4,
+        dims: 2,
+        std: 0.05,
+        extent: 10.0,
+        seed: 9,
+    })
+    .unwrap();
+    let cfg = PipelineConfig::builder()
+        .final_k(4)
+        .num_groups(5)
+        .compression(5.0)
+        .backend(BackendKind::Pjrt)
+        .artifacts_dir(&dir)
+        .build()
+        .unwrap();
+    let r = SubclusterPipeline::new(cfg).run(&data).unwrap();
+    assert_eq!(r.labels.len(), 1200);
+    assert_eq!(r.counts.iter().sum::<u32>(), 1200);
+    // compare quality against the native path with identical settings
+    let cfg_native = PipelineConfig::builder()
+        .final_k(4)
+        .num_groups(5)
+        .compression(5.0)
+        .backend(BackendKind::Native)
+        .build()
+        .unwrap();
+    let rn = SubclusterPipeline::new(cfg_native).run(&data).unwrap();
+    let ratio = r.inertia / rn.inertia.max(1e-9);
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "pjrt {} vs native {} inertia",
+        r.inertia,
+        rn.inertia
+    );
+}

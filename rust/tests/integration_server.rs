@@ -1,0 +1,146 @@
+//! Integration: the TCP job server end to end — protocol, concurrent
+//! clients, error surfaces, backpressure, stats.
+
+use parsample::coordinator::SchedulerConfig;
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::server::{Client, Server};
+use parsample::util::json::Json;
+
+fn start_server(queue_depth: usize) -> Server {
+    Server::start(
+        "127.0.0.1:0",
+        SchedulerConfig { queue_depth, ..Default::default() },
+    )
+    .expect("server start")
+}
+
+fn cluster_request(id: u64, m: usize, k: usize) -> String {
+    let data = make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims: 2,
+        std: 0.05,
+        extent: 10.0,
+        seed: id,
+    })
+    .unwrap();
+    let points: Vec<String> = (0..data.len())
+        .map(|i| {
+            let r = data.row(i);
+            format!("[{},{}]", r[0], r[1])
+        })
+        .collect();
+    format!(
+        "{{\"cmd\":\"cluster\",\"id\":{id},\"points\":[{}],\"k\":{k},\
+         \"num_groups\":4,\"compression\":4}}",
+        points.join(",")
+    )
+}
+
+#[test]
+fn ping_and_stats() {
+    let server = start_server(4);
+    let mut client = Client::connect(server.addr()).unwrap();
+    let pong = Json::parse(&client.call("{\"cmd\":\"ping\"}").unwrap()).unwrap();
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+    let stats = Json::parse(&client.call("{\"cmd\":\"stats\"}").unwrap()).unwrap();
+    assert_eq!(stats.get("ok"), Some(&Json::Bool(true)));
+    assert!(stats.get("requests").is_some());
+}
+
+#[test]
+fn clusters_over_the_wire() {
+    let server = start_server(4);
+    let mut client = Client::connect(server.addr()).unwrap();
+    let resp = client.call(&cluster_request(42, 400, 4)).unwrap();
+    let v = Json::parse(&resp).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    assert_eq!(v.get("id").unwrap().as_usize(), Some(42));
+    assert_eq!(v.get("centers").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(v.get("labels").unwrap().as_arr().unwrap().len(), 400);
+    assert!(v.get("inertia").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(v.get("elapsed_ms").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn sequential_requests_reuse_connection() {
+    let server = start_server(4);
+    let mut client = Client::connect(server.addr()).unwrap();
+    for id in 0..5 {
+        let v = Json::parse(&client.call(&cluster_request(id, 200, 3)).unwrap()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(id as usize));
+    }
+    // stats reflect the five completions
+    let stats = Json::parse(&client.call("{\"cmd\":\"stats\"}").unwrap()).unwrap();
+    assert_eq!(stats.get("completed").unwrap().as_usize(), Some(5));
+}
+
+#[test]
+fn concurrent_clients() {
+    let server = start_server(8);
+    let addr = server.addr();
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            s.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for i in 0..3 {
+                    let id = (t * 10 + i) as u64;
+                    let v = Json::parse(&client.call(&cluster_request(id, 300, 3)).unwrap())
+                        .unwrap();
+                    assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+                    assert_eq!(v.get("id").unwrap().as_usize(), Some(id as usize));
+                }
+            });
+        }
+    });
+    assert!(server.latency.count() >= 12);
+}
+
+#[test]
+fn malformed_requests_get_error_responses() {
+    let server = start_server(4);
+    let mut client = Client::connect(server.addr()).unwrap();
+    for bad in [
+        "not json at all",
+        "{\"cmd\":\"warp\"}",
+        "{\"cmd\":\"cluster\",\"k\":3}",
+        "{\"cmd\":\"cluster\",\"points\":[[1,2],[3]],\"k\":1}",
+    ] {
+        let v = Json::parse(&client.call(bad).unwrap()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "input: {bad}");
+        assert!(v.get("error").unwrap().as_str().unwrap().len() > 3);
+    }
+    // connection still usable after errors
+    let v = Json::parse(&client.call(&cluster_request(1, 100, 2)).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+}
+
+#[test]
+fn job_level_failures_are_reported_not_fatal() {
+    let server = start_server(4);
+    let mut client = Client::connect(server.addr()).unwrap();
+    // k greater than the number of points -> pipeline error, ok:false
+    let req = "{\"cmd\":\"cluster\",\"id\":9,\"points\":[[1,2],[3,4]],\"k\":50}";
+    let v = Json::parse(&client.call(req).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
+    // server alive
+    let v = Json::parse(&client.call("{\"cmd\":\"ping\"}").unwrap()).unwrap();
+    assert_eq!(v.get("pong"), Some(&Json::Bool(true)));
+}
+
+#[test]
+fn shutdown_is_clean() {
+    let mut server = start_server(2);
+    let addr = server.addr();
+    {
+        let mut client = Client::connect(addr).unwrap();
+        let _ = client.call("{\"cmd\":\"ping\"}").unwrap();
+    }
+    server.shutdown();
+    // further connections fail or are closed immediately without hanging
+    if let Ok(mut c) = Client::connect(addr) {
+        let _ = c.call("{\"cmd\":\"ping\"}");
+    }
+}
