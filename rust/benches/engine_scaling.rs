@@ -1,0 +1,96 @@
+//! Bench: blocked multi-threaded assignment engine vs the scalar
+//! assign path (per-point `nearest_sq_with_norms` + sequential
+//! accumulate), on the global-stage shape the tentpole targets.
+//!
+//! Default is a quick profile (n=50k); the issue's reference shape
+//! (n=200k, k=256, d=32) runs with:
+//!   PARSAMPLE_BENCH_FULL=1 cargo bench --bench engine_scaling
+//!
+//! Emits `BENCH_engine.json` next to the CWD so the speedup lands in
+//! the perf trajectory (target: ≥4x on 8 cores, ≥2x at 4 workers).
+
+use parsample::cluster::engine::{serial_reference, Engine};
+use parsample::util::benchkit::{print_table, Bench};
+use parsample::util::json::Json;
+use parsample::util::rng::Pcg32;
+
+fn main() {
+    let full = std::env::var("PARSAMPLE_BENCH_FULL").is_ok();
+    let (n, k, d) = if full { (200_000usize, 256usize, 32usize) } else { (50_000, 256, 32) };
+
+    let mut rng = Pcg32::seeded(42);
+    let points: Vec<f32> = (0..n * d).map(|_| rng.uniform(-10.0, 10.0)).collect();
+    // FirstK-style centers: the first k points
+    let centers: Vec<f32> = points[..k * d].to_vec();
+
+    // correctness gate before timing anything
+    let reference = serial_reference(&points, d, &centers);
+    let engine_labels = Engine::new(8).assign_only(&points, d, &centers);
+    assert_eq!(reference.labels, engine_labels, "engine/scalar label mismatch");
+
+    let bench = Bench::new(1, 5);
+    let mut rows = Vec::new();
+    let mut results: Vec<(String, usize, f64)> = Vec::new();
+
+    let scalar = bench.run("scalar/serial_reference", || serial_reference(&points, d, &centers));
+    results.push(("scalar".into(), 1, scalar.mean_ms()));
+
+    for &workers in &[1usize, 2, 4, 8] {
+        let engine = Engine::new(workers);
+        let s = bench.run(&format!("engine/workers={workers}"), || {
+            engine.assign_accumulate(&points, d, &centers)
+        });
+        results.push(("engine".into(), workers, s.mean_ms()));
+    }
+
+    for (path, workers, ms) in &results {
+        rows.push(vec![
+            path.clone(),
+            format!("{workers}"),
+            format!("{ms:.3}"),
+            format!("{:.2}x", scalar.mean_ms() / ms),
+        ]);
+    }
+    print_table(
+        &format!("Engine scaling — fused assign+accumulate (n={n}, k={k}, d={d})"),
+        &["path", "workers", "mean ms", "speedup vs scalar"],
+        &rows,
+    );
+
+    let speedup_at = |w: usize| -> f64 {
+        results
+            .iter()
+            .find(|(p, rw, _)| p == "engine" && *rw == w)
+            .map(|(_, _, ms)| scalar.mean_ms() / ms)
+            .unwrap_or(0.0)
+    };
+    let json = Json::obj(vec![
+        ("bench", Json::str("engine_scaling")),
+        ("n", Json::num(n as f64)),
+        ("k", Json::num(k as f64)),
+        ("d", Json::num(d as f64)),
+        (
+            "rows",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|(path, workers, ms)| {
+                        Json::obj(vec![
+                            ("path", Json::str(path.clone())),
+                            ("workers", Json::num(*workers as f64)),
+                            ("mean_ms", Json::num(*ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup_2_workers", Json::num(speedup_at(2))),
+        ("speedup_4_workers", Json::num(speedup_at(4))),
+        ("speedup_8_workers", Json::num(speedup_at(8))),
+    ]);
+    let out = "BENCH_engine.json";
+    match std::fs::write(out, json.to_string()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

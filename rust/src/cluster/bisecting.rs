@@ -5,7 +5,8 @@
 //! 2-means until K clusters exist.  Accurate but serial and expensive —
 //! exactly the trade-off §I cites ("highly accurate ... but expensive").
 
-use crate::cluster::kmeans::{lloyd, inertia_of, KMeansConfig, KMeansResult};
+use crate::cluster::engine::Engine;
+use crate::cluster::kmeans::{lloyd, KMeansConfig, KMeansResult};
 use crate::cluster::{Clusterer, InitMethod};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
@@ -18,11 +19,14 @@ pub struct BisectingKMeans {
     /// Restarts per split; best-of by inertia.
     pub split_trials: usize,
     pub seed: u64,
+    /// Worker threads for the per-split Lloyd runs and the final
+    /// inertia sweep.
+    pub workers: usize,
 }
 
 impl Default for BisectingKMeans {
     fn default() -> Self {
-        BisectingKMeans { split_iters: 20, split_trials: 2, seed: 0 }
+        BisectingKMeans { split_iters: 20, split_trials: 2, seed: 0, workers: 1 }
     }
 }
 
@@ -66,6 +70,7 @@ impl BisectingKMeans {
                     tol: 1e-8,
                     init: InitMethod::KMeansPlusPlus,
                     seed: self.seed ^ (trial as u64).wrapping_mul(0x9e37_79b9),
+                    workers: self.workers,
                 };
                 let r = lloyd(&sub, dims, &cfg)?;
                 if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {
@@ -116,7 +121,7 @@ impl BisectingKMeans {
                 }
             }
         }
-        let inertia = inertia_of(points, dims, &centers);
+        let inertia = Engine::new(self.workers).inertia(points, dims, &centers);
         Ok(KMeansResult { centers, labels, counts, inertia, iterations: kk })
     }
 }

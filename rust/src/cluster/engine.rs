@@ -1,0 +1,469 @@
+//! Blocked multi-threaded assignment engine — the one hot path under
+//! every Lloyd-style loop in the crate.
+//!
+//! The assign step is O(M·K·D) and dominates clustering cost; that is
+//! the paper's whole argument for parallelising the sub-pieces.  The
+//! seed code parallelised only the partition fan-out, leaving the
+//! global stage and every large sub-region on one core with an
+//! un-tiled scalar sweep.  This engine makes the sweep fast twice over:
+//!
+//! * **Cache blocking.**  Points stream in chunks of [`POINT_CHUNK`]
+//!   against *center tiles* sized so one tile plus its precomputed
+//!   |c|² norms stays resident in L1/L2 (see
+//!   [`Engine::center_tile_for`]).  Each tile is reused across the
+//!   whole point chunk before the next tile is touched, so for large K
+//!   the centers are read from cache instead of DRAM.
+//! * **Threading.**  The point range splits into fixed-size reduction
+//!   blocks of [`Engine::point_block`] points fanned out over
+//!   [`parallel_map`] workers.  Each block produces partial
+//!   labels/sums/counts/inertia; the calling thread merges the partials
+//!   in block order.
+//!
+//! **Determinism.**  Distances use exactly the scalar path's expression
+//! (|p|² − 2·p·c + |c|², all three terms through [`distance::dot`],
+//! clamped at 0) and centers are scanned in increasing index with a
+//! strict `<`, so labels tie to the lowest index and are bit-identical
+//! to [`distance::nearest_sq_with_norms`] — the device-parity rule.
+//! Block boundaries depend only on `point_block`, never on `workers`,
+//! and the merge walks blocks in order, so every output (including the
+//! f32 sums and f64 inertia) is bit-identical across worker counts.
+//! When the input fits a single block the accumulation order equals the
+//! fully serial scalar path, making sums/inertia bit-identical to
+//! [`serial_reference`] as well; across blocks they are deterministic
+//! but may differ from the serial fold in the last ulp (float addition
+//! is not associative).  The parity suite in
+//! `rust/tests/engine_parity.rs` pins all of this down.
+
+use crate::distance::{self, center_norms};
+use crate::util::threadpool::parallel_map;
+
+/// Points held against one center tile before advancing to the next
+/// tile.  64 points × (best, dist, |p|²) state fits comfortably in
+/// registers + L1 alongside the tile itself.
+pub const POINT_CHUNK: usize = 64;
+
+/// Default reduction-block size (points per [`parallel_map`] item).
+/// Fixed — never derived from the worker count — so results are
+/// bit-identical no matter how many threads run the blocks.
+pub const DEFAULT_POINT_BLOCK: usize = 4096;
+
+/// Cache budget for one center tile (centers + their norms), in bytes.
+/// 16 KiB leaves room in a 32 KiB L1d for the point chunk and state.
+const CENTER_TILE_BYTES: usize = 16 * 1024;
+
+/// Output of one fused assign + accumulate sweep.
+#[derive(Debug, Clone)]
+pub struct FusedPass {
+    /// Nearest-center index per point (ties to the lowest index).
+    pub labels: Vec<u32>,
+    /// Points per center.
+    pub counts: Vec<u32>,
+    /// K×D per-center coordinate sums (the Lloyd update numerator).
+    pub sums: Vec<f32>,
+    /// Sum of squared distances to assigned centers.
+    pub inertia: f64,
+}
+
+/// Output of an accumulate-only sweep: just the Lloyd update's
+/// numerator and denominator.  The in-loop iterations of
+/// [`crate::cluster::kmeans::lloyd_from_parallel`] use this so no
+/// per-point labels/distances are materialized and dropped every
+/// iteration; sums/counts are bit-identical to
+/// [`Engine::assign_accumulate`]'s.
+#[derive(Debug, Clone)]
+pub struct CentroidPass {
+    /// Points per center.
+    pub counts: Vec<u32>,
+    /// K×D per-center coordinate sums.
+    pub sums: Vec<f32>,
+}
+
+/// The blocked multi-threaded assignment engine.  Cheap to construct —
+/// build one per call site with the worker count in hand.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    workers: usize,
+    point_block: usize,
+    /// Centers per tile; 0 = auto from dims (see [`Engine::center_tile_for`]).
+    center_tile: usize,
+}
+
+impl Engine {
+    /// Engine with default blocking and `workers` threads.
+    pub fn new(workers: usize) -> Engine {
+        Engine { workers: workers.max(1), point_block: DEFAULT_POINT_BLOCK, center_tile: 0 }
+    }
+
+    /// Single-threaded engine (identical outputs to any worker count).
+    pub fn serial() -> Engine {
+        Engine::new(1)
+    }
+
+    /// Engine with explicit blocking — the parity suite and the scaling
+    /// bench use this to force multi-block/multi-tile execution on
+    /// small inputs.
+    pub fn with_blocking(workers: usize, point_block: usize, center_tile: usize) -> Engine {
+        Engine {
+            workers: workers.max(1),
+            point_block: point_block.max(1),
+            center_tile,
+        }
+    }
+
+    /// Centers per tile such that the tile rows plus their norms fit
+    /// the [`CENTER_TILE_BYTES`] budget (min 8 so tiny dims still
+    /// amortise the loop overhead).
+    fn center_tile_for(&self, dims: usize) -> usize {
+        if self.center_tile > 0 {
+            self.center_tile
+        } else {
+            (CENTER_TILE_BYTES / (4 * (dims + 1))).max(8)
+        }
+    }
+
+    /// Fixed reduction-block ranges over `m` points.
+    fn blocks(&self, m: usize) -> Vec<(usize, usize)> {
+        (0..m)
+            .step_by(self.point_block)
+            .map(|lo| (lo, (lo + self.point_block).min(m)))
+            .collect()
+    }
+
+    /// Fused assign + accumulate: labels, per-center counts and
+    /// coordinate sums, and total inertia in a single sweep.
+    pub fn assign_accumulate(&self, points: &[f32], dims: usize, centers: &[f32]) -> FusedPass {
+        let m = points.len() / dims;
+        let k = centers.len() / dims;
+        let cnorm = center_norms(centers, dims);
+        let ctile = self.center_tile_for(dims);
+        let blocks = self.blocks(m);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            let (labels, dists) = argmin_block(points, dims, centers, &cnorm, ctile, lo, hi);
+            let mut counts = vec![0u32; k];
+            let mut sums = vec![0.0f32; k * dims];
+            let mut inertia = 0.0f64;
+            for (i, (&c, &d)) in labels.iter().zip(&dists).enumerate() {
+                let c = c as usize;
+                counts[c] += 1;
+                inertia += d as f64;
+                let p = &points[(lo + i) * dims..(lo + i + 1) * dims];
+                for (acc, x) in sums[c * dims..(c + 1) * dims].iter_mut().zip(p) {
+                    *acc += x;
+                }
+            }
+            (labels, counts, sums, inertia)
+        });
+
+        let mut out = FusedPass {
+            labels: Vec::with_capacity(m),
+            counts: vec![0u32; k],
+            sums: vec![0.0f32; k * dims],
+            inertia: 0.0,
+        };
+        for part in parts {
+            let (labels, counts, sums, inertia) = part.expect("engine block cannot panic");
+            out.labels.extend(labels);
+            for (acc, x) in out.counts.iter_mut().zip(counts) {
+                *acc += x;
+            }
+            for (acc, x) in out.sums.iter_mut().zip(sums) {
+                *acc += x;
+            }
+            out.inertia += inertia;
+        }
+        out
+    }
+
+    /// Counts and sums only — the Lloyd update inputs — with no
+    /// per-point output materialized (the in-loop hot path).
+    pub fn accumulate_only(&self, points: &[f32], dims: usize, centers: &[f32]) -> CentroidPass {
+        let m = points.len() / dims;
+        let k = centers.len() / dims;
+        let cnorm = center_norms(centers, dims);
+        let ctile = self.center_tile_for(dims);
+        let blocks = self.blocks(m);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            let mut counts = vec![0u32; k];
+            let mut sums = vec![0.0f32; k * dims];
+            let mut best_i = [0u32; POINT_CHUNK];
+            let mut best_d = [f32::INFINITY; POINT_CHUNK];
+            let mut s = lo;
+            while s < hi {
+                let cap = POINT_CHUNK.min(hi - s);
+                chunk_argmin(
+                    points, dims, centers, &cnorm, ctile, s, cap, &mut best_i, &mut best_d,
+                );
+                for i in 0..cap {
+                    let c = best_i[i] as usize;
+                    counts[c] += 1;
+                    let p = &points[(s + i) * dims..(s + i + 1) * dims];
+                    for (acc, x) in sums[c * dims..(c + 1) * dims].iter_mut().zip(p) {
+                        *acc += x;
+                    }
+                }
+                s += cap;
+            }
+            (counts, sums)
+        });
+        let mut out = CentroidPass { counts: vec![0u32; k], sums: vec![0.0f32; k * dims] };
+        for part in parts {
+            let (counts, sums) = part.expect("engine block cannot panic");
+            for (acc, x) in out.counts.iter_mut().zip(counts) {
+                *acc += x;
+            }
+            for (acc, x) in out.sums.iter_mut().zip(sums) {
+                *acc += x;
+            }
+        }
+        out
+    }
+
+    /// Labels only (skips the accumulate half of the fused kernel).
+    pub fn assign_only(&self, points: &[f32], dims: usize, centers: &[f32]) -> Vec<u32> {
+        let m = points.len() / dims;
+        let cnorm = center_norms(centers, dims);
+        let ctile = self.center_tile_for(dims);
+        let blocks = self.blocks(m);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            argmin_block(points, dims, centers, &cnorm, ctile, lo, hi).0
+        });
+        let mut labels = Vec::with_capacity(m);
+        for part in parts {
+            labels.extend(part.expect("engine block cannot panic"));
+        }
+        labels
+    }
+
+    /// Total within-cluster sum of squares against `centers` (no
+    /// per-point buffers: chunk distances fold straight into the f64
+    /// accumulator, in point order within each block).
+    pub fn inertia(&self, points: &[f32], dims: usize, centers: &[f32]) -> f64 {
+        let m = points.len() / dims;
+        let cnorm = center_norms(centers, dims);
+        let ctile = self.center_tile_for(dims);
+        let blocks = self.blocks(m);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            let mut best_i = [0u32; POINT_CHUNK];
+            let mut best_d = [f32::INFINITY; POINT_CHUNK];
+            let mut inertia = 0.0f64;
+            let mut s = lo;
+            while s < hi {
+                let cap = POINT_CHUNK.min(hi - s);
+                chunk_argmin(
+                    points, dims, centers, &cnorm, ctile, s, cap, &mut best_i, &mut best_d,
+                );
+                for &d in &best_d[..cap] {
+                    inertia += d as f64;
+                }
+                s += cap;
+            }
+            inertia
+        });
+        parts
+            .into_iter()
+            .map(|p| p.expect("engine block cannot panic"))
+            .sum()
+    }
+}
+
+/// The tiled inner kernel: nearest center (index, squared distance) for
+/// every point in `[lo, hi)`.  Point chunks of [`POINT_CHUNK`] stream
+/// against center tiles of `ctile` rows; the running (best, dist) per
+/// point carries across tiles, and because tiles are visited in
+/// increasing center order under a strict `<`, ties break to the
+/// lowest index exactly like the scalar path.
+fn argmin_block(
+    points: &[f32],
+    dims: usize,
+    centers: &[f32],
+    cnorm: &[f32],
+    ctile: usize,
+    lo: usize,
+    hi: usize,
+) -> (Vec<u32>, Vec<f32>) {
+    let mut labels = Vec::with_capacity(hi - lo);
+    let mut dists = Vec::with_capacity(hi - lo);
+    let mut best_i = [0u32; POINT_CHUNK];
+    let mut best_d = [f32::INFINITY; POINT_CHUNK];
+    let mut s = lo;
+    while s < hi {
+        let cap = POINT_CHUNK.min(hi - s);
+        chunk_argmin(points, dims, centers, cnorm, ctile, s, cap, &mut best_i, &mut best_d);
+        labels.extend_from_slice(&best_i[..cap]);
+        dists.extend_from_slice(&best_d[..cap]);
+        s += cap;
+    }
+    (labels, dists)
+}
+
+/// Argmin over all centers for the `cap` points starting at row `s`
+/// (`cap` ≤ [`POINT_CHUNK`]), writing into the caller's chunk-state
+/// arrays.  Resets `best_i`/`best_d` itself.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn chunk_argmin(
+    points: &[f32],
+    dims: usize,
+    centers: &[f32],
+    cnorm: &[f32],
+    ctile: usize,
+    s: usize,
+    cap: usize,
+    best_i: &mut [u32; POINT_CHUNK],
+    best_d: &mut [f32; POINT_CHUNK],
+) {
+    let k = cnorm.len();
+    let mut pn = [0.0f32; POINT_CHUNK];
+    for i in 0..cap {
+        let p = &points[(s + i) * dims..(s + i + 1) * dims];
+        pn[i] = distance::dot(p, p);
+        best_i[i] = 0;
+        best_d[i] = f32::INFINITY;
+    }
+    let mut t0 = 0usize;
+    while t0 < k {
+        let t1 = (t0 + ctile).min(k);
+        let tile = &centers[t0 * dims..t1 * dims];
+        let tnorm = &cnorm[t0..t1];
+        for i in 0..cap {
+            let p = &points[(s + i) * dims..(s + i + 1) * dims];
+            let (mut bi, mut bd) = (best_i[i], best_d[i]);
+            for (tc, cc) in tile.chunks_exact(dims).enumerate() {
+                let d = (pn[i] - 2.0 * distance::dot(p, cc) + tnorm[tc]).max(0.0);
+                if d < bd {
+                    bd = d;
+                    bi = (t0 + tc) as u32;
+                }
+            }
+            best_i[i] = bi;
+            best_d[i] = bd;
+        }
+        t0 = t1;
+    }
+}
+
+/// The un-blocked scalar path: per-point
+/// [`distance::nearest_sq_with_norms`] with sequential accumulation in
+/// point order.  This is the semantic yardstick — the parity suite
+/// asserts the engine against it and `benches/engine_scaling.rs`
+/// measures the speedup over it.
+pub fn serial_reference(points: &[f32], dims: usize, centers: &[f32]) -> FusedPass {
+    let m = points.len() / dims;
+    let k = centers.len() / dims;
+    let cnorm = center_norms(centers, dims);
+    let mut out = FusedPass {
+        labels: Vec::with_capacity(m),
+        counts: vec![0u32; k],
+        sums: vec![0.0f32; k * dims],
+        inertia: 0.0,
+    };
+    for p in points.chunks_exact(dims) {
+        let (c, d) = distance::nearest_sq_with_norms(p, centers, &cnorm, dims);
+        out.labels.push(c as u32);
+        out.counts[c] += 1;
+        out.inertia += d as f64;
+        for (acc, x) in out.sums[c * dims..(c + 1) * dims].iter_mut().zip(p) {
+            *acc += x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn cloud(m: usize, dims: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..m * dims).map(|_| rng.uniform(-5.0, 5.0)).collect()
+    }
+
+    #[test]
+    fn matches_reference_single_block() {
+        // m below DEFAULT_POINT_BLOCK: one block, so even sums and
+        // inertia accumulate in exactly the serial order.
+        for dims in [1usize, 2, 5, 32] {
+            let pts = cloud(300, dims, dims as u64);
+            let centers = pts[..7 * dims].to_vec();
+            let reference = serial_reference(&pts, dims, &centers);
+            for workers in [1usize, 4] {
+                let pass = Engine::new(workers).assign_accumulate(&pts, dims, &centers);
+                assert_eq!(pass.labels, reference.labels, "dims={dims} workers={workers}");
+                assert_eq!(pass.counts, reference.counts, "dims={dims} workers={workers}");
+                assert_eq!(pass.sums, reference.sums, "dims={dims} workers={workers}");
+                assert_eq!(
+                    pass.inertia.to_bits(),
+                    reference.inertia.to_bits(),
+                    "dims={dims} workers={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_workers_when_blocked() {
+        let pts = cloud(2000, 3, 9);
+        let centers = pts[..23 * 3].to_vec();
+        let base = Engine::with_blocking(1, 128, 4).assign_accumulate(&pts, 3, &centers);
+        for workers in [2usize, 8] {
+            let pass = Engine::with_blocking(workers, 128, 4).assign_accumulate(&pts, 3, &centers);
+            assert_eq!(pass.labels, base.labels, "workers={workers}");
+            assert_eq!(pass.counts, base.counts, "workers={workers}");
+            assert_eq!(pass.sums, base.sums, "workers={workers}");
+            assert_eq!(pass.inertia.to_bits(), base.inertia.to_bits(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn assign_only_and_inertia_agree_with_fused() {
+        let pts = cloud(777, 4, 2);
+        let centers = pts[..11 * 4].to_vec();
+        let e = Engine::with_blocking(3, 100, 3);
+        let pass = e.assign_accumulate(&pts, 4, &centers);
+        assert_eq!(e.assign_only(&pts, 4, &centers), pass.labels);
+        assert_eq!(e.inertia(&pts, 4, &centers).to_bits(), pass.inertia.to_bits());
+        let acc = e.accumulate_only(&pts, 4, &centers);
+        assert_eq!(acc.counts, pass.counts);
+        assert_eq!(acc.sums, pass.sums);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index_across_tiles() {
+        // 40 identical centers with a tile of 8: the winner must be
+        // center 0 even though later tiles see equal distances.
+        let dims = 2;
+        let centers: Vec<f32> = (0..40).flat_map(|_| [1.0f32, -2.0]).collect();
+        let pts = cloud(200, dims, 5);
+        let labels = Engine::with_blocking(4, 64, 8).assign_only(&pts, dims, &centers);
+        assert!(labels.iter().all(|&l| l == 0), "{labels:?}");
+    }
+
+    #[test]
+    fn empty_cluster_has_zero_count_and_sums() {
+        let pts = vec![0.0f32, 0.0, 0.1, 0.0, 0.2, 0.0];
+        let centers = vec![0.0f32, 0.0, 500.0, 500.0];
+        let pass = Engine::serial().assign_accumulate(&pts, 2, &centers);
+        assert_eq!(pass.counts, vec![3, 0]);
+        assert_eq!(&pass.sums[2..4], &[0.0, 0.0]);
+        assert_eq!(pass.labels, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn point_on_center_has_zero_distance() {
+        // |p|², p·c and |c|² share one summation order, so k == m
+        // inputs must produce exactly zero inertia.
+        let pts = cloud(16, 7, 3);
+        let pass = Engine::new(2).assign_accumulate(&pts, 7, &pts);
+        assert_eq!(pass.inertia, 0.0);
+        assert_eq!(pass.counts, vec![1u32; 16]);
+    }
+
+    #[test]
+    fn empty_input_is_empty_pass() {
+        let pass = Engine::new(4).assign_accumulate(&[], 3, &[1.0, 2.0, 3.0]);
+        assert!(pass.labels.is_empty());
+        assert_eq!(pass.counts, vec![0]);
+        assert_eq!(pass.inertia, 0.0);
+    }
+}

@@ -9,6 +9,7 @@
 //! squared-euclidean assignment, argmin ties to the lowest index, and
 //! empty clusters keeping their previous center.
 
+use crate::cluster::engine::Engine;
 use crate::cluster::init::{initial_centers, InitMethod};
 use crate::error::{Error, Result};
 
@@ -24,6 +25,10 @@ pub struct KMeansConfig {
     pub tol: f32,
     pub init: InitMethod,
     pub seed: u64,
+    /// Worker threads for the blocked assignment engine.  1 keeps the
+    /// baseline serial (the paper's "traditional Kmeans" is a single
+    /// core); the engine's output is bit-identical at any value.
+    pub workers: usize,
 }
 
 impl Default for KMeansConfig {
@@ -34,6 +39,7 @@ impl Default for KMeansConfig {
             tol: 1e-6,
             init: InitMethod::KMeansPlusPlus,
             seed: 0,
+            workers: 1,
         }
     }
 }
@@ -42,7 +48,14 @@ impl KMeansConfig {
     /// Config matching the AOT device executables: FirstK init, fixed
     /// iteration count, no early stop.
     pub fn device_parity(k: usize, iters: usize) -> Self {
-        KMeansConfig { k, max_iters: iters, tol: 0.0, init: InitMethod::FirstK, seed: 0 }
+        KMeansConfig {
+            k,
+            max_iters: iters,
+            tol: 0.0,
+            init: InitMethod::FirstK,
+            seed: 0,
+            workers: 1,
+        }
     }
 }
 
@@ -74,43 +87,59 @@ pub fn lloyd(points: &[f32], dims: usize, cfg: &KMeansConfig) -> Result<KMeansRe
         return Err(Error::Config(format!("k={} invalid for {m} points", cfg.k)));
     }
     let centers = initial_centers(points, dims, cfg.k, cfg.init, cfg.seed)?;
-    lloyd_from(points, dims, centers, cfg.max_iters, cfg.tol)
+    lloyd_from_parallel(points, dims, centers, cfg.max_iters, cfg.tol, cfg.workers)
 }
 
 /// Lloyd's from explicit initial centers (used by the pipeline's global
-/// stage to seed from local centers, and by parity tests).
+/// stage to seed from local centers, and by parity tests).  Serial
+/// engine; see [`lloyd_from_parallel`] for the multi-worker variant.
 pub fn lloyd_from(
+    points: &[f32],
+    dims: usize,
+    centers: Vec<f32>,
+    max_iters: usize,
+    tol: f32,
+) -> Result<KMeansResult> {
+    lloyd_from_parallel(points, dims, centers, max_iters, tol, 1)
+}
+
+/// Lloyd's from explicit initial centers on the blocked multi-threaded
+/// assignment engine.  Each iteration is one accumulate-only sweep
+/// (counts + sums, no per-point buffers); the old separate assign pass
+/// and post-convergence per-point re-scan are gone — one final fused
+/// pass yields labels, counts, and inertia against the converged
+/// centers in a single sweep.
+pub fn lloyd_from_parallel(
     points: &[f32],
     dims: usize,
     mut centers: Vec<f32>,
     max_iters: usize,
     tol: f32,
+    workers: usize,
 ) -> Result<KMeansResult> {
-    let m = points.len() / dims;
     let k = centers.len() / dims;
     if centers.len() % dims != 0 || k == 0 {
         return Err(Error::Config("centers buffer not a multiple of dims".into()));
     }
-    let mut labels = vec![0u32; m];
-    let mut counts = vec![0u32; k];
-    let mut sums = vec![0.0f32; k * dims];
+    let engine = Engine::new(workers);
     let mut iterations = 0;
 
     for _ in 0..max_iters {
         iterations += 1;
-        assign_all(points, dims, &centers, &mut labels);
-        accumulate(points, dims, &labels, &mut sums, &mut counts);
+        // accumulate-only: the update step needs counts/sums, not the
+        // per-point labels — skip materializing them every iteration
+        let pass = engine.accumulate_only(points, dims, &centers);
 
         // Update step; track the largest center movement for tol.
         let mut max_shift = 0.0f32;
         for c in 0..k {
-            if counts[c] == 0 {
+            if pass.counts[c] == 0 {
                 continue; // empty cluster keeps its center (device rule)
             }
-            let inv = 1.0 / counts[c] as f32;
+            let inv = 1.0 / pass.counts[c] as f32;
             let mut shift = 0.0f32;
             for j in 0..dims {
-                let new = sums[c * dims + j] * inv;
+                let new = pass.sums[c * dims + j] * inv;
                 let old = centers[c * dims + j];
                 shift += (new - old) * (new - old);
                 centers[c * dims + j] = new;
@@ -122,53 +151,28 @@ pub fn lloyd_from(
         }
     }
 
-    // Final assignment consistent with final centers (mirrors model.py).
-    assign_all(points, dims, &centers, &mut labels);
-    counts.iter_mut().for_each(|c| *c = 0);
-    let mut inertia = 0.0f64;
-    let cnorm = crate::distance::center_norms(&centers, dims);
-    for i in 0..m {
-        let (c, d) = crate::distance::nearest_sq_with_norms(
-            &points[i * dims..(i + 1) * dims],
-            &centers,
-            &cnorm,
-            dims,
-        );
-        debug_assert_eq!(c as u32, labels[i]);
-        counts[c] += 1;
-        inertia += d as f64;
-    }
-
-    Ok(KMeansResult { centers, labels, counts, inertia, iterations })
+    // One fused pass against the final centers (mirrors model.py's
+    // trailing assignment) — labels, counts, and inertia in one sweep.
+    let fin = engine.assign_accumulate(points, dims, &centers);
+    Ok(KMeansResult {
+        centers,
+        labels: fin.labels,
+        counts: fin.counts,
+        inertia: fin.inertia,
+        iterations,
+    })
 }
 
-/// Assignment step over all points (center norms hoisted — §Perf L3-2).
-fn assign_all(points: &[f32], dims: usize, centers: &[f32], labels: &mut [u32]) {
-    let cnorm = crate::distance::center_norms(centers, dims);
-    for (i, p) in points.chunks_exact(dims).enumerate() {
-        labels[i] = crate::distance::nearest_sq_with_norms(p, centers, &cnorm, dims).0 as u32;
-    }
-}
-
-/// Accumulate per-cluster sums and counts (buffers are zeroed here).
-fn accumulate(points: &[f32], dims: usize, labels: &[u32], sums: &mut [f32], counts: &mut [u32]) {
-    sums.iter_mut().for_each(|s| *s = 0.0);
-    counts.iter_mut().for_each(|c| *c = 0);
-    for (i, p) in points.chunks_exact(dims).enumerate() {
-        let c = labels[i] as usize;
-        counts[c] += 1;
-        for j in 0..dims {
-            sums[c * dims + j] += p[j];
-        }
-    }
-}
-
-/// Total within-cluster sum of squares of `points` against `centers`.
+/// Total within-cluster sum of squares of `points` against `centers`
+/// (norm-hoisted engine sweep; eval and the benches sit on this).
 pub fn inertia_of(points: &[f32], dims: usize, centers: &[f32]) -> f64 {
-    points
-        .chunks_exact(dims)
-        .map(|p| crate::distance::nearest_sq(p, centers, dims).1 as f64)
-        .sum()
+    Engine::serial().inertia(points, dims, centers)
+}
+
+/// [`inertia_of`] fanned out over `workers` threads (bit-identical to
+/// the serial result for any worker count).
+pub fn inertia_of_parallel(points: &[f32], dims: usize, centers: &[f32], workers: usize) -> f64 {
+    Engine::new(workers).inertia(points, dims, centers)
 }
 
 #[cfg(test)]
@@ -223,7 +227,7 @@ mod tests {
                 max_iters: iters,
                 tol: 0.0,
                 init: InitMethod::FirstK,
-                seed: 0,
+                ..Default::default()
             };
             let r = lloyd(&pts, 2, &cfg).unwrap();
             assert!(r.inertia <= prev + 1e-6, "iters={iters}: {} > {prev}", r.inertia);
@@ -285,6 +289,27 @@ mod tests {
         assert_eq!(a.centers, b.centers);
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.iterations, 10);
+    }
+
+    #[test]
+    fn workers_do_not_change_result() {
+        let pts = two_blobs(150);
+        let serial = lloyd(&pts, 2, &KMeansConfig { k: 4, ..Default::default() }).unwrap();
+        let par =
+            lloyd(&pts, 2, &KMeansConfig { k: 4, workers: 8, ..Default::default() }).unwrap();
+        assert_eq!(serial.centers, par.centers);
+        assert_eq!(serial.labels, par.labels);
+        assert_eq!(serial.counts, par.counts);
+        assert_eq!(serial.inertia.to_bits(), par.inertia.to_bits());
+    }
+
+    #[test]
+    fn inertia_of_parallel_matches_serial() {
+        let pts = two_blobs(120);
+        let centers = pts[..8].to_vec();
+        let a = inertia_of(&pts, 2, &centers);
+        let b = inertia_of_parallel(&pts, 2, &centers, 8);
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 
     #[test]

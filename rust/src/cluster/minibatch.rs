@@ -2,8 +2,9 @@
 //! the ablation benches: how close does the paper's sample-then-cluster
 //! scheme get to a streaming approximation at similar cost?
 
+use crate::cluster::engine::Engine;
 use crate::cluster::init::{initial_centers, InitMethod};
-use crate::cluster::kmeans::{inertia_of, KMeansResult};
+use crate::cluster::kmeans::KMeansResult;
 use crate::cluster::Clusterer;
 use crate::data::Dataset;
 use crate::distance::nearest_sq;
@@ -17,11 +18,19 @@ pub struct MiniBatchKMeans {
     pub iters: usize,
     pub init: InitMethod,
     pub seed: u64,
+    /// Worker threads for the final full-dataset engine sweep.
+    pub workers: usize,
 }
 
 impl Default for MiniBatchKMeans {
     fn default() -> Self {
-        MiniBatchKMeans { batch_size: 1024, iters: 100, init: InitMethod::KMeansPlusPlus, seed: 0 }
+        MiniBatchKMeans {
+            batch_size: 1024,
+            iters: 100,
+            init: InitMethod::KMeansPlusPlus,
+            seed: 0,
+            workers: 1,
+        }
     }
 }
 
@@ -53,16 +62,17 @@ impl MiniBatchKMeans {
             }
         }
 
-        // final full assignment
-        let mut labels = vec![0u32; m];
-        let mut counts = vec![0u32; k];
-        for (i, p) in points.chunks_exact(dims).enumerate() {
-            let (c, _) = nearest_sq(p, &centers, dims);
-            labels[i] = c as u32;
-            counts[c] += 1;
-        }
-        let inertia = inertia_of(points, dims, &centers);
-        Ok(KMeansResult { centers, labels, counts, inertia, iterations: self.iters })
+        // final full assignment: one fused engine sweep yields labels,
+        // counts, and inertia together (the old code paid two separate
+        // O(M·K·D) scans here)
+        let pass = Engine::new(self.workers).assign_accumulate(points, dims, &centers);
+        Ok(KMeansResult {
+            centers,
+            labels: pass.labels,
+            counts: pass.counts,
+            inertia: pass.inertia,
+            iterations: self.iters,
+        })
     }
 }
 
@@ -108,8 +118,13 @@ mod tests {
 
     #[test]
     fn counts_cover_all_points() {
-        let ds = make_blobs(&BlobSpec { num_points: 500, num_clusters: 3, seed: 1, ..Default::default() })
-            .unwrap();
+        let ds = make_blobs(&BlobSpec {
+            num_points: 500,
+            num_clusters: 3,
+            seed: 1,
+            ..Default::default()
+        })
+        .unwrap();
         let r = MiniBatchKMeans::default().run(ds.as_slice(), 2, 3).unwrap();
         assert_eq!(r.counts.iter().sum::<u32>(), 500);
         assert_eq!(r.labels.len(), 500);
@@ -117,8 +132,13 @@ mod tests {
 
     #[test]
     fn deterministic_per_seed() {
-        let ds = make_blobs(&BlobSpec { num_points: 400, num_clusters: 4, seed: 2, ..Default::default() })
-            .unwrap();
+        let ds = make_blobs(&BlobSpec {
+            num_points: 400,
+            num_clusters: 4,
+            seed: 2,
+            ..Default::default()
+        })
+        .unwrap();
         let cfg = MiniBatchKMeans { seed: 5, ..Default::default() };
         let a = cfg.run(ds.as_slice(), 2, 4).unwrap();
         let b = cfg.run(ds.as_slice(), 2, 4).unwrap();

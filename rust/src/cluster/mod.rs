@@ -4,13 +4,17 @@
 //! also the final global-stage clusterer.  [`bisecting`] and
 //! [`minibatch`] are the comparison algorithms the paper's related-work
 //! section discusses (Savaresi et al. [5]) plus a modern streaming
-//! baseline, both wired into the ablation benches.
+//! baseline, both wired into the ablation benches.  All of them run
+//! their assign/accumulate sweeps on the blocked multi-threaded
+//! [`engine`].
 
 pub mod bisecting;
+pub mod engine;
 pub mod init;
 pub mod kmeans;
 pub mod minibatch;
 
+pub use engine::{CentroidPass, Engine, FusedPass};
 pub use init::InitMethod;
 pub use kmeans::{lloyd, KMeansConfig, KMeansResult};
 

@@ -1,54 +1,91 @@
 //! Unified error type for the `parsample` crate.
+//!
+//! Hand-rolled `Display`/`Error` impls instead of `thiserror` — the
+//! offline image vendors no crates, and a dependency-free manifest is
+//! what lets `cargo build` work at all here (DESIGN.md §3).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All failure modes surfaced by the public API.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed or inconsistent dataset (shape mismatch, empty, NaN...).
-    #[error("data error: {0}")]
     Data(String),
 
     /// Invalid configuration (k > M, zero groups, bad compression...).
-    #[error("config error: {0}")]
     Config(String),
 
     /// A clustering routine could not make progress.
-    #[error("clustering error: {0}")]
     Cluster(String),
 
     /// The AOT artifact registry had no bucket fitting a request.
-    #[error("no AOT bucket fits request (n={n}, d={d}, k={k}); rebuild artifacts or use the native backend")]
     NoBucket { n: usize, d: usize, k: usize },
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact manifest problems (missing file, hash mismatch, bad JSON).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Coordinator scheduling failure (queue closed, worker panicked).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Server protocol violation or overload rejection.
-    #[error("server error: {0}")]
     Server(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error(transparent)]
-    Json(#[from] crate::util::json::JsonError),
+    Json(crate::util::json::JsonError),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Cluster(m) => write!(f, "clustering error: {m}"),
+            Error::NoBucket { n, d, k } => write!(
+                f,
+                "no AOT bucket fits request (n={n}, d={d}, k={k}); \
+                 rebuild artifacts or use the native backend"
+            ),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Server(m) => write!(f, "server error: {m}"),
+            Error::Io(e) => e.fmt(f),
+            Error::Json(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Json(e)
+    }
+}
+
+impl From<crate::runtime::xla_shim::Error> for Error {
+    fn from(e: crate::runtime::xla_shim::Error) -> Self {
         Error::Runtime(e.to_string())
     }
 }

@@ -20,7 +20,7 @@ use parsample::data::{builtin, loader, synthetic, Dataset};
 use parsample::error::{Error, Result};
 use parsample::eval;
 use parsample::partition::Scheme;
-use parsample::pipeline::{traditional_kmeans, PipelineConfig, SubclusterPipeline};
+use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
 use parsample::runtime::{BackendKind, Manifest};
 use parsample::server::Server;
 
@@ -63,11 +63,16 @@ fn print_usage() {
          \x20 cluster   --data <iris|seeds|file.csv|file.bin> --k K [--scheme equal|unequal|random]\n\
          \x20           [--groups G] [--compression C] [--backend native|pjrt] [--workers W]\n\
          \x20           [--artifacts DIR] [--seed S] [--config cfg.toml] [--eval] [--out FILE]\n\
-         \x20 baseline  --data ... --k K [--iters N] [--seed S] [--eval]   traditional k-means\n\
+         \x20 baseline  --data ... --k K [--iters N] [--seed S] [--workers W] [--eval]\n\
+         \x20           traditional k-means (single Lloyd loop on the blocked engine)\n\
          \x20 generate  --size M [--seed S] --out FILE[.csv|.bin]          paper synthetic workload\n\
          \x20 partition --data ... --groups G [--scheme ...]               dump group sizes\n\
          \x20 serve     [--addr HOST:PORT] [--backend ...] [--queue N]     JSON-lines job server\n\
-         \x20 buckets   [--artifacts DIR]                                  AOT bucket table"
+         \x20 buckets   [--artifacts DIR]                                  AOT bucket table\n\n\
+         --workers W sets the thread count of the blocked assignment engine that runs\n\
+         every Lloyd assign/accumulate sweep (default: all cores for cluster/serve,\n\
+         1 for baseline).  Engine results are bit-identical at any worker count\n\
+         (the optional --weighted-global stage chunks by worker and is not)."
     );
 }
 
@@ -247,8 +252,9 @@ fn cmd_baseline(flags: &Flags) -> Result<()> {
         .ok_or_else(|| Error::Config("missing --k".into()))?;
     let iters = flags.usize("iters")?.unwrap_or(50);
     let seed = flags.usize("seed")?.unwrap_or(0) as u64;
+    let workers = flags.usize("workers")?.unwrap_or(1);
     let t0 = std::time::Instant::now();
-    let r = traditional_kmeans(&data, k, iters, seed)?;
+    let r = parsample::pipeline::traditional_kmeans_workers(&data, k, iters, seed, 5, workers)?;
     println!(
         "traditional kmeans: {} points, k={k}, {} iters | inertia {:.6} | {:.1} ms",
         data.len(),

@@ -13,11 +13,11 @@
 use std::cell::RefCell;
 use std::path::PathBuf;
 
-use crate::cluster::kmeans::KMeansResult;
+use crate::cluster::engine::Engine;
+use crate::cluster::kmeans::{lloyd_from_parallel, KMeansResult};
 use crate::coordinator::batcher::{Batcher, LocalResult};
 use crate::data::scaling::{MinMaxScaler, Scaler};
 use crate::data::Dataset;
-use crate::distance::nearest_sq;
 use crate::error::{Error, Result};
 use crate::partition::Scheme;
 use crate::runtime::{Backend, BackendKind, DeviceBatch, NativeBackend, PjrtBackend};
@@ -448,14 +448,28 @@ impl SubclusterPipeline {
             }
             // fall through to native when nothing fits
         }
-        let unit;
-        let w = if self.cfg.weighted_global {
-            weights
+        if self.cfg.weighted_global {
+            weighted_lloyd_parallel(
+                pooled,
+                weights,
+                init,
+                dims,
+                k,
+                self.cfg.global_iters,
+                self.cfg.workers,
+            )
         } else {
-            unit = vec![1.0f32; n_pool];
-            &unit
-        };
-        weighted_lloyd_parallel(pooled, w, init, dims, k, self.cfg.global_iters, self.cfg.workers)
+            // unit weights: the fused blocked engine path (no per-point
+            // weight multiplies, tiled centers, fixed global_iters)
+            lloyd_from_parallel(
+                pooled,
+                dims,
+                init.to_vec(),
+                self.cfg.global_iters,
+                0.0,
+                self.cfg.workers,
+            )
+        }
     }
 }
 
@@ -504,7 +518,9 @@ fn pack_global(
 /// Weighted Lloyd, parallelized over point chunks — the global stage
 /// dominates pipeline cost at T2 scale (M/c pooled centers x K up to
 /// 1000), so its assignment step fans out across the worker pool with
-/// per-chunk partial sums reduced on the coordinator thread.
+/// per-chunk partial sums reduced on the coordinator thread.  Only the
+/// `weighted_global` path runs through here; the unit-weight global
+/// stage uses the blocked [`Engine`] via [`lloyd_from_parallel`].
 /// Semantics identical to the device: empty centers keep their value,
 /// argmin ties to the lowest index, weights scale sums/counts/inertia.
 pub fn weighted_lloyd_parallel(
@@ -687,7 +703,8 @@ fn accumulate_chunk_const<const D: usize>(
     (sums, counts)
 }
 
-/// Parallel final assignment of all points to the global centers.
+/// Parallel final assignment of all points to the global centers on
+/// the blocked engine (one fused sweep: labels, counts, inertia).
 /// Returns (labels, counts, inertia).
 pub fn assign_full(
     points: &[f32],
@@ -695,37 +712,8 @@ pub fn assign_full(
     centers: &[f32],
     workers: usize,
 ) -> (Vec<u32>, Vec<u32>, f64) {
-    let m = points.len() / dims;
-    let k = centers.len() / dims;
-    let chunk = m.div_ceil(workers.max(1)).max(1);
-    let ranges: Vec<(usize, usize)> = (0..m)
-        .step_by(chunk)
-        .map(|s| (s, (s + chunk).min(m)))
-        .collect();
-    let parts = parallel_map(&ranges, workers, |_, &(lo, hi)| {
-        let mut labels = Vec::with_capacity(hi - lo);
-        let mut counts = vec![0u32; k];
-        let mut inertia = 0.0f64;
-        for i in lo..hi {
-            let (c, d) = nearest_sq(&points[i * dims..(i + 1) * dims], centers, dims);
-            labels.push(c as u32);
-            counts[c] += 1;
-            inertia += d as f64;
-        }
-        (labels, counts, inertia)
-    });
-    let mut labels = Vec::with_capacity(m);
-    let mut counts = vec![0u32; k];
-    let mut inertia = 0.0f64;
-    for p in parts {
-        let (l, c, i) = p.expect("assignment cannot panic");
-        labels.extend(l);
-        for (acc, x) in counts.iter_mut().zip(c) {
-            *acc += x;
-        }
-        inertia += i;
-    }
-    (labels, counts, inertia)
+    let pass = Engine::new(workers).assign_accumulate(points, dims, centers);
+    (pass.labels, pass.counts, pass.inertia)
 }
 
 /// The "traditional Kmeans" baseline every table compares against:
@@ -744,13 +732,29 @@ pub fn traditional_kmeans(
 
 /// [`traditional_kmeans`] with an explicit restart count.  The T2/T3
 /// *timing* harness uses 1 restart (the paper's traditional k-means is
-/// a single run); the T1 *accuracy* harness uses 5.
+/// a single run); the T1 *accuracy* harness uses 5.  Serial engine —
+/// the baseline stays single-core so speedup comparisons stay honest;
+/// use [`traditional_kmeans_workers`] to opt into threads.
 pub fn traditional_kmeans_restarts(
     data: &Dataset,
     k: usize,
     max_iters: usize,
     seed: u64,
     restarts: u64,
+) -> Result<KMeansResult> {
+    traditional_kmeans_workers(data, k, max_iters, seed, restarts, 1)
+}
+
+/// [`traditional_kmeans_restarts`] with the engine worker knob exposed
+/// (the CLI `baseline --workers` path; results are bit-identical at
+/// every worker count).
+pub fn traditional_kmeans_workers(
+    data: &Dataset,
+    k: usize,
+    max_iters: usize,
+    seed: u64,
+    restarts: u64,
+    workers: usize,
 ) -> Result<KMeansResult> {
     let mut best: Option<KMeansResult> = None;
     for trial in 0..restarts.max(1) {
@@ -760,6 +764,7 @@ pub fn traditional_kmeans_restarts(
             tol: 1e-6,
             init: crate::cluster::InitMethod::KMeansPlusPlus,
             seed: seed ^ trial.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            workers,
         };
         let r = crate::cluster::lloyd(data.as_slice(), data.dims(), &cfg)?;
         if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {
@@ -773,6 +778,7 @@ pub fn traditional_kmeans_restarts(
 mod tests {
     use super::*;
     use crate::data::synthetic::{make_blobs, BlobSpec};
+    use crate::distance::nearest_sq;
 
     fn blobs(m: usize, k: usize, seed: u64) -> Dataset {
         make_blobs(&BlobSpec {

@@ -16,6 +16,7 @@
 pub mod manifest;
 pub mod native;
 pub mod pjrt;
+pub mod xla_shim;
 
 pub use manifest::{BucketSpec, Manifest};
 pub use native::NativeBackend;

@@ -14,6 +14,10 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
+// The offline image vendors no crates; `xla_shim` mirrors the exact
+// API surface this file consumes and errors at the first runtime call.
+// Vendor the real `xla` crate and delete this alias to go on-device.
+use crate::runtime::xla_shim as xla;
 use crate::runtime::{Backend, BucketSpec, DeviceBatch, DeviceOutput, Manifest};
 
 /// AOT-artifact-backed device.
@@ -94,7 +98,8 @@ impl PjrtBackend {
         if (batch.b, batch.n, batch.d, batch.k) != (bucket.b, bucket.n, bucket.d, bucket.k) {
             return Err(Error::Runtime(format!(
                 "batch shape ({},{},{},{}) != bucket '{}' shape ({},{},{},{})",
-                batch.b, batch.n, batch.d, batch.k, bucket.name, bucket.b, bucket.n, bucket.d, bucket.k
+                batch.b, batch.n, batch.d, batch.k, bucket.name, bucket.b, bucket.n, bucket.d,
+                bucket.k
             )));
         }
         if batch.iters != bucket.iters {

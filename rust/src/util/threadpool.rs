@@ -45,7 +45,11 @@ where
     thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| {
-                let mut local: Vec<(usize, Result<R, String>)> = Vec::new();
+                // pre-size for the fair share so tight fan-outs (the
+                // engine dispatches thousands of blocks) don't pay
+                // repeated growth reallocations
+                let mut local: Vec<(usize, Result<R, String>)> =
+                    Vec::with_capacity(n / workers + 1);
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= n {

@@ -1,0 +1,196 @@
+//! Parity suite for the blocked multi-threaded assignment engine
+//! (`cluster::engine`) against the scalar reference path.
+//!
+//! Contract under test:
+//!   * labels and counts are bit-identical to the scalar per-point
+//!     `nearest_sq_with_norms` sweep at every worker count, every
+//!     blocking, dims {1,3,4,7,32}, and k up to m (ties and empty
+//!     clusters included);
+//!   * sums and inertia are bit-identical across worker counts
+//!     {1,2,8} (block boundaries never depend on the worker count);
+//!   * with a single reduction block (m <= point_block) — and on data
+//!     whose partial sums are exactly representable — sums and inertia
+//!     are bit-identical to the fully serial fold as well;
+//!   * `lloyd_from_parallel` therefore reproduces the serial scalar
+//!     Lloyd loop bit-for-bit (centers, labels, counts).
+
+use parsample::cluster::engine::{serial_reference, Engine};
+use parsample::cluster::kmeans::{lloyd_from, lloyd_from_parallel};
+use parsample::util::rng::Pcg32;
+
+const DIMS: [usize; 5] = [1, 3, 4, 7, 32];
+const WORKERS: [usize; 3] = [1, 2, 8];
+
+fn cloud(m: usize, dims: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..m * dims).map(|_| rng.uniform(-8.0, 8.0)).collect()
+}
+
+#[test]
+fn fused_pass_matches_scalar_reference() {
+    // m < default point_block: single reduction block, so every field
+    // — including f32 sums and f64 inertia — accumulates in exactly
+    // the scalar order and must match bit-for-bit.
+    for &dims in &DIMS {
+        let m = 311;
+        let pts = cloud(m, dims, 100 + dims as u64);
+        for k in [1usize, 2, 13, m] {
+            let centers = pts[..k * dims].to_vec();
+            let reference = serial_reference(&pts, dims, &centers);
+            for &w in &WORKERS {
+                let pass = Engine::new(w).assign_accumulate(&pts, dims, &centers);
+                assert_eq!(pass.labels, reference.labels, "dims={dims} k={k} w={w}");
+                assert_eq!(pass.counts, reference.counts, "dims={dims} k={k} w={w}");
+                assert_eq!(pass.sums, reference.sums, "dims={dims} k={k} w={w}");
+                assert_eq!(
+                    pass.inertia.to_bits(),
+                    reference.inertia.to_bits(),
+                    "dims={dims} k={k} w={w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn k_equals_m_has_exactly_zero_inertia() {
+    for &dims in &DIMS {
+        // strictly increasing coordinates: every row is distinct, so
+        // each point's unique argmin is its own center
+        let pts: Vec<f32> = (0..40 * dims).map(|i| i as f32 * 0.25 - 13.0).collect();
+        for &w in &WORKERS {
+            let pass = Engine::new(w).assign_accumulate(&pts, dims, &pts);
+            assert_eq!(pass.inertia, 0.0, "dims={dims} w={w}");
+            assert_eq!(pass.counts, vec![1u32; 40], "dims={dims} w={w}");
+        }
+    }
+}
+
+#[test]
+fn blocked_labels_still_match_scalar_reference() {
+    // Force many blocks and tiny center tiles: labels/counts must stay
+    // bit-identical to the scalar sweep regardless of blocking.
+    for &dims in &[3usize, 32] {
+        let m = 2500;
+        let pts = cloud(m, dims, 200 + dims as u64);
+        let k = 37;
+        let centers = pts[..k * dims].to_vec();
+        let reference = serial_reference(&pts, dims, &centers);
+        for &w in &WORKERS {
+            let e = Engine::with_blocking(w, 128, 5);
+            let pass = e.assign_accumulate(&pts, dims, &centers);
+            assert_eq!(pass.labels, reference.labels, "dims={dims} w={w}");
+            assert_eq!(pass.counts, reference.counts, "dims={dims} w={w}");
+            // multi-block f32 partial merges may differ from the serial
+            // fold in the last ulp; they must still be very tight
+            for (i, (a, b)) in pass.sums.iter().zip(&reference.sums).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                    "dims={dims} w={w} sums[{i}]: {a} vs {b}"
+                );
+            }
+            let rel =
+                (pass.inertia - reference.inertia).abs() / (1.0 + reference.inertia.abs());
+            assert!(rel < 1e-9, "dims={dims} w={w}: {} vs {}", pass.inertia, reference.inertia);
+        }
+    }
+}
+
+#[test]
+fn blocked_outputs_bit_identical_across_worker_counts() {
+    let dims = 7;
+    let m = 3000;
+    let pts = cloud(m, dims, 31);
+    let centers = pts[..29 * dims].to_vec();
+    let e1 = Engine::with_blocking(1, 64, 3);
+    let base = e1.assign_accumulate(&pts, dims, &centers);
+    for &w in &[2usize, 8] {
+        let pass = Engine::with_blocking(w, 64, 3).assign_accumulate(&pts, dims, &centers);
+        assert_eq!(pass.labels, base.labels, "w={w}");
+        assert_eq!(pass.counts, base.counts, "w={w}");
+        assert_eq!(pass.sums, base.sums, "w={w}");
+        assert_eq!(pass.inertia.to_bits(), base.inertia.to_bits(), "w={w}");
+    }
+}
+
+#[test]
+fn integer_data_blocked_sums_bitwise_equal_serial() {
+    // Small-integer coordinates keep every partial sum exactly
+    // representable in f32, so even the multi-block merge must equal
+    // the serial fold bit-for-bit.
+    let dims = 3;
+    let m = 1000;
+    let mut rng = Pcg32::seeded(9);
+    let pts: Vec<f32> = (0..m * dims).map(|_| rng.below(32) as f32).collect();
+    let centers: Vec<f32> = (0..6 * dims).map(|_| rng.below(32) as f32).collect();
+    let reference = serial_reference(&pts, dims, &centers);
+    for &w in &WORKERS {
+        let pass = Engine::with_blocking(w, 100, 2).assign_accumulate(&pts, dims, &centers);
+        assert_eq!(pass.labels, reference.labels, "w={w}");
+        assert_eq!(pass.counts, reference.counts, "w={w}");
+        assert_eq!(pass.sums, reference.sums, "w={w}");
+        assert_eq!(pass.inertia.to_bits(), reference.inertia.to_bits(), "w={w}");
+    }
+}
+
+#[test]
+fn tie_and_empty_cluster_cases() {
+    // duplicate centers across a tile boundary: lowest index wins
+    let dims = 4;
+    let pts = cloud(150, dims, 77);
+    let mut centers = Vec::new();
+    for _ in 0..12 {
+        centers.extend_from_slice(&[0.5f32, -1.0, 2.0, 0.25]);
+    }
+    // plus one far-away center nothing selects
+    centers.extend_from_slice(&[1e6, 1e6, 1e6, 1e6]);
+    let reference = serial_reference(&pts, dims, &centers);
+    for &w in &WORKERS {
+        let pass = Engine::with_blocking(w, 32, 5).assign_accumulate(&pts, dims, &centers);
+        assert_eq!(pass.labels, reference.labels, "w={w}");
+        assert!(pass.labels.iter().all(|&l| l == 0), "ties must break to center 0");
+        assert_eq!(*pass.counts.last().unwrap(), 0, "far center must stay empty");
+        assert_eq!(&pass.sums[12 * dims..], &[0.0f32; 4], "empty center sums stay zero");
+    }
+}
+
+#[test]
+fn assign_only_and_inertia_agree_with_fused_pass() {
+    let dims = 5;
+    let pts = cloud(640, dims, 55);
+    let centers = pts[..17 * dims].to_vec();
+    for &w in &WORKERS {
+        let e = Engine::with_blocking(w, 96, 4);
+        let pass = e.assign_accumulate(&pts, dims, &centers);
+        assert_eq!(e.assign_only(&pts, dims, &centers), pass.labels, "w={w}");
+        assert_eq!(
+            e.inertia(&pts, dims, &centers).to_bits(),
+            pass.inertia.to_bits(),
+            "w={w}"
+        );
+        let acc = e.accumulate_only(&pts, dims, &centers);
+        assert_eq!(acc.counts, pass.counts, "w={w}");
+        assert_eq!(acc.sums, pass.sums, "w={w}");
+    }
+}
+
+#[test]
+fn lloyd_parallel_bit_identical_to_serial_lloyd() {
+    // m < point_block: the whole Lloyd loop (assign, accumulate,
+    // update, final pass) must be bit-for-bit reproducible at every
+    // worker count.
+    for &dims in &[2usize, 7] {
+        let m = 900;
+        let pts = cloud(m, dims, 400 + dims as u64);
+        let init = pts[..9 * dims].to_vec();
+        let serial = lloyd_from(&pts, dims, init.clone(), 12, 0.0).unwrap();
+        for &w in &[2usize, 8] {
+            let par = lloyd_from_parallel(&pts, dims, init.clone(), 12, 0.0, w).unwrap();
+            assert_eq!(par.centers, serial.centers, "dims={dims} w={w}");
+            assert_eq!(par.labels, serial.labels, "dims={dims} w={w}");
+            assert_eq!(par.counts, serial.counts, "dims={dims} w={w}");
+            assert_eq!(par.inertia.to_bits(), serial.inertia.to_bits(), "dims={dims} w={w}");
+            assert_eq!(par.iterations, serial.iterations, "dims={dims} w={w}");
+        }
+    }
+}

@@ -140,6 +140,7 @@ fn prop_kmeans_inertia_monotone_in_iterations() {
                 tol: 0.0,
                 init: InitMethod::FirstK,
                 seed: 0,
+                workers: 1,
             };
             let r = lloyd(data.as_slice(), data.dims(), &cfg).unwrap();
             assert!(
