@@ -1,0 +1,123 @@
+//! Bench: Hamerly-bounded Lloyd loop vs the unpruned engine loop on a
+//! blob workload (the shape where bound pruning pays: most points stop
+//! changing clusters after a few iterations).
+//!
+//! Profiles (points / clusters / dims / iters):
+//!   PARSAMPLE_BENCH_SMOKE=1  →  2k / 64 / 8 / 15   (CI rot-guard)
+//!   default                  → 40k / 96 / 16 / 30
+//!   PARSAMPLE_BENCH_FULL=1   → 120k / 256 / 16 / 30
+//!
+//! Asserts bit-identical outputs between the two modes (the tentpole
+//! contract), then emits skip rates and wall times into
+//! `BENCH_hamerly.json` so the perf trajectory records the fraction of
+//! point-iterations pruned (expect >50% after iteration ~5).
+
+use parsample::cluster::engine::{BoundsMode, Engine, LloydLoopResult};
+use parsample::cluster::init::{initial_centers, InitMethod};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::util::benchkit::{print_table, Bench};
+use parsample::util::json::Json;
+
+fn main() {
+    let smoke = std::env::var("PARSAMPLE_BENCH_SMOKE").is_ok();
+    let full = std::env::var("PARSAMPLE_BENCH_FULL").is_ok();
+    let (m, k, d, iters) = if smoke {
+        (2_000usize, 64usize, 8usize, 15usize)
+    } else if full {
+        (120_000, 256, 16, 30)
+    } else {
+        (40_000, 96, 16, 30)
+    };
+
+    let ds = make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims: d,
+        std: 0.05,
+        extent: 10.0,
+        seed: 42,
+    })
+    .expect("blob generation");
+    let points = ds.as_slice();
+    let init = initial_centers(points, d, k, InitMethod::KMeansPlusPlus, 7).expect("init");
+
+    let workers = 4;
+    let engine = Engine::new(workers);
+    let run = |bounds: BoundsMode| -> LloydLoopResult {
+        engine.lloyd_loop(points, d, init.clone(), iters, 0.0, bounds)
+    };
+
+    // correctness gate before timing anything: pruning must be
+    // bit-identical to the unpruned loop
+    let off = run(BoundsMode::Off);
+    let ham = run(BoundsMode::Hamerly);
+    assert_eq!(off.labels, ham.labels, "bounded/unbounded label mismatch");
+    assert_eq!(off.counts, ham.counts, "bounded/unbounded count mismatch");
+    assert_eq!(off.centers, ham.centers, "bounded/unbounded center mismatch");
+    assert_eq!(
+        off.inertia.to_bits(),
+        ham.inertia.to_bits(),
+        "bounded/unbounded inertia mismatch"
+    );
+    // rot-guard for the skip counters themselves
+    assert_eq!(ham.stats.point_iters(), m as u64 * (ham.iterations as u64 + 1));
+    assert!(ham.stats.skipped() > 0, "bounds never skipped a single point-iteration");
+
+    let skip_rate = ham.stats.skip_rate();
+    let skip_rate_after_5 = ham.stats.skip_rate_from(5);
+
+    let bench = if smoke { Bench::new(0, 2) } else { Bench::new(1, 5) };
+    let s_off = bench.run("lloyd/bounds=off", || run(BoundsMode::Off));
+    let s_ham = bench.run("lloyd/bounds=hamerly", || run(BoundsMode::Hamerly));
+    let speedup = s_off.mean_ms() / s_ham.mean_ms();
+
+    print_table(
+        &format!("Hamerly pruning — Lloyd loop (m={m}, k={k}, d={d}, iters={iters})"),
+        &["path", "mean ms", "skip rate", "skip rate ≥ iter 5", "speedup"],
+        &[
+            vec![
+                "bounds=off".into(),
+                format!("{:.3}", s_off.mean_ms()),
+                "0.000".into(),
+                "0.000".into(),
+                "1.00x".into(),
+            ],
+            vec![
+                "bounds=hamerly".into(),
+                format!("{:.3}", s_ham.mean_ms()),
+                format!("{skip_rate:.3}"),
+                format!("{skip_rate_after_5:.3}"),
+                format!("{speedup:.2}x"),
+            ],
+        ],
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("hamerly_pruning")),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("d", Json::num(d as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("off_mean_ms", Json::num(s_off.mean_ms())),
+        ("hamerly_mean_ms", Json::num(s_ham.mean_ms())),
+        ("speedup", Json::num(speedup)),
+        ("skip_rate", Json::num(skip_rate)),
+        ("skip_rate_after_iter5", Json::num(skip_rate_after_5)),
+        (
+            "skipped_per_iter",
+            Json::Arr(
+                ham.stats
+                    .per_iter
+                    .iter()
+                    .map(|it| Json::num(it.skipped as f64))
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out = "BENCH_hamerly.json";
+    match std::fs::write(out, json.to_string()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -5,7 +5,7 @@
 //! 2-means until K clusters exist.  Accurate but serial and expensive —
 //! exactly the trade-off §I cites ("highly accurate ... but expensive").
 
-use crate::cluster::engine::Engine;
+use crate::cluster::engine::{BoundsMode, Engine};
 use crate::cluster::kmeans::{lloyd, KMeansConfig, KMeansResult};
 use crate::cluster::{Clusterer, InitMethod};
 use crate::data::Dataset;
@@ -22,11 +22,19 @@ pub struct BisectingKMeans {
     /// Worker threads for the per-split Lloyd runs and the final
     /// inertia sweep.
     pub workers: usize,
+    /// Bounds mode for the per-split Lloyd loops.
+    pub bounds: BoundsMode,
 }
 
 impl Default for BisectingKMeans {
     fn default() -> Self {
-        BisectingKMeans { split_iters: 20, split_trials: 2, seed: 0, workers: 1 }
+        BisectingKMeans {
+            split_iters: 20,
+            split_trials: 2,
+            seed: 0,
+            workers: 1,
+            bounds: BoundsMode::Hamerly,
+        }
     }
 }
 
@@ -71,6 +79,7 @@ impl BisectingKMeans {
                     init: InitMethod::KMeansPlusPlus,
                     seed: self.seed ^ (trial as u64).wrapping_mul(0x9e37_79b9),
                     workers: self.workers,
+                    bounds: self.bounds,
                 };
                 let r = lloyd(&sub, dims, &cfg)?;
                 if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {

@@ -33,6 +33,22 @@
 //! but may differ from the serial fold in the last ulp (float addition
 //! is not associative).  The parity suite in
 //! `rust/tests/engine_parity.rs` pins all of this down.
+//!
+//! **Hamerly bound pruning.**  [`Engine::lloyd_loop`] owns the whole
+//! Lloyd iterate loop.  In [`BoundsMode::Hamerly`] it persists, per
+//! point, the assigned label plus an upper bound on the distance to the
+//! assigned center and a lower bound on the distance to every other
+//! center ([`LloydState`]).  Each update step yields per-center shift
+//! magnitudes; bounds stretch by those shifts, and a point whose upper
+//! bound stays strictly under its lower bound provably kept its argmin
+//! — it skips the full tiled k-sweep (only its carried label feeds the
+//! accumulators).  The bounds live in f64 on *true* Euclidean
+//! distances, and every skip test adds an explicit margin covering the
+//! worst-case f32 rounding of the engine's computed distance expression
+//! (see [`dist_eps`]), so a passed test guarantees the computed argmin
+//! — ties included — cannot have moved.  Labels, counts, sums, centers,
+//! and inertia are therefore bit-identical to [`BoundsMode::Off`] at
+//! every worker count; only the work skipped changes.
 
 use crate::distance::{self, center_norms};
 use crate::util::threadpool::parallel_map;
@@ -76,6 +92,158 @@ pub struct CentroidPass {
     pub counts: Vec<u32>,
     /// K×D per-center coordinate sums.
     pub sums: Vec<f32>,
+}
+
+/// Whether the engine-owned Lloyd loop carries Hamerly distance bounds
+/// across iterations.  Output is bit-identical either way — bounds only
+/// ever skip provably-unchanged argmins — so `Hamerly` is the default
+/// and `Off` is the stateless accumulate-only fallback (and the
+/// yardstick the parity suite compares against).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BoundsMode {
+    /// Stateless sweeps: every point pays the full k-sweep every
+    /// iteration (the pre-bounds engine behavior).
+    Off,
+    /// Per-point upper/lower bounds persisted across iterations skip
+    /// the k-sweep for points whose argmin provably did not change.
+    #[default]
+    Hamerly,
+}
+
+impl BoundsMode {
+    pub fn parse(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "off" | "none" => Ok(BoundsMode::Off),
+            "hamerly" | "on" => Ok(BoundsMode::Hamerly),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown bounds mode '{other}' (expected off|hamerly)"
+            ))),
+        }
+    }
+}
+
+/// Skip counters for one Lloyd iteration (or the final fused pass).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IterSkip {
+    /// Points whose full k-sweep was pruned by the bounds.
+    pub skipped: u64,
+    /// Points processed (always M).
+    pub total: u64,
+}
+
+/// Pruning counters for a whole [`Engine::lloyd_loop`] run.  One entry
+/// per iteration plus one for the final fused pass; empty in
+/// [`BoundsMode::Off`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BoundsStats {
+    pub per_iter: Vec<IterSkip>,
+}
+
+impl BoundsStats {
+    /// Total point-iterations processed (M × passes).
+    pub fn point_iters(&self) -> u64 {
+        self.per_iter.iter().map(|s| s.total).sum()
+    }
+
+    /// Total point-iterations whose k-sweep was skipped.
+    pub fn skipped(&self) -> u64 {
+        self.per_iter.iter().map(|s| s.skipped).sum()
+    }
+
+    /// Fraction of point-iterations skipped over the whole run.
+    pub fn skip_rate(&self) -> f64 {
+        let total = self.point_iters();
+        if total == 0 {
+            0.0
+        } else {
+            self.skipped() as f64 / total as f64
+        }
+    }
+
+    /// [`BoundsStats::skip_rate`] restricted to iterations `from..`
+    /// (0-based) — blob workloads should clear 50% within ~5.
+    pub fn skip_rate_from(&self, from: usize) -> f64 {
+        let tail = self.per_iter.get(from.min(self.per_iter.len())..).unwrap_or(&[]);
+        let total: u64 = tail.iter().map(|s| s.total).sum();
+        if total == 0 {
+            0.0
+        } else {
+            tail.iter().map(|s| s.skipped).sum::<u64>() as f64 / total as f64
+        }
+    }
+}
+
+/// Output of one engine-owned Lloyd run ([`Engine::lloyd_loop`]).
+#[derive(Debug, Clone)]
+pub struct LloydLoopResult {
+    /// K×D converged centers.
+    pub centers: Vec<f32>,
+    /// Nearest-center index per point against the final centers.
+    pub labels: Vec<u32>,
+    /// Points per center against the final centers.
+    pub counts: Vec<u32>,
+    /// Sum of squared distances to assigned centers.
+    pub inertia: f64,
+    /// Lloyd iterations actually performed.
+    pub iterations: usize,
+    /// Bound-pruning counters (empty in [`BoundsMode::Off`]).
+    pub stats: BoundsStats,
+}
+
+/// Per-point Hamerly state persisted across Lloyd iterations: the
+/// assigned label, an upper bound on the true Euclidean distance to the
+/// assigned center, and a lower bound on the true Euclidean distance to
+/// every *other* center, all in f64.  `pnorm` is a conservative upper
+/// bound on each point's norm, fixed for the run, used to size the
+/// f32-rounding margin of the skip test.
+struct LloydState {
+    labels: Vec<u32>,
+    upper: Vec<f64>,
+    lower: Vec<f64>,
+    pnorm: Vec<f64>,
+    /// False until the first full sweep has seeded labels and bounds.
+    warm: bool,
+}
+
+impl LloydState {
+    fn new(engine: &Engine, points: &[f32], dims: usize) -> LloydState {
+        let m = points.len() / dims;
+        let slack = norm_slack(dims);
+        let blocks = engine.blocks(m);
+        let parts = parallel_map(&blocks, engine.workers, |_, &(lo, hi)| {
+            points[lo * dims..hi * dims]
+                .chunks_exact(dims)
+                .map(|p| (distance::dot(p, p) as f64).sqrt() * slack)
+                .collect::<Vec<f64>>()
+        });
+        let mut pnorm = Vec::with_capacity(m);
+        for part in parts {
+            pnorm.extend(part.expect("engine block cannot panic"));
+        }
+        LloydState {
+            labels: vec![0; m],
+            upper: vec![0.0; m],
+            lower: vec![0.0; m],
+            pnorm,
+            warm: false,
+        }
+    }
+}
+
+/// Conservative per-center Euclidean shift magnitudes from one update
+/// step, plus the largest / second-largest for the lower-bound fold
+/// (a point assigned to the argmax center must use the runner-up).
+struct ShiftInfo {
+    shift: Vec<f64>,
+    max1: f64,
+    arg1: usize,
+    max2: f64,
+}
+
+/// One bounded accumulate sweep's outputs.
+struct BoundedPass {
+    pass: CentroidPass,
+    skipped: u64,
 }
 
 /// The blocked multi-threaded assignment engine.  Cheap to construct —
@@ -264,6 +432,307 @@ impl Engine {
             .map(|p| p.expect("engine block cannot panic"))
             .sum()
     }
+
+    /// The engine-owned Lloyd iterate loop: run up to `max_iters`
+    /// update steps from `centers` (stopping early when the largest
+    /// squared center shift falls below `tol`, if `tol > 0`), then one
+    /// fused final pass against the converged centers.
+    ///
+    /// `bounds` selects the per-iteration sweep: [`BoundsMode::Off`] is
+    /// the stateless [`Engine::accumulate_only`] path;
+    /// [`BoundsMode::Hamerly`] persists per-point bounds across
+    /// iterations and skips the k-sweep for points whose argmin
+    /// provably did not change.  Every output — centers, labels,
+    /// counts, inertia, iteration count — is bit-identical between the
+    /// two modes and across worker counts.  `dims` must be > 0 and
+    /// divide both buffer lengths; `centers` must be non-empty.
+    pub fn lloyd_loop(
+        &self,
+        points: &[f32],
+        dims: usize,
+        mut centers: Vec<f32>,
+        max_iters: usize,
+        tol: f32,
+        bounds: BoundsMode,
+    ) -> LloydLoopResult {
+        let m = points.len() / dims;
+        let mut stats = BoundsStats::default();
+        let mut iterations = 0;
+        // with no iterations there is nothing to prune — a cold state
+        // can't skip, so the Hamerly arm would only pay its setup cost
+        let bounds = if max_iters == 0 { BoundsMode::Off } else { bounds };
+        match bounds {
+            BoundsMode::Off => {
+                for _ in 0..max_iters {
+                    iterations += 1;
+                    let pass = self.accumulate_only(points, dims, &centers);
+                    let (max_shift, _) = update_centers(&mut centers, &pass, dims);
+                    if tol > 0.0 && max_shift <= tol {
+                        break;
+                    }
+                }
+                let fin = self.assign_accumulate(points, dims, &centers);
+                LloydLoopResult {
+                    centers,
+                    labels: fin.labels,
+                    counts: fin.counts,
+                    inertia: fin.inertia,
+                    iterations,
+                    stats,
+                }
+            }
+            BoundsMode::Hamerly => {
+                let mut state = LloydState::new(self, points, dims);
+                let mut shifts: Option<ShiftInfo> = None;
+                for _ in 0..max_iters {
+                    iterations += 1;
+                    let sweep = self.bounded_accumulate(
+                        points,
+                        dims,
+                        &centers,
+                        &mut state,
+                        shifts.as_ref(),
+                    );
+                    stats.per_iter.push(IterSkip { skipped: sweep.skipped, total: m as u64 });
+                    let (max_shift, info) = update_centers(&mut centers, &sweep.pass, dims);
+                    shifts = Some(info);
+                    if tol > 0.0 && max_shift <= tol {
+                        break;
+                    }
+                }
+                let (fin, skipped) =
+                    self.bounded_final(points, dims, &centers, &state, shifts.as_ref());
+                stats.per_iter.push(IterSkip { skipped, total: m as u64 });
+                LloydLoopResult {
+                    centers,
+                    labels: fin.labels,
+                    counts: fin.counts,
+                    inertia: fin.inertia,
+                    iterations,
+                    stats,
+                }
+            }
+        }
+    }
+
+    /// One Hamerly-bounded accumulate sweep: fold the pending center
+    /// shifts into every point's bounds, skip points whose bounds prove
+    /// the argmin unchanged, run the tiled k-sweep (tracking the
+    /// second-best distance to reseed the lower bound) only for the
+    /// rest, and accumulate counts/sums in point order — bit-identical
+    /// to [`Engine::accumulate_only`] against the same centers.
+    fn bounded_accumulate(
+        &self,
+        points: &[f32],
+        dims: usize,
+        centers: &[f32],
+        state: &mut LloydState,
+        shifts: Option<&ShiftInfo>,
+    ) -> BoundedPass {
+        let m = points.len() / dims;
+        let k = centers.len() / dims;
+        let cnorm = center_norms(centers, dims);
+        let ctile = self.center_tile_for(dims);
+        let rmax = max_center_norm_bound(&cnorm, dims);
+        let eps = dist_eps(dims);
+        let blocks = self.blocks(m);
+        let (st_labels, st_upper, st_lower, st_pnorm, warm) =
+            (&state.labels, &state.upper, &state.lower, &state.pnorm, state.warm);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            let mut counts = vec![0u32; k];
+            let mut sums = vec![0.0f32; k * dims];
+            let mut labels = st_labels[lo..hi].to_vec();
+            let mut upper = st_upper[lo..hi].to_vec();
+            let mut lower = st_lower[lo..hi].to_vec();
+            let mut skipped = 0u64;
+            let mut surv = [0u32; POINT_CHUNK];
+            let mut best_i = [0u32; POINT_CHUNK];
+            let mut best_d = [f32::INFINITY; POINT_CHUNK];
+            let mut second = [f32::INFINITY; POINT_CHUNK];
+            let mut s = lo;
+            while s < hi {
+                let cap = POINT_CHUNK.min(hi - s);
+                let mut ns = 0usize;
+                for i in 0..cap {
+                    let li = s - lo + i;
+                    if let Some(sh) = shifts {
+                        fold_shift(sh, labels[li], &mut upper[li], &mut lower[li]);
+                    }
+                    let e = margin(eps, st_pnorm[s + i], rmax);
+                    if warm && can_skip(upper[li], lower[li], e) {
+                        skipped += 1;
+                    } else {
+                        surv[ns] = i as u32;
+                        ns += 1;
+                    }
+                }
+                if ns > 0 {
+                    chunk_argmin2_gather(
+                        points,
+                        dims,
+                        centers,
+                        &cnorm,
+                        ctile,
+                        s,
+                        &surv[..ns],
+                        &mut best_i,
+                        &mut best_d,
+                        &mut second,
+                    );
+                    for j in 0..ns {
+                        let li = s - lo + surv[j] as usize;
+                        labels[li] = best_i[j];
+                        let e = margin(eps, st_pnorm[s + surv[j] as usize], rmax);
+                        upper[li] = (best_d[j] as f64 + e).sqrt() * UP64;
+                        lower[li] = ((second[j] as f64 - e).max(0.0)).sqrt() * DOWN64;
+                    }
+                }
+                for i in 0..cap {
+                    let li = s - lo + i;
+                    let c = labels[li] as usize;
+                    counts[c] += 1;
+                    let p = &points[(s + i) * dims..(s + i + 1) * dims];
+                    for (acc, x) in sums[c * dims..(c + 1) * dims].iter_mut().zip(p) {
+                        *acc += x;
+                    }
+                }
+                s += cap;
+            }
+            (counts, sums, labels, upper, lower, skipped)
+        });
+        let mut out = BoundedPass {
+            pass: CentroidPass { counts: vec![0u32; k], sums: vec![0.0f32; k * dims] },
+            skipped: 0,
+        };
+        for (bi, part) in parts.into_iter().enumerate() {
+            let (counts, sums, labels, upper, lower, skipped) =
+                part.expect("engine block cannot panic");
+            let (lo, hi) = blocks[bi];
+            state.labels[lo..hi].copy_from_slice(&labels);
+            state.upper[lo..hi].copy_from_slice(&upper);
+            state.lower[lo..hi].copy_from_slice(&lower);
+            for (acc, x) in out.pass.counts.iter_mut().zip(counts) {
+                *acc += x;
+            }
+            for (acc, x) in out.pass.sums.iter_mut().zip(sums) {
+                *acc += x;
+            }
+            out.skipped += skipped;
+        }
+        state.warm = true;
+        out
+    }
+
+    /// The bounded fused final pass: labels, counts, sums, and inertia
+    /// against the final centers, pruning the k-sweep exactly like
+    /// [`Engine::bounded_accumulate`].  A pruned point keeps its
+    /// carried label and pays a single distance evaluation (the same
+    /// expression the dense sweep would have produced for that center),
+    /// so the pass is bit-identical to [`Engine::assign_accumulate`].
+    fn bounded_final(
+        &self,
+        points: &[f32],
+        dims: usize,
+        centers: &[f32],
+        state: &LloydState,
+        shifts: Option<&ShiftInfo>,
+    ) -> (FusedPass, u64) {
+        let m = points.len() / dims;
+        let k = centers.len() / dims;
+        let cnorm = center_norms(centers, dims);
+        let ctile = self.center_tile_for(dims);
+        let rmax = max_center_norm_bound(&cnorm, dims);
+        let eps = dist_eps(dims);
+        let blocks = self.blocks(m);
+        let (st_labels, st_upper, st_lower, st_pnorm, warm) =
+            (&state.labels, &state.upper, &state.lower, &state.pnorm, state.warm);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            let mut labels = Vec::with_capacity(hi - lo);
+            let mut counts = vec![0u32; k];
+            let mut sums = vec![0.0f32; k * dims];
+            let mut inertia = 0.0f64;
+            let mut skipped = 0u64;
+            let mut surv = [0u32; POINT_CHUNK];
+            let mut chunk_label = [0u32; POINT_CHUNK];
+            let mut chunk_dist = [0.0f32; POINT_CHUNK];
+            let mut best_i = [0u32; POINT_CHUNK];
+            let mut best_d = [f32::INFINITY; POINT_CHUNK];
+            let mut second = [f32::INFINITY; POINT_CHUNK];
+            let mut s = lo;
+            while s < hi {
+                let cap = POINT_CHUNK.min(hi - s);
+                let mut ns = 0usize;
+                for i in 0..cap {
+                    let gi = s + i;
+                    let a = st_labels[gi];
+                    let (mut u, mut l) = (st_upper[gi], st_lower[gi]);
+                    if let Some(sh) = shifts {
+                        fold_shift(sh, a, &mut u, &mut l);
+                    }
+                    let e = margin(eps, st_pnorm[gi], rmax);
+                    if warm && can_skip(u, l, e) {
+                        skipped += 1;
+                        chunk_label[i] = a;
+                        chunk_dist[i] =
+                            point_center_dist_sq(points, dims, gi, centers, &cnorm, a as usize);
+                    } else {
+                        surv[ns] = i as u32;
+                        ns += 1;
+                    }
+                }
+                if ns > 0 {
+                    chunk_argmin2_gather(
+                        points,
+                        dims,
+                        centers,
+                        &cnorm,
+                        ctile,
+                        s,
+                        &surv[..ns],
+                        &mut best_i,
+                        &mut best_d,
+                        &mut second,
+                    );
+                    for j in 0..ns {
+                        chunk_label[surv[j] as usize] = best_i[j];
+                        chunk_dist[surv[j] as usize] = best_d[j];
+                    }
+                }
+                for i in 0..cap {
+                    let c = chunk_label[i] as usize;
+                    labels.push(chunk_label[i]);
+                    counts[c] += 1;
+                    inertia += chunk_dist[i] as f64;
+                    let p = &points[(s + i) * dims..(s + i + 1) * dims];
+                    for (acc, x) in sums[c * dims..(c + 1) * dims].iter_mut().zip(p) {
+                        *acc += x;
+                    }
+                }
+                s += cap;
+            }
+            (labels, counts, sums, inertia, skipped)
+        });
+        let mut out = FusedPass {
+            labels: Vec::with_capacity(m),
+            counts: vec![0u32; k],
+            sums: vec![0.0f32; k * dims],
+            inertia: 0.0,
+        };
+        let mut skipped = 0u64;
+        for part in parts {
+            let (labels, counts, sums, inertia, sk) = part.expect("engine block cannot panic");
+            out.labels.extend(labels);
+            for (acc, x) in out.counts.iter_mut().zip(counts) {
+                *acc += x;
+            }
+            for (acc, x) in out.sums.iter_mut().zip(sums) {
+                *acc += x;
+            }
+            out.inertia += inertia;
+            skipped += sk;
+        }
+        (out, skipped)
+    }
 }
 
 /// The tiled inner kernel: nearest center (index, squared distance) for
@@ -337,6 +806,186 @@ fn chunk_argmin(
             }
             best_i[i] = bi;
             best_d[i] = bd;
+        }
+        t0 = t1;
+    }
+}
+
+/// The Lloyd update step shared by both bounds modes: move every
+/// non-empty center to its accumulated mean (empty clusters keep their
+/// center — the device rule).  Returns the largest squared f32 center
+/// shift — the `tol` signal, computed with exactly the float ops the
+/// pre-bounds loop used so early stopping is bit-compatible — plus
+/// conservative f64 Euclidean shift magnitudes for the bound fold.
+fn update_centers(centers: &mut [f32], pass: &CentroidPass, dims: usize) -> (f32, ShiftInfo) {
+    let k = centers.len() / dims;
+    let slack = shift_slack(dims);
+    let mut max_shift = 0.0f32;
+    let mut info = ShiftInfo { shift: vec![0.0f64; k], max1: 0.0, arg1: usize::MAX, max2: 0.0 };
+    for c in 0..k {
+        if pass.counts[c] == 0 {
+            continue; // empty cluster keeps its center (device rule)
+        }
+        let inv = 1.0 / pass.counts[c] as f32;
+        let mut s32 = 0.0f32;
+        let mut s64 = 0.0f64;
+        for j in 0..dims {
+            let new = pass.sums[c * dims + j] * inv;
+            let old = centers[c * dims + j];
+            s32 += (new - old) * (new - old);
+            let d = new as f64 - old as f64;
+            s64 += d * d;
+            centers[c * dims + j] = new;
+        }
+        max_shift = max_shift.max(s32);
+        info.shift[c] = s64.sqrt() * slack;
+    }
+    for (c, &sv) in info.shift.iter().enumerate() {
+        if sv > info.max1 {
+            info.max2 = info.max1;
+            info.max1 = sv;
+            info.arg1 = c;
+        } else if sv > info.max2 {
+            info.max2 = sv;
+        }
+    }
+    (max_shift, info)
+}
+
+/// Stretch one point's bounds by the pending center shifts (triangle
+/// inequality): the upper bound grows by its own center's shift, the
+/// lower bound shrinks by the largest shift among the *other* centers.
+/// The f64 nudges keep both directions conservative under rounding.
+#[inline]
+fn fold_shift(sh: &ShiftInfo, label: u32, upper: &mut f64, lower: &mut f64) {
+    let a = label as usize;
+    *upper = (*upper + sh.shift[a]) * UP64;
+    let other = if a == sh.arg1 { sh.max2 } else { sh.max1 };
+    *lower = ((*lower - other).max(0.0)) * DOWN64;
+}
+
+/// The Hamerly skip test on squared bounds, with `2e` of margin so the
+/// guarantee survives the f32 rounding of the computed distances: it
+/// implies `d̂(p, a) < d̂(p, c)` strictly for every other center `c`,
+/// so the dense sweep (strict `<`, lowest index wins) would return the
+/// carried label — ties included.
+#[inline]
+fn can_skip(upper: f64, lower: f64, e: f64) -> bool {
+    upper * upper + 2.0 * e < lower * lower
+}
+
+/// Absolute error margin for one computed squared distance: the engine
+/// evaluates `|p|² − 2p·c + |c|²` entirely in f32, whose worst-case
+/// absolute error is below `(D+4)·2⁻²⁴·(‖p‖+‖c‖)²`; [`dist_eps`] gives
+/// better than 2x headroom over that.
+#[inline]
+fn margin(eps: f64, pnorm: f64, rmax: f64) -> f64 {
+    let t = pnorm + rmax;
+    eps * t * t
+}
+
+/// Per-dimension f32 rounding coefficient for [`margin`] (unit
+/// roundoff 2⁻²⁴, doubled, with constant-term headroom).
+fn dist_eps(dims: usize) -> f64 {
+    (dims as f64 + 16.0) * (2.0f64).powi(-23)
+}
+
+/// Inflation factor turning a computed f32 norm into an upper bound on
+/// the true norm.
+fn norm_slack(dims: usize) -> f64 {
+    1.0 + (dims as f64 + 8.0) * (2.0f64).powi(-24)
+}
+
+/// Inflation factor covering the f64 rounding of the shift-magnitude
+/// accumulation in [`update_centers`].
+fn shift_slack(dims: usize) -> f64 {
+    1.0 + (dims as f64 + 8.0) * (2.0f64).powi(-52)
+}
+
+/// Multiplicative f64 nudges: round a conservative bound further up /
+/// down so f64 arithmetic on the bounds themselves can never flip the
+/// direction of the guarantee (f64 unit roundoff is 2⁻⁵³ < 1e-15).
+const UP64: f64 = 1.0 + 1e-15;
+const DOWN64: f64 = 1.0 - 1e-15;
+
+/// Upper bound on the largest center Euclidean norm, from the computed
+/// f32 `|c|²` values.
+fn max_center_norm_bound(cnorm: &[f32], dims: usize) -> f64 {
+    let slack = norm_slack(dims);
+    cnorm.iter().fold(0.0f64, |acc, &c| acc.max((c as f64).sqrt() * slack))
+}
+
+/// Squared distance from point row `i` to center `c`, evaluated with
+/// exactly the dense sweep's expression (all three terms through
+/// [`distance::dot`], clamped at 0) so a pruned point's distance is
+/// bit-identical to what the full k-sweep would have kept for it.
+#[inline]
+fn point_center_dist_sq(
+    points: &[f32],
+    dims: usize,
+    i: usize,
+    centers: &[f32],
+    cnorm: &[f32],
+    c: usize,
+) -> f32 {
+    let p = &points[i * dims..(i + 1) * dims];
+    let pn = distance::dot(p, p);
+    let cc = &centers[c * dims..(c + 1) * dims];
+    (pn - 2.0 * distance::dot(p, cc) + cnorm[c]).max(0.0)
+}
+
+/// [`chunk_argmin`] for a scattered subset of one chunk's points, also
+/// tracking the second-best distance (the Hamerly lower-bound seed).
+/// `surv[j]` are offsets within the chunk starting at row `s`; results
+/// land at position `j` of the output arrays.  Tiles are visited in the
+/// same increasing center order under the same strict `<`, so labels
+/// and best distances are bit-identical to the dense sweep.
+#[allow(clippy::too_many_arguments)]
+fn chunk_argmin2_gather(
+    points: &[f32],
+    dims: usize,
+    centers: &[f32],
+    cnorm: &[f32],
+    ctile: usize,
+    s: usize,
+    surv: &[u32],
+    best_i: &mut [u32; POINT_CHUNK],
+    best_d: &mut [f32; POINT_CHUNK],
+    second: &mut [f32; POINT_CHUNK],
+) {
+    let k = cnorm.len();
+    let n = surv.len();
+    let mut pn = [0.0f32; POINT_CHUNK];
+    for j in 0..n {
+        let row = s + surv[j] as usize;
+        let p = &points[row * dims..(row + 1) * dims];
+        pn[j] = distance::dot(p, p);
+        best_i[j] = 0;
+        best_d[j] = f32::INFINITY;
+        second[j] = f32::INFINITY;
+    }
+    let mut t0 = 0usize;
+    while t0 < k {
+        let t1 = (t0 + ctile).min(k);
+        let tile = &centers[t0 * dims..t1 * dims];
+        let tnorm = &cnorm[t0..t1];
+        for j in 0..n {
+            let row = s + surv[j] as usize;
+            let p = &points[row * dims..(row + 1) * dims];
+            let (mut bi, mut bd, mut b2) = (best_i[j], best_d[j], second[j]);
+            for (tc, cc) in tile.chunks_exact(dims).enumerate() {
+                let d = (pn[j] - 2.0 * distance::dot(p, cc) + tnorm[tc]).max(0.0);
+                if d < bd {
+                    b2 = bd;
+                    bd = d;
+                    bi = (t0 + tc) as u32;
+                } else if d < b2 {
+                    b2 = d;
+                }
+            }
+            best_i[j] = bi;
+            best_d[j] = bd;
+            second[j] = b2;
         }
         t0 = t1;
     }
@@ -465,5 +1114,87 @@ mod tests {
         assert!(pass.labels.is_empty());
         assert_eq!(pass.counts, vec![0]);
         assert_eq!(pass.inertia, 0.0);
+    }
+
+    fn assert_loop_eq(a: &LloydLoopResult, b: &LloydLoopResult, ctx: &str) {
+        assert_eq!(a.labels, b.labels, "{ctx}");
+        assert_eq!(a.counts, b.counts, "{ctx}");
+        assert_eq!(a.centers, b.centers, "{ctx}");
+        assert_eq!(a.inertia.to_bits(), b.inertia.to_bits(), "{ctx}");
+        assert_eq!(a.iterations, b.iterations, "{ctx}");
+    }
+
+    #[test]
+    fn lloyd_loop_bounds_modes_agree() {
+        for dims in [2usize, 7] {
+            let pts = cloud(500, dims, 40 + dims as u64);
+            let init = pts[..11 * dims].to_vec();
+            for workers in [1usize, 4] {
+                let e = Engine::with_blocking(workers, 96, 4);
+                let off = e.lloyd_loop(&pts, dims, init.clone(), 10, 0.0, BoundsMode::Off);
+                let ham = e.lloyd_loop(&pts, dims, init.clone(), 10, 0.0, BoundsMode::Hamerly);
+                assert_loop_eq(&ham, &off, &format!("dims={dims} workers={workers}"));
+                assert!(off.stats.per_iter.is_empty());
+                assert_eq!(ham.stats.point_iters(), 500 * (ham.iterations as u64 + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_iteration_loop_matches_fused_pass() {
+        // max_iters = 0: both modes reduce to one full fused pass.
+        let pts = cloud(300, 3, 12);
+        let centers = pts[..9 * 3].to_vec();
+        let e = Engine::new(2);
+        let reference = e.assign_accumulate(&pts, 3, &centers);
+        for bounds in [BoundsMode::Off, BoundsMode::Hamerly] {
+            let out = e.lloyd_loop(&pts, 3, centers.clone(), 0, 0.0, bounds);
+            assert_eq!(out.labels, reference.labels, "{bounds:?}");
+            assert_eq!(out.counts, reference.counts, "{bounds:?}");
+            assert_eq!(out.inertia.to_bits(), reference.inertia.to_bits(), "{bounds:?}");
+            assert_eq!(out.centers, centers, "{bounds:?}");
+            assert_eq!(out.iterations, 0, "{bounds:?}");
+        }
+    }
+
+    #[test]
+    fn single_center_skips_everything_after_warmup() {
+        // k = 1: the lower bound is +inf, so every point-iteration
+        // after the seeding sweep must be pruned.
+        let pts = cloud(400, 3, 77);
+        let init = pts[..3].to_vec();
+        let out = Engine::new(2).lloyd_loop(&pts, 3, init, 6, 0.0, BoundsMode::Hamerly);
+        assert_eq!(out.iterations, 6);
+        assert_eq!(out.stats.per_iter[0].skipped, 0, "cold sweep cannot skip");
+        for it in &out.stats.per_iter[1..] {
+            assert_eq!(it.skipped, 400, "warm k=1 must skip every point");
+        }
+        assert!(out.labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn bounds_mode_parse() {
+        assert_eq!(BoundsMode::parse("off").unwrap(), BoundsMode::Off);
+        assert_eq!(BoundsMode::parse("hamerly").unwrap(), BoundsMode::Hamerly);
+        assert_eq!(BoundsMode::parse("on").unwrap(), BoundsMode::Hamerly);
+        assert!(BoundsMode::parse("elkan").is_err());
+        assert_eq!(BoundsMode::default(), BoundsMode::Hamerly);
+    }
+
+    #[test]
+    fn skip_rate_accounting() {
+        let stats = BoundsStats {
+            per_iter: vec![
+                IterSkip { skipped: 0, total: 100 },
+                IterSkip { skipped: 50, total: 100 },
+                IterSkip { skipped: 100, total: 100 },
+            ],
+        };
+        assert_eq!(stats.point_iters(), 300);
+        assert_eq!(stats.skipped(), 150);
+        assert!((stats.skip_rate() - 0.5).abs() < 1e-12);
+        assert!((stats.skip_rate_from(1) - 0.75).abs() < 1e-12);
+        assert_eq!(stats.skip_rate_from(99), 0.0);
+        assert_eq!(BoundsStats::default().skip_rate(), 0.0);
     }
 }

@@ -9,7 +9,7 @@
 //! squared-euclidean assignment, argmin ties to the lowest index, and
 //! empty clusters keeping their previous center.
 
-use crate::cluster::engine::Engine;
+use crate::cluster::engine::{BoundsMode, Engine};
 use crate::cluster::init::{initial_centers, InitMethod};
 use crate::error::{Error, Result};
 
@@ -29,6 +29,10 @@ pub struct KMeansConfig {
     /// baseline serial (the paper's "traditional Kmeans" is a single
     /// core); the engine's output is bit-identical at any value.
     pub workers: usize,
+    /// Hamerly bound pruning for the engine's Lloyd loop (default on).
+    /// Output is bit-identical to `BoundsMode::Off` — bounds only ever
+    /// skip provably-unchanged argmins.
+    pub bounds: BoundsMode,
 }
 
 impl Default for KMeansConfig {
@@ -40,13 +44,15 @@ impl Default for KMeansConfig {
             init: InitMethod::KMeansPlusPlus,
             seed: 0,
             workers: 1,
+            bounds: BoundsMode::Hamerly,
         }
     }
 }
 
 impl KMeansConfig {
     /// Config matching the AOT device executables: FirstK init, fixed
-    /// iteration count, no early stop.
+    /// iteration count, no early stop.  Bounds stay on — pruning is
+    /// bit-identical, so device parity is unaffected.
     pub fn device_parity(k: usize, iters: usize) -> Self {
         KMeansConfig {
             k,
@@ -55,6 +61,7 @@ impl KMeansConfig {
             init: InitMethod::FirstK,
             seed: 0,
             workers: 1,
+            bounds: BoundsMode::Hamerly,
         }
     }
 }
@@ -87,7 +94,7 @@ pub fn lloyd(points: &[f32], dims: usize, cfg: &KMeansConfig) -> Result<KMeansRe
         return Err(Error::Config(format!("k={} invalid for {m} points", cfg.k)));
     }
     let centers = initial_centers(points, dims, cfg.k, cfg.init, cfg.seed)?;
-    lloyd_from_parallel(points, dims, centers, cfg.max_iters, cfg.tol, cfg.workers)
+    lloyd_from_with(points, dims, centers, cfg.max_iters, cfg.tol, cfg.workers, cfg.bounds)
 }
 
 /// Lloyd's from explicit initial centers (used by the pipeline's global
@@ -104,62 +111,45 @@ pub fn lloyd_from(
 }
 
 /// Lloyd's from explicit initial centers on the blocked multi-threaded
-/// assignment engine.  Each iteration is one accumulate-only sweep
-/// (counts + sums, no per-point buffers); the old separate assign pass
-/// and post-convergence per-point re-scan are gone — one final fused
-/// pass yields labels, counts, and inertia against the converged
-/// centers in a single sweep.
+/// assignment engine, with the default [`BoundsMode`] (Hamerly).  See
+/// [`lloyd_from_with`] for the explicit-bounds variant.
 pub fn lloyd_from_parallel(
     points: &[f32],
     dims: usize,
-    mut centers: Vec<f32>,
+    centers: Vec<f32>,
     max_iters: usize,
     tol: f32,
     workers: usize,
 ) -> Result<KMeansResult> {
-    let k = centers.len() / dims;
-    if centers.len() % dims != 0 || k == 0 {
+    lloyd_from_with(points, dims, centers, max_iters, tol, workers, BoundsMode::default())
+}
+
+/// Lloyd's from explicit initial centers on the engine-owned iterate
+/// loop ([`Engine::lloyd_loop`]).  With `BoundsMode::Off` every
+/// iteration is one accumulate-only sweep (counts + sums, no per-point
+/// buffers) and one fused final pass yields labels, counts, and inertia
+/// against the converged centers; with `BoundsMode::Hamerly` the engine
+/// additionally carries per-point distance bounds across iterations so
+/// stable points skip the k-sweep — output is bit-identical either way.
+pub fn lloyd_from_with(
+    points: &[f32],
+    dims: usize,
+    centers: Vec<f32>,
+    max_iters: usize,
+    tol: f32,
+    workers: usize,
+    bounds: BoundsMode,
+) -> Result<KMeansResult> {
+    if dims == 0 || centers.len() % dims != 0 || centers.is_empty() {
         return Err(Error::Config("centers buffer not a multiple of dims".into()));
     }
-    let engine = Engine::new(workers);
-    let mut iterations = 0;
-
-    for _ in 0..max_iters {
-        iterations += 1;
-        // accumulate-only: the update step needs counts/sums, not the
-        // per-point labels — skip materializing them every iteration
-        let pass = engine.accumulate_only(points, dims, &centers);
-
-        // Update step; track the largest center movement for tol.
-        let mut max_shift = 0.0f32;
-        for c in 0..k {
-            if pass.counts[c] == 0 {
-                continue; // empty cluster keeps its center (device rule)
-            }
-            let inv = 1.0 / pass.counts[c] as f32;
-            let mut shift = 0.0f32;
-            for j in 0..dims {
-                let new = pass.sums[c * dims + j] * inv;
-                let old = centers[c * dims + j];
-                shift += (new - old) * (new - old);
-                centers[c * dims + j] = new;
-            }
-            max_shift = max_shift.max(shift);
-        }
-        if tol > 0.0 && max_shift <= tol {
-            break;
-        }
-    }
-
-    // One fused pass against the final centers (mirrors model.py's
-    // trailing assignment) — labels, counts, and inertia in one sweep.
-    let fin = engine.assign_accumulate(points, dims, &centers);
+    let out = Engine::new(workers).lloyd_loop(points, dims, centers, max_iters, tol, bounds);
     Ok(KMeansResult {
-        centers,
-        labels: fin.labels,
-        counts: fin.counts,
-        inertia: fin.inertia,
-        iterations,
+        centers: out.centers,
+        labels: out.labels,
+        counts: out.counts,
+        inertia: out.inertia,
+        iterations: out.iterations,
     })
 }
 
@@ -301,6 +291,25 @@ mod tests {
         assert_eq!(serial.labels, par.labels);
         assert_eq!(serial.counts, par.counts);
         assert_eq!(serial.inertia.to_bits(), par.inertia.to_bits());
+    }
+
+    #[test]
+    fn bounds_off_and_on_agree_end_to_end() {
+        // full path (k-means++ init, tol early stop): pruning must not
+        // change a single bit of the result
+        let pts = two_blobs(180);
+        for k in [1usize, 3, 7] {
+            let base = KMeansConfig { k, workers: 2, ..Default::default() };
+            let off = lloyd(&pts, 2, &KMeansConfig { bounds: BoundsMode::Off, ..base.clone() })
+                .unwrap();
+            let ham =
+                lloyd(&pts, 2, &KMeansConfig { bounds: BoundsMode::Hamerly, ..base }).unwrap();
+            assert_eq!(off.centers, ham.centers, "k={k}");
+            assert_eq!(off.labels, ham.labels, "k={k}");
+            assert_eq!(off.counts, ham.counts, "k={k}");
+            assert_eq!(off.inertia.to_bits(), ham.inertia.to_bits(), "k={k}");
+            assert_eq!(off.iterations, ham.iterations, "k={k}");
+        }
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! the ablation benches: how close does the paper's sample-then-cluster
 //! scheme get to a streaming approximation at similar cost?
 
-use crate::cluster::engine::Engine;
+use crate::cluster::engine::{BoundsMode, Engine};
 use crate::cluster::init::{initial_centers, InitMethod};
 use crate::cluster::kmeans::KMeansResult;
 use crate::cluster::Clusterer;
@@ -20,6 +20,11 @@ pub struct MiniBatchKMeans {
     pub seed: u64,
     /// Worker threads for the final full-dataset engine sweep.
     pub workers: usize,
+    /// Bounds mode for the final engine sweep.  A single cold sweep has
+    /// no carried bounds to prune with, so both modes do the same full
+    /// pass today; the knob keeps the engine API uniform (and covers a
+    /// future Lloyd refinement stage).
+    pub bounds: BoundsMode,
 }
 
 impl Default for MiniBatchKMeans {
@@ -30,6 +35,7 @@ impl Default for MiniBatchKMeans {
             init: InitMethod::KMeansPlusPlus,
             seed: 0,
             workers: 1,
+            bounds: BoundsMode::Hamerly,
         }
     }
 }
@@ -62,15 +68,16 @@ impl MiniBatchKMeans {
             }
         }
 
-        // final full assignment: one fused engine sweep yields labels,
-        // counts, and inertia together (the old code paid two separate
-        // O(M·K·D) scans here)
-        let pass = Engine::new(self.workers).assign_accumulate(points, dims, &centers);
+        // final full assignment through the engine-owned loop with zero
+        // Lloyd iterations: one fused sweep yields labels, counts, and
+        // inertia together (the old code paid two separate O(M·K·D)
+        // scans here), honoring the bounds knob
+        let out = Engine::new(self.workers).lloyd_loop(points, dims, centers, 0, 0.0, self.bounds);
         Ok(KMeansResult {
-            centers,
-            labels: pass.labels,
-            counts: pass.counts,
-            inertia: pass.inertia,
+            centers: out.centers,
+            labels: out.labels,
+            counts: out.counts,
+            inertia: out.inertia,
             iterations: self.iters,
         })
     }

@@ -14,7 +14,7 @@ pub mod init;
 pub mod kmeans;
 pub mod minibatch;
 
-pub use engine::{CentroidPass, Engine, FusedPass};
+pub use engine::{BoundsMode, BoundsStats, CentroidPass, Engine, FusedPass, LloydLoopResult};
 pub use init::InitMethod;
 pub use kmeans::{lloyd, KMeansConfig, KMeansResult};
 

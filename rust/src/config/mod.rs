@@ -8,6 +8,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::cluster::BoundsMode;
 use crate::error::{Error, Result};
 use crate::partition::Scheme;
 use crate::pipeline::PipelineConfig;
@@ -197,6 +198,10 @@ impl AppConfig {
             "pipeline.weighted_global" => {
                 self.pipeline.weighted_global = value.as_bool().ok_or_else(|| bad("bool"))?;
             }
+            "pipeline.bounds" => {
+                self.pipeline.bounds =
+                    BoundsMode::parse(value.as_str().ok_or_else(|| bad("string"))?)?;
+            }
             "pipeline.seed" => {
                 self.pipeline.seed = value.as_usize().ok_or_else(|| bad("usize"))? as u64;
             }
@@ -283,6 +288,7 @@ mod tests {
             final_k = 5
             num_groups = 12
             weighted_global = true
+            bounds = "off"
             [server]
             queue_depth = 3
             "#,
@@ -292,7 +298,10 @@ mod tests {
         assert_eq!(cfg.pipeline.final_k, 5);
         assert_eq!(cfg.pipeline.num_groups, Some(12));
         assert!(cfg.pipeline.weighted_global);
+        assert_eq!(cfg.pipeline.bounds, BoundsMode::Off);
         assert_eq!(cfg.queue_depth, 3);
+        let t = parse_toml_lite("[pipeline]\nbounds = \"banana\"\n").unwrap();
+        assert!(AppConfig::from_table(&t).is_err());
     }
 
     #[test]

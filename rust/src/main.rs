@@ -14,6 +14,7 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
+use parsample::cluster::BoundsMode;
 use parsample::config::AppConfig;
 use parsample::coordinator::SchedulerConfig;
 use parsample::data::{builtin, loader, synthetic, Dataset};
@@ -62,8 +63,10 @@ fn print_usage() {
          commands:\n\
          \x20 cluster   --data <iris|seeds|file.csv|file.bin> --k K [--scheme equal|unequal|random]\n\
          \x20           [--groups G] [--compression C] [--backend native|pjrt] [--workers W]\n\
-         \x20           [--artifacts DIR] [--seed S] [--config cfg.toml] [--eval] [--out FILE]\n\
-         \x20 baseline  --data ... --k K [--iters N] [--seed S] [--workers W] [--eval]\n\
+         \x20           [--bounds off|hamerly] [--artifacts DIR] [--seed S] [--config cfg.toml]\n\
+         \x20           [--eval] [--out FILE]\n\
+         \x20 baseline  --data ... --k K [--iters N] [--seed S] [--workers W]\n\
+         \x20           [--bounds off|hamerly] [--eval]\n\
          \x20           traditional k-means (single Lloyd loop on the blocked engine)\n\
          \x20 generate  --size M [--seed S] --out FILE[.csv|.bin]          paper synthetic workload\n\
          \x20 partition --data ... --groups G [--scheme ...]               dump group sizes\n\
@@ -72,7 +75,10 @@ fn print_usage() {
          --workers W sets the thread count of the blocked assignment engine that runs\n\
          every Lloyd assign/accumulate sweep (default: all cores for cluster/serve,\n\
          1 for baseline).  Engine results are bit-identical at any worker count\n\
-         (the optional --weighted-global stage chunks by worker and is not)."
+         (the optional --weighted-global stage chunks by worker and is not).\n\
+         --bounds hamerly (default) carries per-point distance bounds across Lloyd\n\
+         iterations so converged points skip the k-sweep; output is bit-identical\n\
+         to --bounds off — only the wall time changes."
     );
 }
 
@@ -169,6 +175,7 @@ fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
         .scale(app.pipeline.scale)
         .weighted_global(app.pipeline.weighted_global)
         .global_iters(app.pipeline.global_iters)
+        .bounds(app.pipeline.bounds)
         .seed(app.pipeline.seed);
     if let Some(g) = app.pipeline.num_groups {
         b = b.num_groups(g);
@@ -193,6 +200,9 @@ fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
     }
     if let Some(w) = flags.usize("workers")? {
         b = b.workers(w);
+    }
+    if let Some(bm) = flags.get("bounds") {
+        b = b.bounds(BoundsMode::parse(bm)?);
     }
     if let Some(s) = flags.usize("seed")? {
         b = b.seed(s as u64);
@@ -253,8 +263,13 @@ fn cmd_baseline(flags: &Flags) -> Result<()> {
     let iters = flags.usize("iters")?.unwrap_or(50);
     let seed = flags.usize("seed")?.unwrap_or(0) as u64;
     let workers = flags.usize("workers")?.unwrap_or(1);
+    let bounds = match flags.get("bounds") {
+        Some(s) => BoundsMode::parse(s)?,
+        None => BoundsMode::default(),
+    };
     let t0 = std::time::Instant::now();
-    let r = parsample::pipeline::traditional_kmeans_workers(&data, k, iters, seed, 5, workers)?;
+    let r =
+        parsample::pipeline::traditional_kmeans_workers(&data, k, iters, seed, 5, workers, bounds)?;
     println!(
         "traditional kmeans: {} points, k={k}, {} iters | inertia {:.6} | {:.1} ms",
         data.len(),

@@ -13,8 +13,8 @@
 use std::cell::RefCell;
 use std::path::PathBuf;
 
-use crate::cluster::engine::Engine;
-use crate::cluster::kmeans::{lloyd_from_parallel, KMeansResult};
+use crate::cluster::engine::{BoundsMode, Engine};
+use crate::cluster::kmeans::{lloyd_from_with, KMeansResult};
 use crate::coordinator::batcher::{Batcher, LocalResult};
 use crate::data::scaling::{MinMaxScaler, Scaler};
 use crate::data::Dataset;
@@ -40,7 +40,8 @@ pub const MAX_NATIVE_GROUP: usize = 2048;
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
     pub scheme: Scheme,
-    /// Sub-regions G (None = auto: M/5000 clamped to [2, 256]).
+    /// Sub-regions G (None = auto: M/1500 clamped to [2, 4096] — see
+    /// [`PipelineConfig::groups_for`]).
     pub num_groups: Option<usize>,
     /// The paper's compression value c.
     pub compression: f32,
@@ -58,6 +59,9 @@ pub struct PipelineConfig {
     pub global_iters: usize,
     /// Weight global clustering by local-center member counts.
     pub weighted_global: bool,
+    /// Hamerly bound pruning for the (unweighted) global-stage Lloyd
+    /// loop on the blocked engine; bit-identical output either way.
+    pub bounds: BoundsMode,
     pub seed: u64,
 }
 
@@ -74,6 +78,7 @@ impl Default for PipelineConfig {
             workers: default_workers(),
             global_iters: 20,
             weighted_global: false,
+            bounds: BoundsMode::Hamerly,
             seed: 0,
         }
     }
@@ -165,6 +170,11 @@ impl PipelineConfigBuilder {
         self
     }
 
+    pub fn bounds(mut self, b: BoundsMode) -> Self {
+        self.cfg.bounds = b;
+        self
+    }
+
     pub fn global_iters(mut self, it: usize) -> Self {
         self.cfg.global_iters = it;
         self
@@ -190,7 +200,9 @@ pub struct PipelineResult {
     pub labels: Vec<u32>,
     /// Points per final cluster.
     pub counts: Vec<u32>,
-    /// Sum of squared distances in the scaled space.
+    /// Sum of squared distances to the final centers, in the original
+    /// (pre-scaling) coordinates — scaling only shapes the partition
+    /// landmarks; step 7 assigns in original space.
     pub inertia: f64,
     /// Pooled local-center count (the sample the global stage saw).
     pub local_centers: usize,
@@ -460,14 +472,16 @@ impl SubclusterPipeline {
             )
         } else {
             // unit weights: the fused blocked engine path (no per-point
-            // weight multiplies, tiled centers, fixed global_iters)
-            lloyd_from_parallel(
+            // weight multiplies, tiled centers, fixed global_iters),
+            // with Hamerly pruning per the pipeline's bounds knob
+            lloyd_from_with(
                 pooled,
                 dims,
                 init.to_vec(),
                 self.cfg.global_iters,
                 0.0,
                 self.cfg.workers,
+                self.cfg.bounds,
             )
         }
     }
@@ -520,7 +534,7 @@ fn pack_global(
 /// 1000), so its assignment step fans out across the worker pool with
 /// per-chunk partial sums reduced on the coordinator thread.  Only the
 /// `weighted_global` path runs through here; the unit-weight global
-/// stage uses the blocked [`Engine`] via [`lloyd_from_parallel`].
+/// stage uses the blocked [`Engine`] via [`lloyd_from_with`].
 /// Semantics identical to the device: empty centers keep their value,
 /// argmin ties to the lowest index, weights scale sums/counts/inertia.
 pub fn weighted_lloyd_parallel(
@@ -742,12 +756,13 @@ pub fn traditional_kmeans_restarts(
     seed: u64,
     restarts: u64,
 ) -> Result<KMeansResult> {
-    traditional_kmeans_workers(data, k, max_iters, seed, restarts, 1)
+    traditional_kmeans_workers(data, k, max_iters, seed, restarts, 1, BoundsMode::default())
 }
 
-/// [`traditional_kmeans_restarts`] with the engine worker knob exposed
-/// (the CLI `baseline --workers` path; results are bit-identical at
-/// every worker count).
+/// [`traditional_kmeans_restarts`] with the engine worker and bounds
+/// knobs exposed (the CLI `baseline --workers/--bounds` path; results
+/// are bit-identical at every worker count and in both bounds modes).
+#[allow(clippy::too_many_arguments)]
 pub fn traditional_kmeans_workers(
     data: &Dataset,
     k: usize,
@@ -755,6 +770,7 @@ pub fn traditional_kmeans_workers(
     seed: u64,
     restarts: u64,
     workers: usize,
+    bounds: BoundsMode,
 ) -> Result<KMeansResult> {
     let mut best: Option<KMeansResult> = None;
     for trial in 0..restarts.max(1) {
@@ -765,6 +781,7 @@ pub fn traditional_kmeans_workers(
             init: crate::cluster::InitMethod::KMeansPlusPlus,
             seed: seed ^ trial.wrapping_mul(0x9e37_79b9_7f4a_7c15),
             workers,
+            bounds,
         };
         let r = crate::cluster::lloyd(data.as_slice(), data.dims(), &cfg)?;
         if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {
@@ -886,6 +903,26 @@ mod tests {
         assert_eq!(r.counts.iter().sum::<u32>(), 800);
         let base = traditional_kmeans(&data, 4, 50, 0).unwrap();
         assert!(r.inertia < base.inertia * 3.0 + 1e-3);
+    }
+
+    #[test]
+    fn bounds_knob_does_not_change_pipeline_output() {
+        let data = blobs(900, 4, 9);
+        let mk = |b: BoundsMode| {
+            PipelineConfig::builder()
+                .final_k(4)
+                .num_groups(5)
+                .compression(4.0)
+                .bounds(b)
+                .build()
+                .unwrap()
+        };
+        let off = SubclusterPipeline::new(mk(BoundsMode::Off)).run(&data).unwrap();
+        let ham = SubclusterPipeline::new(mk(BoundsMode::Hamerly)).run(&data).unwrap();
+        assert_eq!(off.labels, ham.labels);
+        assert_eq!(off.counts, ham.counts);
+        assert_eq!(off.centers, ham.centers);
+        assert_eq!(off.inertia.to_bits(), ham.inertia.to_bits());
     }
 
     #[test]

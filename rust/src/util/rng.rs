@@ -66,7 +66,11 @@ impl Pcg32 {
         loop {
             let x = self.next_u64();
             let (hi, lo) = mul_u64(x, bound);
-            if lo >= bound || lo >= x.wrapping_neg() % bound {
+            // Lemire's rejection threshold is 2^64 mod bound — a
+            // function of the bound alone, never of the sample (the
+            // `lo >= bound` shortcut just skips the division, since
+            // the threshold is < bound).
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
                 return hi as usize;
             }
         }
@@ -121,20 +125,34 @@ impl Pcg32 {
 
     /// Draw an index with probability proportional to `weights`
     /// (used by k-means++ seeding). Returns None if all weights are 0.
+    /// Never returns a zero-weight index — k-means++ must not seed on
+    /// an already-chosen duplicate point.
     pub fn weighted_index(&mut self, weights: &[f32]) -> Option<usize> {
         let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
         if total <= 0.0 {
             return None;
         }
-        let mut target = self.next_f64() * total;
-        for (i, &w) in weights.iter().enumerate() {
-            target -= w.max(0.0) as f64;
+        pick_weighted(self.next_f64() * total, weights)
+    }
+}
+
+/// The cumulative-weight walk behind [`Pcg32::weighted_index`], split
+/// out so the f64-rounding fallback is directly testable.  When
+/// rounding leaves `target > 0` after the full walk, land on the last
+/// *positive*-weight index, never a zero-weight tail entry.
+fn pick_weighted(mut target: f64, weights: &[f32]) -> Option<usize> {
+    let mut last_pos = None;
+    for (i, &w) in weights.iter().enumerate() {
+        let w = w.max(0.0) as f64;
+        if w > 0.0 {
+            last_pos = Some(i);
+            target -= w;
             if target <= 0.0 {
                 return Some(i);
             }
         }
-        Some(weights.len() - 1)
     }
+    last_pos
 }
 
 #[inline]
@@ -186,6 +204,49 @@ mod tests {
     }
 
     #[test]
+    fn below_uses_bound_rejection_threshold() {
+        // Regression for the Lemire threshold bug: the rejection cutoff
+        // is 2^64 mod bound — a function of the bound alone, not of the
+        // sample.  Replay the raw 64-bit stream through an independent
+        // textbook implementation and demand draw-for-draw agreement
+        // (large bounds reject often, so any sample-dependent cutoff
+        // desynchronizes within a few draws).
+        for &bound in &[3usize, 5, 7, usize::MAX / 3 * 2 + 1, usize::MAX - 2] {
+            let mut a = Pcg32::seeded(99);
+            let mut b = Pcg32::seeded(99);
+            let bb = bound as u64;
+            let threshold = bb.wrapping_neg() % bb;
+            for draw in 0..2_000 {
+                let want = loop {
+                    let x = b.next_u64();
+                    let (hi, lo) = mul_u64(x, bb);
+                    if lo >= threshold {
+                        break hi as usize;
+                    }
+                };
+                assert_eq!(a.below(bound), want, "bound={bound} draw={draw}");
+            }
+        }
+    }
+
+    #[test]
+    fn below_large_bound_is_uniform() {
+        // Large bounds exercise the rejection path hard; quartile
+        // counts of 40k draws must stay within ~5 sigma of uniform.
+        let bound = usize::MAX / 4 * 3;
+        let quarter = bound / 4 + 1;
+        let mut r = Pcg32::seeded(21);
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            let v = r.below(bound);
+            counts[(v / quarter).min(3)] += 1;
+        }
+        for &c in &counts {
+            assert!((9_550..10_450).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
     fn normal_moments() {
         let mut r = Pcg32::seeded(9);
         let n = 100_000;
@@ -229,6 +290,32 @@ mod tests {
         let w = [1.0, 3.0];
         let hits = (0..40_000).filter(|_| r.weighted_index(&w) == Some(1)).count();
         assert!((28_000..32_000).contains(&hits), "hits={hits}");
+    }
+
+    #[test]
+    fn weighted_fallback_lands_on_positive_weight() {
+        // Regression for the zero-weight fallback: when f64 rounding
+        // leaves target > 0 after the full walk, the pick must land on
+        // the last positive weight, never a zero-weight tail entry
+        // (k-means++ would re-seed on an already-chosen duplicate).
+        let w = [0.3f32, 0.7, 0.0, 0.0];
+        let total: f64 = w.iter().map(|&x| x as f64).sum();
+        assert_eq!(pick_weighted(total * (1.0 + 1e-12), &w), Some(1));
+        assert_eq!(pick_weighted(f64::INFINITY, &[0.0, 2.0, 0.0]), Some(1));
+        assert_eq!(pick_weighted(f64::INFINITY, &[1.0, -3.0, 0.5, 0.0]), Some(2));
+        // a zero draw must not land on a zero-weight *leading* entry
+        assert_eq!(pick_weighted(0.0, &[0.0, 5.0]), Some(1));
+        assert_eq!(pick_weighted(1.0, &[0.0, 0.0]), None);
+    }
+
+    #[test]
+    fn weighted_index_never_picks_zero_weight() {
+        let mut r = Pcg32::seeded(23);
+        let w = [0.0f32, 1e-30, 0.0, 2.0, 0.0];
+        for _ in 0..20_000 {
+            let i = r.weighted_index(&w).unwrap();
+            assert!(w[i] > 0.0, "picked zero-weight index {i}");
+        }
     }
 
     #[test]

@@ -12,10 +12,17 @@
 //!     whose partial sums are exactly representable — sums and inertia
 //!     are bit-identical to the fully serial fold as well;
 //!   * `lloyd_from_parallel` therefore reproduces the serial scalar
-//!     Lloyd loop bit-for-bit (centers, labels, counts).
+//!     Lloyd loop bit-for-bit (centers, labels, counts);
+//!   * the Hamerly-bounded Lloyd loop (`BoundsMode::Hamerly`) is
+//!     bit-identical to the unpruned loop (`BoundsMode::Off`) — every
+//!     field, every worker count, every blocking, tol-early-stop or
+//!     fixed iterations, ties and empty clusters included — because
+//!     bounds only ever skip provably-unchanged argmins.
 
-use parsample::cluster::engine::{serial_reference, Engine};
-use parsample::cluster::kmeans::{lloyd_from, lloyd_from_parallel};
+use parsample::cluster::engine::{serial_reference, BoundsMode, Engine, LloydLoopResult};
+use parsample::cluster::init::{initial_centers, InitMethod};
+use parsample::cluster::kmeans::{lloyd_from, lloyd_from_parallel, lloyd_from_with};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
 use parsample::util::rng::Pcg32;
 
 const DIMS: [usize; 5] = [1, 3, 4, 7, 32];
@@ -172,6 +179,147 @@ fn assign_only_and_inertia_agree_with_fused_pass() {
         assert_eq!(acc.counts, pass.counts, "w={w}");
         assert_eq!(acc.sums, pass.sums, "w={w}");
     }
+}
+
+fn assert_loops_eq(a: &LloydLoopResult, b: &LloydLoopResult, ctx: &str) {
+    assert_eq!(a.labels, b.labels, "{ctx}");
+    assert_eq!(a.counts, b.counts, "{ctx}");
+    assert_eq!(a.centers, b.centers, "{ctx}");
+    assert_eq!(a.inertia.to_bits(), b.inertia.to_bits(), "{ctx}");
+    assert_eq!(a.iterations, b.iterations, "{ctx}");
+}
+
+#[test]
+fn prop_bounded_lloyd_bit_identical_to_unbounded() {
+    // The tentpole contract: Hamerly pruning must not change a single
+    // bit of any output — across dims {1, 2, 7, 32}, k up to m,
+    // workers {1, 8}, fixed-iteration and tol-early-stop runs alike.
+    for &dims in &[1usize, 2, 7, 32] {
+        let m = 240;
+        let pts = cloud(m, dims, 900 + dims as u64);
+        for &k in &[1usize, 2, 19, m] {
+            let init = pts[..k * dims].to_vec();
+            for &(iters, tol) in &[(12usize, 0.0f32), (60, 1e-5)] {
+                for &w in &[1usize, 8] {
+                    let e = Engine::with_blocking(w, 64, 4);
+                    let off = e.lloyd_loop(&pts, dims, init.clone(), iters, tol, BoundsMode::Off);
+                    let ham =
+                        e.lloyd_loop(&pts, dims, init.clone(), iters, tol, BoundsMode::Hamerly);
+                    assert_loops_eq(
+                        &ham,
+                        &off,
+                        &format!("dims={dims} k={k} iters={iters} tol={tol} w={w}"),
+                    );
+                    assert_eq!(
+                        ham.stats.point_iters(),
+                        m as u64 * (ham.iterations as u64 + 1),
+                        "dims={dims} k={k} iters={iters} tol={tol} w={w}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bounded_lloyd_bit_identical_across_worker_counts() {
+    let dims = 5;
+    let m = 2600;
+    let pts = cloud(m, dims, 606);
+    let init = pts[..23 * dims].to_vec();
+    let base = Engine::with_blocking(1, 128, 4)
+        .lloyd_loop(&pts, dims, init.clone(), 15, 0.0, BoundsMode::Hamerly);
+    for &w in &[2usize, 8] {
+        let run = Engine::with_blocking(w, 128, 4)
+            .lloyd_loop(&pts, dims, init.clone(), 15, 0.0, BoundsMode::Hamerly);
+        assert_loops_eq(&run, &base, &format!("w={w}"));
+        // skip decisions are state-driven, so even the per-iteration
+        // counters must be identical across worker counts
+        assert_eq!(run.stats, base.stats, "w={w}");
+    }
+}
+
+#[test]
+fn bounded_lloyd_via_kmeans_entrypoint_matches_off() {
+    for &dims in &[2usize, 7] {
+        let m = 700;
+        let pts = cloud(m, dims, 3000 + dims as u64);
+        let init = pts[..13 * dims].to_vec();
+        for &w in &[1usize, 8] {
+            let off =
+                lloyd_from_with(&pts, dims, init.clone(), 20, 1e-6, w, BoundsMode::Off).unwrap();
+            let ham = lloyd_from_with(&pts, dims, init.clone(), 20, 1e-6, w, BoundsMode::Hamerly)
+                .unwrap();
+            assert_eq!(ham.labels, off.labels, "dims={dims} w={w}");
+            assert_eq!(ham.counts, off.counts, "dims={dims} w={w}");
+            assert_eq!(ham.centers, off.centers, "dims={dims} w={w}");
+            assert_eq!(ham.inertia.to_bits(), off.inertia.to_bits(), "dims={dims} w={w}");
+            assert_eq!(ham.iterations, off.iterations, "dims={dims} w={w}");
+        }
+    }
+}
+
+#[test]
+fn bounded_empty_cluster_keeps_center_zero_shift() {
+    // Two tight pairs plus one faraway center that goes empty: its
+    // shift is zero every iteration (the empty-cluster-keeps-center
+    // rule) and both modes must leave it exactly in place.
+    let pts = vec![0.0f32, 0.0, 0.1, 0.0, 10.0, 10.0, 10.1, 10.0];
+    let init = vec![0.0f32, 0.0, 10.0, 10.0, 500.0, 500.0];
+    for &w in &[1usize, 2, 8] {
+        let e = Engine::new(w);
+        let off = e.lloyd_loop(&pts, 2, init.clone(), 6, 0.0, BoundsMode::Off);
+        let ham = e.lloyd_loop(&pts, 2, init.clone(), 6, 0.0, BoundsMode::Hamerly);
+        assert_loops_eq(&ham, &off, &format!("w={w}"));
+        assert_eq!(&ham.centers[4..6], &[500.0, 500.0], "w={w}");
+        assert_eq!(ham.counts[2], 0, "w={w}");
+    }
+}
+
+#[test]
+fn bounded_duplicate_centers_tie_to_lowest_index() {
+    // Duplicate initial centers straddling tile boundaries: ties must
+    // keep breaking to the lowest index under pruning too.
+    let dims = 3;
+    let pts = cloud(500, dims, 41);
+    let mut init = Vec::new();
+    for _ in 0..9 {
+        init.extend_from_slice(&pts[..dims]);
+    }
+    init.extend_from_slice(&pts[dims..4 * dims]);
+    for &w in &[1usize, 8] {
+        let e = Engine::with_blocking(w, 64, 4);
+        let off = e.lloyd_loop(&pts, dims, init.clone(), 8, 0.0, BoundsMode::Off);
+        let ham = e.lloyd_loop(&pts, dims, init.clone(), 8, 0.0, BoundsMode::Hamerly);
+        assert_loops_eq(&ham, &off, &format!("w={w}"));
+    }
+}
+
+#[test]
+fn bounds_skip_most_point_iterations_once_converged() {
+    // Well-separated blobs: once centers stop moving, nearly every
+    // point-iteration must be pruned.  The bench reports the real
+    // skip rate; this test only guards against the counters rotting.
+    let ds = make_blobs(&BlobSpec {
+        num_points: 4000,
+        num_clusters: 16,
+        dims: 4,
+        std: 0.05,
+        extent: 10.0,
+        seed: 33,
+    })
+    .unwrap();
+    let init =
+        initial_centers(ds.as_slice(), 4, 16, InitMethod::KMeansPlusPlus, 7).unwrap();
+    let run = Engine::new(2).lloyd_loop(ds.as_slice(), 4, init, 20, 0.0, BoundsMode::Hamerly);
+    assert_eq!(run.iterations, 20);
+    assert_eq!(run.stats.point_iters(), 4000 * 21);
+    assert_eq!(run.stats.per_iter[0].skipped, 0, "cold sweep cannot skip");
+    assert!(
+        run.stats.skip_rate_from(5) > 0.5,
+        "expected >50% skips after iteration 5, got {}",
+        run.stats.skip_rate_from(5)
+    );
 }
 
 #[test]

@@ -13,7 +13,7 @@
 //!   layout        — flatten/reconstruct inverse in both orders
 
 use parsample::cluster::kmeans::{lloyd, KMeansConfig};
-use parsample::cluster::InitMethod;
+use parsample::cluster::{BoundsMode, InitMethod};
 use parsample::coordinator::batcher::{local_k, Batcher};
 use parsample::data::synthetic::{make_blobs, BlobSpec};
 use parsample::data::{flatten, reconstruct, Dataset, MemoryOrder};
@@ -141,6 +141,7 @@ fn prop_kmeans_inertia_monotone_in_iterations() {
                 init: InitMethod::FirstK,
                 seed: 0,
                 workers: 1,
+                bounds: BoundsMode::Hamerly,
             };
             let r = lloyd(data.as_slice(), data.dims(), &cfg).unwrap();
             assert!(
