@@ -1,9 +1,10 @@
 //! Bench: runtime micro-benchmarks — PJRT dispatch vs the native mirror
 //! per AOT bucket, plus compile (warm-up) cost.
 //!
-//! This is the bench behind EXPERIMENTS.md §Perf L3: how much of the
-//! request path is device compute vs coordinator overhead.  Skips
-//! gracefully when artifacts/ has not been built.
+//! Answers how much of the request path is device compute vs
+//! coordinator overhead (see ROADMAP.md "Real PJRT execution" and the
+//! per-PR perf notes in CHANGES.md).  Skips gracefully when artifacts/
+//! has not been built.
 
 use parsample::runtime::{Backend, DeviceBatch, NativeBackend, PjrtBackend};
 use parsample::util::benchkit::{print_table, Bench};

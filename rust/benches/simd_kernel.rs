@@ -1,0 +1,124 @@
+//! Bench: scalar vs wide tile kernel on the single-thread Lloyd loop —
+//! the instruction-level-parallelism half of the speedup story (the
+//! thread-level half is `benches/engine_scaling.rs`, the pruning half
+//! `benches/hamerly_pruning.rs`).
+//!
+//! Profiles (points / clusters / dims / iters):
+//!   PARSAMPLE_BENCH_SMOKE=1  →  2k / 64 / 8 / 15   (CI rot-guard)
+//!   default                  → 40k / 96 / 16 / 30  (the acceptance shape)
+//!   PARSAMPLE_BENCH_FULL=1   → 120k / 256 / 16 / 30
+//!
+//! Asserts bit-identical outputs between the kernels first (the wide
+//! kernel replays the scalar summation order — see crate::kernel),
+//! then times `workers = 1` runs with Hamerly bounds on (the composed
+//! gather path) and off (the dense sweep), and emits everything into
+//! `BENCH_simd.json`.  Target: ≥2x wide-over-scalar on the default
+//! profile with bounds enabled.
+
+use parsample::cluster::engine::{BoundsMode, Engine, LloydLoopResult};
+use parsample::cluster::init::{initial_centers, InitMethod};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::kernel::{KernelMode, TileKernel};
+use parsample::util::benchkit::{print_table, Bench};
+use parsample::util::json::Json;
+
+fn main() {
+    let smoke = std::env::var("PARSAMPLE_BENCH_SMOKE").is_ok();
+    let full = std::env::var("PARSAMPLE_BENCH_FULL").is_ok();
+    let (m, k, d, iters) = if smoke {
+        (2_000usize, 64usize, 8usize, 15usize)
+    } else if full {
+        (120_000, 256, 16, 30)
+    } else {
+        (40_000, 96, 16, 30)
+    };
+
+    let ds = make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims: d,
+        std: 0.05,
+        extent: 10.0,
+        seed: 42,
+    })
+    .expect("blob generation");
+    let points = ds.as_slice();
+    let init = initial_centers(points, d, k, InitMethod::KMeansPlusPlus, 7).expect("init");
+
+    // single-thread engines: this bench isolates the kernel, not the pool
+    let engine = |kernel: KernelMode| Engine::new(1).with_kernel(kernel);
+    let run = |kernel: KernelMode, bounds: BoundsMode| -> LloydLoopResult {
+        engine(kernel).lloyd_loop(points, d, init.clone(), iters, 0.0, bounds)
+    };
+
+    // correctness gate before timing anything: the wide kernel must be
+    // bit-identical to scalar, bounded and unbounded alike
+    let s_ham = run(KernelMode::Scalar, BoundsMode::Hamerly);
+    let w_ham = run(KernelMode::Wide, BoundsMode::Hamerly);
+    let s_off = run(KernelMode::Scalar, BoundsMode::Off);
+    let w_off = run(KernelMode::Wide, BoundsMode::Off);
+    for (a, b, ctx) in [(&s_ham, &w_ham, "hamerly"), (&s_off, &w_off, "off")] {
+        assert_eq!(a.labels, b.labels, "scalar/wide label mismatch ({ctx})");
+        assert_eq!(a.counts, b.counts, "scalar/wide count mismatch ({ctx})");
+        assert_eq!(a.centers, b.centers, "scalar/wide center mismatch ({ctx})");
+        assert_eq!(
+            a.inertia.to_bits(),
+            b.inertia.to_bits(),
+            "scalar/wide inertia mismatch ({ctx})"
+        );
+    }
+    let auto_is = KernelMode::Auto.resolve(d).name();
+
+    let bench = if smoke { Bench::new(0, 2) } else { Bench::new(1, 5) };
+    let t_s_ham =
+        bench.run("lloyd/scalar+hamerly", || run(KernelMode::Scalar, BoundsMode::Hamerly));
+    let t_w_ham = bench.run("lloyd/wide+hamerly", || run(KernelMode::Wide, BoundsMode::Hamerly));
+    let t_s_off = bench.run("lloyd/scalar+off", || run(KernelMode::Scalar, BoundsMode::Off));
+    let t_w_off = bench.run("lloyd/wide+off", || run(KernelMode::Wide, BoundsMode::Off));
+    let speedup_ham = t_s_ham.mean_ms() / t_w_ham.mean_ms();
+    let speedup_off = t_s_off.mean_ms() / t_w_off.mean_ms();
+
+    print_table(
+        &format!(
+            "SIMD tile kernel — single-thread Lloyd loop (m={m}, k={k}, d={d}, iters={iters}, \
+             auto→{auto_is})"
+        ),
+        &["path", "mean ms", "speedup vs scalar"],
+        &[
+            vec!["scalar + hamerly".into(), format!("{:.3}", t_s_ham.mean_ms()), "1.00x".into()],
+            vec![
+                "wide + hamerly".into(),
+                format!("{:.3}", t_w_ham.mean_ms()),
+                format!("{speedup_ham:.2}x"),
+            ],
+            vec!["scalar + off".into(), format!("{:.3}", t_s_off.mean_ms()), "1.00x".into()],
+            vec![
+                "wide + off".into(),
+                format!("{:.3}", t_w_off.mean_ms()),
+                format!("{speedup_off:.2}x"),
+            ],
+        ],
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("simd_kernel")),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("d", Json::num(d as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("workers", Json::num(1.0)),
+        ("auto_resolves_to", Json::str(auto_is)),
+        ("scalar_hamerly_mean_ms", Json::num(t_s_ham.mean_ms())),
+        ("wide_hamerly_mean_ms", Json::num(t_w_ham.mean_ms())),
+        ("speedup_hamerly", Json::num(speedup_ham)),
+        ("scalar_off_mean_ms", Json::num(t_s_off.mean_ms())),
+        ("wide_off_mean_ms", Json::num(t_w_off.mean_ms())),
+        ("speedup_off", Json::num(speedup_off)),
+        ("skip_rate_after_iter5", Json::num(w_ham.stats.skip_rate_from(5))),
+    ]);
+    let out = "BENCH_simd.json";
+    match std::fs::write(out, json.to_string()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -10,6 +10,7 @@ use crate::cluster::kmeans::{lloyd, KMeansConfig, KMeansResult};
 use crate::cluster::{Clusterer, InitMethod};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::kernel::KernelMode;
 
 /// Bisecting k-means configuration.
 #[derive(Debug, Clone)]
@@ -24,6 +25,9 @@ pub struct BisectingKMeans {
     pub workers: usize,
     /// Bounds mode for the per-split Lloyd loops.
     pub bounds: BoundsMode,
+    /// Tile kernel for the per-split Lloyd loops and the final inertia
+    /// sweep.
+    pub kernel: KernelMode,
 }
 
 impl Default for BisectingKMeans {
@@ -34,6 +38,7 @@ impl Default for BisectingKMeans {
             seed: 0,
             workers: 1,
             bounds: BoundsMode::Hamerly,
+            kernel: KernelMode::session_default(),
         }
     }
 }
@@ -80,6 +85,7 @@ impl BisectingKMeans {
                     seed: self.seed ^ (trial as u64).wrapping_mul(0x9e37_79b9),
                     workers: self.workers,
                     bounds: self.bounds,
+                    kernel: self.kernel,
                 };
                 let r = lloyd(&sub, dims, &cfg)?;
                 if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {
@@ -130,7 +136,8 @@ impl BisectingKMeans {
                 }
             }
         }
-        let inertia = Engine::new(self.workers).inertia(points, dims, &centers);
+        let inertia =
+            Engine::new(self.workers).with_kernel(self.kernel).inertia(points, dims, &centers);
         Ok(KMeansResult { centers, labels, counts, inertia, iterations: kk })
     }
 }

@@ -5,7 +5,8 @@
 //! the paper's whole argument for parallelising the sub-pieces.  The
 //! seed code parallelised only the partition fan-out, leaving the
 //! global stage and every large sub-region on one core with an
-//! un-tiled scalar sweep.  This engine makes the sweep fast twice over:
+//! un-tiled scalar sweep.  This engine makes the sweep fast three
+//! times over:
 //!
 //! * **Cache blocking.**  Points stream in chunks of [`POINT_CHUNK`]
 //!   against *center tiles* sized so one tile plus its precomputed
@@ -18,6 +19,14 @@
 //!   [`parallel_map`] workers.  Each block produces partial
 //!   labels/sums/counts/inertia; the calling thread merges the partials
 //!   in block order.
+//! * **Tile kernels.**  Everything below a chunk — the argmin sweep
+//!   itself — is a pluggable [`crate::kernel::TileKernel`] selected by
+//!   the [`KernelMode`] knob: the scalar yardstick, or the 8-lane
+//!   [`crate::kernel::WideKernel`] whose packed lane sweep is
+//!   bit-identical but lets the compiler issue full-width SIMD
+//!   multiply-adds.  Per-point norms (`dot(p, p)`) are computed once
+//!   per pass — and once per whole [`Engine::lloyd_loop`] run — and
+//!   fed to the kernels instead of being recomputed every chunk.
 //!
 //! **Determinism.**  Distances use exactly the scalar path's expression
 //! (|p|² − 2·p·c + |c|², all three terms through [`distance::dot`],
@@ -26,13 +35,16 @@
 //! to [`distance::nearest_sq_with_norms`] — the device-parity rule.
 //! Block boundaries depend only on `point_block`, never on `workers`,
 //! and the merge walks blocks in order, so every output (including the
-//! f32 sums and f64 inertia) is bit-identical across worker counts.
+//! f32 sums and f64 inertia) is bit-identical across worker counts —
+//! and across tile kernels, because the wide kernel replays the scalar
+//! summation order lane by lane (see `crate::kernel::wide`).
 //! When the input fits a single block the accumulation order equals the
 //! fully serial scalar path, making sums/inertia bit-identical to
 //! [`serial_reference`] as well; across blocks they are deterministic
 //! but may differ from the serial fold in the last ulp (float addition
-//! is not associative).  The parity suite in
-//! `rust/tests/engine_parity.rs` pins all of this down.
+//! is not associative).  The parity suites in
+//! `rust/tests/engine_parity.rs` and `rust/tests/kernel_parity.rs` pin
+//! all of this down.
 //!
 //! **Hamerly bound pruning.**  [`Engine::lloyd_loop`] owns the whole
 //! Lloyd iterate loop.  In [`BoundsMode::Hamerly`] it persists, per
@@ -48,15 +60,16 @@
 //! (see [`dist_eps`]), so a passed test guarantees the computed argmin
 //! — ties included — cannot have moved.  Labels, counts, sums, centers,
 //! and inertia are therefore bit-identical to [`BoundsMode::Off`] at
-//! every worker count; only the work skipped changes.
+//! every worker count; only the work skipped changes.  The survivor
+//! sweep goes through the kernel's gather entry point, which compacts
+//! the scattered survivors so bounds pruning and the SIMD lanes
+//! compose instead of conflicting.
 
 use crate::distance::{self, center_norms};
+use crate::kernel::{KernelMode, TilePlan};
 use crate::util::threadpool::parallel_map;
 
-/// Points held against one center tile before advancing to the next
-/// tile.  64 points × (best, dist, |p|²) state fits comfortably in
-/// registers + L1 alongside the tile itself.
-pub const POINT_CHUNK: usize = 64;
+pub use crate::kernel::POINT_CHUNK;
 
 /// Default reduction-block size (points per [`parallel_map`] item).
 /// Fixed — never derived from the worker count — so results are
@@ -206,20 +219,13 @@ struct LloydState {
 }
 
 impl LloydState {
-    fn new(engine: &Engine, points: &[f32], dims: usize) -> LloydState {
-        let m = points.len() / dims;
+    /// Build from the run's cached f32 point norms (`dot(p, p)` per
+    /// row): `pnorm` inflates them into upper bounds on the true
+    /// Euclidean norms.
+    fn new(pn: &[f32], dims: usize) -> LloydState {
+        let m = pn.len();
         let slack = norm_slack(dims);
-        let blocks = engine.blocks(m);
-        let parts = parallel_map(&blocks, engine.workers, |_, &(lo, hi)| {
-            points[lo * dims..hi * dims]
-                .chunks_exact(dims)
-                .map(|p| (distance::dot(p, p) as f64).sqrt() * slack)
-                .collect::<Vec<f64>>()
-        });
-        let mut pnorm = Vec::with_capacity(m);
-        for part in parts {
-            pnorm.extend(part.expect("engine block cannot panic"));
-        }
+        let pnorm = pn.iter().map(|&x| (x as f64).sqrt() * slack).collect();
         LloydState {
             labels: vec![0; m],
             upper: vec![0.0; m],
@@ -254,12 +260,21 @@ pub struct Engine {
     point_block: usize,
     /// Centers per tile; 0 = auto from dims (see [`Engine::center_tile_for`]).
     center_tile: usize,
+    /// Tile-kernel selection for every sweep this engine runs.
+    kernel: KernelMode,
 }
 
 impl Engine {
-    /// Engine with default blocking and `workers` threads.
+    /// Engine with default blocking and `workers` threads, on the
+    /// session-default tile kernel (scalar unless `PARSAMPLE_KERNEL`
+    /// overrides it).
     pub fn new(workers: usize) -> Engine {
-        Engine { workers: workers.max(1), point_block: DEFAULT_POINT_BLOCK, center_tile: 0 }
+        Engine {
+            workers: workers.max(1),
+            point_block: DEFAULT_POINT_BLOCK,
+            center_tile: 0,
+            kernel: KernelMode::session_default(),
+        }
     }
 
     /// Single-threaded engine (identical outputs to any worker count).
@@ -275,7 +290,19 @@ impl Engine {
             workers: workers.max(1),
             point_block: point_block.max(1),
             center_tile,
+            kernel: KernelMode::session_default(),
         }
+    }
+
+    /// Same engine with an explicit tile-kernel mode.
+    pub fn with_kernel(mut self, kernel: KernelMode) -> Engine {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The tile-kernel mode this engine sweeps with.
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.kernel
     }
 
     /// Centers per tile such that the tile rows plus their norms fit
@@ -297,16 +324,51 @@ impl Engine {
             .collect()
     }
 
+    /// Cached per-point norms: `dot(p, p)` for every row, computed in
+    /// parallel once per pass (once per whole Lloyd run in
+    /// [`Engine::lloyd_loop`]) and handed to the tile kernels — the
+    /// same [`distance::dot`] value the kernels used to recompute every
+    /// chunk, so bit-identity is untouched.
+    fn point_norms(&self, points: &[f32], dims: usize) -> Vec<f32> {
+        let m = points.len() / dims;
+        let blocks = self.blocks(m);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            points[lo * dims..hi * dims]
+                .chunks_exact(dims)
+                .map(|p| distance::dot(p, p))
+                .collect::<Vec<f32>>()
+        });
+        let mut pn = Vec::with_capacity(m);
+        for part in parts {
+            pn.extend(part.expect("engine block cannot panic"));
+        }
+        pn
+    }
+
     /// Fused assign + accumulate: labels, per-center counts and
     /// coordinate sums, and total inertia in a single sweep.
     pub fn assign_accumulate(&self, points: &[f32], dims: usize, centers: &[f32]) -> FusedPass {
+        let pn = self.point_norms(points, dims);
+        self.assign_accumulate_with(points, dims, centers, &pn)
+    }
+
+    /// [`Engine::assign_accumulate`] against cached point norms.
+    fn assign_accumulate_with(
+        &self,
+        points: &[f32],
+        dims: usize,
+        centers: &[f32],
+        pn: &[f32],
+    ) -> FusedPass {
         let m = points.len() / dims;
         let k = centers.len() / dims;
         let cnorm = center_norms(centers, dims);
         let ctile = self.center_tile_for(dims);
+        let plan = self.kernel.resolve(dims).plan(centers, &cnorm, dims, ctile);
+        let plan: &dyn TilePlan = &*plan;
         let blocks = self.blocks(m);
         let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
-            let (labels, dists) = argmin_block(points, dims, centers, &cnorm, ctile, lo, hi);
+            let (labels, dists) = argmin_block(plan, points, dims, pn, lo, hi);
             let mut counts = vec![0u32; k];
             let mut sums = vec![0.0f32; k * dims];
             let mut inertia = 0.0f64;
@@ -345,10 +407,24 @@ impl Engine {
     /// Counts and sums only — the Lloyd update inputs — with no
     /// per-point output materialized (the in-loop hot path).
     pub fn accumulate_only(&self, points: &[f32], dims: usize, centers: &[f32]) -> CentroidPass {
+        let pn = self.point_norms(points, dims);
+        self.accumulate_only_with(points, dims, centers, &pn)
+    }
+
+    /// [`Engine::accumulate_only`] against cached point norms.
+    fn accumulate_only_with(
+        &self,
+        points: &[f32],
+        dims: usize,
+        centers: &[f32],
+        pn: &[f32],
+    ) -> CentroidPass {
         let m = points.len() / dims;
         let k = centers.len() / dims;
         let cnorm = center_norms(centers, dims);
         let ctile = self.center_tile_for(dims);
+        let plan = self.kernel.resolve(dims).plan(centers, &cnorm, dims, ctile);
+        let plan: &dyn TilePlan = &*plan;
         let blocks = self.blocks(m);
         let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
             let mut counts = vec![0u32; k];
@@ -358,9 +434,7 @@ impl Engine {
             let mut s = lo;
             while s < hi {
                 let cap = POINT_CHUNK.min(hi - s);
-                chunk_argmin(
-                    points, dims, centers, &cnorm, ctile, s, cap, &mut best_i, &mut best_d,
-                );
+                plan.chunk_argmin(points, dims, s, cap, &pn[s..s + cap], &mut best_i, &mut best_d);
                 for i in 0..cap {
                     let c = best_i[i] as usize;
                     counts[c] += 1;
@@ -389,11 +463,14 @@ impl Engine {
     /// Labels only (skips the accumulate half of the fused kernel).
     pub fn assign_only(&self, points: &[f32], dims: usize, centers: &[f32]) -> Vec<u32> {
         let m = points.len() / dims;
+        let pn = self.point_norms(points, dims);
         let cnorm = center_norms(centers, dims);
         let ctile = self.center_tile_for(dims);
+        let plan = self.kernel.resolve(dims).plan(centers, &cnorm, dims, ctile);
+        let plan: &dyn TilePlan = &*plan;
         let blocks = self.blocks(m);
         let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
-            argmin_block(points, dims, centers, &cnorm, ctile, lo, hi).0
+            argmin_block(plan, points, dims, &pn, lo, hi).0
         });
         let mut labels = Vec::with_capacity(m);
         for part in parts {
@@ -407,8 +484,11 @@ impl Engine {
     /// accumulator, in point order within each block).
     pub fn inertia(&self, points: &[f32], dims: usize, centers: &[f32]) -> f64 {
         let m = points.len() / dims;
+        let pn = self.point_norms(points, dims);
         let cnorm = center_norms(centers, dims);
         let ctile = self.center_tile_for(dims);
+        let plan = self.kernel.resolve(dims).plan(centers, &cnorm, dims, ctile);
+        let plan: &dyn TilePlan = &*plan;
         let blocks = self.blocks(m);
         let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
             let mut best_i = [0u32; POINT_CHUNK];
@@ -417,9 +497,7 @@ impl Engine {
             let mut s = lo;
             while s < hi {
                 let cap = POINT_CHUNK.min(hi - s);
-                chunk_argmin(
-                    points, dims, centers, &cnorm, ctile, s, cap, &mut best_i, &mut best_d,
-                );
+                plan.chunk_argmin(points, dims, s, cap, &pn[s..s + cap], &mut best_i, &mut best_d);
                 for &d in &best_d[..cap] {
                     inertia += d as f64;
                 }
@@ -458,6 +536,9 @@ impl Engine {
         let m = points.len() / dims;
         let mut stats = BoundsStats::default();
         let mut iterations = 0;
+        // |p|² per row, once for the whole run: every sweep below —
+        // bounded or not, in-loop or final — reuses this one buffer
+        let pn = self.point_norms(points, dims);
         // with no iterations there is nothing to prune — a cold state
         // can't skip, so the Hamerly arm would only pay its setup cost
         let bounds = if max_iters == 0 { BoundsMode::Off } else { bounds };
@@ -465,13 +546,13 @@ impl Engine {
             BoundsMode::Off => {
                 for _ in 0..max_iters {
                     iterations += 1;
-                    let pass = self.accumulate_only(points, dims, &centers);
+                    let pass = self.accumulate_only_with(points, dims, &centers, &pn);
                     let (max_shift, _) = update_centers(&mut centers, &pass, dims);
                     if tol > 0.0 && max_shift <= tol {
                         break;
                     }
                 }
-                let fin = self.assign_accumulate(points, dims, &centers);
+                let fin = self.assign_accumulate_with(points, dims, &centers, &pn);
                 LloydLoopResult {
                     centers,
                     labels: fin.labels,
@@ -482,7 +563,7 @@ impl Engine {
                 }
             }
             BoundsMode::Hamerly => {
-                let mut state = LloydState::new(self, points, dims);
+                let mut state = LloydState::new(&pn, dims);
                 let mut shifts: Option<ShiftInfo> = None;
                 for _ in 0..max_iters {
                     iterations += 1;
@@ -490,6 +571,7 @@ impl Engine {
                         points,
                         dims,
                         &centers,
+                        &pn,
                         &mut state,
                         shifts.as_ref(),
                     );
@@ -501,7 +583,7 @@ impl Engine {
                     }
                 }
                 let (fin, skipped) =
-                    self.bounded_final(points, dims, &centers, &state, shifts.as_ref());
+                    self.bounded_final(points, dims, &centers, &pn, &state, shifts.as_ref());
                 stats.per_iter.push(IterSkip { skipped, total: m as u64 });
                 LloydLoopResult {
                     centers,
@@ -526,6 +608,7 @@ impl Engine {
         points: &[f32],
         dims: usize,
         centers: &[f32],
+        pn: &[f32],
         state: &mut LloydState,
         shifts: Option<&ShiftInfo>,
     ) -> BoundedPass {
@@ -533,6 +616,8 @@ impl Engine {
         let k = centers.len() / dims;
         let cnorm = center_norms(centers, dims);
         let ctile = self.center_tile_for(dims);
+        let plan = self.kernel.resolve(dims).plan(centers, &cnorm, dims, ctile);
+        let plan: &dyn TilePlan = &*plan;
         let rmax = max_center_norm_bound(&cnorm, dims);
         let eps = dist_eps(dims);
         let blocks = self.blocks(m);
@@ -567,14 +652,12 @@ impl Engine {
                     }
                 }
                 if ns > 0 {
-                    chunk_argmin2_gather(
+                    plan.chunk_argmin2_gather(
                         points,
                         dims,
-                        centers,
-                        &cnorm,
-                        ctile,
                         s,
                         &surv[..ns],
+                        &pn[s..s + cap],
                         &mut best_i,
                         &mut best_d,
                         &mut second,
@@ -627,13 +710,16 @@ impl Engine {
     /// against the final centers, pruning the k-sweep exactly like
     /// [`Engine::bounded_accumulate`].  A pruned point keeps its
     /// carried label and pays a single distance evaluation (the same
-    /// expression the dense sweep would have produced for that center),
-    /// so the pass is bit-identical to [`Engine::assign_accumulate`].
+    /// expression the dense sweep would have produced for that center,
+    /// via the kernel's `dist1`), so the pass is bit-identical to
+    /// [`Engine::assign_accumulate`].
+    #[allow(clippy::too_many_arguments)]
     fn bounded_final(
         &self,
         points: &[f32],
         dims: usize,
         centers: &[f32],
+        pn: &[f32],
         state: &LloydState,
         shifts: Option<&ShiftInfo>,
     ) -> (FusedPass, u64) {
@@ -641,6 +727,8 @@ impl Engine {
         let k = centers.len() / dims;
         let cnorm = center_norms(centers, dims);
         let ctile = self.center_tile_for(dims);
+        let plan = self.kernel.resolve(dims).plan(centers, &cnorm, dims, ctile);
+        let plan: &dyn TilePlan = &*plan;
         let rmax = max_center_norm_bound(&cnorm, dims);
         let eps = dist_eps(dims);
         let blocks = self.blocks(m);
@@ -673,22 +761,19 @@ impl Engine {
                     if warm && can_skip(u, l, e) {
                         skipped += 1;
                         chunk_label[i] = a;
-                        chunk_dist[i] =
-                            point_center_dist_sq(points, dims, gi, centers, &cnorm, a as usize);
+                        chunk_dist[i] = plan.dist1(points, dims, gi, a as usize, pn[gi]);
                     } else {
                         surv[ns] = i as u32;
                         ns += 1;
                     }
                 }
                 if ns > 0 {
-                    chunk_argmin2_gather(
+                    plan.chunk_argmin2_gather(
                         points,
                         dims,
-                        centers,
-                        &cnorm,
-                        ctile,
                         s,
                         &surv[..ns],
+                        &pn[s..s + cap],
                         &mut best_i,
                         &mut best_d,
                         &mut second,
@@ -735,18 +820,14 @@ impl Engine {
     }
 }
 
-/// The tiled inner kernel: nearest center (index, squared distance) for
-/// every point in `[lo, hi)`.  Point chunks of [`POINT_CHUNK`] stream
-/// against center tiles of `ctile` rows; the running (best, dist) per
-/// point carries across tiles, and because tiles are visited in
-/// increasing center order under a strict `<`, ties break to the
-/// lowest index exactly like the scalar path.
+/// One reduction block's argmin sweep: nearest center (index, squared
+/// distance) for every point in `[lo, hi)`, chunk by chunk through the
+/// resolved tile kernel.
 fn argmin_block(
+    plan: &dyn TilePlan,
     points: &[f32],
     dims: usize,
-    centers: &[f32],
-    cnorm: &[f32],
-    ctile: usize,
+    pn: &[f32],
     lo: usize,
     hi: usize,
 ) -> (Vec<u32>, Vec<f32>) {
@@ -757,58 +838,12 @@ fn argmin_block(
     let mut s = lo;
     while s < hi {
         let cap = POINT_CHUNK.min(hi - s);
-        chunk_argmin(points, dims, centers, cnorm, ctile, s, cap, &mut best_i, &mut best_d);
+        plan.chunk_argmin(points, dims, s, cap, &pn[s..s + cap], &mut best_i, &mut best_d);
         labels.extend_from_slice(&best_i[..cap]);
         dists.extend_from_slice(&best_d[..cap]);
         s += cap;
     }
     (labels, dists)
-}
-
-/// Argmin over all centers for the `cap` points starting at row `s`
-/// (`cap` ≤ [`POINT_CHUNK`]), writing into the caller's chunk-state
-/// arrays.  Resets `best_i`/`best_d` itself.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn chunk_argmin(
-    points: &[f32],
-    dims: usize,
-    centers: &[f32],
-    cnorm: &[f32],
-    ctile: usize,
-    s: usize,
-    cap: usize,
-    best_i: &mut [u32; POINT_CHUNK],
-    best_d: &mut [f32; POINT_CHUNK],
-) {
-    let k = cnorm.len();
-    let mut pn = [0.0f32; POINT_CHUNK];
-    for i in 0..cap {
-        let p = &points[(s + i) * dims..(s + i + 1) * dims];
-        pn[i] = distance::dot(p, p);
-        best_i[i] = 0;
-        best_d[i] = f32::INFINITY;
-    }
-    let mut t0 = 0usize;
-    while t0 < k {
-        let t1 = (t0 + ctile).min(k);
-        let tile = &centers[t0 * dims..t1 * dims];
-        let tnorm = &cnorm[t0..t1];
-        for i in 0..cap {
-            let p = &points[(s + i) * dims..(s + i + 1) * dims];
-            let (mut bi, mut bd) = (best_i[i], best_d[i]);
-            for (tc, cc) in tile.chunks_exact(dims).enumerate() {
-                let d = (pn[i] - 2.0 * distance::dot(p, cc) + tnorm[tc]).max(0.0);
-                if d < bd {
-                    bd = d;
-                    bi = (t0 + tc) as u32;
-                }
-            }
-            best_i[i] = bi;
-            best_d[i] = bd;
-        }
-        t0 = t1;
-    }
 }
 
 /// The Lloyd update step shared by both bounds modes: move every
@@ -877,7 +912,8 @@ fn can_skip(upper: f64, lower: f64, e: f64) -> bool {
 /// Absolute error margin for one computed squared distance: the engine
 /// evaluates `|p|² − 2p·c + |c|²` entirely in f32, whose worst-case
 /// absolute error is below `(D+4)·2⁻²⁴·(‖p‖+‖c‖)²`; [`dist_eps`] gives
-/// better than 2x headroom over that.
+/// better than 2x headroom over that (for both tile kernels — the wide
+/// kernel's summation order is the scalar one, lane by lane).
 #[inline]
 fn margin(eps: f64, pnorm: f64, rmax: f64) -> f64 {
     let t = pnorm + rmax;
@@ -913,82 +949,6 @@ const DOWN64: f64 = 1.0 - 1e-15;
 fn max_center_norm_bound(cnorm: &[f32], dims: usize) -> f64 {
     let slack = norm_slack(dims);
     cnorm.iter().fold(0.0f64, |acc, &c| acc.max((c as f64).sqrt() * slack))
-}
-
-/// Squared distance from point row `i` to center `c`, evaluated with
-/// exactly the dense sweep's expression (all three terms through
-/// [`distance::dot`], clamped at 0) so a pruned point's distance is
-/// bit-identical to what the full k-sweep would have kept for it.
-#[inline]
-fn point_center_dist_sq(
-    points: &[f32],
-    dims: usize,
-    i: usize,
-    centers: &[f32],
-    cnorm: &[f32],
-    c: usize,
-) -> f32 {
-    let p = &points[i * dims..(i + 1) * dims];
-    let pn = distance::dot(p, p);
-    let cc = &centers[c * dims..(c + 1) * dims];
-    (pn - 2.0 * distance::dot(p, cc) + cnorm[c]).max(0.0)
-}
-
-/// [`chunk_argmin`] for a scattered subset of one chunk's points, also
-/// tracking the second-best distance (the Hamerly lower-bound seed).
-/// `surv[j]` are offsets within the chunk starting at row `s`; results
-/// land at position `j` of the output arrays.  Tiles are visited in the
-/// same increasing center order under the same strict `<`, so labels
-/// and best distances are bit-identical to the dense sweep.
-#[allow(clippy::too_many_arguments)]
-fn chunk_argmin2_gather(
-    points: &[f32],
-    dims: usize,
-    centers: &[f32],
-    cnorm: &[f32],
-    ctile: usize,
-    s: usize,
-    surv: &[u32],
-    best_i: &mut [u32; POINT_CHUNK],
-    best_d: &mut [f32; POINT_CHUNK],
-    second: &mut [f32; POINT_CHUNK],
-) {
-    let k = cnorm.len();
-    let n = surv.len();
-    let mut pn = [0.0f32; POINT_CHUNK];
-    for j in 0..n {
-        let row = s + surv[j] as usize;
-        let p = &points[row * dims..(row + 1) * dims];
-        pn[j] = distance::dot(p, p);
-        best_i[j] = 0;
-        best_d[j] = f32::INFINITY;
-        second[j] = f32::INFINITY;
-    }
-    let mut t0 = 0usize;
-    while t0 < k {
-        let t1 = (t0 + ctile).min(k);
-        let tile = &centers[t0 * dims..t1 * dims];
-        let tnorm = &cnorm[t0..t1];
-        for j in 0..n {
-            let row = s + surv[j] as usize;
-            let p = &points[row * dims..(row + 1) * dims];
-            let (mut bi, mut bd, mut b2) = (best_i[j], best_d[j], second[j]);
-            for (tc, cc) in tile.chunks_exact(dims).enumerate() {
-                let d = (pn[j] - 2.0 * distance::dot(p, cc) + tnorm[tc]).max(0.0);
-                if d < bd {
-                    b2 = bd;
-                    bd = d;
-                    bi = (t0 + tc) as u32;
-                } else if d < b2 {
-                    b2 = d;
-                }
-            }
-            best_i[j] = bi;
-            best_d[j] = bd;
-            second[j] = b2;
-        }
-        t0 = t1;
-    }
 }
 
 /// The un-blocked scalar path: per-point
@@ -1051,6 +1011,26 @@ mod tests {
     }
 
     #[test]
+    fn kernel_modes_agree_bitwise() {
+        // the wide kernel replays the scalar summation order, so every
+        // field of the fused pass must match bit for bit
+        for dims in [1usize, 3, 9, 17] {
+            let pts = cloud(500, dims, 60 + dims as u64);
+            let centers = pts[..13 * dims].to_vec();
+            let scalar = Engine::with_blocking(2, 128, 5)
+                .with_kernel(KernelMode::Scalar)
+                .assign_accumulate(&pts, dims, &centers);
+            let wide = Engine::with_blocking(2, 128, 5)
+                .with_kernel(KernelMode::Wide)
+                .assign_accumulate(&pts, dims, &centers);
+            assert_eq!(scalar.labels, wide.labels, "dims={dims}");
+            assert_eq!(scalar.counts, wide.counts, "dims={dims}");
+            assert_eq!(scalar.sums, wide.sums, "dims={dims}");
+            assert_eq!(scalar.inertia.to_bits(), wide.inertia.to_bits(), "dims={dims}");
+        }
+    }
+
+    #[test]
     fn deterministic_across_workers_when_blocked() {
         let pts = cloud(2000, 3, 9);
         let centers = pts[..23 * 3].to_vec();
@@ -1084,8 +1064,12 @@ mod tests {
         let dims = 2;
         let centers: Vec<f32> = (0..40).flat_map(|_| [1.0f32, -2.0]).collect();
         let pts = cloud(200, dims, 5);
-        let labels = Engine::with_blocking(4, 64, 8).assign_only(&pts, dims, &centers);
-        assert!(labels.iter().all(|&l| l == 0), "{labels:?}");
+        for kernel in [KernelMode::Scalar, KernelMode::Wide] {
+            let labels = Engine::with_blocking(4, 64, 8)
+                .with_kernel(kernel)
+                .assign_only(&pts, dims, &centers);
+            assert!(labels.iter().all(|&l| l == 0), "{kernel:?}: {labels:?}");
+        }
     }
 
     #[test]
@@ -1101,11 +1085,14 @@ mod tests {
     #[test]
     fn point_on_center_has_zero_distance() {
         // |p|², p·c and |c|² share one summation order, so k == m
-        // inputs must produce exactly zero inertia.
+        // inputs must produce exactly zero inertia — under both tile
+        // kernels (the wide lanes replay that same order).
         let pts = cloud(16, 7, 3);
-        let pass = Engine::new(2).assign_accumulate(&pts, 7, &pts);
-        assert_eq!(pass.inertia, 0.0);
-        assert_eq!(pass.counts, vec![1u32; 16]);
+        for kernel in [KernelMode::Scalar, KernelMode::Wide] {
+            let pass = Engine::new(2).with_kernel(kernel).assign_accumulate(&pts, 7, &pts);
+            assert_eq!(pass.inertia, 0.0, "{kernel:?}");
+            assert_eq!(pass.counts, vec![1u32; 16], "{kernel:?}");
+        }
     }
 
     #[test]

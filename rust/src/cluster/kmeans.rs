@@ -12,6 +12,7 @@
 use crate::cluster::engine::{BoundsMode, Engine};
 use crate::cluster::init::{initial_centers, InitMethod};
 use crate::error::{Error, Result};
+use crate::kernel::KernelMode;
 
 /// Lloyd's algorithm configuration.
 #[derive(Debug, Clone)]
@@ -33,6 +34,10 @@ pub struct KMeansConfig {
     /// Output is bit-identical to `BoundsMode::Off` — bounds only ever
     /// skip provably-unchanged argmins.
     pub bounds: BoundsMode,
+    /// Tile kernel for every engine sweep (default scalar unless
+    /// `PARSAMPLE_KERNEL` overrides it; `Wide` is bit-identical, `Auto`
+    /// picks by detected CPU features).
+    pub kernel: KernelMode,
 }
 
 impl Default for KMeansConfig {
@@ -45,6 +50,7 @@ impl Default for KMeansConfig {
             seed: 0,
             workers: 1,
             bounds: BoundsMode::Hamerly,
+            kernel: KernelMode::session_default(),
         }
     }
 }
@@ -52,7 +58,10 @@ impl Default for KMeansConfig {
 impl KMeansConfig {
     /// Config matching the AOT device executables: FirstK init, fixed
     /// iteration count, no early stop.  Bounds stay on — pruning is
-    /// bit-identical, so device parity is unaffected.
+    /// bit-identical, so device parity is unaffected.  The kernel is
+    /// pinned to `Scalar`: device parity is a bit-for-bit contract, so
+    /// it stays anchored on the yardstick path regardless of any
+    /// session-wide kernel override.
     pub fn device_parity(k: usize, iters: usize) -> Self {
         KMeansConfig {
             k,
@@ -62,6 +71,7 @@ impl KMeansConfig {
             seed: 0,
             workers: 1,
             bounds: BoundsMode::Hamerly,
+            kernel: KernelMode::Scalar,
         }
     }
 }
@@ -94,7 +104,16 @@ pub fn lloyd(points: &[f32], dims: usize, cfg: &KMeansConfig) -> Result<KMeansRe
         return Err(Error::Config(format!("k={} invalid for {m} points", cfg.k)));
     }
     let centers = initial_centers(points, dims, cfg.k, cfg.init, cfg.seed)?;
-    lloyd_from_with(points, dims, centers, cfg.max_iters, cfg.tol, cfg.workers, cfg.bounds)
+    lloyd_from_with(
+        points,
+        dims,
+        centers,
+        cfg.max_iters,
+        cfg.tol,
+        cfg.workers,
+        cfg.bounds,
+        cfg.kernel,
+    )
 }
 
 /// Lloyd's from explicit initial centers (used by the pipeline's global
@@ -111,8 +130,8 @@ pub fn lloyd_from(
 }
 
 /// Lloyd's from explicit initial centers on the blocked multi-threaded
-/// assignment engine, with the default [`BoundsMode`] (Hamerly).  See
-/// [`lloyd_from_with`] for the explicit-bounds variant.
+/// assignment engine, with the default [`BoundsMode`] (Hamerly) and
+/// tile kernel.  See [`lloyd_from_with`] for the explicit-knob variant.
 pub fn lloyd_from_parallel(
     points: &[f32],
     dims: usize,
@@ -121,7 +140,16 @@ pub fn lloyd_from_parallel(
     tol: f32,
     workers: usize,
 ) -> Result<KMeansResult> {
-    lloyd_from_with(points, dims, centers, max_iters, tol, workers, BoundsMode::default())
+    lloyd_from_with(
+        points,
+        dims,
+        centers,
+        max_iters,
+        tol,
+        workers,
+        BoundsMode::default(),
+        KernelMode::session_default(),
+    )
 }
 
 /// Lloyd's from explicit initial centers on the engine-owned iterate
@@ -131,6 +159,9 @@ pub fn lloyd_from_parallel(
 /// against the converged centers; with `BoundsMode::Hamerly` the engine
 /// additionally carries per-point distance bounds across iterations so
 /// stable points skip the k-sweep — output is bit-identical either way.
+/// `kernel` selects the tile kernel for every sweep; the wide kernel is
+/// bit-identical to the scalar one too (see `crate::kernel`).
+#[allow(clippy::too_many_arguments)]
 pub fn lloyd_from_with(
     points: &[f32],
     dims: usize,
@@ -139,11 +170,14 @@ pub fn lloyd_from_with(
     tol: f32,
     workers: usize,
     bounds: BoundsMode,
+    kernel: KernelMode,
 ) -> Result<KMeansResult> {
     if dims == 0 || centers.len() % dims != 0 || centers.is_empty() {
         return Err(Error::Config("centers buffer not a multiple of dims".into()));
     }
-    let out = Engine::new(workers).lloyd_loop(points, dims, centers, max_iters, tol, bounds);
+    let out = Engine::new(workers)
+        .with_kernel(kernel)
+        .lloyd_loop(points, dims, centers, max_iters, tol, bounds);
     Ok(KMeansResult {
         centers: out.centers,
         labels: out.labels,
@@ -309,6 +343,28 @@ mod tests {
             assert_eq!(off.counts, ham.counts, "k={k}");
             assert_eq!(off.inertia.to_bits(), ham.inertia.to_bits(), "k={k}");
             assert_eq!(off.iterations, ham.iterations, "k={k}");
+        }
+    }
+
+    #[test]
+    fn kernel_knob_does_not_change_result() {
+        // the wide kernel replays the scalar summation order, so the
+        // full path (k-means++ init, tol early stop, Hamerly bounds)
+        // must be bit-identical under every mode
+        let pts = two_blobs(170);
+        for k in [1usize, 4, 9] {
+            let base = KMeansConfig { k, workers: 2, ..Default::default() };
+            let scalar =
+                lloyd(&pts, 2, &KMeansConfig { kernel: KernelMode::Scalar, ..base.clone() })
+                    .unwrap();
+            for kernel in [KernelMode::Wide, KernelMode::Auto] {
+                let run = lloyd(&pts, 2, &KMeansConfig { kernel, ..base.clone() }).unwrap();
+                assert_eq!(scalar.centers, run.centers, "k={k} {kernel:?}");
+                assert_eq!(scalar.labels, run.labels, "k={k} {kernel:?}");
+                assert_eq!(scalar.counts, run.counts, "k={k} {kernel:?}");
+                assert_eq!(scalar.inertia.to_bits(), run.inertia.to_bits(), "k={k} {kernel:?}");
+                assert_eq!(scalar.iterations, run.iterations, "k={k} {kernel:?}");
+            }
         }
     }
 

@@ -9,6 +9,7 @@ use crate::cluster::Clusterer;
 use crate::data::Dataset;
 use crate::distance::nearest_sq;
 use crate::error::{Error, Result};
+use crate::kernel::KernelMode;
 use crate::util::rng::Pcg32;
 
 /// Mini-batch k-means configuration.
@@ -25,6 +26,8 @@ pub struct MiniBatchKMeans {
     /// pass today; the knob keeps the engine API uniform (and covers a
     /// future Lloyd refinement stage).
     pub bounds: BoundsMode,
+    /// Tile kernel for the final engine sweep.
+    pub kernel: KernelMode,
 }
 
 impl Default for MiniBatchKMeans {
@@ -36,6 +39,7 @@ impl Default for MiniBatchKMeans {
             seed: 0,
             workers: 1,
             bounds: BoundsMode::Hamerly,
+            kernel: KernelMode::session_default(),
         }
     }
 }
@@ -72,7 +76,9 @@ impl MiniBatchKMeans {
         // Lloyd iterations: one fused sweep yields labels, counts, and
         // inertia together (the old code paid two separate O(M·K·D)
         // scans here), honoring the bounds knob
-        let out = Engine::new(self.workers).lloyd_loop(points, dims, centers, 0, 0.0, self.bounds);
+        let out = Engine::new(self.workers)
+            .with_kernel(self.kernel)
+            .lloyd_loop(points, dims, centers, 0, 0.0, self.bounds);
         Ok(KMeansResult {
             centers: out.centers,
             labels: out.labels,

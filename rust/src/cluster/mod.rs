@@ -14,6 +14,7 @@ pub mod init;
 pub mod kmeans;
 pub mod minibatch;
 
+pub use crate::kernel::KernelMode;
 pub use engine::{BoundsMode, BoundsStats, CentroidPass, Engine, FusedPass, LloydLoopResult};
 pub use init::InitMethod;
 pub use kmeans::{lloyd, KMeansConfig, KMeansResult};

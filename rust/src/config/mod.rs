@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 
 use crate::cluster::BoundsMode;
 use crate::error::{Error, Result};
+use crate::kernel::KernelMode;
 use crate::partition::Scheme;
 use crate::pipeline::PipelineConfig;
 use crate::runtime::BackendKind;
@@ -202,6 +203,10 @@ impl AppConfig {
                 self.pipeline.bounds =
                     BoundsMode::parse(value.as_str().ok_or_else(|| bad("string"))?)?;
             }
+            "pipeline.kernel" => {
+                self.pipeline.kernel =
+                    KernelMode::parse(value.as_str().ok_or_else(|| bad("string"))?)?;
+            }
             "pipeline.seed" => {
                 self.pipeline.seed = value.as_usize().ok_or_else(|| bad("usize"))? as u64;
             }
@@ -223,6 +228,12 @@ impl AppConfig {
     pub fn apply_env(&mut self) -> Result<()> {
         for (k, v) in std::env::vars() {
             if let Some(rest) = k.strip_prefix("PARSAMPLE_") {
+                // tool-internal variables, not config keys: the bench
+                // profiles and the session-wide kernel override (see
+                // `KernelMode::session_default`)
+                if rest.starts_with("BENCH_") || rest == "KERNEL" {
+                    continue;
+                }
                 let key = rest.to_lowercase().replacen('_', ".", 1);
                 // values from env are strings; try bool/int/float first
                 let value = parse_value(&v, 0)
@@ -289,6 +300,7 @@ mod tests {
             num_groups = 12
             weighted_global = true
             bounds = "off"
+            kernel = "wide"
             [server]
             queue_depth = 3
             "#,
@@ -299,8 +311,11 @@ mod tests {
         assert_eq!(cfg.pipeline.num_groups, Some(12));
         assert!(cfg.pipeline.weighted_global);
         assert_eq!(cfg.pipeline.bounds, BoundsMode::Off);
+        assert_eq!(cfg.pipeline.kernel, KernelMode::Wide);
         assert_eq!(cfg.queue_depth, 3);
         let t = parse_toml_lite("[pipeline]\nbounds = \"banana\"\n").unwrap();
+        assert!(AppConfig::from_table(&t).is_err());
+        let t = parse_toml_lite("[pipeline]\nkernel = \"gpu\"\n").unwrap();
         assert!(AppConfig::from_table(&t).is_err());
     }
 

@@ -92,27 +92,42 @@ impl Metric {
     }
 }
 
-/// Hot-path squared euclidean distance.  Written as a single fold so
-/// LLVM auto-vectorizes; the 4-lane manual unroll below measured ~1.6×
-/// over the naive zip on x86-64 (see EXPERIMENTS.md §Perf).
-#[inline]
-pub fn sq_euclidean(a: &[f32], b: &[f32]) -> f32 {
+/// The one 4-lane accumulator fold under [`sq_euclidean`] and [`dot`]:
+/// `term(a[i], b[i])` summed with four lane accumulators over
+/// 4-element blocks, the left-associated reduce
+/// `((acc0 + acc1) + acc2) + acc3`, then a sequential tail.
+///
+/// The float summation order here is a *contract*, not an
+/// implementation detail: the engine parity suite, the Hamerly bound
+/// margins, and the wide tile kernel (which replays this exact order
+/// lane by lane — see `crate::kernel::wide`) all depend on it.  Do not
+/// reassociate.
+#[inline(always)]
+fn fold4(a: &[f32], b: &[f32], term: impl Fn(f32, f32) -> f32) -> f32 {
     let n = a.len();
     let mut acc = [0.0f32; 4];
     let chunks = n / 4;
     for i in 0..chunks {
         let base = i * 4;
         for lane in 0..4 {
-            let d = a[base + lane] - b[base + lane];
-            acc[lane] += d * d;
+            acc[lane] += term(a[base + lane], b[base + lane]);
         }
     }
     let mut total = acc[0] + acc[1] + acc[2] + acc[3];
     for i in chunks * 4..n {
-        let d = a[i] - b[i];
-        total += d * d;
+        total += term(a[i], b[i]);
     }
     total
+}
+
+/// Hot-path squared euclidean distance via [`fold4`] — the 4-lane
+/// manual unroll measured ~1.6× over the naive zip on x86-64.
+#[inline]
+pub fn sq_euclidean(a: &[f32], b: &[f32]) -> f32 {
+    fold4(a, b, |x, y| {
+        let d = x - y;
+        d * d
+    })
 }
 
 /// Index + distance of the nearest of `centers` (D-strided flat buffer)
@@ -131,32 +146,20 @@ pub fn nearest_sq(point: &[f32], centers: &[f32], dims: usize) -> (usize, f32) {
     best
 }
 
-/// Hot-path dot product with the same 4-lane accumulator trick as
-/// [`sq_euclidean`] (~1.6x over the naive fold on x86-64).
+/// Hot-path dot product, sharing [`fold4`]'s accumulator scaffolding
+/// (and therefore its exact summation order) with [`sq_euclidean`].
 ///
 /// This is THE dot product of the norm-hoisted distance form: every
 /// caller that expands |p−c|² as |p|² − 2p·c + |c|² must compute the
 /// dot, |p|², and |c|² through this one function so the float summation
 /// order — and therefore the argmin — is bit-identical across the
-/// scalar path, [`crate::cluster::engine`], and the parity suite.
-/// (In particular |p|² = `dot(p, p)` makes the self-distance exactly
-/// 0.0, which the k == m tests rely on.)
+/// scalar path, [`crate::cluster::engine`], every
+/// `crate::kernel::TileKernel`, and the parity suite.  (In particular
+/// |p|² = `dot(p, p)` makes the self-distance exactly 0.0, which the
+/// k == m tests rely on.)
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let mut acc = [0.0f32; 4];
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let base = i * 4;
-        for lane in 0..4 {
-            acc[lane] += a[base + lane] * b[base + lane];
-        }
-    }
-    let mut total = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..n {
-        total += a[i] * b[i];
-    }
-    total
+    fold4(a, b, |x, y| x * y)
 }
 
 /// Nearest center under squared euclidean with precomputed |c|^2 norms

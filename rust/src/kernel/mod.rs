@@ -1,0 +1,259 @@
+//! Pluggable tile kernels — the innermost argmin sweep of the blocked
+//! assignment engine as an extension point.
+//!
+//! [`crate::cluster::engine`] owns blocking (point chunks × center
+//! tiles), threading, and the Hamerly bound bookkeeping; everything
+//! below a chunk — "given ≤ [`POINT_CHUNK`] points and the center
+//! tiles, find each point's nearest (and second-nearest) center" — is a
+//! [`TileKernel`].  Two implementations ship today:
+//!
+//! * [`ScalarKernel`] — the original per-center scalar sweep, moved
+//!   here verbatim.  This is the semantic yardstick: every distance
+//!   flows through [`crate::distance::dot`], ties break to the lowest
+//!   index under a strict `<`, and the parity suite pins its output
+//!   against the un-blocked scalar path bit for bit.
+//! * [`WideKernel`] — an 8-lane kernel that packs each center tile
+//!   into lane-major groups and sweeps one point against [`LANES`]
+//!   centers per step (fixed-width lane arrays the compiler
+//!   auto-vectorizes; on x86_64 an `is_x86_feature_detected!("avx2")`
+//!   gated `target_feature` variant lets LLVM use 256-bit ops, with a
+//!   portable fallback everywhere else).  Its per-lane dot product
+//!   replays [`crate::distance::dot`]'s exact summation order (four
+//!   accumulators, left-associated reduce, sequential tail) and lanes
+//!   are reduced in increasing center order under the same strict `<`,
+//!   so labels, distances, and second-best distances are bit-identical
+//!   to [`ScalarKernel`] — the SIMD win comes from instruction-level
+//!   parallelism across *centers*, not from reassociating any float
+//!   sum.
+//!
+//! A kernel is used through a per-pass [`TilePlan`]: the engine hands
+//! the kernel its centers once per sweep and the kernel may transform
+//! the layout (the wide kernel packs lanes; a future device kernel
+//! would upload the centers here) so the per-chunk calls do no setup
+//! work at all.
+//!
+//! The [`KernelMode`] knob selects the kernel everywhere an engine is
+//! built (`KMeansConfig`, `PipelineConfig`, the `pipeline.kernel`
+//! config key, CLI `--kernel scalar|wide|auto`).  `Scalar` is the
+//! default — the bit-identical-argmin contract stays anchored on the
+//! original code path — and `Auto` picks `Wide` when the detected CPU
+//! features (or the dimensionality) make it a clear win.
+
+use std::sync::OnceLock;
+
+pub mod scalar;
+pub mod wide;
+
+pub use scalar::ScalarKernel;
+pub use wide::WideKernel;
+
+/// Points held against one center tile before advancing to the next
+/// tile.  64 points × (best, dist, |p|²) state fits comfortably in
+/// registers + L1 alongside the tile itself.
+pub const POINT_CHUNK: usize = 64;
+
+/// Lane width of [`WideKernel`]: centers swept per SIMD step (8 × f32
+/// = one AVX2 register; two NEON/SSE registers on narrower machines).
+pub const LANES: usize = 8;
+
+/// A per-pass execution plan built by [`TileKernel::plan`]: the
+/// centers (and whatever derived layout the kernel wants) captured
+/// once, then queried chunk by chunk.  Plans are shared read-only
+/// across the engine's worker threads.
+pub trait TilePlan: Send + Sync {
+    /// Argmin over all centers for the `cap` points starting at row
+    /// `s` (`cap` ≤ [`POINT_CHUNK`]), writing into the caller's
+    /// chunk-state arrays.  `pn[i]` is the cached `dot(p, p)` of row
+    /// `s + i`.  Resets `best_i`/`best_d` itself.  Centers are visited
+    /// in increasing index under a strict `<`, so ties break to the
+    /// lowest index.
+    #[allow(clippy::too_many_arguments)]
+    fn chunk_argmin(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        cap: usize,
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+    );
+
+    /// [`TilePlan::chunk_argmin`] for a scattered subset of one
+    /// chunk's points, also tracking the second-best distance (the
+    /// Hamerly lower-bound seed).  `surv[j]` are offsets within the
+    /// chunk starting at row `s`; `pn[surv[j]]` is the cached
+    /// `dot(p, p)` of row `s + surv[j]`; results land at position `j`
+    /// of the output arrays.  Labels and distances must be
+    /// bit-identical to what the dense sweep would produce for the
+    /// same rows.
+    #[allow(clippy::too_many_arguments)]
+    fn chunk_argmin2_gather(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        surv: &[u32],
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+        second: &mut [f32; POINT_CHUNK],
+    );
+
+    /// Squared distance from point row `i` to center `c`, evaluated
+    /// with exactly the expression the dense sweep uses, so a
+    /// bound-pruned point's carried distance is bit-identical to what
+    /// the full k-sweep would have kept for it.  `pn_i` is the cached
+    /// `dot(p, p)` of row `i`.
+    fn dist1(&self, points: &[f32], dims: usize, i: usize, c: usize, pn_i: f32) -> f32;
+}
+
+/// A tile-kernel strategy.  Stateless; per-sweep state lives in the
+/// [`TilePlan`] it builds.
+pub trait TileKernel: Send + Sync {
+    /// Short identifier for logs/benches.
+    fn name(&self) -> &'static str;
+
+    /// Build the per-pass plan for one set of centers.  `cnorm` holds
+    /// the precomputed `|c|²` values (via [`crate::distance::dot`]),
+    /// `ctile` is the engine's centers-per-tile blocking.
+    fn plan<'a>(
+        &self,
+        centers: &'a [f32],
+        cnorm: &'a [f32],
+        dims: usize,
+        ctile: usize,
+    ) -> Box<dyn TilePlan + 'a>;
+}
+
+/// The one norm-hoisted single-distance expression behind every
+/// [`TilePlan::dist1`]: `|p|² − 2·p·c + |c|²`, all through
+/// [`crate::distance::dot`], clamped at 0.  Shared so the
+/// bit-exactness contract (a pruned point's carried distance equals
+/// what the dense sweep would have kept) lives in exactly one place.
+#[inline]
+pub(crate) fn norm_hoisted_dist(
+    points: &[f32],
+    dims: usize,
+    i: usize,
+    centers: &[f32],
+    cnorm: &[f32],
+    c: usize,
+    pn_i: f32,
+) -> f32 {
+    let p = &points[i * dims..(i + 1) * dims];
+    let cc = &centers[c * dims..(c + 1) * dims];
+    (pn_i - 2.0 * crate::distance::dot(p, cc) + cnorm[c]).max(0.0)
+}
+
+/// The singleton [`ScalarKernel`].
+pub static SCALAR: ScalarKernel = ScalarKernel;
+
+/// The singleton [`WideKernel`].
+pub static WIDE: WideKernel = WideKernel;
+
+/// Which tile kernel the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// The original per-center scalar sweep — the default and the
+    /// bit-identical yardstick.
+    #[default]
+    Scalar,
+    /// The 8-lane packed kernel ([`WideKernel`]).
+    Wide,
+    /// Pick [`KernelMode::Wide`] when the detected CPU features (or
+    /// the dimensionality) make it a clear win, else fall back to
+    /// [`KernelMode::Scalar`].
+    Auto,
+}
+
+impl KernelMode {
+    pub fn parse(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "scalar" => Ok(KernelMode::Scalar),
+            "wide" | "simd" => Ok(KernelMode::Wide),
+            "auto" => Ok(KernelMode::Auto),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown kernel mode '{other}' (expected scalar|wide|auto)"
+            ))),
+        }
+    }
+
+    /// Resolve the mode to a concrete kernel for one sweep.  `dims`
+    /// feeds the `Auto` heuristic.
+    pub fn resolve(self, dims: usize) -> &'static dyn TileKernel {
+        match self {
+            KernelMode::Scalar => &SCALAR,
+            KernelMode::Wide => &WIDE,
+            KernelMode::Auto => {
+                if wide_profitable(dims) {
+                    &WIDE
+                } else {
+                    &SCALAR
+                }
+            }
+        }
+    }
+
+    /// Process-wide default: `PARSAMPLE_KERNEL=scalar|wide|auto` when
+    /// set (CI runs the whole test suite once per mode through this),
+    /// else [`KernelMode::Scalar`].  Read once and cached.
+    pub fn session_default() -> KernelMode {
+        static MODE: OnceLock<KernelMode> = OnceLock::new();
+        *MODE.get_or_init(|| match std::env::var("PARSAMPLE_KERNEL") {
+            Ok(v) => KernelMode::parse(&v).unwrap_or_else(|e| {
+                eprintln!("warning: ignoring PARSAMPLE_KERNEL: {e}");
+                KernelMode::Scalar
+            }),
+            Err(_) => KernelMode::Scalar,
+        })
+    }
+}
+
+/// `Auto` heuristic: the wide kernel wins whenever the target has
+/// ≥ 256-bit vectors (x86_64 with AVX2) or baseline 128-bit SIMD with
+/// cheap lane ops (aarch64 NEON); on anything older it still wins once
+/// the per-center dot is long enough to amortize the lane traffic.
+fn wide_profitable(dims: usize) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return true;
+        }
+    }
+    if cfg!(target_arch = "aarch64") {
+        return true;
+    }
+    dims >= 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_modes() {
+        assert_eq!(KernelMode::parse("scalar").unwrap(), KernelMode::Scalar);
+        assert_eq!(KernelMode::parse("wide").unwrap(), KernelMode::Wide);
+        assert_eq!(KernelMode::parse("simd").unwrap(), KernelMode::Wide);
+        assert_eq!(KernelMode::parse("auto").unwrap(), KernelMode::Auto);
+        assert!(KernelMode::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn default_is_scalar() {
+        // the bit-identical-argmin contract anchors on the scalar path
+        assert_eq!(KernelMode::default(), KernelMode::Scalar);
+    }
+
+    #[test]
+    fn resolve_fixed_modes() {
+        assert_eq!(KernelMode::Scalar.resolve(16).name(), "scalar");
+        assert_eq!(KernelMode::Wide.resolve(16).name(), "wide");
+        // auto resolves to one of the two, whatever the host is
+        let auto = KernelMode::Auto.resolve(16).name();
+        assert!(auto == "scalar" || auto == "wide", "{auto}");
+        // high dims always have enough work for the portable wide path
+        assert_eq!(KernelMode::Auto.resolve(64).name(), "wide");
+    }
+}

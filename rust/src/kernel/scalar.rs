@@ -1,0 +1,134 @@
+//! The original per-center scalar tile kernel, moved verbatim from the
+//! engine.  Every distance is `|p|² − 2·p·c + |c|²` with all three
+//! terms through [`crate::distance::dot`], clamped at 0, and centers
+//! are scanned in increasing index under a strict `<` — the
+//! bit-identical-argmin yardstick the parity suite pins down.
+
+use super::{TileKernel, TilePlan, POINT_CHUNK};
+use crate::distance;
+
+/// The scalar tile kernel (see module doc).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarKernel;
+
+impl TileKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn plan<'a>(
+        &self,
+        centers: &'a [f32],
+        cnorm: &'a [f32],
+        _dims: usize,
+        ctile: usize,
+    ) -> Box<dyn TilePlan + 'a> {
+        Box::new(ScalarPlan { centers, cnorm, ctile })
+    }
+}
+
+/// Per-pass state of the scalar kernel: just borrows of the centers
+/// and their norms — no layout transform.
+struct ScalarPlan<'a> {
+    centers: &'a [f32],
+    cnorm: &'a [f32],
+    ctile: usize,
+}
+
+impl TilePlan for ScalarPlan<'_> {
+    /// The tiled inner sweep.  Point chunks stream against center
+    /// tiles of `ctile` rows; the running (best, dist) per point
+    /// carries across tiles, and because tiles are visited in
+    /// increasing center order under a strict `<`, ties break to the
+    /// lowest index exactly like the un-blocked scalar path.
+    fn chunk_argmin(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        cap: usize,
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+    ) {
+        let k = self.cnorm.len();
+        for i in 0..cap {
+            best_i[i] = 0;
+            best_d[i] = f32::INFINITY;
+        }
+        let mut t0 = 0usize;
+        while t0 < k {
+            let t1 = (t0 + self.ctile).min(k);
+            let tile = &self.centers[t0 * dims..t1 * dims];
+            let tnorm = &self.cnorm[t0..t1];
+            for i in 0..cap {
+                let p = &points[(s + i) * dims..(s + i + 1) * dims];
+                let (mut bi, mut bd) = (best_i[i], best_d[i]);
+                for (tc, cc) in tile.chunks_exact(dims).enumerate() {
+                    let d = (pn[i] - 2.0 * distance::dot(p, cc) + tnorm[tc]).max(0.0);
+                    if d < bd {
+                        bd = d;
+                        bi = (t0 + tc) as u32;
+                    }
+                }
+                best_i[i] = bi;
+                best_d[i] = bd;
+            }
+            t0 = t1;
+        }
+    }
+
+    /// The gather sweep over Hamerly survivors, tracking second-best.
+    /// Tiles are visited in the same increasing center order under the
+    /// same strict `<`, so labels and best distances are bit-identical
+    /// to the dense sweep.
+    fn chunk_argmin2_gather(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        surv: &[u32],
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+        second: &mut [f32; POINT_CHUNK],
+    ) {
+        let k = self.cnorm.len();
+        let n = surv.len();
+        for j in 0..n {
+            best_i[j] = 0;
+            best_d[j] = f32::INFINITY;
+            second[j] = f32::INFINITY;
+        }
+        let mut t0 = 0usize;
+        while t0 < k {
+            let t1 = (t0 + self.ctile).min(k);
+            let tile = &self.centers[t0 * dims..t1 * dims];
+            let tnorm = &self.cnorm[t0..t1];
+            for j in 0..n {
+                let row = s + surv[j] as usize;
+                let p = &points[row * dims..(row + 1) * dims];
+                let (mut bi, mut bd, mut b2) = (best_i[j], best_d[j], second[j]);
+                for (tc, cc) in tile.chunks_exact(dims).enumerate() {
+                    let d =
+                        (pn[surv[j] as usize] - 2.0 * distance::dot(p, cc) + tnorm[tc]).max(0.0);
+                    if d < bd {
+                        b2 = bd;
+                        bd = d;
+                        bi = (t0 + tc) as u32;
+                    } else if d < b2 {
+                        b2 = d;
+                    }
+                }
+                best_i[j] = bi;
+                best_d[j] = bd;
+                second[j] = b2;
+            }
+            t0 = t1;
+        }
+    }
+
+    fn dist1(&self, points: &[f32], dims: usize, i: usize, c: usize, pn_i: f32) -> f32 {
+        super::norm_hoisted_dist(points, dims, i, self.centers, self.cnorm, c, pn_i)
+    }
+}

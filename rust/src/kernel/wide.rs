@@ -1,0 +1,475 @@
+//! The 8-lane packed tile kernel.
+//!
+//! [`WideKernel`] gets its speed from instruction-level parallelism
+//! across *centers*: [`WideKernel::plan`] repacks each center tile
+//! into lane-major groups of [`LANES`] centers (`packed[g][j][l]` =
+//! coordinate `j` of the group's lane-`l` center), so the inner sweep
+//! broadcasts one point coordinate against 8 contiguous center
+//! coordinates per step — the shape LLVM auto-vectorizes into full
+//! vector multiply-adds.  On x86_64 the sweep additionally runs
+//! through an `is_x86_feature_detected!("avx2")`-gated
+//! `#[target_feature]` variant so those lane arrays become single
+//! 256-bit registers; everywhere else the portable build vectorizes to
+//! whatever the baseline ISA offers (SSE2, NEON).
+//!
+//! **Numerics.**  The per-lane dot product in [`dot_lanes`] replays
+//! [`crate::distance::dot`]'s summation order exactly — four
+//! accumulators over 4-coordinate blocks, a left-associated reduce,
+//! then a sequential tail — and each lane's distance uses the same
+//! `|p|² − 2·p·c + |c|²`-clamped-at-0 expression on the same cached
+//! norms.  The lane reduction visits lanes in increasing center order
+//! under a strict `<`, so the lowest-index tie rule is preserved.  The
+//! result: labels, best distances, and second-best distances are
+//! bit-identical to [`super::ScalarKernel`]'s (the kernel-parity suite
+//! asserts this), and the engine's Hamerly bound margins — sized for
+//! the worst-case f32 rounding of that shared expression — stay valid
+//! unchanged.
+//!
+//! **Bounds pruning composes.**  The Hamerly survivor sweep arrives as
+//! a scattered offset list; points are swept one at a time against
+//! dense center lanes, so survivor compaction is free — every vector
+//! lane does useful work no matter how many points were pruned — and
+//! the second-best tracking the lower bound needs lives inside the
+//! same lane reduction.
+//!
+//! Tail centers (tile size not a multiple of [`LANES`]) ride in padded
+//! lanes with zero coordinates and `|c|² = +∞`: their distances are
+//! `+∞`, which a strict `<` can never select.
+
+use super::{TileKernel, TilePlan, LANES, POINT_CHUNK};
+
+/// The 8-lane packed tile kernel (see module doc).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WideKernel;
+
+impl TileKernel for WideKernel {
+    fn name(&self) -> &'static str {
+        "wide"
+    }
+
+    fn plan<'a>(
+        &self,
+        centers: &'a [f32],
+        cnorm: &'a [f32],
+        dims: usize,
+        ctile: usize,
+    ) -> Box<dyn TilePlan + 'a> {
+        Box::new(WidePlan::build(centers, cnorm, dims, ctile))
+    }
+}
+
+/// One lane-major center tile: `groups` groups of [`LANES`] centers
+/// starting at center index `c0`, at `buf_off`/`tn_off` in the plan's
+/// packed buffers.
+struct TileSpan {
+    c0: usize,
+    groups: usize,
+    buf_off: usize,
+    tn_off: usize,
+}
+
+/// Per-pass state of the wide kernel: the centers repacked lane-major
+/// per tile (plus the original borrows for [`TilePlan::dist1`]).
+struct WidePlan<'a> {
+    centers: &'a [f32],
+    cnorm: &'a [f32],
+    /// Lane-major center coordinates, `dims × LANES` floats per group.
+    packed: Vec<f32>,
+    /// Lane-major `|c|²` per group; padded lanes hold `+∞`.
+    tn: Vec<f32>,
+    tiles: Vec<TileSpan>,
+    #[cfg(target_arch = "x86_64")]
+    avx2: bool,
+}
+
+impl<'a> WidePlan<'a> {
+    fn build(centers: &'a [f32], cnorm: &'a [f32], dims: usize, ctile: usize) -> WidePlan<'a> {
+        let k = cnorm.len();
+        let ctile = ctile.max(1);
+        // every tile pads its last group up to LANES, so the exact
+        // total is Σ ceil(count_t / LANES); ceil(k/LANES) + one group
+        // per tile is a cheap upper bound that avoids mid-build growth
+        let n_tiles = k.div_ceil(ctile);
+        let max_groups = k.div_ceil(LANES) + n_tiles;
+        let mut packed = Vec::with_capacity(max_groups * LANES * dims);
+        let mut tn = Vec::with_capacity(max_groups * LANES);
+        let mut tiles = Vec::with_capacity(n_tiles);
+        let mut t0 = 0usize;
+        while t0 < k {
+            let t1 = (t0 + ctile).min(k);
+            let count = t1 - t0;
+            let groups = count.div_ceil(LANES);
+            let buf_off = packed.len();
+            let tn_off = tn.len();
+            packed.resize(buf_off + groups * dims * LANES, 0.0);
+            tn.resize(tn_off + groups * LANES, f32::INFINITY);
+            for c in 0..count {
+                let (g, l) = (c / LANES, c % LANES);
+                let row = &centers[(t0 + c) * dims..(t0 + c + 1) * dims];
+                let gb = buf_off + g * dims * LANES;
+                for (j, &x) in row.iter().enumerate() {
+                    packed[gb + j * LANES + l] = x;
+                }
+                tn[tn_off + g * LANES + l] = cnorm[t0 + c];
+            }
+            tiles.push(TileSpan { c0: t0, groups, buf_off, tn_off });
+            t0 = t1;
+        }
+        WidePlan {
+            centers,
+            cnorm,
+            packed,
+            tn,
+            tiles,
+            #[cfg(target_arch = "x86_64")]
+            avx2: is_x86_feature_detected!("avx2"),
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn dense_avx2(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        cap: usize,
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+    ) {
+        self.dense_body(points, dims, s, cap, pn, best_i, best_d);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn gather_avx2(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        surv: &[u32],
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+        second: &mut [f32; POINT_CHUNK],
+    ) {
+        self.gather_body(points, dims, s, surv, pn, best_i, best_d, second);
+    }
+
+    /// The dense sweep (portable body; compiled a second time under
+    /// AVX2 via [`WidePlan::dense_avx2`]).
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    fn dense_body(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        cap: usize,
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+    ) {
+        for i in 0..cap {
+            best_i[i] = 0;
+            best_d[i] = f32::INFINITY;
+        }
+        for tile in &self.tiles {
+            for i in 0..cap {
+                let p = &points[(s + i) * dims..(s + i + 1) * dims];
+                let (mut bi, mut bd) = (best_i[i], best_d[i]);
+                for g in 0..tile.groups {
+                    let gb = tile.buf_off + g * dims * LANES;
+                    let tot = dot_lanes(p, &self.packed[gb..gb + dims * LANES]);
+                    let tb = tile.tn_off + g * LANES;
+                    for l in 0..LANES {
+                        let d = (pn[i] - 2.0 * tot[l] + self.tn[tb + l]).max(0.0);
+                        if d < bd {
+                            bd = d;
+                            bi = (tile.c0 + g * LANES + l) as u32;
+                        }
+                    }
+                }
+                best_i[i] = bi;
+                best_d[i] = bd;
+            }
+        }
+    }
+
+    /// The survivor gather sweep with second-best tracking (portable
+    /// body; compiled a second time under AVX2 via
+    /// [`WidePlan::gather_avx2`]).
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    fn gather_body(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        surv: &[u32],
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+        second: &mut [f32; POINT_CHUNK],
+    ) {
+        let n = surv.len();
+        for j in 0..n {
+            best_i[j] = 0;
+            best_d[j] = f32::INFINITY;
+            second[j] = f32::INFINITY;
+        }
+        for tile in &self.tiles {
+            for j in 0..n {
+                let row = s + surv[j] as usize;
+                let p = &points[row * dims..(row + 1) * dims];
+                let pn_j = pn[surv[j] as usize];
+                let (mut bi, mut bd, mut b2) = (best_i[j], best_d[j], second[j]);
+                for g in 0..tile.groups {
+                    let gb = tile.buf_off + g * dims * LANES;
+                    let tot = dot_lanes(p, &self.packed[gb..gb + dims * LANES]);
+                    let tb = tile.tn_off + g * LANES;
+                    for l in 0..LANES {
+                        let d = (pn_j - 2.0 * tot[l] + self.tn[tb + l]).max(0.0);
+                        if d < bd {
+                            b2 = bd;
+                            bd = d;
+                            bi = (tile.c0 + g * LANES + l) as u32;
+                        } else if d < b2 {
+                            b2 = d;
+                        }
+                    }
+                }
+                best_i[j] = bi;
+                best_d[j] = bd;
+                second[j] = b2;
+            }
+        }
+    }
+}
+
+impl TilePlan for WidePlan<'_> {
+    fn chunk_argmin(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        cap: usize,
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            // SAFETY: avx2 presence was verified at plan build time.
+            unsafe { self.dense_avx2(points, dims, s, cap, pn, best_i, best_d) };
+            return;
+        }
+        self.dense_body(points, dims, s, cap, pn, best_i, best_d);
+    }
+
+    fn chunk_argmin2_gather(
+        &self,
+        points: &[f32],
+        dims: usize,
+        s: usize,
+        surv: &[u32],
+        pn: &[f32],
+        best_i: &mut [u32; POINT_CHUNK],
+        best_d: &mut [f32; POINT_CHUNK],
+        second: &mut [f32; POINT_CHUNK],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            // SAFETY: avx2 presence was verified at plan build time.
+            unsafe { self.gather_avx2(points, dims, s, surv, pn, best_i, best_d, second) };
+            return;
+        }
+        self.gather_body(points, dims, s, surv, pn, best_i, best_d, second);
+    }
+
+    fn dist1(&self, points: &[f32], dims: usize, i: usize, c: usize, pn_i: f32) -> f32 {
+        // the packed lane dot replays distance::dot's summation order
+        // exactly, so the shared scalar expression reproduces the
+        // dense sweep's value bit for bit
+        super::norm_hoisted_dist(points, dims, i, self.centers, self.cnorm, c, pn_i)
+    }
+}
+
+/// Dot products of one point against [`LANES`] packed centers
+/// (`block[j * LANES + l]` = coordinate `j` of the lane-`l` center).
+///
+/// Each lane replays [`crate::distance::dot`]'s float summation order
+/// exactly: four accumulators striped over 4-coordinate blocks, the
+/// left-associated reduce `((a0 + a1) + a2) + a3`, then the remaining
+/// coordinates folded sequentially.  Keeping that order is what makes
+/// the wide kernel bit-identical to the scalar one — do not
+/// reassociate it.
+#[inline(always)]
+fn dot_lanes(p: &[f32], block: &[f32]) -> [f32; LANES] {
+    let dims = p.len();
+    let mut acc = [[0.0f32; LANES]; 4];
+    let chunks = dims / 4;
+    for c in 0..chunks {
+        let jb = c * 4;
+        for jj in 0..4 {
+            let pj = p[jb + jj];
+            let rb = (jb + jj) * LANES;
+            for l in 0..LANES {
+                acc[jj][l] += pj * block[rb + l];
+            }
+        }
+    }
+    let mut tot = [0.0f32; LANES];
+    for l in 0..LANES {
+        tot[l] = ((acc[0][l] + acc[1][l]) + acc[2][l]) + acc[3][l];
+    }
+    for j in chunks * 4..dims {
+        let pj = p[j];
+        let rb = j * LANES;
+        for l in 0..LANES {
+            tot[l] += pj * block[rb + l];
+        }
+    }
+    tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::{self, center_norms};
+    use crate::kernel::{ScalarKernel, SCALAR, WIDE};
+    use crate::util::rng::Pcg32;
+
+    fn cloud(n: usize, dims: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n * dims).map(|_| rng.uniform(-4.0, 4.0)).collect()
+    }
+
+    /// Pack `lanes` center rows and check [`dot_lanes`] against
+    /// [`distance::dot`] bit for bit, per lane, across dims including
+    /// every 4-block tail shape.
+    #[test]
+    fn dot_lanes_bit_matches_distance_dot() {
+        for dims in [1usize, 2, 3, 4, 5, 7, 8, 9, 12, 16, 17, 31, 32, 33] {
+            let p = cloud(1, dims, dims as u64);
+            let centers = cloud(LANES, dims, 100 + dims as u64);
+            let mut block = vec![0.0f32; dims * LANES];
+            for l in 0..LANES {
+                for j in 0..dims {
+                    block[j * LANES + l] = centers[l * dims + j];
+                }
+            }
+            let tot = dot_lanes(&p, &block);
+            for l in 0..LANES {
+                let want = distance::dot(&p, &centers[l * dims..(l + 1) * dims]);
+                assert_eq!(
+                    tot[l].to_bits(),
+                    want.to_bits(),
+                    "dims={dims} lane={l}: {} vs {want}",
+                    tot[l]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_dims_dot_is_positive_zero() {
+        // dims = 0 never happens in the engine, but the fold must not
+        // produce -0.0 from the empty reduce (distance::dot returns +0)
+        let tot = dot_lanes(&[], &[]);
+        assert_eq!(tot, [0.0f32; LANES]);
+        assert!(tot.iter().all(|t| t.to_bits() == 0));
+    }
+
+    /// Dense chunk sweep: wide plan output is bit-identical to the
+    /// scalar plan on random data, including k not a multiple of the
+    /// lane width (padded lanes must stay inert).
+    #[test]
+    fn dense_chunk_bit_matches_scalar_plan() {
+        use crate::kernel::TileKernel;
+        for dims in [1usize, 3, 5, 8, 9, 17] {
+            for k in [1usize, 2, 7, 8, 9, 13, 24] {
+                let m = POINT_CHUNK + 11; // one full chunk + a short one
+                let pts = cloud(m, dims, 7 + dims as u64);
+                let centers = cloud(k, dims, 900 + k as u64);
+                let cnorm = center_norms(&centers, dims);
+                let pn: Vec<f32> = pts.chunks_exact(dims).map(|p| distance::dot(p, p)).collect();
+                let sp = SCALAR.plan(&centers, &cnorm, dims, 5);
+                let wp = WIDE.plan(&centers, &cnorm, dims, 5);
+                let mut s = 0usize;
+                while s < m {
+                    let cap = POINT_CHUNK.min(m - s);
+                    let (mut si, mut sd) = ([0u32; POINT_CHUNK], [0.0f32; POINT_CHUNK]);
+                    let (mut wi, mut wd) = ([0u32; POINT_CHUNK], [0.0f32; POINT_CHUNK]);
+                    sp.chunk_argmin(&pts, dims, s, cap, &pn[s..s + cap], &mut si, &mut sd);
+                    wp.chunk_argmin(&pts, dims, s, cap, &pn[s..s + cap], &mut wi, &mut wd);
+                    assert_eq!(si[..cap], wi[..cap], "dims={dims} k={k} s={s}");
+                    for i in 0..cap {
+                        assert_eq!(
+                            sd[i].to_bits(),
+                            wd[i].to_bits(),
+                            "dims={dims} k={k} s={s} i={i}"
+                        );
+                    }
+                    s += cap;
+                }
+            }
+        }
+    }
+
+    /// Gather sweep over a scattered survivor subset: wide output
+    /// (including second-best) is bit-identical to scalar, and both
+    /// agree with their own dense sweep on the surviving rows.
+    #[test]
+    fn gather_chunk_bit_matches_scalar_plan() {
+        use crate::kernel::TileKernel;
+        let (dims, k, m) = (9usize, 13usize, 40usize);
+        let pts = cloud(m, dims, 5);
+        let centers = cloud(k, dims, 55);
+        let cnorm = center_norms(&centers, dims);
+        let pn: Vec<f32> = pts.chunks_exact(dims).map(|p| distance::dot(p, p)).collect();
+        let sp = ScalarKernel.plan(&centers, &cnorm, dims, 4);
+        let wp = WideKernel.plan(&centers, &cnorm, dims, 4);
+        // every 3rd point survives — a sparse scatter like a >60% skip
+        let surv: Vec<u32> = (0..m as u32).step_by(3).collect();
+        let mut si = [0u32; POINT_CHUNK];
+        let mut sd = [0.0f32; POINT_CHUNK];
+        let mut s2 = [0.0f32; POINT_CHUNK];
+        let mut wi = [0u32; POINT_CHUNK];
+        let mut wd = [0.0f32; POINT_CHUNK];
+        let mut w2 = [0.0f32; POINT_CHUNK];
+        sp.chunk_argmin2_gather(&pts, dims, 0, &surv, &pn, &mut si, &mut sd, &mut s2);
+        wp.chunk_argmin2_gather(&pts, dims, 0, &surv, &pn, &mut wi, &mut wd, &mut w2);
+        for j in 0..surv.len() {
+            assert_eq!(si[j], wi[j], "j={j}");
+            assert_eq!(sd[j].to_bits(), wd[j].to_bits(), "j={j}");
+            assert_eq!(s2[j].to_bits(), w2[j].to_bits(), "j={j}");
+        }
+        // dist1 must reproduce the dense value for the winning center
+        for (j, &off) in surv.iter().enumerate() {
+            let d = wp.dist1(&pts, dims, off as usize, wi[j] as usize, pn[off as usize]);
+            assert_eq!(d.to_bits(), wd[j].to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn duplicate_centers_tie_to_lowest_lane() {
+        use crate::kernel::TileKernel;
+        // 19 identical centers span two groups and two tiles (ctile 10):
+        // the winner must always be lane/center 0
+        let dims = 3;
+        let one = cloud(1, dims, 1);
+        let centers: Vec<f32> = (0..19).flat_map(|_| one.clone()).collect();
+        let cnorm = center_norms(&centers, dims);
+        let pts = cloud(30, dims, 2);
+        let pn: Vec<f32> = pts.chunks_exact(dims).map(|p| distance::dot(p, p)).collect();
+        let wp = WideKernel.plan(&centers, &cnorm, dims, 10);
+        let mut bi = [0u32; POINT_CHUNK];
+        let mut bd = [0.0f32; POINT_CHUNK];
+        wp.chunk_argmin(&pts, dims, 0, 30, &pn, &mut bi, &mut bd);
+        assert!(bi[..30].iter().all(|&l| l == 0), "{:?}", &bi[..30]);
+    }
+}

@@ -37,6 +37,7 @@ pub mod data;
 pub mod distance;
 pub mod error;
 pub mod eval;
+pub mod kernel;
 pub mod partition;
 pub mod pipeline;
 pub mod runtime;

@@ -20,6 +20,7 @@ use parsample::coordinator::SchedulerConfig;
 use parsample::data::{builtin, loader, synthetic, Dataset};
 use parsample::error::{Error, Result};
 use parsample::eval;
+use parsample::kernel::KernelMode;
 use parsample::partition::Scheme;
 use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
 use parsample::runtime::{BackendKind, Manifest};
@@ -63,10 +64,10 @@ fn print_usage() {
          commands:\n\
          \x20 cluster   --data <iris|seeds|file.csv|file.bin> --k K [--scheme equal|unequal|random]\n\
          \x20           [--groups G] [--compression C] [--backend native|pjrt] [--workers W]\n\
-         \x20           [--bounds off|hamerly] [--artifacts DIR] [--seed S] [--config cfg.toml]\n\
-         \x20           [--eval] [--out FILE]\n\
+         \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--artifacts DIR]\n\
+         \x20           [--seed S] [--config cfg.toml] [--eval] [--out FILE]\n\
          \x20 baseline  --data ... --k K [--iters N] [--seed S] [--workers W]\n\
-         \x20           [--bounds off|hamerly] [--eval]\n\
+         \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--eval]\n\
          \x20           traditional k-means (single Lloyd loop on the blocked engine)\n\
          \x20 generate  --size M [--seed S] --out FILE[.csv|.bin]          paper synthetic workload\n\
          \x20 partition --data ... --groups G [--scheme ...]               dump group sizes\n\
@@ -78,7 +79,10 @@ fn print_usage() {
          (the optional --weighted-global stage chunks by worker and is not).\n\
          --bounds hamerly (default) carries per-point distance bounds across Lloyd\n\
          iterations so converged points skip the k-sweep; output is bit-identical\n\
-         to --bounds off — only the wall time changes."
+         to --bounds off — only the wall time changes.\n\
+         --kernel selects the engine's tile kernel: scalar (default), wide (8-lane\n\
+         SIMD sweep, bit-identical to scalar), or auto (wide when the detected CPU\n\
+         features warrant it).  PARSAMPLE_KERNEL=... overrides the default."
     );
 }
 
@@ -176,6 +180,7 @@ fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
         .weighted_global(app.pipeline.weighted_global)
         .global_iters(app.pipeline.global_iters)
         .bounds(app.pipeline.bounds)
+        .kernel(app.pipeline.kernel)
         .seed(app.pipeline.seed);
     if let Some(g) = app.pipeline.num_groups {
         b = b.num_groups(g);
@@ -203,6 +208,9 @@ fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
     }
     if let Some(bm) = flags.get("bounds") {
         b = b.bounds(BoundsMode::parse(bm)?);
+    }
+    if let Some(km) = flags.get("kernel") {
+        b = b.kernel(KernelMode::parse(km)?);
     }
     if let Some(s) = flags.usize("seed")? {
         b = b.seed(s as u64);
@@ -267,9 +275,14 @@ fn cmd_baseline(flags: &Flags) -> Result<()> {
         Some(s) => BoundsMode::parse(s)?,
         None => BoundsMode::default(),
     };
+    let kernel = match flags.get("kernel") {
+        Some(s) => KernelMode::parse(s)?,
+        None => KernelMode::session_default(),
+    };
     let t0 = std::time::Instant::now();
-    let r =
-        parsample::pipeline::traditional_kmeans_workers(&data, k, iters, seed, 5, workers, bounds)?;
+    let r = parsample::pipeline::traditional_kmeans_workers(
+        &data, k, iters, seed, 5, workers, bounds, kernel,
+    )?;
     println!(
         "traditional kmeans: {} points, k={k}, {} iters | inertia {:.6} | {:.1} ms",
         data.len(),

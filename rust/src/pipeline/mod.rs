@@ -19,6 +19,7 @@ use crate::coordinator::batcher::{Batcher, LocalResult};
 use crate::data::scaling::{MinMaxScaler, Scaler};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::kernel::KernelMode;
 use crate::partition::Scheme;
 use crate::runtime::{Backend, BackendKind, DeviceBatch, NativeBackend, PjrtBackend};
 use crate::telemetry::{timed, StageTimings};
@@ -62,6 +63,9 @@ pub struct PipelineConfig {
     /// Hamerly bound pruning for the (unweighted) global-stage Lloyd
     /// loop on the blocked engine; bit-identical output either way.
     pub bounds: BoundsMode,
+    /// Tile kernel for the engine sweeps (global stage + full
+    /// assignment); the wide kernel is bit-identical to scalar.
+    pub kernel: KernelMode,
     pub seed: u64,
 }
 
@@ -79,6 +83,7 @@ impl Default for PipelineConfig {
             global_iters: 20,
             weighted_global: false,
             bounds: BoundsMode::Hamerly,
+            kernel: KernelMode::session_default(),
             seed: 0,
         }
     }
@@ -172,6 +177,11 @@ impl PipelineConfigBuilder {
 
     pub fn bounds(mut self, b: BoundsMode) -> Self {
         self.cfg.bounds = b;
+        self
+    }
+
+    pub fn kernel(mut self, k: KernelMode) -> Self {
+        self.cfg.kernel = k;
         self
     }
 
@@ -364,6 +374,7 @@ impl SubclusterPipeline {
             dims,
             &global.centers,
             self.cfg.workers,
+            self.cfg.kernel,
         );
         let centers = global.centers.clone();
         let _ = &scaler; // scaler only shaped the partition landmarks
@@ -473,7 +484,8 @@ impl SubclusterPipeline {
         } else {
             // unit weights: the fused blocked engine path (no per-point
             // weight multiplies, tiled centers, fixed global_iters),
-            // with Hamerly pruning per the pipeline's bounds knob
+            // with Hamerly pruning and the tile kernel per the
+            // pipeline's knobs
             lloyd_from_with(
                 pooled,
                 dims,
@@ -482,6 +494,7 @@ impl SubclusterPipeline {
                 0.0,
                 self.cfg.workers,
                 self.cfg.bounds,
+                self.cfg.kernel,
             )
         }
     }
@@ -725,8 +738,9 @@ pub fn assign_full(
     dims: usize,
     centers: &[f32],
     workers: usize,
+    kernel: KernelMode,
 ) -> (Vec<u32>, Vec<u32>, f64) {
-    let pass = Engine::new(workers).assign_accumulate(points, dims, centers);
+    let pass = Engine::new(workers).with_kernel(kernel).assign_accumulate(points, dims, centers);
     (pass.labels, pass.counts, pass.inertia)
 }
 
@@ -756,12 +770,22 @@ pub fn traditional_kmeans_restarts(
     seed: u64,
     restarts: u64,
 ) -> Result<KMeansResult> {
-    traditional_kmeans_workers(data, k, max_iters, seed, restarts, 1, BoundsMode::default())
+    traditional_kmeans_workers(
+        data,
+        k,
+        max_iters,
+        seed,
+        restarts,
+        1,
+        BoundsMode::default(),
+        KernelMode::session_default(),
+    )
 }
 
-/// [`traditional_kmeans_restarts`] with the engine worker and bounds
-/// knobs exposed (the CLI `baseline --workers/--bounds` path; results
-/// are bit-identical at every worker count and in both bounds modes).
+/// [`traditional_kmeans_restarts`] with the engine worker, bounds, and
+/// kernel knobs exposed (the CLI `baseline --workers/--bounds/--kernel`
+/// path; results are bit-identical at every worker count, in both
+/// bounds modes, and under every tile kernel).
 #[allow(clippy::too_many_arguments)]
 pub fn traditional_kmeans_workers(
     data: &Dataset,
@@ -771,6 +795,7 @@ pub fn traditional_kmeans_workers(
     restarts: u64,
     workers: usize,
     bounds: BoundsMode,
+    kernel: KernelMode,
 ) -> Result<KMeansResult> {
     let mut best: Option<KMeansResult> = None;
     for trial in 0..restarts.max(1) {
@@ -782,6 +807,7 @@ pub fn traditional_kmeans_workers(
             seed: seed ^ trial.wrapping_mul(0x9e37_79b9_7f4a_7c15),
             workers,
             bounds,
+            kernel,
         };
         let r = crate::cluster::lloyd(data.as_slice(), data.dims(), &cfg)?;
         if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {
@@ -926,6 +952,26 @@ mod tests {
     }
 
     #[test]
+    fn kernel_knob_does_not_change_pipeline_output() {
+        let data = blobs(900, 4, 10);
+        let mk = |k: KernelMode| {
+            PipelineConfig::builder()
+                .final_k(4)
+                .num_groups(5)
+                .compression(4.0)
+                .kernel(k)
+                .build()
+                .unwrap()
+        };
+        let scalar = SubclusterPipeline::new(mk(KernelMode::Scalar)).run(&data).unwrap();
+        let wide = SubclusterPipeline::new(mk(KernelMode::Wide)).run(&data).unwrap();
+        assert_eq!(scalar.labels, wide.labels);
+        assert_eq!(scalar.counts, wide.counts);
+        assert_eq!(scalar.centers, wide.centers);
+        assert_eq!(scalar.inertia.to_bits(), wide.inertia.to_bits());
+    }
+
+    #[test]
     fn too_much_compression_for_final_k_errors() {
         let data = blobs(100, 2, 6);
         let cfg = PipelineConfig::builder()
@@ -971,10 +1017,15 @@ mod tests {
     fn assign_full_matches_serial() {
         let data = blobs(200, 3, 8);
         let centers = data.as_slice()[..6].to_vec();
-        let (l1, c1, i1) = assign_full(data.as_slice(), 2, &centers, 1);
-        let (l8, c8, i8) = assign_full(data.as_slice(), 2, &centers, 8);
+        let (l1, c1, i1) = assign_full(data.as_slice(), 2, &centers, 1, KernelMode::Scalar);
+        let (l8, c8, i8) = assign_full(data.as_slice(), 2, &centers, 8, KernelMode::Scalar);
         assert_eq!(l1, l8);
         assert_eq!(c1, c8);
         assert!((i1 - i8).abs() < 1e-9);
+        // and the wide kernel is bit-identical to scalar
+        let (lw, cw, iw) = assign_full(data.as_slice(), 2, &centers, 8, KernelMode::Wide);
+        assert_eq!(l1, lw);
+        assert_eq!(c1, cw);
+        assert_eq!(i1.to_bits(), iw.to_bits());
     }
 }

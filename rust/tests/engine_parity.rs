@@ -23,6 +23,7 @@ use parsample::cluster::engine::{serial_reference, BoundsMode, Engine, LloydLoop
 use parsample::cluster::init::{initial_centers, InitMethod};
 use parsample::cluster::kmeans::{lloyd_from, lloyd_from_parallel, lloyd_from_with};
 use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::kernel::KernelMode;
 use parsample::util::rng::Pcg32;
 
 const DIMS: [usize; 5] = [1, 3, 4, 7, 32];
@@ -246,10 +247,13 @@ fn bounded_lloyd_via_kmeans_entrypoint_matches_off() {
         let pts = cloud(m, dims, 3000 + dims as u64);
         let init = pts[..13 * dims].to_vec();
         for &w in &[1usize, 8] {
+            let kern = KernelMode::session_default();
             let off =
-                lloyd_from_with(&pts, dims, init.clone(), 20, 1e-6, w, BoundsMode::Off).unwrap();
-            let ham = lloyd_from_with(&pts, dims, init.clone(), 20, 1e-6, w, BoundsMode::Hamerly)
-                .unwrap();
+                lloyd_from_with(&pts, dims, init.clone(), 20, 1e-6, w, BoundsMode::Off, kern)
+                    .unwrap();
+            let ham =
+                lloyd_from_with(&pts, dims, init.clone(), 20, 1e-6, w, BoundsMode::Hamerly, kern)
+                    .unwrap();
             assert_eq!(ham.labels, off.labels, "dims={dims} w={w}");
             assert_eq!(ham.counts, off.counts, "dims={dims} w={w}");
             assert_eq!(ham.centers, off.centers, "dims={dims} w={w}");

@@ -13,7 +13,7 @@
 //!   layout        — flatten/reconstruct inverse in both orders
 
 use parsample::cluster::kmeans::{lloyd, KMeansConfig};
-use parsample::cluster::{BoundsMode, InitMethod};
+use parsample::cluster::{BoundsMode, InitMethod, KernelMode};
 use parsample::coordinator::batcher::{local_k, Batcher};
 use parsample::data::synthetic::{make_blobs, BlobSpec};
 use parsample::data::{flatten, reconstruct, Dataset, MemoryOrder};
@@ -142,6 +142,7 @@ fn prop_kmeans_inertia_monotone_in_iterations() {
                 seed: 0,
                 workers: 1,
                 bounds: BoundsMode::Hamerly,
+                kernel: KernelMode::session_default(),
             };
             let r = lloyd(data.as_slice(), data.dims(), &cfg).unwrap();
             assert!(
