@@ -1,14 +1,18 @@
-//! Quickstart: the public API in ~40 lines.
+//! Quickstart: the fit/predict public API in ~50 lines.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Clusters Iris with the paper's pipeline (unequal subclustering,
-//! 6 groups, 6× compression) and compares against traditional k-means.
+//! Fits Iris once with the paper's pipeline (unequal subclustering,
+//! 6 groups, 6× compression), saves the fitted model, loads it back,
+//! and serves predictions from the artifact — the fit-once /
+//! predict-many split the whole system is built around.  Compares
+//! against traditional k-means at the end.
 
 use parsample::data::builtin;
 use parsample::eval;
+use parsample::model::{ClusterModel, FittedModel};
 use parsample::partition::Scheme;
 use parsample::pipeline::{traditional_kmeans, PipelineConfig, SubclusterPipeline};
 
@@ -25,28 +29,44 @@ fn main() -> parsample::Result<()> {
         .weighted_global(true)    // weight pooled centers by member count
         .build()?;
 
-    // 3. run it
-    let result = SubclusterPipeline::new(cfg).run(&data)?;
+    // 3. the expensive part runs ONCE: fit -> a persistent model
+    let model = SubclusterPipeline::new(cfg).fit(&data)?;
     println!(
-        "pipeline : {} groups -> {} local centers -> 3 final clusters",
-        result.num_groups, result.local_centers
+        "fit      : {} -> k={} centers (dims {}), inertia {:.4}",
+        model.meta().algorithm,
+        model.k(),
+        model.dims(),
+        model.meta().inertia
     );
-    println!("timings  : {}", result.timings.summary());
 
-    // 4. score against ground truth (the paper's Table-1 metric)
+    // 4. save the artifact; load it back (any process, any time —
+    //    `parsample serve --models iris.model.json` serves it over TCP)
+    // pid-suffixed so concurrent runs (CI, shared /tmp) don't collide
+    let path = std::env::temp_dir().join(format!("iris_{}.model.json", std::process::id()));
+    model.save(&path)?;
+    let model = FittedModel::load(&path)?;
+    println!("artifact : saved + reloaded from {}", path.display());
+
+    // 5. predictions are now cheap engine sweeps — no re-clustering
+    let p = model.predict_dataset(&data)?;
+    println!("predict  : counts {:?}, inertia {:.4}", p.counts, p.inertia);
+    let one = model.predict(data.row(0))?;
+    println!("predict  : point 0 -> cluster {one}");
+
+    // 6. score against ground truth (the paper's Table-1 metric)
     let truth = data.labels().expect("iris is labelled");
     println!(
-        "pipeline : {}/150 correctly clustered (inertia {:.4})",
-        eval::correct_count(&result.labels, truth)?,
-        result.inertia
+        "pipeline : {}/150 correctly clustered",
+        eval::correct_count(&p.labels, truth)?
     );
 
-    // 5. the traditional baseline for comparison
+    // 7. the traditional baseline for comparison
     let base = traditional_kmeans(&data, 3, 50, 0)?;
     println!(
         "baseline : {}/150 correctly clustered (inertia {:.4})",
         eval::correct_count(&base.labels, truth)?,
         base.inertia
     );
+    std::fs::remove_file(&path).ok();
     Ok(())
 }

@@ -5,7 +5,7 @@
 //! 2-means until K clusters exist.  Accurate but serial and expensive —
 //! exactly the trade-off §I cites ("highly accurate ... but expensive").
 
-use crate::cluster::engine::{BoundsMode, Engine};
+use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
 use crate::cluster::kmeans::{lloyd, KMeansConfig, KMeansResult};
 use crate::cluster::{Clusterer, InitMethod};
 use crate::data::Dataset;
@@ -20,6 +20,10 @@ pub struct BisectingKMeans {
     /// Restarts per split; best-of by inertia.
     pub split_trials: usize,
     pub seed: u64,
+    /// Number of clusters for the [`crate::model::ClusterModel`] fit
+    /// entry point ([`BisectingKMeans::run`] and [`Clusterer::cluster`]
+    /// take an explicit k and ignore this field).
+    pub k: usize,
     /// Worker threads for the per-split Lloyd runs and the final
     /// inertia sweep.
     pub workers: usize,
@@ -36,6 +40,7 @@ impl Default for BisectingKMeans {
             split_iters: 20,
             split_trials: 2,
             seed: 0,
+            k: 8,
             workers: 1,
             bounds: BoundsMode::Hamerly,
             kernel: KernelMode::session_default(),
@@ -44,6 +49,20 @@ impl Default for BisectingKMeans {
 }
 
 impl BisectingKMeans {
+    /// The engine knobs as one shared [`EngineOpts`] (the per-field
+    /// `workers`/`bounds`/`kernel` spelling is deprecated).
+    pub fn engine_opts(&self) -> EngineOpts {
+        EngineOpts { workers: self.workers, bounds: self.bounds, kernel: self.kernel }
+    }
+
+    /// Set all three engine knobs from one [`EngineOpts`].
+    pub fn with_engine_opts(mut self, opts: EngineOpts) -> Self {
+        self.workers = opts.workers.max(1);
+        self.bounds = opts.bounds;
+        self.kernel = opts.kernel;
+        self
+    }
+
     pub fn run(&self, points: &[f32], dims: usize, k: usize) -> Result<KMeansResult> {
         let m = points.len() / dims;
         if k == 0 || k > m {

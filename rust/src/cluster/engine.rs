@@ -133,6 +133,77 @@ impl BoundsMode {
             ))),
         }
     }
+
+    /// Canonical spelling, inverse of [`BoundsMode::parse`] (model
+    /// artifacts and the wire protocol serialize the mode as this).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BoundsMode::Off => "off",
+            BoundsMode::Hamerly => "hamerly",
+        }
+    }
+}
+
+/// The engine's three tuning knobs — worker threads, Hamerly bound
+/// pruning, and the tile kernel — as one shared struct.
+///
+/// Three PRs in a row threaded these same knobs one field at a time
+/// through `KMeansConfig`, `MiniBatchKMeans`, `BisectingKMeans`, and
+/// `PipelineConfig`; `EngineOpts` is the single spelling every new
+/// surface (the fit/predict model API in [`crate::model`], the server's
+/// fit handler, model artifacts) passes around instead.  The per-field
+/// knobs on the config structs remain valid but are the deprecated
+/// path — they delegate to/from this struct via each config's
+/// `engine_opts()` / `with_engine_opts()` accessors.
+///
+/// None of the three knobs changes any output bit: the engine is
+/// bit-identical across worker counts, bounds modes, and tile kernels
+/// (see the parity suites).  Only wall time moves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineOpts {
+    /// Worker threads for every engine sweep.
+    pub workers: usize,
+    /// Hamerly bound pruning across Lloyd iterations.
+    pub bounds: BoundsMode,
+    /// Tile kernel for the argmin sweeps.
+    pub kernel: KernelMode,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            workers: 1,
+            bounds: BoundsMode::default(),
+            kernel: KernelMode::session_default(),
+        }
+    }
+}
+
+impl EngineOpts {
+    /// Serial scalar engine with default bounds — the yardstick shape.
+    pub fn serial() -> EngineOpts {
+        EngineOpts { workers: 1, bounds: BoundsMode::default(), kernel: KernelMode::Scalar }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_bounds(mut self, bounds: BoundsMode) -> Self {
+        self.bounds = bounds;
+        self
+    }
+
+    pub fn with_kernel(mut self, kernel: KernelMode) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Build the [`Engine`] these options describe.
+    pub fn build_engine(&self) -> Engine {
+        Engine::new(self.workers).with_kernel(self.kernel)
+    }
 }
 
 /// Skip counters for one Lloyd iteration (or the final fused pass).

@@ -9,7 +9,7 @@
 //! squared-euclidean assignment, argmin ties to the lowest index, and
 //! empty clusters keeping their previous center.
 
-use crate::cluster::engine::{BoundsMode, Engine};
+use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
 use crate::cluster::init::{initial_centers, InitMethod};
 use crate::error::{Error, Result};
 use crate::kernel::KernelMode;
@@ -56,6 +56,22 @@ impl Default for KMeansConfig {
 }
 
 impl KMeansConfig {
+    /// The engine knobs as one shared [`EngineOpts`].  The individual
+    /// `workers`/`bounds`/`kernel` fields are the deprecated per-knob
+    /// spelling kept for compatibility; they delegate to this pair of
+    /// accessors, and new code should pass an [`EngineOpts`] around.
+    pub fn engine_opts(&self) -> EngineOpts {
+        EngineOpts { workers: self.workers, bounds: self.bounds, kernel: self.kernel }
+    }
+
+    /// Set all three engine knobs from one [`EngineOpts`].
+    pub fn with_engine_opts(mut self, opts: EngineOpts) -> Self {
+        self.workers = opts.workers.max(1);
+        self.bounds = opts.bounds;
+        self.kernel = opts.kernel;
+        self
+    }
+
     /// Config matching the AOT device executables: FirstK init, fixed
     /// iteration count, no early stop.  Bounds stay on — pruning is
     /// bit-identical, so device parity is unaffected.  The kernel is

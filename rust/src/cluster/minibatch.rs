@@ -2,7 +2,7 @@
 //! the ablation benches: how close does the paper's sample-then-cluster
 //! scheme get to a streaming approximation at similar cost?
 
-use crate::cluster::engine::{BoundsMode, Engine};
+use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
 use crate::cluster::init::{initial_centers, InitMethod};
 use crate::cluster::kmeans::KMeansResult;
 use crate::cluster::Clusterer;
@@ -19,6 +19,10 @@ pub struct MiniBatchKMeans {
     pub iters: usize,
     pub init: InitMethod,
     pub seed: u64,
+    /// Number of centers for the [`crate::model::ClusterModel`] fit
+    /// entry point ([`MiniBatchKMeans::run`] and [`Clusterer::cluster`]
+    /// take an explicit k and ignore this field).
+    pub k: usize,
     /// Worker threads for the final full-dataset engine sweep.
     pub workers: usize,
     /// Bounds mode for the final engine sweep.  A single cold sweep has
@@ -37,6 +41,7 @@ impl Default for MiniBatchKMeans {
             iters: 100,
             init: InitMethod::KMeansPlusPlus,
             seed: 0,
+            k: 8,
             workers: 1,
             bounds: BoundsMode::Hamerly,
             kernel: KernelMode::session_default(),
@@ -45,6 +50,20 @@ impl Default for MiniBatchKMeans {
 }
 
 impl MiniBatchKMeans {
+    /// The engine knobs as one shared [`EngineOpts`] (the per-field
+    /// `workers`/`bounds`/`kernel` spelling is deprecated).
+    pub fn engine_opts(&self) -> EngineOpts {
+        EngineOpts { workers: self.workers, bounds: self.bounds, kernel: self.kernel }
+    }
+
+    /// Set all three engine knobs from one [`EngineOpts`].
+    pub fn with_engine_opts(mut self, opts: EngineOpts) -> Self {
+        self.workers = opts.workers.max(1);
+        self.bounds = opts.bounds;
+        self.kernel = opts.kernel;
+        self
+    }
+
     pub fn run(&self, points: &[f32], dims: usize, k: usize) -> Result<KMeansResult> {
         let m = points.len() / dims;
         if k == 0 || k > m {

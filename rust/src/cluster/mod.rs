@@ -15,7 +15,11 @@ pub mod kmeans;
 pub mod minibatch;
 
 pub use crate::kernel::KernelMode;
-pub use engine::{BoundsMode, BoundsStats, CentroidPass, Engine, FusedPass, LloydLoopResult};
+pub use engine::{
+    BoundsMode, BoundsStats, CentroidPass, Engine, EngineOpts, FusedPass, LloydLoopResult,
+};
+pub use bisecting::BisectingKMeans;
+pub use minibatch::MiniBatchKMeans;
 pub use init::InitMethod;
 pub use kmeans::{lloyd, KMeansConfig, KMeansResult};
 

@@ -133,6 +133,8 @@ pub struct AppConfig {
     pub server_addr: String,
     /// Scheduler queue depth (backpressure bound).
     pub queue_depth: usize,
+    /// LRU capacity of the server's fitted-model registry.
+    pub model_cap: usize,
 }
 
 impl Default for AppConfig {
@@ -141,6 +143,7 @@ impl Default for AppConfig {
             pipeline: PipelineConfig::default(),
             server_addr: "127.0.0.1:7077".to_string(),
             queue_depth: 16,
+            model_cap: crate::server::DEFAULT_MODEL_CAP,
         }
     }
 }
@@ -215,6 +218,9 @@ impl AppConfig {
             }
             "server.queue_depth" => {
                 self.queue_depth = value.as_usize().ok_or_else(|| bad("usize"))?.max(1);
+            }
+            "server.model_cap" => {
+                self.model_cap = value.as_usize().ok_or_else(|| bad("usize"))?.max(1);
             }
             other => {
                 return Err(Error::Config(format!("unknown config key '{other}'")));
@@ -303,6 +309,7 @@ mod tests {
             kernel = "wide"
             [server]
             queue_depth = 3
+            model_cap = 5
             "#,
         )
         .unwrap();
@@ -313,6 +320,7 @@ mod tests {
         assert_eq!(cfg.pipeline.bounds, BoundsMode::Off);
         assert_eq!(cfg.pipeline.kernel, KernelMode::Wide);
         assert_eq!(cfg.queue_depth, 3);
+        assert_eq!(cfg.model_cap, 5);
         let t = parse_toml_lite("[pipeline]\nbounds = \"banana\"\n").unwrap();
         assert!(AppConfig::from_table(&t).is_err());
         let t = parse_toml_lite("[pipeline]\nkernel = \"gpu\"\n").unwrap();

@@ -34,10 +34,11 @@ impl MinMaxScaler {
     fn fitted(&self) -> bool {
         !self.mins.is_empty()
     }
-}
 
-impl Scaler for MinMaxScaler {
-    fn fit_transform(&mut self, data: &Dataset) -> Result<Dataset> {
+    /// Fit without transforming (no dataset copy): compute the
+    /// per-attribute mins and ranges only.  [`Scaler::fit_transform`]
+    /// is this plus an in-place transform of a clone.
+    pub fn fit(&mut self, data: &Dataset) -> Result<()> {
         if data.is_empty() {
             return Err(Error::Data("cannot fit scaler on empty dataset".into()));
         }
@@ -48,6 +49,34 @@ impl Scaler for MinMaxScaler {
             .zip(&self.mins)
             .map(|(&hi, &lo)| hi - lo)
             .collect();
+        Ok(())
+    }
+
+    /// Fitted parameters: per-attribute `(mins, ranges)`.  Empty until
+    /// [`MinMaxScaler::fit`] / [`Scaler::fit_transform`] has run.
+    /// Model artifacts persist these so a saved pipeline carries its
+    /// fitted transform.
+    pub fn params(&self) -> (&[f32], &[f32]) {
+        (&self.mins, &self.ranges)
+    }
+
+    /// Rebuild a fitted scaler from saved parameters (inverse of
+    /// [`MinMaxScaler::params`]).
+    pub fn from_params(mins: Vec<f32>, ranges: Vec<f32>) -> Result<MinMaxScaler> {
+        if mins.is_empty() || mins.len() != ranges.len() {
+            return Err(Error::Data(format!(
+                "scaler params mismatch: {} mins vs {} ranges",
+                mins.len(),
+                ranges.len()
+            )));
+        }
+        Ok(MinMaxScaler { mins, ranges })
+    }
+}
+
+impl Scaler for MinMaxScaler {
+    fn fit_transform(&mut self, data: &Dataset) -> Result<Dataset> {
+        self.fit(data)?;
         let mut out = data.clone();
         let dims = data.dims();
         for row in out.as_mut_slice().chunks_mut(dims) {
@@ -203,6 +232,22 @@ mod tests {
                 assert!((a - b).abs() < 1e-3);
             }
         }
+    }
+
+    #[test]
+    fn minmax_params_roundtrip() {
+        let d = data();
+        let mut s = MinMaxScaler::new();
+        let _ = s.fit_transform(&d).unwrap();
+        let (mins, ranges) = s.params();
+        let rebuilt = MinMaxScaler::from_params(mins.to_vec(), ranges.to_vec()).unwrap();
+        let mut p = d.row(1).to_vec();
+        let mut q = p.clone();
+        s.transform_point(&mut p);
+        rebuilt.transform_point(&mut q);
+        assert_eq!(p, q);
+        assert!(MinMaxScaler::from_params(vec![0.0], vec![]).is_err());
+        assert!(MinMaxScaler::from_params(vec![], vec![]).is_err());
     }
 
     #[test]

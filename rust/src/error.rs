@@ -36,6 +36,10 @@ pub enum Error {
     /// Server protocol violation or overload rejection.
     Server(String),
 
+    /// Model artifact problems (bad format/version, shape mismatch,
+    /// unknown algorithm, unfitted state).
+    Model(String),
+
     Io(std::io::Error),
 
     Json(crate::util::json::JsonError),
@@ -56,6 +60,7 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Server(m) => write!(f, "server error: {m}"),
+            Error::Model(m) => write!(f, "model error: {m}"),
             Error::Io(e) => e.fmt(f),
             Error::Json(e) => e.fmt(f),
         }

@@ -179,6 +179,16 @@ impl KernelMode {
         }
     }
 
+    /// Canonical spelling, inverse of [`KernelMode::parse`] (model
+    /// artifacts and the wire protocol serialize the mode as this).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Wide => "wide",
+            KernelMode::Auto => "auto",
+        }
+    }
+
     /// Resolve the mode to a concrete kernel for one sweep.  `dims`
     /// feeds the `Auto` heuristic.
     pub fn resolve(self, dims: usize) -> &'static dyn TileKernel {

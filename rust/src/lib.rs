@@ -13,12 +13,14 @@
 //!   Lloyd iterations with a Pallas assignment kernel, AOT-lowered to
 //!   HLO text that [`runtime`] loads and executes via PJRT.
 //!
-//! Quick start (see `examples/quickstart.rs`):
+//! Quick start — fit once, predict many (see `examples/quickstart.rs`):
 //!
 //! ```no_run
-//! use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
 //! use parsample::data::builtin;
+//! use parsample::model::{ClusterModel, FittedModel};
+//! use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
 //!
+//! // the expensive part runs once…
 //! let data = builtin::iris();
 //! let cfg = PipelineConfig::builder()
 //!     .num_groups(6)
@@ -26,9 +28,21 @@
 //!     .final_k(3)
 //!     .build()
 //!     .unwrap();
-//! let result = SubclusterPipeline::new(cfg).run(&data).unwrap();
-//! println!("inertia {}", result.inertia);
+//! let model = SubclusterPipeline::new(cfg).fit(&data).unwrap();
+//! println!("fit inertia {}", model.meta().inertia);
+//! model.save("iris.model.json").unwrap();
+//!
+//! // …and the artifact answers predictions from then on, here or in
+//! // the serve-many job server (`parsample serve`, cmds fit/predict)
+//! let model = FittedModel::load("iris.model.json").unwrap();
+//! let assignment = model.predict(data.row(0)).unwrap();
+//! println!("point 0 -> cluster {assignment}");
 //! ```
+//!
+//! [`model`] is the fit/predict lifecycle ([`model::ClusterModel`],
+//! [`model::FittedModel`], shared [`cluster::EngineOpts`] knobs);
+//! [`pipeline::SubclusterPipeline::run`] remains the single-shot,
+//! labels-in-hand entry point.
 
 pub mod cluster;
 pub mod config;
@@ -38,6 +52,7 @@ pub mod distance;
 pub mod error;
 pub mod eval;
 pub mod kernel;
+pub mod model;
 pub mod partition;
 pub mod pipeline;
 pub mod runtime;

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! parsample cluster   --data iris --k 3 [--scheme unequal --groups 6 ...]
+//! parsample fit       --data iris --k 3 --out m.json   fit once, save model
+//! parsample predict   --model m.json --data iris       assign with a model
 //! parsample baseline  --data iris --k 3            traditional k-means
 //! parsample generate  --size 100000 --out d.bin    paper §VI workload
 //! parsample partition --data iris --groups 6       dump group sizes
@@ -14,17 +16,19 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use parsample::cluster::BoundsMode;
+use parsample::cluster::{BoundsMode, EngineOpts};
 use parsample::config::AppConfig;
 use parsample::coordinator::SchedulerConfig;
 use parsample::data::{builtin, loader, synthetic, Dataset};
 use parsample::error::{Error, Result};
 use parsample::eval;
 use parsample::kernel::KernelMode;
+use parsample::model::{FittedModel, ModelSpec};
 use parsample::partition::Scheme;
 use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
 use parsample::runtime::{BackendKind, Manifest};
-use parsample::server::Server;
+use parsample::server::{Server, ServerConfig};
+use parsample::util::threadpool::default_workers;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,6 +49,8 @@ fn run(args: Vec<String>) -> Result<()> {
     let flags = Flags::parse(rest)?;
     match cmd.as_str() {
         "cluster" => cmd_cluster(&flags),
+        "fit" => cmd_fit(&flags),
+        "predict" => cmd_predict(&flags),
         "baseline" => cmd_baseline(&flags),
         "generate" => cmd_generate(&flags),
         "partition" => cmd_partition(&flags),
@@ -69,9 +75,19 @@ fn print_usage() {
          \x20 baseline  --data ... --k K [--iters N] [--seed S] [--workers W]\n\
          \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--eval]\n\
          \x20           traditional k-means (single Lloyd loop on the blocked engine)\n\
+         \x20 fit       --data ... --k K --out MODEL.json [--algo kmeans|minibatch|bisecting|pipeline]\n\
+         \x20           [--iters N] [--seed S] [--workers W] [--bounds ...] [--kernel ...]\n\
+         \x20           [--scheme ...] [--compression C] [--groups G]\n\
+         \x20           run the expensive clustering once; write a reusable model artifact\n\
+         \x20 predict   --model MODEL.json --data ... [--workers W] [--kernel ...] [--eval]\n\
+         \x20           [--out labels.txt]\n\
+         \x20           assign points with a saved model (no re-clustering)\n\
          \x20 generate  --size M [--seed S] --out FILE[.csv|.bin]          paper synthetic workload\n\
          \x20 partition --data ... --groups G [--scheme ...]               dump group sizes\n\
          \x20 serve     [--addr HOST:PORT] [--backend ...] [--queue N]     JSON-lines job server\n\
+         \x20           [--models m1.json,m2.json] [--model-cap N]\n\
+         \x20           protocol cmds: cluster (one-shot), fit/predict/models (serve-many),\n\
+         \x20           ping, stats — fitted models live in an in-process LRU registry\n\
          \x20 buckets   [--artifacts DIR]                                  AOT bucket table\n\n\
          --workers W sets the thread count of the blocked assignment engine that runs\n\
          every Lloyd assign/accumulate sweep (default: all cores for cluster/serve,\n\
@@ -263,6 +279,89 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Shared `--workers/--bounds/--kernel` parsing for fit/predict.
+fn engine_opts_from_flags(flags: &Flags, default_w: usize) -> Result<EngineOpts> {
+    let mut opts = EngineOpts::default().with_workers(default_w);
+    if let Some(w) = flags.usize("workers")? {
+        opts = opts.with_workers(w);
+    }
+    if let Some(b) = flags.get("bounds") {
+        opts = opts.with_bounds(BoundsMode::parse(b)?);
+    }
+    if let Some(k) = flags.get("kernel") {
+        opts = opts.with_kernel(KernelMode::parse(k)?);
+    }
+    Ok(opts)
+}
+
+fn cmd_fit(flags: &Flags) -> Result<()> {
+    let data = load_data(flags)?;
+    let k = flags
+        .usize("k")?
+        .ok_or_else(|| Error::Config("missing --k".into()))?;
+    let out = flags.required("out")?;
+    let mut spec = ModelSpec::new(flags.get("algo").unwrap_or("pipeline"), k);
+    spec.iters = flags.usize("iters")?;
+    spec.seed = flags.usize("seed")?.unwrap_or(0) as u64;
+    spec.engine = engine_opts_from_flags(flags, default_workers())?;
+    if let Some(s) = flags.get("scheme") {
+        spec.scheme = Some(Scheme::parse(s)?);
+    }
+    spec.compression = flags.f32("compression")?;
+    spec.num_groups = flags.usize("groups")?;
+    let t0 = std::time::Instant::now();
+    let model = spec.fit(&data)?;
+    model.save(out)?;
+    let meta = model.meta();
+    println!(
+        "fit {}: {} points -> k={} (dims {}) | inertia {:.6} | {} iters | {:.1} ms",
+        meta.algorithm,
+        meta.trained_on,
+        meta.k,
+        meta.dims,
+        meta.inertia,
+        meta.iterations,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!(
+        "model written to {out} (use `parsample predict --model {out}` or `serve --models {out}`)"
+    );
+    Ok(())
+}
+
+fn cmd_predict(flags: &Flags) -> Result<()> {
+    let path = flags.required("model")?;
+    let mut model = FittedModel::load(path)?;
+    let data = load_data(flags)?;
+    // predict-time knobs are retunable; default to all cores
+    model.set_engine_opts(engine_opts_from_flags(flags, default_workers())?);
+    let t0 = std::time::Instant::now();
+    let p = model.predict_dataset(&data)?;
+    println!(
+        "predict with {} model '{}': {} points -> k={} | inertia {:.6} | counts {:?} | {:.1} ms",
+        model.meta().algorithm,
+        path,
+        data.len(),
+        model.k(),
+        p.inertia,
+        p.counts,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    if flags.bool("eval") {
+        report_eval(&data, &p.labels)?;
+    }
+    if let Some(out) = flags.get("out") {
+        let mut text = String::with_capacity(p.labels.len() * 3);
+        for l in &p.labels {
+            text.push_str(&l.to_string());
+            text.push('\n');
+        }
+        std::fs::write(out, text)?;
+        println!("labels written to {out} (one per line)");
+    }
+    Ok(())
+}
+
 fn cmd_baseline(flags: &Flags) -> Result<()> {
     let data = load_data(flags)?;
     let k = flags
@@ -346,7 +445,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         Some(b) => BackendKind::parse(b)?,
         None => app.pipeline.backend,
     };
-    let cfg = SchedulerConfig {
+    let scheduler = SchedulerConfig {
         queue_depth: flags.usize("queue")?.unwrap_or(app.queue_depth),
         backend,
         artifacts_dir: flags
@@ -355,9 +454,58 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             .unwrap_or(app.pipeline.artifacts_dir),
         workers: flags.usize("workers")?.unwrap_or(app.pipeline.workers),
     };
-    let server = Server::start(&addr, cfg)?;
+    // preload model artifacts (CLI `fit --out` files) into the
+    // serve-many registry, named by file stem
+    let mut preload: Vec<(String, FittedModel)> = Vec::new();
+    if let Some(paths) = flags.get("models") {
+        for path in paths.split(',').filter(|p| !p.is_empty()) {
+            let model = FittedModel::load(path)?;
+            // file stem minus one optional ".model" suffix ("a.model.json"
+            // -> "a"); strip_suffix (not trim_end_matches) so
+            // "a.model.model.json" -> "a.model", and never the empty name
+            // the wire protocol can't address
+            let stem = std::path::Path::new(path)
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or(path);
+            let name = stem.strip_suffix(".model").unwrap_or(stem).to_string();
+            if name.is_empty() {
+                return Err(Error::Config(format!(
+                    "--models path '{path}' yields an empty model name; rename the file"
+                )));
+            }
+            if preload.iter().any(|(n, _)| *n == name) {
+                return Err(Error::Config(format!(
+                    "--models names collide: two files reduce to model name '{name}' \
+                     (registry names come from the file stem)"
+                )));
+            }
+            println!(
+                "loaded model '{}' from {path} ({}, k={}, dims {})",
+                name,
+                model.meta().algorithm,
+                model.k(),
+                model.dims()
+            );
+            preload.push((name, model));
+        }
+    }
+    let mut cfg = ServerConfig::from_scheduler(scheduler);
+    cfg.model_cap = flags.usize("model-cap")?.unwrap_or(app.model_cap);
+    if preload.len() > cfg.model_cap {
+        return Err(Error::Config(format!(
+            "--models lists {} models but the registry cap is {} (raise --model-cap)",
+            preload.len(),
+            cfg.model_cap
+        )));
+    }
+    cfg.preload = preload;
+    let server = Server::start_with(&addr, cfg)?;
     println!("parsample serving on {} (backend {:?})", server.addr(), backend);
-    println!("protocol: one JSON object per line; see rust/src/server/protocol.rs");
+    println!(
+        "protocol: one JSON object per line (cluster | fit | predict | models | ping | stats); \
+         see rust/src/server/protocol.rs"
+    );
     // serve until killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

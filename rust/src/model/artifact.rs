@@ -1,0 +1,501 @@
+//! Persistent fitted-model artifacts: the cheap-to-use half of the
+//! fit/predict lifecycle.
+//!
+//! A [`FittedModel`] owns everything a predict-only caller needs — the
+//! K×D centers, the fitted [`MinMaxScaler`] (when the fit scaled), and
+//! the fit metadata ([`FitMeta`]: algorithm, shapes, inertia,
+//! iterations, and the [`EngineOpts`] provenance) — and nothing it
+//! doesn't: no training data, no backend handles.  Artifacts serialize
+//! to versioned JSON via [`crate::util::json`] so a model fitted once
+//! (CLI `fit`, server `fit`, or [`crate::model::ClusterModel::fit`])
+//! can be saved, shipped, and loaded anywhere the crate runs.
+//!
+//! Prediction runs batch assignment on the blocked engine — it *is*
+//! [`crate::pipeline::assign_full`] — so labels are bit-identical to
+//! the fit-time final pass for any [`EngineOpts`] combination (the
+//! engine's cross-worker/cross-kernel bit-identity contract).  A
+//! single fused sweep has no carried bounds to prune with, so the
+//! `bounds` knob is provenance here; `workers` and `kernel` select the
+//! sweep's threading and tile kernel.
+
+use std::path::Path;
+
+use crate::cluster::engine::EngineOpts;
+use crate::cluster::{BoundsMode, KernelMode};
+use crate::data::scaling::MinMaxScaler;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::pipeline::assign_full;
+use crate::util::json::Json;
+
+/// `format` field of every serialized model artifact.
+pub const MODEL_FORMAT: &str = "parsample-model";
+
+/// Current artifact schema version.  Loaders accept `1..=MODEL_VERSION`
+/// and reject anything newer with a clear error instead of
+/// misinterpreting fields.
+pub const MODEL_VERSION: u32 = 1;
+
+/// Metadata recorded at fit time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitMeta {
+    /// Which [`crate::model::ClusterModel`] produced the artifact
+    /// (`kmeans`, `minibatch-kmeans`, `bisecting-kmeans`, `pipeline`).
+    pub algorithm: String,
+    /// Number of centers actually produced (bisecting may stop short
+    /// of the requested k on degenerate data).
+    pub k: usize,
+    /// Attribute count D.
+    pub dims: usize,
+    /// Points the model was fitted on (M).
+    pub trained_on: usize,
+    /// Sum of squared distances at fit time, original coordinates.
+    pub inertia: f64,
+    /// Iterations the fit performed (Lloyd iterations, mini-batch
+    /// rounds, splits, or the pipeline's global iterations).
+    pub iterations: usize,
+    /// Engine knobs the fit ran with (provenance; predict-time knobs
+    /// are retunable via [`FittedModel::set_engine_opts`]).
+    pub engine: EngineOpts,
+}
+
+/// Output of one batch prediction.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// Nearest-center index per point (ties to the lowest index, the
+    /// crate-wide argmin rule).
+    pub labels: Vec<u32>,
+    /// Points per center.
+    pub counts: Vec<u32>,
+    /// Sum of squared distances to assigned centers.
+    pub inertia: f64,
+}
+
+/// A fitted clustering model: centers + scaler + metadata, ready to
+/// answer predict requests without re-running the fit.
+#[derive(Debug, Clone)]
+pub struct FittedModel {
+    meta: FitMeta,
+    /// K×D row-major centers in the *original* (pre-scaling)
+    /// coordinates — predictions take raw points.
+    centers: Vec<f32>,
+    /// The fitted feature scaler, when the algorithm scaled (the
+    /// pipeline's partition stage).  Predictions do not need it —
+    /// centers and inputs live in original coordinates — but the
+    /// artifact carries it so the full fitted transform survives a
+    /// save/load roundtrip.
+    scaler: Option<MinMaxScaler>,
+    /// Predict-time engine knobs; seeded from `meta.engine` and
+    /// retunable per deployment (a server may predict with more
+    /// workers than the fit used).
+    engine: EngineOpts,
+}
+
+impl FittedModel {
+    /// Assemble an artifact, validating shapes.
+    pub fn new(
+        meta: FitMeta,
+        centers: Vec<f32>,
+        scaler: Option<MinMaxScaler>,
+    ) -> Result<FittedModel> {
+        if meta.dims == 0 || meta.k == 0 {
+            return Err(Error::Model(format!(
+                "invalid shape k={} dims={}",
+                meta.k, meta.dims
+            )));
+        }
+        if centers.len() != meta.k * meta.dims {
+            return Err(Error::Model(format!(
+                "{} center values for k={} dims={}",
+                centers.len(),
+                meta.k,
+                meta.dims
+            )));
+        }
+        if centers.iter().any(|x| !x.is_finite()) {
+            return Err(Error::Model("non-finite center value".into()));
+        }
+        if let Some(s) = &scaler {
+            let (mins, _) = s.params();
+            if mins.len() != meta.dims {
+                return Err(Error::Model(format!(
+                    "scaler fitted on {} dims, centers have {}",
+                    mins.len(),
+                    meta.dims
+                )));
+            }
+        }
+        let engine = meta.engine;
+        Ok(FittedModel { meta, centers, scaler, engine })
+    }
+
+    pub fn meta(&self) -> &FitMeta {
+        &self.meta
+    }
+
+    /// K×D row-major centers, original coordinates.
+    pub fn centers(&self) -> &[f32] {
+        &self.centers
+    }
+
+    pub fn k(&self) -> usize {
+        self.meta.k
+    }
+
+    pub fn dims(&self) -> usize {
+        self.meta.dims
+    }
+
+    pub fn scaler(&self) -> Option<&MinMaxScaler> {
+        self.scaler.as_ref()
+    }
+
+    /// Knobs [`FittedModel::predict_batch`] runs with.
+    pub fn engine_opts(&self) -> EngineOpts {
+        self.engine
+    }
+
+    /// Retune the predict-time engine knobs (output is bit-identical
+    /// for any setting; only wall time changes).
+    pub fn set_engine_opts(&mut self, opts: EngineOpts) {
+        self.engine = opts;
+    }
+
+    /// Builder-style [`FittedModel::set_engine_opts`].
+    pub fn with_engine_opts(mut self, opts: EngineOpts) -> FittedModel {
+        self.engine = opts;
+        self
+    }
+
+    /// Nearest center for one point (length must be exactly D).
+    pub fn predict(&self, point: &[f32]) -> Result<u32> {
+        if point.len() != self.meta.dims {
+            return Err(Error::Model(format!(
+                "point has {} values, model dims is {}",
+                point.len(),
+                self.meta.dims
+            )));
+        }
+        Ok(self.predict_batch(point)?.labels[0])
+    }
+
+    /// Batch assignment of flat row-major `points` against the fitted
+    /// centers on the blocked engine — exactly
+    /// [`crate::pipeline::assign_full`], so labels/counts/inertia are
+    /// bit-identical to the fit-time final pass at any worker count and
+    /// under any tile kernel.
+    pub fn predict_batch(&self, points: &[f32]) -> Result<Prediction> {
+        self.predict_batch_with(points, self.engine)
+    }
+
+    /// [`FittedModel::predict_batch`] with explicit engine knobs (a
+    /// server predicting on behalf of many clients passes its own).
+    pub fn predict_batch_with(&self, points: &[f32], opts: EngineOpts) -> Result<Prediction> {
+        let dims = self.meta.dims;
+        if points.is_empty() || points.len() % dims != 0 {
+            return Err(Error::Model(format!(
+                "points buffer of {} values is not a non-empty multiple of dims {}",
+                points.len(),
+                dims
+            )));
+        }
+        let (labels, counts, inertia) =
+            assign_full(points, dims, &self.centers, opts.workers, opts.kernel);
+        Ok(Prediction { labels, counts, inertia })
+    }
+
+    /// [`FittedModel::predict_batch`] over a [`Dataset`].
+    pub fn predict_dataset(&self, data: &Dataset) -> Result<Prediction> {
+        if data.dims() != self.meta.dims {
+            return Err(Error::Model(format!(
+                "dataset dims {} != model dims {}",
+                data.dims(),
+                self.meta.dims
+            )));
+        }
+        self.predict_batch(data.as_slice())
+    }
+
+    // ---- versioned JSON form -------------------------------------------
+
+    /// Serialize to the versioned JSON artifact form.
+    pub fn to_json(&self) -> Json {
+        let centers: Vec<Json> = self
+            .centers
+            .chunks(self.meta.dims)
+            .map(Json::arr_f32)
+            .collect();
+        let engine = Json::obj(vec![
+            ("workers", Json::num(self.meta.engine.workers as f64)),
+            ("bounds", Json::str(self.meta.engine.bounds.as_str())),
+            ("kernel", Json::str(self.meta.engine.kernel.as_str())),
+        ]);
+        let mut fields = vec![
+            ("format", Json::str(MODEL_FORMAT)),
+            ("version", Json::num(MODEL_VERSION as f64)),
+            ("algorithm", Json::str(&self.meta.algorithm)),
+            ("k", Json::num(self.meta.k as f64)),
+            ("dims", Json::num(self.meta.dims as f64)),
+            ("trained_on", Json::num(self.meta.trained_on as f64)),
+            ("inertia", Json::num(self.meta.inertia)),
+            ("iterations", Json::num(self.meta.iterations as f64)),
+            ("engine", engine),
+            ("centers", Json::Arr(centers)),
+        ];
+        if let Some(s) = &self.scaler {
+            let (mins, ranges) = s.params();
+            fields.push((
+                "scaler",
+                Json::obj(vec![
+                    ("mins", Json::arr_f32(mins)),
+                    ("ranges", Json::arr_f32(ranges)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse the versioned JSON artifact form.  Rejects unknown
+    /// formats and versions newer than [`MODEL_VERSION`].
+    pub fn from_json(v: &Json) -> Result<FittedModel> {
+        let format = get_str(v, "format")?;
+        if format != MODEL_FORMAT {
+            return Err(Error::Model(format!(
+                "not a model artifact (format '{format}', expected '{MODEL_FORMAT}')"
+            )));
+        }
+        // compare in usize space: `as u32` first would wrap 2^32+1 to
+        // a "supported" 1 and defeat the whole future-version rejection
+        let version = get_usize(v, "version")?;
+        if version == 0 || version > MODEL_VERSION as usize {
+            return Err(Error::Model(format!(
+                "artifact version {version} not supported (this build reads 1..={MODEL_VERSION})"
+            )));
+        }
+        let engine_v = v
+            .get("engine")
+            .ok_or_else(|| Error::Model("missing engine".into()))?;
+        let engine = EngineOpts {
+            workers: get_usize(engine_v, "workers")?.max(1),
+            bounds: BoundsMode::parse(get_str(engine_v, "bounds")?)?,
+            kernel: KernelMode::parse(get_str(engine_v, "kernel")?)?,
+        };
+        let dims = get_usize(v, "dims")?;
+        let rows = v
+            .get("centers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Model("missing centers".into()))?;
+        let mut centers = Vec::with_capacity(rows.len() * dims);
+        for row in rows {
+            let row = f32_arr(row, "centers row")?;
+            if row.len() != dims {
+                return Err(Error::Model(format!(
+                    "center row of {} values, dims is {dims}",
+                    row.len()
+                )));
+            }
+            centers.extend(row);
+        }
+        let scaler = match v.get("scaler") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(MinMaxScaler::from_params(
+                f32_arr(
+                    s.get("mins")
+                        .ok_or_else(|| Error::Model("scaler missing mins".into()))?,
+                    "scaler mins",
+                )?,
+                f32_arr(
+                    s.get("ranges")
+                        .ok_or_else(|| Error::Model("scaler missing ranges".into()))?,
+                    "scaler ranges",
+                )?,
+            )?),
+        };
+        let meta = FitMeta {
+            algorithm: get_str(v, "algorithm")?.to_string(),
+            k: get_usize(v, "k")?,
+            dims,
+            trained_on: get_usize(v, "trained_on")?,
+            inertia: v
+                .get("inertia")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Model("missing inertia".into()))?,
+            iterations: get_usize(v, "iterations")?,
+            engine,
+        };
+        FittedModel::new(meta, centers, scaler)
+    }
+
+    /// Write the artifact to `path` as one JSON document.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load an artifact written by [`FittedModel::save`].  f32 centers
+    /// round-trip bit-exactly: the JSON emitter prints
+    /// shortest-roundtrip f64 and every f32 is exactly representable.
+    pub fn load(path: impl AsRef<Path>) -> Result<FittedModel> {
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Model(format!("read {}: {e}", path.as_ref().display()))
+        })?;
+        let v = Json::parse(&text)
+            .map_err(|e| Error::Model(format!("parse {}: {e}", path.as_ref().display())))?;
+        Self::from_json(&v)
+    }
+}
+
+fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Model(format!("missing string field '{key}'")))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Model(format!("missing integer field '{key}'")))
+}
+
+fn f32_arr(v: &Json, what: &str) -> Result<Vec<f32>> {
+    v.as_arr()
+        .ok_or_else(|| Error::Model(format!("{what}: expected array")))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| Error::Model(format!("{what}: non-numeric entry")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Engine;
+
+    fn meta(k: usize, dims: usize) -> FitMeta {
+        FitMeta {
+            algorithm: "kmeans".into(),
+            k,
+            dims,
+            trained_on: 10,
+            inertia: 1.25,
+            iterations: 7,
+            engine: EngineOpts::serial(),
+        }
+    }
+
+    fn model() -> FittedModel {
+        FittedModel::new(meta(2, 2), vec![0.0, 0.0, 10.0, 10.0], None).unwrap()
+    }
+
+    #[test]
+    fn new_validates_shapes() {
+        assert!(FittedModel::new(meta(2, 2), vec![0.0; 4], None).is_ok());
+        assert!(FittedModel::new(meta(2, 2), vec![0.0; 3], None).is_err());
+        assert!(FittedModel::new(meta(0, 2), vec![], None).is_err());
+        assert!(FittedModel::new(meta(2, 0), vec![], None).is_err());
+        assert!(FittedModel::new(meta(1, 2), vec![f32::NAN, 0.0], None).is_err());
+        // scaler dims must match
+        let s = MinMaxScaler::from_params(vec![0.0; 3], vec![1.0; 3]).unwrap();
+        assert!(FittedModel::new(meta(2, 2), vec![0.0; 4], Some(s)).is_err());
+    }
+
+    #[test]
+    fn predict_matches_engine_assign() {
+        let m = model();
+        let pts = vec![1.0, 1.0, 9.0, 9.5, -2.0, 0.5, 10.0, 10.0];
+        let p = m.predict_batch(&pts).unwrap();
+        let reference = Engine::serial().assign_accumulate(&pts, 2, m.centers());
+        assert_eq!(p.labels, reference.labels);
+        assert_eq!(p.counts, reference.counts);
+        assert_eq!(p.inertia.to_bits(), reference.inertia.to_bits());
+        assert_eq!(m.predict(&[9.0, 9.0]).unwrap(), 1);
+        assert_eq!(m.predict(&[0.1, -0.1]).unwrap(), 0);
+    }
+
+    #[test]
+    fn predict_validates_input() {
+        let m = model();
+        assert!(m.predict(&[1.0]).is_err()); // wrong dims
+        assert!(m.predict_batch(&[]).is_err()); // empty
+        assert!(m.predict_batch(&[1.0, 2.0, 3.0]).is_err()); // ragged
+        let other = Dataset::new(vec![0.0; 6], 3).unwrap();
+        assert!(m.predict_dataset(&other).is_err()); // dims mismatch
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let scaler = MinMaxScaler::from_params(vec![0.5, -1.25], vec![2.0, 0.125]).unwrap();
+        let m = FittedModel::new(
+            FitMeta {
+                algorithm: "pipeline".into(),
+                k: 2,
+                dims: 2,
+                trained_on: 1234,
+                inertia: 0.1 + 0.2, // not exactly representable: exercises roundtrip
+                iterations: 20,
+                engine: EngineOpts {
+                    workers: 4,
+                    bounds: BoundsMode::Off,
+                    kernel: KernelMode::Wide,
+                },
+            },
+            vec![0.1, -3.7e-5, 1.0e8, 2.5],
+            Some(scaler),
+        )
+        .unwrap();
+        let back = FittedModel::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.meta(), m.meta());
+        assert_eq!(
+            back.centers().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            m.centers().iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.meta().inertia.to_bits(), m.meta().inertia.to_bits());
+        let (bm, br) = back.scaler().unwrap().params();
+        let (om, or) = m.scaler().unwrap().params();
+        assert_eq!(bm, om);
+        assert_eq!(br, or);
+    }
+
+    #[test]
+    fn rejects_foreign_and_future_artifacts() {
+        let mut v = model().to_json();
+        if let Json::Obj(map) = &mut v {
+            map.insert("format".into(), Json::str("other-tool"));
+        }
+        assert!(FittedModel::from_json(&v).is_err());
+        let mut v = model().to_json();
+        if let Json::Obj(map) = &mut v {
+            map.insert("version".into(), Json::num((MODEL_VERSION + 1) as f64));
+        }
+        let err = FittedModel::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // a version that would wrap to 1 under `as u32` must still be
+        // rejected (2^32 + 1)
+        let mut v = model().to_json();
+        if let Json::Obj(map) = &mut v {
+            map.insert("version".into(), Json::num(4_294_967_297.0));
+        }
+        let err = FittedModel::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        assert!(FittedModel::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("parsample_model_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.model.json");
+        let m = model();
+        m.save(&path).unwrap();
+        let back = FittedModel::load(&path).unwrap();
+        assert_eq!(back.meta(), m.meta());
+        assert_eq!(back.centers(), m.centers());
+        assert!(FittedModel::load(dir.join("missing.json")).is_err());
+        std::fs::write(dir.join("junk.json"), "not json").unwrap();
+        assert!(FittedModel::load(dir.join("junk.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

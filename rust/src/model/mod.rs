@@ -1,0 +1,373 @@
+//! Fit/predict model lifecycle — the public clustering API.
+//!
+//! The paper's whole argument is that the expensive part (subcluster +
+//! global k-means) runs **once**, producing K centers that are then
+//! cheap to use.  This module makes that split first-class:
+//!
+//! * [`ClusterModel`] — anything that can run the expensive fit:
+//!   [`KMeans`] (Lloyd's), [`MiniBatchKMeans`], [`BisectingKMeans`],
+//!   and the paper's [`SubclusterPipeline`].  `fit(&Dataset)` returns…
+//! * [`FittedModel`] — a persistent artifact owning the centers, the
+//!   fitted [`crate::data::MinMaxScaler`] (when the fit scaled), and
+//!   the fit metadata, with versioned JSON save/load and
+//!   engine-backed `predict`/`predict_batch` (bit-identical to
+//!   [`crate::pipeline::assign_full`]).
+//! * [`ModelSpec`] — algorithm-by-name dispatch shared by the CLI
+//!   `fit` subcommand and the server's `fit` request, so both front
+//!   ends build models through exactly one code path.
+//!
+//! Fit once, predict many:
+//!
+//! ```no_run
+//! use parsample::data::builtin;
+//! use parsample::model::{ClusterModel, FittedModel};
+//! use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
+//!
+//! let data = builtin::iris();
+//! let cfg = PipelineConfig::builder().final_k(3).build().unwrap();
+//! let model = SubclusterPipeline::new(cfg).fit(&data).unwrap();
+//! model.save("iris.model.json").unwrap();
+//! // …later, anywhere, without re-clustering:
+//! let model = FittedModel::load("iris.model.json").unwrap();
+//! let label = model.predict(data.row(0)).unwrap();
+//! # let _ = label;
+//! ```
+
+pub mod artifact;
+
+pub use crate::cluster::engine::EngineOpts;
+pub use artifact::{FitMeta, FittedModel, Prediction, MODEL_FORMAT, MODEL_VERSION};
+
+use crate::cluster::kmeans::{lloyd, KMeansConfig, KMeansResult};
+use crate::cluster::{BisectingKMeans, MiniBatchKMeans};
+use crate::data::scaling::MinMaxScaler;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::partition::Scheme;
+use crate::pipeline::{PipelineConfig, SubclusterPipeline};
+
+/// Anything that can run the expensive clustering once and hand back a
+/// reusable [`FittedModel`].
+///
+/// Contrast with [`crate::cluster::Clusterer`], which returns raw
+/// centers/labels for the caller to manage: a `ClusterModel` fit
+/// produces a self-describing artifact that can be saved, loaded,
+/// registered in a server, and asked for predictions long after the
+/// training data is gone.
+pub trait ClusterModel {
+    /// Algorithm name recorded in the artifact (and accepted by
+    /// [`ModelSpec`]).
+    fn algorithm(&self) -> &'static str;
+
+    /// Run the fit on `data` and package the result.
+    fn fit(&self, data: &Dataset) -> Result<FittedModel>;
+}
+
+/// Lloyd's k-means as a [`ClusterModel`] (the k lives in the config).
+#[derive(Debug, Clone, Default)]
+pub struct KMeans {
+    pub config: KMeansConfig,
+}
+
+impl KMeans {
+    /// Default-config Lloyd's with `k` centers.
+    pub fn new(k: usize) -> KMeans {
+        KMeans { config: KMeansConfig { k, ..Default::default() } }
+    }
+
+    pub fn with_engine_opts(mut self, opts: EngineOpts) -> KMeans {
+        self.config = self.config.with_engine_opts(opts);
+        self
+    }
+}
+
+/// Package one [`KMeansResult`] as an artifact.
+fn artifact_from_result(
+    algorithm: &str,
+    data: &Dataset,
+    r: KMeansResult,
+    engine: EngineOpts,
+    scaler: Option<MinMaxScaler>,
+) -> Result<FittedModel> {
+    FittedModel::new(
+        FitMeta {
+            algorithm: algorithm.to_string(),
+            k: r.counts.len(),
+            dims: data.dims(),
+            trained_on: data.len(),
+            inertia: r.inertia,
+            iterations: r.iterations,
+            engine,
+        },
+        r.centers,
+        scaler,
+    )
+}
+
+impl ClusterModel for KMeans {
+    fn algorithm(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn fit(&self, data: &Dataset) -> Result<FittedModel> {
+        let r = lloyd(data.as_slice(), data.dims(), &self.config)?;
+        artifact_from_result(self.algorithm(), data, r, self.config.engine_opts(), None)
+    }
+}
+
+impl ClusterModel for MiniBatchKMeans {
+    fn algorithm(&self) -> &'static str {
+        "minibatch-kmeans"
+    }
+
+    fn fit(&self, data: &Dataset) -> Result<FittedModel> {
+        let r = self.run(data.as_slice(), data.dims(), self.k)?;
+        artifact_from_result(self.algorithm(), data, r, self.engine_opts(), None)
+    }
+}
+
+impl ClusterModel for BisectingKMeans {
+    fn algorithm(&self) -> &'static str {
+        "bisecting-kmeans"
+    }
+
+    fn fit(&self, data: &Dataset) -> Result<FittedModel> {
+        let r = self.run(data.as_slice(), data.dims(), self.k)?;
+        artifact_from_result(self.algorithm(), data, r, self.engine_opts(), None)
+    }
+}
+
+impl ClusterModel for SubclusterPipeline {
+    fn algorithm(&self) -> &'static str {
+        "pipeline"
+    }
+
+    fn fit(&self, data: &Dataset) -> Result<FittedModel> {
+        let r = self.run(data)?;
+        let cfg = self.config();
+        // The pipeline scales for the partition stage only; refit the
+        // scaler (two O(M·D) corner scans, no copy) so the artifact
+        // carries the fitted transform alongside the centers.
+        let scaler = if cfg.scale {
+            let mut s = MinMaxScaler::new();
+            s.fit(data)?;
+            Some(s)
+        } else {
+            None
+        };
+        FittedModel::new(
+            FitMeta {
+                algorithm: self.algorithm().to_string(),
+                k: r.counts.len(),
+                dims: data.dims(),
+                trained_on: data.len(),
+                inertia: r.inertia,
+                iterations: r.global_iterations,
+                engine: cfg.engine_opts(),
+            },
+            r.centers,
+            scaler,
+        )
+    }
+}
+
+/// Algorithm-by-name model construction — one dispatch shared by the
+/// CLI `fit` subcommand and the server's `fit` request.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// `kmeans` | `minibatch` | `bisecting` | `pipeline` (plus the
+    /// long spellings the artifacts record).
+    pub algorithm: String,
+    /// Requested number of centers.
+    pub k: usize,
+    /// Algorithm-specific iteration knob: Lloyd `max_iters`,
+    /// mini-batch rounds, bisecting per-split iterations, or the
+    /// pipeline's global iterations.  `None` keeps each default.
+    pub iters: Option<usize>,
+    pub seed: u64,
+    /// Engine knobs for the fit (recorded as provenance).
+    pub engine: EngineOpts,
+    /// Pipeline-only: partitioning scheme.
+    pub scheme: Option<Scheme>,
+    /// Pipeline-only: the paper's compression value c.
+    pub compression: Option<f32>,
+    /// Pipeline-only: sub-region count G.
+    pub num_groups: Option<usize>,
+}
+
+impl ModelSpec {
+    pub fn new(algorithm: impl Into<String>, k: usize) -> ModelSpec {
+        ModelSpec {
+            algorithm: algorithm.into(),
+            k,
+            iters: None,
+            seed: 0,
+            engine: EngineOpts::default(),
+            scheme: None,
+            compression: None,
+            num_groups: None,
+        }
+    }
+
+    /// Build the model this spec names and fit it on `data`.
+    pub fn fit(&self, data: &Dataset) -> Result<FittedModel> {
+        match self.algorithm.as_str() {
+            "kmeans" => {
+                let mut cfg = KMeansConfig { k: self.k, seed: self.seed, ..Default::default() }
+                    .with_engine_opts(self.engine);
+                if let Some(it) = self.iters {
+                    cfg.max_iters = it;
+                }
+                KMeans { config: cfg }.fit(data)
+            }
+            "minibatch" | "minibatch-kmeans" => {
+                let mut cfg = MiniBatchKMeans { k: self.k, seed: self.seed, ..Default::default() }
+                    .with_engine_opts(self.engine);
+                if let Some(it) = self.iters {
+                    cfg.iters = it;
+                }
+                cfg.fit(data)
+            }
+            "bisecting" | "bisecting-kmeans" => {
+                let mut cfg = BisectingKMeans { k: self.k, seed: self.seed, ..Default::default() }
+                    .with_engine_opts(self.engine);
+                if let Some(it) = self.iters {
+                    cfg.split_iters = it;
+                }
+                cfg.fit(data)
+            }
+            "pipeline" | "subcluster" | "subcluster-pipeline" => {
+                let mut b = PipelineConfig::builder()
+                    .final_k(self.k)
+                    .seed(self.seed)
+                    .engine(self.engine);
+                if let Some(s) = self.scheme {
+                    b = b.scheme(s);
+                }
+                if let Some(c) = self.compression {
+                    b = b.compression(c);
+                }
+                if let Some(g) = self.num_groups {
+                    b = b.num_groups(g);
+                }
+                if let Some(it) = self.iters {
+                    b = b.global_iters(it);
+                }
+                SubclusterPipeline::new(b.build()?).fit(data)
+            }
+            other => Err(Error::Model(format!(
+                "unknown algorithm '{other}' (expected kmeans|minibatch|bisecting|pipeline)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_blobs, BlobSpec};
+
+    fn blobs(m: usize, k: usize, seed: u64) -> Dataset {
+        make_blobs(&BlobSpec {
+            num_points: m,
+            num_clusters: k,
+            dims: 2,
+            std: 0.05,
+            extent: 10.0,
+            seed,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn kmeans_fit_produces_consistent_artifact() {
+        let data = blobs(300, 3, 1);
+        let model = KMeans::new(3).fit(&data).unwrap();
+        assert_eq!(model.meta().algorithm, "kmeans");
+        assert_eq!(model.k(), 3);
+        assert_eq!(model.dims(), 2);
+        assert_eq!(model.meta().trained_on, 300);
+        assert!(model.meta().inertia.is_finite());
+        assert!(model.meta().iterations >= 1);
+        assert!(model.scaler().is_none());
+        // predicting the training set reproduces the fit inertia
+        let p = model.predict_dataset(&data).unwrap();
+        assert_eq!(p.counts.iter().sum::<u32>(), 300);
+        assert!((p.inertia - model.meta().inertia).abs() < 1e-6);
+    }
+
+    #[test]
+    fn every_algorithm_fits_via_spec() {
+        let data = blobs(400, 4, 2);
+        for (name, recorded) in [
+            ("kmeans", "kmeans"),
+            ("minibatch", "minibatch-kmeans"),
+            ("bisecting", "bisecting-kmeans"),
+            ("pipeline", "pipeline"),
+        ] {
+            let mut spec = ModelSpec::new(name, 4);
+            spec.num_groups = Some(4);
+            spec.compression = Some(4.0);
+            let model = spec.fit(&data).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(model.meta().algorithm, recorded, "{name}");
+            assert_eq!(model.dims(), 2, "{name}");
+            let p = model.predict_dataset(&data).unwrap();
+            assert_eq!(p.labels.len(), 400, "{name}");
+            assert_eq!(p.counts.iter().sum::<u32>(), 400, "{name}");
+        }
+        assert!(ModelSpec::new("dbscan", 3).fit(&data).is_err());
+    }
+
+    #[test]
+    fn pipeline_fit_carries_the_scaler() {
+        let data = blobs(500, 3, 3);
+        let cfg = PipelineConfig::builder()
+            .final_k(3)
+            .num_groups(4)
+            .compression(4.0)
+            .build()
+            .unwrap();
+        let model = SubclusterPipeline::new(cfg).fit(&data).unwrap();
+        let (mins, ranges) = model.scaler().expect("scale=true stores the scaler").params();
+        assert_eq!(mins, &data.min_corner()[..]);
+        let maxs = data.max_corner();
+        for ((r, &lo), &hi) in ranges.iter().zip(mins).zip(&maxs) {
+            assert!((r - (hi - lo)).abs() < 1e-6);
+        }
+        // scale=false → no scaler in the artifact
+        let cfg = PipelineConfig::builder()
+            .final_k(3)
+            .num_groups(4)
+            .compression(4.0)
+            .scale(false)
+            .build()
+            .unwrap();
+        let model = SubclusterPipeline::new(cfg).fit(&data).unwrap();
+        assert!(model.scaler().is_none());
+    }
+
+    #[test]
+    fn spec_iters_knob_reaches_each_algorithm() {
+        let data = blobs(200, 2, 4);
+        let mut spec = ModelSpec::new("kmeans", 2);
+        spec.iters = Some(1);
+        let m = spec.fit(&data).unwrap();
+        assert_eq!(m.meta().iterations, 1);
+        let mut spec = ModelSpec::new("pipeline", 2);
+        spec.num_groups = Some(2);
+        spec.compression = Some(4.0);
+        spec.iters = Some(5);
+        let m = spec.fit(&data).unwrap();
+        assert_eq!(m.meta().iterations, 5);
+    }
+
+    #[test]
+    fn spec_engine_opts_are_recorded() {
+        let data = blobs(150, 2, 5);
+        let mut spec = ModelSpec::new("kmeans", 2);
+        spec.engine = EngineOpts::serial().with_workers(3);
+        let m = spec.fit(&data).unwrap();
+        assert_eq!(m.meta().engine.workers, 3);
+        assert_eq!(m.engine_opts().workers, 3);
+    }
+}

@@ -13,7 +13,7 @@
 use std::cell::RefCell;
 use std::path::PathBuf;
 
-use crate::cluster::engine::{BoundsMode, Engine};
+use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
 use crate::cluster::kmeans::{lloyd_from_with, KMeansResult};
 use crate::coordinator::batcher::{Batcher, LocalResult};
 use crate::data::scaling::{MinMaxScaler, Scaler};
@@ -92,6 +92,21 @@ impl Default for PipelineConfig {
 impl PipelineConfig {
     pub fn builder() -> PipelineConfigBuilder {
         PipelineConfigBuilder::default()
+    }
+
+    /// The engine knobs as one shared [`EngineOpts`] (the per-field
+    /// `workers`/`bounds`/`kernel` spelling is deprecated; prefer
+    /// [`PipelineConfigBuilder::engine`]).
+    pub fn engine_opts(&self) -> EngineOpts {
+        EngineOpts { workers: self.workers, bounds: self.bounds, kernel: self.kernel }
+    }
+
+    /// Set all three engine knobs from one [`EngineOpts`].
+    pub fn with_engine_opts(mut self, opts: EngineOpts) -> Self {
+        self.workers = opts.workers.max(1);
+        self.bounds = opts.bounds;
+        self.kernel = opts.kernel;
+        self
     }
 
     fn validate(&self) -> Result<()> {
@@ -185,6 +200,12 @@ impl PipelineConfigBuilder {
         self
     }
 
+    /// Set the worker/bounds/kernel engine knobs in one call.
+    pub fn engine(mut self, opts: EngineOpts) -> Self {
+        self.cfg = self.cfg.with_engine_opts(opts);
+        self
+    }
+
     pub fn global_iters(mut self, it: usize) -> Self {
         self.cfg.global_iters = it;
         self
@@ -216,6 +237,10 @@ pub struct PipelineResult {
     pub inertia: f64,
     /// Pooled local-center count (the sample the global stage saw).
     pub local_centers: usize,
+    /// Lloyd iterations the global stage actually performed (the
+    /// device path may run a bucket's fixed count rather than
+    /// `global_iters`) — this is the number model artifacts record.
+    pub global_iterations: usize,
     /// Sub-regions after partitioning (and batcher splitting).
     pub num_groups: usize,
     /// Device dispatches issued for the local stage.
@@ -386,6 +411,7 @@ impl SubclusterPipeline {
             counts,
             inertia,
             local_centers: n_pool,
+            global_iterations: global.iterations,
             num_groups: partition.num_groups(),
             dispatches: n_dispatches,
             timings,

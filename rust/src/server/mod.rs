@@ -1,38 +1,195 @@
 //! Clustering job server: JSON-lines over TCP, bounded-queue
-//! backpressure, request latency telemetry.
+//! backpressure, request latency telemetry, and a serve-many model
+//! registry (fit once, predict thousands of times).
 //!
 //! The offline image ships no async runtime (no tokio — DESIGN.md §3),
 //! so the server is a std::net accept loop with one handler thread per
 //! connection capped by the scheduler's bounded queue: when the
-//! dispatch queue is full, requests get an immediate
+//! dispatch queue is full, `cluster` requests get an immediate
 //! `{"ok":false,"error":"queue full"}` instead of piling up.
+//!
+//! Request lifecycles:
+//!
+//! * `cluster` — one-shot: runs the whole pipeline on the scheduler's
+//!   dispatch thread and returns everything.
+//! * `fit` / `predict` / `models` — serve-many: `fit` runs a
+//!   [`crate::model::ModelSpec`] on the handler thread and registers
+//!   the [`FittedModel`] in an LRU-capped [`ModelRegistry`]; `predict`
+//!   assigns against a registered model with the server's engine knobs
+//!   (cheap — no re-clustering); `models` lists the registry.
+//!
+//! Fits run on handler threads (so the scheduler queue stays free for
+//! `cluster` jobs) but are *not* unbounded: a [`FitGate`] capped at the
+//! scheduler's queue depth rejects excess concurrent fits with an
+//! immediate `fit queue full` error, preserving the server's overload
+//! behaviour for its heaviest request type.
+//!
+//! Handler streams carry a read timeout ([`HANDLER_POLL`]) so idle
+//! connections re-check the stop flag instead of parking forever in a
+//! blocking read, and a write timeout ([`WRITE_TIMEOUT`]) so a client
+//! that never drains its responses can't park a handler in `write_all`
+//! — [`Server::shutdown`] returns promptly even when a client holds a
+//! connection open.  Finished handler threads are *joined*, not
+//! dropped, so a handler panic surfaces in the server's log instead of
+//! vanishing.
 
 pub mod protocol;
+pub mod registry;
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::cluster::EngineOpts;
 use crate::coordinator::{Scheduler, SchedulerConfig};
 use crate::error::{Error, Result};
+use crate::model::{FittedModel, ModelSpec};
 use crate::telemetry::LatencyHistogram;
-use protocol::{encode_error, encode_pong, encode_result, encode_stats, parse_request, Request};
+use crate::util::threadpool::default_workers;
+use protocol::{
+    encode_error, encode_fit_result, encode_models, encode_pong, encode_prediction,
+    encode_result, encode_stats, parse_request, FitJob, PredictJob, Request,
+};
+pub use registry::{ModelInfo, ModelRegistry};
+
+/// Read timeout on handler streams: the interval at which an idle
+/// connection re-checks the stop flag.  Bounds how long
+/// [`Server::shutdown`] can block on idle clients.
+pub const HANDLER_POLL: Duration = Duration::from_millis(200);
+
+/// Write timeout on handler streams.  A client that sends a request
+/// and never reads the response would otherwise fill its TCP window
+/// and park the handler in `write_all` forever — past the stop flag,
+/// hanging [`Server::shutdown`] from the write side the way idle reads
+/// used to from the read side.  A write stalled this long has a dead
+/// or hostile peer; the handler drops the connection.
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Upper bound on one buffered request line (64 MiB).  Bounds what a
+/// single connection can make the server hold *before* any request
+/// admission check runs — without it, N connections could each
+/// accumulate an arbitrarily long line (and then its parsed JSON DOM)
+/// regardless of queue depth or the fit gate.  A line this long is not
+/// a legitimate request; the connection is answered with an error and
+/// dropped (there is no way to resync mid-line).
+pub const MAX_REQUEST_BYTES: usize = 64 << 20;
+
+/// Default registry capacity (named fitted models held in memory).
+pub const DEFAULT_MODEL_CAP: usize = 16;
+
+/// Full server configuration: the scheduler for one-shot `cluster`
+/// jobs plus the serve-many knobs.
+pub struct ServerConfig {
+    pub scheduler: SchedulerConfig,
+    /// Engine knobs for `fit`/`predict` executed on handler threads
+    /// (`cluster` jobs use the scheduler's own workers).
+    pub engine: EngineOpts,
+    /// LRU capacity of the model registry.
+    pub model_cap: usize,
+    /// Models registered before the server accepts its first
+    /// connection (e.g. artifacts written by the CLI `fit` subcommand
+    /// and loaded via `serve --models`).
+    pub preload: Vec<(String, FittedModel)>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            scheduler: SchedulerConfig::default(),
+            engine: EngineOpts::default().with_workers(default_workers()),
+            model_cap: DEFAULT_MODEL_CAP,
+            preload: Vec::new(),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Config sharing the scheduler's worker count for predicts.
+    pub fn from_scheduler(scheduler: SchedulerConfig) -> ServerConfig {
+        let engine = EngineOpts::default().with_workers(scheduler.workers);
+        ServerConfig { scheduler, engine, ..Default::default() }
+    }
+}
+
+/// Counting gate bounding concurrent `fit` *computations*.  Fits
+/// bypass the scheduler queue (they run on handler threads), so
+/// without this the heaviest request type would be the only one with
+/// no backpressure: N clients fitting at once would each spin up
+/// engine threads instead of getting the server's usual "full"
+/// rejection.  The gate is checked after the request is parsed — what
+/// a connection can buffer *before* admission is bounded separately by
+/// [`MAX_REQUEST_BYTES`].
+struct FitGate {
+    max: usize,
+    active: AtomicUsize,
+}
+
+impl FitGate {
+    fn new(max: usize) -> FitGate {
+        FitGate { max: max.max(1), active: AtomicUsize::new(0) }
+    }
+
+    /// Take a slot, or `None` when `max` fits are already running.
+    fn try_acquire(&self) -> Option<FitPermit<'_>> {
+        let mut n = self.active.load(Ordering::Relaxed);
+        loop {
+            if n >= self.max {
+                return None;
+            }
+            match self.active.compare_exchange_weak(
+                n,
+                n + 1,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(FitPermit(self)),
+                Err(cur) => n = cur,
+            }
+        }
+    }
+}
+
+/// RAII slot in a [`FitGate`]; releases on drop (including panics).
+struct FitPermit<'a>(&'a FitGate);
+
+impl Drop for FitPermit<'_> {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// Everything a handler thread needs, shared across connections.
+struct HandlerCtx {
+    scheduler: Arc<Scheduler>,
+    registry: Arc<ModelRegistry>,
+    engine: EngineOpts,
+    fits: FitGate,
+    latency: Arc<LatencyHistogram>,
+    stop: Arc<AtomicBool>,
+}
 
 /// Handle to a running server.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
+    registry: Arc<ModelRegistry>,
     pub latency: Arc<LatencyHistogram>,
 }
 
 impl Server {
-    /// Bind and start serving.  `addr` may use port 0 for an ephemeral
-    /// port; the bound address is available via [`Server::addr`].
+    /// Bind and start serving with serve-many defaults.  `addr` may use
+    /// port 0 for an ephemeral port; the bound address is available via
+    /// [`Server::addr`].
     pub fn start(addr: &str, scheduler_cfg: SchedulerConfig) -> Result<Server> {
+        Self::start_with(addr, ServerConfig::from_scheduler(scheduler_cfg))
+    }
+
+    /// Bind and start serving with explicit [`ServerConfig`].
+    pub fn start_with(addr: &str, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::Server(format!("bind {addr}: {e}")))?;
         let bound = listener
@@ -40,44 +197,77 @@ impl Server {
             .map_err(|e| Error::Server(e.to_string()))?;
         let stop = Arc::new(AtomicBool::new(false));
         let latency = Arc::new(LatencyHistogram::new());
+        let registry = Arc::new(ModelRegistry::new(cfg.model_cap));
+        for (name, model) in cfg.preload {
+            // a preload overflowing the cap is almost certainly an
+            // operator mistake — say so instead of serving a surprise
+            // "unknown model" later (the CLI also rejects it up front)
+            if let Some(evicted) = registry.insert(name, model) {
+                eprintln!(
+                    "parsample server: preload exceeds model cap {}; evicted '{evicted}'",
+                    cfg.model_cap
+                );
+            }
+        }
 
         let accept_stop = Arc::clone(&stop);
         let accept_latency = Arc::clone(&latency);
+        let accept_registry = Arc::clone(&registry);
+        let engine = cfg.engine;
+        let scheduler_cfg = cfg.scheduler;
+        let fit_cap = scheduler_cfg.queue_depth;
         let accept_handle = std::thread::spawn(move || {
             // the scheduler (and its PJRT client) lives on this thread's
             // children; one scheduler serves all connections
-            let scheduler = Arc::new(Scheduler::start(scheduler_cfg));
+            let ctx = Arc::new(HandlerCtx {
+                scheduler: Arc::new(Scheduler::start(scheduler_cfg)),
+                registry: accept_registry,
+                engine,
+                fits: FitGate::new(fit_cap),
+                latency: accept_latency,
+                stop: accept_stop,
+            });
             let mut handlers: Vec<JoinHandle<()>> = Vec::new();
             for stream in listener.incoming() {
-                if accept_stop.load(Ordering::SeqCst) {
+                if ctx.stop.load(Ordering::SeqCst) {
                     break;
                 }
                 match stream {
                     Ok(stream) => {
-                        let scheduler = Arc::clone(&scheduler);
-                        let latency = Arc::clone(&accept_latency);
-                        let stop = Arc::clone(&accept_stop);
+                        let ctx = Arc::clone(&ctx);
                         handlers.push(std::thread::spawn(move || {
-                            let _ = handle_connection(stream, &scheduler, &latency, &stop);
+                            let _ = handle_connection(stream, &ctx);
                         }));
                     }
                     Err(_) => continue,
                 }
-                handlers.retain(|h| !h.is_finished());
+                reap_finished(&mut handlers);
             }
             for h in handlers {
-                let _ = h.join();
+                join_handler(h);
             }
         });
 
-        Ok(Server { addr: bound, stop, accept_handle: Some(accept_handle), latency })
+        Ok(Server {
+            addr: bound,
+            stop,
+            accept_handle: Some(accept_handle),
+            registry,
+            latency,
+        })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
-    /// Stop accepting and join the accept loop.
+    /// The serve-many model registry (shared with the handlers).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Stop accepting, wake idle handlers, and join the accept loop.
+    /// Bounded by [`HANDLER_POLL`] plus any in-flight request.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // unblock the accept loop
@@ -94,44 +284,188 @@ impl Drop for Server {
     }
 }
 
-fn handle_connection(
-    stream: TcpStream,
-    scheduler: &Scheduler,
-    latency: &LatencyHistogram,
-    stop: &AtomicBool,
-) -> Result<()> {
-    let peer = stream.peer_addr().ok();
+/// Join the finished handlers in `handlers`, keeping the live ones.
+/// Joining (rather than dropping the handles) surfaces handler panics.
+fn reap_finished(handlers: &mut Vec<JoinHandle<()>>) {
+    let mut live = Vec::with_capacity(handlers.len());
+    for h in handlers.drain(..) {
+        if h.is_finished() {
+            join_handler(h);
+        } else {
+            live.push(h);
+        }
+    }
+    *handlers = live;
+}
+
+fn join_handler(h: JoinHandle<()>) {
+    if let Err(panic) = h.join() {
+        let msg = panic
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| panic.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        eprintln!("parsample server: connection handler panicked: {msg}");
+    }
+}
+
+fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
+    // Poll-read so an idle connection re-checks the stop flag instead
+    // of blocking shutdown forever.
+    stream
+        .set_read_timeout(Some(HANDLER_POLL))
+        .map_err(|e| Error::Server(format!("set_read_timeout: {e}")))?;
+    stream
+        .set_write_timeout(Some(WRITE_TIMEOUT))
+        .map_err(|e| Error::Server(format!("set_write_timeout: {e}")))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        if stop.load(Ordering::SeqCst) {
+    let mut reader = BufReader::new(stream);
+    // Accumulate raw bytes, not a String: read_line would *discard* a
+    // partial read that a timeout splits mid multi-byte UTF-8 character
+    // (std truncates the buffer back when the tail isn't valid UTF-8),
+    // silently corrupting the request stream.  read_until keeps every
+    // byte across timeouts; UTF-8 is checked once per complete line.
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) {
             break;
         }
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+        let read = reader.read_until(b'\n', &mut buf);
+        // checked on every return, including timeouts: a huge line
+        // accumulates across WouldBlocks without ever returning Ok
+        if buf.len() > MAX_REQUEST_BYTES {
+            let err = encode_error(None, "request line exceeds 64 MiB");
+            writer.write_all(err.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            return Ok(()); // cannot resync mid-line; drop the connection
         }
-        let t0 = Instant::now();
-        let response = match parse_request(&line) {
-            Ok(Request::Ping) => encode_pong(),
-            Ok(Request::Stats) => encode_stats(&scheduler.counters.snapshot()),
-            Ok(Request::Cluster(job)) => {
-                let id = job.id;
-                let dims = job.dims;
-                match scheduler.run_blocking(job) {
-                    Ok(result) => encode_result(&result, dims),
-                    Err(e) => encode_error(Some(id), &e.to_string()),
+        match read {
+            Ok(0) => {
+                // client closed its write side; a final unterminated
+                // line still gets served (the old `lines()` loop
+                // yielded trailing lines too, and a half-closed peer
+                // can still read the response)
+                if !buf.is_empty() {
+                    serve_line(&buf, ctx, &mut writer)?;
                 }
+                break;
             }
-            Err(e) => encode_error(None, &e.to_string()),
-        };
-        latency.record(t0.elapsed());
-        writer.write_all(response.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+            Ok(_) => {
+                serve_line(&buf, ctx, &mut writer)?;
+                buf.clear();
+            }
+            // timeout: bytes read so far stay in `buf`; loop to re-check
+            // the stop flag, then keep reading where we left off
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
     }
-    let _ = peer;
     Ok(())
+}
+
+/// Parse/dispatch one complete request line and write the response
+/// (empty lines are keep-alive no-ops).
+fn serve_line(buf: &[u8], ctx: &HandlerCtx, writer: &mut TcpStream) -> Result<()> {
+    let response = match std::str::from_utf8(buf) {
+        Ok(line) if line.trim().is_empty() => return Ok(()),
+        Ok(line) => {
+            let t0 = Instant::now();
+            let response = dispatch(line, ctx);
+            ctx.latency.record(t0.elapsed());
+            response
+        }
+        Err(_) => encode_error(None, "request line is not valid utf-8"),
+    };
+    writer.write_all(response.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// Parse and execute one request line.
+fn dispatch(line: &str, ctx: &HandlerCtx) -> String {
+    match parse_request(line) {
+        Ok(Request::Ping) => encode_pong(),
+        Ok(Request::Stats) => encode_stats(&ctx.scheduler.counters.snapshot()),
+        Ok(Request::Models) => encode_models(&ctx.registry.list()),
+        Ok(Request::Cluster(job)) => {
+            let id = job.id;
+            let dims = job.dims;
+            match ctx.scheduler.run_blocking(job) {
+                Ok(result) => encode_result(&result, dims),
+                Err(e) => encode_error(Some(id), &e.to_string()),
+            }
+        }
+        Ok(Request::Fit(job)) => match run_fit(ctx, job) {
+            Ok(response) => response,
+            Err(e) => encode_error(None, &e.to_string()),
+        },
+        Ok(Request::Predict(job)) => match run_predict(ctx, &job) {
+            Ok(response) => response,
+            Err(e) => encode_error(None, &e.to_string()),
+        },
+        Err(e) => encode_error(None, &e.to_string()),
+    }
+}
+
+/// Execute a fit on this handler thread and register the artifact.
+/// (Fits are rare and heavy; predicts are the hot path.  Running the
+/// fit here keeps the scheduler queue free for one-shot cluster jobs.)
+fn run_fit(ctx: &HandlerCtx, job: FitJob) -> Result<String> {
+    let _permit = ctx
+        .fits
+        .try_acquire()
+        .ok_or_else(|| Error::Server("fit queue full".into()))?;
+    let t0 = Instant::now();
+    let data = crate::data::Dataset::new(job.points, job.dims)?;
+    // clients may pick bounds/kernel (bit-identical knobs), but the
+    // worker count stays under the server's control
+    let mut engine = ctx.engine;
+    if let Some(b) = job.bounds {
+        engine = engine.with_bounds(b);
+    }
+    if let Some(k) = job.kernel {
+        engine = engine.with_kernel(k);
+    }
+    let spec = ModelSpec {
+        algorithm: job.algorithm,
+        k: job.k,
+        iters: job.iters,
+        seed: job.seed,
+        engine,
+        scheme: job.scheme,
+        compression: job.compression,
+        num_groups: job.num_groups,
+    };
+    let model = spec.fit(&data)?;
+    let response = encode_fit_result(&job.name, &model, t0.elapsed().as_secs_f64() * 1e3);
+    if let Some(evicted) = ctx.registry.insert(job.name, model) {
+        // leave a server-side trace: the evicted model's owner will see
+        // "unknown model" on its next predict, and this is the only
+        // place that knows why
+        eprintln!("parsample server: model cap reached; fit evicted '{evicted}'");
+    }
+    Ok(response)
+}
+
+/// Assign the request's points against a registered model.
+fn run_predict(ctx: &HandlerCtx, job: &PredictJob) -> Result<String> {
+    let model = ctx.registry.get(&job.name).ok_or_else(|| {
+        Error::Server(format!("unknown model '{}' (fit it first, or check cmd models)", job.name))
+    })?;
+    if job.dims != model.dims() {
+        return Err(Error::Server(format!(
+            "points have {} dims, model '{}' expects {}",
+            job.dims,
+            job.name,
+            model.dims()
+        )));
+    }
+    let prediction = model.predict_batch_with(&job.points, ctx.engine)?;
+    Ok(encode_prediction(&job.name, &prediction))
 }
 
 /// Minimal blocking client for examples and tests.
@@ -159,5 +493,28 @@ impl Client {
             return Err(Error::Server("connection closed".into()));
         }
         Ok(line.trim_end().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_gate_caps_concurrent_permits() {
+        let gate = FitGate::new(2);
+        let a = gate.try_acquire().expect("slot 1");
+        let _b = gate.try_acquire().expect("slot 2");
+        assert!(gate.try_acquire().is_none(), "cap reached");
+        drop(a);
+        let _c = gate.try_acquire().expect("slot freed by drop");
+        assert!(gate.try_acquire().is_none());
+    }
+
+    #[test]
+    fn fit_gate_min_cap_is_one() {
+        let gate = FitGate::new(0);
+        let _a = gate.try_acquire().expect("clamped to 1");
+        assert!(gate.try_acquire().is_none());
     }
 }

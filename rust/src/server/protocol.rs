@@ -4,22 +4,122 @@
 //! ```json
 //! {"cmd":"cluster","id":1,"points":[[1.0,2.0],...],"k":3,
 //!  "scheme":"unequal","compression":6,"num_groups":6,"seed":0}
+//! {"cmd":"fit","name":"prod","points":[[1.0,2.0],...],"k":3,
+//!  "algorithm":"pipeline","compression":6,"num_groups":6,"seed":0}
+//! {"cmd":"predict","name":"prod","points":[[1.0,2.0],...]}
+//! {"cmd":"models"}
 //! {"cmd":"ping"}
 //! {"cmd":"stats"}
 //! ```
 //! Responses: `{"id":1,"ok":true,...}` / `{"ok":false,"error":"..."}`.
+//!
+//! `cluster` is the original one-shot job: partition + fit + assign,
+//! everything returned, nothing kept.  The serve-many trio splits that
+//! lifecycle: `fit` clusters once and registers a named
+//! [`crate::model::FittedModel`] in the server's LRU registry, then
+//! thousands of small `predict` requests assign against the registered
+//! centers without re-clustering; `models` lists what is registered.
 
+use crate::cluster::{BoundsMode, KernelMode};
 use crate::coordinator::job::{JobRequest, JobResult};
 use crate::error::{Error, Result};
+use crate::model::{FittedModel, Prediction};
 use crate::partition::Scheme;
+use crate::server::registry::ModelInfo;
 use crate::util::json::Json;
+
+/// Longest accepted model name (wire sanity bound).
+pub const MAX_MODEL_NAME: usize = 128;
+
+/// A `fit` request: cluster once, register the artifact under `name`.
+#[derive(Debug, Clone)]
+pub struct FitJob {
+    pub name: String,
+    /// Algorithm for [`crate::model::ModelSpec`] (default `pipeline`).
+    pub algorithm: String,
+    /// Flat row-major points.
+    pub points: Vec<f32>,
+    pub dims: usize,
+    pub k: usize,
+    pub iters: Option<usize>,
+    pub seed: u64,
+    /// Pipeline-only knobs.
+    pub scheme: Option<Scheme>,
+    pub compression: Option<f32>,
+    pub num_groups: Option<usize>,
+    /// Optional engine overrides; worker count always stays under the
+    /// server's control.
+    pub bounds: Option<BoundsMode>,
+    pub kernel: Option<KernelMode>,
+}
+
+/// A `predict` request against a registered model.
+#[derive(Debug, Clone)]
+pub struct PredictJob {
+    pub name: String,
+    /// Flat row-major points.
+    pub points: Vec<f32>,
+    pub dims: usize,
+}
 
 /// Parsed client request.
 #[derive(Debug, Clone)]
 pub enum Request {
     Cluster(JobRequest),
+    Fit(FitJob),
+    Predict(PredictJob),
+    Models,
     Ping,
     Stats,
+}
+
+/// Parse the `points` field: a non-empty array of equal-length numeric
+/// rows, flattened row-major.  Returns `(points, dims)`.
+fn parse_points(v: &Json) -> Result<(Vec<f32>, usize)> {
+    let rows = v
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Server("missing points".into()))?;
+    if rows.is_empty() {
+        return Err(Error::Server("empty points".into()));
+    }
+    let dims = rows[0]
+        .as_arr()
+        .ok_or_else(|| Error::Server("points must be arrays".into()))?
+        .len();
+    if dims == 0 {
+        return Err(Error::Server("zero-dimension points".into()));
+    }
+    let mut points = Vec::with_capacity(rows.len() * dims);
+    for r in rows {
+        let row = r
+            .as_arr()
+            .ok_or_else(|| Error::Server("points must be arrays".into()))?;
+        if row.len() != dims {
+            return Err(Error::Server("ragged points".into()));
+        }
+        for x in row {
+            points.push(
+                x.as_f64()
+                    .ok_or_else(|| Error::Server("non-numeric point".into()))? as f32,
+            );
+        }
+    }
+    Ok((points, dims))
+}
+
+/// Parse the `name` field naming a model.
+fn parse_name(v: &Json) -> Result<String> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Server("missing model name".into()))?;
+    if name.is_empty() || name.len() > MAX_MODEL_NAME {
+        return Err(Error::Server(format!(
+            "model name must be 1..={MAX_MODEL_NAME} bytes"
+        )));
+    }
+    Ok(name.to_string())
 }
 
 /// Parse one request line.
@@ -32,38 +132,10 @@ pub fn parse_request(line: &str) -> Result<Request> {
     match cmd {
         "ping" => Ok(Request::Ping),
         "stats" => Ok(Request::Stats),
+        "models" => Ok(Request::Models),
         "cluster" => {
             let id = v.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
-            let rows = v
-                .get("points")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| Error::Server("missing points".into()))?;
-            if rows.is_empty() {
-                return Err(Error::Server("empty points".into()));
-            }
-            let dims = rows[0]
-                .as_arr()
-                .ok_or_else(|| Error::Server("points must be arrays".into()))?
-                .len();
-            if dims == 0 {
-                return Err(Error::Server("zero-dimension points".into()));
-            }
-            let mut points = Vec::with_capacity(rows.len() * dims);
-            for r in rows {
-                let row = r
-                    .as_arr()
-                    .ok_or_else(|| Error::Server("points must be arrays".into()))?;
-                if row.len() != dims {
-                    return Err(Error::Server("ragged points".into()));
-                }
-                for x in row {
-                    points.push(
-                        x.as_f64()
-                            .ok_or_else(|| Error::Server("non-numeric point".into()))?
-                            as f32,
-                    );
-                }
-            }
+            let (points, dims) = parse_points(&v)?;
             let k = v
                 .get("k")
                 .and_then(Json::as_usize)
@@ -82,6 +154,57 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 job.seed = s as u64;
             }
             Ok(Request::Cluster(job))
+        }
+        "fit" => {
+            let name = parse_name(&v)?;
+            let (points, dims) = parse_points(&v)?;
+            let k = v
+                .get("k")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Server("missing k".into()))?;
+            let algorithm = v
+                .get("algorithm")
+                .map(|a| {
+                    a.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| Error::Server("algorithm must be a string".into()))
+                })
+                .transpose()?
+                .unwrap_or_else(|| "pipeline".to_string());
+            let scheme = v
+                .get("scheme")
+                .and_then(Json::as_str)
+                .map(Scheme::parse)
+                .transpose()?;
+            let bounds = v
+                .get("bounds")
+                .and_then(Json::as_str)
+                .map(BoundsMode::parse)
+                .transpose()?;
+            let kernel = v
+                .get("kernel")
+                .and_then(Json::as_str)
+                .map(KernelMode::parse)
+                .transpose()?;
+            Ok(Request::Fit(FitJob {
+                name,
+                algorithm,
+                points,
+                dims,
+                k,
+                iters: v.get("iters").and_then(Json::as_usize),
+                seed: v.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
+                scheme,
+                compression: v.get("compression").and_then(Json::as_f64).map(|c| c as f32),
+                num_groups: v.get("num_groups").and_then(Json::as_usize),
+                bounds,
+                kernel,
+            }))
+        }
+        "predict" => {
+            let name = parse_name(&v)?;
+            let (points, dims) = parse_points(&v)?;
+            Ok(Request::Predict(PredictJob { name, points, dims }))
         }
         other => Err(Error::Server(format!("unknown cmd '{other}'"))),
     }
@@ -129,6 +252,61 @@ pub fn encode_stats(counters: &[(&str, u64)]) -> String {
         fields.push((k, Json::num(*v as f64)));
     }
     Json::obj(fields).to_string()
+}
+
+/// Encode a successful fit response (the model itself stays in the
+/// registry; the client gets the name plus the fit summary).
+pub fn encode_fit_result(name: &str, model: &FittedModel, elapsed_ms: f64) -> String {
+    let meta = model.meta();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("name", Json::str(name)),
+        ("algorithm", Json::str(&meta.algorithm)),
+        ("k", Json::num(meta.k as f64)),
+        ("dims", Json::num(meta.dims as f64)),
+        ("trained_on", Json::num(meta.trained_on as f64)),
+        ("inertia", Json::num(meta.inertia)),
+        ("iterations", Json::num(meta.iterations as f64)),
+        ("elapsed_ms", Json::num(elapsed_ms)),
+    ])
+    .to_string()
+}
+
+/// Encode a successful predict response.
+pub fn encode_prediction(name: &str, p: &Prediction) -> String {
+    let labels: Vec<Json> = p.labels.iter().map(|&l| Json::num(l as f64)).collect();
+    let counts: Vec<Json> = p.counts.iter().map(|&c| Json::num(c as f64)).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("name", Json::str(name)),
+        ("labels", Json::Arr(labels)),
+        ("counts", Json::Arr(counts)),
+        ("inertia", Json::num(p.inertia)),
+    ])
+    .to_string()
+}
+
+/// Encode the `models` listing (LRU first, mirroring eviction order).
+pub fn encode_models(models: &[ModelInfo]) -> String {
+    let rows: Vec<Json> = models
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("name", Json::str(&m.name)),
+                ("algorithm", Json::str(&m.algorithm)),
+                ("k", Json::num(m.k as f64)),
+                ("dims", Json::num(m.dims as f64)),
+                ("trained_on", Json::num(m.trained_on as f64)),
+                ("inertia", Json::num(m.inertia)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("count", Json::num(models.len() as f64)),
+        ("models", Json::Arr(rows)),
+    ])
+    .to_string()
 }
 
 #[cfg(test)]
@@ -196,5 +374,142 @@ mod tests {
         let v = Json::parse(&s).unwrap();
         assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
         assert_eq!(v.get("error").unwrap().as_str(), Some("queue full"));
+    }
+
+    #[test]
+    fn parses_fit_request() {
+        let line = r#"{"cmd":"fit","name":"prod","algorithm":"kmeans",
+                       "points":[[1,2],[3,4],[5,6]],"k":2,"iters":9,"seed":7,
+                       "bounds":"off","kernel":"wide"}"#
+            .replace('\n', " ");
+        match parse_request(&line).unwrap() {
+            Request::Fit(j) => {
+                assert_eq!(j.name, "prod");
+                assert_eq!(j.algorithm, "kmeans");
+                assert_eq!(j.dims, 2);
+                assert_eq!(j.points.len(), 6);
+                assert_eq!(j.k, 2);
+                assert_eq!(j.iters, Some(9));
+                assert_eq!(j.seed, 7);
+                assert_eq!(j.bounds, Some(BoundsMode::Off));
+                assert_eq!(j.kernel, Some(KernelMode::Wide));
+                assert!(j.scheme.is_none());
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fit_defaults_to_pipeline() {
+        let line = r#"{"cmd":"fit","name":"m","points":[[1,2],[3,4]],"k":2,
+                       "scheme":"equal","compression":4,"num_groups":2}"#
+            .replace('\n', " ");
+        match parse_request(&line).unwrap() {
+            Request::Fit(j) => {
+                assert_eq!(j.algorithm, "pipeline");
+                assert_eq!(j.scheme, Some(Scheme::Equal));
+                assert_eq!(j.compression, Some(4.0));
+                assert_eq!(j.num_groups, Some(2));
+                assert_eq!(j.iters, None);
+                assert!(j.bounds.is_none() && j.kernel.is_none());
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_predict_and_models() {
+        match parse_request(r#"{"cmd":"predict","name":"m","points":[[1,2,3]]}"#).unwrap() {
+            Request::Predict(j) => {
+                assert_eq!(j.name, "m");
+                assert_eq!(j.dims, 3);
+                assert_eq!(j.points, vec![1.0, 2.0, 3.0]);
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        assert!(matches!(parse_request(r#"{"cmd":"models"}"#).unwrap(), Request::Models));
+    }
+
+    #[test]
+    fn rejects_malformed_fit_and_predict() {
+        // missing name
+        assert!(parse_request(r#"{"cmd":"fit","points":[[1,2]],"k":1}"#).is_err());
+        // empty / over-long name
+        assert!(parse_request(r#"{"cmd":"fit","name":"","points":[[1,2]],"k":1}"#).is_err());
+        let long = "x".repeat(MAX_MODEL_NAME + 1);
+        assert!(parse_request(&format!(
+            r#"{{"cmd":"fit","name":"{long}","points":[[1,2]],"k":1}}"#
+        ))
+        .is_err());
+        // missing k / points, ragged rows, bad knob values
+        assert!(parse_request(r#"{"cmd":"fit","name":"m","points":[[1,2]]}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"fit","name":"m","k":2}"#).is_err());
+        assert!(
+            parse_request(r#"{"cmd":"fit","name":"m","points":[[1,2],[3]],"k":1}"#).is_err()
+        );
+        assert!(parse_request(
+            r#"{"cmd":"fit","name":"m","points":[[1,2]],"k":1,"bounds":"banana"}"#
+        )
+        .is_err());
+        assert!(parse_request(
+            r#"{"cmd":"fit","name":"m","points":[[1,2]],"k":1,"kernel":"gpu"}"#
+        )
+        .is_err());
+        assert!(parse_request(
+            r#"{"cmd":"fit","name":"m","points":[[1,2]],"k":1,"algorithm":3}"#
+        )
+        .is_err());
+        // predict: missing name / points / empty rows
+        assert!(parse_request(r#"{"cmd":"predict","points":[[1,2]]}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"predict","name":"m"}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"predict","name":"m","points":[]}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"predict","name":"m","points":[["a"]]}"#).is_err());
+    }
+
+    #[test]
+    fn encodes_fit_predict_models_roundtrippable() {
+        use crate::model::{EngineOpts, FitMeta, FittedModel, Prediction};
+        let model = FittedModel::new(
+            FitMeta {
+                algorithm: "kmeans".into(),
+                k: 2,
+                dims: 2,
+                trained_on: 50,
+                inertia: 1.5,
+                iterations: 4,
+                engine: EngineOpts::serial(),
+            },
+            vec![0.0, 0.0, 1.0, 1.0],
+            None,
+        )
+        .unwrap();
+        let v = Json::parse(&encode_fit_result("m", &model, 12.5)).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("name").unwrap().as_str(), Some("m"));
+        assert_eq!(v.get("k").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("trained_on").unwrap().as_usize(), Some(50));
+        assert_eq!(v.get("elapsed_ms").unwrap().as_f64(), Some(12.5));
+
+        let p = Prediction { labels: vec![0, 1, 1], counts: vec![1, 2], inertia: 0.25 };
+        let v = Json::parse(&encode_prediction("m", &p)).unwrap();
+        assert_eq!(v.get("labels").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("counts").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("inertia").unwrap().as_f64(), Some(0.25));
+
+        let infos = vec![ModelInfo {
+            name: "m".into(),
+            algorithm: "kmeans".into(),
+            k: 2,
+            dims: 2,
+            trained_on: 50,
+            inertia: 1.5,
+        }];
+        let v = Json::parse(&encode_models(&infos)).unwrap();
+        assert_eq!(v.get("count").unwrap().as_usize(), Some(1));
+        let row = &v.get("models").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("name").unwrap().as_str(), Some("m"));
+        assert_eq!(row.get("algorithm").unwrap().as_str(), Some("kmeans"));
+        let v = Json::parse(&encode_models(&[])).unwrap();
+        assert_eq!(v.get("count").unwrap().as_usize(), Some(0));
     }
 }

@@ -1,0 +1,173 @@
+//! In-process registry of named fitted models — the serve-many half of
+//! the fit/predict lifecycle.
+//!
+//! A `fit` request clusters once and registers the resulting
+//! [`FittedModel`] under a caller-chosen name; from then on any number
+//! of `predict` requests hit the registered centers without
+//! re-clustering.  The registry is LRU-capped so a scan over model
+//! names cannot hoard memory: inserting past the cap evicts the least
+//! recently *used* model (both `predict` hits and re-`fit`s refresh
+//! recency).
+//!
+//! Follow-up (see ROADMAP): snapshot the registry to disk on shutdown
+//! so a restarted server comes back warm.
+
+use std::sync::{Arc, Mutex};
+
+use crate::model::FittedModel;
+
+/// Summary row for the `models` request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub algorithm: String,
+    pub k: usize,
+    pub dims: usize,
+    pub trained_on: usize,
+    pub inertia: f64,
+}
+
+/// Named fitted models, least-recently-used first.
+pub struct ModelRegistry {
+    cap: usize,
+    /// Index 0 = LRU, last = MRU.  A Vec is right-sized here: the cap
+    /// is small (tens), and every operation already takes the lock.
+    inner: Mutex<Vec<(String, Arc<FittedModel>)>>,
+}
+
+impl ModelRegistry {
+    /// Registry holding at most `cap` models (min 1).
+    pub fn new(cap: usize) -> ModelRegistry {
+        ModelRegistry { cap: cap.max(1), inner: Mutex::new(Vec::new()) }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Register `model` under `name`, replacing any previous holder of
+    /// the name and marking it most recently used.  Returns the name
+    /// of the model evicted to stay under the cap, if any.
+    pub fn insert(&self, name: impl Into<String>, model: FittedModel) -> Option<String> {
+        let name = name.into();
+        let mut inner = self.inner.lock().expect("registry lock");
+        inner.retain(|(n, _)| *n != name);
+        inner.push((name, Arc::new(model)));
+        if inner.len() > self.cap {
+            return Some(inner.remove(0).0);
+        }
+        None
+    }
+
+    /// Fetch a model by name, refreshing its recency.
+    pub fn get(&self, name: &str) -> Option<Arc<FittedModel>> {
+        let mut inner = self.inner.lock().expect("registry lock");
+        let pos = inner.iter().position(|(n, _)| n == name)?;
+        let entry = inner.remove(pos);
+        let model = Arc::clone(&entry.1);
+        inner.push(entry);
+        Some(model)
+    }
+
+    /// Snapshot of the registered models, LRU first (the order clients
+    /// see from the `models` request).  Does not touch recency.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let inner = self.inner.lock().expect("registry lock");
+        inner
+            .iter()
+            .map(|(name, m)| ModelInfo {
+                name: name.clone(),
+                algorithm: m.meta().algorithm.clone(),
+                k: m.k(),
+                dims: m.dims(),
+                trained_on: m.meta().trained_on,
+                inertia: m.meta().inertia,
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("registry lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{EngineOpts, FitMeta, FittedModel};
+
+    fn model(tag: f32) -> FittedModel {
+        FittedModel::new(
+            FitMeta {
+                algorithm: "kmeans".into(),
+                k: 1,
+                dims: 2,
+                trained_on: 4,
+                inertia: tag as f64,
+                iterations: 1,
+                engine: EngineOpts::serial(),
+            },
+            vec![tag, tag],
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn insert_get_list() {
+        let r = ModelRegistry::new(4);
+        assert!(r.is_empty());
+        assert_eq!(r.insert("a", model(1.0)), None);
+        assert_eq!(r.insert("b", model(2.0)), None);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get("a").unwrap().centers(), &[1.0, 1.0]);
+        assert!(r.get("missing").is_none());
+        let names: Vec<String> = r.list().into_iter().map(|i| i.name).collect();
+        // the get("a") refreshed a's recency, so b is now LRU
+        assert_eq!(names, vec!["b", "a"]);
+        assert_eq!(r.list()[0].k, 1);
+    }
+
+    #[test]
+    fn reinsert_replaces_and_refreshes() {
+        let r = ModelRegistry::new(4);
+        r.insert("a", model(1.0));
+        r.insert("b", model(2.0));
+        r.insert("a", model(3.0));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get("a").unwrap().centers(), &[3.0, 3.0]);
+        // "a" was refreshed by the reinsert, so an eviction takes "b"
+        let r2 = ModelRegistry::new(2);
+        r2.insert("a", model(1.0));
+        r2.insert("b", model(2.0));
+        r2.insert("a", model(3.0));
+        assert_eq!(r2.insert("c", model(4.0)), Some("b".to_string()));
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let r = ModelRegistry::new(2);
+        assert_eq!(r.insert("a", model(1.0)), None);
+        assert_eq!(r.insert("b", model(2.0)), None);
+        // touch "a" so "b" becomes LRU
+        assert!(r.get("a").is_some());
+        assert_eq!(r.insert("c", model(3.0)), Some("b".to_string()));
+        assert_eq!(r.len(), 2);
+        assert!(r.get("b").is_none());
+        assert!(r.get("a").is_some());
+        assert!(r.get("c").is_some());
+    }
+
+    #[test]
+    fn cap_of_one() {
+        let r = ModelRegistry::new(0); // clamped to 1
+        assert_eq!(r.cap(), 1);
+        assert_eq!(r.insert("a", model(1.0)), None);
+        assert_eq!(r.insert("b", model(2.0)), Some("a".to_string()));
+        assert_eq!(r.len(), 1);
+    }
+}

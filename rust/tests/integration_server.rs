@@ -1,9 +1,11 @@
 //! Integration: the TCP job server end to end — protocol, concurrent
-//! clients, error surfaces, backpressure, stats.
+//! clients, error surfaces, backpressure, stats, and the serve-many
+//! fit/predict/models lifecycle.
 
 use parsample::coordinator::SchedulerConfig;
 use parsample::data::synthetic::{make_blobs, BlobSpec};
-use parsample::server::{Client, Server};
+use parsample::model::{ClusterModel, FittedModel, KMeans};
+use parsample::server::{Client, Server, ServerConfig};
 use parsample::util::json::Json;
 
 fn start_server(queue_depth: usize) -> Server {
@@ -143,4 +145,260 @@ fn shutdown_is_clean() {
     if let Ok(mut c) = Client::connect(addr) {
         let _ = c.call("{\"cmd\":\"ping\"}");
     }
+}
+
+#[test]
+fn shutdown_returns_promptly_with_idle_connection_open() {
+    let mut server = start_server(2);
+    let addr = server.addr();
+    // a client that connects, speaks once, then just sits on the
+    // connection — the old blocking read would park the handler (and
+    // the accept loop's final join) forever
+    let mut idle = Client::connect(addr).unwrap();
+    let _ = idle.call("{\"cmd\":\"ping\"}").unwrap();
+    let mut fresh = Client::connect(addr).unwrap(); // never sends anything
+    let t0 = std::time::Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(5),
+        "shutdown took {:?} with idle connections open",
+        t0.elapsed()
+    );
+    // the idle connections are now dead
+    let idle_dead = idle.call("{\"cmd\":\"ping\"}").is_err();
+    let fresh_dead = fresh.call("{\"cmd\":\"ping\"}").is_err();
+    assert!(idle_dead || fresh_dead);
+}
+
+/// Row-major points → the protocol's nested-array form.
+fn points_json(points: &[f32], dims: usize) -> String {
+    let rows: Vec<String> = points
+        .chunks(dims)
+        .map(|r| {
+            let xs: Vec<String> = r.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", xs.join(","))
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+fn fit_request(name: &str, algo: &str, m: usize, k: usize) -> (String, Vec<f32>) {
+    let data = make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims: 2,
+        std: 0.05,
+        extent: 10.0,
+        seed: 99,
+    })
+    .unwrap();
+    let pts = data.as_slice().to_vec();
+    let req = format!(
+        "{{\"cmd\":\"fit\",\"name\":\"{name}\",\"algorithm\":\"{algo}\",\
+         \"points\":{},\"k\":{k},\"num_groups\":4,\"compression\":4}}",
+        points_json(&pts, 2)
+    );
+    (req, pts)
+}
+
+#[test]
+fn fit_predict_models_over_the_wire() {
+    let server = start_server(4);
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // registry starts empty
+    let v = Json::parse(&client.call("{\"cmd\":\"models\"}").unwrap()).unwrap();
+    assert_eq!(v.get("count").unwrap().as_usize(), Some(0));
+
+    // fit once…
+    let (req, pts) = fit_request("prod", "kmeans", 300, 3);
+    let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    assert_eq!(v.get("name").unwrap().as_str(), Some("prod"));
+    assert_eq!(v.get("algorithm").unwrap().as_str(), Some("kmeans"));
+    assert_eq!(v.get("k").unwrap().as_usize(), Some(3));
+    assert_eq!(v.get("trained_on").unwrap().as_usize(), Some(300));
+
+    // …predict many (small batches, no re-clustering)
+    for chunk in pts.chunks(2 * 10).take(5) {
+        let req = format!(
+            "{{\"cmd\":\"predict\",\"name\":\"prod\",\"points\":{}}}",
+            points_json(chunk, 2)
+        );
+        let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        assert_eq!(
+            v.get("labels").unwrap().as_arr().unwrap().len(),
+            chunk.len() / 2
+        );
+        assert_eq!(v.get("counts").unwrap().as_arr().unwrap().len(), 3);
+        assert!(v.get("inertia").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    // the registry lists it
+    let v = Json::parse(&client.call("{\"cmd\":\"models\"}").unwrap()).unwrap();
+    assert_eq!(v.get("count").unwrap().as_usize(), Some(1));
+    let row = &v.get("models").unwrap().as_arr().unwrap()[0];
+    assert_eq!(row.get("name").unwrap().as_str(), Some("prod"));
+
+    // serve-many error surfaces: unknown model, dims mismatch
+    let v = Json::parse(
+        &client
+            .call("{\"cmd\":\"predict\",\"name\":\"nope\",\"points\":[[1,2]]}")
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("unknown model"));
+    let v = Json::parse(
+        &client
+            .call("{\"cmd\":\"predict\",\"name\":\"prod\",\"points\":[[1,2,3]]}")
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+
+    // fit-level failures are reported, not fatal: k > points
+    let v = Json::parse(
+        &client
+            .call("{\"cmd\":\"fit\",\"name\":\"bad\",\"algorithm\":\"kmeans\",\"points\":[[1,2],[3,4]],\"k\":50}")
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    // unknown algorithm too
+    let v = Json::parse(
+        &client
+            .call("{\"cmd\":\"fit\",\"name\":\"bad\",\"algorithm\":\"dbscan\",\"points\":[[1,2],[3,4]],\"k\":1}")
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    // connection still usable
+    let v = Json::parse(&client.call("{\"cmd\":\"ping\"}").unwrap()).unwrap();
+    assert_eq!(v.get("pong"), Some(&Json::Bool(true)));
+}
+
+/// Acceptance: a model artifact that went through a save/load
+/// roundtrip (the CLI `fit` → `serve --models` path) answers server
+/// predict requests, bit-identically to a local predict.
+#[test]
+fn preloaded_saved_model_answers_predicts() {
+    let data = make_blobs(&BlobSpec {
+        num_points: 400,
+        num_clusters: 4,
+        dims: 2,
+        std: 0.05,
+        extent: 10.0,
+        seed: 5,
+    })
+    .unwrap();
+    // fit + save exactly like `parsample fit --out` does
+    let model = KMeans::new(4).fit(&data).unwrap();
+    let dir = std::env::temp_dir().join(format!("parsample_srv_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("prod.model.json");
+    model.save(&path).unwrap();
+    let local = model.predict_dataset(&data).unwrap();
+
+    // load exactly like `serve --models` does, and preload
+    let loaded = FittedModel::load(&path).unwrap();
+    let mut cfg = ServerConfig::from_scheduler(SchedulerConfig {
+        queue_depth: 4,
+        ..Default::default()
+    });
+    cfg.preload = vec![("prod".to_string(), loaded)];
+    let server = Server::start_with("127.0.0.1:0", cfg).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    let req = format!(
+        "{{\"cmd\":\"predict\",\"name\":\"prod\",\"points\":{}}}",
+        points_json(data.as_slice(), 2)
+    );
+    let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    let labels: Vec<u32> = v
+        .get("labels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|l| l.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(labels, local.labels);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn registry_evicts_lru_over_the_wire() {
+    let mut cfg = ServerConfig::from_scheduler(SchedulerConfig {
+        queue_depth: 4,
+        ..Default::default()
+    });
+    cfg.model_cap = 2;
+    let server = Server::start_with("127.0.0.1:0", cfg).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    for name in ["a", "b", "c"] {
+        let (req, _) = fit_request(name, "kmeans", 60, 2);
+        let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{name}");
+    }
+    let v = Json::parse(&client.call("{\"cmd\":\"models\"}").unwrap()).unwrap();
+    assert_eq!(v.get("count").unwrap().as_usize(), Some(2));
+    let names: Vec<&str> = v
+        .get("models")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(names, vec!["b", "c"], "oldest fit evicted first");
+}
+
+/// A request line with invalid UTF-8 gets an error response instead of
+/// corrupting the stream or killing the connection — the handler reads
+/// raw bytes (timeouts can split multi-byte characters) and validates
+/// once per complete line.
+#[test]
+fn invalid_utf8_line_is_rejected_not_fatal() {
+    use std::io::{BufRead, BufReader, Write};
+    let server = start_server(2);
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"cmd\":\"ping\xff\xfe\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim_end()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("utf-8"));
+    // the connection survives and serves the next request
+    stream.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim_end()).unwrap();
+    assert_eq!(v.get("pong"), Some(&Json::Bool(true)));
+}
+
+/// The CI smoke: one fit, one predict, clean shutdown on an ephemeral
+/// port.  Keeps the serve-many path and the shutdown fix green.
+#[test]
+fn server_fit_predict_shutdown_smoke() {
+    let mut server = start_server(4);
+    let mut client = Client::connect(server.addr()).unwrap();
+    let (req, pts) = fit_request("smoke", "pipeline", 400, 3);
+    let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    let req = format!(
+        "{{\"cmd\":\"predict\",\"name\":\"smoke\",\"points\":{}}}",
+        points_json(&pts[..20], 2)
+    );
+    let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    assert_eq!(v.get("labels").unwrap().as_arr().unwrap().len(), 10);
+    let t0 = std::time::Instant::now();
+    server.shutdown();
+    assert!(t0.elapsed() < std::time::Duration::from_secs(5));
 }

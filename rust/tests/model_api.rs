@@ -1,0 +1,165 @@
+//! Integration: the fit/predict model API end to end.
+//!
+//! Pins the PR's acceptance contract: `FittedModel::predict` labels are
+//! bit-identical to `Engine::assign_full` (the engine's fused
+//! assign-accumulate pass) on the same centers for **every**
+//! `EngineOpts` combination, and a save→load roundtrip changes nothing.
+
+use parsample::cluster::{BoundsMode, Engine, EngineOpts, KernelMode};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::data::Dataset;
+use parsample::model::{ClusterModel, FittedModel, KMeans, ModelSpec};
+use parsample::pipeline::{assign_full, PipelineConfig, SubclusterPipeline};
+
+fn blobs(m: usize, k: usize, dims: usize, seed: u64) -> Dataset {
+    make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims,
+        std: 0.05,
+        extent: 10.0,
+        seed,
+    })
+    .unwrap()
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("parsample_model_api_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Acceptance: predict labels bit-identical to the engine's fused pass
+/// over the full bounds × kernel × workers grid.
+#[test]
+fn predict_matches_assign_full_for_every_engine_opts_combination() {
+    let data = blobs(700, 5, 3, 11);
+    let model = KMeans::new(5).fit(&data).unwrap();
+    // serial scalar reference on the same centers
+    let reference = Engine::serial().assign_accumulate(data.as_slice(), 3, model.centers());
+    for bounds in [BoundsMode::Off, BoundsMode::Hamerly] {
+        for kernel in [KernelMode::Scalar, KernelMode::Wide, KernelMode::Auto] {
+            for workers in [1usize, 2, 8] {
+                let opts = EngineOpts { workers, bounds, kernel };
+                let p = model.predict_batch_with(data.as_slice(), opts).unwrap();
+                let tag = format!("{bounds:?}/{kernel:?}/w{workers}");
+                assert_eq!(p.labels, reference.labels, "{tag}");
+                assert_eq!(p.counts, reference.counts, "{tag}");
+                assert_eq!(p.inertia.to_bits(), reference.inertia.to_bits(), "{tag}");
+                // and against assign_full itself (the public seam)
+                let (labels, counts, inertia) =
+                    assign_full(data.as_slice(), 3, model.centers(), workers, kernel);
+                assert_eq!(p.labels, labels, "{tag}");
+                assert_eq!(p.counts, counts, "{tag}");
+                assert_eq!(p.inertia.to_bits(), inertia.to_bits(), "{tag}");
+            }
+        }
+    }
+}
+
+/// Acceptance: save → load → predict roundtrip parity, including the
+/// fitted scaler, for the pipeline model.
+#[test]
+fn save_load_predict_roundtrip_parity() {
+    let data = blobs(900, 4, 2, 3);
+    let cfg = PipelineConfig::builder()
+        .final_k(4)
+        .num_groups(4)
+        .compression(4.0)
+        .build()
+        .unwrap();
+    let model = SubclusterPipeline::new(cfg).fit(&data).unwrap();
+    let before = model.predict_dataset(&data).unwrap();
+
+    let path = tmp_path("pipeline.model.json");
+    model.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+
+    assert_eq!(loaded.meta(), model.meta());
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(loaded.centers()), bits(model.centers()));
+    let (lm, lr) = loaded.scaler().expect("pipeline stores its scaler").params();
+    let (om, or) = model.scaler().unwrap().params();
+    assert_eq!(bits(lm), bits(om));
+    assert_eq!(bits(lr), bits(or));
+
+    let after = loaded.predict_dataset(&data).unwrap();
+    assert_eq!(before.labels, after.labels);
+    assert_eq!(before.counts, after.counts);
+    assert_eq!(before.inertia.to_bits(), after.inertia.to_bits());
+    std::fs::remove_file(&path).ok();
+}
+
+/// The roundtrip also holds across engine-opts retuning on the loaded
+/// side: a model saved with one knob set predicts identically under
+/// another.
+#[test]
+fn loaded_model_retuned_engine_is_bit_identical() {
+    let data = blobs(500, 3, 4, 7);
+    let model = KMeans::new(3)
+        .with_engine_opts(EngineOpts {
+            workers: 2,
+            bounds: BoundsMode::Hamerly,
+            kernel: KernelMode::Wide,
+        })
+        .fit(&data)
+        .unwrap();
+    let path = tmp_path("kmeans.model.json");
+    model.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+    // provenance survived
+    assert_eq!(loaded.meta().engine.workers, 2);
+    assert_eq!(loaded.meta().engine.kernel, KernelMode::Wide);
+    let a = model.predict_dataset(&data).unwrap();
+    let b = loaded
+        .with_engine_opts(EngineOpts::serial().with_workers(8))
+        .predict_dataset(&data)
+        .unwrap();
+    assert_eq!(a.labels, b.labels);
+    assert_eq!(a.inertia.to_bits(), b.inertia.to_bits());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Every ModelSpec algorithm fits, saves, loads, and predicts.
+#[test]
+fn every_algorithm_roundtrips_through_disk() {
+    let data = blobs(400, 3, 2, 9);
+    for algo in ["kmeans", "minibatch", "bisecting", "pipeline"] {
+        let mut spec = ModelSpec::new(algo, 3);
+        spec.num_groups = Some(4);
+        spec.compression = Some(4.0);
+        let model = spec.fit(&data).unwrap_or_else(|e| panic!("{algo}: {e}"));
+        let path = tmp_path(&format!("{algo}.model.json"));
+        model.save(&path).unwrap();
+        let loaded = FittedModel::load(&path).unwrap();
+        let a = model.predict_dataset(&data).unwrap();
+        let b = loaded.predict_dataset(&data).unwrap();
+        assert_eq!(a.labels, b.labels, "{algo}");
+        assert_eq!(a.counts.iter().sum::<u32>(), 400, "{algo}");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// predict() on a single point agrees with predict_batch row-wise.
+#[test]
+fn single_point_predict_matches_batch() {
+    let data = blobs(300, 4, 3, 5);
+    let model = KMeans::new(4).fit(&data).unwrap();
+    let batch = model.predict_dataset(&data).unwrap();
+    for i in (0..data.len()).step_by(29) {
+        assert_eq!(model.predict(data.row(i)).unwrap(), batch.labels[i], "point {i}");
+    }
+}
+
+/// Fitting through the trait records honest metadata.
+#[test]
+fn fit_metadata_reflects_the_run() {
+    let data = blobs(250, 2, 2, 13);
+    let model = KMeans::new(2).fit(&data).unwrap();
+    let meta = model.meta();
+    assert_eq!(meta.algorithm, "kmeans");
+    assert_eq!((meta.k, meta.dims, meta.trained_on), (2, 2, 250));
+    // fit inertia equals a fresh engine inertia sweep over the centers
+    let engine_inertia = Engine::serial().inertia(data.as_slice(), 2, model.centers());
+    assert!((meta.inertia - engine_inertia).abs() < 1e-6);
+}
