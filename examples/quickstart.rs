@@ -8,9 +8,15 @@
 //! 6 groups, 6× compression), saves the fitted model, loads it back,
 //! and serves predictions from the artifact — the fit-once /
 //! predict-many split the whole system is built around.  Compares
-//! against traditional k-means at the end.
+//! against traditional k-means, then repeats the whole lifecycle
+//! **out-of-core**: fit and predict over a streaming `DataSource`
+//! without ever materializing the dataset, and check the results are
+//! bit-identical to the resident run.
 
 use parsample::data::builtin;
+use parsample::data::source::{BlobSource, CsvSource};
+use parsample::data::synthetic::BlobSpec;
+use parsample::data::{loader, Dataset};
 use parsample::eval;
 use parsample::model::{ClusterModel, FittedModel};
 use parsample::partition::Scheme;
@@ -68,5 +74,61 @@ fn main() -> parsample::Result<()> {
         base.inertia
     );
     std::fs::remove_file(&path).ok();
+
+    // ---- out-of-core: the same lifecycle without a resident dataset -----
+    //
+    // 8. a dataset "too big for RAM", stood in by a synthetic stream:
+    //    BlobSource yields the exact bytes make_blobs would, chunk by
+    //    chunk, without holding M×D floats
+    let spec = BlobSpec {
+        num_points: 20_000,
+        num_clusters: 8,
+        dims: 4,
+        std: 0.1,
+        extent: 10.0,
+        seed: 7,
+    };
+    let mut stream = BlobSource::new(&spec)?.with_chunk_rows(1024);
+
+    // 9. fit straight off the stream (mini-batch k-means consumes the
+    //    chunks as batches; the pipeline would scatter them into its
+    //    partition groups)
+    let fitter = parsample::cluster::MiniBatchKMeans { k: 8, iters: 40, ..Default::default() };
+    let big_model = fitter.fit_source(&mut stream)?;
+    println!(
+        "stream   : fit {} rows out-of-core -> k={} (inertia {:.1})",
+        big_model.meta().trained_on,
+        big_model.k(),
+        big_model.meta().inertia
+    );
+
+    // 10. label the stream chunk-by-chunk; labels are handed over as
+    //     they are computed (the CLI writes them to --out this way)
+    let mut first_chunk_len = 0usize;
+    let p = big_model.predict_source(&mut stream, |labels| {
+        if first_chunk_len == 0 {
+            first_chunk_len = labels.len();
+        }
+        Ok(())
+    })?;
+    println!(
+        "stream   : labelled {} rows chunkwise (first slab {}), inertia {:.1}",
+        p.rows, first_chunk_len, p.inertia
+    );
+
+    // 11. the streaming contract: a CSV of the same bytes fits and
+    //     predicts bit-identically to the resident path
+    let csv = std::env::temp_dir().join(format!("quickstart_{}.csv", std::process::id()));
+    let resident = parsample::data::make_blobs(&spec)?;
+    loader::save_csv(&Dataset::new(resident.as_slice().to_vec(), 4)?, &csv)?;
+    let mut csv_stream = CsvSource::open(&csv, None)?.with_chunk_rows(777);
+    let csv_model = fitter.fit_source(&mut csv_stream)?;
+    assert_eq!(csv_model.centers(), big_model.centers());
+    assert_eq!(
+        fitter.fit(&resident)?.meta().inertia.to_bits(),
+        big_model.meta().inertia.to_bits()
+    );
+    println!("stream   : csv / synthetic / resident fits are bit-identical");
+    std::fs::remove_file(&csv).ok();
     Ok(())
 }

@@ -1,0 +1,173 @@
+//! Bench: streaming (out-of-core) ingestion vs the resident paths.
+//!
+//! Measures the cost of the `DataSource` redesign on both halves of
+//! the lifecycle:
+//!
+//! * **predict** — `FittedModel::predict_source` over an in-memory
+//!   chunked source, a CSV file, and a binary file, vs
+//!   `predict_batch` on the resident buffer;
+//! * **fit** — `MiniBatchKMeans` via `fit_source` on a `BlobSource`
+//!   (no resident dataset at all) vs the resident `fit`.
+//!
+//! Every streamed result is asserted bit-identical to its resident
+//! twin before timing (the redesign's contract), then rows/s for each
+//! path goes into `BENCH_stream.json`.
+//!
+//! Profiles (points / clusters / dims):
+//!   PARSAMPLE_BENCH_SMOKE=1  →  20k / 16 / 8   (CI rot-guard)
+//!   default                  → 200k / 64 / 8
+//!   PARSAMPLE_BENCH_FULL=1   → 500k / 128 / 8
+
+use parsample::data::loader::{save_binary, save_csv};
+use parsample::data::source::{
+    BinarySource, BlobSource, ChunkedOnly, CsvSource, DataSource, DatasetSource,
+};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::data::Dataset;
+use parsample::model::{ClusterModel, FittedModel};
+use parsample::util::benchkit::{black_box, print_table, Bench};
+use parsample::util::json::Json;
+
+fn main() {
+    let smoke = std::env::var("PARSAMPLE_BENCH_SMOKE").is_ok();
+    let full = std::env::var("PARSAMPLE_BENCH_FULL").is_ok();
+    let (m, k, d) = if smoke {
+        (20_000usize, 16usize, 8usize)
+    } else if full {
+        (500_000, 128, 8)
+    } else {
+        (200_000, 64, 8)
+    };
+    let chunk_rows = 8192usize;
+
+    let spec = BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims: d,
+        std: 0.05,
+        extent: 10.0,
+        seed: 42,
+    };
+    let ds = make_blobs(&spec).expect("blob generation");
+    let dir = std::env::temp_dir().join(format!("parsample_bench_stream_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let plain = Dataset::new(ds.as_slice().to_vec(), d).unwrap();
+    let csv = dir.join("bench.csv");
+    let bin = dir.join("bench.bin");
+    save_csv(&plain, &csv).expect("write csv");
+    save_binary(&plain, &bin).expect("write bin");
+
+    // one model, fitted resident
+    let fitter = parsample::cluster::MiniBatchKMeans {
+        k,
+        iters: if smoke { 20 } else { 60 },
+        ..Default::default()
+    };
+    let model: FittedModel = fitter.fit(&ds).expect("fit");
+    let resident = model.predict_batch(ds.as_slice()).expect("resident predict");
+
+    // ---- correctness gate: every streamed path must be bit-identical
+    let check = |src: &mut dyn DataSource, what: &str| {
+        let mut labels: Vec<u32> = Vec::new();
+        let p = model
+            .predict_source(src, |ls| {
+                labels.extend_from_slice(ls);
+                Ok(())
+            })
+            .unwrap_or_else(|e| panic!("{what}: {e}"));
+        assert_eq!(labels, resident.labels, "{what}: labels diverge");
+        assert_eq!(p.counts, resident.counts, "{what}: counts diverge");
+        assert_eq!(
+            p.inertia.to_bits(),
+            resident.inertia.to_bits(),
+            "{what}: inertia diverges"
+        );
+    };
+    check(&mut ChunkedOnly(DatasetSource::new(plain.clone()).with_chunk_rows(chunk_rows)), "mem");
+    check(&mut CsvSource::open(&csv, None).unwrap().with_chunk_rows(chunk_rows), "csv");
+    check(&mut BinarySource::open(&bin).unwrap().with_chunk_rows(chunk_rows), "bin");
+    // and the no-disk-at-all synthetic stream fits identically
+    let stream_fit = {
+        let mut src = BlobSource::new(&spec).unwrap().with_chunk_rows(chunk_rows);
+        fitter.fit_source(&mut src).expect("stream fit")
+    };
+    assert_eq!(stream_fit.centers(), model.centers(), "blob-stream fit diverges");
+
+    // ---- timings
+    let bench = if smoke { Bench::new(0, 2) } else { Bench::new(1, 5) };
+    let t_resident = bench.run("predict/resident", || {
+        black_box(model.predict_batch(ds.as_slice()).unwrap())
+    });
+    let drain = |src: &mut dyn DataSource| {
+        let mut n = 0usize;
+        let p = model
+            .predict_source(src, |ls| {
+                n += ls.len();
+                Ok(())
+            })
+            .unwrap();
+        black_box((n, p.inertia))
+    };
+    let t_mem = bench.run("predict/stream-mem", || {
+        drain(&mut ChunkedOnly(DatasetSource::new(plain.clone()).with_chunk_rows(chunk_rows)))
+    });
+    let t_csv = bench.run("predict/stream-csv", || {
+        drain(&mut CsvSource::open(&csv, None).unwrap().with_chunk_rows(chunk_rows))
+    });
+    let t_bin = bench.run("predict/stream-bin", || {
+        drain(&mut BinarySource::open(&bin).unwrap().with_chunk_rows(chunk_rows))
+    });
+    let t_fit_res = bench.run("fit/minibatch-resident", || black_box(fitter.fit(&ds).unwrap()));
+    let t_fit_blob = bench.run("fit/minibatch-blobstream", || {
+        let mut src = BlobSource::new(&spec).unwrap().with_chunk_rows(chunk_rows);
+        black_box(fitter.fit_source(&mut src).unwrap())
+    });
+
+    let rows_per_s = |ms: f64| m as f64 / (ms / 1e3);
+    let table: Vec<Vec<String>> = [
+        ("predict resident", &t_resident),
+        ("predict stream-mem", &t_mem),
+        ("predict stream-csv", &t_csv),
+        ("predict stream-bin", &t_bin),
+        ("fit resident", &t_fit_res),
+        ("fit blob-stream", &t_fit_blob),
+    ]
+    .iter()
+    .map(|(name, t)| {
+        vec![
+            name.to_string(),
+            format!("{:.3}", t.mean_ms()),
+            format!("{:.2}", rows_per_s(t.mean_ms()) / 1e6),
+        ]
+    })
+    .collect();
+    print_table(
+        &format!("streaming ingestion (m={m}, k={k}, d={d}, chunk_rows={chunk_rows})"),
+        &["path", "mean ms", "Mrows/s"],
+        &table,
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("stream_ingest")),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("d", Json::num(d as f64)),
+        ("chunk_rows", Json::num(chunk_rows as f64)),
+        ("predict_resident_mean_ms", Json::num(t_resident.mean_ms())),
+        ("predict_stream_mem_mean_ms", Json::num(t_mem.mean_ms())),
+        ("predict_stream_csv_mean_ms", Json::num(t_csv.mean_ms())),
+        ("predict_stream_bin_mean_ms", Json::num(t_bin.mean_ms())),
+        ("predict_resident_rows_per_s", Json::num(rows_per_s(t_resident.mean_ms()))),
+        ("predict_stream_mem_rows_per_s", Json::num(rows_per_s(t_mem.mean_ms()))),
+        ("predict_stream_csv_rows_per_s", Json::num(rows_per_s(t_csv.mean_ms()))),
+        ("predict_stream_bin_rows_per_s", Json::num(rows_per_s(t_bin.mean_ms()))),
+        ("fit_resident_mean_ms", Json::num(t_fit_res.mean_ms())),
+        ("fit_blobstream_mean_ms", Json::num(t_fit_blob.mean_ms())),
+    ]);
+    let out = "BENCH_stream.json";
+    match std::fs::write(out, json.to_string()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

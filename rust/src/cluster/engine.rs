@@ -531,6 +531,82 @@ impl Engine {
         out
     }
 
+    /// The engine's fixed reduction-block size in points — the
+    /// alignment quantum for [`Engine::assign_accumulate_stream`].
+    pub fn point_block(&self) -> usize {
+        self.point_block
+    }
+
+    /// Convenient slab size (in rows) for feeding
+    /// [`Engine::assign_accumulate_stream`] via
+    /// [`crate::data::source::for_each_slab`]: a few reduction blocks
+    /// per slab amortizes per-call plan setup while keeping the
+    /// staging buffer a few MiB at most.  Always a multiple of
+    /// [`Engine::point_block`], as the streaming contract requires.
+    pub fn stream_slab_rows(&self) -> usize {
+        self.point_block * 4
+    }
+
+    /// Streaming fused assign: label one *segment* of a larger logical
+    /// dataset, folding counts into `counts` and each reduction
+    /// block's f64 inertia partial into `inertia` **in block order**.
+    ///
+    /// Contract: feeding consecutive segments to the same accumulators
+    /// is bit-identical to one [`Engine::assign_accumulate`] over the
+    /// concatenation (labels concatenated, counts and inertia equal to
+    /// the last bit) **provided every segment but the final one holds
+    /// a multiple of [`Engine::point_block`] points**.  That alignment
+    /// makes the segment-local reduction blocks coincide with the
+    /// resident pass's global blocks; within a block the f64 fold is
+    /// sequential in point order, and this method folds block partials
+    /// into `inertia` one at a time exactly like the resident merge —
+    /// so no f64 addition is ever regrouped.  u32 count merges are
+    /// exact in any grouping; labels are per-point.  This is what lets
+    /// [`crate::model::FittedModel::predict_source`] and the streaming
+    /// fit paths label out-of-core datasets chunk by chunk while
+    /// staying bit-identical to the resident sweeps
+    /// (`rust/tests/stream_parity.rs`).
+    pub fn assign_accumulate_stream(
+        &self,
+        points: &[f32],
+        dims: usize,
+        centers: &[f32],
+        counts: &mut [u32],
+        inertia: &mut f64,
+    ) -> Vec<u32> {
+        let m = points.len() / dims;
+        let k = centers.len() / dims;
+        assert_eq!(counts.len(), k, "counts length must be k");
+        let pn = self.point_norms(points, dims);
+        let cnorm = center_norms(centers, dims);
+        let ctile = self.center_tile_for(dims);
+        let plan = self.kernel.resolve(dims).plan(centers, &cnorm, dims, ctile);
+        let plan: &dyn TilePlan = &*plan;
+        let blocks = self.blocks(m);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            let (labels, dists) = argmin_block(plan, points, dims, &pn, lo, hi);
+            let mut counts = vec![0u32; k];
+            let mut inertia = 0.0f64;
+            for (&c, &d) in labels.iter().zip(&dists) {
+                counts[c as usize] += 1;
+                inertia += d as f64;
+            }
+            (labels, counts, inertia)
+        });
+        let mut labels = Vec::with_capacity(m);
+        for part in parts {
+            let (l, c, i) = part.expect("engine block cannot panic");
+            labels.extend(l);
+            for (acc, x) in counts.iter_mut().zip(c) {
+                *acc += x;
+            }
+            // one fold per block, in block order — the same f64
+            // addition sequence as the resident merge
+            *inertia += i;
+        }
+        labels
+    }
+
     /// Labels only (skips the accumulate half of the fused kernel).
     pub fn assign_only(&self, points: &[f32], dims: usize, centers: &[f32]) -> Vec<u32> {
         let m = points.len() / dims;
@@ -1228,6 +1304,48 @@ mod tests {
             assert_eq!(it.skipped, 400, "warm k=1 must skip every point");
         }
         assert!(out.labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn stream_segments_match_one_resident_pass() {
+        // block-aligned segment feeding must reproduce the single-pass
+        // fused sweep bit for bit: labels, counts, and the f64 inertia
+        let pts = cloud(1000, 3, 33);
+        let centers = pts[..9 * 3].to_vec();
+        for workers in [1usize, 4] {
+            let e = Engine::with_blocking(workers, 64, 4);
+            let reference = e.assign_accumulate(&pts, 3, &centers);
+            // segments of 192 points = 3 blocks each (64-point blocks),
+            // last segment short
+            let mut labels = Vec::new();
+            let mut counts = vec![0u32; 9];
+            let mut inertia = 0.0f64;
+            for seg in pts.chunks(192 * 3) {
+                let part = e.assign_accumulate_stream(seg, 3, &centers, &mut counts, &mut inertia);
+                labels.extend(part);
+            }
+            assert_eq!(labels, reference.labels, "workers={workers}");
+            assert_eq!(counts, reference.counts, "workers={workers}");
+            assert_eq!(inertia.to_bits(), reference.inertia.to_bits(), "workers={workers}");
+            // one whole-buffer call is the degenerate aligned feeding
+            let mut counts1 = vec![0u32; 9];
+            let mut inertia1 = 0.0f64;
+            let l1 = e.assign_accumulate_stream(&pts, 3, &centers, &mut counts1, &mut inertia1);
+            assert_eq!(l1, reference.labels);
+            assert_eq!(counts1, reference.counts);
+            assert_eq!(inertia1.to_bits(), reference.inertia.to_bits());
+        }
+        // the wide kernel streams bit-identically too
+        let e = Engine::with_blocking(2, 64, 4).with_kernel(KernelMode::Wide);
+        let reference = e.assign_accumulate(&pts, 3, &centers);
+        let mut counts = vec![0u32; 9];
+        let mut inertia = 0.0f64;
+        let mut labels = Vec::new();
+        for seg in pts.chunks(128 * 3) {
+            labels.extend(e.assign_accumulate_stream(seg, 3, &centers, &mut counts, &mut inertia));
+        }
+        assert_eq!(labels, reference.labels);
+        assert_eq!(inertia.to_bits(), reference.inertia.to_bits());
     }
 
     #[test]

@@ -1,16 +1,53 @@
 //! Mini-batch k-means (Sculley 2010) — a modern streaming baseline for
 //! the ablation benches: how close does the paper's sample-then-cluster
 //! scheme get to a streaming approximation at similar cost?
+//!
+//! Two batch-selection variants live here:
+//!
+//! * [`MiniBatchKMeans::run`] — the resident ablation baseline: each
+//!   round draws `batch_size` rows *uniformly at random* from the full
+//!   buffer (Sculley's sampling, needs random access).
+//! * [`MiniBatchKMeans::fit_stream`] — the out-of-core variant behind
+//!   [`crate::model::ClusterModel::fit_source`] (and, for consistency,
+//!   the resident `fit`): batches are *consecutive* `batch_size`-row
+//!   windows pulled off a [`DataSource`], cycling back to the top at
+//!   end of stream.  k-means++ seeds on the first
+//!   `max(batch_size, k)` rows.  The per-row center update is the
+//!   identical Sculley rule; only row selection differs, which is what
+//!   makes the result a pure function of the row *sequence* —
+//!   independent of the source's chunk size, and therefore bit-equal
+//!   across every [`DataSource`] kind backed by the same bytes
+//!   (pinned by `rust/tests/stream_parity.rs`).
 
 use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
 use crate::cluster::init::{initial_centers, InitMethod};
 use crate::cluster::kmeans::KMeansResult;
 use crate::cluster::Clusterer;
+use crate::data::source::{for_each_slab, ChunkCursor, DataSource};
 use crate::data::Dataset;
 use crate::distance::nearest_sq;
 use crate::error::{Error, Result};
 use crate::kernel::KernelMode;
 use crate::util::rng::Pcg32;
+
+/// Output of one streaming mini-batch fit ([`MiniBatchKMeans::fit_stream`]).
+/// No per-point labels: the stream may be arbitrarily long — use
+/// [`crate::model::FittedModel::predict_source`] to label it.
+#[derive(Debug, Clone)]
+pub struct StreamFitResult {
+    /// K×D centers after all batch rounds.
+    pub centers: Vec<f32>,
+    /// Points per center from the final full streaming sweep.
+    pub counts: Vec<u32>,
+    /// Sum of squared distances from the final sweep.
+    pub inertia: f64,
+    /// Total rows the source yielded (M).
+    pub rows: usize,
+    /// Batch rounds actually performed: at least `iters`, plus any
+    /// extra batches needed to finish the first full pass over the
+    /// stream (the coverage guarantee).
+    pub iterations: usize,
+}
 
 /// Mini-batch k-means configuration.
 #[derive(Debug, Clone)]
@@ -64,6 +101,94 @@ impl MiniBatchKMeans {
         self
     }
 
+    /// Streaming fit: consume a [`DataSource`] in consecutive
+    /// `batch_size`-row batches (`self.k` centers, `self.iters`
+    /// rounds, cycling past end of stream), then one engine-backed
+    /// streaming sweep for counts/inertia.  Deterministic and
+    /// independent of the source's chunk size; the final sweep is
+    /// bit-identical to the resident engine pass over the same bytes.
+    ///
+    /// **Coverage guarantee.**  At least `iters` batches run, *and*
+    /// (when `iters > 0`) batching continues until the stream has
+    /// wrapped at least once — every row influences the centers even
+    /// on sorted/grouped inputs where a prefix window would miss whole
+    /// clusters.  The extra epoch costs O(M·K·D) row-updates at most,
+    /// the same order as the mandatory final sweep, so the cost class
+    /// is unchanged; `StreamFitResult::iterations` reports the batches
+    /// actually run.  Wrap detection depends only on the row sequence,
+    /// so chunk-size independence is preserved.
+    pub fn fit_stream(&self, src: &mut dyn DataSource) -> Result<StreamFitResult> {
+        let dims = src.dims();
+        let k = self.k;
+        if dims == 0 {
+            return Err(Error::Data("source dims must be > 0".into()));
+        }
+        if self.batch_size == 0 {
+            return Err(Error::Config("batch_size must be > 0".into()));
+        }
+        if k == 0 {
+            return Err(Error::Config("k must be > 0".into()));
+        }
+
+        // 1. seed on the head of the stream: k-means++ (or the
+        // configured init) over the first max(batch_size, k) rows —
+        // fewer rows than k means the whole stream has fewer than k
+        src.reset()?;
+        let pool_rows = self.batch_size.max(k);
+        let mut pool = Vec::with_capacity(pool_rows.min(1 << 20) * dims);
+        ChunkCursor::new(src).fill(&mut pool, pool_rows)?;
+        let pool_m = pool.len() / dims;
+        if pool_m < k {
+            return Err(Error::Config(format!("k={k} invalid for {pool_m} points")));
+        }
+        let mut centers = initial_centers(&pool, dims, k, self.init, self.seed)?;
+        drop(pool);
+
+        // 2. batch rounds: consecutive windows of exactly batch_size
+        // rows, wrapping to the top of the stream at EOF; per-row
+        // Sculley update (learning rate 1/n_c), identical float ops to
+        // the resident `run` loop.  Runs `iters` batches, then keeps
+        // going (if needed) until the stream has wrapped once — the
+        // full-epoch coverage guarantee.
+        src.reset()?;
+        let b = self.batch_size;
+        let mut per_center_counts = vec![0u64; k];
+        let mut batch: Vec<f32> = Vec::with_capacity(b * dims);
+        let mut cursor = ChunkCursor::new(src);
+        let mut batches = 0usize;
+        while batches < self.iters || (self.iters > 0 && cursor.wraps() == 0) {
+            batch.clear();
+            cursor.fill_cycle(&mut batch, b)?;
+            batches += 1;
+            for p in batch.chunks_exact(dims) {
+                let (c, _) = nearest_sq(p, &centers, dims);
+                per_center_counts[c] += 1;
+                let eta = 1.0 / per_center_counts[c] as f32;
+                for j in 0..dims {
+                    centers[c * dims + j] += eta * (p[j] - centers[c * dims + j]);
+                }
+            }
+        }
+
+        // 3. final streaming sweep: counts + inertia against the final
+        // centers, block-aligned so the f64 fold replays the resident
+        // engine pass exactly
+        src.reset()?;
+        let engine = Engine::new(self.workers).with_kernel(self.kernel);
+        let mut counts = vec![0u32; k];
+        let mut inertia = 0.0f64;
+        let slab = engine.stream_slab_rows();
+        let rows = for_each_slab(src, slab, |seg| {
+            engine.assign_accumulate_stream(seg, dims, &centers, &mut counts, &mut inertia);
+            Ok(())
+        })?;
+        Ok(StreamFitResult { centers, counts, inertia, rows, iterations: batches })
+    }
+
+    /// The resident ablation baseline: uniform random batches off the
+    /// full buffer (needs random access; the model-lifecycle entry
+    /// points use the stream-order [`MiniBatchKMeans::fit_stream`]
+    /// variant instead).
     pub fn run(&self, points: &[f32], dims: usize, k: usize) -> Result<KMeansResult> {
         let m = points.len() / dims;
         if k == 0 || k > m {
@@ -184,5 +309,98 @@ mod tests {
         assert!(MiniBatchKMeans { batch_size: 0, ..Default::default() }
             .run(&pts, 2, 2)
             .is_err());
+    }
+
+    #[test]
+    fn fit_stream_approximates_full_kmeans() {
+        use crate::data::source::SliceSource;
+        let ds = make_blobs(&BlobSpec {
+            num_points: 3000,
+            num_clusters: 5,
+            dims: 2,
+            std: 0.1,
+            extent: 8.0,
+            seed: 7,
+        })
+        .unwrap();
+        let cfg = MiniBatchKMeans { batch_size: 256, iters: 30, k: 5, ..Default::default() };
+        let mut src = SliceSource::of(&ds);
+        let r = cfg.fit_stream(&mut src).unwrap();
+        assert_eq!(r.rows, 3000);
+        assert_eq!(r.counts.iter().sum::<u32>(), 3000);
+        assert_eq!(r.iterations, 30);
+        let full = lloyd(ds.as_slice(), 2, &KMeansConfig { k: 5, ..Default::default() }).unwrap();
+        assert!(
+            r.inertia < full.inertia * 1.5 + 1.0,
+            "stream minibatch {} vs full {}",
+            r.inertia,
+            full.inertia
+        );
+    }
+
+    #[test]
+    fn fit_stream_is_chunk_size_independent() {
+        use crate::data::source::DatasetSource;
+        let ds = make_blobs(&BlobSpec {
+            num_points: 700,
+            num_clusters: 4,
+            seed: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        let cfg = MiniBatchKMeans { batch_size: 100, iters: 9, k: 4, ..Default::default() };
+        let mut base: Option<StreamFitResult> = None;
+        for chunk in [1usize, 13, 100, 512, 4096] {
+            let mut src = DatasetSource::new(ds.clone()).with_chunk_rows(chunk);
+            let r = cfg.fit_stream(&mut src).unwrap();
+            if let Some(b) = &base {
+                assert_eq!(r.centers, b.centers, "chunk={chunk}");
+                assert_eq!(r.counts, b.counts, "chunk={chunk}");
+                assert_eq!(r.inertia.to_bits(), b.inertia.to_bits(), "chunk={chunk}");
+            } else {
+                base = Some(r);
+            }
+        }
+    }
+
+    #[test]
+    fn fit_stream_covers_sorted_tails_via_the_epoch_guarantee() {
+        use crate::data::source::SliceSource;
+        // class-sorted stream: 50 rows near (0,0) then 50 near (10,10).
+        // A prefix window of iters*batch = 20 rows would only ever see
+        // the first cluster; the epoch guarantee must find both.
+        let mut pts: Vec<f32> = Vec::new();
+        for i in 0..50 {
+            pts.extend_from_slice(&[(i % 5) as f32 * 0.01, 0.0]);
+        }
+        for i in 0..50 {
+            pts.extend_from_slice(&[10.0 + (i % 5) as f32 * 0.01, 10.0]);
+        }
+        let cfg = MiniBatchKMeans { batch_size: 10, iters: 2, k: 2, ..Default::default() };
+        let mut src = SliceSource::new(&pts, 2).unwrap();
+        let r = cfg.fit_stream(&mut src).unwrap();
+        // ran past iters=2 until the stream wrapped
+        assert!(r.iterations > 2, "{}", r.iterations);
+        // both clusters materialized: counts split evenly, centers far apart
+        assert_eq!(r.counts.iter().sum::<u32>(), 100);
+        assert!(r.counts.iter().all(|&c| c == 50), "{:?}", r.counts);
+        let d2 = (r.centers[0] - r.centers[2]).powi(2) + (r.centers[1] - r.centers[3]).powi(2);
+        assert!(d2 > 50.0, "centers too close: {:?}", r.centers);
+    }
+
+    #[test]
+    fn fit_stream_cycles_small_sources_and_rejects_k_over_m() {
+        use crate::data::source::SliceSource;
+        // m=6 < batch_size: each batch wraps the stream several times
+        let pts: Vec<f32> = vec![0., 0., 0.1, 0., 10., 10., 10.1, 10., 5., 5., 5.1, 5.];
+        let cfg = MiniBatchKMeans { batch_size: 64, iters: 4, k: 3, ..Default::default() };
+        let mut src = SliceSource::new(&pts, 2).unwrap();
+        let r = cfg.fit_stream(&mut src).unwrap();
+        assert_eq!(r.rows, 6);
+        assert_eq!(r.counts.iter().sum::<u32>(), 6);
+        // k > m errors like the resident path
+        let cfg = MiniBatchKMeans { k: 9, ..Default::default() };
+        let mut src = SliceSource::new(&pts, 2).unwrap();
+        assert!(cfg.fit_stream(&mut src).is_err());
     }
 }

@@ -19,7 +19,7 @@ pub use engine::{
     BoundsMode, BoundsStats, CentroidPass, Engine, EngineOpts, FusedPass, LloydLoopResult,
 };
 pub use bisecting::BisectingKMeans;
-pub use minibatch::MiniBatchKMeans;
+pub use minibatch::{MiniBatchKMeans, StreamFitResult};
 pub use init::InitMethod;
 pub use kmeans::{lloyd, KMeansConfig, KMeansResult};
 

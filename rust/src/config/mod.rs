@@ -135,6 +135,9 @@ pub struct AppConfig {
     pub queue_depth: usize,
     /// LRU capacity of the server's fitted-model registry.
     pub model_cap: usize,
+    /// Registry snapshot directory (write on shutdown, reload on
+    /// boot); `None` disables persistence.
+    pub snapshot_dir: Option<PathBuf>,
 }
 
 impl Default for AppConfig {
@@ -144,6 +147,7 @@ impl Default for AppConfig {
             server_addr: "127.0.0.1:7077".to_string(),
             queue_depth: 16,
             model_cap: crate::server::DEFAULT_MODEL_CAP,
+            snapshot_dir: None,
         }
     }
 }
@@ -221,6 +225,10 @@ impl AppConfig {
             }
             "server.model_cap" => {
                 self.model_cap = value.as_usize().ok_or_else(|| bad("usize"))?.max(1);
+            }
+            "server.snapshot_dir" => {
+                self.snapshot_dir =
+                    Some(PathBuf::from(value.as_str().ok_or_else(|| bad("string"))?));
             }
             other => {
                 return Err(Error::Config(format!("unknown config key '{other}'")));
@@ -310,6 +318,7 @@ mod tests {
             [server]
             queue_depth = 3
             model_cap = 5
+            snapshot_dir = "/tmp/snaps"
             "#,
         )
         .unwrap();
@@ -321,6 +330,7 @@ mod tests {
         assert_eq!(cfg.pipeline.kernel, KernelMode::Wide);
         assert_eq!(cfg.queue_depth, 3);
         assert_eq!(cfg.model_cap, 5);
+        assert_eq!(cfg.snapshot_dir, Some(PathBuf::from("/tmp/snaps")));
         let t = parse_toml_lite("[pipeline]\nbounds = \"banana\"\n").unwrap();
         assert!(AppConfig::from_table(&t).is_err());
         let t = parse_toml_lite("[pipeline]\nkernel = \"gpu\"\n").unwrap();

@@ -40,6 +40,19 @@ pub struct Dispatch {
     pub groups: Vec<GroupSlot>,
 }
 
+/// One partition group's gathered rows, for exact-shape planning
+/// without a resident [`Dataset`]: the streaming scatter fills these
+/// directly from a [`crate::data::source::DataSource`].
+#[derive(Debug, Clone, Default)]
+pub struct GroupRows {
+    /// Index into the original partition's group list.
+    pub group_idx: usize,
+    /// Source row id per gathered row (same order as `points`).
+    pub indices: Vec<usize>,
+    /// Gathered rows, row-major, original coordinates.
+    pub points: Vec<f32>,
+}
+
 /// Unpacked result for one group.
 #[derive(Debug, Clone)]
 pub struct LocalResult {
@@ -143,33 +156,86 @@ impl Batcher {
         iters: usize,
         max_group: usize,
     ) -> Result<Vec<Dispatch>> {
+        let d = data.dims();
+        let gathered: Vec<GroupRows> = groups
+            .iter()
+            .enumerate()
+            .map(|(gi, idx)| {
+                let mut points = Vec::with_capacity(idx.len() * d);
+                for &src in idx {
+                    points.extend_from_slice(data.row(src));
+                }
+                GroupRows { group_idx: gi, indices: idx.clone(), points }
+            })
+            .collect();
+        Self::plan_exact_rows(gathered, d, compression, iters, max_group)
+    }
+
+    /// [`Batcher::plan_exact`] over pre-gathered per-group row buffers
+    /// — the entry point of the streaming scatter
+    /// ([`crate::pipeline::stream`]), which routes rows into
+    /// [`GroupRows`] as they come off a data source and never holds a
+    /// resident [`Dataset`].  `plan_exact` gathers and delegates here,
+    /// so both paths produce identical dispatches for the same rows.
+    ///
+    /// Takes the groups **by value** so peak memory stays ~one copy of
+    /// the rows: a group that fits a single dispatch (the common case
+    /// — the auto group size is well under `max_group`) *moves* its
+    /// buffers into the batch with no copy at all, and a split group's
+    /// buffers are freed as soon as its chunks are copied out.
+    pub fn plan_exact_rows(
+        groups: Vec<GroupRows>,
+        d: usize,
+        compression: f32,
+        iters: usize,
+        max_group: usize,
+    ) -> Result<Vec<Dispatch>> {
         if compression < 1.0 {
             return Err(Error::Config(format!(
                 "compression {compression} must be >= 1"
             )));
         }
-        let d = data.dims();
+        let step = max_group.max(1);
         let mut dispatches = Vec::new();
-        for (gi, idx) in groups.iter().enumerate() {
-            if idx.is_empty() {
+        for group in groups {
+            let total = group.indices.len();
+            debug_assert_eq!(group.points.len(), total * d);
+            if total == 0 {
                 continue;
             }
-            for chunk in idx.chunks(max_group.max(1)) {
-                let n = chunk.len();
+            if total <= step {
+                // whole group in one dispatch: move, don't copy
+                let (n, gi) = (total, group.group_idx);
                 let k = local_k(n, compression);
-                let mut points = Vec::with_capacity(n * d);
-                for &src in chunk {
-                    points.extend_from_slice(data.row(src));
-                }
-                // evenly-strided init: deterministic like FirstK but
-                // immune to sorted group order (the equal partitioner
-                // emits distance-sorted shells; seeding the first k
-                // rows would pile every center at the inner edge)
-                let mut init = Vec::with_capacity(k * d);
-                for c in 0..k {
-                    let row = c * n / k;
-                    init.extend_from_slice(&points[row * d..(row + 1) * d]);
-                }
+                let init = strided_init(&group.points, n, k, d);
+                dispatches.push(Dispatch {
+                    bucket: format!("exact_{n}x{k}"),
+                    batch: DeviceBatch {
+                        b: 1,
+                        n,
+                        d,
+                        k,
+                        iters,
+                        points: group.points,
+                        weights: vec![1.0; n],
+                        init,
+                    },
+                    groups: vec![GroupSlot {
+                        group_idx: gi,
+                        slot: 0,
+                        n,
+                        k,
+                        indices: group.indices,
+                    }],
+                });
+                continue;
+            }
+            let mut start = 0usize;
+            while start < total {
+                let n = step.min(total - start);
+                let k = local_k(n, compression);
+                let points = group.points[start * d..(start + n) * d].to_vec();
+                let init = strided_init(&points, n, k, d);
                 dispatches.push(Dispatch {
                     bucket: format!("exact_{n}x{k}"),
                     batch: DeviceBatch {
@@ -183,14 +249,17 @@ impl Batcher {
                         init,
                     },
                     groups: vec![GroupSlot {
-                        group_idx: gi,
+                        group_idx: group.group_idx,
                         slot: 0,
                         n,
                         k,
-                        indices: chunk.to_vec(),
+                        indices: group.indices[start..start + n].to_vec(),
                     }],
                 });
+                start += n;
             }
+            // `group` drops here: a split group's source buffers are
+            // freed before the next group is processed
         }
         Ok(dispatches)
     }
@@ -301,6 +370,19 @@ impl Batcher {
 /// Local-center count for a group of `n` under compression `c`.
 pub fn local_k(n: usize, compression: f32) -> usize {
     ((n as f32 / compression).ceil() as usize).clamp(1, n)
+}
+
+/// Evenly-strided init from a chunk's own rows: deterministic like
+/// FirstK but immune to sorted group order (the equal partitioner
+/// emits distance-sorted shells; seeding the first k rows would pile
+/// every center at the inner edge).
+fn strided_init(points: &[f32], n: usize, k: usize, d: usize) -> Vec<f32> {
+    let mut init = Vec::with_capacity(k * d);
+    for c in 0..k {
+        let row = c * n / k;
+        init.extend_from_slice(&points[row * d..(row + 1) * d]);
+    }
+    init
 }
 
 #[cfg(test)]

@@ -13,6 +13,6 @@ pub mod batcher;
 pub mod job;
 pub mod scheduler;
 
-pub use batcher::{Batcher, Dispatch, GroupSlot, LocalResult};
+pub use batcher::{Batcher, Dispatch, GroupRows, GroupSlot, LocalResult};
 pub use job::{JobRequest, JobResult, JobStatus};
 pub use scheduler::{Scheduler, SchedulerConfig};

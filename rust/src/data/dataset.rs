@@ -78,6 +78,13 @@ impl Dataset {
         &self.points
     }
 
+    /// Consume the dataset, yielding the flat buffer (labels dropped)
+    /// — lets [`crate::data::source::DatasetSource`] own the points
+    /// without a copy.
+    pub fn into_points(self) -> Vec<f32> {
+        self.points
+    }
+
     /// Mutable flat buffer (used by scalers).
     pub(crate) fn as_mut_slice(&mut self) -> &mut [f32] {
         &mut self.points

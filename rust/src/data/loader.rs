@@ -80,37 +80,130 @@ pub fn save_csv(data: &Dataset, path: impl AsRef<Path>) -> Result<()> {
 
 const BIN_MAGIC: &[u8; 8] = b"PSAMPLE1";
 
+/// Size of the `PSAMPLE1` header: magic + u64 M + u64 D + u8 has_labels.
+pub(crate) const BIN_HEADER_BYTES: usize = 8 + 8 + 8 + 1;
+
+/// Write-buffer flush threshold for [`save_binary`]: values are packed
+/// into one byte buffer and flushed in ~1 MiB slabs instead of one
+/// 4-byte `write_all` per value.
+const SAVE_BUF_BYTES: usize = 1 << 20;
+
+/// A validated `PSAMPLE1` header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct BinHeader {
+    pub rows: usize,
+    pub dims: usize,
+    pub has_labels: bool,
+}
+
+/// Read and validate a `PSAMPLE1` header against the actual file
+/// length.  The header is *untrusted input*: every size is computed
+/// with checked arithmetic (a corrupt or hostile M·D·4 must not
+/// overflow into a small allocation) and the declared payload must
+/// match `file_len` exactly — a short file is truncated, a long one
+/// has trailing garbage; both are rejected before any payload-sized
+/// allocation happens.
+pub(crate) fn validated_binary_header(r: &mut impl Read, file_len: u64) -> Result<BinHeader> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)
+        .map_err(|_| Error::Data("truncated header: not a parsample binary file".into()))?;
+    if &magic != BIN_MAGIC {
+        return Err(Error::Data("bad magic: not a parsample binary file".into()));
+    }
+    let m = read_u64(r)?;
+    let d = read_u64(r)?;
+    let mut has_labels = [0u8; 1];
+    r.read_exact(&mut has_labels)
+        .map_err(|_| Error::Data("truncated header".into()))?;
+    let has_labels = match has_labels[0] {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(Error::Data(format!(
+                "corrupt header: has_labels byte is {other} (expected 0 or 1)"
+            )))
+        }
+    };
+    if d == 0 {
+        return Err(Error::Data("corrupt header: dims = 0".into()));
+    }
+    // all in u64/checked space: the header is the only thing sizing
+    // the upcoming allocations
+    let point_bytes = m
+        .checked_mul(d)
+        .and_then(|md| md.checked_mul(4))
+        .ok_or_else(|| Error::Data(format!("corrupt header: {m} x {d} points overflow")))?;
+    let label_bytes = if has_labels {
+        m.checked_mul(8)
+            .ok_or_else(|| Error::Data(format!("corrupt header: {m} labels overflow")))?
+    } else {
+        0
+    };
+    let expected = (BIN_HEADER_BYTES as u64)
+        .checked_add(point_bytes)
+        .and_then(|t| t.checked_add(label_bytes))
+        .ok_or_else(|| Error::Data("corrupt header: total size overflows".into()))?;
+    if file_len < expected {
+        return Err(Error::Data(format!(
+            "truncated file: header declares {expected} bytes, file has {file_len}"
+        )));
+    }
+    if file_len > expected {
+        return Err(Error::Data(format!(
+            "oversized file: header declares {expected} bytes, file has {file_len} \
+             (trailing garbage)"
+        )));
+    }
+    let rows = usize::try_from(m)
+        .map_err(|_| Error::Data(format!("corrupt header: {m} rows exceeds usize")))?;
+    let dims = usize::try_from(d)
+        .map_err(|_| Error::Data(format!("corrupt header: {d} dims exceeds usize")))?;
+    Ok(BinHeader { rows, dims, has_labels })
+}
+
 /// Save in the raw binary format: magic, u64 M, u64 D, u8 has_labels,
-/// M*D little-endian f32, then (if labelled) M u64 labels.
+/// M*D little-endian f32, then (if labelled) M u64 labels.  Values are
+/// packed into a byte buffer flushed in ~1 MiB slabs (the old
+/// per-value 4-byte `write_all` loop paid a `BufWriter` call per
+/// float).
 pub fn save_binary(data: &Dataset, path: impl AsRef<Path>) -> Result<()> {
     let mut w = BufWriter::new(File::create(path.as_ref())?);
     w.write_all(BIN_MAGIC)?;
     w.write_all(&(data.len() as u64).to_le_bytes())?;
     w.write_all(&(data.dims() as u64).to_le_bytes())?;
     w.write_all(&[data.labels().is_some() as u8])?;
+    let mut buf: Vec<u8> = Vec::with_capacity(SAVE_BUF_BYTES.min(data.as_slice().len() * 4 + 8));
     for &x in data.as_slice() {
-        w.write_all(&x.to_le_bytes())?;
+        buf.extend_from_slice(&x.to_le_bytes());
+        if buf.len() >= SAVE_BUF_BYTES {
+            w.write_all(&buf)?;
+            buf.clear();
+        }
     }
     if let Some(ls) = data.labels() {
         for &l in ls {
-            w.write_all(&(l as u64).to_le_bytes())?;
+            buf.extend_from_slice(&(l as u64).to_le_bytes());
+            if buf.len() >= SAVE_BUF_BYTES {
+                w.write_all(&buf)?;
+                buf.clear();
+            }
         }
     }
+    w.write_all(&buf)?;
     Ok(())
 }
 
-/// Load the raw binary format written by [`save_binary`].
+/// Load the raw binary format written by [`save_binary`].  The header
+/// is validated by [`validated_binary_header`] — checked size math
+/// against the real file length — before any payload allocation.
+/// (For out-of-core reading of the same format, see
+/// [`crate::data::source::BinarySource`].)
 pub fn load_binary(path: impl AsRef<Path>) -> Result<Dataset> {
-    let mut r = BufReader::new(File::open(path.as_ref())?);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != BIN_MAGIC {
-        return Err(Error::Data("bad magic: not a parsample binary file".into()));
-    }
-    let m = read_u64(&mut r)? as usize;
-    let d = read_u64(&mut r)? as usize;
-    let mut has_labels = [0u8; 1];
-    r.read_exact(&mut has_labels)?;
+    let file = File::open(path.as_ref())?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    let header = validated_binary_header(&mut r, file_len)?;
+    let (m, d) = (header.rows, header.dims);
     let mut buf = vec![0u8; m * d * 4];
     r.read_exact(&mut buf)?;
     let points: Vec<f32> = buf
@@ -118,11 +211,13 @@ pub fn load_binary(path: impl AsRef<Path>) -> Result<Dataset> {
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
         .collect();
     let ds = Dataset::new(points, d)?;
-    if has_labels[0] == 1 {
-        let mut labels = Vec::with_capacity(m);
-        for _ in 0..m {
-            labels.push(read_u64(&mut r)? as usize);
-        }
+    if header.has_labels {
+        let mut buf = vec![0u8; m * 8];
+        r.read_exact(&mut buf)?;
+        let labels: Vec<usize> = buf
+            .chunks_exact(8)
+            .map(|b| u64::from_le_bytes(b.try_into().expect("8-byte chunk")) as usize)
+            .collect();
         ds.with_labels(labels)
     } else {
         Ok(ds)
@@ -131,7 +226,8 @@ pub fn load_binary(path: impl AsRef<Path>) -> Result<Dataset> {
 
 fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
     let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
+    r.read_exact(&mut b)
+        .map_err(|_| Error::Data("truncated header".into()))?;
     Ok(u64::from_le_bytes(b))
 }
 
@@ -207,6 +303,69 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, b"NOTMAGIC123").unwrap();
         assert!(load_binary(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Build raw `PSAMPLE1` bytes with an arbitrary header.
+    fn raw_bin(m: u64, d: u64, has_labels: u8, payload_f32: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"PSAMPLE1");
+        b.extend_from_slice(&m.to_le_bytes());
+        b.extend_from_slice(&d.to_le_bytes());
+        b.push(has_labels);
+        for i in 0..payload_f32 {
+            b.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn binary_header_is_validated_against_file_length() {
+        let dir = std::env::temp_dir().join(format!("parsample_hdr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("h.bin");
+
+        // truncated: header declares 3x2 points, file holds 4 floats
+        std::fs::write(&path, raw_bin(3, 2, 0, 4)).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        // oversized: trailing garbage after the declared payload
+        std::fs::write(&path, raw_bin(2, 2, 0, 9)).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("oversized"), "{err}");
+
+        // hostile header: M*D*4 wraps u64 — must be a clean error, not
+        // a tiny (or huge) allocation
+        std::fs::write(&path, raw_bin(u64::MAX / 2, 3, 0, 0)).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("overflow"), "{err}");
+
+        // hostile label count: M*8 wraps
+        std::fs::write(&path, raw_bin(u64::MAX / 4, 1, 1, 0)).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("overflow"), "{err}");
+
+        // corrupt has_labels byte
+        std::fs::write(&path, raw_bin(1, 1, 7, 1)).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("has_labels"), "{err}");
+
+        // zero dims
+        std::fs::write(&path, raw_bin(4, 0, 0, 0)).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("dims = 0"), "{err}");
+
+        // header cut off mid-field
+        std::fs::write(&path, &raw_bin(1, 1, 0, 1)[..12]).unwrap();
+        let err = load_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        // a well-formed file still loads
+        std::fs::write(&path, raw_bin(2, 2, 0, 4)).unwrap();
+        let ds = load_binary(&path).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.row(1), &[2.0, 3.0]);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,9 +7,14 @@ pub mod dataset;
 pub mod layout;
 pub mod loader;
 pub mod scaling;
+pub mod source;
 pub mod synthetic;
 
 pub use dataset::Dataset;
 pub use layout::{flatten, reconstruct, MemoryOrder};
 pub use scaling::{MinMaxScaler, Scaler, ZScoreScaler};
+pub use source::{
+    BinarySource, BlobSource, ChunkedOnly, CsvSource, DataSource, DatasetSource, SliceSource,
+    DEFAULT_CHUNK_ROWS,
+};
 pub use synthetic::{BlobSpec, make_blobs};

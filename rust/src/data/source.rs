@@ -1,0 +1,1033 @@
+//! Pull-based streaming data ingestion — the out-of-core half of the
+//! data layer.
+//!
+//! Every consumer in this crate used to demand a fully resident
+//! [`Dataset`] before doing anything, which caps the "millions of
+//! users" north star at RAM instead of at the engine.  A
+//! [`DataSource`] inverts that: consumers *pull* row chunks through a
+//! reusable buffer, so mini-batch k-means can eat batches straight off
+//! the stream, the subcluster pipeline can scatter rows into its
+//! partition groups in a single pass, and prediction can label a
+//! dataset of any size chunk by chunk
+//! ([`crate::model::FittedModel::predict_source`]).
+//!
+//! Four sources cover the crate's formats:
+//!
+//! * [`SliceSource`] / [`DatasetSource`] — in-memory data.  Chunking is
+//!   zero-copy: [`DataSource::resident`] hands consumers the whole
+//!   buffer, so no point is ever copied.
+//! * [`CsvSource`] — streaming CSV reader with exactly the dialect of
+//!   [`crate::data::loader::parse_csv`] (comments, blank lines, one
+//!   auto-detected header row, optional label column), surfacing parse
+//!   errors with their 1-based line number.
+//! * [`BinarySource`] — streaming reader for the `PSAMPLE1` binary
+//!   format with the same hardened header validation as
+//!   [`crate::data::loader::load_binary`].
+//! * [`BlobSource`] — the synthetic generator as a stream: it yields
+//!   *bit-identical* bytes to [`crate::data::synthetic::make_blobs`]
+//!   for the same [`BlobSpec`] without ever materializing the M×D
+//!   point buffer, so out-of-core benches need no giant files on disk.
+//!
+//! **The streaming contract.**  A source is a deterministic,
+//! replayable view of one logical byte sequence: every pass (after
+//! [`DataSource::reset`]) yields the same rows in the same order, and
+//! consumers are written so their output is *independent of the chunk
+//! size* — `rust/tests/stream_parity.rs` pins streaming fit/predict
+//! bit-identical to the resident paths for every source kind, chunk
+//! size, and [`crate::cluster::EngineOpts`] setting.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use crate::data::loader::{validated_binary_header, BIN_HEADER_BYTES};
+use crate::data::synthetic::BlobSpec;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// Default rows per [`DataSource::next_chunk`] call when the caller
+/// does not pick one (CLI `--chunk-rows`).  8192 rows keep the chunk
+/// in the hundreds of KiB for typical dims — big enough to amortize
+/// per-chunk overhead, small enough to be out-of-core.
+pub const DEFAULT_CHUNK_ROWS: usize = 8192;
+
+/// A pull-based stream of row-major f32 rows.
+///
+/// Implementations fill a caller-provided reusable buffer with up to
+/// their configured chunk size of rows per call; 0 returned rows means
+/// the stream is exhausted.  [`DataSource::reset`] rewinds to the
+/// first row so multi-pass algorithms (Lloyd refinement, the
+/// pipeline's scatter + final assignment) can re-stream the same
+/// bytes.
+pub trait DataSource {
+    /// Attribute count D of every row.
+    fn dims(&self) -> usize;
+
+    /// Total row count, when the source knows it cheaply (binary
+    /// header, in-memory buffer, synthetic spec).  `None` for CSV.
+    fn len_hint(&self) -> Option<usize>;
+
+    /// Fill `out` (cleared first) with the next chunk of rows —
+    /// `rows * dims()` floats — and return the row count.  0 means
+    /// exhausted.  The buffer is caller-owned so its capacity is
+    /// reused across calls.
+    fn next_chunk(&mut self, out: &mut Vec<f32>) -> Result<usize>;
+
+    /// Rewind to the first row (multi-pass algorithms re-stream).
+    fn reset(&mut self) -> Result<()>;
+
+    /// The whole row-major buffer, when the source is already
+    /// resident in memory — the zero-copy fast path.  Consumers that
+    /// get `Some` may process the slice directly instead of pulling
+    /// chunks; by the chunk-size-independence contract both routes
+    /// produce bit-identical results.
+    fn resident(&self) -> Option<&[f32]> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory sources
+// ---------------------------------------------------------------------------
+
+/// A borrowed in-memory buffer as a [`DataSource`] (zero-copy:
+/// [`DataSource::resident`] exposes the slice itself).
+#[derive(Debug)]
+pub struct SliceSource<'a> {
+    points: &'a [f32],
+    dims: usize,
+    chunk_rows: usize,
+    pos: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    /// Wrap a flat row-major buffer.  `points.len()` must be a
+    /// multiple of `dims`.
+    pub fn new(points: &'a [f32], dims: usize) -> Result<SliceSource<'a>> {
+        if dims == 0 || points.len() % dims != 0 {
+            return Err(Error::Data(format!(
+                "slice of {} values is not a multiple of dims {dims}",
+                points.len()
+            )));
+        }
+        Ok(SliceSource { points, dims, chunk_rows: DEFAULT_CHUNK_ROWS, pos: 0 })
+    }
+
+    /// Borrow a [`Dataset`]'s buffer (labels are not streamed —
+    /// sources carry features only).
+    pub fn of(data: &'a Dataset) -> SliceSource<'a> {
+        SliceSource {
+            points: data.as_slice(),
+            dims: data.dims(),
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+            pos: 0,
+        }
+    }
+
+    pub fn with_chunk_rows(mut self, rows: usize) -> SliceSource<'a> {
+        self.chunk_rows = rows.max(1);
+        self
+    }
+}
+
+impl DataSource for SliceSource<'_> {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.points.len() / self.dims)
+    }
+
+    fn next_chunk(&mut self, out: &mut Vec<f32>) -> Result<usize> {
+        out.clear();
+        let total = self.points.len() / self.dims;
+        let take = self.chunk_rows.min(total - self.pos);
+        out.extend_from_slice(&self.points[self.pos * self.dims..(self.pos + take) * self.dims]);
+        self.pos += take;
+        Ok(take)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn resident(&self) -> Option<&[f32]> {
+        Some(self.points)
+    }
+}
+
+/// An owned [`Dataset`] as a [`DataSource`] (the CLI's builtin
+/// datasets; ground-truth labels are dropped — sources carry features
+/// only).
+#[derive(Debug)]
+pub struct DatasetSource {
+    points: Vec<f32>,
+    dims: usize,
+    chunk_rows: usize,
+    pos: usize,
+}
+
+impl DatasetSource {
+    pub fn new(data: Dataset) -> DatasetSource {
+        let dims = data.dims();
+        DatasetSource {
+            points: data.into_points(),
+            dims,
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+            pos: 0,
+        }
+    }
+
+    pub fn with_chunk_rows(mut self, rows: usize) -> DatasetSource {
+        self.chunk_rows = rows.max(1);
+        self
+    }
+}
+
+impl DataSource for DatasetSource {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.points.len() / self.dims)
+    }
+
+    fn next_chunk(&mut self, out: &mut Vec<f32>) -> Result<usize> {
+        out.clear();
+        let total = self.points.len() / self.dims;
+        let take = self.chunk_rows.min(total - self.pos);
+        out.extend_from_slice(&self.points[self.pos * self.dims..(self.pos + take) * self.dims]);
+        self.pos += take;
+        Ok(take)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn resident(&self) -> Option<&[f32]> {
+        Some(&self.points)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSV
+// ---------------------------------------------------------------------------
+
+/// Streaming CSV reader.  Parses exactly the dialect of
+/// [`crate::data::loader::parse_csv`]: `#` comments and blank lines
+/// are skipped, one non-numeric header row is auto-detected on the
+/// first line only, and `label_col` (if set) is validated as numeric
+/// and dropped — sources carry features only.  Every parse error
+/// names its 1-based line number.
+pub struct CsvSource {
+    path: PathBuf,
+    label_col: Option<usize>,
+    chunk_rows: usize,
+    reader: BufReader<File>,
+    dims: usize,
+    /// 0-based index of the next line to read.
+    lineno: usize,
+    /// Data rows yielded so far this pass.
+    rows_seen: usize,
+    /// Scratch line buffer, reused across rows.
+    line: String,
+}
+
+impl CsvSource {
+    /// Open a CSV file, detecting the feature dimension from the
+    /// first data row (errors if the file holds no data rows).
+    pub fn open(path: impl AsRef<Path>, label_col: Option<usize>) -> Result<CsvSource> {
+        let path = path.as_ref().to_path_buf();
+        let reader = BufReader::new(File::open(&path)?);
+        let mut src = CsvSource {
+            path,
+            label_col,
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+            reader,
+            dims: 0,
+            lineno: 0,
+            rows_seen: 0,
+            line: String::new(),
+        };
+        // detect dims by parsing ahead to the first data row
+        let mut row = Vec::new();
+        if !src.next_row(&mut row)? {
+            return Err(Error::Data(format!("{}: no data rows", src.path.display())));
+        }
+        src.dims = row.len();
+        src.reset()?;
+        Ok(src)
+    }
+
+    pub fn with_chunk_rows(mut self, rows: usize) -> CsvSource {
+        self.chunk_rows = rows.max(1);
+        self
+    }
+
+    /// Parse the next data row into `row` (cleared first).  Returns
+    /// false at end of file.
+    fn next_row(&mut self, row: &mut Vec<f32>) -> Result<bool> {
+        loop {
+            self.line.clear();
+            if self.reader.read_line(&mut self.line)? == 0 {
+                return Ok(false);
+            }
+            let lineno = self.lineno;
+            self.lineno += 1;
+            let line = self.line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            row.clear();
+            // feature fields first, label field separately — the same
+            // precedence as parse_csv: only a *feature* parse failure
+            // on the very first line is a header; a bad or missing
+            // label is always an error
+            let mut feat_err = None;
+            let mut label_err = None;
+            let mut label_seen = false;
+            for (i, field) in line.split(',').map(str::trim).enumerate() {
+                if Some(i) == self.label_col {
+                    label_seen = true;
+                    if let Err(e) = field.parse::<f32>() {
+                        label_err = Some(e);
+                    }
+                    continue;
+                }
+                if feat_err.is_none() {
+                    match field.parse::<f32>() {
+                        Ok(v) => row.push(v),
+                        Err(e) => feat_err = Some(e),
+                    }
+                }
+            }
+            if let Some(e) = feat_err {
+                if self.rows_seen == 0 && lineno == 0 {
+                    continue; // auto-detected header row
+                }
+                return Err(Error::Data(format!("line {}: {e}", lineno + 1)));
+            }
+            if self.label_col.is_some() {
+                if !label_seen {
+                    return Err(Error::Data(format!("line {}: missing label", lineno + 1)));
+                }
+                if let Some(e) = label_err {
+                    return Err(Error::Data(format!("line {}: label: {e}", lineno + 1)));
+                }
+            }
+            if self.dims != 0 && row.len() != self.dims {
+                return Err(Error::Data(format!(
+                    "line {}: {} values, expected {}",
+                    lineno + 1,
+                    row.len(),
+                    self.dims
+                )));
+            }
+            if row.iter().any(|x| !x.is_finite()) {
+                return Err(Error::Data(format!(
+                    "line {}: non-finite value",
+                    lineno + 1
+                )));
+            }
+            self.rows_seen += 1;
+            return Ok(true);
+        }
+    }
+}
+
+impl DataSource for CsvSource {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+
+    fn next_chunk(&mut self, out: &mut Vec<f32>) -> Result<usize> {
+        out.clear();
+        let mut row = Vec::with_capacity(self.dims);
+        let mut n = 0;
+        while n < self.chunk_rows {
+            if !self.next_row(&mut row)? {
+                break;
+            }
+            out.extend_from_slice(&row);
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.reader.seek(SeekFrom::Start(0))?;
+        self.lineno = 0;
+        self.rows_seen = 0;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PSAMPLE1 binary
+// ---------------------------------------------------------------------------
+
+/// Streaming reader for the `PSAMPLE1` binary format written by
+/// [`crate::data::loader::save_binary`].  The header is validated the
+/// same way as [`crate::data::loader::load_binary`] — checked size
+/// arithmetic against the actual file length — before the first row is
+/// read; ground-truth labels (if present) are skipped.
+pub struct BinarySource {
+    reader: BufReader<File>,
+    dims: usize,
+    rows: usize,
+    pos: usize,
+    chunk_rows: usize,
+    /// Raw byte scratch, reused across chunks.
+    bytes: Vec<u8>,
+}
+
+impl BinarySource {
+    pub fn open(path: impl AsRef<Path>) -> Result<BinarySource> {
+        let file = File::open(path.as_ref())?;
+        let file_len = file.metadata()?.len();
+        let mut reader = BufReader::new(file);
+        let header = validated_binary_header(&mut reader, file_len)?;
+        Ok(BinarySource {
+            reader,
+            dims: header.dims,
+            rows: header.rows,
+            pos: 0,
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+            bytes: Vec::new(),
+        })
+    }
+
+    pub fn with_chunk_rows(mut self, rows: usize) -> BinarySource {
+        self.chunk_rows = rows.max(1);
+        self
+    }
+}
+
+impl DataSource for BinarySource {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.rows)
+    }
+
+    fn next_chunk(&mut self, out: &mut Vec<f32>) -> Result<usize> {
+        out.clear();
+        let take = self.chunk_rows.min(self.rows - self.pos);
+        if take == 0 {
+            return Ok(0);
+        }
+        let nbytes = take * self.dims * 4;
+        self.bytes.resize(nbytes, 0);
+        self.reader.read_exact(&mut self.bytes)?;
+        out.reserve(take * self.dims);
+        for b in self.bytes.chunks_exact(4) {
+            let v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            if !v.is_finite() {
+                return Err(Error::Data(format!(
+                    "non-finite value in row {}",
+                    self.pos + out.len() / self.dims
+                )));
+            }
+            out.push(v);
+        }
+        self.pos += take;
+        Ok(take)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.reader.seek(SeekFrom::Start(BIN_HEADER_BYTES as u64))?;
+        self.pos = 0;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic blobs
+// ---------------------------------------------------------------------------
+
+/// The synthetic blob generator as a stream.  Yields exactly the point
+/// buffer [`crate::data::synthetic::make_blobs`] would produce for the
+/// same [`BlobSpec`] — same RNG draws, same order — without holding
+/// M×D floats: only the K×D blob centers and the M-entry owner vector
+/// (the shuffle that `make_blobs` performs is inherently O(M)) stay
+/// resident.  Out-of-core benches stream gigabytes of points from a
+/// few megabytes of state.
+pub struct BlobSource {
+    spec: BlobSpec,
+    centers: Vec<f32>,
+    owner: Vec<usize>,
+    /// RNG state at the start of point generation (for [`BlobSource::reset`]).
+    rng_start: Pcg32,
+    rng: Pcg32,
+    pos: usize,
+    chunk_rows: usize,
+}
+
+impl BlobSource {
+    pub fn new(spec: &BlobSpec) -> Result<BlobSource> {
+        // same validation + draw order as make_blobs
+        if spec.num_clusters == 0 || spec.num_points == 0 || spec.dims == 0 {
+            return Err(Error::Config("blob spec must have points/clusters/dims > 0".into()));
+        }
+        if spec.num_clusters > spec.num_points {
+            return Err(Error::Config(format!(
+                "more clusters ({}) than points ({})",
+                spec.num_clusters, spec.num_points
+            )));
+        }
+        let mut rng = Pcg32::seeded(spec.seed);
+        let (k, d) = (spec.num_clusters, spec.dims);
+        let mut centers = Vec::with_capacity(k * d);
+        for _ in 0..k * d {
+            centers.push(rng.uniform(-spec.extent, spec.extent));
+        }
+        let mut owner: Vec<usize> = (0..spec.num_points).map(|i| i % k).collect();
+        rng.shuffle(&mut owner);
+        let rng_start = rng.clone();
+        Ok(BlobSource {
+            spec: spec.clone(),
+            centers,
+            owner,
+            rng_start,
+            rng,
+            pos: 0,
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+        })
+    }
+
+    pub fn with_chunk_rows(mut self, rows: usize) -> BlobSource {
+        self.chunk_rows = rows.max(1);
+        self
+    }
+
+    /// Ground-truth blob index per row (what `make_blobs` attaches as
+    /// labels) — exposed for eval harnesses.
+    pub fn owners(&self) -> &[usize] {
+        &self.owner
+    }
+}
+
+impl DataSource for BlobSource {
+    fn dims(&self) -> usize {
+        self.spec.dims
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.spec.num_points)
+    }
+
+    fn next_chunk(&mut self, out: &mut Vec<f32>) -> Result<usize> {
+        out.clear();
+        let d = self.spec.dims;
+        let take = self.chunk_rows.min(self.spec.num_points - self.pos);
+        out.reserve(take * d);
+        for &c in &self.owner[self.pos..self.pos + take] {
+            for j in 0..d {
+                out.push(self.centers[c * d + j] + self.rng.normal() * self.spec.std);
+            }
+        }
+        self.pos += take;
+        Ok(take)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.rng = self.rng_start.clone();
+        self.pos = 0;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Consumers' helpers
+// ---------------------------------------------------------------------------
+
+/// Drain a source into a resident [`Dataset`] — the documented
+/// spill-to-`Dataset` fallback for algorithms that genuinely need
+/// random access (Lloyd's and bisecting k-means re-visit every row
+/// every iteration; the equal partitioner globally sorts).  Streams
+/// from the source's current position; callers reset first.
+pub fn collect_dataset(src: &mut dyn DataSource) -> Result<Dataset> {
+    let dims = src.dims();
+    if let Some(all) = src.resident() {
+        return Dataset::new(all.to_vec(), dims);
+    }
+    let mut points = match src.len_hint() {
+        Some(m) => Vec::with_capacity(m * dims),
+        None => Vec::new(),
+    };
+    let mut buf = Vec::new();
+    loop {
+        let n = src.next_chunk(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        debug_assert_eq!(buf.len(), n * dims);
+        points.extend_from_slice(&buf);
+    }
+    Dataset::new(points, dims)
+}
+
+/// Re-buffer a source into fixed-size slabs of `slab_rows` rows (the
+/// last slab may be short) and hand each to `f`.  Returns the total
+/// row count.
+///
+/// This is the alignment shim between arbitrary source chunk sizes
+/// and the engine's fixed reduction blocks: when `slab_rows` is a
+/// multiple of the engine's point block, feeding the slabs to
+/// [`crate::cluster::Engine::assign_accumulate_stream`] reproduces the
+/// resident pass bit for bit (see that method's contract).  Resident
+/// sources skip the staging copy entirely — the whole buffer goes to
+/// `f` in one call, which the same contract makes equivalent.
+pub fn for_each_slab(
+    src: &mut dyn DataSource,
+    slab_rows: usize,
+    mut f: impl FnMut(&[f32]) -> Result<()>,
+) -> Result<usize> {
+    let dims = src.dims().max(1);
+    if let Some(all) = src.resident() {
+        if !all.is_empty() {
+            f(all)?;
+        }
+        return Ok(all.len() / dims);
+    }
+    let cap = slab_rows.max(1) * dims;
+    let mut slab: Vec<f32> = Vec::with_capacity(cap);
+    let mut buf: Vec<f32> = Vec::new();
+    let mut rows = 0usize;
+    loop {
+        let n = src.next_chunk(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        debug_assert_eq!(buf.len(), n * dims);
+        rows += n;
+        let mut off = 0usize;
+        while off < buf.len() {
+            let take = (cap - slab.len()).min(buf.len() - off);
+            slab.extend_from_slice(&buf[off..off + take]);
+            off += take;
+            if slab.len() == cap {
+                f(&slab)?;
+                slab.clear();
+            }
+        }
+    }
+    if !slab.is_empty() {
+        f(&slab)?;
+    }
+    Ok(rows)
+}
+
+/// Wrapper hiding the inner source's [`DataSource::resident`] fast
+/// path, forcing consumers down the chunked re-buffering route.  The
+/// parity suites and benches wrap in-memory sources with this to
+/// prove the chunked route agrees with the zero-copy one bit for bit
+/// (by the chunk-size-independence contract they must).
+#[derive(Debug)]
+pub struct ChunkedOnly<S: DataSource>(pub S);
+
+impl<S: DataSource> DataSource for ChunkedOnly<S> {
+    fn dims(&self) -> usize {
+        self.0.dims()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.0.len_hint()
+    }
+
+    fn next_chunk(&mut self, out: &mut Vec<f32>) -> Result<usize> {
+        self.0.next_chunk(out)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.0.reset()
+    }
+
+    // resident() deliberately stays at the default `None`
+}
+
+/// Row-granular cursor over a source: copy exact row counts across
+/// chunk boundaries (mini-batch re-buffers stream chunks into batches
+/// of exactly `batch_size` rows with this).
+pub struct ChunkCursor<'s> {
+    src: &'s mut dyn DataSource,
+    dims: usize,
+    buf: Vec<f32>,
+    /// Consumed prefix of `buf`, in floats.
+    off: usize,
+    /// Times [`ChunkCursor::fill_cycle`] wrapped past end of stream.
+    wraps: usize,
+}
+
+impl<'s> ChunkCursor<'s> {
+    pub fn new(src: &'s mut dyn DataSource) -> ChunkCursor<'s> {
+        let dims = src.dims();
+        ChunkCursor { src, dims, buf: Vec::new(), off: 0, wraps: 0 }
+    }
+
+    /// How many times [`ChunkCursor::fill_cycle`] has wrapped to the
+    /// start of the stream — `> 0` means at least one full pass over
+    /// the source has been consumed.  Depends only on the rows
+    /// consumed, never on the source's chunk size.
+    pub fn wraps(&self) -> usize {
+        self.wraps
+    }
+
+    /// Append up to `rows` rows to `out`.  Returns the rows copied —
+    /// fewer than `rows` only when the stream is exhausted.
+    pub fn fill(&mut self, out: &mut Vec<f32>, rows: usize) -> Result<usize> {
+        let mut copied = 0usize;
+        while copied < rows {
+            if self.off == self.buf.len() {
+                let n = self.src.next_chunk(&mut self.buf)?;
+                self.off = 0;
+                if n == 0 {
+                    break;
+                }
+            }
+            let avail_rows = (self.buf.len() - self.off) / self.dims;
+            let take = avail_rows.min(rows - copied);
+            out.extend_from_slice(&self.buf[self.off..self.off + take * self.dims]);
+            self.off += take * self.dims;
+            copied += take;
+        }
+        Ok(copied)
+    }
+
+    /// Like [`ChunkCursor::fill`] but wraps to the start of the source
+    /// at end of stream, so exactly `rows` rows always arrive.  Errors
+    /// if the source is empty.
+    pub fn fill_cycle(&mut self, out: &mut Vec<f32>, rows: usize) -> Result<()> {
+        let mut remaining = rows;
+        while remaining > 0 {
+            let got = self.fill(out, remaining)?;
+            remaining -= got;
+            if remaining > 0 {
+                self.src.reset()?;
+                self.buf.clear();
+                self.off = 0;
+                self.wraps += 1;
+                // guard: a source that yields nothing after reset is empty
+                let probe = self.fill(out, 1)?;
+                if probe == 0 {
+                    return Err(Error::Data("cannot cycle an empty source".into()));
+                }
+                remaining -= probe;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build a [`DataSource`] from a CLI data spec, auto-detecting the
+/// kind: a builtin dataset name (`iris`, `seeds`), a `.csv` path, or a
+/// `.bin` (`PSAMPLE1`) path.
+pub fn open_path_source(
+    spec: &str,
+    label_col: Option<usize>,
+    chunk_rows: usize,
+) -> Result<Box<dyn DataSource>> {
+    if let Ok(ds) = crate::data::builtin::by_name(spec) {
+        return Ok(Box::new(DatasetSource::new(ds).with_chunk_rows(chunk_rows)));
+    }
+    if spec.ends_with(".csv") {
+        Ok(Box::new(CsvSource::open(spec, label_col)?.with_chunk_rows(chunk_rows)))
+    } else if spec.ends_with(".bin") {
+        Ok(Box::new(BinarySource::open(spec)?.with_chunk_rows(chunk_rows)))
+    } else {
+        Err(Error::Config(format!(
+            "data spec '{spec}' is neither a builtin (iris, seeds) nor a .csv/.bin path"
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::loader::{save_binary, save_csv};
+    use crate::data::synthetic::make_blobs;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("parsample_src_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn drain(src: &mut dyn DataSource) -> Vec<f32> {
+        let mut all = Vec::new();
+        let mut buf = Vec::new();
+        loop {
+            let n = src.next_chunk(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            assert_eq!(buf.len(), n * src.dims());
+            all.extend_from_slice(&buf);
+        }
+        all
+    }
+
+    fn blobs(m: usize, seed: u64) -> Dataset {
+        make_blobs(&BlobSpec { num_points: m, num_clusters: 4, seed, ..Default::default() })
+            .unwrap()
+    }
+
+    #[test]
+    fn slice_source_chunks_and_resets() {
+        let data = blobs(103, 1);
+        for chunk in [1usize, 7, 50, 103, 500] {
+            let mut src = SliceSource::of(&data).with_chunk_rows(chunk);
+            assert_eq!(src.dims(), 2);
+            assert_eq!(src.len_hint(), Some(103));
+            assert_eq!(drain(&mut src), data.as_slice());
+            // exhausted until reset
+            let mut buf = Vec::new();
+            assert_eq!(src.next_chunk(&mut buf).unwrap(), 0);
+            src.reset().unwrap();
+            assert_eq!(drain(&mut src), data.as_slice());
+        }
+        let src = SliceSource::of(&data);
+        assert_eq!(src.resident(), Some(data.as_slice()));
+        assert!(SliceSource::new(&[1.0, 2.0, 3.0], 2).is_err());
+    }
+
+    #[test]
+    fn dataset_source_owns_and_matches() {
+        let data = blobs(59, 2);
+        let mut src = DatasetSource::new(data.clone()).with_chunk_rows(13);
+        assert_eq!(drain(&mut src), data.as_slice());
+        assert_eq!(src.resident(), Some(data.as_slice()));
+    }
+
+    #[test]
+    fn csv_source_matches_loader_bytes() {
+        let dir = tmpdir("csv");
+        let data = blobs(77, 3);
+        // without labels
+        let plain = Dataset::new(data.as_slice().to_vec(), 2).unwrap();
+        let path = dir.join("plain.csv");
+        save_csv(&plain, &path).unwrap();
+        for chunk in [1usize, 10, 77, 1000] {
+            let mut src = CsvSource::open(&path, None).unwrap().with_chunk_rows(chunk);
+            assert_eq!(src.dims(), 2);
+            assert_eq!(drain(&mut src), data.as_slice(), "chunk={chunk}");
+            src.reset().unwrap();
+            assert_eq!(drain(&mut src), data.as_slice());
+        }
+        // with a label column: validated and dropped
+        let path = dir.join("labelled.csv");
+        save_csv(&data, &path).unwrap();
+        let mut src = CsvSource::open(&path, Some(2)).unwrap();
+        assert_eq!(src.dims(), 2);
+        assert_eq!(drain(&mut src), data.as_slice());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_source_skips_header_comments_blanks() {
+        let dir = tmpdir("csvhdr");
+        let path = dir.join("h.csv");
+        std::fs::write(&path, "x,y\n# comment\n\n1,2\n3,4\n").unwrap();
+        let mut src = CsvSource::open(&path, None).unwrap();
+        assert_eq!(drain(&mut src), vec![1.0, 2.0, 3.0, 4.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_source_mid_stream_error_names_the_line() {
+        let dir = tmpdir("csverr");
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "1,2\n3,4\nfoo,bar\n5,6\n").unwrap();
+        let mut src = CsvSource::open(&path, None).unwrap().with_chunk_rows(2);
+        let mut buf = Vec::new();
+        assert_eq!(src.next_chunk(&mut buf).unwrap(), 2); // rows 1-2 fine
+        let err = src.next_chunk(&mut buf).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        // a ragged row errors with its line too
+        let path = dir.join("ragged.csv");
+        std::fs::write(&path, "1,2\n3,4,5\n").unwrap();
+        let mut src = CsvSource::open(&path, None).unwrap();
+        let err = src.next_chunk(&mut buf).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        // non-finite
+        let path = dir.join("nan.csv");
+        std::fs::write(&path, "1,2\nnan,4\n").unwrap();
+        let mut src = CsvSource::open(&path, None).unwrap();
+        let err = src.next_chunk(&mut buf).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("non-finite"), "{err}");
+        // header not on line 1 is an error, like parse_csv
+        let path = dir.join("lateheader.csv");
+        std::fs::write(&path, "# c\nx,y\n1,2\n").unwrap();
+        assert!(CsvSource::open(&path, None).is_err());
+        // a bad *label* on line 1 is an error, never a header (the
+        // parse_csv precedence: features first, then the label)
+        let path = dir.join("badlabel.csv");
+        std::fs::write(&path, "1.0,2.0,abc\n3.0,4.0,1\n").unwrap();
+        let err = CsvSource::open(&path, Some(2)).unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("label"), "{err}");
+        // …while a genuine header (non-numeric features) still skips
+        let path = dir.join("labelheader.csv");
+        std::fs::write(&path, "x,y,class\n1.0,2.0,0\n").unwrap();
+        let mut src = CsvSource::open(&path, Some(2)).unwrap();
+        assert_eq!(drain(&mut src), vec![1.0, 2.0]);
+        // a row missing the label column errors with its line
+        let path = dir.join("nolabel.csv");
+        std::fs::write(&path, "1.0,2.0,0\n3.0,4.0\n").unwrap();
+        let mut src = CsvSource::open(&path, Some(2)).unwrap();
+        let err = src.next_chunk(&mut buf).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("missing label"), "{err}");
+        // empty file
+        let path = dir.join("empty.csv");
+        std::fs::write(&path, "").unwrap();
+        assert!(CsvSource::open(&path, None).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn binary_source_matches_loader_bytes() {
+        let dir = tmpdir("bin");
+        let data = blobs(91, 4);
+        let path = dir.join("d.bin");
+        save_binary(&data, &path).unwrap(); // with labels: source must skip them
+        for chunk in [1usize, 8, 91, 4096] {
+            let mut src = BinarySource::open(&path).unwrap().with_chunk_rows(chunk);
+            assert_eq!(src.dims(), 2);
+            assert_eq!(src.len_hint(), Some(91));
+            assert_eq!(drain(&mut src), data.as_slice(), "chunk={chunk}");
+            src.reset().unwrap();
+            assert_eq!(drain(&mut src), data.as_slice());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn blob_source_is_bit_identical_to_make_blobs() {
+        let spec = BlobSpec {
+            num_points: 211,
+            num_clusters: 6,
+            dims: 3,
+            std: 0.2,
+            extent: 4.0,
+            seed: 9,
+        };
+        let resident = make_blobs(&spec).unwrap();
+        for chunk in [1usize, 17, 211, 1000] {
+            let mut src = BlobSource::new(&spec).unwrap().with_chunk_rows(chunk);
+            assert_eq!(src.dims(), 3);
+            assert_eq!(src.len_hint(), Some(211));
+            let streamed = drain(&mut src);
+            assert_eq!(
+                streamed.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                resident.as_slice().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "chunk={chunk}"
+            );
+            assert_eq!(src.owners(), resident.labels().unwrap());
+            src.reset().unwrap();
+            assert_eq!(drain(&mut src), resident.as_slice());
+        }
+        assert!(BlobSource::new(&BlobSpec { num_points: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn collect_dataset_roundtrips_every_kind() {
+        let dir = tmpdir("collect");
+        let data = blobs(64, 5);
+        let path = dir.join("d.bin");
+        save_binary(&data, &path).unwrap();
+        let mut bin = BinarySource::open(&path).unwrap().with_chunk_rows(9);
+        assert_eq!(collect_dataset(&mut bin).unwrap().as_slice(), data.as_slice());
+        let mut mem = SliceSource::of(&data);
+        assert_eq!(collect_dataset(&mut mem).unwrap().as_slice(), data.as_slice());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn for_each_slab_realigns_any_chunking() {
+        let data = blobs(100, 6);
+        for (chunk, slab) in [(1usize, 8usize), (7, 16), (64, 8), (100, 256)] {
+            // ChunkedOnly defeats the resident fast path so the
+            // staging loop actually runs
+            let mut src = ChunkedOnly(DatasetSource::new(data.clone()).with_chunk_rows(chunk));
+            let mut seen = Vec::new();
+            let mut sizes = Vec::new();
+            let rows = for_each_slab(&mut src, slab, |s| {
+                sizes.push(s.len() / 2);
+                seen.extend_from_slice(s);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(rows, 100, "chunk={chunk} slab={slab}");
+            assert_eq!(seen, data.as_slice(), "chunk={chunk} slab={slab}");
+            // all slabs full except possibly the last
+            for &s in &sizes[..sizes.len() - 1] {
+                assert_eq!(s, slab, "chunk={chunk} slab={slab} sizes={sizes:?}");
+            }
+            assert!(*sizes.last().unwrap() <= slab);
+        }
+        // resident fast path: one call with the whole buffer
+        let mut src = SliceSource::of(&data);
+        let mut calls = 0;
+        let rows = for_each_slab(&mut src, 8, |s| {
+            calls += 1;
+            assert_eq!(s, data.as_slice());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!((rows, calls), (100, 1));
+    }
+
+    #[test]
+    fn chunk_cursor_fills_exact_rows_and_cycles() {
+        let data = blobs(10, 7);
+        let mut src = ChunkedOnly(DatasetSource::new(data.clone()).with_chunk_rows(3));
+        let mut cur = ChunkCursor::new(&mut src);
+        let mut out = Vec::new();
+        assert_eq!(cur.fill(&mut out, 4).unwrap(), 4);
+        assert_eq!(out, data.as_slice()[..8].to_vec());
+        out.clear();
+        assert_eq!(cur.fill(&mut out, 100).unwrap(), 6); // only 6 left
+        assert_eq!(out, data.as_slice()[8..].to_vec());
+        // cycling wraps to the start
+        out.clear();
+        cur.fill_cycle(&mut out, 12).unwrap();
+        assert_eq!(out.len(), 24);
+        assert_eq!(&out[..20], data.as_slice());
+        assert_eq!(&out[20..], &data.as_slice()[..4]);
+    }
+
+    #[test]
+    fn open_path_source_detects_kinds() {
+        let dir = tmpdir("open");
+        let data = blobs(20, 8);
+        let csv = dir.join("d.csv");
+        let bin = dir.join("d.bin");
+        save_csv(&Dataset::new(data.as_slice().to_vec(), 2).unwrap(), &csv).unwrap();
+        save_binary(&data, &bin).unwrap();
+        assert_eq!(
+            drain(&mut *open_path_source("iris", None, 64).unwrap()).len() % 4,
+            0
+        );
+        assert_eq!(
+            drain(&mut *open_path_source(csv.to_str().unwrap(), None, 7).unwrap()),
+            data.as_slice()
+        );
+        assert_eq!(
+            drain(&mut *open_path_source(bin.to_str().unwrap(), None, 7).unwrap()),
+            data.as_slice()
+        );
+        assert!(open_path_source("nope.txt", None, 8).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

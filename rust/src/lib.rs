@@ -39,6 +39,44 @@
 //! println!("point 0 -> cluster {assignment}");
 //! ```
 //!
+//! Out of core — when the dataset doesn't fit in RAM (the paper's
+//! whole premise), pull it through a streaming [`data::DataSource`]
+//! instead of loading it.  Fit and predict are **bit-identical** to
+//! the resident paths at any chunk size:
+//!
+//! ```no_run
+//! use parsample::cluster::MiniBatchKMeans;
+//! use parsample::data::source::CsvSource;
+//! use parsample::model::{ClusterModel, FittedModel};
+//!
+//! // fit without ever materializing the file (CLI: `fit --chunk-rows`)
+//! let mut stream = CsvSource::open("huge.csv", None).unwrap().with_chunk_rows(8192);
+//! let fitter = MiniBatchKMeans { k: 64, ..Default::default() };
+//! let model = fitter.fit_source(&mut stream).unwrap();
+//! model.save("huge.model.json").unwrap();
+//!
+//! // label the stream chunk by chunk; labels arrive incrementally
+//! // (CLI `predict --chunk-rows --out` writes them to disk this way)
+//! let model = FittedModel::load("huge.model.json").unwrap();
+//! let mut stream = CsvSource::open("huge.csv", None).unwrap();
+//! let p = model.predict_source(&mut stream, |labels| {
+//!     // ship `labels` wherever they go — nothing is buffered whole
+//!     let _ = labels;
+//!     Ok(())
+//! }).unwrap();
+//! println!("labelled {} rows, inertia {}", p.rows, p.inertia);
+//! ```
+//!
+//! Sources: in-memory ([`data::DatasetSource`] / [`data::SliceSource`],
+//! zero-copy), streaming CSV ([`data::CsvSource`]), the `PSAMPLE1`
+//! binary format ([`data::BinarySource`]), and the synthetic generator
+//! ([`data::BlobSource`] — out-of-core benches need no giant files).
+//! [`pipeline::SubclusterPipeline`] scatters a stream into its
+//! partition groups in one pass (see [`pipeline::stream`]);
+//! algorithms that need random access spill to a resident
+//! [`data::Dataset`] via the documented
+//! [`model::ClusterModel::fit_source`] fallback.
+//!
 //! [`model`] is the fit/predict lifecycle ([`model::ClusterModel`],
 //! [`model::FittedModel`], shared [`cluster::EngineOpts`] knobs);
 //! [`pipeline::SubclusterPipeline::run`] remains the single-shot,

@@ -19,6 +19,7 @@ use std::process::ExitCode;
 use parsample::cluster::{BoundsMode, EngineOpts};
 use parsample::config::AppConfig;
 use parsample::coordinator::SchedulerConfig;
+use parsample::data::source::{open_path_source, DataSource};
 use parsample::data::{builtin, loader, synthetic, Dataset};
 use parsample::error::{Error, Result};
 use parsample::eval;
@@ -77,15 +78,15 @@ fn print_usage() {
          \x20           traditional k-means (single Lloyd loop on the blocked engine)\n\
          \x20 fit       --data ... --k K --out MODEL.json [--algo kmeans|minibatch|bisecting|pipeline]\n\
          \x20           [--iters N] [--seed S] [--workers W] [--bounds ...] [--kernel ...]\n\
-         \x20           [--scheme ...] [--compression C] [--groups G]\n\
+         \x20           [--scheme ...] [--compression C] [--groups G] [--chunk-rows N]\n\
          \x20           run the expensive clustering once; write a reusable model artifact\n\
          \x20 predict   --model MODEL.json --data ... [--workers W] [--kernel ...] [--eval]\n\
-         \x20           [--out labels.txt]\n\
+         \x20           [--out labels.txt] [--chunk-rows N]\n\
          \x20           assign points with a saved model (no re-clustering)\n\
          \x20 generate  --size M [--seed S] --out FILE[.csv|.bin]          paper synthetic workload\n\
          \x20 partition --data ... --groups G [--scheme ...]               dump group sizes\n\
          \x20 serve     [--addr HOST:PORT] [--backend ...] [--queue N]     JSON-lines job server\n\
-         \x20           [--models m1.json,m2.json] [--model-cap N]\n\
+         \x20           [--models m1.json,m2.json] [--model-cap N] [--snapshot-dir DIR]\n\
          \x20           protocol cmds: cluster (one-shot), fit/predict/models (serve-many),\n\
          \x20           ping, stats — fitted models live in an in-process LRU registry\n\
          \x20 buckets   [--artifacts DIR]                                  AOT bucket table\n\n\
@@ -98,7 +99,15 @@ fn print_usage() {
          to --bounds off — only the wall time changes.\n\
          --kernel selects the engine's tile kernel: scalar (default), wide (8-lane\n\
          SIMD sweep, bit-identical to scalar), or auto (wide when the detected CPU\n\
-         features warrant it).  PARSAMPLE_KERNEL=... overrides the default."
+         features warrant it).  PARSAMPLE_KERNEL=... overrides the default.\n\
+         --chunk-rows N streams the data instead of loading it: fit/predict pull the\n\
+         file N rows at a time, with results bit-identical to the resident path at\n\
+         any N; predict --out writes labels incrementally.  Truly out-of-core today:\n\
+         every predict, --algo minibatch, and --algo pipeline (whose scatter still\n\
+         buffers one copy of the rows); kmeans/bisecting and --scheme equal need\n\
+         random access and spill the stream into memory (documented fallback).\n\
+         --snapshot-dir DIR persists the serve registry: models are written there on\n\
+         shutdown and reloaded on boot, so a restarted server comes back warm."
     );
 }
 
@@ -294,8 +303,13 @@ fn engine_opts_from_flags(flags: &Flags, default_w: usize) -> Result<EngineOpts>
     Ok(opts)
 }
 
+/// Open the `--data` spec as a streaming source (`--chunk-rows` path).
+fn open_stream_source(flags: &Flags, chunk_rows: usize) -> Result<Box<dyn DataSource>> {
+    let spec = flags.required("data")?;
+    open_path_source(spec, flags.usize("label-col")?, chunk_rows)
+}
+
 fn cmd_fit(flags: &Flags) -> Result<()> {
-    let data = load_data(flags)?;
     let k = flags
         .usize("k")?
         .ok_or_else(|| Error::Config("missing --k".into()))?;
@@ -310,7 +324,15 @@ fn cmd_fit(flags: &Flags) -> Result<()> {
     spec.compression = flags.f32("compression")?;
     spec.num_groups = flags.usize("groups")?;
     let t0 = std::time::Instant::now();
-    let model = spec.fit(&data)?;
+    // --chunk-rows: pull the data through a streaming source instead
+    // of materializing it (bit-identical results at any chunk size)
+    let model = match flags.usize("chunk-rows")? {
+        Some(rows) => {
+            let mut src = open_stream_source(flags, rows.max(1))?;
+            spec.fit_source(&mut *src)?
+        }
+        None => spec.fit(&load_data(flags)?)?,
+    };
     model.save(out)?;
     let meta = model.meta();
     println!(
@@ -329,12 +351,58 @@ fn cmd_fit(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// The `--chunk-rows` predict path: labels stream from the engine to
+/// `--out` (or nowhere) without ever being held whole.  `--eval` needs
+/// the resident dataset's ground-truth labels; direct users there.
+fn cmd_predict_stream(flags: &Flags, model: &FittedModel, chunk_rows: usize) -> Result<()> {
+    if flags.bool("eval") {
+        return Err(Error::Config(
+            "--eval needs ground-truth labels in memory; drop --chunk-rows to evaluate".into(),
+        ));
+    }
+    use std::io::Write;
+    let mut src = open_stream_source(flags, chunk_rows)?;
+    let mut out_file = match flags.get("out") {
+        Some(path) => Some((
+            std::io::BufWriter::new(std::fs::File::create(path)?),
+            path.to_string(),
+        )),
+        None => None,
+    };
+    let t0 = std::time::Instant::now();
+    let p = model.predict_source(&mut *src, |labels| {
+        if let Some((w, _)) = &mut out_file {
+            for l in labels {
+                writeln!(w, "{l}")?;
+            }
+        }
+        Ok(())
+    })?;
+    println!(
+        "predict (streamed, {} rows/chunk): {} points -> k={} | inertia {:.6} | counts {:?} | {:.1} ms",
+        chunk_rows,
+        p.rows,
+        model.k(),
+        p.inertia,
+        p.counts,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    if let Some((mut w, path)) = out_file {
+        w.flush()?;
+        println!("labels written to {path} (one per line, incrementally)");
+    }
+    Ok(())
+}
+
 fn cmd_predict(flags: &Flags) -> Result<()> {
     let path = flags.required("model")?;
     let mut model = FittedModel::load(path)?;
-    let data = load_data(flags)?;
     // predict-time knobs are retunable; default to all cores
     model.set_engine_opts(engine_opts_from_flags(flags, default_workers())?);
+    if let Some(rows) = flags.usize("chunk-rows")? {
+        return cmd_predict_stream(flags, &model, rows.max(1));
+    }
+    let data = load_data(flags)?;
     let t0 = std::time::Instant::now();
     let p = model.predict_dataset(&data)?;
     println!(
@@ -492,6 +560,13 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
     let mut cfg = ServerConfig::from_scheduler(scheduler);
     cfg.model_cap = flags.usize("model-cap")?.unwrap_or(app.model_cap);
+    cfg.snapshot_dir = flags
+        .get("snapshot-dir")
+        .map(Into::into)
+        .or(app.snapshot_dir);
+    if let Some(dir) = &cfg.snapshot_dir {
+        println!("registry snapshots: {} (write on shutdown, reload on boot)", dir.display());
+    }
     if preload.len() > cfg.model_cap {
         return Err(Error::Config(format!(
             "--models lists {} models but the registry cap is {} (raise --model-cap)",

@@ -20,9 +20,10 @@
 
 use std::path::Path;
 
-use crate::cluster::engine::EngineOpts;
+use crate::cluster::engine::{Engine, EngineOpts};
 use crate::cluster::{BoundsMode, KernelMode};
 use crate::data::scaling::MinMaxScaler;
+use crate::data::source::{for_each_slab, DataSource};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::pipeline::assign_full;
@@ -65,6 +66,20 @@ pub struct Prediction {
     /// Nearest-center index per point (ties to the lowest index, the
     /// crate-wide argmin rule).
     pub labels: Vec<u32>,
+    /// Points per center.
+    pub counts: Vec<u32>,
+    /// Sum of squared distances to assigned centers.
+    pub inertia: f64,
+}
+
+/// Summary of one streaming prediction
+/// ([`FittedModel::predict_source`]).  No label vector: labels were
+/// handed to the caller's sink chunk by chunk — the stream may be
+/// arbitrarily long.
+#[derive(Debug, Clone)]
+pub struct SourcePrediction {
+    /// Rows labelled.
+    pub rows: usize,
     /// Points per center.
     pub counts: Vec<u32>,
     /// Sum of squared distances to assigned centers.
@@ -202,6 +217,59 @@ impl FittedModel {
         let (labels, counts, inertia) =
             assign_full(points, dims, &self.centers, opts.workers, opts.kernel);
         Ok(Prediction { labels, counts, inertia })
+    }
+
+    /// Streaming prediction: assign a [`DataSource`] chunk by chunk on
+    /// the blocked engine, handing each chunk's labels to `on_labels`
+    /// in stream order — nothing the size of the dataset is ever held
+    /// (the CLI `predict --out` writes labels to disk as they come).
+    ///
+    /// Bit-parity contract (`rust/tests/stream_parity.rs`): for a
+    /// source backed by the same bytes, the concatenated labels,
+    /// `counts`, and `inertia` equal [`FittedModel::predict_batch`]'s
+    /// to the last bit at every chunk size and [`EngineOpts`] setting
+    /// — the source's chunks are re-buffered into slabs aligned to the
+    /// engine's reduction blocks, and the f64 inertia folds one block
+    /// partial at a time exactly like the resident merge (see
+    /// [`Engine::assign_accumulate_stream`]).
+    pub fn predict_source(
+        &self,
+        src: &mut dyn DataSource,
+        on_labels: impl FnMut(&[u32]) -> Result<()>,
+    ) -> Result<SourcePrediction> {
+        self.predict_source_with(src, self.engine, on_labels)
+    }
+
+    /// [`FittedModel::predict_source`] with explicit engine knobs (the
+    /// server's chunked predict handler passes its own).
+    pub fn predict_source_with(
+        &self,
+        src: &mut dyn DataSource,
+        opts: EngineOpts,
+        mut on_labels: impl FnMut(&[u32]) -> Result<()>,
+    ) -> Result<SourcePrediction> {
+        let dims = self.meta.dims;
+        if src.dims() != dims {
+            return Err(Error::Model(format!(
+                "source has {} dims, model dims is {}",
+                src.dims(),
+                dims
+            )));
+        }
+        src.reset()?;
+        let engine = Engine::new(opts.workers).with_kernel(opts.kernel);
+        let mut counts = vec![0u32; self.meta.k];
+        let mut inertia = 0.0f64;
+        let slab = engine.stream_slab_rows();
+        let rows = for_each_slab(src, slab, |seg| {
+            let labels = engine
+                .assign_accumulate_stream(seg, dims, &self.centers, &mut counts, &mut inertia);
+            on_labels(&labels)
+        })?;
+        if rows == 0 {
+            return Err(Error::Model("cannot predict an empty source".into()));
+        }
+        Ok(SourcePrediction { rows, counts, inertia })
     }
 
     /// [`FittedModel::predict_batch`] over a [`Dataset`].
@@ -423,6 +491,47 @@ mod tests {
         assert!(m.predict_batch(&[1.0, 2.0, 3.0]).is_err()); // ragged
         let other = Dataset::new(vec![0.0; 6], 3).unwrap();
         assert!(m.predict_dataset(&other).is_err()); // dims mismatch
+    }
+
+    #[test]
+    fn predict_source_matches_predict_batch() {
+        use crate::data::source::{ChunkedOnly, SliceSource};
+        let m = model();
+        let pts: Vec<f32> = (0..2000).map(|i| (i % 23) as f32 * 0.7 - 5.0).collect();
+        let resident = m.predict_batch(&pts).unwrap();
+        for chunk in [1usize, 37, 1000] {
+            // ChunkedOnly hides resident() so the slab re-buffering runs
+            let mut src = ChunkedOnly(SliceSource::new(&pts, 2).unwrap().with_chunk_rows(chunk));
+            let mut labels = Vec::new();
+            let p = m
+                .predict_source(&mut src, |ls| {
+                    labels.extend_from_slice(ls);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(p.rows, 1000, "chunk={chunk}");
+            assert_eq!(labels, resident.labels, "chunk={chunk}");
+            assert_eq!(p.counts, resident.counts, "chunk={chunk}");
+            assert_eq!(p.inertia.to_bits(), resident.inertia.to_bits(), "chunk={chunk}");
+        }
+        // the resident fast path agrees too
+        let mut src = SliceSource::new(&pts, 2).unwrap();
+        let mut labels = Vec::new();
+        let p = m
+            .predict_source(&mut src, |ls| {
+                labels.extend_from_slice(ls);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(labels, resident.labels);
+        assert_eq!(p.inertia.to_bits(), resident.inertia.to_bits());
+        // dims mismatch and empty source are rejected
+        let wrong = vec![0.0f32; 9];
+        let mut src = SliceSource::new(&wrong, 3).unwrap();
+        assert!(m.predict_source(&mut src, |_| Ok(())).is_err());
+        let empty: Vec<f32> = Vec::new();
+        let mut src = SliceSource::new(&empty, 2).unwrap();
+        assert!(m.predict_source(&mut src, |_| Ok(())).is_err());
     }
 
     #[test]

@@ -36,11 +36,12 @@
 pub mod artifact;
 
 pub use crate::cluster::engine::EngineOpts;
-pub use artifact::{FitMeta, FittedModel, Prediction, MODEL_FORMAT, MODEL_VERSION};
+pub use artifact::{FitMeta, FittedModel, Prediction, SourcePrediction, MODEL_FORMAT, MODEL_VERSION};
 
 use crate::cluster::kmeans::{lloyd, KMeansConfig, KMeansResult};
 use crate::cluster::{BisectingKMeans, MiniBatchKMeans};
 use crate::data::scaling::MinMaxScaler;
+use crate::data::source::{collect_dataset, DataSource, SliceSource};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::partition::Scheme;
@@ -61,6 +62,27 @@ pub trait ClusterModel {
 
     /// Run the fit on `data` and package the result.
     fn fit(&self, data: &Dataset) -> Result<FittedModel>;
+
+    /// Run the fit over a streaming [`DataSource`] — the out-of-core
+    /// entry point.  The contract (pinned by
+    /// `rust/tests/stream_parity.rs`): for a source backed by the same
+    /// bytes as a resident [`Dataset`], `fit_source` produces a
+    /// bit-identical artifact to [`ClusterModel::fit`] at every source
+    /// chunk size and [`EngineOpts`] setting.
+    ///
+    /// The default implementation is the *documented spill fallback*:
+    /// algorithms that genuinely need random access (Lloyd's and
+    /// bisecting k-means revisit every row every iteration) drain the
+    /// source into a resident dataset and fit that.  True streaming
+    /// consumers override it: [`MiniBatchKMeans`] eats the stream in
+    /// batches, [`SubclusterPipeline`] scatters it into its partition
+    /// groups in a single pass
+    /// ([`crate::pipeline::stream`]).
+    fn fit_source(&self, src: &mut dyn DataSource) -> Result<FittedModel> {
+        src.reset()?;
+        let ds = collect_dataset(src)?;
+        self.fit(&ds)
+    }
 }
 
 /// Lloyd's k-means as a [`ClusterModel`] (the k lives in the config).
@@ -120,9 +142,33 @@ impl ClusterModel for MiniBatchKMeans {
         "minibatch-kmeans"
     }
 
+    /// The resident fit *is* the streaming fit over an in-memory
+    /// source (zero-copy), so `fit` and [`ClusterModel::fit_source`]
+    /// are one algorithm and bit-identical by construction.  (The
+    /// random-batch resident variant stays available as
+    /// [`MiniBatchKMeans::run`] for the ablation benches.)
     fn fit(&self, data: &Dataset) -> Result<FittedModel> {
-        let r = self.run(data.as_slice(), data.dims(), self.k)?;
-        artifact_from_result(self.algorithm(), data, r, self.engine_opts(), None)
+        self.fit_source(&mut SliceSource::of(data))
+    }
+
+    /// True streaming consumer: batches are consecutive windows pulled
+    /// straight off the source ([`MiniBatchKMeans::fit_stream`]).
+    fn fit_source(&self, src: &mut dyn DataSource) -> Result<FittedModel> {
+        let dims = src.dims();
+        let r = self.fit_stream(src)?;
+        FittedModel::new(
+            FitMeta {
+                algorithm: self.algorithm().to_string(),
+                k: r.counts.len(),
+                dims,
+                trained_on: r.rows,
+                inertia: r.inertia,
+                iterations: r.iterations,
+                engine: self.engine_opts(),
+            },
+            r.centers,
+            None,
+        )
     }
 }
 
@@ -169,6 +215,29 @@ impl ClusterModel for SubclusterPipeline {
             scaler,
         )
     }
+
+    /// True streaming consumer: the paper's subdivision becomes a
+    /// single-pass scatter of the stream into the partition groups
+    /// ([`crate::pipeline::stream`]); bit-identical to the resident
+    /// fit on the same bytes (equal scheme / PJRT backend take the
+    /// documented spill fallback inside `run_source`).
+    fn fit_source(&self, src: &mut dyn DataSource) -> Result<FittedModel> {
+        let dims = src.dims();
+        let r = self.run_source(src)?;
+        FittedModel::new(
+            FitMeta {
+                algorithm: self.algorithm().to_string(),
+                k: r.counts.len(),
+                dims,
+                trained_on: r.rows,
+                inertia: r.inertia,
+                iterations: r.global_iterations,
+                engine: self.config().engine_opts(),
+            },
+            r.centers,
+            r.scaler,
+        )
+    }
 }
 
 /// Algorithm-by-name model construction — one dispatch shared by the
@@ -209,8 +278,9 @@ impl ModelSpec {
         }
     }
 
-    /// Build the model this spec names and fit it on `data`.
-    pub fn fit(&self, data: &Dataset) -> Result<FittedModel> {
+    /// Construct the [`ClusterModel`] this spec names (shared by the
+    /// resident and streaming fit entry points).
+    pub fn build_model(&self) -> Result<Box<dyn ClusterModel>> {
         match self.algorithm.as_str() {
             "kmeans" => {
                 let mut cfg = KMeansConfig { k: self.k, seed: self.seed, ..Default::default() }
@@ -218,7 +288,7 @@ impl ModelSpec {
                 if let Some(it) = self.iters {
                     cfg.max_iters = it;
                 }
-                KMeans { config: cfg }.fit(data)
+                Ok(Box::new(KMeans { config: cfg }))
             }
             "minibatch" | "minibatch-kmeans" => {
                 let mut cfg = MiniBatchKMeans { k: self.k, seed: self.seed, ..Default::default() }
@@ -226,7 +296,7 @@ impl ModelSpec {
                 if let Some(it) = self.iters {
                     cfg.iters = it;
                 }
-                cfg.fit(data)
+                Ok(Box::new(cfg))
             }
             "bisecting" | "bisecting-kmeans" => {
                 let mut cfg = BisectingKMeans { k: self.k, seed: self.seed, ..Default::default() }
@@ -234,7 +304,7 @@ impl ModelSpec {
                 if let Some(it) = self.iters {
                     cfg.split_iters = it;
                 }
-                cfg.fit(data)
+                Ok(Box::new(cfg))
             }
             "pipeline" | "subcluster" | "subcluster-pipeline" => {
                 let mut b = PipelineConfig::builder()
@@ -253,12 +323,24 @@ impl ModelSpec {
                 if let Some(it) = self.iters {
                     b = b.global_iters(it);
                 }
-                SubclusterPipeline::new(b.build()?).fit(data)
+                Ok(Box::new(SubclusterPipeline::new(b.build()?)))
             }
             other => Err(Error::Model(format!(
                 "unknown algorithm '{other}' (expected kmeans|minibatch|bisecting|pipeline)"
             ))),
         }
+    }
+
+    /// Build the model this spec names and fit it on `data`.
+    pub fn fit(&self, data: &Dataset) -> Result<FittedModel> {
+        self.build_model()?.fit(data)
+    }
+
+    /// Build the model this spec names and fit it over a streaming
+    /// source — the CLI `fit --chunk-rows` path.  Bit-identical to
+    /// [`ModelSpec::fit`] on the same bytes.
+    pub fn fit_source(&self, src: &mut dyn DataSource) -> Result<FittedModel> {
+        self.build_model()?.fit_source(src)
     }
 }
 

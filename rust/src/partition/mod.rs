@@ -19,7 +19,7 @@ pub mod unequal;
 
 pub use equal::EqualPartitioner;
 pub use random::RandomPartitioner;
-pub use unequal::UnequalPartitioner;
+pub use unequal::{UnequalPartitioner, UnequalRouter};
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};

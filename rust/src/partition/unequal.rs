@@ -60,6 +60,61 @@ fn nearest_on_segment(s: f32, cand: usize, g: usize) -> usize {
     best
 }
 
+/// The per-row group decision of the euclidean fast path, packaged so
+/// a *streaming* caller (the pipeline's single-pass scatter in
+/// [`crate::pipeline::stream`]) routes rows with exactly the float
+/// ops [`UnequalPartitioner::partition`] uses — one code path, so the
+/// streamed partition is bit-identical to the resident one by
+/// construction.  Needs only the corners L/H, not the data.
+#[derive(Debug, Clone)]
+pub struct UnequalRouter {
+    lo: Vec<f32>,
+    v: Vec<f32>,
+    inv_v2: f32,
+    g: usize,
+    /// All points identical (|H−L|² = 0): everything goes to group 0.
+    degenerate: bool,
+}
+
+impl UnequalRouter {
+    /// Build from the (feature-scaled) corners and the group count.
+    pub fn new(lo: Vec<f32>, hi: &[f32], num_groups: usize) -> UnequalRouter {
+        let v: Vec<f32> = hi.iter().zip(&lo).map(|(h, l)| h - l).collect();
+        let v2: f32 = v.iter().map(|x| x * x).sum();
+        UnequalRouter {
+            lo,
+            v,
+            inv_v2: if v2 == 0.0 { 0.0 } else { 1.0 / v2 },
+            g: num_groups.max(1),
+            degenerate: v2 == 0.0,
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.g
+    }
+
+    /// Group index for one (feature-scaled) row.
+    #[inline]
+    pub fn group_of(&self, row: &[f32]) -> usize {
+        if self.degenerate {
+            return 0;
+        }
+        let mut dot = 0.0f32;
+        for j in 0..row.len() {
+            dot += (row[j] - self.lo[j]) * self.v[j];
+        }
+        let s = dot * self.inv_v2;
+        // nearest t_i = (idx+0.5)/G; ties break to the lower index
+        // exactly like the brute-force scan
+        let idx = (s * self.g as f32 - 0.5).round() as isize;
+        let idx = idx.clamp(0, self.g as isize - 1) as usize;
+        // guard the f32 rounding boundary against the scan's tie-break
+        // by checking the 1-D neighbours
+        nearest_on_segment(s, idx, self.g)
+    }
+}
+
 impl Partitioner for UnequalPartitioner {
     fn partition(&self, data: &Dataset, num_groups: usize) -> Result<Partition> {
         let m = data.len();
@@ -80,30 +135,11 @@ impl Partitioner for UnequalPartitioner {
             // s = (p−L)·v / |v|² with v = H−L: landmark i has parameter
             // t_i = (i+½)/G, so i* = clamp(⌊s·G⌋).  O(M·D) instead of
             // O(M·G·D) — 170x at the paper's 500k/G=333 workload.
-            let v: Vec<f32> = hi.iter().zip(&lo).map(|(h, l)| h - l).collect();
-            let v2: f32 = v.iter().map(|x| x * x).sum();
-            if v2 == 0.0 {
-                // degenerate: all points identical -> one group
-                groups[0] = (0..m).collect();
-            } else {
-                let inv_v2 = 1.0 / v2;
-                let g_f = num_groups as f32;
-                for i in 0..m {
-                    let row = data.row(i);
-                    let mut dot = 0.0f32;
-                    for j in 0..row.len() {
-                        dot += (row[j] - lo[j]) * v[j];
-                    }
-                    let s = dot * inv_v2;
-                    // nearest t_i = (idx+0.5)/G; ties break to the lower
-                    // index exactly like the brute-force scan
-                    let idx = (s * g_f - 0.5).round() as isize;
-                    let idx = idx.clamp(0, num_groups as isize - 1) as usize;
-                    // guard the f32 rounding boundary against the scan's
-                    // tie-break by checking the 1-D neighbours
-                    let best = nearest_on_segment(s, idx, num_groups);
-                    groups[best].push(i);
-                }
+            // The per-row decision lives in [`UnequalRouter`] so the
+            // streaming scatter shares it verbatim.
+            let router = UnequalRouter::new(lo, &hi, num_groups);
+            for i in 0..m {
+                groups[router.group_of(data.row(i))].push(i);
             }
         } else {
             // generic metric: brute-force scan over the landmarks

@@ -9,6 +9,17 @@
 //! executables (`BackendKind::Pjrt`) or the native mirror.  The global
 //! stage reuses the device when a bucket fits the pooled centers and
 //! falls back to the native Lloyd otherwise.
+//!
+//! [`SubclusterPipeline::run`] is the resident entry point;
+//! [`stream::SubclusterPipeline::run_source`] (see the [`stream`]
+//! module) is the out-of-core one — it scatters rows off a
+//! [`crate::data::source::DataSource`] straight into the partition
+//! groups in a single pass and is bit-identical to `run` on the same
+//! bytes.
+
+pub mod stream;
+
+pub use stream::StreamRunResult;
 
 use std::cell::RefCell;
 use std::path::PathBuf;
@@ -345,30 +356,8 @@ impl SubclusterPipeline {
         let n_dispatches = dispatches.len();
 
         // 4. local stage (the parallel hot path)
-        let local: Vec<LocalResult> = timed(&mut timings.local_ms, || -> Result<_> {
-            match backend {
-                AnyBackend::Pjrt(p) => {
-                    // device-level parallelism comes from the B batch slots
-                    let mut all = Vec::new();
-                    for d in &dispatches {
-                        let out = p.run_in_bucket(&d.bucket, &d.batch)?;
-                        all.extend(Batcher::unpack(d, &out, data.dims()));
-                    }
-                    Ok(all)
-                }
-                AnyBackend::Native(nb) => {
-                    // host-level parallelism across dispatches
-                    let results =
-                        parallel_map(&dispatches, self.cfg.workers, |_, d| {
-                            nb.run_batch(&d.batch).map(|out| Batcher::unpack(d, &out, data.dims()))
-                        });
-                    let mut all = Vec::new();
-                    for r in results {
-                        all.extend(r.map_err(Error::Coordinator)??);
-                    }
-                    Ok(all)
-                }
-            }
+        let local: Vec<LocalResult> = timed(&mut timings.local_ms, || {
+            self.local_stage(backend, &dispatches, data.dims())
         })?;
 
         // 5. pool local centers (+ counts for optional weighting)
@@ -416,6 +405,40 @@ impl SubclusterPipeline {
             dispatches: n_dispatches,
             timings,
         })
+    }
+
+    /// Run every dispatch of the local stage on `backend` and unpack
+    /// the per-group results (shared by [`SubclusterPipeline::run`]
+    /// and the streaming [`stream`] path — identical dispatches give
+    /// identical local results either way).
+    fn local_stage(
+        &self,
+        backend: &AnyBackend,
+        dispatches: &[crate::coordinator::batcher::Dispatch],
+        dims: usize,
+    ) -> Result<Vec<LocalResult>> {
+        match backend {
+            AnyBackend::Pjrt(p) => {
+                // device-level parallelism comes from the B batch slots
+                let mut all = Vec::new();
+                for d in dispatches {
+                    let out = p.run_in_bucket(&d.bucket, &d.batch)?;
+                    all.extend(Batcher::unpack(d, &out, dims));
+                }
+                Ok(all)
+            }
+            AnyBackend::Native(nb) => {
+                // host-level parallelism across dispatches
+                let results = parallel_map(dispatches, self.cfg.workers, |_, d| {
+                    nb.run_batch(&d.batch).map(|out| Batcher::unpack(d, &out, dims))
+                });
+                let mut all = Vec::new();
+                for r in results {
+                    all.extend(r.map_err(Error::Coordinator)??);
+                }
+                Ok(all)
+            }
+        }
     }
 
     /// Global k-means over the pooled local centers.  Uses the device

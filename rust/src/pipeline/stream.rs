@@ -1,0 +1,451 @@
+//! Out-of-core pipeline fit: the paper's subdivision as a streaming
+//! scatter.
+//!
+//! The resident [`SubclusterPipeline::run`] needs three resident
+//! copies of the data at its peak — the [`crate::data::Dataset`], the
+//! min-max-scaled clone the partitioners see, and the per-dispatch
+//! batch buffers.  [`SubclusterPipeline::run_source`] needs one: it
+//! makes a cheap first pass over the [`DataSource`] for the corners
+//! L/H and the row count (O(D) state), then a second pass that routes
+//! every row to its partition group *as it streams by* — the scaled
+//! view exists one row at a time in a scratch buffer — filling the
+//! exact per-group buffers the batcher dispatches from.  After the
+//! local and global stages (unchanged, they see identical dispatches)
+//! the final assignment re-streams the source through the engine's
+//! block-aligned streaming sweep.
+//!
+//! **Parity.**  For any source backed by the same bytes, `run_source`
+//! is bit-identical to `run` — centers, counts, inertia, iteration
+//! counts — at every chunk size and [`crate::cluster::EngineOpts`]
+//! setting (`rust/tests/stream_parity.rs`).  The three load-bearing
+//! facts:
+//!
+//! * min-max scaling is monotone per attribute, so the corners of the
+//!   scaled data are the scaled raw corners, bit for bit — no second
+//!   pass needed to re-derive the partition landmarks;
+//! * the per-row group decision is the *same code* the resident
+//!   partitioner runs ([`crate::partition::UnequalRouter`]; the random
+//!   scheme's shuffle is data-independent), and rows land in their
+//!   group buffers in the partition's own order, so the batcher plans
+//!   identical dispatches;
+//! * the final sweep feeds block-aligned slabs to
+//!   [`crate::cluster::Engine::assign_accumulate_stream`], whose
+//!   contract reproduces the resident fused pass's f64 fold exactly.
+//!
+//! **Spill fallback.**  Two configurations genuinely need the whole
+//! dataset at once and fall back to the documented
+//! collect-then-`run` path (same results, resident memory): the
+//! *equal* scheme (its shells come from a global distance sort) and
+//! the PJRT backend (bucket packing reads a resident dataset).
+//! Streaming the equal scheme via a rank-scatter pass is a ROADMAP
+//! follow-up.
+
+use crate::cluster::engine::Engine;
+use crate::coordinator::batcher::{Batcher, GroupRows};
+use crate::data::scaling::{MinMaxScaler, Scaler};
+use crate::data::source::{collect_dataset, for_each_slab, DataSource};
+use crate::error::{Error, Result};
+use crate::partition::{Scheme, UnequalRouter};
+use crate::pipeline::{SubclusterPipeline, LOCAL_ITERS, MAX_NATIVE_GROUP};
+use crate::runtime::BackendKind;
+use crate::util::rng::Pcg32;
+
+/// Everything a streaming pipeline fit produces.  No per-point labels
+/// — the stream may be arbitrarily long; label it afterwards with
+/// [`crate::model::FittedModel::predict_source`].
+#[derive(Debug, Clone)]
+pub struct StreamRunResult {
+    /// final_k × D centers, original coordinates.
+    pub centers: Vec<f32>,
+    /// Points per final cluster (from the final streaming sweep).
+    pub counts: Vec<u32>,
+    /// Sum of squared distances to the final centers.
+    pub inertia: f64,
+    /// Total rows the source yielded (M).
+    pub rows: usize,
+    /// Pooled local-center count (the sample the global stage saw).
+    pub local_centers: usize,
+    /// Lloyd iterations the global stage actually performed.
+    pub global_iterations: usize,
+    /// Sub-regions after partitioning.
+    pub num_groups: usize,
+    /// The fitted min-max scaler when the config scales (carried into
+    /// the model artifact).
+    pub scaler: Option<MinMaxScaler>,
+    /// True when this run took the documented spill-to-`Dataset`
+    /// fallback (equal scheme or PJRT backend) instead of the
+    /// streaming scatter.
+    pub spilled: bool,
+}
+
+/// Per-row group routing for the streaming scatter.
+enum RowRouter {
+    /// Algorithm 2: project on the L→H diagonal — the exact code the
+    /// resident partitioner runs.  Rows append to their group in
+    /// stream order, which is the partitioner's own order.
+    Unequal(UnequalRouter),
+    /// Ablation scheme: the shuffle is data-independent, so the
+    /// (group, slot) of every row id is precomputable from (seed, M).
+    /// Rows are written *at their slot* to reproduce the shuffled
+    /// group order.
+    Random { row_group: Vec<u32>, row_slot: Vec<u32> },
+}
+
+impl SubclusterPipeline {
+    /// Run the full pipeline over a [`DataSource`] — the out-of-core
+    /// twin of [`SubclusterPipeline::run`], bit-identical to it on the
+    /// same bytes (see the module docs for the contract and the spill
+    /// fallback).
+    pub fn run_source(&self, src: &mut dyn DataSource) -> Result<StreamRunResult> {
+        let cfg = self.config();
+        cfg.validate()?;
+        src.reset()?;
+        if cfg.backend == BackendKind::Pjrt || cfg.scheme == Scheme::Equal {
+            return self.run_source_spilled(src);
+        }
+        let dims = src.dims();
+        if dims == 0 {
+            return Err(Error::Data("source dims must be > 0".into()));
+        }
+
+        // ---- pass A: corners + row count (O(D) state).  f32 min/max
+        // are exact, so chunked folding equals the resident corner scan.
+        let mut m = 0usize;
+        let mut lo = vec![f32::INFINITY; dims];
+        let mut hi = vec![f32::NEG_INFINITY; dims];
+        {
+            let mut buf = Vec::new();
+            loop {
+                let n = src.next_chunk(&mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                m += n;
+                for row in buf.chunks_exact(dims) {
+                    for (j, &x) in row.iter().enumerate() {
+                        lo[j] = f32::min(lo[j], x);
+                        hi[j] = f32::max(hi[j], x);
+                    }
+                }
+            }
+        }
+        if m == 0 {
+            return Err(Error::Data("empty dataset".into()));
+        }
+        if cfg.final_k > m {
+            return Err(Error::Config(format!(
+                "final_k {} exceeds {m} points",
+                cfg.final_k
+            )));
+        }
+
+        // the scaler exactly as MinMaxScaler::fit derives it from the
+        // corners (mins + f32-subtracted ranges)
+        let scaler = if cfg.scale {
+            let ranges: Vec<f32> = hi.iter().zip(&lo).map(|(&h, &l)| h - l).collect();
+            Some(MinMaxScaler::from_params(lo.clone(), ranges)?)
+        } else {
+            None
+        };
+        // corners of the partition-space view: scaling is monotone per
+        // attribute, so scaled corners = scaled raw corners, bitwise
+        let (part_lo, part_hi) = match &scaler {
+            Some(s) => {
+                let mut a = lo.clone();
+                s.transform_point(&mut a);
+                let mut b = hi.clone();
+                s.transform_point(&mut b);
+                (a, b)
+            }
+            None => (lo.clone(), hi.clone()),
+        };
+
+        let g = cfg.groups_for(m);
+        let router = match cfg.scheme {
+            Scheme::Unequal => RowRouter::Unequal(UnequalRouter::new(part_lo, &part_hi, g)),
+            Scheme::Random => RowRouter::random(m, g, cfg.seed),
+            Scheme::Equal => unreachable!("equal spills above"),
+        };
+
+        // pre-size the group buffers (random knows exact sizes; unequal
+        // appends)
+        let mut groups: Vec<GroupRows> = match &router {
+            RowRouter::Unequal(_) => (0..g).map(|_| GroupRows::default()).collect(),
+            RowRouter::Random { row_group, row_slot } => {
+                let ngroups = row_group.iter().copied().max().map_or(0, |x| x as usize + 1);
+                let mut sizes = vec![0usize; ngroups];
+                for (&gi, &sl) in row_group.iter().zip(row_slot) {
+                    sizes[gi as usize] = sizes[gi as usize].max(sl as usize + 1);
+                }
+                sizes
+                    .into_iter()
+                    .map(|n| GroupRows {
+                        group_idx: 0,
+                        indices: vec![0; n],
+                        points: vec![0.0; n * dims],
+                    })
+                    .collect()
+            }
+        };
+
+        // ---- pass B: the single-pass scatter.  Each row is scaled
+        // into a scratch buffer (partition space), routed, and its
+        // *original* coordinates land in the group buffer — the same
+        // rows, in the same order, that the resident batcher gathers.
+        src.reset()?;
+        {
+            let mut buf = Vec::new();
+            let mut scaled_row = vec![0.0f32; dims];
+            let mut i = 0usize;
+            loop {
+                let n = src.next_chunk(&mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                for row in buf.chunks_exact(dims) {
+                    match &router {
+                        RowRouter::Unequal(r) => {
+                            let gi = match &scaler {
+                                Some(s) => {
+                                    scaled_row.copy_from_slice(row);
+                                    s.transform_point(&mut scaled_row);
+                                    r.group_of(&scaled_row)
+                                }
+                                None => r.group_of(row),
+                            };
+                            groups[gi].indices.push(i);
+                            groups[gi].points.extend_from_slice(row);
+                        }
+                        RowRouter::Random { row_group, row_slot } => {
+                            let (gi, sl) = (row_group[i] as usize, row_slot[i] as usize);
+                            groups[gi].indices[sl] = i;
+                            groups[gi].points[sl * dims..(sl + 1) * dims].copy_from_slice(row);
+                        }
+                    }
+                    i += 1;
+                }
+            }
+            if i != m {
+                return Err(Error::Data(format!(
+                    "source changed between passes: {m} rows then {i}"
+                )));
+            }
+        }
+        // drop empty groups in order and number the survivors — the
+        // partitioners' own `without_empty` semantics
+        groups.retain(|grp| !grp.indices.is_empty());
+        for (gi, grp) in groups.iter_mut().enumerate() {
+            grp.group_idx = gi;
+        }
+        let num_groups = groups.len();
+
+        // ---- local + global stages on identical dispatches
+        self.ensure_backend()?;
+        let backend_ref = self.backend.borrow();
+        let backend = backend_ref.as_ref().expect("ensured above");
+        // plan_exact_rows consumes the group buffers (moving whole
+        // groups into their dispatches), so the rows are never held
+        // twice
+        let dispatches = Batcher::plan_exact_rows(
+            groups,
+            dims,
+            cfg.compression,
+            LOCAL_ITERS,
+            MAX_NATIVE_GROUP,
+        )?;
+        let local = self.local_stage(backend, &dispatches, dims)?;
+        drop(dispatches);
+        let mut pooled = Vec::new();
+        let mut pool_weights = Vec::new();
+        for lr in &local {
+            pooled.extend_from_slice(&lr.centers);
+            pool_weights.extend_from_slice(&lr.counts);
+        }
+        let n_pool = pooled.len() / dims;
+        if n_pool < cfg.final_k {
+            return Err(Error::Cluster(format!(
+                "only {n_pool} local centers for final_k {}; lower compression or raise groups",
+                cfg.final_k
+            )));
+        }
+        let global = self.global_stage(backend, &pooled, &pool_weights, dims)?;
+
+        // ---- final streaming assignment: counts + inertia against
+        // the global centers, block-aligned so the f64 fold replays
+        // the resident assign_full pass exactly
+        src.reset()?;
+        let engine = Engine::new(cfg.workers).with_kernel(cfg.kernel);
+        let k = global.centers.len() / dims;
+        let mut counts = vec![0u32; k];
+        let mut inertia = 0.0f64;
+        let slab = engine.stream_slab_rows();
+        let rows = for_each_slab(src, slab, |seg| {
+            engine.assign_accumulate_stream(seg, dims, &global.centers, &mut counts, &mut inertia);
+            Ok(())
+        })?;
+        if rows != m {
+            return Err(Error::Data(format!(
+                "source changed between passes: {m} rows then {rows}"
+            )));
+        }
+
+        Ok(StreamRunResult {
+            centers: global.centers,
+            counts,
+            inertia,
+            rows: m,
+            local_centers: n_pool,
+            global_iterations: global.iterations,
+            num_groups,
+            scaler,
+            spilled: false,
+        })
+    }
+
+    /// The documented spill fallback: drain the source into a resident
+    /// [`crate::data::Dataset`] and run the resident pipeline — same
+    /// results, resident memory.
+    fn run_source_spilled(&self, src: &mut dyn DataSource) -> Result<StreamRunResult> {
+        let ds = collect_dataset(src)?;
+        let r = self.run(&ds)?;
+        let scaler = if self.config().scale {
+            let mut s = MinMaxScaler::new();
+            s.fit(&ds)?;
+            Some(s)
+        } else {
+            None
+        };
+        Ok(StreamRunResult {
+            centers: r.centers,
+            counts: r.counts,
+            inertia: r.inertia,
+            rows: ds.len(),
+            local_centers: r.local_centers,
+            global_iterations: r.global_iterations,
+            num_groups: r.num_groups,
+            scaler,
+            spilled: true,
+        })
+    }
+}
+
+impl RowRouter {
+    /// Precompute the random scheme's (group, slot) per row id —
+    /// exactly [`crate::partition::RandomPartitioner`]'s shuffle and
+    /// chunking, which depend only on (seed, M).
+    fn random(m: usize, num_groups: usize, seed: u64) -> RowRouter {
+        let g = num_groups.min(m);
+        let mut idx: Vec<usize> = (0..m).collect();
+        Pcg32::new(seed, 0x9a47).shuffle(&mut idx);
+        let n = m.div_ceil(g);
+        let mut row_group = vec![0u32; m];
+        let mut row_slot = vec![0u32; m];
+        for (pos, &row) in idx.iter().enumerate() {
+            row_group[row] = (pos / n) as u32;
+            row_slot[row] = (pos % n) as u32;
+        }
+        RowRouter::Random { row_group, row_slot }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::source::DatasetSource;
+    use crate::data::synthetic::{make_blobs, BlobSpec};
+    use crate::data::Dataset;
+    use crate::pipeline::{PipelineConfig, PipelineResult};
+
+    fn blobs(m: usize, k: usize, seed: u64) -> Dataset {
+        make_blobs(&BlobSpec {
+            num_points: m,
+            num_clusters: k,
+            dims: 2,
+            std: 0.05,
+            extent: 10.0,
+            seed,
+        })
+        .unwrap()
+    }
+
+    fn assert_matches_resident(s: &StreamRunResult, r: &PipelineResult, ctx: &str) {
+        assert_eq!(s.centers, r.centers, "{ctx}");
+        assert_eq!(s.counts, r.counts, "{ctx}");
+        assert_eq!(s.inertia.to_bits(), r.inertia.to_bits(), "{ctx}");
+        assert_eq!(s.local_centers, r.local_centers, "{ctx}");
+        assert_eq!(s.global_iterations, r.global_iterations, "{ctx}");
+        assert_eq!(s.num_groups, r.num_groups, "{ctx}");
+    }
+
+    #[test]
+    fn streamed_scatter_matches_resident_run_unequal() {
+        let data = blobs(1200, 5, 11);
+        for scale in [true, false] {
+            let cfg = PipelineConfig::builder()
+                .final_k(5)
+                .num_groups(6)
+                .compression(4.0)
+                .scale(scale)
+                .workers(3)
+                .build()
+                .unwrap();
+            let pipe = SubclusterPipeline::new(cfg);
+            let resident = pipe.run(&data).unwrap();
+            for chunk in [1usize, 97, 4096] {
+                let mut src = DatasetSource::new(data.clone()).with_chunk_rows(chunk);
+                let s = pipe.run_source(&mut src).unwrap();
+                assert!(!s.spilled);
+                assert_eq!(s.rows, 1200);
+                assert_matches_resident(&s, &resident, &format!("scale={scale} chunk={chunk}"));
+                assert_eq!(s.scaler.is_some(), scale);
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_scatter_matches_resident_run_random() {
+        let data = blobs(900, 4, 5);
+        let cfg = PipelineConfig::builder()
+            .scheme(Scheme::Random)
+            .final_k(4)
+            .num_groups(5)
+            .compression(4.0)
+            .seed(3)
+            .build()
+            .unwrap();
+        let pipe = SubclusterPipeline::new(cfg);
+        let resident = pipe.run(&data).unwrap();
+        for chunk in [13usize, 900] {
+            let mut src = DatasetSource::new(data.clone()).with_chunk_rows(chunk);
+            let s = pipe.run_source(&mut src).unwrap();
+            assert!(!s.spilled);
+            assert_matches_resident(&s, &resident, &format!("chunk={chunk}"));
+        }
+    }
+
+    #[test]
+    fn equal_scheme_spills_and_still_matches() {
+        let data = blobs(600, 3, 7);
+        let cfg = PipelineConfig::builder()
+            .scheme(Scheme::Equal)
+            .final_k(3)
+            .num_groups(4)
+            .compression(4.0)
+            .build()
+            .unwrap();
+        let pipe = SubclusterPipeline::new(cfg);
+        let resident = pipe.run(&data).unwrap();
+        let mut src = DatasetSource::new(data.clone()).with_chunk_rows(64);
+        let s = pipe.run_source(&mut src).unwrap();
+        assert!(s.spilled);
+        assert_matches_resident(&s, &resident, "equal spill");
+    }
+
+    #[test]
+    fn run_source_validates_like_run() {
+        let data = blobs(10, 2, 0);
+        let cfg = PipelineConfig::builder().final_k(11).build().unwrap();
+        let mut src = DatasetSource::new(data);
+        assert!(SubclusterPipeline::new(cfg).run_source(&mut src).is_err());
+    }
+}

@@ -38,6 +38,7 @@ pub mod registry;
 
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -45,13 +46,14 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::EngineOpts;
 use crate::coordinator::{Scheduler, SchedulerConfig};
+use crate::data::source::SliceSource;
 use crate::error::{Error, Result};
 use crate::model::{FittedModel, ModelSpec};
 use crate::telemetry::LatencyHistogram;
 use crate::util::threadpool::default_workers;
 use protocol::{
-    encode_error, encode_fit_result, encode_models, encode_pong, encode_prediction,
-    encode_result, encode_stats, parse_request, FitJob, PredictJob, Request,
+    encode_error, encode_fit_result, encode_models, encode_pong, encode_result, encode_stats,
+    parse_request, FitJob, PredictJob, PredictionEncoder, Request,
 };
 pub use registry::{ModelInfo, ModelRegistry};
 
@@ -93,6 +95,12 @@ pub struct ServerConfig {
     /// connection (e.g. artifacts written by the CLI `fit` subcommand
     /// and loaded via `serve --models`).
     pub preload: Vec<(String, FittedModel)>,
+    /// Registry persistence directory (`serve --snapshot-dir`): on
+    /// shutdown every registered model is written here as
+    /// `<name>.model.json`, and on boot any such snapshots are loaded
+    /// back (explicit `preload` entries win name collisions) — a
+    /// restarted server comes back warm instead of refitting.
+    pub snapshot_dir: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -102,6 +110,7 @@ impl Default for ServerConfig {
             engine: EngineOpts::default().with_workers(default_workers()),
             model_cap: DEFAULT_MODEL_CAP,
             preload: Vec::new(),
+            snapshot_dir: None,
         }
     }
 }
@@ -178,6 +187,7 @@ pub struct Server {
     accept_handle: Option<JoinHandle<()>>,
     registry: Arc<ModelRegistry>,
     pub latency: Arc<LatencyHistogram>,
+    snapshot_dir: Option<PathBuf>,
 }
 
 impl Server {
@@ -198,6 +208,14 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let latency = Arc::new(LatencyHistogram::new());
         let registry = Arc::new(ModelRegistry::new(cfg.model_cap));
+        let snapshot_dir = cfg.snapshot_dir.clone();
+        // warm boot: reload the previous run's snapshots first, so an
+        // explicit preload of the same name wins (it re-inserts)
+        if let Some(dir) = &snapshot_dir {
+            for (name, model) in load_snapshots(dir) {
+                registry.insert(name, model);
+            }
+        }
         for (name, model) in cfg.preload {
             // a preload overflowing the cap is almost certainly an
             // operator mistake — say so instead of serving a surprise
@@ -254,6 +272,7 @@ impl Server {
             accept_handle: Some(accept_handle),
             registry,
             latency,
+            snapshot_dir,
         })
     }
 
@@ -267,15 +286,119 @@ impl Server {
     }
 
     /// Stop accepting, wake idle handlers, and join the accept loop.
-    /// Bounded by [`HANDLER_POLL`] plus any in-flight request.
+    /// Bounded by [`HANDLER_POLL`] plus any in-flight request.  With a
+    /// snapshot dir configured, the registry is written to disk after
+    /// the last handler exits (no fit can race the writer), so the
+    /// next boot comes back warm.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // unblock the accept loop
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
+            // the accept loop (and every handler) is down: no fit can
+            // race the snapshot writer.  The taken handle also makes
+            // the Drop-triggered second call a no-op.
+            if let Some(dir) = &self.snapshot_dir {
+                if let Err(e) = write_snapshots(dir, &self.registry) {
+                    eprintln!("parsample server: registry snapshot failed: {e}");
+                }
+            }
         }
     }
+}
+
+/// Write every registered model to `dir` as `<name>.model.json`,
+/// replacing the previous snapshot set.  Write order is crash-safe:
+/// every model is first written under a `.tmp` name, and only when
+/// *all* writes succeed are the stale `*.model.json` files removed
+/// (so evicted models do not resurrect) and the temp files renamed in
+/// — a disk-full or permission error mid-write leaves the previous
+/// snapshot generation fully intact.  Names that cannot be file stems
+/// (path separators, `..`) are skipped with a warning.
+fn write_snapshots(dir: &Path, registry: &ModelRegistry) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    // 1. stage the new generation under temp names
+    let mut staged: Vec<(PathBuf, PathBuf)> = Vec::new();
+    for (name, model) in registry.entries() {
+        if !snapshot_safe_name(&name) {
+            eprintln!(
+                "parsample server: model name '{name}' is not snapshot-safe; skipping"
+            );
+            continue;
+        }
+        let tmp = dir.join(format!("{name}.model.json.tmp"));
+        if let Err(e) = model.save(&tmp) {
+            // abort without touching the previous snapshot files
+            for (t, _) in &staged {
+                let _ = std::fs::remove_file(t);
+            }
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        staged.push((tmp, dir.join(format!("{name}.model.json"))));
+    }
+    // 2. every write landed: sweep the stale generation…
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.ends_with(".model.json"))
+        {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+    // 3. …and publish the new one
+    for (tmp, fin) in staged {
+        std::fs::rename(tmp, fin)?;
+    }
+    Ok(())
+}
+
+/// Load every `<name>.model.json` snapshot in `dir` (sorted by name —
+/// LRU recency does not survive a restart).  Unreadable artifacts are
+/// skipped with a warning rather than failing the boot.
+fn load_snapshots(dir: &Path) -> Vec<(String, FittedModel)> {
+    let Ok(read) = std::fs::read_dir(dir) else {
+        return Vec::new(); // first boot: nothing snapshotted yet
+    };
+    let mut found: Vec<(String, PathBuf)> = read
+        .flatten()
+        .filter_map(|e| {
+            let path = e.path();
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .and_then(|n| n.strip_suffix(".model.json"))?
+                .to_string();
+            if name.is_empty() {
+                return None;
+            }
+            Some((name, path))
+        })
+        .collect();
+    found.sort();
+    let mut out = Vec::new();
+    for (name, path) in found {
+        match FittedModel::load(&path) {
+            Ok(model) => out.push((name, model)),
+            Err(e) => eprintln!(
+                "parsample server: skipping snapshot {}: {e}",
+                path.display()
+            ),
+        }
+    }
+    out
+}
+
+/// A registry name the snapshot writer will embed in a filename:
+/// non-empty, no path separators, no leading dot (covers `..`).
+fn snapshot_safe_name(name: &str) -> bool {
+    !name.is_empty()
+        && !name.starts_with('.')
+        && !name.contains(['/', '\\'])
+        && !name.contains('\0')
 }
 
 impl Drop for Server {
@@ -389,7 +512,10 @@ fn serve_line(buf: &[u8], ctx: &HandlerCtx, writer: &mut TcpStream) -> Result<()
 fn dispatch(line: &str, ctx: &HandlerCtx) -> String {
     match parse_request(line) {
         Ok(Request::Ping) => encode_pong(),
-        Ok(Request::Stats) => encode_stats(&ctx.scheduler.counters.snapshot()),
+        Ok(Request::Stats) => encode_stats(
+            &ctx.scheduler.counters.snapshot(),
+            &ctx.registry.predict_stats(),
+        ),
         Ok(Request::Models) => encode_models(&ctx.registry.list()),
         Ok(Request::Cluster(job)) => {
             let id = job.id;
@@ -451,7 +577,14 @@ fn run_fit(ctx: &HandlerCtx, job: FitJob) -> Result<String> {
     Ok(response)
 }
 
-/// Assign the request's points against a registered model.
+/// Assign the request's points against a registered model, on the
+/// chunked path: labels stream from the engine straight into the
+/// response encoder, so a giant wire batch costs one label pass
+/// instead of a full `Prediction` plus a per-label JSON DOM.  Output
+/// bytes are identical to the old batch encoder; counts/inertia are
+/// bit-identical to [`FittedModel::predict_batch_with`] (the engine's
+/// streaming contract).  Also bumps the model's predict counter
+/// (surfaced in `stats`).
 fn run_predict(ctx: &HandlerCtx, job: &PredictJob) -> Result<String> {
     let model = ctx.registry.get(&job.name).ok_or_else(|| {
         Error::Server(format!("unknown model '{}' (fit it first, or check cmd models)", job.name))
@@ -464,8 +597,21 @@ fn run_predict(ctx: &HandlerCtx, job: &PredictJob) -> Result<String> {
             model.dims()
         )));
     }
-    let prediction = model.predict_batch_with(&job.points, ctx.engine)?;
-    Ok(encode_prediction(&job.name, &prediction))
+    if job.points.is_empty() || job.points.len() % job.dims != 0 {
+        return Err(Error::Server(format!(
+            "points buffer of {} values is not a non-empty multiple of dims {}",
+            job.points.len(),
+            job.dims
+        )));
+    }
+    let mut src = SliceSource::new(&job.points, job.dims)?;
+    let mut enc = PredictionEncoder::new(&job.name);
+    let p = model.predict_source_with(&mut src, ctx.engine, |labels| {
+        enc.push_labels(labels);
+        Ok(())
+    })?;
+    ctx.registry.note_predicts(&job.name, 1);
+    Ok(enc.finish(&p.counts, p.inertia))
 }
 
 /// Minimal blocking client for examples and tests.

@@ -246,12 +246,82 @@ pub fn encode_pong() -> String {
     Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string()
 }
 
-pub fn encode_stats(counters: &[(&str, u64)]) -> String {
+/// Encode the `stats` response: scheduler counters plus the per-model
+/// predict counters (LRU first) the registry tracks.
+pub fn encode_stats(counters: &[(&str, u64)], model_predicts: &[(String, u64)]) -> String {
     let mut fields: Vec<(&str, Json)> = vec![("ok", Json::Bool(true))];
     for (k, v) in counters {
         fields.push((k, Json::num(*v as f64)));
     }
+    let models: Vec<Json> = model_predicts
+        .iter()
+        .map(|(name, n)| {
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("predicts", Json::num(*n as f64)),
+            ])
+        })
+        .collect();
+    fields.push(("models", Json::Arr(models)));
     Json::obj(fields).to_string()
+}
+
+/// Incremental encoder for the chunked predict response.  The server
+/// streams labels into the label-array text as
+/// [`crate::model::FittedModel::predict_source`] hands them over, so a
+/// giant wire batch is never double-buffered into a second label
+/// vector (or a per-label [`Json`] DOM) before encoding.  The byte
+/// output is identical to [`encode_prediction`] for the same
+/// labels/counts/inertia — same [`Json`] number formatting, same
+/// sorted field order.
+pub struct PredictionEncoder {
+    name: String,
+    labels_json: String,
+    any: bool,
+}
+
+impl PredictionEncoder {
+    pub fn new(name: &str) -> PredictionEncoder {
+        PredictionEncoder {
+            name: name.to_string(),
+            labels_json: String::from("["),
+            any: false,
+        }
+    }
+
+    /// Append one chunk of labels.
+    pub fn push_labels(&mut self, labels: &[u32]) {
+        use std::fmt::Write;
+        for &l in labels {
+            if self.any {
+                self.labels_json.push(',');
+            }
+            self.any = true;
+            let _ = write!(self.labels_json, "{l}");
+        }
+    }
+
+    /// Close the response with the accumulated counts and inertia.
+    /// Fields are emitted in sorted key order — exactly how
+    /// [`Json::obj`]'s `BTreeMap` prints them in [`encode_prediction`].
+    pub fn finish(mut self, counts: &[u32], inertia: f64) -> String {
+        use std::fmt::Write;
+        self.labels_json.push(']');
+        let mut out = String::with_capacity(self.labels_json.len() + 64);
+        out.push_str("{\"counts\":[");
+        for (i, &c) in counts.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{c}");
+        }
+        let _ = write!(out, "],\"inertia\":{}", Json::num(inertia));
+        out.push_str(",\"labels\":");
+        out.push_str(&self.labels_json);
+        let _ = write!(out, ",\"name\":{}", Json::str(&self.name));
+        out.push_str(",\"ok\":true}");
+        out
+    }
 }
 
 /// Encode a successful fit response (the model itself stays in the
@@ -464,6 +534,42 @@ mod tests {
         assert!(parse_request(r#"{"cmd":"predict","name":"m"}"#).is_err());
         assert!(parse_request(r#"{"cmd":"predict","name":"m","points":[]}"#).is_err());
         assert!(parse_request(r#"{"cmd":"predict","name":"m","points":[["a"]]}"#).is_err());
+    }
+
+    #[test]
+    fn prediction_encoder_matches_batch_encoder_bytes() {
+        use crate::model::Prediction;
+        let p = Prediction { labels: vec![0, 7, 3, 3, 12], counts: vec![1, 0, 4], inertia: 0.75 };
+        let mut enc = PredictionEncoder::new("mdl");
+        enc.push_labels(&p.labels[..2]);
+        enc.push_labels(&p.labels[2..]);
+        assert_eq!(enc.finish(&p.counts, p.inertia), encode_prediction("mdl", &p));
+        // non-integral inertia and names needing escaping
+        let p = Prediction { labels: vec![1], counts: vec![1], inertia: 0.1 + 0.2 };
+        let mut enc = PredictionEncoder::new("a\"b");
+        enc.push_labels(&p.labels);
+        assert_eq!(enc.finish(&p.counts, p.inertia), encode_prediction("a\"b", &p));
+        // empty label stream still closes a valid document
+        let enc = PredictionEncoder::new("e");
+        let s = enc.finish(&[0], 0.0);
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("labels").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn stats_carries_per_model_predict_counters() {
+        let s = encode_stats(
+            &[("jobs", 4)],
+            &[("prod".to_string(), 17), ("canary".to_string(), 0)],
+        );
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("jobs").unwrap().as_usize(), Some(4));
+        let models = v.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].get("name").unwrap().as_str(), Some("prod"));
+        assert_eq!(models[0].get("predicts").unwrap().as_usize(), Some(17));
+        let v = Json::parse(&encode_stats(&[], &[])).unwrap();
+        assert_eq!(v.get("models").unwrap().as_arr().unwrap().len(), 0);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! recently *used* model (both `predict` hits and re-`fit`s refresh
 //! recency).
 //!
-//! Follow-up (see ROADMAP): snapshot the registry to disk on shutdown
-//! so a restarted server comes back warm.
+//! The registry also keeps a per-model predict counter (bumped by the
+//! server's chunked predict path, surfaced in the `stats` response)
+//! and can be snapshotted to / restored from a directory so a
+//! restarted server comes back warm (`serve --snapshot-dir`).
 
 use std::sync::{Arc, Mutex};
 
@@ -27,12 +29,21 @@ pub struct ModelInfo {
     pub inertia: f64,
 }
 
+/// One registered model plus its serve-time bookkeeping.
+struct Entry {
+    name: String,
+    model: Arc<FittedModel>,
+    /// Predict requests served against this registration (resets when
+    /// a re-`fit` replaces the model under the same name).
+    predicts: u64,
+}
+
 /// Named fitted models, least-recently-used first.
 pub struct ModelRegistry {
     cap: usize,
     /// Index 0 = LRU, last = MRU.  A Vec is right-sized here: the cap
     /// is small (tens), and every operation already takes the lock.
-    inner: Mutex<Vec<(String, Arc<FittedModel>)>>,
+    inner: Mutex<Vec<Entry>>,
 }
 
 impl ModelRegistry {
@@ -51,10 +62,10 @@ impl ModelRegistry {
     pub fn insert(&self, name: impl Into<String>, model: FittedModel) -> Option<String> {
         let name = name.into();
         let mut inner = self.inner.lock().expect("registry lock");
-        inner.retain(|(n, _)| *n != name);
-        inner.push((name, Arc::new(model)));
+        inner.retain(|e| e.name != name);
+        inner.push(Entry { name, model: Arc::new(model), predicts: 0 });
         if inner.len() > self.cap {
-            return Some(inner.remove(0).0);
+            return Some(inner.remove(0).name);
         }
         None
     }
@@ -62,11 +73,37 @@ impl ModelRegistry {
     /// Fetch a model by name, refreshing its recency.
     pub fn get(&self, name: &str) -> Option<Arc<FittedModel>> {
         let mut inner = self.inner.lock().expect("registry lock");
-        let pos = inner.iter().position(|(n, _)| n == name)?;
+        let pos = inner.iter().position(|e| e.name == name)?;
         let entry = inner.remove(pos);
-        let model = Arc::clone(&entry.1);
+        let model = Arc::clone(&entry.model);
         inner.push(entry);
         Some(model)
+    }
+
+    /// Bump `name`'s predict counter by `n` served requests (the
+    /// server's chunked predict path calls this; counters surface in
+    /// the `stats` response).  No-op if the model was evicted since.
+    pub fn note_predicts(&self, name: &str, n: u64) {
+        let mut inner = self.inner.lock().expect("registry lock");
+        if let Some(e) = inner.iter_mut().find(|e| e.name == name) {
+            e.predicts = e.predicts.saturating_add(n);
+        }
+    }
+
+    /// Per-model predict counters, LRU first (for `stats`).
+    pub fn predict_stats(&self) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().expect("registry lock");
+        inner.iter().map(|e| (e.name.clone(), e.predicts)).collect()
+    }
+
+    /// The registered models themselves, LRU first — the snapshot
+    /// writer walks this.  Does not touch recency.
+    pub fn entries(&self) -> Vec<(String, Arc<FittedModel>)> {
+        let inner = self.inner.lock().expect("registry lock");
+        inner
+            .iter()
+            .map(|e| (e.name.clone(), Arc::clone(&e.model)))
+            .collect()
     }
 
     /// Snapshot of the registered models, LRU first (the order clients
@@ -75,13 +112,13 @@ impl ModelRegistry {
         let inner = self.inner.lock().expect("registry lock");
         inner
             .iter()
-            .map(|(name, m)| ModelInfo {
-                name: name.clone(),
-                algorithm: m.meta().algorithm.clone(),
-                k: m.k(),
-                dims: m.dims(),
-                trained_on: m.meta().trained_on,
-                inertia: m.meta().inertia,
+            .map(|e| ModelInfo {
+                name: e.name.clone(),
+                algorithm: e.model.meta().algorithm.clone(),
+                k: e.model.k(),
+                dims: e.model.dims(),
+                trained_on: e.model.meta().trained_on,
+                inertia: e.model.meta().inertia,
             })
             .collect()
     }
@@ -160,6 +197,34 @@ mod tests {
         assert!(r.get("b").is_none());
         assert!(r.get("a").is_some());
         assert!(r.get("c").is_some());
+    }
+
+    #[test]
+    fn predict_counters_track_and_reset_on_reinsert() {
+        let r = ModelRegistry::new(4);
+        r.insert("a", model(1.0));
+        r.insert("b", model(2.0));
+        r.note_predicts("a", 3);
+        r.note_predicts("a", 2);
+        r.note_predicts("b", 1);
+        r.note_predicts("ghost", 9); // evicted/unknown: silently ignored
+        let stats: Vec<(String, u64)> = r.predict_stats();
+        assert_eq!(stats, vec![("a".to_string(), 5), ("b".to_string(), 1)]);
+        // re-fit under the same name starts a fresh registration
+        r.insert("a", model(3.0));
+        let stats = r.predict_stats();
+        assert_eq!(stats, vec![("b".to_string(), 1), ("a".to_string(), 0)]);
+    }
+
+    #[test]
+    fn entries_expose_models_lru_first() {
+        let r = ModelRegistry::new(4);
+        r.insert("a", model(1.0));
+        r.insert("b", model(2.0));
+        assert!(r.get("a").is_some()); // refresh: b becomes LRU
+        let names: Vec<String> = r.entries().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["b", "a"]);
+        assert_eq!(r.entries()[0].1.centers(), &[2.0, 2.0]);
     }
 
     #[test]

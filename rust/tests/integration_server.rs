@@ -402,3 +402,99 @@ fn server_fit_predict_shutdown_smoke() {
     server.shutdown();
     assert!(t0.elapsed() < std::time::Duration::from_secs(5));
 }
+
+/// Satellite: per-model predict counters surface in `stats`,
+/// incremented by the chunked predict path.
+#[test]
+fn stats_reports_per_model_predict_counters() {
+    let server = start_server(4);
+    let mut client = Client::connect(server.addr()).unwrap();
+    // no models yet: empty counter list
+    let v = Json::parse(&client.call("{\"cmd\":\"stats\"}").unwrap()).unwrap();
+    assert_eq!(v.get("models").unwrap().as_arr().unwrap().len(), 0);
+
+    let (req, pts) = fit_request("ctr", "kmeans", 200, 2);
+    let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    for chunk in pts.chunks(2 * 8).take(3) {
+        let req = format!(
+            "{{\"cmd\":\"predict\",\"name\":\"ctr\",\"points\":{}}}",
+            points_json(chunk, 2)
+        );
+        let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    }
+    // a failed predict (unknown model) must not count anywhere
+    let _ = client.call("{\"cmd\":\"predict\",\"name\":\"ghost\",\"points\":[[1,2]]}");
+
+    let v = Json::parse(&client.call("{\"cmd\":\"stats\"}").unwrap()).unwrap();
+    let models = v.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 1, "{v:?}");
+    assert_eq!(models[0].get("name").unwrap().as_str(), Some("ctr"));
+    assert_eq!(models[0].get("predicts").unwrap().as_usize(), Some(3));
+}
+
+/// Satellite: with `--snapshot-dir`, a shutdown writes the registered
+/// artifacts and the next boot reloads them — the restarted server
+/// answers predicts without any refit, bit-identically.
+#[test]
+fn registry_snapshot_survives_restart() {
+    let dir = std::env::temp_dir().join(format!("parsample_snap_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mk_cfg = || {
+        let mut cfg = ServerConfig::from_scheduler(SchedulerConfig {
+            queue_depth: 4,
+            ..Default::default()
+        });
+        cfg.snapshot_dir = Some(dir.clone());
+        cfg
+    };
+
+    // first life: fit a model over the wire, shut down
+    let mut server = Server::start_with("127.0.0.1:0", mk_cfg()).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let (req, pts) = fit_request("warm", "kmeans", 300, 3);
+    let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    let req = format!(
+        "{{\"cmd\":\"predict\",\"name\":\"warm\",\"points\":{}}}",
+        points_json(&pts, 2)
+    );
+    let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+    let labels_before: Vec<usize> = v
+        .get("labels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|l| l.as_usize().unwrap())
+        .collect();
+    drop(client);
+    server.shutdown();
+    assert!(dir.join("warm.model.json").exists(), "snapshot file written");
+
+    // second life: no preload, no fit — the snapshot warms the boot
+    let mut server = Server::start_with("127.0.0.1:0", mk_cfg()).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let v = Json::parse(&client.call("{\"cmd\":\"models\"}").unwrap()).unwrap();
+    assert_eq!(v.get("count").unwrap().as_usize(), Some(1), "{v:?}");
+    let req = format!(
+        "{{\"cmd\":\"predict\",\"name\":\"warm\",\"points\":{}}}",
+        points_json(&pts, 2)
+    );
+    let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    let labels_after: Vec<usize> = v
+        .get("labels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|l| l.as_usize().unwrap())
+        .collect();
+    assert_eq!(labels_after, labels_before, "warm model predicts bit-identically");
+    drop(client);
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,295 @@
+//! Streaming-vs-resident bit-parity suite — the acceptance contract of
+//! the `DataSource` ingestion redesign.
+//!
+//! For every `DataSource` kind backed by identical bytes,
+//! `fit_source`/`predict_source` results (centers, labels, inertia,
+//! iteration counts, scaler params) must be **bit-identical** to the
+//! resident `fit`/`predict` at every tested chunk size (including
+//! chunk = 1 row and chunks that do not divide M) and at every
+//! `EngineOpts` setting (worker count × bounds × kernel).
+
+use parsample::cluster::{BoundsMode, EngineOpts, KernelMode};
+use parsample::data::loader::{save_binary, save_csv};
+use parsample::data::source::{
+    BinarySource, BlobSource, ChunkedOnly, CsvSource, DataSource, DatasetSource, SliceSource,
+};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::data::Dataset;
+use parsample::model::{FittedModel, ModelSpec};
+use parsample::partition::Scheme;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "parsample_sparity_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn blobs(m: usize, k: usize, dims: usize, seed: u64) -> Dataset {
+    make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims,
+        std: 0.2,
+        extent: 10.0,
+        seed,
+    })
+    .unwrap()
+}
+
+/// Every source kind backed by the same bytes as `data` (written once
+/// into `dir`), at the given chunk size.
+fn all_sources(
+    data: &Dataset,
+    dir: &std::path::Path,
+    chunk: usize,
+) -> Vec<(String, Box<dyn DataSource>)> {
+    let plain = Dataset::new(data.as_slice().to_vec(), data.dims()).unwrap();
+    let csv = dir.join(format!("d{}.csv", data.dims()));
+    let bin = dir.join(format!("d{}.bin", data.dims()));
+    save_csv(&plain, &csv).unwrap();
+    save_binary(&plain, &bin).unwrap();
+    let mem = DatasetSource::new(plain.clone()).with_chunk_rows(chunk);
+    vec![
+        ("dataset".into(), Box::new(mem) as Box<dyn DataSource>),
+        (
+            "chunked-mem".into(),
+            Box::new(ChunkedOnly(DatasetSource::new(plain).with_chunk_rows(chunk))),
+        ),
+        (
+            "csv".into(),
+            Box::new(CsvSource::open(&csv, None).unwrap().with_chunk_rows(chunk)),
+        ),
+        (
+            "bin".into(),
+            Box::new(BinarySource::open(&bin).unwrap().with_chunk_rows(chunk)),
+        ),
+    ]
+}
+
+/// Bit-level artifact equality.
+fn assert_models_eq(a: &FittedModel, b: &FittedModel, ctx: &str) {
+    assert_eq!(a.meta().algorithm, b.meta().algorithm, "{ctx}");
+    assert_eq!(a.meta().k, b.meta().k, "{ctx}");
+    assert_eq!(a.meta().dims, b.meta().dims, "{ctx}");
+    assert_eq!(a.meta().trained_on, b.meta().trained_on, "{ctx}");
+    assert_eq!(a.meta().iterations, b.meta().iterations, "{ctx}");
+    assert_eq!(
+        a.meta().inertia.to_bits(),
+        b.meta().inertia.to_bits(),
+        "{ctx}: inertia {} vs {}",
+        a.meta().inertia,
+        b.meta().inertia
+    );
+    assert_eq!(
+        a.centers().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        b.centers().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "{ctx}: centers"
+    );
+    match (a.scaler(), b.scaler()) {
+        (None, None) => {}
+        (Some(sa), Some(sb)) => {
+            assert_eq!(sa.params().0, sb.params().0, "{ctx}: scaler mins");
+            assert_eq!(sa.params().1, sb.params().1, "{ctx}: scaler ranges");
+        }
+        _ => panic!("{ctx}: scaler presence differs"),
+    }
+}
+
+fn spec_for(algo: &str, k: usize) -> ModelSpec {
+    let mut spec = ModelSpec::new(algo, k);
+    spec.num_groups = Some(5);
+    spec.compression = Some(4.0);
+    spec
+}
+
+/// Acceptance: every algorithm's `fit_source` — streaming consumers
+/// (minibatch, pipeline) and spill fallbacks (kmeans, bisecting) —
+/// matches the resident `fit` bit for bit, for every source kind, at
+/// chunk sizes 1, a non-divisor of M, and larger than M.
+#[test]
+fn fit_source_matches_fit_for_every_kind_and_chunk() {
+    let dir = tmpdir("fit");
+    let data = blobs(600, 4, 2, 1);
+    for algo in ["kmeans", "minibatch", "bisecting", "pipeline"] {
+        let spec = spec_for(algo, 4);
+        let resident = spec.fit(&data).unwrap();
+        for chunk in [1usize, 193, 4096] {
+            for (kind, mut src) in all_sources(&data, &dir, chunk) {
+                let streamed = spec.fit_source(&mut *src).unwrap();
+                assert_models_eq(&streamed, &resident, &format!("{algo}/{kind}/chunk={chunk}"));
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance: the bit-parity holds at every engine setting — worker
+/// count × bounds × kernel — for both true streaming consumers.
+#[test]
+fn fit_source_parity_across_engine_opts_grid() {
+    let dir = tmpdir("grid");
+    let data = blobs(500, 3, 3, 2);
+    for algo in ["minibatch", "pipeline"] {
+        for workers in [1usize, 4] {
+            for bounds in [BoundsMode::Off, BoundsMode::Hamerly] {
+                for kernel in [KernelMode::Scalar, KernelMode::Wide] {
+                    let mut spec = spec_for(algo, 3);
+                    spec.engine = EngineOpts { workers, bounds, kernel };
+                    let resident = spec.fit(&data).unwrap();
+                    for (kind, mut src) in all_sources(&data, &dir, 97) {
+                        let streamed = spec.fit_source(&mut *src).unwrap();
+                        assert_models_eq(
+                            &streamed,
+                            &resident,
+                            &format!("{algo}/{kind}/w{workers}/{bounds:?}/{kernel:?}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance: pipeline `fit_source` parity per scheme — unequal and
+/// random stream through the scatter, equal takes the documented
+/// spill fallback; all three must equal the resident fit.
+#[test]
+fn pipeline_fit_source_parity_per_scheme() {
+    let dir = tmpdir("scheme");
+    let data = blobs(800, 4, 2, 3);
+    for scheme in [Scheme::Unequal, Scheme::Random, Scheme::Equal] {
+        let mut spec = spec_for("pipeline", 4);
+        spec.scheme = Some(scheme);
+        spec.seed = 7;
+        let resident = spec.fit(&data).unwrap();
+        for chunk in [31usize, 800] {
+            for (kind, mut src) in all_sources(&data, &dir, chunk) {
+                let streamed = spec.fit_source(&mut *src).unwrap();
+                assert_models_eq(
+                    &streamed,
+                    &resident,
+                    &format!("{scheme:?}/{kind}/chunk={chunk}"),
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance: `predict_source` labels/counts/inertia are bit-equal to
+/// the resident predict for every source kind, chunk size, and engine
+/// setting.  M = 9000 crosses the engine's 4096-point reduction-block
+/// boundary, so the f64 inertia fold is genuinely multi-block.
+#[test]
+fn predict_source_matches_predict_for_every_kind() {
+    let dir = tmpdir("pred");
+    let data = blobs(9000, 6, 2, 4);
+    let model = spec_for("kmeans", 6).fit(&data).unwrap();
+    let resident = model.predict_dataset(&data).unwrap();
+    for chunk in [1usize, 997, 8192, 20000] {
+        for (kind, mut src) in all_sources(&data, &dir, chunk) {
+            let mut labels: Vec<u32> = Vec::new();
+            let p = model
+                .predict_source(&mut *src, |ls| {
+                    labels.extend_from_slice(ls);
+                    Ok(())
+                })
+                .unwrap();
+            let ctx = format!("{kind}/chunk={chunk}");
+            assert_eq!(p.rows, 9000, "{ctx}");
+            assert_eq!(labels, resident.labels, "{ctx}");
+            assert_eq!(p.counts, resident.counts, "{ctx}");
+            assert_eq!(p.inertia.to_bits(), resident.inertia.to_bits(), "{ctx}");
+        }
+    }
+    // engine-opts grid on one streamed kind
+    for workers in [1usize, 4] {
+        for kernel in [KernelMode::Scalar, KernelMode::Wide] {
+            let opts = EngineOpts { workers, bounds: BoundsMode::Hamerly, kernel };
+            let resident = model
+                .predict_batch_with(data.as_slice(), opts)
+                .unwrap();
+            let csv = dir.join("d2.csv");
+            let mut src = CsvSource::open(&csv, None).unwrap().with_chunk_rows(611);
+            let mut labels: Vec<u32> = Vec::new();
+            let p = model
+                .predict_source_with(&mut src, opts, |ls| {
+                    labels.extend_from_slice(ls);
+                    Ok(())
+                })
+                .unwrap();
+            let ctx = format!("csv/w{workers}/{kernel:?}");
+            assert_eq!(labels, resident.labels, "{ctx}");
+            assert_eq!(p.counts, resident.counts, "{ctx}");
+            assert_eq!(p.inertia.to_bits(), resident.inertia.to_bits(), "{ctx}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The synthetic generator as a source: fitting a stream of blobs is
+/// bit-identical to fitting the resident `make_blobs` dataset — no
+/// giant file (or buffer) needed for out-of-core runs.
+#[test]
+fn blob_source_fit_matches_resident_make_blobs() {
+    let spec = BlobSpec {
+        num_points: 1500,
+        num_clusters: 5,
+        dims: 2,
+        std: 0.1,
+        extent: 8.0,
+        seed: 12,
+    };
+    let resident_data = make_blobs(&spec).unwrap();
+    let mspec = spec_for("minibatch", 5);
+    let resident = mspec.fit(&resident_data).unwrap();
+    for chunk in [64usize, 1500] {
+        let mut src = BlobSource::new(&spec).unwrap().with_chunk_rows(chunk);
+        let streamed = mspec.fit_source(&mut src).unwrap();
+        assert_models_eq(&streamed, &resident, &format!("blob/chunk={chunk}"));
+    }
+}
+
+/// Mid-stream CSV corruption fails a streaming fit with the offending
+/// line number — not a silent truncation.
+#[test]
+fn corrupt_csv_fails_fit_with_line_number() {
+    let dir = tmpdir("corrupt");
+    let path = dir.join("bad.csv");
+    let mut text = String::new();
+    for i in 0..50 {
+        text.push_str(&format!("{}.5,{}\n", i, i * 2));
+    }
+    text.push_str("oops,not-a-number\n");
+    text.push_str("9,9\n");
+    std::fs::write(&path, &text).unwrap();
+    let mut src = CsvSource::open(&path, None).unwrap().with_chunk_rows(7);
+    let err = spec_for("minibatch", 3)
+        .fit_source(&mut src)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("line 51"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Sanity: a `SliceSource` fit (the zero-copy resident fast path) and
+/// a fully chunked fit of the same bytes agree — the two routes
+/// through `fit_source` are one algorithm.
+#[test]
+fn resident_fast_path_equals_chunked_path() {
+    let data = blobs(400, 3, 2, 9);
+    let spec = spec_for("minibatch", 3);
+    let via_slice = {
+        let mut src = SliceSource::of(&data);
+        spec.fit_source(&mut src).unwrap()
+    };
+    let via_chunks = {
+        let mut src = ChunkedOnly(DatasetSource::new(data.clone()).with_chunk_rows(11));
+        spec.fit_source(&mut src).unwrap()
+    };
+    assert_models_eq(&via_chunks, &via_slice, "slice vs chunked");
+}
