@@ -11,7 +11,9 @@
 //! against traditional k-means, then repeats the whole lifecycle
 //! **out-of-core**: fit and predict over a streaming `DataSource`
 //! without ever materializing the dataset, and check the results are
-//! bit-identical to the resident run.
+//! bit-identical to the resident run.  Finishes **distributed**: two
+//! worker servers, a fit joined to the fleet, and the bit-identity
+//! check again — fault tolerance costs wall time, never bits.
 
 use parsample::data::builtin;
 use parsample::data::source::{BlobSource, CsvSource};
@@ -130,5 +132,46 @@ fn main() -> parsample::Result<()> {
     );
     println!("stream   : csv / synthetic / resident fits are bit-identical");
     std::fs::remove_file(&csv).ok();
+
+    // ---- distributed: the same fit fanned out across worker processes --
+    //
+    // 12. start two workers (in-process here for a self-contained
+    //     example; operationally these are `parsample serve` on other
+    //     machines) and join the fit to them — each partition group
+    //     ships to the fleet as a `fit_group` wire call, with retry,
+    //     backoff, quarantine, and local fallback handling any worker
+    //     that dies mid-fit (CLI: `fit --join HOST:PORT,...`)
+    use parsample::coordinator::{RemoteConfig, SchedulerConfig};
+    use parsample::server::Server;
+    let mut w1 = Server::start("127.0.0.1:0", SchedulerConfig::default())?;
+    let mut w2 = Server::start("127.0.0.1:0", SchedulerConfig::default())?;
+    let dist_cfg = PipelineConfig::builder()
+        .scheme(Scheme::Unequal)
+        .num_groups(6)
+        .compression(6.0)
+        .final_k(3)
+        .weighted_global(true)
+        .remote(RemoteConfig::with_workers(vec![
+            w1.addr().to_string(),
+            w2.addr().to_string(),
+        ]))
+        .build()?;
+    let dist_model = SubclusterPipeline::new(dist_cfg).fit(&data)?;
+    println!(
+        "fleet    : fit across 2 workers -> k={} (inertia {:.4})",
+        dist_model.k(),
+        dist_model.meta().inertia
+    );
+
+    // 13. the determinism contract: the distributed fit is bit-identical
+    //     to the single-node fit from step 3 — same centers, same bits
+    assert_eq!(dist_model.centers(), model.centers());
+    assert_eq!(
+        dist_model.meta().inertia.to_bits(),
+        model.meta().inertia.to_bits()
+    );
+    println!("fleet    : distributed and single-node fits are bit-identical");
+    w1.shutdown();
+    w2.shutdown();
     Ok(())
 }

@@ -1,0 +1,192 @@
+//! Bench: the distributed sharded fit vs single-node, and under fire.
+//!
+//! Four scenarios over the same dataset:
+//!
+//! * **local**    — the in-process thread-pool local stage (baseline);
+//! * **1 worker** — every group round-trips through one remote
+//!   `serve` process (pure wire overhead);
+//! * **2 workers** — the paper's fan-out across two processes;
+//! * **2 workers, one killed at 50%** — a worker is shut down halfway
+//!   through the expected fit: the pool retries, quarantines, and
+//!   finishes on the survivor (fault-tolerance overhead).
+//!
+//! Every distributed run is asserted **bit-identical** to the local
+//! fit before its time is recorded — wall time is the only thing
+//! allowed to change.  Results go to `BENCH_dist.json`.
+//!
+//! Profiles (points / clusters / dims):
+//!   PARSAMPLE_BENCH_SMOKE=1  →   6k / 8 / 8   (CI rot-guard)
+//!   default                  →  60k / 16 / 8
+//!   PARSAMPLE_BENCH_FULL=1   → 150k / 32 / 8
+
+use std::time::{Duration, Instant};
+
+use parsample::coordinator::{RemoteConfig, SchedulerConfig};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::data::Dataset;
+use parsample::pipeline::{PipelineConfig, PipelineResult, SubclusterPipeline};
+use parsample::server::Server;
+use parsample::util::benchkit::{black_box, print_table};
+use parsample::util::json::Json;
+
+fn pipeline_cfg(k: usize, remote: Option<RemoteConfig>) -> PipelineConfig {
+    let mut b = PipelineConfig::builder()
+        .final_k(k)
+        .num_groups(8)
+        .compression(5.0)
+        .seed(0);
+    if let Some(r) = remote {
+        b = b.remote(r);
+    }
+    b.build().unwrap()
+}
+
+fn remote_cfg(workers: Vec<String>) -> RemoteConfig {
+    RemoteConfig {
+        workers,
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(30),
+        max_attempts: 3,
+        backoff_base: Duration::from_millis(10),
+        backoff_cap: Duration::from_millis(100),
+        quarantine_after: 2,
+        probe_interval: Duration::from_millis(100),
+        ..Default::default()
+    }
+}
+
+fn start_worker() -> Server {
+    Server::start("127.0.0.1:0", SchedulerConfig::default()).expect("worker start")
+}
+
+fn assert_parity(local: &PipelineResult, dist: &PipelineResult, what: &str) {
+    assert_eq!(local.labels, dist.labels, "{what}: labels diverge");
+    assert_eq!(local.centers, dist.centers, "{what}: centers diverge");
+    assert_eq!(
+        local.inertia.to_bits(),
+        dist.inertia.to_bits(),
+        "{what}: inertia diverges"
+    );
+}
+
+/// Time one distributed fit against `workers` fresh servers, parity-
+/// gated; `kill_after` shuts one worker down mid-fit.
+fn timed_fit(
+    data: &Dataset,
+    k: usize,
+    reference: &PipelineResult,
+    workers: usize,
+    kill_after: Option<Duration>,
+    what: &str,
+) -> f64 {
+    let mut fleet: Vec<Server> = (0..workers).map(|_| start_worker()).collect();
+    let addrs: Vec<String> = fleet.iter().map(|s| format!("{}", s.addr())).collect();
+    let pipeline = SubclusterPipeline::new(pipeline_cfg(k, Some(remote_cfg(addrs))));
+    let killer = kill_after.map(|after| {
+        let mut victim = fleet.pop().expect("fleet has a victim");
+        std::thread::spawn(move || {
+            std::thread::sleep(after);
+            victim.shutdown();
+        })
+    });
+    let t0 = Instant::now();
+    let r = pipeline.run(data).expect("distributed fit");
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_parity(reference, &r, what);
+    black_box(r);
+    if let Some(h) = killer {
+        h.join().expect("killer thread");
+    }
+    for mut s in fleet {
+        s.shutdown();
+    }
+    ms
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+fn main() {
+    let smoke = std::env::var("PARSAMPLE_BENCH_SMOKE").is_ok();
+    let full = std::env::var("PARSAMPLE_BENCH_FULL").is_ok();
+    let (m, k) = if smoke {
+        (6_000usize, 8usize)
+    } else if full {
+        (150_000, 32)
+    } else {
+        (60_000, 16)
+    };
+    let iters = if smoke { 2 } else { 4 };
+
+    let data = make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims: 8,
+        std: 0.05,
+        extent: 10.0,
+        seed: 42,
+    })
+    .expect("blob generation");
+
+    // single-node reference: the bits every scenario must reproduce
+    let local_pipeline = SubclusterPipeline::new(pipeline_cfg(k, None));
+    let reference = local_pipeline.run(&data).expect("local fit");
+    let t_local: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            black_box(local_pipeline.run(&data).expect("local fit"));
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+
+    let t_w1: Vec<f64> = (0..iters)
+        .map(|_| timed_fit(&data, k, &reference, 1, None, "1 worker"))
+        .collect();
+    let t_w2: Vec<f64> = (0..iters)
+        .map(|_| timed_fit(&data, k, &reference, 2, None, "2 workers"))
+        .collect();
+    // kill one of two workers halfway through the healthy 2-worker time
+    let kill_at = Duration::from_secs_f64(mean(&t_w2) / 2.0 / 1e3);
+    let t_kill: Vec<f64> = (0..iters)
+        .map(|_| timed_fit(&data, k, &reference, 2, Some(kill_at), "2 workers, one killed"))
+        .collect();
+
+    let rows: Vec<Vec<String>> = [
+        ("local", &t_local),
+        ("1 worker", &t_w1),
+        ("2 workers", &t_w2),
+        ("2 workers, one killed @50%", &t_kill),
+    ]
+    .iter()
+    .map(|(name, ts)| {
+        vec![
+            name.to_string(),
+            format!("{:.1}", mean(ts)),
+            format!("{:.2}x", mean(ts) / mean(&t_local)),
+        ]
+    })
+    .collect();
+    print_table(
+        &format!("distributed fit (m={m}, k={k}, d=8, groups=8, bit-identical everywhere)"),
+        &["scenario", "mean ms", "vs local"],
+        &rows,
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("distributed_fit")),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("d", Json::num(8.0)),
+        ("groups", Json::num(8.0)),
+        ("local_mean_ms", Json::num(mean(&t_local))),
+        ("w1_mean_ms", Json::num(mean(&t_w1))),
+        ("w2_mean_ms", Json::num(mean(&t_w2))),
+        ("w2_kill_mean_ms", Json::num(mean(&t_kill))),
+    ]);
+    let out = "BENCH_dist.json";
+    match std::fs::write(out, json.to_string()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

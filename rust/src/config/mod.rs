@@ -9,11 +9,13 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::cluster::BoundsMode;
+use crate::coordinator::remote::RemoteConfig;
 use crate::error::{Error, Result};
 use crate::kernel::KernelMode;
 use crate::partition::Scheme;
 use crate::pipeline::PipelineConfig;
 use crate::runtime::BackendKind;
+use crate::telemetry::EventLog;
 
 /// One parsed `key = value`.
 #[derive(Debug, Clone, PartialEq)]
@@ -230,11 +232,70 @@ impl AppConfig {
                 self.snapshot_dir =
                     Some(PathBuf::from(value.as_str().ok_or_else(|| bad("string"))?));
             }
+            "cluster.workers" => {
+                // comma-separated host:port list; empty disables the
+                // remote path entirely
+                let list = value.as_str().ok_or_else(|| bad("string"))?;
+                let workers: Vec<String> = list
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                if workers.is_empty() {
+                    self.pipeline.remote = None;
+                } else {
+                    self.remote_mut().workers = workers;
+                }
+            }
+            "cluster.connect_timeout_ms" => {
+                let ms = value.as_usize().ok_or_else(|| bad("usize"))?;
+                self.remote_mut().connect_timeout = std::time::Duration::from_millis(ms as u64);
+            }
+            "cluster.read_timeout_ms" => {
+                let ms = value.as_usize().ok_or_else(|| bad("usize"))?;
+                self.remote_mut().read_timeout = std::time::Duration::from_millis(ms as u64);
+            }
+            "cluster.write_timeout_ms" => {
+                let ms = value.as_usize().ok_or_else(|| bad("usize"))?;
+                self.remote_mut().write_timeout = std::time::Duration::from_millis(ms as u64);
+            }
+            "cluster.max_attempts" => {
+                self.remote_mut().max_attempts =
+                    value.as_usize().ok_or_else(|| bad("usize"))?.max(1);
+            }
+            "cluster.backoff_base_ms" => {
+                let ms = value.as_usize().ok_or_else(|| bad("usize"))?;
+                self.remote_mut().backoff_base = std::time::Duration::from_millis(ms as u64);
+            }
+            "cluster.backoff_cap_ms" => {
+                let ms = value.as_usize().ok_or_else(|| bad("usize"))?;
+                self.remote_mut().backoff_cap = std::time::Duration::from_millis(ms as u64);
+            }
+            "cluster.quarantine_after" => {
+                self.remote_mut().quarantine_after =
+                    value.as_usize().ok_or_else(|| bad("usize"))?.max(1);
+            }
+            "cluster.probe_interval_ms" => {
+                let ms = value.as_usize().ok_or_else(|| bad("usize"))?;
+                self.remote_mut().probe_interval = std::time::Duration::from_millis(ms as u64);
+            }
+            "cluster.events" => {
+                let on = value.as_bool().ok_or_else(|| bad("bool"))?;
+                self.remote_mut().events =
+                    if on { EventLog::stderr() } else { EventLog::off() };
+            }
             other => {
                 return Err(Error::Config(format!("unknown config key '{other}'")));
             }
         }
         Ok(())
+    }
+
+    /// Fault-tolerance knobs may arrive before (or without)
+    /// `cluster.workers`; keep them in a default-shaped RemoteConfig
+    /// until a worker list activates the remote path.
+    fn remote_mut(&mut self) -> &mut RemoteConfig {
+        self.pipeline.remote.get_or_insert_with(RemoteConfig::default)
     }
 
     /// Overlay `PARSAMPLE_*` environment variables
@@ -335,6 +396,47 @@ mod tests {
         assert!(AppConfig::from_table(&t).is_err());
         let t = parse_toml_lite("[pipeline]\nkernel = \"gpu\"\n").unwrap();
         assert!(AppConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn builds_cluster_config() {
+        let t = parse_toml_lite(
+            r#"
+            [cluster]
+            workers = "10.0.0.1:7077, 10.0.0.2:7077"
+            connect_timeout_ms = 250
+            read_timeout_ms = 5000
+            max_attempts = 2
+            quarantine_after = 1
+            backoff_base_ms = 10
+            backoff_cap_ms = 100
+            probe_interval_ms = 50
+            events = false
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_table(&t).unwrap();
+        let r = cfg.pipeline.remote.as_ref().expect("remote configured");
+        assert_eq!(r.workers, vec!["10.0.0.1:7077", "10.0.0.2:7077"]);
+        assert_eq!(r.connect_timeout, std::time::Duration::from_millis(250));
+        assert_eq!(r.read_timeout, std::time::Duration::from_millis(5000));
+        assert_eq!(r.max_attempts, 2);
+        assert_eq!(r.quarantine_after, 1);
+        assert_eq!(r.backoff_base, std::time::Duration::from_millis(10));
+        assert_eq!(r.backoff_cap, std::time::Duration::from_millis(100));
+        assert_eq!(r.probe_interval, std::time::Duration::from_millis(50));
+        assert!(!r.events.enabled());
+    }
+
+    #[test]
+    fn empty_worker_list_disables_remote() {
+        let t = parse_toml_lite("[cluster]\nworkers = \"\"\n").unwrap();
+        let cfg = AppConfig::from_table(&t).unwrap();
+        assert!(cfg.pipeline.remote.is_none());
+        // knobs without a worker list keep the remote path inert
+        let t = parse_toml_lite("[cluster]\nmax_attempts = 3\n").unwrap();
+        let cfg = AppConfig::from_table(&t).unwrap();
+        assert!(cfg.pipeline.remote.as_ref().unwrap().workers.is_empty());
     }
 
     #[test]

@@ -376,7 +376,12 @@ pub fn local_k(n: usize, compression: f32) -> usize {
 /// FirstK but immune to sorted group order (the equal partitioner
 /// emits distance-sorted shells; seeding the first k rows would pile
 /// every center at the inner edge).
-fn strided_init(points: &[f32], n: usize, k: usize, d: usize) -> Vec<f32> {
+///
+/// Public because the server's `fit_group` handler must reproduce the
+/// coordinator's init bit-for-bit from the shipped rows alone — the
+/// distributed determinism contract hangs on both sides computing
+/// this identical seeding.
+pub fn strided_init(points: &[f32], n: usize, k: usize, d: usize) -> Vec<f32> {
     let mut init = Vec::with_capacity(k * d);
     for c in 0..k {
         let row = c * n / k;

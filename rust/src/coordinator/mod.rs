@@ -8,11 +8,16 @@
 //!   backend (PJRT handles are not `Send`) and serves clustering jobs
 //!   from a bounded queue; workers for the native path.
 //! * [`job`] — job spec/result types shared with the server.
+//! * [`remote`] — fault-tolerant remote worker pool: dispatches groups
+//!   to `serve` processes over the wire with retry/requeue, timeouts,
+//!   backoff, quarantine, and graceful local fallback.
 
 pub mod batcher;
 pub mod job;
+pub mod remote;
 pub mod scheduler;
 
 pub use batcher::{Batcher, Dispatch, GroupRows, GroupSlot, LocalResult};
 pub use job::{JobRequest, JobResult, JobStatus};
+pub use remote::RemoteConfig;
 pub use scheduler::{Scheduler, SchedulerConfig};

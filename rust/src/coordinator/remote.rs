@@ -1,0 +1,511 @@
+//! Remote worker pool: the paper's fan-out across machines, built
+//! fault-tolerant from day one.
+//!
+//! The subcluster scheme is embarrassingly parallel — a partition
+//! group can be clustered anywhere — so the local stage's exact-shape
+//! dispatches ship to remote `serve` processes as `fit_group` wire
+//! requests (one group's rows out, local centers + member counts +
+//! inertia back).  The moment work crosses a socket, worker loss,
+//! hangs, and partial responses are the common case, so the pool
+//! wraps every dispatch in a retry state machine:
+//!
+//! * each in-flight call carries connect/read/write deadlines;
+//! * a failed or timed-out group requeues onto surviving workers with
+//!   capped exponential backoff + deterministic jitter;
+//! * a worker with [`RemoteConfig::quarantine_after`] *consecutive*
+//!   failures is quarantined and ping-probed for re-admission;
+//! * total fleet loss degrades gracefully: unresolved groups are
+//!   computed on the local [`crate::runtime::NativeBackend`] — a fit
+//!   never fails just because the fleet did.
+//!
+//! **Determinism contract.**  Group→worker assignment is fixed by
+//! dispatch index (`idx % workers`), and a requeue ships the *same*
+//! dispatch — the group's strided init and iteration count live in
+//! the [`Dispatch`] and never change across attempts.  The worker
+//! recomputes the identical init from the shipped rows
+//! ([`crate::coordinator::batcher::strided_init`]), the native
+//! backend's per-slot compute is worker-count invariant, and the
+//! f32 → JSON → f32 round trip is bit-exact, so the merged result is
+//! bit-identical to a single-node run *no matter which workers
+//! answered, how many retries happened, or whether everything fell
+//! back to local compute*.  Results merge in dispatch-index order via
+//! [`Batcher::unpack`], exactly like the thread-pool path.
+//!
+//! The whole path is instrumented with reason-tagged JSONL events
+//! ([`crate::telemetry::events`]): `dispatch`, `retry` (attempt count
+//! + backoff), `quarantine`, `readmit`, `fallback`, `merge` — so an
+//! operator can watch a degraded fit recover.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, Dispatch, LocalResult};
+use crate::error::{Error, Result};
+use crate::runtime::{Backend, DeviceOutput, NativeBackend};
+use crate::server::protocol::{encode_fit_group_request, parse_fit_group_result};
+use crate::telemetry::EventLog;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Worker-pool configuration (the `cluster.*` config keys / `--join`
+/// CLI flag).  An empty `workers` list means "local only" — the
+/// pipeline never consults the rest.
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    /// Worker addresses (`host:port`), each a plain `parsample serve`
+    /// process.
+    pub workers: Vec<String>,
+    /// TCP connect deadline per attempt.
+    pub connect_timeout: Duration,
+    /// Reply deadline per attempt: a worker that accepts the job but
+    /// never answers fails the attempt when this fires.
+    pub read_timeout: Duration,
+    /// Request write deadline per attempt.
+    pub write_timeout: Duration,
+    /// Attempts per group before it resolves to local fallback
+    /// (values below 1 behave as 1).
+    pub max_attempts: usize,
+    /// First retry backoff; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Consecutive failures after which a worker is quarantined
+    /// (values below 1 behave as 1).
+    pub quarantine_after: usize,
+    /// How often a quarantined worker is ping-probed for re-admission.
+    pub probe_interval: Duration,
+    /// Event sink ([`EventLog::off`] by default; the CLI wires
+    /// [`EventLog::stderr`], tests use [`EventLog::capture`]).
+    pub events: Arc<EventLog>,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            workers: Vec::new(),
+            connect_timeout: Duration::from_secs(1),
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+            max_attempts: 4,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            quarantine_after: 3,
+            probe_interval: Duration::from_millis(500),
+            events: EventLog::off(),
+        }
+    }
+}
+
+impl RemoteConfig {
+    /// Config for a worker address list with default fault tolerance.
+    pub fn with_workers(workers: Vec<String>) -> RemoteConfig {
+        RemoteConfig { workers, ..Default::default() }
+    }
+}
+
+/// One queued unit of work: a dispatch index plus its retry state.
+struct Job {
+    idx: usize,
+    /// Completed attempts so far.
+    attempt: usize,
+    /// Earliest claim time (backoff gate).
+    not_before: Instant,
+    /// `Some(w)` = only worker `w` may claim (the fixed group→worker
+    /// assignment); `None` = any active worker (retries).
+    pinned: Option<usize>,
+}
+
+/// Shared pool state behind one mutex; a condvar signals queue and
+/// resolution changes.
+struct PoolState {
+    queue: VecDeque<Job>,
+    /// Remote result per dispatch (`None` after the pool = local
+    /// fallback).
+    results: Vec<Option<DeviceOutput>>,
+    /// Dispatches not yet resolved (result stored or fallback chosen).
+    unresolved: usize,
+    /// Per-worker not-quarantined flag.
+    active: Vec<bool>,
+}
+
+fn lock<'a>(state: &'a Mutex<PoolState>) -> MutexGuard<'a, PoolState> {
+    state.lock().expect("remote pool lock poisoned")
+}
+
+/// Run the local stage across the remote fleet, computing any group
+/// the fleet could not resolve on the local backend, and unpack
+/// everything in dispatch-index order — the entry point the pipeline's
+/// local-stage seam calls.
+pub fn remote_local_stage(
+    cfg: &RemoteConfig,
+    nb: &NativeBackend,
+    dispatches: &[Dispatch],
+    dims: usize,
+) -> Result<Vec<LocalResult>> {
+    let mut outputs = run_pool(cfg, dispatches);
+    let mut remote_n = 0usize;
+    let mut fallback_n = 0usize;
+    let mut all = Vec::new();
+    for (i, d) in dispatches.iter().enumerate() {
+        let out = match outputs[i].take() {
+            Some(out) => {
+                remote_n += 1;
+                out
+            }
+            None => {
+                fallback_n += 1;
+                nb.run_batch(&d.batch)?
+            }
+        };
+        all.extend(Batcher::unpack(d, &out, dims));
+    }
+    cfg.events.emit(
+        "merge",
+        vec![
+            ("fallback", Json::num(fallback_n as f64)),
+            ("groups", Json::num(dispatches.len() as f64)),
+            ("remote", Json::num(remote_n as f64)),
+        ],
+    );
+    Ok(all)
+}
+
+/// Drive the worker pool to resolution: every dispatch either has a
+/// remote [`DeviceOutput`] or is marked (`None`) for local fallback.
+fn run_pool(cfg: &RemoteConfig, dispatches: &[Dispatch]) -> Vec<Option<DeviceOutput>> {
+    let w = cfg.workers.len();
+    if w == 0 || dispatches.is_empty() {
+        return (0..dispatches.len()).map(|_| None).collect();
+    }
+    let now = Instant::now();
+    let state = Mutex::new(PoolState {
+        queue: (0..dispatches.len())
+            .map(|i| Job { idx: i, attempt: 0, not_before: now, pinned: Some(i % w) })
+            .collect(),
+        results: (0..dispatches.len()).map(|_| None).collect(),
+        unresolved: dispatches.len(),
+        active: vec![true; w],
+    });
+    let cv = Condvar::new();
+    std::thread::scope(|s| {
+        for (wi, addr) in cfg.workers.iter().enumerate() {
+            let state = &state;
+            let cv = &cv;
+            s.spawn(move || worker_loop(cfg, wi, addr, dispatches, state, cv));
+        }
+    });
+    state.into_inner().expect("remote pool lock poisoned").results
+}
+
+/// One worker's claim/dispatch/retry loop.  Exits when every dispatch
+/// is resolved.
+fn worker_loop(
+    cfg: &RemoteConfig,
+    me: usize,
+    addr: &str,
+    dispatches: &[Dispatch],
+    state: &Mutex<PoolState>,
+    cv: &Condvar,
+) {
+    let mut consecutive = 0usize;
+    'pool: loop {
+        // claim the first backoff-expired job this worker may take
+        let job = {
+            let mut st = lock(state);
+            loop {
+                if st.unresolved == 0 {
+                    return;
+                }
+                let now = Instant::now();
+                let pos = st
+                    .queue
+                    .iter()
+                    .position(|j| j.not_before <= now && j.pinned.map_or(true, |p| p == me));
+                match pos {
+                    Some(pos) => break st.queue.remove(pos).expect("position exists"),
+                    None => {
+                        // park until a notify or the nearest backoff gate
+                        let (next, _) = cv
+                            .wait_timeout(st, Duration::from_millis(20))
+                            .expect("remote pool lock poisoned");
+                        st = next;
+                    }
+                }
+            }
+        };
+        let attempt = job.attempt + 1;
+        cfg.events.emit(
+            "dispatch",
+            vec![
+                ("attempt", Json::num(attempt as f64)),
+                ("group", Json::num(job.idx as f64)),
+                ("worker", Json::str(addr)),
+            ],
+        );
+        match call_worker(cfg, addr, job.idx as u64, &dispatches[job.idx]) {
+            Ok(out) => {
+                consecutive = 0;
+                let mut st = lock(state);
+                st.results[job.idx] = Some(out);
+                st.unresolved -= 1;
+                cv.notify_all();
+            }
+            Err(e) => {
+                consecutive += 1;
+                let mut st = lock(state);
+                if attempt >= cfg.max_attempts.max(1) {
+                    // out of attempts: resolve to local fallback
+                    st.unresolved -= 1;
+                    cfg.events.emit(
+                        "fallback",
+                        vec![
+                            ("attempts", Json::num(attempt as f64)),
+                            ("error", Json::str(e.to_string())),
+                            ("group", Json::num(job.idx as f64)),
+                        ],
+                    );
+                } else {
+                    // requeue FIRST (order matters: a last-worker
+                    // quarantine below must see this job to drain it)
+                    let backoff = backoff_delay(cfg, job.idx, attempt);
+                    cfg.events.emit(
+                        "retry",
+                        vec![
+                            ("attempt", Json::num(attempt as f64)),
+                            ("backoff_ms", Json::num(backoff.as_secs_f64() * 1e3)),
+                            ("error", Json::str(e.to_string())),
+                            ("group", Json::num(job.idx as f64)),
+                        ],
+                    );
+                    st.queue.push_back(Job {
+                        idx: job.idx,
+                        attempt,
+                        not_before: Instant::now() + backoff,
+                        pinned: None,
+                    });
+                }
+                if consecutive >= cfg.quarantine_after.max(1) && st.active[me] {
+                    st.active[me] = false;
+                    // release this worker's fixed assignments to the
+                    // survivors — a pinned job must never wait on a
+                    // quarantined worker
+                    for j in st.queue.iter_mut() {
+                        if j.pinned == Some(me) {
+                            j.pinned = None;
+                        }
+                    }
+                    cfg.events.emit(
+                        "quarantine",
+                        vec![
+                            ("consecutive", Json::num(consecutive as f64)),
+                            ("worker", Json::str(addr)),
+                        ],
+                    );
+                    if st.active.iter().all(|a| !a) {
+                        // total fleet loss: no worker can claim, so
+                        // every queued group resolves to local
+                        // fallback (no other worker holds a job —
+                        // they are all parked in their probe loops)
+                        while let Some(j) = st.queue.pop_front() {
+                            st.unresolved -= 1;
+                            cfg.events.emit(
+                                "fallback",
+                                vec![
+                                    ("error", Json::str("all workers quarantined")),
+                                    ("group", Json::num(j.idx as f64)),
+                                ],
+                            );
+                        }
+                    }
+                    cv.notify_all();
+                    drop(st);
+                    // probe for re-admission until the pool finishes
+                    loop {
+                        let st = lock(state);
+                        if st.unresolved == 0 {
+                            return;
+                        }
+                        let (st, _) = cv
+                            .wait_timeout(st, cfg.probe_interval)
+                            .expect("remote pool lock poisoned");
+                        if st.unresolved == 0 {
+                            return;
+                        }
+                        drop(st);
+                        if probe_worker(addr, cfg) {
+                            consecutive = 0;
+                            let mut st = lock(state);
+                            st.active[me] = true;
+                            cfg.events
+                                .emit("readmit", vec![("worker", Json::str(addr))]);
+                            cv.notify_all();
+                            continue 'pool;
+                        }
+                    }
+                }
+                cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Capped exponential backoff with deterministic jitter: the delay is
+/// a pure function of (group index, attempt), so retry schedules are
+/// reproducible run to run.  Jitter scales the capped delay by a
+/// factor in [0.5, 1.0) to de-synchronize mass retries after a
+/// correlated failure.
+fn backoff_delay(cfg: &RemoteConfig, idx: usize, attempt: usize) -> Duration {
+    let doublings = (attempt.max(1) - 1).min(16) as u32;
+    let exp = cfg.backoff_base.saturating_mul(1u32 << doublings);
+    let capped = exp.min(cfg.backoff_cap);
+    let mut rng = Pcg32::new(idx as u64, attempt as u64);
+    capped.mul_f64(0.5 + 0.5 * rng.next_f64())
+}
+
+/// One `fit_group` call with full deadlines.  Any failure — resolve,
+/// connect, write, reply deadline, short read, malformed or error
+/// response — returns `Err` for the retry machinery.
+fn call_worker(cfg: &RemoteConfig, addr: &str, id: u64, dispatch: &Dispatch) -> Result<DeviceOutput> {
+    let batch = &dispatch.batch;
+    debug_assert_eq!(batch.b, 1, "exact dispatches are single-slot");
+    let stream = connect(addr, cfg)?;
+    let mut writer = stream
+        .try_clone()
+        .map_err(|e| Error::Server(format!("{addr}: clone: {e}")))?;
+    let request = encode_fit_group_request(id, &batch.points, batch.d, batch.k, batch.iters);
+    writer
+        .write_all(request.as_bytes())
+        .and_then(|()| writer.write_all(b"\n"))
+        .and_then(|()| writer.flush())
+        .map_err(|e| Error::Server(format!("{addr}: write: {e}")))?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader
+        .read_line(&mut line)
+        .map_err(|e| Error::Server(format!("{addr}: read: {e}")))?;
+    if !line.ends_with('\n') {
+        // EOF (worker died mid-reply) or nothing at all
+        return Err(Error::Server(format!("{addr}: connection closed mid-reply")));
+    }
+    let reply = parse_fit_group_result(line.trim_end(), batch.k, batch.d)?;
+    // Batcher::unpack reads centers/counts/inertia only; labels are a
+    // shape placeholder
+    Ok(DeviceOutput {
+        centers: reply.centers,
+        labels: vec![0; batch.n],
+        counts: reply.counts,
+        inertia: vec![reply.inertia],
+    })
+}
+
+/// Resolve + connect with the config's deadlines applied.
+fn connect(addr: &str, cfg: &RemoteConfig) -> Result<TcpStream> {
+    let sock = resolve(addr)?;
+    let stream = TcpStream::connect_timeout(&sock, cfg.connect_timeout)
+        .map_err(|e| Error::Server(format!("{addr}: connect: {e}")))?;
+    stream
+        .set_read_timeout(Some(cfg.read_timeout))
+        .map_err(|e| Error::Server(format!("{addr}: set_read_timeout: {e}")))?;
+    stream
+        .set_write_timeout(Some(cfg.write_timeout))
+        .map_err(|e| Error::Server(format!("{addr}: set_write_timeout: {e}")))?;
+    Ok(stream)
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .map_err(|e| Error::Server(format!("{addr}: resolve: {e}")))?
+        .next()
+        .ok_or_else(|| Error::Server(format!("{addr}: resolve: no addresses")))
+}
+
+/// Ping a worker: true iff it answers a `ping` with a pong within the
+/// config's deadlines.  The pool's re-admission probe; public so the
+/// fault-injection suite can pin its behaviour directly.
+pub fn probe_worker(addr: &str, cfg: &RemoteConfig) -> bool {
+    let Ok(stream) = connect(addr, cfg) else {
+        return false;
+    };
+    let Ok(mut writer) = stream.try_clone() else {
+        return false;
+    };
+    if writer.write_all(b"{\"cmd\":\"ping\"}\n").and_then(|()| writer.flush()).is_err() {
+        return false;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    if reader.read_line(&mut line).is_err() || !line.ends_with('\n') {
+        return false;
+    }
+    Json::parse(line.trim_end())
+        .ok()
+        .and_then(|v| v.get("pong").and_then(Json::as_bool))
+        == Some(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        let cfg = RemoteConfig::default();
+        for attempt in 1..8 {
+            for idx in 0..5 {
+                let a = backoff_delay(&cfg, idx, attempt);
+                let b = backoff_delay(&cfg, idx, attempt);
+                assert_eq!(a, b, "deterministic for (idx, attempt)");
+                // within [base/2 * 2^(a-1), cap) and never above cap
+                assert!(a <= cfg.backoff_cap, "capped: {a:?}");
+                let nominal = cfg
+                    .backoff_base
+                    .saturating_mul(1 << (attempt as u32 - 1))
+                    .min(cfg.backoff_cap);
+                assert!(a >= nominal.mul_f64(0.5), "jitter floor: {a:?} vs {nominal:?}");
+                assert!(a < nominal, "jitter strictly below nominal: {a:?}");
+            }
+        }
+        // different (idx, attempt) streams actually differ somewhere
+        let spread: std::collections::BTreeSet<Duration> =
+            (0..10).map(|i| backoff_delay(&cfg, i, 1)).collect();
+        assert!(spread.len() > 1, "jitter de-synchronizes groups");
+    }
+
+    #[test]
+    fn backoff_huge_attempt_does_not_overflow() {
+        let cfg = RemoteConfig::default();
+        let d = backoff_delay(&cfg, 0, usize::MAX);
+        assert!(d <= cfg.backoff_cap);
+    }
+
+    #[test]
+    fn resolve_rejects_garbage() {
+        assert!(resolve("not an address").is_err());
+        assert!(resolve("127.0.0.1:7077").is_ok());
+    }
+
+    #[test]
+    fn probe_dead_port_is_false() {
+        // bind-then-drop guarantees an unused port: connect is refused
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let cfg = RemoteConfig {
+            connect_timeout: Duration::from_millis(200),
+            read_timeout: Duration::from_millis(200),
+            ..Default::default()
+        };
+        assert!(!probe_worker(&format!("127.0.0.1:{port}"), &cfg));
+    }
+
+    #[test]
+    fn empty_fleet_resolves_everything_to_fallback() {
+        let cfg = RemoteConfig::default();
+        let out = run_pool(&cfg, &[]);
+        assert!(out.is_empty());
+    }
+}

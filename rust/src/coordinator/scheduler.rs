@@ -88,9 +88,13 @@ impl Scheduler {
 
     /// Submit and block until the result arrives.
     pub fn run_blocking(&self, job: JobRequest) -> Result<JobResult> {
+        let id = job.id;
         let rx = self.submit(job)?;
-        rx.recv()
-            .map_err(|_| Error::Coordinator("scheduler dropped reply".into()))?
+        rx.recv().map_err(|_| {
+            Error::Coordinator(format!(
+                "job {id}: scheduler dropped reply (worker thread died)"
+            ))
+        })?
     }
 }
 
@@ -114,7 +118,34 @@ fn dispatch_loop(
 
     while let Ok((job, reply)) = rx.recv() {
         let t0 = Instant::now();
-        let result = run_job(&cfg, &mut pipelines, &job).map(|mut r| {
+        // A panic inside a job must not kill the dispatch thread: every
+        // queued and future submitter would then see a dropped channel
+        // (`RecvError`) instead of an error naming the job.  Catch it,
+        // convert to a typed coordinator error, and keep serving — the
+        // remote layer's requeue logic composes with this (a local
+        // fallback job failing loudly is requeueable; a dead scheduler
+        // is not).
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(&cfg, &mut pipelines, &job)
+        }));
+        let result = match outcome {
+            Ok(r) => r,
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                // the cache may hold a pipeline in a half-updated
+                // state; drop it rather than reuse it
+                pipelines.clear();
+                Err(Error::Coordinator(format!(
+                    "job {}: pipeline worker panicked: {msg}",
+                    job.id
+                )))
+            }
+        }
+        .map(|mut r| {
             r.elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
             r
         });

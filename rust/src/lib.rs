@@ -81,6 +81,41 @@
 //! [`model::FittedModel`], shared [`cluster::EngineOpts`] knobs);
 //! [`pipeline::SubclusterPipeline::run`] remains the single-shot,
 //! labels-in-hand entry point.
+//!
+//! Distributed — the paper's fan-out across machines.  Start plain
+//! `parsample serve` processes anywhere, then point a fit at them
+//! (CLI: `fit --join HOST:PORT,...`); the coordinator ships each
+//! partition group to the fleet as a `fit_group` wire call through a
+//! fault-tolerant pool ([`coordinator::remote`]): per-dispatch
+//! deadlines, retry/requeue with capped jittered backoff, quarantine +
+//! ping-probe re-admission, and graceful degradation to local compute
+//! when the whole fleet is gone.  Distributed results are
+//! **bit-identical** to single-node, through every fault
+//! (`rust/tests/distributed_fit.rs` injects them all):
+//!
+//! ```no_run
+//! use parsample::coordinator::{RemoteConfig, SchedulerConfig};
+//! use parsample::model::ClusterModel;
+//! use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
+//! use parsample::server::Server;
+//!
+//! # let data = parsample::data::builtin::iris();
+//! // two workers (in-process here; normally separate machines)…
+//! let w1 = Server::start("127.0.0.1:0", SchedulerConfig::default()).unwrap();
+//! let w2 = Server::start("127.0.0.1:0", SchedulerConfig::default()).unwrap();
+//!
+//! // …and a fit joined to both
+//! let cfg = PipelineConfig::builder()
+//!     .final_k(3)
+//!     .remote(RemoteConfig::with_workers(vec![
+//!         w1.addr().to_string(),
+//!         w2.addr().to_string(),
+//!     ]))
+//!     .build()
+//!     .unwrap();
+//! let model = SubclusterPipeline::new(cfg).fit(&data).unwrap();
+//! # let _ = model;
+//! ```
 
 pub mod cluster;
 pub mod config;

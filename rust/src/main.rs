@@ -72,13 +72,14 @@ fn print_usage() {
          \x20 cluster   --data <iris|seeds|file.csv|file.bin> --k K [--scheme equal|unequal|random]\n\
          \x20           [--groups G] [--compression C] [--backend native|pjrt] [--workers W]\n\
          \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--artifacts DIR]\n\
-         \x20           [--seed S] [--config cfg.toml] [--eval] [--out FILE]\n\
+         \x20           [--seed S] [--config cfg.toml] [--eval] [--out FILE] [--join H:P,...]\n\
          \x20 baseline  --data ... --k K [--iters N] [--seed S] [--workers W]\n\
          \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--eval]\n\
          \x20           traditional k-means (single Lloyd loop on the blocked engine)\n\
          \x20 fit       --data ... --k K --out MODEL.json [--algo kmeans|minibatch|bisecting|pipeline]\n\
          \x20           [--iters N] [--seed S] [--workers W] [--bounds ...] [--kernel ...]\n\
          \x20           [--scheme ...] [--compression C] [--groups G] [--chunk-rows N]\n\
+         \x20           [--join H:P,...]\n\
          \x20           run the expensive clustering once; write a reusable model artifact\n\
          \x20 predict   --model MODEL.json --data ... [--workers W] [--kernel ...] [--eval]\n\
          \x20           [--out labels.txt] [--chunk-rows N]\n\
@@ -107,7 +108,13 @@ fn print_usage() {
          buffers one copy of the rows); kmeans/bisecting and --scheme equal need\n\
          random access and spill the stream into memory (documented fallback).\n\
          --snapshot-dir DIR persists the serve registry: models are written there on\n\
-         shutdown and reloaded on boot, so a restarted server comes back warm."
+         shutdown and reloaded on boot, so a restarted server comes back warm.\n\
+         --join H:P,... (pipeline algo only) distributes the local clustering stage\n\
+         across running `parsample serve` workers, with per-dispatch deadlines,\n\
+         retry/requeue with capped backoff, worker quarantine + re-admission, and\n\
+         graceful fallback to local compute if the whole fleet dies — results are\n\
+         bit-identical to a single-node fit in every case.  Fault-tolerance knobs\n\
+         live under [cluster] in --config / PARSAMPLE_CLUSTER_* env vars."
     );
 }
 
@@ -187,6 +194,25 @@ fn load_data(flags: &Flags) -> Result<Dataset> {
     }
 }
 
+/// `--join HOST:PORT,...`: distribute the local stage across running
+/// `serve` workers.  CLI-built remote configs report fault-tolerance
+/// events on stderr so an operator can watch a degraded fit recover;
+/// config-file fleets opt in via `cluster.events`.
+fn remote_from_flags(flags: &Flags) -> Option<parsample::coordinator::RemoteConfig> {
+    let list = flags.get("join")?;
+    let workers: Vec<String> = list
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if workers.is_empty() {
+        return None;
+    }
+    let mut r = parsample::coordinator::RemoteConfig::with_workers(workers);
+    r.events = parsample::telemetry::EventLog::stderr();
+    Some(r)
+}
+
 fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
     // precedence: defaults < config file < env < CLI flags
     let mut app = match flags.get("config") {
@@ -209,6 +235,12 @@ fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
         .seed(app.pipeline.seed);
     if let Some(g) = app.pipeline.num_groups {
         b = b.num_groups(g);
+    }
+    if let Some(r) = app.pipeline.remote.clone() {
+        b = b.remote(r);
+    }
+    if let Some(r) = remote_from_flags(flags) {
+        b = b.remote(r);
     }
     if let Some(s) = flags.get("scheme") {
         b = b.scheme(Scheme::parse(s)?);
@@ -323,6 +355,7 @@ fn cmd_fit(flags: &Flags) -> Result<()> {
     }
     spec.compression = flags.f32("compression")?;
     spec.num_groups = flags.usize("groups")?;
+    spec.remote = remote_from_flags(flags);
     let t0 = std::time::Instant::now();
     // --chunk-rows: pull the data through a streaming source instead
     // of materializing it (bit-identical results at any chunk size)

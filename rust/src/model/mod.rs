@@ -262,6 +262,9 @@ pub struct ModelSpec {
     pub compression: Option<f32>,
     /// Pipeline-only: sub-region count G.
     pub num_groups: Option<usize>,
+    /// Pipeline-only: distributed local stage across a remote worker
+    /// fleet (`None` = local threads; bit-identical either way).
+    pub remote: Option<crate::coordinator::remote::RemoteConfig>,
 }
 
 impl ModelSpec {
@@ -275,6 +278,7 @@ impl ModelSpec {
             scheme: None,
             compression: None,
             num_groups: None,
+            remote: None,
         }
     }
 
@@ -322,6 +326,9 @@ impl ModelSpec {
                 }
                 if let Some(it) = self.iters {
                     b = b.global_iters(it);
+                }
+                if let Some(r) = &self.remote {
+                    b = b.remote(r.clone());
                 }
                 Ok(Box::new(SubclusterPipeline::new(b.build()?)))
             }

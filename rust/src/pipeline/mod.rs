@@ -78,6 +78,12 @@ pub struct PipelineConfig {
     /// assignment); the wide kernel is bit-identical to scalar.
     pub kernel: KernelMode,
     pub seed: u64,
+    /// Distributed fit: dispatch local-stage groups to remote `serve`
+    /// workers ([`crate::coordinator::remote`]).  `None` (or an empty
+    /// worker list) keeps the local thread-pool path.  Results are
+    /// bit-identical either way; worker loss degrades to local
+    /// compute, never to a failed fit.
+    pub remote: Option<crate::coordinator::remote::RemoteConfig>,
 }
 
 impl Default for PipelineConfig {
@@ -96,6 +102,7 @@ impl Default for PipelineConfig {
             bounds: BoundsMode::Hamerly,
             kernel: KernelMode::session_default(),
             seed: 0,
+            remote: None,
         }
     }
 }
@@ -224,6 +231,12 @@ impl PipelineConfigBuilder {
 
     pub fn seed(mut self, s: u64) -> Self {
         self.cfg.seed = s;
+        self
+    }
+
+    /// Dispatch the local stage to remote workers (distributed fit).
+    pub fn remote(mut self, r: crate::coordinator::remote::RemoteConfig) -> Self {
+        self.cfg.remote = Some(r);
         self
     }
 
@@ -428,6 +441,16 @@ impl SubclusterPipeline {
                 Ok(all)
             }
             AnyBackend::Native(nb) => {
+                // distributed fit: ship dispatches to the worker fleet
+                // (bit-identical to the local path; total fleet loss
+                // falls back to local compute per group)
+                if let Some(remote) = &self.cfg.remote {
+                    if !remote.workers.is_empty() {
+                        return crate::coordinator::remote::remote_local_stage(
+                            remote, nb, dispatches, dims,
+                        );
+                    }
+                }
                 // host-level parallelism across dispatches
                 let results = parallel_map(dispatches, self.cfg.workers, |_, d| {
                     nb.run_batch(&d.batch).map(|out| Batcher::unpack(d, &out, dims))

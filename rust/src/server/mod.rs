@@ -24,43 +24,49 @@
 //! immediate `fit queue full` error, preserving the server's overload
 //! behaviour for its heaviest request type.
 //!
-//! Handler streams carry a read timeout ([`HANDLER_POLL`]) so idle
-//! connections re-check the stop flag instead of parking forever in a
-//! blocking read, and a write timeout ([`WRITE_TIMEOUT`]) so a client
-//! that never drains its responses can't park a handler in `write_all`
-//! — [`Server::shutdown`] returns promptly even when a client holds a
-//! connection open.  Finished handler threads are *joined*, not
-//! dropped, so a handler panic surfaces in the server's log instead of
-//! vanishing.
+//! Handler streams block in `read` with no poll interval: every live
+//! connection's socket is tracked in a shared table, and
+//! [`Server::shutdown`] closes them via `Shutdown::Both`, which makes
+//! a blocked read return immediately — no wakeup floor, no
+//! timeout-split byte accumulation.  A write timeout
+//! ([`WRITE_TIMEOUT`]) covers the other direction: a client that never
+//! drains its responses can't park a handler in `write_all` past the
+//! stop flag.  Finished handler threads are *joined*, not dropped, so
+//! a handler panic surfaces in the server's log instead of vanishing.
+//!
+//! `fit_group` — the distributed-fit worker command — runs one
+//! partition group's local stage on the handler thread under the same
+//! [`FitGate`] as `fit`, reproducing the coordinator's dispatch
+//! planning exactly (strided init, unit weights, b=1 exact shape) so
+//! the returned centers are bit-identical to a local run.
 
 pub mod protocol;
 pub mod registry;
 
-use std::io::{BufRead, BufReader, ErrorKind, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::cluster::EngineOpts;
+use crate::coordinator::batcher::strided_init;
 use crate::coordinator::{Scheduler, SchedulerConfig};
 use crate::data::source::SliceSource;
 use crate::error::{Error, Result};
 use crate::model::{FittedModel, ModelSpec};
+use crate::runtime::{Backend, DeviceBatch, NativeBackend};
 use crate::telemetry::LatencyHistogram;
 use crate::util::threadpool::default_workers;
 use protocol::{
-    encode_error, encode_fit_result, encode_models, encode_pong, encode_result, encode_stats,
-    parse_request, FitJob, PredictJob, PredictionEncoder, Request,
+    encode_error, encode_fit_group_result, encode_fit_result, encode_models, encode_pong,
+    encode_result, encode_stats, parse_request, FitGroupJob, FitJob, PredictJob,
+    PredictionEncoder, Request,
 };
 pub use registry::{ModelInfo, ModelRegistry};
-
-/// Read timeout on handler streams: the interval at which an idle
-/// connection re-checks the stop flag.  Bounds how long
-/// [`Server::shutdown`] can block on idle clients.
-pub const HANDLER_POLL: Duration = Duration::from_millis(200);
 
 /// Write timeout on handler streams.  A client that sends a request
 /// and never reads the response would otherwise fill its TCP window
@@ -180,12 +186,52 @@ struct HandlerCtx {
     stop: Arc<AtomicBool>,
 }
 
+/// Live handler sockets, keyed by an opaque token.  [`Server::shutdown`]
+/// walks this table and closes every socket (`Shutdown::Both`) so
+/// blocked handler reads return immediately — the handlers themselves
+/// only ever *remove* their own entry (via [`SocketGuard`]).
+type SocketTable = Arc<Mutex<HashMap<usize, TcpStream>>>;
+
+/// RAII registration of one handler's socket in the [`SocketTable`];
+/// deregisters on drop (including handler panics) so the table never
+/// accumulates dead entries.
+struct SocketGuard {
+    table: SocketTable,
+    token: usize,
+}
+
+impl SocketGuard {
+    /// Register a clone of `stream`; `None` if the clone fails (the
+    /// handler still runs — shutdown just can't force-close it, and
+    /// the self-connect fallback covers the accept loop either way).
+    fn register(table: &SocketTable, stream: &TcpStream) -> Option<SocketGuard> {
+        static NEXT_TOKEN: AtomicUsize = AtomicUsize::new(0);
+        let clone = stream.try_clone().ok()?;
+        let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+        lock_table(table).insert(token, clone);
+        Some(SocketGuard { table: Arc::clone(table), token })
+    }
+}
+
+impl Drop for SocketGuard {
+    fn drop(&mut self) {
+        lock_table(&self.table).remove(&self.token);
+    }
+}
+
+/// Lock the socket table, shrugging off poisoning (a panicked handler
+/// can only have left a fully-consistent insert/remove behind).
+fn lock_table(table: &SocketTable) -> std::sync::MutexGuard<'_, HashMap<usize, TcpStream>> {
+    table.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// Handle to a running server.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
     registry: Arc<ModelRegistry>,
+    sockets: SocketTable,
     pub latency: Arc<LatencyHistogram>,
     snapshot_dir: Option<PathBuf>,
 }
@@ -228,9 +274,11 @@ impl Server {
             }
         }
 
+        let sockets: SocketTable = Arc::new(Mutex::new(HashMap::new()));
         let accept_stop = Arc::clone(&stop);
         let accept_latency = Arc::clone(&latency);
         let accept_registry = Arc::clone(&registry);
+        let accept_sockets = Arc::clone(&sockets);
         let engine = cfg.engine;
         let scheduler_cfg = cfg.scheduler;
         let fit_cap = scheduler_cfg.queue_depth;
@@ -253,7 +301,11 @@ impl Server {
                 match stream {
                     Ok(stream) => {
                         let ctx = Arc::clone(&ctx);
+                        // register before the handler thread exists so
+                        // shutdown can never miss a just-accepted socket
+                        let guard = SocketGuard::register(&accept_sockets, &stream);
                         handlers.push(std::thread::spawn(move || {
+                            let _guard = guard;
                             let _ = handle_connection(stream, &ctx);
                         }));
                     }
@@ -271,6 +323,7 @@ impl Server {
             stop,
             accept_handle: Some(accept_handle),
             registry,
+            sockets,
             latency,
             snapshot_dir,
         })
@@ -285,13 +338,19 @@ impl Server {
         &self.registry
     }
 
-    /// Stop accepting, wake idle handlers, and join the accept loop.
-    /// Bounded by [`HANDLER_POLL`] plus any in-flight request.  With a
-    /// snapshot dir configured, the registry is written to disk after
-    /// the last handler exits (no fit can race the writer), so the
-    /// next boot comes back warm.
+    /// Stop accepting, force-close every handler socket, and join the
+    /// accept loop.  Closing the sockets (`Shutdown::Both`) makes
+    /// blocked handler reads return immediately, so shutdown latency
+    /// is bounded by any in-flight *request*, not by idle clients.
+    /// With a snapshot dir configured, the registry is written to disk
+    /// after the last handler exits (no fit can race the writer), so
+    /// the next boot comes back warm.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // wake every handler parked in a blocking read
+        for s in lock_table(&self.sockets).values() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
         // unblock the accept loop
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_handle.take() {
@@ -433,29 +492,29 @@ fn join_handler(h: JoinHandle<()>) {
 }
 
 fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
-    // Poll-read so an idle connection re-checks the stop flag instead
-    // of blocking shutdown forever.
-    stream
-        .set_read_timeout(Some(HANDLER_POLL))
-        .map_err(|e| Error::Server(format!("set_read_timeout: {e}")))?;
+    // Reads block with no timeout: shutdown force-closes the socket
+    // (see [`Server::shutdown`]), which makes a parked read return 0.
     stream
         .set_write_timeout(Some(WRITE_TIMEOUT))
         .map_err(|e| Error::Server(format!("set_write_timeout: {e}")))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    // Accumulate raw bytes, not a String: read_line would *discard* a
-    // partial read that a timeout splits mid multi-byte UTF-8 character
-    // (std truncates the buffer back when the tail isn't valid UTF-8),
-    // silently corrupting the request stream.  read_until keeps every
-    // byte across timeouts; UTF-8 is checked once per complete line.
+    // Accumulate raw bytes, not a String: UTF-8 is checked once per
+    // complete line (read_line would reject a line wholesale, but the
+    // raw buffer lets us answer with a proper error response).
     let mut buf: Vec<u8> = Vec::new();
     loop {
         if ctx.stop.load(Ordering::SeqCst) {
             break;
         }
-        let read = reader.read_until(b'\n', &mut buf);
-        // checked on every return, including timeouts: a huge line
-        // accumulates across WouldBlocks without ever returning Ok
+        buf.clear();
+        // `take` bounds what one line can buffer *before* any request
+        // admission check runs; the +1 makes an over-limit line
+        // distinguishable from one of exactly the limit
+        let n = reader
+            .by_ref()
+            .take((MAX_REQUEST_BYTES + 1) as u64)
+            .read_until(b'\n', &mut buf)?;
         if buf.len() > MAX_REQUEST_BYTES {
             let err = encode_error(None, "request line exceeds 64 MiB");
             writer.write_all(err.as_bytes())?;
@@ -463,27 +522,20 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
             writer.flush()?;
             return Ok(()); // cannot resync mid-line; drop the connection
         }
-        match read {
-            Ok(0) => {
-                // client closed its write side; a final unterminated
-                // line still gets served (the old `lines()` loop
-                // yielded trailing lines too, and a half-closed peer
-                // can still read the response)
-                if !buf.is_empty() {
-                    serve_line(&buf, ctx, &mut writer)?;
-                }
-                break;
-            }
-            Ok(_) => {
+        if n == 0 {
+            break; // clean EOF: client closed (or shutdown closed us)
+        }
+        if buf.ends_with(b"\n") {
+            serve_line(&buf, ctx, &mut writer)?;
+        } else {
+            // EOF mid-line.  A half-closed client's final unterminated
+            // request still gets served (it can still read the
+            // response); a read cut short by our own shutdown does not
+            // — the bytes are an artifact of the forced close.
+            if !ctx.stop.load(Ordering::SeqCst) {
                 serve_line(&buf, ctx, &mut writer)?;
-                buf.clear();
             }
-            // timeout: bytes read so far stay in `buf`; loop to re-check
-            // the stop flag, then keep reading where we left off
-            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                continue;
-            }
-            Err(e) => return Err(e.into()),
+            break;
         }
     }
     Ok(())
@@ -533,8 +585,59 @@ fn dispatch(line: &str, ctx: &HandlerCtx) -> String {
             Ok(response) => response,
             Err(e) => encode_error(None, &e.to_string()),
         },
+        Ok(Request::FitGroup(job)) => {
+            let id = job.id;
+            match run_fit_group(ctx, job) {
+                Ok(response) => response,
+                Err(e) => encode_error(Some(id), &e.to_string()),
+            }
+        }
         Err(e) => encode_error(None, &e.to_string()),
     }
+}
+
+/// Run one partition group's local stage (distributed-fit worker
+/// side).  Rebuilds the coordinator's dispatch exactly — strided init
+/// from the shipped rows, unit weights, b=1 exact shape — and runs it
+/// on the native backend, whose per-slot compute is worker-count
+/// invariant, so the reply is bit-identical to what the coordinator
+/// would have computed locally for the same group.
+fn run_fit_group(ctx: &HandlerCtx, job: FitGroupJob) -> Result<String> {
+    let _permit = ctx
+        .fits
+        .try_acquire()
+        .ok_or_else(|| Error::Server("fit queue full".into()))?;
+    let n = job.points.len() / job.dims;
+    if job.k < 1 || job.k > n {
+        return Err(Error::Server(format!(
+            "fit_group k={} out of range 1..={n}",
+            job.k
+        )));
+    }
+    if job.iters < 1 {
+        return Err(Error::Server("fit_group iters must be >= 1".into()));
+    }
+    let init = strided_init(&job.points, n, job.k, job.dims);
+    let batch = DeviceBatch {
+        b: 1,
+        n,
+        d: job.dims,
+        k: job.k,
+        iters: job.iters,
+        points: job.points,
+        weights: vec![1.0; n],
+        init,
+    };
+    batch.validate()?;
+    let out = NativeBackend::new(ctx.engine.workers).run_batch(&batch)?;
+    Ok(encode_fit_group_result(
+        job.id,
+        &out.centers,
+        job.dims,
+        &out.counts,
+        out.inertia[0],
+        job.iters,
+    ))
 }
 
 /// Execute a fit on this handler thread and register the artifact.
@@ -565,6 +668,9 @@ fn run_fit(ctx: &HandlerCtx, job: FitJob) -> Result<String> {
         scheme: job.scheme,
         compression: job.compression,
         num_groups: job.num_groups,
+        // wire fits always run the local path: a worker must never
+        // recursively fan a fit_group back out to the fleet
+        remote: None,
     };
     let model = spec.fit(&data)?;
     let response = encode_fit_result(&job.name, &model, t0.elapsed().as_secs_f64() * 1e3);

@@ -7,6 +7,7 @@
 //! {"cmd":"fit","name":"prod","points":[[1.0,2.0],...],"k":3,
 //!  "algorithm":"pipeline","compression":6,"num_groups":6,"seed":0}
 //! {"cmd":"predict","name":"prod","points":[[1.0,2.0],...]}
+//! {"cmd":"fit_group","id":1,"points":[[1.0,2.0],...],"k":3,"iters":10}
 //! {"cmd":"models"}
 //! {"cmd":"ping"}
 //! {"cmd":"stats"}
@@ -19,6 +20,14 @@
 //! [`crate::model::FittedModel`] in the server's LRU registry, then
 //! thousands of small `predict` requests assign against the registered
 //! centers without re-clustering; `models` lists what is registered.
+//!
+//! `fit_group` is the distributed-fit worker command: run ONE
+//! partition group's local stage (Lloyd's from the coordinator's
+//! strided init) and return local centers + member counts (the pooled
+//! weights) + inertia + iteration provenance.  A plain `serve` process
+//! thereby doubles as a clustering worker — see
+//! [`crate::coordinator::remote`].  Bit-parity across the wire holds
+//! because f32 → shortest-roundtrip f64 text → f32 is exact.
 
 use crate::cluster::{BoundsMode, KernelMode};
 use crate::coordinator::job::{JobRequest, JobResult};
@@ -62,12 +71,41 @@ pub struct PredictJob {
     pub dims: usize,
 }
 
+/// A `fit_group` request: one partition group's local stage, run
+/// remotely.  The worker recomputes the coordinator's strided init
+/// from the shipped rows ([`crate::coordinator::batcher::strided_init`])
+/// so both sides seed identically.
+#[derive(Debug, Clone)]
+pub struct FitGroupJob {
+    /// Coordinator-side dispatch index (echoed back for correlation).
+    pub id: u64,
+    /// Flat row-major points.
+    pub points: Vec<f32>,
+    pub dims: usize,
+    /// Local center count for this group.
+    pub k: usize,
+    /// Lloyd iterations to run.
+    pub iters: usize,
+}
+
+/// A parsed `fit_group` response on the coordinator side.
+#[derive(Debug, Clone)]
+pub struct FitGroupReply {
+    pub id: u64,
+    /// k×D local centers, row-major.
+    pub centers: Vec<f32>,
+    /// Member count per local center.
+    pub counts: Vec<f32>,
+    pub inertia: f32,
+}
+
 /// Parsed client request.
 #[derive(Debug, Clone)]
 pub enum Request {
     Cluster(JobRequest),
     Fit(FitJob),
     Predict(PredictJob),
+    FitGroup(FitGroupJob),
     Models,
     Ping,
     Stats,
@@ -205,6 +243,19 @@ pub fn parse_request(line: &str) -> Result<Request> {
             let name = parse_name(&v)?;
             let (points, dims) = parse_points(&v)?;
             Ok(Request::Predict(PredictJob { name, points, dims }))
+        }
+        "fit_group" => {
+            let id = v.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let (points, dims) = parse_points(&v)?;
+            let k = v
+                .get("k")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Server("missing k".into()))?;
+            let iters = v
+                .get("iters")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Server("missing iters".into()))?;
+            Ok(Request::FitGroup(FitGroupJob { id, points, dims, k, iters }))
         }
         other => Err(Error::Server(format!("unknown cmd '{other}'"))),
     }
@@ -354,6 +405,113 @@ pub fn encode_prediction(name: &str, p: &Prediction) -> String {
         ("inertia", Json::num(p.inertia)),
     ])
     .to_string()
+}
+
+/// Encode a `fit_group` request (coordinator → worker).
+pub fn encode_fit_group_request(
+    id: u64,
+    points: &[f32],
+    dims: usize,
+    k: usize,
+    iters: usize,
+) -> String {
+    let rows: Vec<Json> = points.chunks(dims).map(Json::arr_f32).collect();
+    Json::obj(vec![
+        ("cmd", Json::str("fit_group")),
+        ("id", Json::num(id as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("k", Json::num(k as f64)),
+        ("points", Json::Arr(rows)),
+    ])
+    .to_string()
+}
+
+/// Encode a successful `fit_group` response (worker → coordinator).
+pub fn encode_fit_group_result(
+    id: u64,
+    centers: &[f32],
+    dims: usize,
+    counts: &[f32],
+    inertia: f32,
+    iterations: usize,
+) -> String {
+    let rows: Vec<Json> = centers.chunks(dims).map(Json::arr_f32).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::num(id as f64)),
+        ("centers", Json::Arr(rows)),
+        ("counts", Json::arr_f32(counts)),
+        ("inertia", Json::num(inertia as f64)),
+        ("iterations", Json::num(iterations as f64)),
+    ])
+    .to_string()
+}
+
+/// Parse a `fit_group` response line on the coordinator side,
+/// validating the shape against the dispatched `(k, dims)`.  A server
+/// error response (`ok:false`) surfaces as `Err` so the pool's retry
+/// machinery treats it like any other failure.
+pub fn parse_fit_group_result(line: &str, k: usize, dims: usize) -> Result<FitGroupReply> {
+    let v = Json::parse(line).map_err(|e| Error::Server(format!("bad json: {e}")))?;
+    if v.get("ok").and_then(Json::as_bool) != Some(true) {
+        let msg = v
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("missing ok field");
+        return Err(Error::Server(format!("worker error: {msg}")));
+    }
+    let id = v.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let rows = v
+        .get("centers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Server("missing centers".into()))?;
+    if rows.len() != k {
+        return Err(Error::Server(format!(
+            "expected {k} centers, got {}",
+            rows.len()
+        )));
+    }
+    let mut centers = Vec::with_capacity(k * dims);
+    for r in rows {
+        let row = r
+            .as_arr()
+            .ok_or_else(|| Error::Server("centers must be arrays".into()))?;
+        if row.len() != dims {
+            return Err(Error::Server(format!(
+                "expected {dims}-dim centers, got {}",
+                row.len()
+            )));
+        }
+        for x in row {
+            centers.push(
+                x.as_f64()
+                    .ok_or_else(|| Error::Server("non-numeric center".into()))?
+                    as f32,
+            );
+        }
+    }
+    let counts_arr = v
+        .get("counts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Server("missing counts".into()))?;
+    if counts_arr.len() != k {
+        return Err(Error::Server(format!(
+            "expected {k} counts, got {}",
+            counts_arr.len()
+        )));
+    }
+    let mut counts = Vec::with_capacity(k);
+    for c in counts_arr {
+        counts.push(
+            c.as_f64()
+                .ok_or_else(|| Error::Server("non-numeric count".into()))? as f32,
+        );
+    }
+    let inertia = v
+        .get("inertia")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Server("missing inertia".into()))? as f32;
+    Ok(FitGroupReply { id, centers, counts, inertia })
 }
 
 /// Encode the `models` listing (LRU first, mirroring eviction order).
@@ -534,6 +692,81 @@ mod tests {
         assert!(parse_request(r#"{"cmd":"predict","name":"m"}"#).is_err());
         assert!(parse_request(r#"{"cmd":"predict","name":"m","points":[]}"#).is_err());
         assert!(parse_request(r#"{"cmd":"predict","name":"m","points":[["a"]]}"#).is_err());
+    }
+
+    #[test]
+    fn parses_fit_group_request() {
+        let line = r#"{"cmd":"fit_group","id":7,"points":[[1,2],[3,4],[5,6]],"k":2,"iters":10}"#;
+        match parse_request(line).unwrap() {
+            Request::FitGroup(j) => {
+                assert_eq!(j.id, 7);
+                assert_eq!(j.dims, 2);
+                assert_eq!(j.points, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+                assert_eq!(j.k, 2);
+                assert_eq!(j.iters, 10);
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_fit_group() {
+        assert!(parse_request(r#"{"cmd":"fit_group","points":[[1,2]],"k":1}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"fit_group","points":[[1,2]],"iters":5}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"fit_group","k":1,"iters":5}"#).is_err());
+        assert!(
+            parse_request(r#"{"cmd":"fit_group","points":[[1,2],[3]],"k":1,"iters":5}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn fit_group_request_roundtrips_exact_bits() {
+        // awkward f32s must survive the f32 -> f64 text -> f32 trip
+        let pts = [1.1f32, -0.3, f32::MIN_POSITIVE, 3.4e38, 1.0e-40, 0.1 + 0.2];
+        let line = encode_fit_group_request(3, &pts, 2, 2, 8);
+        match parse_request(&line).unwrap() {
+            Request::FitGroup(j) => {
+                assert_eq!(j.id, 3);
+                assert_eq!(j.k, 2);
+                assert_eq!(j.iters, 8);
+                assert_eq!(j.dims, 2);
+                let got: Vec<u32> = j.points.iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = pts.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want);
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fit_group_result_roundtrips_exact_bits() {
+        let centers = [0.1f32, 0.2, 10.33, -4.5];
+        let counts = [3.0f32, 5.0];
+        let line = encode_fit_group_result(9, &centers, 2, &counts, 0.125, 10);
+        let r = parse_fit_group_result(&line, 2, 2).unwrap();
+        assert_eq!(r.id, 9);
+        let got: Vec<u32> = r.centers.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = centers.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want);
+        assert_eq!(r.counts, counts);
+        assert_eq!(r.inertia.to_bits(), 0.125f32.to_bits());
+    }
+
+    #[test]
+    fn fit_group_result_rejects_bad_shapes_and_errors() {
+        let good = encode_fit_group_result(1, &[1.0, 2.0], 2, &[2.0], 0.5, 5);
+        assert!(parse_fit_group_result(&good, 1, 2).is_ok());
+        // wrong k / dims expectations
+        assert!(parse_fit_group_result(&good, 2, 2).is_err());
+        assert!(parse_fit_group_result(&good, 1, 3).is_err());
+        // server-side error response surfaces as Err
+        let err = encode_error(Some(1), "fit queue full");
+        let e = parse_fit_group_result(&err, 1, 2).unwrap_err();
+        assert!(e.to_string().contains("fit queue full"), "{e}");
+        // garbage / truncated
+        assert!(parse_fit_group_result("not json", 1, 2).is_err());
+        assert!(parse_fit_group_result(&good[..good.len() / 2], 1, 2).is_err());
+        assert!(parse_fit_group_result(r#"{"ok":true}"#, 1, 2).is_err());
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Reason-tagged JSONL event stream for the distributed fit path.
+//!
+//! Every line is one JSON object whose **first** key is `"reason"` —
+//! the cargo `machine_message.rs` convention — so ops tooling can
+//! route on a fixed prefix without parsing the whole object:
+//!
+//! ```text
+//! {"reason":"dispatch","attempt":1,"group":3,"worker":"10.0.0.2:7077"}
+//! {"reason":"retry","attempt":2,"backoff_ms":73,"error":"...","group":3}
+//! {"reason":"quarantine","consecutive":3,"worker":"10.0.0.2:7077"}
+//! {"reason":"readmit","worker":"10.0.0.2:7077"}
+//! {"reason":"fallback","group":3}
+//! {"reason":"merge","fallback":1,"groups":6,"remote":5}
+//! ```
+//!
+//! Reasons emitted by [`crate::coordinator::remote`]: `dispatch`,
+//! `retry`, `quarantine`, `readmit`, `fallback`, `merge`.
+//!
+//! [`Json::obj`] emits keys in sorted (BTreeMap) order, which would
+//! bury `reason` mid-object; [`EventLog::emit`] splices it to the
+//! front with the same byte-exact escaping the emitter uses — the
+//! precedent is the server's `PredictionEncoder`, which hand-assembles
+//! `Json::obj`-identical output for the same reason.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Where emitted lines go.
+#[derive(Debug)]
+enum Sink {
+    /// Drop everything (the default for library callers).
+    Off,
+    /// One line per event on stderr (the CLI's operator view).
+    Stderr,
+    /// Buffer lines in memory (tests assert on them).
+    Capture(Mutex<Vec<String>>),
+}
+
+/// A shared JSONL event sink.  Cheap to clone via `Arc`; `emit` is
+/// lock-free for the `Off` and `Stderr` sinks apart from stderr's own
+/// line buffering.
+#[derive(Debug)]
+pub struct EventLog {
+    sink: Sink,
+}
+
+impl EventLog {
+    /// An event log that discards everything.
+    pub fn off() -> Arc<EventLog> {
+        Arc::new(EventLog { sink: Sink::Off })
+    }
+
+    /// An event log that writes one JSONL line per event to stderr.
+    pub fn stderr() -> Arc<EventLog> {
+        Arc::new(EventLog { sink: Sink::Stderr })
+    }
+
+    /// An event log that buffers lines for [`EventLog::captured`].
+    pub fn capture() -> Arc<EventLog> {
+        Arc::new(EventLog { sink: Sink::Capture(Mutex::new(Vec::new())) })
+    }
+
+    /// True when `emit` would do work — callers can skip building
+    /// field vectors for the `Off` sink.
+    pub fn enabled(&self) -> bool {
+        !matches!(self.sink, Sink::Off)
+    }
+
+    /// Emit one event line: `{"reason":<reason>, ...fields}` with
+    /// `reason` always first, remaining keys in sorted order.
+    pub fn emit(&self, reason: &str, fields: Vec<(&str, Json)>) {
+        if !self.enabled() {
+            return;
+        }
+        let line = render(reason, fields);
+        match &self.sink {
+            Sink::Off => {}
+            Sink::Stderr => eprintln!("{line}"),
+            Sink::Capture(buf) => buf.lock().expect("event buffer poisoned").push(line),
+        }
+    }
+
+    /// Lines captured so far (empty for non-capture sinks).
+    pub fn captured(&self) -> Vec<String> {
+        match &self.sink {
+            Sink::Capture(buf) => buf.lock().expect("event buffer poisoned").clone(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Count of captured lines whose reason matches (non-capture
+    /// sinks report 0).
+    pub fn count(&self, reason: &str) -> usize {
+        let prefix = format!("{{\"reason\":{},", Json::str(reason));
+        let exact = format!("{{\"reason\":{}}}", Json::str(reason));
+        self.captured()
+            .iter()
+            .filter(|l| l.starts_with(&prefix) || **l == exact)
+            .count()
+    }
+}
+
+/// Assemble the line with `reason` spliced to the front of the
+/// sorted-key `Json::obj` emission.
+fn render(reason: &str, fields: Vec<(&str, Json)>) -> String {
+    let tagged = Json::str(reason).to_string();
+    let rest = Json::obj(fields).to_string();
+    if rest == "{}" {
+        format!("{{\"reason\":{tagged}}}")
+    } else {
+        format!("{{\"reason\":{tagged},{}", &rest[1..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reason_comes_first() {
+        let log = EventLog::capture();
+        log.emit(
+            "retry",
+            vec![("attempt", Json::num(2.0)), ("backoff_ms", Json::num(73.0))],
+        );
+        let lines = log.captured();
+        assert_eq!(lines, vec![r#"{"reason":"retry","attempt":2,"backoff_ms":73}"#]);
+    }
+
+    #[test]
+    fn no_fields_is_a_bare_object() {
+        let log = EventLog::capture();
+        log.emit("merge", vec![]);
+        assert_eq!(log.captured(), vec![r#"{"reason":"merge"}"#]);
+        assert_eq!(log.count("merge"), 1);
+        assert_eq!(log.count("dispatch"), 0);
+    }
+
+    #[test]
+    fn line_is_valid_json_and_roundtrips() {
+        let log = EventLog::capture();
+        log.emit(
+            "dispatch",
+            vec![("group", Json::num(3.0)), ("worker", Json::str("10.0.0.2:7077"))],
+        );
+        let line = log.captured().remove(0);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("reason").and_then(Json::as_str), Some("dispatch"));
+        assert_eq!(v.get("group").and_then(Json::as_usize), Some(3));
+        assert_eq!(v.get("worker").and_then(Json::as_str), Some("10.0.0.2:7077"));
+    }
+
+    #[test]
+    fn escaping_matches_emitter() {
+        let log = EventLog::capture();
+        log.emit("retry", vec![("error", Json::str("tab\there \"quoted\""))]);
+        let line = log.captured().remove(0);
+        // splice must not break escaping: line still parses, and the
+        // tail matches what Json::obj would emit for the same fields
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("error").and_then(Json::as_str), Some("tab\there \"quoted\""));
+    }
+
+    #[test]
+    fn off_discards_and_reports_disabled() {
+        let log = EventLog::off();
+        assert!(!log.enabled());
+        log.emit("dispatch", vec![]);
+        assert!(log.captured().is_empty());
+    }
+}

@@ -2,8 +2,12 @@
 //! for the coordinator and server.  No external deps; everything is
 //! plain atomics so it can be shared across worker threads.
 
+pub mod events;
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+pub use events::EventLog;
 
 /// Wall-clock timings of each pipeline stage, in milliseconds.
 #[derive(Debug, Clone, Default, PartialEq)]

@@ -1,0 +1,398 @@
+//! Fault injection for the distributed sharded fit.
+//!
+//! The invariant every scenario pins: a distributed fit — through real
+//! workers, dead addresses, hung sockets, malformed replies,
+//! quarantines, and total fleet loss — produces the **bit-identical**
+//! result of a single-node fit.  Fault tolerance is allowed to cost
+//! wall time, never bits.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::time::Duration;
+
+use parsample::coordinator::batcher::strided_init;
+use parsample::coordinator::remote::{probe_worker, RemoteConfig};
+use parsample::coordinator::SchedulerConfig;
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::data::Dataset;
+use parsample::pipeline::{PipelineConfig, PipelineResult, SubclusterPipeline};
+use parsample::runtime::{Backend, DeviceBatch, NativeBackend};
+use parsample::server::{Client, Server};
+use parsample::telemetry::EventLog;
+use parsample::util::json::Json;
+
+fn blobs(m: usize, k: usize, seed: u64) -> Dataset {
+    make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims: 2,
+        std: 0.05,
+        extent: 10.0,
+        seed,
+    })
+    .unwrap()
+}
+
+fn pipeline_cfg(k: usize, remote: Option<RemoteConfig>) -> PipelineConfig {
+    let mut b = PipelineConfig::builder()
+        .final_k(k)
+        .num_groups(6)
+        .compression(5.0)
+        .workers(4)
+        .seed(0);
+    if let Some(r) = remote {
+        b = b.remote(r);
+    }
+    b.build().unwrap()
+}
+
+/// Aggressive-but-sane fault-tolerance knobs for tests: short
+/// deadlines, tiny backoff, captured events.
+fn remote_cfg(workers: Vec<String>) -> RemoteConfig {
+    RemoteConfig {
+        workers,
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(5),
+        write_timeout: Duration::from_secs(5),
+        max_attempts: 3,
+        backoff_base: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(20),
+        quarantine_after: 2,
+        probe_interval: Duration::from_millis(20),
+        events: EventLog::capture(),
+    }
+}
+
+fn start_worker() -> Server {
+    Server::start("127.0.0.1:0", SchedulerConfig::default()).expect("worker start")
+}
+
+/// An address that refuses connections: bind-then-drop guarantees the
+/// port was free a moment ago.
+fn dead_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap();
+    drop(l);
+    format!("{addr}")
+}
+
+/// A listener that accepts connections and then never responds — the
+/// read deadline is the only way out.
+fn spawn_black_hole() -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let mut held = Vec::new();
+        for stream in listener.incoming() {
+            match stream {
+                Ok(s) => held.push(s), // keep it open, say nothing
+                Err(_) => break,
+            }
+        }
+    });
+    addr
+}
+
+/// A fake worker whose reply policy is a pure function of the request
+/// line (`None` = slam the connection shut mid-exchange).
+fn spawn_fake_worker(behavior: fn(&str) -> Option<String>) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            std::thread::spawn(move || {
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => return,
+                        Ok(_) => {}
+                    }
+                    match behavior(line.trim_end()) {
+                        Some(reply) => {
+                            if writer
+                                .write_all(reply.as_bytes())
+                                .and_then(|()| writer.write_all(b"\n"))
+                                .and_then(|()| writer.flush())
+                                .is_err()
+                            {
+                                return;
+                            }
+                        }
+                        None => return,
+                    }
+                }
+            });
+        }
+    });
+    addr
+}
+
+fn assert_bit_identical(local: &PipelineResult, dist: &PipelineResult) {
+    assert_eq!(local.labels, dist.labels, "labels diverged");
+    assert_eq!(local.counts, dist.counts, "counts diverged");
+    assert_eq!(local.centers, dist.centers, "centers diverged (bitwise)");
+    assert_eq!(
+        local.inertia.to_bits(),
+        dist.inertia.to_bits(),
+        "inertia diverged (bitwise): {} vs {}",
+        local.inertia,
+        dist.inertia
+    );
+}
+
+/// Run the same data through a local fit and a remote fit and demand
+/// identical bits; returns the remote config's captured events.
+fn parity_run(data: &Dataset, k: usize, remote: RemoteConfig) -> Vec<String> {
+    let events = remote.events.clone();
+    let local = SubclusterPipeline::new(pipeline_cfg(k, None)).run(data).unwrap();
+    let dist = SubclusterPipeline::new(pipeline_cfg(k, Some(remote)))
+        .run(data)
+        .unwrap();
+    assert_bit_identical(&local, &dist);
+    events.captured()
+}
+
+#[test]
+fn two_real_workers_bit_identical() {
+    let mut w1 = start_worker();
+    let mut w2 = start_worker();
+    let remote = remote_cfg(vec![format!("{}", w1.addr()), format!("{}", w2.addr())]);
+    let events = remote.events.clone();
+    let data = blobs(900, 3, 7);
+    parity_run(&data, 3, remote);
+    // the healthy fleet did all the work: no retries, no fallbacks
+    assert!(events.count("dispatch") >= 2, "both workers dispatched");
+    assert_eq!(events.count("retry"), 0);
+    assert_eq!(events.count("fallback"), 0);
+    assert_eq!(events.count("quarantine"), 0);
+    assert_eq!(events.count("merge"), 1);
+    w1.shutdown();
+    w2.shutdown();
+}
+
+#[test]
+fn dead_address_in_fleet_recovers_bit_identical() {
+    let mut w1 = start_worker();
+    let remote = remote_cfg(vec![dead_addr(), format!("{}", w1.addr())]);
+    let events = remote.events.clone();
+    let data = blobs(600, 3, 11);
+    parity_run(&data, 3, remote);
+    // the dead worker's pinned groups were retried or fell back, and
+    // it was quarantined after consecutive connection refusals
+    assert!(events.count("retry") + events.count("fallback") >= 1);
+    assert_eq!(events.count("quarantine"), 1);
+    w1.shutdown();
+}
+
+#[test]
+fn hung_worker_hits_read_deadline_bit_identical() {
+    let mut w1 = start_worker();
+    let hole = spawn_black_hole();
+    let mut remote = remote_cfg(vec![format!("{hole}"), format!("{}", w1.addr())]);
+    // tight reply deadline so the hang resolves in test time
+    remote.read_timeout = Duration::from_millis(300);
+    remote.max_attempts = 2;
+    remote.quarantine_after = 1;
+    let events = remote.events.clone();
+    let data = blobs(600, 3, 13);
+    parity_run(&data, 3, remote);
+    // every failure reason names the read, proving the deadline (not a
+    // connect error) fired
+    let failures: Vec<String> = events
+        .captured()
+        .into_iter()
+        .filter(|l| l.contains("\"reason\":\"retry\"") || l.contains("\"reason\":\"fallback\""))
+        .collect();
+    assert!(!failures.is_empty(), "the black hole must have failed something");
+    assert!(
+        failures.iter().all(|l| l.contains("read")),
+        "expected read-deadline failures, got: {failures:?}"
+    );
+    assert_eq!(events.count("quarantine"), 1);
+    w1.shutdown();
+}
+
+#[test]
+fn malformed_reply_is_retried_bit_identical() {
+    let mut w1 = start_worker();
+    let garbage = spawn_fake_worker(|_| Some("this is not json".to_string()));
+    let mut remote = remote_cfg(vec![format!("{garbage}"), format!("{}", w1.addr())]);
+    remote.quarantine_after = 1;
+    let events = remote.events.clone();
+    let data = blobs(600, 3, 17);
+    parity_run(&data, 3, remote);
+    assert!(events.count("retry") + events.count("fallback") >= 1);
+    assert_eq!(events.count("quarantine"), 1);
+    w1.shutdown();
+}
+
+#[test]
+fn truncated_reply_is_retried_bit_identical() {
+    let mut w1 = start_worker();
+    // shaped like a reply but missing everything the merge needs
+    let stub = spawn_fake_worker(|_| Some("{\"ok\":true,\"id\":0}".to_string()));
+    let mut remote = remote_cfg(vec![format!("{stub}"), format!("{}", w1.addr())]);
+    remote.quarantine_after = 1;
+    let data = blobs(600, 3, 19);
+    parity_run(&data, 3, remote);
+    // a connection slammed mid-exchange is also just a failed attempt
+    let slam = spawn_fake_worker(|_| None);
+    let mut remote = remote_cfg(vec![format!("{slam}"), format!("{}", w1.addr())]);
+    remote.quarantine_after = 1;
+    parity_run(&data, 3, remote);
+    w1.shutdown();
+}
+
+#[test]
+fn total_fleet_loss_falls_back_bit_identical() {
+    let mut remote = remote_cfg(vec![dead_addr(), dead_addr()]);
+    remote.max_attempts = 1;
+    remote.quarantine_after = 1;
+    let events = remote.events.clone();
+    let data = blobs(600, 3, 23);
+    parity_run(&data, 3, remote);
+    // every group resolved locally; both workers quarantined
+    assert_eq!(events.count("quarantine"), 2);
+    assert!(events.count("fallback") >= 2, "all groups fell back");
+    let merge = events
+        .captured()
+        .into_iter()
+        .find(|l| l.contains("\"reason\":\"merge\""))
+        .expect("merge event");
+    assert!(merge.contains("\"remote\":0"), "no group resolved remotely: {merge}");
+}
+
+#[test]
+fn quarantined_worker_is_probed_and_readmitted() {
+    // answers pings (so the probe succeeds) but botches every
+    // fit_group: it quarantines, gets readmitted, fails again, forever
+    // — while the real worker grinds through the actual work
+    let flaky = spawn_fake_worker(|line| {
+        if line.contains("\"cmd\":\"ping\"") {
+            Some("{\"pong\":true}".to_string())
+        } else {
+            Some("{\"ok\":true}".to_string())
+        }
+    });
+    let mut w1 = start_worker();
+    let mut remote = remote_cfg(vec![format!("{flaky}"), format!("{}", w1.addr())]);
+    remote.quarantine_after = 1;
+    remote.probe_interval = Duration::from_millis(1);
+    let events = remote.events.clone();
+    // enough work per group that the real worker is still busy when
+    // the flaky worker's first probe fires
+    let data = blobs(12_000, 4, 29);
+    parity_run(&data, 4, remote);
+    assert!(events.count("quarantine") >= 1);
+    assert!(
+        events.count("readmit") >= 1,
+        "probe should have readmitted the ping-answering worker: {:?}",
+        events.captured()
+    );
+    w1.shutdown();
+}
+
+#[test]
+fn probe_worker_tells_live_from_dead() {
+    let mut w1 = start_worker();
+    let cfg = remote_cfg(vec![]);
+    assert!(probe_worker(&format!("{}", w1.addr()), &cfg));
+    assert!(!probe_worker(&dead_addr(), &cfg));
+    w1.shutdown();
+    // a shut-down worker stops probing true
+    assert!(!probe_worker(&format!("{}", w1.addr()), &cfg));
+}
+
+/// The wire primitive itself: a `fit_group` answered by a real server
+/// carries the bit-exact centers/counts/inertia of a local
+/// `NativeBackend` run on the same rows — the per-group contract the
+/// whole distributed parity story reduces to.
+#[test]
+fn wire_fit_group_matches_local_backend_bitwise() {
+    let mut server = start_worker();
+    let data = blobs(240, 3, 31);
+    let (n, d, k, iters) = (data.len(), data.dims(), 12, 10);
+    let points = data.as_slice().to_vec();
+
+    // local reference: the exact batch the server must reconstruct
+    let batch = DeviceBatch {
+        b: 1,
+        n,
+        d,
+        k,
+        iters,
+        points: points.clone(),
+        weights: vec![1.0; n],
+        init: strided_init(&points, n, k, d),
+    };
+    let local = NativeBackend::serial().run_batch(&batch).unwrap();
+
+    let rows: Vec<String> = points
+        .chunks(d)
+        .map(|r| {
+            let xs: Vec<String> = r.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", xs.join(","))
+        })
+        .collect();
+    let req = format!(
+        "{{\"cmd\":\"fit_group\",\"id\":7,\"points\":[{}],\"k\":{k},\"iters\":{iters}}}",
+        rows.join(",")
+    );
+    let mut client = Client::connect(server.addr()).unwrap();
+    let v = Json::parse(&client.call(&req).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    assert_eq!(v.get("id").unwrap().as_usize(), Some(7));
+
+    let wire_centers: Vec<f32> = v
+        .get("centers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .flat_map(|row| row.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap() as f32))
+        .collect();
+    let wire_counts: Vec<f32> = v
+        .get("counts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect();
+    let wire_inertia = v.get("inertia").unwrap().as_f64().unwrap() as f32;
+
+    assert_eq!(wire_centers, local.centers, "centers diverged over the wire");
+    assert_eq!(wire_counts, local.counts, "counts diverged over the wire");
+    assert_eq!(
+        wire_inertia.to_bits(),
+        local.inertia[0].to_bits(),
+        "inertia diverged over the wire"
+    );
+    drop(client);
+    server.shutdown();
+}
+
+/// Streaming fits ride the same seam: `fit_source` with a remote fleet
+/// is bit-identical to the resident local fit on the same bytes.
+#[test]
+fn streaming_fit_uses_the_fleet_bit_identical() {
+    use parsample::data::source::SliceSource;
+    use parsample::model::ClusterModel;
+
+    let mut w1 = start_worker();
+    let data = blobs(600, 3, 37);
+    let local = SubclusterPipeline::new(pipeline_cfg(3, None)).fit(&data).unwrap();
+
+    let remote = remote_cfg(vec![format!("{}", w1.addr())]);
+    let events = remote.events.clone();
+    let dist = SubclusterPipeline::new(pipeline_cfg(3, Some(remote)))
+        .fit_source(&mut SliceSource::of(&data))
+        .unwrap();
+    assert_eq!(local.centers(), dist.centers(), "streamed remote fit diverged");
+    assert!(events.count("dispatch") >= 1, "the fleet saw the streamed groups");
+    w1.shutdown();
+}
