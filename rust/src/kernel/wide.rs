@@ -129,6 +129,12 @@ impl<'a> WidePlan<'a> {
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2")]
     #[allow(clippy::too_many_arguments)]
+    // SAFETY: `#[target_feature(enable = "avx2")]` makes this fn
+    // unsafe to call — executing it on a CPU without AVX2 is undefined
+    // behaviour.  The body is plain safe Rust (no intrinsics, no raw
+    // pointers): the attribute only licenses LLVM to emit 256-bit ops.
+    // Callers must check `is_x86_feature_detected!("avx2")` first; the
+    // only call site gates on the cached `WidePlan::avx2` flag.
     unsafe fn dense_avx2(
         &self,
         points: &[f32],
@@ -145,6 +151,10 @@ impl<'a> WidePlan<'a> {
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2")]
     #[allow(clippy::too_many_arguments)]
+    // SAFETY: same contract as [`WidePlan::dense_avx2`] — unsafe only
+    // because of `#[target_feature(enable = "avx2")]`; the body is safe
+    // Rust and the sole call site gates on `WidePlan::avx2`, which was
+    // populated from `is_x86_feature_detected!("avx2")` at build time.
     unsafe fn gather_avx2(
         &self,
         points: &[f32],
