@@ -134,11 +134,9 @@ impl Batcher {
             }
         }
         for (bucket_name, slots) in by_bucket {
-            let bucket = self
-                .buckets
-                .iter()
-                .find(|b| b.name == bucket_name)
-                .expect("routed to existing bucket");
+            let bucket = self.buckets.iter().find(|b| b.name == bucket_name).ok_or_else(|| {
+                Error::Coordinator(format!("routed slots name unknown bucket '{bucket_name}'"))
+            })?;
             for chunk in slots.chunks(bucket.b) {
                 dispatches.push(self.pack(data, bucket, chunk)?);
             }

@@ -224,8 +224,8 @@ fn worker_loop(
                     .queue
                     .iter()
                     .position(|j| j.not_before <= now && j.pinned.map_or(true, |p| p == me));
-                match pos {
-                    Some(pos) => break st.queue.remove(pos).expect("position exists"),
+                match pos.and_then(|p| st.queue.remove(p)) {
+                    Some(job) => break job,
                     None => {
                         // park until a notify or the nearest backoff gate
                         let (next, _) = cv

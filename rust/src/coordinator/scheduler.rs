@@ -187,39 +187,30 @@ fn run_job(
         final_k: job.k,
         seed: job.seed,
     };
-    if !pipelines.iter().any(|(k, _)| *k == key) {
-        let mut b = PipelineConfig::builder()
-            .scheme(job.scheme)
-            .compression(job.compression)
-            .final_k(job.k)
-            .backend(cfg.backend)
-            .artifacts_dir(cfg.artifacts_dir.clone())
-            .workers(cfg.workers)
-            .seed(job.seed);
-        if let Some(g) = job.num_groups {
-            b = b.num_groups(g);
-        }
-        let pipeline = SubclusterPipeline::new(b.build()?);
-        pipelines.push((key, pipeline));
-        // LRU-ish cap so a scan over parameters can't hoard memory
-        if pipelines.len() > 8 {
-            pipelines.remove(0);
-        }
-    }
-    let pipeline = &pipelines
-        .iter()
-        .find(|(k, _)| {
-            *k == PipelineKey {
-                scheme: job.scheme,
-                num_groups: job.num_groups,
-                compression_milli: (job.compression * 1000.0) as u32,
-                final_k: job.k,
-                seed: job.seed,
+    let pos = match pipelines.iter().position(|(k, _)| *k == key) {
+        Some(pos) => pos,
+        None => {
+            let mut b = PipelineConfig::builder()
+                .scheme(job.scheme)
+                .compression(job.compression)
+                .final_k(job.k)
+                .backend(cfg.backend)
+                .artifacts_dir(cfg.artifacts_dir.clone())
+                .workers(cfg.workers)
+                .seed(job.seed);
+            if let Some(g) = job.num_groups {
+                b = b.num_groups(g);
             }
-        })
-        .expect("inserted above")
-        .1;
-    let r = pipeline.run(&data)?;
+            let pipeline = SubclusterPipeline::new(b.build()?);
+            pipelines.push((key, pipeline));
+            // LRU-ish cap so a scan over parameters can't hoard memory
+            if pipelines.len() > 8 {
+                pipelines.remove(0);
+            }
+            pipelines.len() - 1
+        }
+    };
+    let r = pipelines[pos].1.run(&data)?;
     Ok(JobResult {
         id: job.id,
         centers: r.centers,

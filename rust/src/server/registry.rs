@@ -61,7 +61,7 @@ impl ModelRegistry {
     /// of the model evicted to stay under the cap, if any.
     pub fn insert(&self, name: impl Into<String>, model: FittedModel) -> Option<String> {
         let name = name.into();
-        let mut inner = self.inner.lock().expect("registry lock");
+        let mut inner = self.inner.lock().expect("registry lock poisoned");
         inner.retain(|e| e.name != name);
         inner.push(Entry { name, model: Arc::new(model), predicts: 0 });
         if inner.len() > self.cap {
@@ -72,7 +72,7 @@ impl ModelRegistry {
 
     /// Fetch a model by name, refreshing its recency.
     pub fn get(&self, name: &str) -> Option<Arc<FittedModel>> {
-        let mut inner = self.inner.lock().expect("registry lock");
+        let mut inner = self.inner.lock().expect("registry lock poisoned");
         let pos = inner.iter().position(|e| e.name == name)?;
         let entry = inner.remove(pos);
         let model = Arc::clone(&entry.model);
@@ -84,7 +84,7 @@ impl ModelRegistry {
     /// server's chunked predict path calls this; counters surface in
     /// the `stats` response).  No-op if the model was evicted since.
     pub fn note_predicts(&self, name: &str, n: u64) {
-        let mut inner = self.inner.lock().expect("registry lock");
+        let mut inner = self.inner.lock().expect("registry lock poisoned");
         if let Some(e) = inner.iter_mut().find(|e| e.name == name) {
             e.predicts = e.predicts.saturating_add(n);
         }
@@ -92,14 +92,14 @@ impl ModelRegistry {
 
     /// Per-model predict counters, LRU first (for `stats`).
     pub fn predict_stats(&self) -> Vec<(String, u64)> {
-        let inner = self.inner.lock().expect("registry lock");
+        let inner = self.inner.lock().expect("registry lock poisoned");
         inner.iter().map(|e| (e.name.clone(), e.predicts)).collect()
     }
 
     /// The registered models themselves, LRU first — the snapshot
     /// writer walks this.  Does not touch recency.
     pub fn entries(&self) -> Vec<(String, Arc<FittedModel>)> {
-        let inner = self.inner.lock().expect("registry lock");
+        let inner = self.inner.lock().expect("registry lock poisoned");
         inner
             .iter()
             .map(|e| (e.name.clone(), Arc::clone(&e.model)))
@@ -109,7 +109,7 @@ impl ModelRegistry {
     /// Snapshot of the registered models, LRU first (the order clients
     /// see from the `models` request).  Does not touch recency.
     pub fn list(&self) -> Vec<ModelInfo> {
-        let inner = self.inner.lock().expect("registry lock");
+        let inner = self.inner.lock().expect("registry lock poisoned");
         inner
             .iter()
             .map(|e| ModelInfo {
@@ -124,7 +124,7 @@ impl ModelRegistry {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("registry lock").len()
+        self.inner.lock().expect("registry lock poisoned").len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -57,7 +57,10 @@ where
                     }
                     local.push((i, run_caught(&f, i, &items[i])));
                 }
-                let mut guard = slots.lock().unwrap();
+                // a poisoned slot lock means a sibling worker panicked
+                // mid-writeback; propagating the panic is the only
+                // sound option (results would be incomplete)
+                let mut guard = slots.lock().expect("result slot lock poisoned");
                 for (i, r) in local {
                     guard[i] = Some(r);
                 }
@@ -107,13 +110,13 @@ impl ThreadPool {
                 let rx = Arc::clone(&rx);
                 let pending = Arc::clone(&pending);
                 thread::spawn(move || loop {
-                    let job = { rx.lock().unwrap().recv() };
+                    let job = { rx.lock().expect("job queue lock poisoned").recv() };
                     match job {
                         Ok(job) => {
                             // Panics are contained per-job.
                             let _ = catch_unwind(AssertUnwindSafe(job));
                             let (lock, cvar) = &*pending;
-                            *lock.lock().unwrap() -= 1;
+                            *lock.lock().expect("pending counter lock poisoned") -= 1;
                             cvar.notify_all();
                         }
                         Err(_) => break,
@@ -129,7 +132,7 @@ impl ThreadPool {
     pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) -> usize {
         let (lock, _) = &*self.pending;
         let depth = {
-            let mut g = lock.lock().unwrap();
+            let mut g = lock.lock().expect("pending counter lock poisoned");
             *g += 1;
             *g
         };
@@ -143,15 +146,15 @@ impl ThreadPool {
 
     /// Jobs queued or running right now.
     pub fn pending(&self) -> usize {
-        *self.pending.0.lock().unwrap()
+        *self.pending.0.lock().expect("pending counter lock poisoned")
     }
 
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
         let (lock, cvar) = &*self.pending;
-        let mut g = lock.lock().unwrap();
+        let mut g = lock.lock().expect("pending counter lock poisoned");
         while *g > 0 {
-            g = cvar.wait(g).unwrap();
+            g = cvar.wait(g).expect("pending counter lock poisoned");
         }
     }
 }
