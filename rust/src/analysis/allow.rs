@@ -1,0 +1,247 @@
+//! Hand-parsed allowlist for `parsample-lint`.
+//!
+//! The format is a strict subset of TOML — `[[allow]]` array-of-table
+//! headers, `key = "string"` / `key = integer` pairs, `#` comments —
+//! parsed by hand because the crate vendors no dependencies.  Every
+//! entry MUST carry a `reason`; entries that suppress nothing fail the
+//! build as `unused-allow` findings, so the list can only shrink
+//! honestly.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::{rule_id, Finding};
+
+/// One `[[allow]]` entry.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    /// Rule id this entry suppresses (must be a known rule).
+    pub rule: String,
+    /// Suffix match against the finding's file path.
+    pub file: String,
+    /// Exact line, if pinned.
+    pub line: Option<usize>,
+    /// Substring the finding message must contain, if given.
+    pub contains: Option<String>,
+    /// Mandatory human justification.
+    pub reason: String,
+    /// Line in the allowlist file where the entry starts (for
+    /// `unused-allow` findings).
+    pub defined_at: usize,
+}
+
+impl AllowEntry {
+    /// Does this entry suppress `f`?
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.rule == f.rule
+            && f.file.ends_with(&self.file)
+            && self.line.map_or(true, |l| l == f.line)
+            && self
+                .contains
+                .as_ref()
+                .map_or(true, |c| f.message.contains(c))
+    }
+}
+
+/// A parsed allowlist plus its source label (for findings).
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+    pub source: String,
+}
+
+impl Allowlist {
+    /// An allowlist that suppresses nothing.
+    pub fn empty() -> Allowlist {
+        Allowlist::default()
+    }
+
+    /// Load and parse `path`; a missing file is an error (the repo
+    /// checks in an empty-but-documented list on purpose).
+    pub fn load(path: &Path) -> Result<Allowlist> {
+        let text = std::fs::read_to_string(path).map_err(Error::Io)?;
+        Allowlist::parse(&path.to_string_lossy().replace('\\', "/"), &text)
+    }
+
+    /// Parse allowlist text; `source` labels errors and findings.
+    pub fn parse(source: &str, text: &str) -> Result<Allowlist> {
+        let bad = |ln: usize, msg: String| Error::Config(format!("{source}:{ln}: {msg}"));
+        let mut entries: Vec<AllowEntry> = Vec::new();
+        let mut cur: Option<AllowEntry> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let ln = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[allow]]" {
+                if let Some(e) = cur.take() {
+                    finish(source, e, &mut entries)?;
+                }
+                cur = Some(AllowEntry {
+                    rule: String::new(),
+                    file: String::new(),
+                    line: None,
+                    contains: None,
+                    reason: String::new(),
+                    defined_at: ln,
+                });
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(bad(ln, format!("expected `key = value`, got `{line}`")));
+            };
+            let entry = cur
+                .as_mut()
+                .ok_or_else(|| bad(ln, "key outside an [[allow]] block".to_string()))?;
+            let key = key.trim();
+            let value = value.trim();
+            match key {
+                "rule" => entry.rule = unquote(value).ok_or_else(|| bad(ln, q(value)))?,
+                "file" => entry.file = unquote(value).ok_or_else(|| bad(ln, q(value)))?,
+                "contains" => {
+                    entry.contains = Some(unquote(value).ok_or_else(|| bad(ln, q(value)))?)
+                }
+                "reason" => entry.reason = unquote(value).ok_or_else(|| bad(ln, q(value)))?,
+                "line" => {
+                    entry.line = Some(
+                        value
+                            .parse::<usize>()
+                            .map_err(|_| bad(ln, format!("`line` must be an integer: {value}")))?,
+                    )
+                }
+                other => return Err(bad(ln, format!("unknown key `{other}`"))),
+            }
+        }
+        if let Some(e) = cur.take() {
+            finish(source, e, &mut entries)?;
+        }
+        Ok(Allowlist { entries, source: source.to_string() })
+    }
+
+    /// Findings for entries whose index is not in `used`.
+    pub fn unused(&self, used: &[bool]) -> Vec<Finding> {
+        self.entries
+            .iter()
+            .zip(used)
+            .filter(|(_, u)| !**u)
+            .map(|(e, _)| Finding {
+                rule: rule_id::UNUSED_ALLOW,
+                file: self.source.clone(),
+                line: e.defined_at,
+                message: format!(
+                    "allow entry (rule `{}`, file `{}`) suppressed nothing — remove it",
+                    e.rule, e.file
+                ),
+            })
+            .collect()
+    }
+}
+
+fn finish(source: &str, e: AllowEntry, entries: &mut Vec<AllowEntry>) -> Result<()> {
+    let bad =
+        |msg: String| Error::Config(format!("{source}:{}: {msg}", e.defined_at));
+    if e.rule.is_empty() {
+        return Err(bad("entry is missing `rule`".to_string()));
+    }
+    if !rule_id::ALL.contains(&e.rule.as_str()) || e.rule == rule_id::UNUSED_ALLOW {
+        return Err(bad(format!("`{}` is not an allowable rule id", e.rule)));
+    }
+    if e.file.is_empty() {
+        return Err(bad("entry is missing `file`".to_string()));
+    }
+    if e.reason.is_empty() {
+        return Err(bad("entry is missing `reason` (justify or fix)".to_string()));
+    }
+    entries.push(e);
+    Ok(())
+}
+
+/// Drop a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> Option<String> {
+    let inner = v.strip_prefix('"')?.strip_suffix('"')?;
+    Some(inner.to_string())
+}
+
+fn q(v: &str) -> String {
+    format!("expected a double-quoted string, got `{v}`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rule_id;
+
+    #[test]
+    fn parses_entries_and_matches() {
+        let text = r#"
+# repo allowlist
+[[allow]]
+rule = "no-panic-path"
+file = "server/mod.rs"
+line = 42
+contains = "unwrap"
+reason = "fuzzing harness, removed in #88"
+
+[[allow]]
+rule = "mutex-poison-doc"
+file = "coordinator/remote.rs"
+reason = "guard dropped before any panic site"
+"#;
+        let al = Allowlist::parse("allow.toml", text).unwrap();
+        assert_eq!(al.entries.len(), 2);
+        let f = Finding {
+            rule: rule_id::NO_PANIC,
+            file: "src/server/mod.rs".to_string(),
+            line: 42,
+            message: "`.unwrap()` in non-test server/coordinator code".to_string(),
+        };
+        assert!(al.entries[0].matches(&f));
+        assert!(!al.entries[1].matches(&f));
+        let off = Finding { line: 43, ..f };
+        assert!(!al.entries[0].matches(&off));
+    }
+
+    #[test]
+    fn rejects_missing_reason_and_unknown_keys() {
+        let no_reason = "[[allow]]\nrule = \"no-panic-path\"\nfile = \"x.rs\"\n";
+        assert!(Allowlist::parse("a", no_reason).is_err());
+        let unknown = "[[allow]]\nrule = \"no-panic-path\"\nfile = \"x.rs\"\nreason = \"r\"\nseverity = \"low\"\n";
+        assert!(Allowlist::parse("a", unknown).is_err());
+        let bad_rule = "[[allow]]\nrule = \"nonexistent\"\nfile = \"x.rs\"\nreason = \"r\"\n";
+        assert!(Allowlist::parse("a", bad_rule).is_err());
+        let stray = "rule = \"no-panic-path\"\n";
+        assert!(Allowlist::parse("a", stray).is_err());
+    }
+
+    #[test]
+    fn unused_entries_become_findings() {
+        let text = "[[allow]]\nrule = \"unsafe-safety\"\nfile = \"never.rs\"\nreason = \"r\"\n";
+        let al = Allowlist::parse("allow.toml", text).unwrap();
+        let findings = al.unused(&[false]);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, rule_id::UNUSED_ALLOW);
+        assert_eq!(findings[0].line, 1);
+    }
+
+    #[test]
+    fn comments_outside_strings_are_stripped() {
+        let text = "[[allow]]\nrule = \"no-panic-path\" # why\nfile = \"a#b.rs\"\nreason = \"uses # sign\"\n";
+        let al = Allowlist::parse("allow.toml", text).unwrap();
+        assert_eq!(al.entries[0].file, "a#b.rs");
+        assert_eq!(al.entries[0].reason, "uses # sign");
+    }
+}

@@ -1,0 +1,408 @@
+//! A minimal Rust tokenizer for the invariant linter.
+//!
+//! This is not a parser: it only needs to be precise about the places
+//! a grep would lie — comments (line, nested block, doc), string
+//! literals (plain, raw with any `#` count, byte), char literals vs
+//! lifetimes, and numbers — so the rule pass in
+//! [`crate::analysis::rules`] can reason over identifiers and
+//! punctuation without being fooled by `"unsafe"` inside a string or
+//! `.unwrap()` inside a comment.  Everything else (keywords vs idents,
+//! operators) is left to the rule pass.
+
+/// One lexed token with the 1-based source line it starts on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub line: usize,
+    pub tok: Tok,
+}
+
+/// Token kind.  Multi-character operators arrive as individual
+/// [`Tok::Punct`] characters — the rule pass only ever matches short
+/// punctuation sequences, so splitting is harmless and keeps the lexer
+/// trivial.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (the rule pass tells them apart).
+    Ident(String),
+    /// Numeric literal (verbatim text, unused by current rules).
+    Num(String),
+    /// String literal *contents* (escapes left verbatim).
+    Str(String),
+    /// Char or byte literal (contents never matter to the rules).
+    Char,
+    /// Lifetime (without the leading `'`).
+    Lifetime(String),
+    /// Single punctuation character.
+    Punct(char),
+    /// Comment *contents* — for `// x` the text is ` x`, for `//! x`
+    /// it is `! x`, for `/* x */` it is ` x `.  `inner_doc` is true
+    /// for `//!` / `/*!` forms (module-level docs).
+    Comment { text: String, inner_doc: bool },
+}
+
+/// Tokenize `src`.  Unterminated literals/comments end at EOF rather
+/// than erroring: the linter must keep walking a tree even when one
+/// file is mid-edit garbage.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    Lexer { b: src.chars().collect(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer {
+    b: Vec<char>,
+    i: usize,
+    line: usize,
+    out: Vec<Token>,
+}
+
+impl Lexer {
+    fn run(mut self) -> Vec<Token> {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            if c == '\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if c.is_whitespace() {
+                self.i += 1;
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment();
+            } else if c == '"' {
+                self.string();
+            } else if c == '\'' {
+                self.char_or_lifetime();
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else if c.is_alphabetic() || c == '_' {
+                self.ident_or_prefixed();
+            } else {
+                self.push(Tok::Punct(c));
+                self.i += 1;
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, tok: Tok) {
+        self.out.push(Token { line: self.line, tok });
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i + 2;
+        let mut j = start;
+        while j < self.b.len() && self.b[j] != '\n' {
+            j += 1;
+        }
+        let text: String = self.b[start..j].iter().collect();
+        let inner_doc = text.starts_with('!');
+        self.push(Tok::Comment { text, inner_doc });
+        self.i = j;
+    }
+
+    fn block_comment(&mut self) {
+        let start_line = self.line;
+        let mut depth = 1usize;
+        let mut j = self.i + 2;
+        let mut text = String::new();
+        while j < self.b.len() && depth > 0 {
+            if self.b[j] == '/' && self.b.get(j + 1) == Some(&'*') {
+                depth += 1;
+                text.push_str("/*");
+                j += 2;
+            } else if self.b[j] == '*' && self.b.get(j + 1) == Some(&'/') {
+                depth -= 1;
+                if depth > 0 {
+                    text.push_str("*/");
+                }
+                j += 2;
+            } else {
+                if self.b[j] == '\n' {
+                    self.line += 1;
+                }
+                text.push(self.b[j]);
+                j += 1;
+            }
+        }
+        let inner_doc = text.starts_with('!');
+        self.out.push(Token { line: start_line, tok: Tok::Comment { text, inner_doc } });
+        self.i = j;
+    }
+
+    /// Plain (non-raw) string: `self.i` must point at the opening `"`.
+    fn string(&mut self) {
+        let start_line = self.line;
+        let mut j = self.i + 1;
+        let mut text = String::new();
+        while j < self.b.len() {
+            let c = self.b[j];
+            if c == '\\' {
+                text.push(c);
+                if let Some(&n) = self.b.get(j + 1) {
+                    if n == '\n' {
+                        self.line += 1;
+                    }
+                    text.push(n);
+                }
+                j += 2;
+            } else if c == '"' {
+                j += 1;
+                break;
+            } else {
+                if c == '\n' {
+                    self.line += 1;
+                }
+                text.push(c);
+                j += 1;
+            }
+        }
+        self.out.push(Token { line: start_line, tok: Tok::Str(text) });
+        self.i = j;
+    }
+
+    /// Raw string: `self.i` points at the first `#` or the quote right
+    /// after the `r`/`br` prefix (the caller consumed the prefix).
+    fn raw_string(&mut self) {
+        let start_line = self.line;
+        let mut hashes = 0usize;
+        while self.peek(hashes) == Some('#') {
+            hashes += 1;
+        }
+        // caller guaranteed a quote follows the hashes
+        let mut j = self.i + hashes + 1;
+        let mut text = String::new();
+        'scan: while j < self.b.len() {
+            if self.b[j] == '"' {
+                let mut ok = true;
+                for h in 0..hashes {
+                    if self.b.get(j + 1 + h) != Some(&'#') {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    j += 1 + hashes;
+                    break 'scan;
+                }
+            }
+            if self.b[j] == '\n' {
+                self.line += 1;
+            }
+            text.push(self.b[j]);
+            j += 1;
+        }
+        self.out.push(Token { line: start_line, tok: Tok::Str(text) });
+        self.i = j;
+    }
+
+    fn char_or_lifetime(&mut self) {
+        // lifetime: 'ident not closed by a quote ('x' is a char literal)
+        if let Some(c1) = self.peek(1) {
+            if c1.is_alphabetic() || c1 == '_' {
+                let mut j = self.i + 1;
+                while j < self.b.len() && (self.b[j].is_alphanumeric() || self.b[j] == '_') {
+                    j += 1;
+                }
+                if self.b.get(j) == Some(&'\'') && j == self.i + 2 {
+                    // exactly one ident char then a quote: 'x'
+                    self.push(Tok::Char);
+                    self.i = j + 1;
+                } else {
+                    let name: String = self.b[self.i + 1..j].iter().collect();
+                    self.push(Tok::Lifetime(name));
+                    self.i = j;
+                }
+                return;
+            }
+        }
+        // escape ('\n', '\u{7fff}', '\'') or a single non-ident char
+        let mut j = self.i + 1;
+        if self.peek(1) == Some('\\') {
+            j += 2; // skip backslash + escaped char
+            while j < self.b.len() && self.b[j] != '\'' {
+                j += 1;
+            }
+        } else if j < self.b.len() {
+            if self.b[j] == '\n' {
+                self.line += 1;
+            }
+            j += 1;
+        }
+        if self.b.get(j) == Some(&'\'') {
+            j += 1;
+        }
+        self.push(Tok::Char);
+        self.i = j;
+    }
+
+    fn number(&mut self) {
+        let start = self.i;
+        let mut j = self.i;
+        let mut prev = '\0';
+        while j < self.b.len() {
+            let c = self.b[j];
+            let take = c.is_ascii_alphanumeric()
+                || c == '_'
+                || (c == '.' && self.b.get(j + 1).is_some_and(|n| n.is_ascii_digit()))
+                || ((c == '+' || c == '-') && (prev == 'e' || prev == 'E'));
+            if !take {
+                break;
+            }
+            prev = c;
+            j += 1;
+        }
+        let text: String = self.b[start..j].iter().collect();
+        self.push(Tok::Num(text));
+        self.i = j;
+    }
+
+    fn ident_or_prefixed(&mut self) {
+        let start = self.i;
+        let mut j = self.i;
+        while j < self.b.len() && (self.b[j].is_alphanumeric() || self.b[j] == '_') {
+            j += 1;
+        }
+        let word: String = self.b[start..j].iter().collect();
+        self.i = j;
+        // string-literal prefixes: r"..", r#".."#, b"..", br#".."#,
+        // and raw identifiers r#ident
+        let next = self.peek(0);
+        let str_prefix = matches!(word.as_str(), "r" | "b" | "br" | "rb");
+        if str_prefix && next == Some('"') {
+            if word.contains('r') {
+                self.raw_string();
+            } else {
+                self.string();
+            }
+            return;
+        }
+        if matches!(word.as_str(), "r" | "br" | "rb") && next == Some('#') {
+            let mut h = 0usize;
+            while self.peek(h) == Some('#') {
+                h += 1;
+            }
+            if self.peek(h) == Some('"') {
+                self.raw_string();
+                return;
+            }
+            if word == "r" && h == 1 {
+                self.i += 1; // consume '#', lex the raw identifier
+                let istart = self.i;
+                while self.i < self.b.len()
+                    && (self.b[self.i].is_alphanumeric() || self.b[self.i] == '_')
+                {
+                    self.i += 1;
+                }
+                let name: String = self.b[istart..self.i].iter().collect();
+                self.push(Tok::Ident(name));
+                return;
+            }
+        }
+        if word == "b" && next == Some('\'') {
+            // byte literal b'x'
+            self.char_or_lifetime();
+            // a lifetime can't follow `b`, so coerce to Char
+            if let Some(t) = self.out.last_mut() {
+                if matches!(t.tok, Tok::Lifetime(_)) {
+                    t.tok = Tok::Char;
+                }
+            }
+            return;
+        }
+        self.push(Tok::Ident(word));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        tokenize(src).into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let toks = kinds("let x = 4096usize + 1.0e-40;");
+        assert!(toks.contains(&Tok::Ident("let".into())));
+        assert!(toks.contains(&Tok::Num("4096usize".into())));
+        assert!(toks.contains(&Tok::Num("1.0e-40".into())));
+        assert!(toks.contains(&Tok::Punct(';')));
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let toks = kinds(r#"let s = "unsafe .unwrap() // not a comment";"#);
+        assert!(toks.iter().all(|t| !matches!(t, Tok::Ident(w) if w == "unsafe")));
+        assert!(toks
+            .iter()
+            .any(|t| matches!(t, Tok::Str(s) if s.contains("unsafe"))));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let toks = kinds(r####"let a = r#"quote " inside"#; let b = "esc \" done";"####);
+        let strs: Vec<&String> = toks
+            .iter()
+            .filter_map(|t| if let Tok::Str(s) = t { Some(s) } else { None })
+            .collect();
+        assert_eq!(strs.len(), 2);
+        assert!(strs[0].contains("quote \" inside"));
+        assert!(strs[1].contains("esc"));
+    }
+
+    #[test]
+    fn comments_and_doc_comments() {
+        let toks = kinds("//! inner\n/// outer\n// SAFETY: ok\n/* block /* nested */ end */ fn x() {}");
+        let comments: Vec<(&String, bool)> = toks
+            .iter()
+            .filter_map(|t| match t {
+                Tok::Comment { text, inner_doc } => Some((text, *inner_doc)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(comments.len(), 4);
+        assert!(comments[0].1, "//! is an inner doc");
+        assert!(!comments[1].1, "/// is not inner");
+        assert!(comments[2].0.contains("SAFETY:"));
+        assert!(comments[3].0.contains("nested"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let lifetimes: Vec<&Tok> =
+            toks.iter().filter(|t| matches!(t, Tok::Lifetime(_))).collect();
+        let chars: Vec<&Tok> = toks.iter().filter(|t| matches!(t, Tok::Char)).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert_eq!(chars.len(), 2);
+    }
+
+    #[test]
+    fn loop_labels_lex_as_lifetimes() {
+        let toks = kinds("'pool: loop { break 'pool; }");
+        assert!(matches!(&toks[0], Tok::Lifetime(n) if n == "pool"));
+        assert!(toks.contains(&Tok::Ident("loop".into())));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_tokens() {
+        let src = "let a = \"two\nlines\";\nlet b = 1;";
+        let toks = tokenize(src);
+        let b = toks
+            .iter()
+            .find(|t| matches!(&t.tok, Tok::Ident(w) if w == "b"))
+            .expect("found b");
+        assert_eq!(b.line, 3);
+    }
+
+    #[test]
+    fn tuple_field_access_is_not_a_float() {
+        let toks = kinds("self.pending.0.lock()");
+        assert!(toks.contains(&Tok::Num("0".into())));
+        assert!(toks.contains(&Tok::Ident("lock".into())));
+    }
+}

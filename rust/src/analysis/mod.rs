@@ -1,0 +1,188 @@
+//! Invariant linter: mechanical enforcement of the crate's
+//! determinism, safety, and concurrency contracts.
+//!
+//! The repo's guarantees — bit-exact clustering across worker counts,
+//! no panics on server request paths, poisoning-aware locking, audited
+//! `unsafe` — were prose until now.  This module turns each one into a
+//! token-level rule over `src/**` so CI can fail the build the moment
+//! a change breaks a contract instead of a reviewer noticing (or not).
+//!
+//! Dependency-free like the rest of the crate: the lexer in
+//! [`lexer`] hand-tokenizes Rust (comments, raw strings, lifetimes),
+//! [`rules`] runs a brace-depth state machine over the stream, and
+//! [`allow`] hand-parses the `allow.toml` escape hatch.  Findings are
+//! emitted as reason-tagged JSONL through
+//! [`crate::telemetry::events::EventLog`] — the same wire shape the
+//! distributed fit path logs, so CI tooling can route both.
+//!
+//! Run it as `cargo run --bin parsample-lint`; rule ids, scopes, and
+//! the allowlist exception process are documented in the crate-level
+//! "Invariants" section of `lib.rs`.
+
+pub mod allow;
+pub mod lexer;
+pub mod rules;
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::telemetry::events::EventLog;
+use crate::util::json::Json;
+
+pub use allow::{AllowEntry, Allowlist};
+
+/// Stable rule identifiers — these appear in JSONL output, allowlist
+/// entries, and the `lib.rs` Invariants table, so they never change.
+pub mod rule_id {
+    /// `unsafe` without an adjacent `// SAFETY:` comment.
+    pub const UNSAFE_SAFETY: &str = "unsafe-safety";
+    /// Condvar wait outside a `while`/`loop` re-check.
+    pub const CONDVAR_WAIT: &str = "condvar-wait-while";
+    /// `.lock()` that neither handles nor documents poisoning.
+    pub const MUTEX_POISON: &str = "mutex-poison-doc";
+    /// Determinism-critical file missing its contract annotation.
+    pub const CONTRACT_ANNOTATION: &str = "contract-annotation";
+    /// Nondeterminism source inside a contract region.
+    pub const CONTRACT_FORBIDDEN: &str = "contract-forbidden";
+    /// Panic path in non-test server/coordinator code.
+    pub const NO_PANIC: &str = "no-panic-path";
+    /// Wire command without parse/encode/roundtrip-test coverage.
+    pub const PROTOCOL_COVERAGE: &str = "protocol-coverage";
+    /// Allowlist entry that suppressed nothing.
+    pub const UNUSED_ALLOW: &str = "unused-allow";
+
+    /// Every rule id, for validation and docs.
+    pub const ALL: &[&str] = &[
+        UNSAFE_SAFETY,
+        CONDVAR_WAIT,
+        MUTEX_POISON,
+        CONTRACT_ANNOTATION,
+        CONTRACT_FORBIDDEN,
+        NO_PANIC,
+        PROTOCOL_COVERAGE,
+        UNUSED_ALLOW,
+    ];
+}
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Stable rule id (see [`rule_id`]).
+    pub rule: &'static str,
+    /// Normalized (forward-slash) path as linted.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description.
+    pub message: String,
+}
+
+/// The outcome of linting a tree: surviving findings, allowlisted
+/// suppressions (finding + reason), and stale allow entries.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Files linted.
+    pub files: usize,
+    /// Findings no allow entry matched — these fail the build.
+    pub findings: Vec<Finding>,
+    /// Findings an allow entry suppressed, with its reason.
+    pub suppressed: Vec<(Finding, String)>,
+    /// `unused-allow` findings — these also fail the build.
+    pub unused_allow: Vec<Finding>,
+}
+
+impl LintReport {
+    /// True when nothing fails the build.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty() && self.unused_allow.is_empty()
+    }
+
+    /// Count of build-failing findings.
+    pub fn failing(&self) -> usize {
+        self.findings.len() + self.unused_allow.len()
+    }
+}
+
+/// Lint one source string under the given path label (the label drives
+/// path-scoped rules: server/coordinator, contract files, protocol).
+pub fn lint_source(path_label: &str, src: &str) -> Vec<Finding> {
+    rules::check(path_label, src)
+}
+
+/// Lint one file on disk.
+pub fn lint_file(path: &Path) -> Result<Vec<Finding>> {
+    let src = std::fs::read_to_string(path).map_err(Error::Io)?;
+    Ok(lint_source(&path.to_string_lossy().replace('\\', "/"), &src))
+}
+
+/// Lint every `.rs` file under `root` (deterministic sorted walk) and
+/// apply the allowlist.
+pub fn lint_tree(root: &Path, allow: &Allowlist) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut report = LintReport { files: files.len(), ..LintReport::default() };
+    let mut used = vec![false; allow.entries.len()];
+    for f in &files {
+        for finding in lint_file(f)? {
+            match allow.entries.iter().position(|e| e.matches(&finding)) {
+                Some(idx) => {
+                    used[idx] = true;
+                    report.suppressed.push((finding, allow.entries[idx].reason.clone()));
+                }
+                None => report.findings.push(finding),
+            }
+        }
+    }
+    report.unused_allow = allow.unused(&used);
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).map_err(Error::Io)? {
+        let entry = entry.map_err(Error::Io)?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Emit the report as reason-tagged JSONL: one `lint-finding` line per
+/// build-failing finding, one `lint-allowed` line per suppression, and
+/// a trailing `lint-summary`.
+pub fn emit_jsonl(report: &LintReport, log: &EventLog) {
+    for f in report.findings.iter().chain(&report.unused_allow) {
+        log.emit(
+            "lint-finding",
+            vec![
+                ("file", Json::str(f.file.as_str())),
+                ("line", Json::num(f.line as f64)),
+                ("message", Json::str(f.message.as_str())),
+                ("rule", Json::str(f.rule)),
+            ],
+        );
+    }
+    for (f, reason) in &report.suppressed {
+        log.emit(
+            "lint-allowed",
+            vec![
+                ("file", Json::str(f.file.as_str())),
+                ("line", Json::num(f.line as f64)),
+                ("reason_allowed", Json::str(reason.as_str())),
+                ("rule", Json::str(f.rule)),
+            ],
+        );
+    }
+    log.emit(
+        "lint-summary",
+        vec![
+            ("failing", Json::num(report.failing() as f64)),
+            ("files", Json::num(report.files as f64)),
+            ("suppressed", Json::num(report.suppressed.len() as f64)),
+        ],
+    );
+}

@@ -1,0 +1,598 @@
+//! The rule pass: one sequential walk over the token stream with a
+//! brace-depth block stack, plus a dedicated coverage pass for the
+//! wire protocol file.
+//!
+//! Region model for the determinism contract: an *inner* doc comment
+//! (`//!` form) whose text starts with the marker puts the whole file
+//! under contract; a plain comment starting with the marker covers the
+//! next `{...}` block (fn body, mod, impl).  `#[cfg(test)]` /
+//! `#[test]` regions are exempt from the contract, panic, and
+//! poisoning rules — tests panic and time things by design.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{tokenize, Tok, Token};
+use super::{rule_id, Finding};
+
+/// The contract region marker (kept out of comment position in this
+/// file on purpose — the linter lints itself).
+const MARKER: &str = "CONTRACT: bit-exact";
+
+/// Identifiers forbidden inside a contract region: unordered
+/// iteration, wall-clock time, thread identity, seedless RNG.
+const FORBIDDEN_IN_CONTRACT: &[&str] = &[
+    "HashMap",
+    "HashSet",
+    "Instant",
+    "SystemTime",
+    "ThreadId",
+    "thread_rng",
+    "RandomState",
+];
+
+/// Files (suffix-matched) that MUST carry a contract annotation.
+const CONTRACT_REQUIRED: &[&str] = &[
+    "cluster/engine.rs",
+    "kernel/mod.rs",
+    "kernel/scalar.rs",
+    "kernel/wide.rs",
+    "distance/mod.rs",
+    "coordinator/remote.rs",
+];
+
+/// Combinators that count as handling a `PoisonError` when chained
+/// directly onto `.lock()` (`expect` additionally requires the message
+/// to mention poisoning — that is the "documents" half of the rule).
+const LOCK_HANDLERS: &[&str] =
+    &["unwrap_or_else", "map_err", "unwrap_or", "unwrap_or_default", "ok", "err", "and_then"];
+
+struct Block {
+    is_loop: bool,
+    is_test: bool,
+    is_contract: bool,
+}
+
+/// Run every token-level rule over one file.  `path` is used for
+/// scoping (server/coordinator paths, contract-required files) and is
+/// reported verbatim in findings.
+pub fn check(path: &str, src: &str) -> Vec<Finding> {
+    let norm = path.replace('\\', "/");
+    let toks = tokenize(src);
+    let mut out = Vec::new();
+    main_pass(&norm, &toks, &mut out);
+    if CONTRACT_REQUIRED.iter().any(|s| norm.ends_with(s)) && !has_marker(&toks) {
+        out.push(Finding {
+            rule: rule_id::CONTRACT_ANNOTATION,
+            file: norm.clone(),
+            line: 1,
+            message: format!("determinism-contract path lacks a `{MARKER}` annotation"),
+        });
+    }
+    if norm.ends_with("server/protocol.rs") {
+        protocol_pass(&norm, &toks, &mut out);
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn has_marker(toks: &[Token]) -> bool {
+    toks.iter().any(|t| match &t.tok {
+        Tok::Comment { text, .. } => comment_text(text).starts_with(MARKER),
+        _ => false,
+    })
+}
+
+/// Comment text with doc-comment sigils (`!` for `//!`, extra `/` for
+/// `///`) and leading whitespace stripped.
+fn comment_text(text: &str) -> &str {
+    text.trim_start_matches(['!', '/']).trim_start()
+}
+
+/// Next non-comment token after index `i`.
+fn next_code(toks: &[Token], i: usize) -> Option<&Token> {
+    toks[i + 1..].iter().find(|t| !matches!(t.tok, Tok::Comment { .. }))
+}
+
+/// Second non-comment token after index `i`.
+fn next_code2(toks: &[Token], i: usize) -> Option<&Token> {
+    toks[i + 1..]
+        .iter()
+        .filter(|t| !matches!(t.tok, Tok::Comment { .. }))
+        .nth(1)
+}
+
+/// Previous non-comment token before index `i`.
+fn prev_code(toks: &[Token], i: usize) -> Option<&Token> {
+    toks[..i].iter().rev().find(|t| !matches!(t.tok, Tok::Comment { .. }))
+}
+
+fn is_punct(t: Option<&Token>, c: char) -> bool {
+    matches!(t, Some(Token { tok: Tok::Punct(p), .. }) if *p == c)
+}
+
+/// Scan an attribute starting at the `#` at index `i`.  Returns
+/// `(end_index_of_closing_bracket, is_test)` where `is_test` is true
+/// for `#[test]` exactly or any attribute containing the subsequence
+/// `cfg ( test )`.
+fn scan_attribute(toks: &[Token], i: usize) -> (usize, bool) {
+    let mut j = i + 1;
+    // optional `!` of an inner attribute
+    if matches!(toks.get(j), Some(Token { tok: Tok::Punct('!'), .. })) {
+        j += 1;
+    }
+    if !matches!(toks.get(j), Some(Token { tok: Tok::Punct('['), .. })) {
+        return (i, false);
+    }
+    let mut depth = 0usize;
+    let mut content: Vec<&Tok> = Vec::new();
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            t => content.push(t),
+        }
+        j += 1;
+    }
+    let bare_test = content.len() == 1 && matches!(content[0], Tok::Ident(w) if w == "test");
+    let cfg_test = content.windows(4).any(|w| {
+        matches!(w[0], Tok::Ident(id) if id == "cfg")
+            && matches!(w[1], Tok::Punct('('))
+            && matches!(w[2], Tok::Ident(id) if id == "test")
+            && matches!(w[3], Tok::Punct(')'))
+    });
+    (j, bare_test || cfg_test)
+}
+
+fn main_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    let server_scope = ["/server/", "/coordinator/"]
+        .iter()
+        .any(|s| norm.contains(s))
+        || norm.starts_with("server/")
+        || norm.starts_with("coordinator/");
+    let mut stack: Vec<Block> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_contract = false;
+    let mut safety_armed = false;
+    let mut file_contract = false;
+    let mut saw_loop_kw = false;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let line = toks[i].line;
+        match &toks[i].tok {
+            Tok::Comment { text, inner_doc } => {
+                if comment_text(text).starts_with(MARKER) {
+                    if *inner_doc {
+                        file_contract = true;
+                    } else {
+                        pending_contract = true;
+                    }
+                }
+                if text.contains("SAFETY:") {
+                    safety_armed = true;
+                }
+            }
+            Tok::Punct('#') => {
+                let (end, is_test) = scan_attribute(toks, i);
+                if is_test {
+                    pending_test = true;
+                }
+                // skip the attribute body so its idents/strings don't
+                // feed the rules below
+                if end > i {
+                    i = end;
+                }
+            }
+            Tok::Punct('{') => {
+                let parent_test = stack.iter().any(|b| b.is_test);
+                let parent_contract = stack.iter().any(|b| b.is_contract);
+                stack.push(Block {
+                    is_loop: saw_loop_kw,
+                    is_test: pending_test || parent_test,
+                    is_contract: pending_contract || parent_contract,
+                });
+                saw_loop_kw = false;
+                pending_test = false;
+                pending_contract = false;
+                safety_armed = false;
+            }
+            Tok::Punct('}') => {
+                stack.pop();
+                saw_loop_kw = false;
+                pending_test = false;
+                pending_contract = false;
+                safety_armed = false;
+            }
+            Tok::Punct(';') => {
+                saw_loop_kw = false;
+                pending_test = false;
+                pending_contract = false;
+                safety_armed = false;
+            }
+            Tok::Ident(w) => {
+                let in_test = pending_test || stack.iter().any(|b| b.is_test);
+                let in_contract =
+                    file_contract || pending_contract || stack.iter().any(|b| b.is_contract);
+                let dotted = is_punct(prev_code(toks, i), '.');
+                let called = is_punct(next_code(toks, i), '(');
+                match w.as_str() {
+                    "loop" | "while" => saw_loop_kw = true,
+                    "unsafe" => {
+                        if !safety_armed {
+                            out.push(Finding {
+                                rule: rule_id::UNSAFE_SAFETY,
+                                file: norm.to_string(),
+                                line,
+                                message: "`unsafe` without an adjacent `// SAFETY:` comment"
+                                    .to_string(),
+                            });
+                        }
+                        safety_armed = false;
+                    }
+                    "wait" | "wait_timeout" | "wait_while" | "wait_timeout_while" => {
+                        if dotted && called && !stack.iter().any(|b| b.is_loop) {
+                            out.push(Finding {
+                                rule: rule_id::CONDVAR_WAIT,
+                                file: norm.to_string(),
+                                line,
+                                message: format!(
+                                    "`.{w}(` outside a `while`/`loop` re-check \
+                                     (condvar wakeups are spurious)"
+                                ),
+                            });
+                        }
+                    }
+                    "lock" => {
+                        if dotted && called && !in_test {
+                            check_lock_chain(norm, toks, i, line, out);
+                        }
+                    }
+                    "unwrap" => {
+                        if server_scope && !in_test && dotted && called {
+                            out.push(Finding {
+                                rule: rule_id::NO_PANIC,
+                                file: norm.to_string(),
+                                line,
+                                message: "`.unwrap()` in non-test server/coordinator code"
+                                    .to_string(),
+                            });
+                        }
+                    }
+                    "expect" => {
+                        if server_scope && !in_test && dotted && called {
+                            let msg_documents_poison = matches!(
+                                next_code2(toks, i),
+                                Some(Token { tok: Tok::Str(s), .. }) if s.contains("poison")
+                            );
+                            if !msg_documents_poison {
+                                out.push(Finding {
+                                    rule: rule_id::NO_PANIC,
+                                    file: norm.to_string(),
+                                    line,
+                                    message: "`.expect()` in non-test server/coordinator code \
+                                              (only poisoning-policy expects are exempt)"
+                                        .to_string(),
+                                });
+                            }
+                        }
+                    }
+                    "panic" | "todo" | "unimplemented" => {
+                        if server_scope
+                            && !in_test
+                            && is_punct(next_code(toks, i), '!')
+                        {
+                            out.push(Finding {
+                                rule: rule_id::NO_PANIC,
+                                file: norm.to_string(),
+                                line,
+                                message: format!(
+                                    "`{w}!` in non-test server/coordinator code"
+                                ),
+                            });
+                        }
+                    }
+                    _ => {}
+                }
+                if in_contract && !in_test {
+                    if FORBIDDEN_IN_CONTRACT.contains(&w.as_str()) {
+                        out.push(Finding {
+                            rule: rule_id::CONTRACT_FORBIDDEN,
+                            file: norm.to_string(),
+                            line,
+                            message: format!("`{w}` inside a bit-exact contract region"),
+                        });
+                    }
+                    let nxt = next_code(toks, i);
+                    if (w == "sum" || w == "product")
+                        && dotted
+                        && (is_punct(nxt, '(') || is_punct(nxt, ':'))
+                    {
+                        out.push(Finding {
+                            rule: rule_id::CONTRACT_FORBIDDEN,
+                            file: norm.to_string(),
+                            line,
+                            message: format!(
+                                "`.{w}()` reduction inside a bit-exact contract region \
+                                 (route float reductions through the documented fold order)"
+                            ),
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+/// `toks[i]` is a `.lock` call outside tests: demand the result is
+/// immediately chained into a poisoning-aware combinator.
+fn check_lock_chain(norm: &str, toks: &[Token], i: usize, line: usize, out: &mut Vec<Finding>) {
+    // find the matching close paren of the lock() call
+    let mut j = i + 1;
+    let mut depth = 0i32;
+    let mut close = None;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('(') => depth += 1,
+            Tok::Punct(')') => {
+                depth -= 1;
+                if depth == 0 {
+                    close = Some(j);
+                    break;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    let handled = close.is_some_and(|c| {
+        if !is_punct(next_code(toks, c), '.') {
+            return false;
+        }
+        match next_code2(toks, c) {
+            Some(Token { tok: Tok::Ident(h), .. }) if h == "expect" => {
+                // documented poisoning: the expect message must say so
+                toks[c + 1..]
+                    .iter()
+                    .filter(|t| !matches!(t.tok, Tok::Comment { .. }))
+                    .nth(3)
+                    .is_some_and(|t| matches!(&t.tok, Tok::Str(s) if s.contains("poison")))
+            }
+            Some(Token { tok: Tok::Ident(h), .. }) => LOCK_HANDLERS.contains(&h.as_str()),
+            _ => false,
+        }
+    });
+    if !handled {
+        out.push(Finding {
+            rule: rule_id::MUTEX_POISON,
+            file: norm.to_string(),
+            line,
+            message: "`.lock()` result neither handles nor documents poisoning \
+                      (chain `.expect(\"... poisoned\")`, `.unwrap_or_else(|p| \
+                      p.into_inner())`, or `.map_err(...)`)"
+                .to_string(),
+        });
+    }
+}
+
+/// One parsed `WireCommand` registry entry.
+struct RegEntry {
+    cmd: String,
+    encode: String,
+    tests: Vec<String>,
+    line: usize,
+}
+
+/// Protocol coverage: cross-check `parse_request`'s match arms, the
+/// `WIRE_COMMANDS` registry, and the fns/tests declared in the file.
+fn protocol_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    let mut push = |line: usize, message: String| {
+        out.push(Finding {
+            rule: rule_id::PROTOCOL_COVERAGE,
+            file: norm.to_string(),
+            line,
+            message,
+        })
+    };
+    // declared fns + #[test] fns
+    let mut fns: BTreeSet<String> = BTreeSet::new();
+    let mut testfns: BTreeSet<String> = BTreeSet::new();
+    let mut test_armed = false;
+    let mut i = 0usize;
+    while i < toks.len() {
+        match &toks[i].tok {
+            Tok::Punct('#') => {
+                let (end, _) = scan_attribute(toks, i);
+                let bare_test = toks[i..=end.min(toks.len() - 1)]
+                    .iter()
+                    .filter(|t| !matches!(t.tok, Tok::Comment { .. }))
+                    .count()
+                    == 4
+                    && toks[i..=end.min(toks.len() - 1)]
+                        .iter()
+                        .any(|t| matches!(&t.tok, Tok::Ident(w) if w == "test"));
+                if bare_test {
+                    test_armed = true;
+                }
+                if end > i {
+                    i = end;
+                }
+            }
+            Tok::Ident(w) if w == "fn" => {
+                if let Some(Token { tok: Tok::Ident(name), .. }) = next_code(toks, i) {
+                    fns.insert(name.clone());
+                    if test_armed {
+                        testfns.insert(name.clone());
+                    }
+                }
+                test_armed = false;
+            }
+            Tok::Punct(';') | Tok::Punct('}') => test_armed = false,
+            _ => {}
+        }
+        i += 1;
+    }
+    // match arms of parse_request: string literals followed by `=>`
+    let mut arms: Vec<(String, usize)> = Vec::new();
+    let mut found_parse = false;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let starts_parse_fn = matches!(&toks[i].tok, Tok::Ident(w) if w == "fn")
+            && matches!(
+                next_code(toks, i),
+                Some(Token { tok: Tok::Ident(n), .. }) if n == "parse_request"
+            );
+        if starts_parse_fn {
+            found_parse = true;
+            // walk to the fn body and through it
+            let mut j = i;
+            while j < toks.len() && !matches!(toks[j].tok, Tok::Punct('{')) {
+                j += 1;
+            }
+            let mut depth = 0i32;
+            while j < toks.len() {
+                match &toks[j].tok {
+                    Tok::Punct('{') => depth += 1,
+                    Tok::Punct('}') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    Tok::Str(s) => {
+                        if is_punct(next_code(toks, j), '=') && is_punct(next_code2(toks, j), '>')
+                        {
+                            arms.push((s.clone(), toks[j].line));
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            i = j;
+        }
+        i += 1;
+    }
+    if !found_parse {
+        push(1, "no `parse_request` fn found".to_string());
+    }
+    // WIRE_COMMANDS registry entries
+    let entries = parse_registry(toks);
+    let Some(entries) = entries else {
+        push(1, "no `WIRE_COMMANDS` registry found".to_string());
+        return;
+    };
+    for (cmd, line) in &arms {
+        if !entries.iter().any(|e| e.cmd == *cmd) {
+            push(*line, format!("wire command '{cmd}' parsed but missing from WIRE_COMMANDS"));
+        }
+    }
+    for e in &entries {
+        if !arms.iter().any(|(c, _)| c == &e.cmd) {
+            push(e.line, format!("command '{}' registered but has no parse arm", e.cmd));
+        }
+        if !fns.contains(&e.encode) {
+            push(e.line, format!("encode fn '{}' for '{}' is not declared here", e.encode, e.cmd));
+        }
+        if e.tests.is_empty() {
+            push(e.line, format!("command '{}' declares no roundtrip tests", e.cmd));
+        }
+        for t in &e.tests {
+            if !testfns.contains(t) {
+                push(e.line, format!("test '{t}' for '{}' is not a #[test] fn here", e.cmd));
+            }
+        }
+    }
+}
+
+/// Parse the `WIRE_COMMANDS` const initializer into entries, or `None`
+/// if the registry is absent.
+fn parse_registry(toks: &[Token]) -> Option<Vec<RegEntry>> {
+    let start = toks
+        .iter()
+        .position(|t| matches!(&t.tok, Tok::Ident(w) if w == "WIRE_COMMANDS"))?;
+    // skip the type annotation: advance to the `=`, then the first `[`
+    let mut i = start;
+    while i < toks.len() && !matches!(toks[i].tok, Tok::Punct('=')) {
+        i += 1;
+    }
+    while i < toks.len() && !matches!(toks[i].tok, Tok::Punct('[')) {
+        i += 1;
+    }
+    if i >= toks.len() {
+        return None;
+    }
+    let mut entries: Vec<RegEntry> = Vec::new();
+    let mut cur: Option<RegEntry> = None;
+    let mut depth = 0i32;
+    while i < toks.len() {
+        match &toks[i].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            Tok::Ident(w) if w == "WireCommand" && depth == 1 => {
+                if let Some(e) = cur.take() {
+                    entries.push(e);
+                }
+                cur = Some(RegEntry {
+                    cmd: String::new(),
+                    encode: String::new(),
+                    tests: Vec::new(),
+                    line: toks[i].line,
+                });
+            }
+            Tok::Ident(w) if matches!(w.as_str(), "cmd" | "encode") => {
+                if is_punct(next_code(toks, i), ':') {
+                    if let (Some(e), Some(Token { tok: Tok::Str(s), .. })) =
+                        (cur.as_mut(), next_code2(toks, i))
+                    {
+                        if w == "cmd" {
+                            e.cmd = s.clone();
+                        } else {
+                            e.encode = s.clone();
+                        }
+                    }
+                }
+            }
+            Tok::Ident(w) if w == "tests" => {
+                // collect every string until the tests array closes
+                let mut j = i + 1;
+                let mut tdepth = 0i32;
+                while j < toks.len() {
+                    match &toks[j].tok {
+                        Tok::Punct('[') => tdepth += 1,
+                        Tok::Punct(']') => {
+                            tdepth -= 1;
+                            if tdepth == 0 {
+                                break;
+                            }
+                        }
+                        Tok::Str(s) => {
+                            if let Some(e) = cur.as_mut() {
+                                e.tests.push(s.clone());
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                i = j;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    if let Some(e) = cur.take() {
+        entries.push(e);
+    }
+    Some(entries)
+}

@@ -1,0 +1,117 @@
+//! `parsample-lint` — the invariant linter, run as a blocking CI gate.
+//!
+//! ```text
+//! cargo run --bin parsample-lint                      # lint src/ with src/analysis/allow.toml
+//! cargo run --bin parsample-lint -- --root src --out LINT_report.jsonl
+//! ```
+//!
+//! Exit codes: `0` clean, `1` findings (or stale allow entries), `2`
+//! usage / IO / allowlist-parse error.  Output is reason-tagged JSONL
+//! on stdout (`lint-finding`, `lint-allowed`, `lint-summary`) —
+//! machine-readable end to end, same convention as the distributed-fit
+//! event stream.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use parsample::analysis::{emit_jsonl, lint_tree, Allowlist};
+use parsample::telemetry::events::EventLog;
+
+struct Args {
+    root: PathBuf,
+    allow: Option<PathBuf>,
+    out: Option<PathBuf>,
+}
+
+fn usage() -> &'static str {
+    "usage: parsample-lint [--root DIR] [--allow FILE|none] [--out FILE]\n\
+     \n\
+     --root DIR     tree to lint (default: src, relative to CWD)\n\
+     --allow FILE   allowlist (default: src/analysis/allow.toml; `none` disables)\n\
+     --out FILE     also write the JSONL report to FILE"
+}
+
+fn parse_args(argv: &[String]) -> Result<Args, String> {
+    let mut args =
+        Args { root: PathBuf::from("src"), allow: None, out: None };
+    let mut it = argv.iter();
+    while let Some(flag) = it.next() {
+        let mut val = |name: &str| {
+            it.next().cloned().ok_or_else(|| format!("{name} needs a value"))
+        };
+        match flag.as_str() {
+            "--root" => args.root = PathBuf::from(val("--root")?),
+            "--allow" => args.allow = Some(PathBuf::from(val("--allow")?)),
+            "--out" => args.out = Some(PathBuf::from(val("--out")?)),
+            "--help" | "-h" => return Err(String::new()),
+            other => return Err(format!("unknown flag `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match parse_args(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            if !msg.is_empty() {
+                eprintln!("parsample-lint: {msg}");
+            }
+            eprintln!("{}", usage());
+            return ExitCode::from(2);
+        }
+    };
+    let allow = match &args.allow {
+        Some(p) if p.as_os_str() == "none" => Allowlist::empty(),
+        Some(p) => match Allowlist::load(p) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("parsample-lint: allowlist: {e}");
+                return ExitCode::from(2);
+            }
+        },
+        None => {
+            let default = args.root.join("analysis/allow.toml");
+            if default.is_file() {
+                match Allowlist::load(&default) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        eprintln!("parsample-lint: allowlist: {e}");
+                        return ExitCode::from(2);
+                    }
+                }
+            } else {
+                Allowlist::empty()
+            }
+        }
+    };
+    let report = match lint_tree(&args.root, &allow) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("parsample-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    emit_jsonl(&report, &EventLog::stdout());
+    if let Some(out) = &args.out {
+        let log = EventLog::capture();
+        emit_jsonl(&report, &log);
+        let mut text = log.captured().join("\n");
+        text.push('\n');
+        if let Err(e) = std::fs::write(out, text) {
+            eprintln!("parsample-lint: writing {}: {e}", out.display());
+            return ExitCode::from(2);
+        }
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "parsample-lint: {} failing finding(s) across {} file(s)",
+            report.failing(),
+            report.files
+        );
+        ExitCode::from(1)
+    }
+}

@@ -1,6 +1,13 @@
 //! Blocked multi-threaded assignment engine — the one hot path under
 //! every Lloyd-style loop in the crate.
 //!
+//! CONTRACT: bit-exact — every output of this file (labels, f32 sums,
+//! f64 inertia) must be bit-identical across worker counts, kernels,
+//! and chunk sizes.  `parsample-lint` enforces the mechanical half:
+//! no `HashMap`/`HashSet` iteration, no `Instant`/`SystemTime`, no
+//! thread-id-dependent logic, no unordered float reduction (`.sum()`)
+//! anywhere in this file.
+//!
 //! The assign step is O(M·K·D) and dominates clustering cost; that is
 //! the paper's whole argument for parallelising the sub-pieces.  The
 //! seed code parallelised only the partition fan-out, leaving the
@@ -226,12 +233,12 @@ pub struct BoundsStats {
 impl BoundsStats {
     /// Total point-iterations processed (M × passes).
     pub fn point_iters(&self) -> u64 {
-        self.per_iter.iter().map(|s| s.total).sum()
+        self.per_iter.iter().fold(0, |acc, s| acc + s.total)
     }
 
     /// Total point-iterations whose k-sweep was skipped.
     pub fn skipped(&self) -> u64 {
-        self.per_iter.iter().map(|s| s.skipped).sum()
+        self.per_iter.iter().fold(0, |acc, s| acc + s.skipped)
     }
 
     /// Fraction of point-iterations skipped over the whole run.
@@ -248,11 +255,11 @@ impl BoundsStats {
     /// (0-based) — blob workloads should clear 50% within ~5.
     pub fn skip_rate_from(&self, from: usize) -> f64 {
         let tail = self.per_iter.get(from.min(self.per_iter.len())..).unwrap_or(&[]);
-        let total: u64 = tail.iter().map(|s| s.total).sum();
+        let total: u64 = tail.iter().fold(0, |acc, s| acc + s.total);
         if total == 0 {
             0.0
         } else {
-            tail.iter().map(|s| s.skipped).sum::<u64>() as f64 / total as f64
+            tail.iter().fold(0u64, |acc, s| acc + s.skipped) as f64 / total as f64
         }
     }
 }
@@ -652,10 +659,12 @@ impl Engine {
             }
             inertia
         });
+        // block-order fold: parallel_map returns parts indexed by
+        // block, so this reduction is sequential and bit-stable no
+        // matter how many workers raced to fill it
         parts
             .into_iter()
-            .map(|p| p.expect("engine block cannot panic"))
-            .sum()
+            .fold(0.0f64, |acc, p| acc + p.expect("engine block cannot panic"))
     }
 
     /// The engine-owned Lloyd iterate loop: run up to `max_iters`

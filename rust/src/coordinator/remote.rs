@@ -139,6 +139,9 @@ fn lock<'a>(state: &'a Mutex<PoolState>) -> MutexGuard<'a, PoolState> {
 /// the fleet could not resolve on the local backend, and unpack
 /// everything in dispatch-index order — the entry point the pipeline's
 /// local-stage seam calls.
+// CONTRACT: bit-exact — the merge must walk dispatches in index
+// order regardless of which worker resolved what, when, or how many
+// retries it took; that ordering is the whole fleet-parity story.
 pub fn remote_local_stage(
     cfg: &RemoteConfig,
     nb: &NativeBackend,

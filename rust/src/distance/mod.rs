@@ -102,6 +102,7 @@ impl Metric {
 /// margins, and the wide tile kernel (which replays this exact order
 /// lane by lane — see `crate::kernel::wide`) all depend on it.  Do not
 /// reassociate.
+// CONTRACT: bit-exact
 #[inline(always)]
 fn fold4(a: &[f32], b: &[f32], term: impl Fn(f32, f32) -> f32) -> f32 {
     let n = a.len();
@@ -122,6 +123,7 @@ fn fold4(a: &[f32], b: &[f32], term: impl Fn(f32, f32) -> f32) -> f32 {
 
 /// Hot-path squared euclidean distance via [`fold4`] — the 4-lane
 /// manual unroll measured ~1.6× over the naive zip on x86-64.
+// CONTRACT: bit-exact
 #[inline]
 pub fn sq_euclidean(a: &[f32], b: &[f32]) -> f32 {
     fold4(a, b, |x, y| {
@@ -157,6 +159,7 @@ pub fn nearest_sq(point: &[f32], centers: &[f32], dims: usize) -> (usize, f32) {
 /// `crate::kernel::TileKernel`, and the parity suite.  (In particular
 /// |p|² = `dot(p, p)` makes the self-distance exactly 0.0, which the
 /// k == m tests rely on.)
+// CONTRACT: bit-exact
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     fold4(a, b, |x, y| x * y)
@@ -165,6 +168,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// Nearest center under squared euclidean with precomputed |c|^2 norms
 /// (hoists the center-norm term out of per-point loops — §Perf L3-2).
 /// Tie-breaks to the lowest index exactly like [`nearest_sq`].
+// CONTRACT: bit-exact
 #[inline]
 pub fn nearest_sq_with_norms(
     point: &[f32],
@@ -185,6 +189,7 @@ pub fn nearest_sq_with_norms(
 
 /// Precompute |c|^2 for every center row (via [`dot`] so the summation
 /// order matches the per-point norm — see the [`dot`] doc).
+// CONTRACT: bit-exact
 pub fn center_norms(centers: &[f32], dims: usize) -> Vec<f32> {
     centers.chunks_exact(dims).map(|cc| dot(cc, cc)).collect()
 }

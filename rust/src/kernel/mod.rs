@@ -1,6 +1,11 @@
 //! Pluggable tile kernels — the innermost argmin sweep of the blocked
 //! assignment engine as an extension point.
 //!
+//! CONTRACT: bit-exact — every kernel must reproduce the scalar
+//! yardstick's labels and distances bit for bit (`parsample-lint`
+//! forbids the nondeterminism sources listed in `crate`'s Invariants
+//! section anywhere in this file).
+//!
 //! [`crate::cluster::engine`] owns blocking (point chunks × center
 //! tiles), threading, and the Hamerly bound bookkeeping; everything
 //! below a chunk — "given ≤ [`POINT_CHUNK`] points and the center

@@ -3,6 +3,9 @@
 //! terms through [`crate::distance::dot`], clamped at 0, and centers
 //! are scanned in increasing index under a strict `<` — the
 //! bit-identical-argmin yardstick the parity suite pins down.
+//!
+//! CONTRACT: bit-exact — this file IS the yardstick; `parsample-lint`
+//! forbids every nondeterminism source here.
 
 use super::{TileKernel, TilePlan, POINT_CHUNK};
 use crate::distance;

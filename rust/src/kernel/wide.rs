@@ -12,6 +12,11 @@
 //! 256-bit registers; everywhere else the portable build vectorizes to
 //! whatever the baseline ISA offers (SSE2, NEON).
 //!
+//! CONTRACT: bit-exact — the lane sweep must stay bit-identical to
+//! [`super::ScalarKernel`]; `parsample-lint` forbids every
+//! nondeterminism source in this file (and the Numerics paragraph
+//! below is the reason reassociation is off the table).
+//!
 //! **Numerics.**  The per-lane dot product in [`dot_lanes`] replays
 //! [`crate::distance::dot`]'s summation order exactly — four
 //! accumulators over 4-coordinate blocks, a left-associated reduce,

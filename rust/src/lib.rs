@@ -116,7 +116,50 @@
 //! let model = SubclusterPipeline::new(cfg).fit(&data).unwrap();
 //! # let _ = model;
 //! ```
+//!
+//! ## Invariants
+//!
+//! The guarantees above are not prose: each one is mechanically
+//! enforced by the in-tree linter ([`analysis`], run as
+//! `cargo run --bin parsample-lint`, a blocking CI gate).  The
+//! contracts and their rule ids:
+//!
+//! * **Determinism** — files on the bit-exact path (`cluster/engine`,
+//!   `kernel/*`, `distance`, the `coordinator::remote` merge) must
+//!   carry a comment starting with the marker `CONTRACT: bit-exact`
+//!   (`contract-annotation`), and inside a contract region the lint
+//!   forbids `HashMap`/`HashSet` iteration order, `Instant`/
+//!   `SystemTime`, thread-identity logic, and unordered float
+//!   reductions like `.sum()` (`contract-forbidden`).  An inner doc
+//!   comment (`//!` form) scopes the whole file; a plain `//` comment
+//!   scopes the next block.
+//! * **Safety** — every `unsafe` block or fn needs an adjacent
+//!   `// SAFETY:` comment stating the invariant that makes it sound
+//!   (`unsafe-safety`).
+//! * **Concurrency** — condvar waits must sit inside a `while`/`loop`
+//!   re-check because wakeups are spurious (`condvar-wait-while`), and
+//!   every `.lock()` must either handle poisoning
+//!   (`.unwrap_or_else(|p| p.into_inner())`, `.map_err(...)`) or
+//!   document the abort policy with an `.expect("... poisoned")`
+//!   message (`mutex-poison-doc`).
+//! * **No panic paths** — non-test `server/` and `coordinator/` code
+//!   must not `.unwrap()`, `.expect()`, `panic!`, `todo!`, or
+//!   `unimplemented!`; errors travel the typed [`Error`] paths
+//!   (`no-panic-path`).  Poisoning-policy expects are the one
+//!   sanctioned exception.
+//! * **Wire coverage** — every command in `server/protocol.rs` must be
+//!   registered in its `WIRE_COMMANDS` table with a parse arm, an
+//!   encode fn, and named roundtrip tests that exist
+//!   (`protocol-coverage`).
+//!
+//! Exceptions go through `src/analysis/allow.toml`: narrowest possible
+//! match, mandatory `reason`, and stale entries fail the build
+//! (`unused-allow`) — the process is documented at the top of that
+//! file.  Findings stream as reason-tagged JSONL (`lint-finding`,
+//! `lint-allowed`, `lint-summary`) via [`telemetry::events::EventLog`],
+//! and CI archives the report as an artifact.
 
+pub mod analysis;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

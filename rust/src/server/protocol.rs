@@ -111,6 +111,66 @@ pub enum Request {
     Stats,
 }
 
+/// One wire command's coverage contract: the `cmd` string accepted by
+/// [`parse_request`], the encoder that produces its success response,
+/// and the roundtrip tests that pin the pair.
+///
+/// `parsample-lint`'s `protocol-coverage` rule cross-checks this table
+/// against [`parse_request`]'s match arms and against the `fn`s /
+/// `#[test]`s declared in this file, so a new command cannot land
+/// parsed-but-untested or registered-but-unparsed.
+pub struct WireCommand {
+    /// The `cmd` string on the wire.
+    pub cmd: &'static str,
+    /// Encoder fn in this module for the success response.
+    pub encode: &'static str,
+    /// `#[test]` fns in this module pinning parse + encode roundtrips.
+    pub tests: &'static [&'static str],
+}
+
+/// Every command accepted by [`parse_request`], with its coverage.
+pub const WIRE_COMMANDS: &[WireCommand] = &[
+    WireCommand { cmd: "ping", encode: "encode_pong", tests: &["parses_ping_and_stats"] },
+    WireCommand {
+        cmd: "stats",
+        encode: "encode_stats",
+        tests: &["parses_ping_and_stats", "stats_carries_per_model_predict_counters"],
+    },
+    WireCommand {
+        cmd: "models",
+        encode: "encode_models",
+        tests: &["parses_predict_and_models", "encodes_fit_predict_models_roundtrippable"],
+    },
+    WireCommand {
+        cmd: "cluster",
+        encode: "encode_result",
+        tests: &["parses_cluster_request", "encodes_roundtrippable_result"],
+    },
+    WireCommand {
+        cmd: "fit",
+        encode: "encode_fit_result",
+        tests: &[
+            "parses_fit_request",
+            "rejects_malformed_fit_and_predict",
+            "encodes_fit_predict_models_roundtrippable",
+        ],
+    },
+    WireCommand {
+        cmd: "predict",
+        encode: "encode_prediction",
+        tests: &["parses_predict_and_models", "prediction_encoder_matches_batch_encoder_bytes"],
+    },
+    WireCommand {
+        cmd: "fit_group",
+        encode: "encode_fit_group_result",
+        tests: &[
+            "parses_fit_group_request",
+            "fit_group_request_roundtrips_exact_bits",
+            "fit_group_result_roundtrips_exact_bits",
+        ],
+    },
+];
+
 /// Parse the `points` field: a non-empty array of equal-length numeric
 /// rows, flattened row-major.  Returns `(points, dims)`.
 fn parse_points(v: &Json) -> Result<(Vec<f32>, usize)> {
@@ -541,6 +601,29 @@ pub fn encode_models(models: &[ModelInfo]) -> String {
 mod tests {
     use super::*;
     use crate::runtime::BackendKind;
+
+    #[test]
+    fn wire_command_table_is_wellformed() {
+        assert!(!WIRE_COMMANDS.is_empty());
+        for (i, c) in WIRE_COMMANDS.iter().enumerate() {
+            assert!(!c.cmd.is_empty() && !c.encode.is_empty(), "entry {i}");
+            assert!(!c.tests.is_empty(), "cmd '{}' has no roundtrip tests", c.cmd);
+            for later in &WIRE_COMMANDS[i + 1..] {
+                assert_ne!(c.cmd, later.cmd, "duplicate wire command");
+            }
+            // every registered cmd must actually parse to *something*
+            // other than "unknown cmd" (shape errors are fine)
+            let probe = format!(r#"{{"cmd":"{}"}}"#, c.cmd);
+            match parse_request(&probe) {
+                Ok(_) => {}
+                Err(e) => assert!(
+                    !e.to_string().contains("unknown cmd"),
+                    "cmd '{}' registered but not parsed",
+                    c.cmd
+                ),
+            }
+        }
+    }
 
     #[test]
     fn parses_cluster_request() {

@@ -33,6 +33,9 @@ enum Sink {
     Off,
     /// One line per event on stderr (the CLI's operator view).
     Stderr,
+    /// One line per event on stdout (machine-readable reports, e.g.
+    /// the `parsample-lint` JSONL output consumed by CI).
+    Stdout,
     /// Buffer lines in memory (tests assert on them).
     Capture(Mutex<Vec<String>>),
 }
@@ -56,6 +59,11 @@ impl EventLog {
         Arc::new(EventLog { sink: Sink::Stderr })
     }
 
+    /// An event log that writes one JSONL line per event to stdout.
+    pub fn stdout() -> Arc<EventLog> {
+        Arc::new(EventLog { sink: Sink::Stdout })
+    }
+
     /// An event log that buffers lines for [`EventLog::captured`].
     pub fn capture() -> Arc<EventLog> {
         Arc::new(EventLog { sink: Sink::Capture(Mutex::new(Vec::new())) })
@@ -77,6 +85,7 @@ impl EventLog {
         match &self.sink {
             Sink::Off => {}
             Sink::Stderr => eprintln!("{line}"),
+            Sink::Stdout => println!("{line}"),
             Sink::Capture(buf) => buf.lock().expect("event buffer poisoned").push(line),
         }
     }

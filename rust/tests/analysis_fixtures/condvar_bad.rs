@@ -1,0 +1,11 @@
+//! Fixture: condvar wait behind an `if` — wakeups are spurious.
+
+use std::sync::{Condvar, Mutex};
+
+pub fn await_ready(lock: &Mutex<bool>, cv: &Condvar) {
+    let mut ready = lock.lock().expect("state lock poisoned");
+    if !*ready {
+        ready = cv.wait(ready).expect("state lock poisoned");
+    }
+    *ready = false;
+}

@@ -1,0 +1,18 @@
+//! CONTRACT: bit-exact — labels must not depend on iteration order.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn histogram(labels: &[usize]) -> HashMap<usize, usize> {
+    let start = Instant::now();
+    let mut h = HashMap::new();
+    for &l in labels {
+        *h.entry(l).or_insert(0) += 1;
+    }
+    let _ = start;
+    h
+}
+
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}

@@ -1,0 +1,9 @@
+//! Fixture: a determinism-path file with no contract annotation.
+
+pub fn assign(x: f32) -> usize {
+    if x > 0.0 {
+        1
+    } else {
+        0
+    }
+}

@@ -1,0 +1,22 @@
+//! CONTRACT: bit-exact — fixture for a clean determinism path.
+
+/// Deterministic fold in index order.
+pub fn total(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn tests_may_use_maps() {
+        let mut h = HashMap::new();
+        h.insert(1usize, 2usize);
+        assert_eq!(h[&1], 2);
+    }
+}

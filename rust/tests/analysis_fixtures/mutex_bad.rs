@@ -1,0 +1,9 @@
+//! Fixture: lock result used without a poisoning story.
+
+use std::sync::Mutex;
+
+pub fn bump(counter: &Mutex<u64>) -> u64 {
+    let mut g = counter.lock().expect("counter");
+    *g += 1;
+    *g
+}

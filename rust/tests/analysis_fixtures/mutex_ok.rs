@@ -1,0 +1,13 @@
+//! Fixture: poisoning documented or handled at every lock.
+
+use std::sync::Mutex;
+
+pub fn bump(counter: &Mutex<u64>) -> u64 {
+    let mut g = counter.lock().expect("counter lock poisoned");
+    *g += 1;
+    *g
+}
+
+pub fn read(counter: &Mutex<u64>) -> u64 {
+    *counter.lock().unwrap_or_else(|p| p.into_inner())
+}

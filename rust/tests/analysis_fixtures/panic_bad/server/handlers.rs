@@ -1,0 +1,17 @@
+//! Fixture: panic paths on the request surface.
+
+pub fn route(cmd: &str) -> usize {
+    let code = cmd.parse::<usize>().unwrap();
+    if code > 9 {
+        panic!("bad code");
+    }
+    code
+}
+
+pub fn reply(code: usize) -> String {
+    std::str::from_utf8(&[b'0' + code as u8]).expect("ascii").to_string()
+}
+
+pub fn later() -> usize {
+    todo!()
+}

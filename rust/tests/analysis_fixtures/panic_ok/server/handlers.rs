@@ -1,0 +1,13 @@
+//! Fixture: typed error paths only; tests may panic freely.
+
+pub fn route(cmd: &str) -> Result<usize, String> {
+    cmd.parse::<usize>().map_err(|e| format!("bad cmd: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        assert_eq!(super::route("3").unwrap(), 3);
+    }
+}

@@ -1,0 +1,43 @@
+//! Fixture: wire table drifted from the parse/encode/test reality.
+
+pub struct WireCommand {
+    pub cmd: &'static str,
+    pub encode: &'static str,
+    pub tests: &'static [&'static str],
+}
+
+pub const WIRE_COMMANDS: &[WireCommand] = &[
+    WireCommand { cmd: "ping", encode: "encode_pong", tests: &[] },
+    WireCommand { cmd: "stats", encode: "encode_stats", tests: &["stats_roundtrip"] },
+    WireCommand { cmd: "reset", encode: "encode_reset", tests: &["reset_roundtrip"] },
+];
+
+pub fn parse_request(line: &str) -> Result<&'static str, String> {
+    match line {
+        "ping" => Ok("pong"),
+        "stats" => Ok("stats"),
+        "drop" => Ok("drop"),
+        other => Err(format!("unknown cmd {other}")),
+    }
+}
+
+pub fn encode_pong() -> String {
+    "pong".to_string()
+}
+
+pub fn encode_stats() -> String {
+    "stats".to_string()
+}
+
+pub fn reset_roundtrip() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_roundtrip() {
+        assert_eq!(encode_stats(), "stats");
+        assert!(parse_request("stats").is_ok());
+    }
+}

@@ -1,0 +1,45 @@
+//! Fixture: every wire command is parsed, encoded, and roundtripped.
+
+pub struct WireCommand {
+    pub cmd: &'static str,
+    pub encode: &'static str,
+    pub tests: &'static [&'static str],
+}
+
+pub const WIRE_COMMANDS: &[WireCommand] = &[
+    WireCommand { cmd: "ping", encode: "encode_pong", tests: &["ping_roundtrip"] },
+    WireCommand { cmd: "add", encode: "encode_add", tests: &["add_roundtrip"] },
+];
+
+pub fn parse_request(line: &str) -> Result<&'static str, String> {
+    match line {
+        "ping" => Ok("pong"),
+        "add" => Ok("add"),
+        other => Err(format!("unknown cmd {other}")),
+    }
+}
+
+pub fn encode_pong() -> String {
+    "pong".to_string()
+}
+
+pub fn encode_add(v: u64) -> String {
+    format!("{v}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_roundtrip() {
+        assert_eq!(parse_request("ping"), Ok("pong"));
+        assert_eq!(encode_pong(), "pong");
+    }
+
+    #[test]
+    fn add_roundtrip() {
+        assert_eq!(encode_add(3), "3");
+        assert!(parse_request("add").is_ok());
+    }
+}

@@ -1,0 +1,5 @@
+//! Fixture: `unsafe` with no safety comment anywhere near it.
+
+pub fn peek(xs: &[f32]) -> f32 {
+    unsafe { *xs.get_unchecked(0) }
+}

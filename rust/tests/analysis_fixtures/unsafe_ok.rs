@@ -1,0 +1,13 @@
+//! Fixture: both `unsafe` sites carry safety comments.
+
+/// Reads the first element without a bounds check.
+// SAFETY: callers guarantee `xs` is non-empty.
+pub unsafe fn head(xs: &[f32]) -> f32 {
+    *xs.get_unchecked(0)
+}
+
+pub fn first(xs: &[f32]) -> f32 {
+    assert!(!xs.is_empty());
+    // SAFETY: the assert above keeps index 0 in bounds.
+    unsafe { head(xs) }
+}

@@ -1,0 +1,155 @@
+//! Fixture-driven tests for `parsample-lint`: each rule has a
+//! violating and a clean snippet under `tests/analysis_fixtures/`, and
+//! the suite asserts exact rule/line hits, allowlist suppression, and
+//! — the gate that matters — that `src/` itself is clean at HEAD.
+
+use std::path::{Path, PathBuf};
+
+use parsample::analysis::{emit_jsonl, lint_file, lint_tree, rule_id, Allowlist, LintReport};
+use parsample::telemetry::events::EventLog;
+use parsample::util::json::Json;
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/analysis_fixtures")
+}
+
+/// `(rule, line)` pairs for one fixture, sorted by line.
+fn hits(rel: &str) -> Vec<(&'static str, usize)> {
+    let findings = lint_file(&fixtures().join(rel)).expect("fixture readable");
+    findings.iter().map(|f| (f.rule, f.line)).collect()
+}
+
+#[test]
+fn unsafe_without_safety_comment_is_flagged() {
+    assert_eq!(hits("unsafe_bad.rs"), vec![(rule_id::UNSAFE_SAFETY, 4)]);
+    assert_eq!(hits("unsafe_ok.rs"), vec![]);
+}
+
+#[test]
+fn condvar_wait_outside_loop_is_flagged() {
+    assert_eq!(hits("condvar_bad.rs"), vec![(rule_id::CONDVAR_WAIT, 8)]);
+    assert_eq!(hits("condvar_ok.rs"), vec![]);
+}
+
+#[test]
+fn undocumented_lock_poisoning_is_flagged() {
+    assert_eq!(hits("mutex_bad.rs"), vec![(rule_id::MUTEX_POISON, 6)]);
+    assert_eq!(hits("mutex_ok.rs"), vec![]);
+}
+
+#[test]
+fn contract_regions_forbid_nondeterminism_sources() {
+    let got = hits("contract_bad/cluster/engine.rs");
+    let want: Vec<(&str, usize)> =
+        [3, 4, 6, 7, 8, 17].iter().map(|&l| (rule_id::CONTRACT_FORBIDDEN, l)).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn determinism_paths_must_carry_the_annotation() {
+    assert_eq!(
+        hits("contract_missing/cluster/engine.rs"),
+        vec![(rule_id::CONTRACT_ANNOTATION, 1)]
+    );
+    assert_eq!(hits("contract_ok/cluster/engine.rs"), vec![]);
+}
+
+#[test]
+fn panic_paths_in_server_code_are_flagged() {
+    let got = hits("panic_bad/server/handlers.rs");
+    let want: Vec<(&str, usize)> =
+        [4, 6, 12, 16].iter().map(|&l| (rule_id::NO_PANIC, l)).collect();
+    assert_eq!(got, want);
+    assert_eq!(hits("panic_ok/server/handlers.rs"), vec![]);
+}
+
+#[test]
+fn protocol_drift_is_flagged_per_entry() {
+    let got = hits("proto_bad/server/protocol.rs");
+    let want: Vec<(&str, usize)> =
+        [10, 12, 12, 12, 19].iter().map(|&l| (rule_id::PROTOCOL_COVERAGE, l)).collect();
+    assert_eq!(got, want);
+    assert_eq!(hits("proto_ok/server/protocol.rs"), vec![]);
+}
+
+#[test]
+fn tree_lint_totals_and_allowlist_suppression() {
+    // empty allowlist: every violating fixture contributes
+    let bare = lint_tree(&fixtures(), &Allowlist::empty()).expect("tree lints");
+    assert_eq!(bare.findings.len(), 19, "findings: {:#?}", bare.findings);
+    assert!(bare.suppressed.is_empty());
+    assert!(bare.unused_allow.is_empty());
+    assert!(!bare.clean());
+
+    // one narrow entry: exactly the mutex fixture finding disappears
+    let allow = Allowlist::parse(
+        "inline.toml",
+        "[[allow]]\nrule = \"mutex-poison-doc\"\nfile = \"mutex_bad.rs\"\nline = 6\nreason = \"fixture demo\"\n",
+    )
+    .expect("allowlist parses");
+    let report = lint_tree(&fixtures(), &allow).expect("tree lints");
+    assert_eq!(report.findings.len(), 18);
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].0.rule, rule_id::MUTEX_POISON);
+    assert_eq!(report.suppressed[0].1, "fixture demo");
+    assert!(report.unused_allow.is_empty());
+
+    // an entry that matches nothing fails the build as unused-allow
+    let stale = Allowlist::parse(
+        "inline.toml",
+        "[[allow]]\nrule = \"unsafe-safety\"\nfile = \"no_such_file.rs\"\nreason = \"stale\"\n",
+    )
+    .expect("allowlist parses");
+    let report = lint_tree(&fixtures(), &stale).expect("tree lints");
+    assert_eq!(report.unused_allow.len(), 1);
+    assert_eq!(report.unused_allow[0].rule, rule_id::UNUSED_ALLOW);
+    assert!(!report.clean());
+}
+
+#[test]
+fn jsonl_output_is_reason_tagged_and_parseable() {
+    let allow = Allowlist::parse(
+        "inline.toml",
+        "[[allow]]\nrule = \"mutex-poison-doc\"\nfile = \"mutex_bad.rs\"\nreason = \"fixture demo\"\n",
+    )
+    .expect("allowlist parses");
+    let report = lint_tree(&fixtures(), &allow).expect("tree lints");
+    let log = EventLog::capture();
+    emit_jsonl(&report, &log);
+    let lines = log.captured();
+    assert_eq!(lines.len(), report.findings.len() + report.suppressed.len() + 1);
+    assert_eq!(log.count("lint-finding"), report.findings.len());
+    assert_eq!(log.count("lint-allowed"), 1);
+    assert_eq!(log.count("lint-summary"), 1);
+    for line in &lines {
+        assert!(line.starts_with("{\"reason\":\"lint-"), "bad prefix: {line}");
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL {line}: {e:?}"));
+        assert!(v.get("reason").and_then(Json::as_str).is_some());
+    }
+    let finding = Json::parse(&lines[0]).expect("finding line parses");
+    assert!(finding.get("rule").and_then(Json::as_str).is_some());
+    assert!(finding.get("file").and_then(Json::as_str).is_some());
+    assert!(finding.get("line").and_then(Json::as_usize).is_some());
+    let summary = Json::parse(lines.last().expect("summary line")).expect("summary parses");
+    assert_eq!(
+        summary.get("failing").and_then(Json::as_usize),
+        Some(report.findings.len() + report.unused_allow.len())
+    );
+}
+
+/// The acceptance gate: the repo's own `src/` tree is lint-clean at
+/// HEAD under the checked-in allowlist.
+#[test]
+fn repo_src_is_clean_under_checked_in_allowlist() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let allow = Allowlist::load(&root.join("analysis/allow.toml")).expect("allow.toml parses");
+    let report: LintReport = lint_tree(&root, &allow).expect("src lints");
+    assert!(
+        report.clean(),
+        "src/ has {} lint finding(s):\n{:#?}\nunused allow entries: {:#?}",
+        report.findings.len(),
+        report.findings,
+        report.unused_allow
+    );
+    assert!(report.files > 40, "walk looks truncated: {} files", report.files);
+}
