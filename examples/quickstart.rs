@@ -94,8 +94,17 @@ fn main() -> parsample::Result<()> {
 
     // 9. fit straight off the stream (mini-batch k-means consumes the
     //    chunks as batches; the pipeline would scatter them into its
-    //    partition groups)
-    let fitter = parsample::cluster::MiniBatchKMeans { k: 8, iters: 40, ..Default::default() };
+    //    partition groups).  Seeding is k-means‖ here — the engine-
+    //    parallel oversampler streams one pass per round over the
+    //    *whole* source instead of k serial sweeps over a head pool
+    //    (CLI: `fit --init kmeans||`; the default `--init auto` picks
+    //    it whenever k and k·M are large enough to pay for it)
+    let fitter = parsample::cluster::MiniBatchKMeans {
+        k: 8,
+        iters: 40,
+        init: parsample::cluster::InitMethod::KMeansParallel,
+        ..Default::default()
+    };
     let big_model = fitter.fit_source(&mut stream)?;
     println!(
         "stream   : fit {} rows out-of-core -> k={} (inertia {:.1})",

@@ -1,0 +1,144 @@
+//! Bench: seeding wall time and final quality — engine-parallel
+//! k-means‖ vs classic k-means++ vs uniform random, at a
+//! pipeline-regime center count (the shape where the classic seeder's
+//! serial O(k·M·D) sweep is the wall).
+//!
+//! Profiles (points / clusters / dims):
+//!   PARSAMPLE_BENCH_SMOKE=1  →   4k /  64 /  8   (CI rot-guard)
+//!   default                  →  60k / 128 / 16
+//!   PARSAMPLE_BENCH_FULL=1   → 200k / 256 / 16
+//!
+//! Before timing anything, asserts the k-means‖ reproducibility
+//! contract: bit-identical centers across worker counts × tile
+//! kernels.  Then times each seeder, runs a fixed Lloyd refinement
+//! from each seed set, and emits wall times plus final inertias into
+//! `BENCH_init.json` — the quality claim is that ‖ seeds land within
+//! noise of ++ while the seeding itself parallelises.
+
+use parsample::cluster::engine::{BoundsMode, Engine};
+use parsample::cluster::init::{initial_centers_with, InitMethod};
+use parsample::cluster::init_parallel::sampling_rounds;
+use parsample::cluster::{EngineOpts, KernelMode};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::util::benchkit::{print_table, Bench};
+use parsample::util::json::Json;
+
+fn main() {
+    let smoke = std::env::var("PARSAMPLE_BENCH_SMOKE").is_ok();
+    let full = std::env::var("PARSAMPLE_BENCH_FULL").is_ok();
+    let (m, k, d) = if smoke {
+        (4_000usize, 64usize, 8usize)
+    } else if full {
+        (200_000, 256, 16)
+    } else {
+        (60_000, 128, 16)
+    };
+    let refine_iters = 10;
+    let workers = 4;
+    let seed = 7;
+
+    let ds = make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: k,
+        dims: d,
+        std: 0.05,
+        extent: 10.0,
+        seed: 42,
+    })
+    .expect("blob generation");
+    let points = ds.as_slice();
+
+    let seed_with = |method: InitMethod, opts: EngineOpts| {
+        initial_centers_with(points, d, k, method, seed, opts).expect("seeding")
+    };
+    let opts = |workers, kernel| EngineOpts { workers, bounds: BoundsMode::Off, kernel };
+
+    // reproducibility gate before timing anything: k-means‖ must be
+    // bit-identical across worker counts and tile kernels
+    let baseline = seed_with(InitMethod::KMeansParallel, opts(1, KernelMode::Scalar));
+    for w in [1usize, workers] {
+        for kernel in [KernelMode::Scalar, KernelMode::Wide] {
+            let got = seed_with(InitMethod::KMeansParallel, opts(w, kernel));
+            assert_eq!(
+                baseline, got,
+                "k-means|| drifted at workers={w} kernel={kernel:?}"
+            );
+        }
+    }
+
+    let timed = opts(workers, KernelMode::session_default());
+    let bench = if smoke { Bench::new(0, 2) } else { Bench::new(1, 5) };
+    let s_par = bench.run("seed/kmeans||", || {
+        seed_with(InitMethod::KMeansParallel, timed)
+    });
+    let s_pp = bench.run("seed/kmeans++", || {
+        seed_with(InitMethod::KMeansPlusPlus, timed)
+    });
+    let s_rand = bench.run("seed/random", || seed_with(InitMethod::Random, timed));
+    let speedup = s_pp.mean_ms() / s_par.mean_ms();
+
+    // quality: fixed Lloyd refinement from each seed set — final
+    // inertia is the figure of merit (‖ should land within noise of
+    // ++, both well under random)
+    let engine = Engine::new(workers);
+    let refine = |method: InitMethod| {
+        let init = seed_with(method, timed);
+        engine
+            .lloyd_loop(points, d, init, refine_iters, 0.0, BoundsMode::Hamerly)
+            .inertia
+    };
+    let in_par = refine(InitMethod::KMeansParallel);
+    let in_pp = refine(InitMethod::KMeansPlusPlus);
+    let in_rand = refine(InitMethod::Random);
+
+    print_table(
+        &format!(
+            "Seeding quality — {refine_iters}-iter Lloyd refinement (m={m}, k={k}, d={d}, rounds={})",
+            sampling_rounds(m)
+        ),
+        &["method", "seed ms", "vs ++", "final inertia"],
+        &[
+            vec![
+                "kmeans||".into(),
+                format!("{:.3}", s_par.mean_ms()),
+                format!("{speedup:.2}x"),
+                format!("{in_par:.4e}"),
+            ],
+            vec![
+                "kmeans++".into(),
+                format!("{:.3}", s_pp.mean_ms()),
+                "1.00x".into(),
+                format!("{in_pp:.4e}"),
+            ],
+            vec![
+                "random".into(),
+                format!("{:.3}", s_rand.mean_ms()),
+                "-".into(),
+                format!("{in_rand:.4e}"),
+            ],
+        ],
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("init_quality")),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("d", Json::num(d as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("rounds", Json::num(sampling_rounds(m) as f64)),
+        ("refine_iters", Json::num(refine_iters as f64)),
+        ("parallel_mean_ms", Json::num(s_par.mean_ms())),
+        ("plusplus_mean_ms", Json::num(s_pp.mean_ms())),
+        ("random_mean_ms", Json::num(s_rand.mean_ms())),
+        ("seeding_speedup_vs_plusplus", Json::num(speedup)),
+        ("inertia_parallel", Json::num(in_par)),
+        ("inertia_plusplus", Json::num(in_pp)),
+        ("inertia_random", Json::num(in_rand)),
+        ("inertia_ratio_parallel_over_plusplus", Json::num(in_par / in_pp)),
+    ]);
+    let out = "BENCH_init.json";
+    match std::fs::write(out, json.to_string()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -33,6 +33,8 @@ const FORBIDDEN_IN_CONTRACT: &[&str] = &[
 /// Files (suffix-matched) that MUST carry a contract annotation.
 const CONTRACT_REQUIRED: &[&str] = &[
     "cluster/engine.rs",
+    "cluster/init.rs",
+    "cluster/init_parallel.rs",
     "kernel/mod.rs",
     "kernel/scalar.rs",
     "kernel/wide.rs",

@@ -19,6 +19,11 @@ pub struct BisectingKMeans {
     pub split_iters: usize,
     /// Restarts per split; best-of by inertia.
     pub split_trials: usize,
+    /// Seeding method for each 2-means split.  `Auto` resolves per
+    /// split against the sub-cluster size, so early huge splits can use
+    /// k-means‖ while the late small ones fall back to k-means++ (the
+    /// k=2 splits only cross the crossover on very large clusters).
+    pub init: InitMethod,
     pub seed: u64,
     /// Number of clusters for the [`crate::model::ClusterModel`] fit
     /// entry point ([`BisectingKMeans::run`] and [`Clusterer::cluster`]
@@ -39,6 +44,7 @@ impl Default for BisectingKMeans {
         BisectingKMeans {
             split_iters: 20,
             split_trials: 2,
+            init: InitMethod::Auto,
             seed: 0,
             k: 8,
             workers: 1,
@@ -100,7 +106,7 @@ impl BisectingKMeans {
                     k: 2,
                     max_iters: self.split_iters,
                     tol: 1e-8,
-                    init: InitMethod::KMeansPlusPlus,
+                    init: self.init,
                     seed: self.seed ^ (trial as u64).wrapping_mul(0x9e37_79b9),
                     workers: self.workers,
                     bounds: self.bounds,

@@ -406,8 +406,9 @@ impl Engine {
     /// parallel once per pass (once per whole Lloyd run in
     /// [`Engine::lloyd_loop`]) and handed to the tile kernels — the
     /// same [`distance::dot`] value the kernels used to recompute every
-    /// chunk, so bit-identity is untouched.
-    fn point_norms(&self, points: &[f32], dims: usize) -> Vec<f32> {
+    /// chunk, so bit-identity is untouched.  `pub(crate)` so the init
+    /// paths can hoist the norms out of their per-center sweeps.
+    pub(crate) fn point_norms(&self, points: &[f32], dims: usize) -> Vec<f32> {
         let m = points.len() / dims;
         let blocks = self.blocks(m);
         let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
@@ -973,6 +974,54 @@ impl Engine {
             skipped += sk;
         }
         (out, skipped)
+    }
+
+    /// Elementwise min-distance fold, the primitive under both seeding
+    /// paths (k-means++'s per-center sweep and k-means‖'s per-round
+    /// candidate fold): for every point `i`, `d2[i]` becomes
+    /// `min(d2[i], min_c dist²(p_i, c))` over `centers`, swept through
+    /// the tiled kernel in parallel.  `pn` is the caller-cached
+    /// [`Engine::point_norms`] of `points`.
+    ///
+    /// Per point the result is a pure function of `(p_i, centers)` —
+    /// there is no cross-point reduction — so the fold is bit-identical
+    /// across worker counts, and across tile kernels by the kernel
+    /// contract.  A point equal to one of the centers collapses to
+    /// exactly `0.0`: the norm-hoisted `|p|² − 2·p·p + |p|²` cancels
+    /// bit-exactly in f32 (the seeding paths rely on this to keep
+    /// already-chosen rows out of the sampling mass).
+    pub(crate) fn min_distance_update(
+        &self,
+        points: &[f32],
+        dims: usize,
+        centers: &[f32],
+        pn: &[f32],
+        d2: &mut [f32],
+    ) {
+        let m = points.len() / dims;
+        debug_assert_eq!(pn.len(), m);
+        debug_assert_eq!(d2.len(), m);
+        if centers.is_empty() {
+            return;
+        }
+        let cnorm = center_norms(centers, dims);
+        let ctile = self.center_tile_for(dims);
+        let plan = self.kernel.resolve(dims).plan(centers, &cnorm, dims, ctile);
+        let plan: &dyn TilePlan = &*plan;
+        let blocks = self.blocks(m);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            argmin_block(plan, points, dims, pn, lo, hi).1
+        });
+        let mut lo = 0usize;
+        for part in parts {
+            let dists = part.expect("engine block cannot panic");
+            for (slot, &nd) in d2[lo..lo + dists.len()].iter_mut().zip(&dists) {
+                if nd < *slot {
+                    *slot = nd;
+                }
+            }
+            lo += dists.len();
+        }
     }
 }
 

@@ -1,18 +1,57 @@
 //! Center initialization strategies for Lloyd's algorithm.
+//!
+//! CONTRACT: bit-exact — seeding output must be bit-identical across
+//! worker counts, tile kernels, and resident-vs-streamed sources.
+//! Every distance here flows through the engine's per-point
+//! min-distance fold (no cross-point float reduction, so any worker
+//! decomposition agrees), every random draw comes from a seeded
+//! [`Pcg32`] stream whose draw order is fixed by point index, and the
+//! potential folds in `init_parallel` walk fixed reduction blocks in
+//! index order.  `parsample-lint` enforces the mechanical half on this
+//! file and on [`super::init_parallel`].
+//!
+//! Four methods ship: `FirstK` (data order, the device-parity seed),
+//! `Random` (distinct uniform rows), `KMeansPlusPlus` (Arthur &
+//! Vassilvitskii 2007 — now engine-parallel per sweep), and
+//! `KMeansParallel` (k-means‖, Bahmani et al. 2012 — O(log M)
+//! oversampling rounds, see [`super::init_parallel`]).  `Auto` picks
+//! between the last two by the k·M work product.
 
+use crate::cluster::engine::EngineOpts;
 use crate::error::{Error, Result};
 use crate::util::rng::Pcg32;
 
+/// `Auto` crossover: k-means‖ once `k · M` reaches this many
+/// point-center products (the regime where k-means++'s k serial sweeps
+/// dominate fit time).
+pub const AUTO_PARALLEL_MIN_WORK: usize = 1 << 22;
+
+/// `Auto` also requires this many centers before k-means‖ pays — below
+/// it the k passes of classic ++ are cheaper than k-means‖'s
+/// oversampled rounds.
+pub const AUTO_PARALLEL_MIN_K: usize = 32;
+
 /// How the K initial centers are chosen.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum InitMethod {
     /// First K points in data order.  Deterministic; what the device
     /// path uses so native/PJRT parity is exact.
     FirstK,
     /// K distinct points uniformly at random.
     Random,
-    /// k-means++ (Arthur & Vassilvitskii 2007): D²-weighted seeding.
+    /// k-means++ (Arthur & Vassilvitskii 2007): D²-weighted seeding,
+    /// one engine-parallel min-distance sweep per center.
     KMeansPlusPlus,
+    /// k-means‖ (Bahmani et al. 2012): ~log(M) engine-parallel
+    /// oversampling rounds, then a weighted k-means++ re-cluster of
+    /// the candidate set down to K.  One streamed pass per round, so
+    /// seeding works out of core.
+    KMeansParallel,
+    /// Resolve by problem size: [`InitMethod::KMeansParallel`] when
+    /// `k ≥` [`AUTO_PARALLEL_MIN_K`] and `k·M ≥`
+    /// [`AUTO_PARALLEL_MIN_WORK`], else [`InitMethod::KMeansPlusPlus`].
+    #[default]
+    Auto,
 }
 
 impl InitMethod {
@@ -21,18 +60,68 @@ impl InitMethod {
             "first-k" | "firstk" => Ok(InitMethod::FirstK),
             "random" => Ok(InitMethod::Random),
             "kmeans++" | "plusplus" | "k-means++" => Ok(InitMethod::KMeansPlusPlus),
-            other => Err(Error::Config(format!("unknown init method '{other}'"))),
+            "kmeans||" | "k-means||" | "kmeans-parallel" | "parallel" => {
+                Ok(InitMethod::KMeansParallel)
+            }
+            "auto" => Ok(InitMethod::Auto),
+            other => Err(Error::Config(format!(
+                "unknown init method '{other}' (expected firstk|random|kmeans++|kmeans|||auto)"
+            ))),
+        }
+    }
+
+    /// Canonical spelling, inverse of [`InitMethod::parse`] (model
+    /// artifacts, the wire protocol, and the CLI serialize this).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            InitMethod::FirstK => "firstk",
+            InitMethod::Random => "random",
+            InitMethod::KMeansPlusPlus => "kmeans++",
+            InitMethod::KMeansParallel => "kmeans||",
+            InitMethod::Auto => "auto",
+        }
+    }
+
+    /// Collapse [`InitMethod::Auto`] to a concrete method for an M×D
+    /// problem with `k` centers; concrete methods pass through.
+    pub fn resolve(self, m: usize, k: usize) -> InitMethod {
+        match self {
+            InitMethod::Auto => {
+                if k >= AUTO_PARALLEL_MIN_K && k.saturating_mul(m) >= AUTO_PARALLEL_MIN_WORK {
+                    InitMethod::KMeansParallel
+                } else {
+                    InitMethod::KMeansPlusPlus
+                }
+            }
+            other => other,
         }
     }
 }
 
-/// Produce K initial centers (flat K×D buffer) from `points` (M×D).
+/// Produce K initial centers (flat K×D buffer) from `points` (M×D) on
+/// a serial scalar-default engine — see [`initial_centers_with`] for
+/// the engine-parallel entry point (same bits, less wall time).
 pub fn initial_centers(
     points: &[f32],
     dims: usize,
     k: usize,
     method: InitMethod,
     seed: u64,
+) -> Result<Vec<f32>> {
+    initial_centers_with(points, dims, k, method, seed, EngineOpts::serial())
+}
+
+/// [`initial_centers`] with explicit engine knobs.  The knobs never
+/// change a single output bit — the min-distance sweeps are per-point
+/// with no cross-point reduction, so worker count and tile kernel only
+/// move wall time (pinned by `rust/tests/init_parity.rs`).
+pub fn initial_centers_with(
+    points: &[f32],
+    dims: usize,
+    k: usize,
+    method: InitMethod,
+    seed: u64,
+    opts: EngineOpts,
 ) -> Result<Vec<f32>> {
     let m = points.len() / dims;
     if k == 0 {
@@ -55,42 +144,57 @@ pub fn initial_centers(
             Ok(take(&rng.sample_indices(m, k)))
         }
         InitMethod::KMeansPlusPlus => {
+            let engine = opts.build_engine();
+            let pn = engine.point_norms(points, dims);
             let mut rng = Pcg32::new(seed, 0x2b2b);
             let mut chosen = Vec::with_capacity(k);
-            chosen.push(rng.below(m));
+            // chosen-set membership as a mask + fallback cursor, so the
+            // duplicate-mass fallback is amortized O(M) over the whole
+            // run instead of O(k·M) rescans of `chosen`
+            let mut taken = vec![false; m];
+            let mut cursor = 0usize;
+            let first = rng.below(m);
+            chosen.push(first);
+            taken[first] = true;
             // running min distance to the chosen set
             let mut d2 = vec![f32::INFINITY; m];
             while chosen.len() < k {
-                let last = *chosen.last().unwrap();
+                let last = *chosen.last().expect("chosen is never empty");
                 let lc = &points[last * dims..(last + 1) * dims];
-                for i in 0..m {
-                    let d = crate::distance::sq_euclidean(
-                        &points[i * dims..(i + 1) * dims],
-                        lc,
-                    );
-                    if d < d2[i] {
-                        d2[i] = d;
-                    }
-                }
+                engine.min_distance_update(points, dims, lc, &pn, &mut d2);
                 match rng.weighted_index(&d2) {
-                    Some(next) => chosen.push(next),
-                    // all mass at zero (duplicates) -> fall back to any unchosen
-                    None => {
-                        let next = (0..m).find(|i| !chosen.contains(i)).ok_or_else(|| {
-                            Error::Cluster("k-means++ ran out of points".into())
-                        })?;
+                    Some(next) => {
                         chosen.push(next);
+                        taken[next] = true;
+                    }
+                    // all mass at zero (duplicates) -> first unchosen row
+                    None => {
+                        while cursor < m && taken[cursor] {
+                            cursor += 1;
+                        }
+                        if cursor == m {
+                            return Err(Error::Cluster("k-means++ ran out of points".into()));
+                        }
+                        chosen.push(cursor);
+                        taken[cursor] = true;
                     }
                 }
             }
             Ok(take(&chosen))
+        }
+        InitMethod::KMeansParallel => {
+            let mut src = crate::data::source::SliceSource::new(points, dims)?;
+            super::init_parallel::initial_centers_source(&mut src, k, method, seed, opts)
+        }
+        InitMethod::Auto => {
+            initial_centers_with(points, dims, k, method.resolve(m, k), seed, opts)
         }
     }
 }
 
 /// Sanity helper used by tests: is every center one of the input points?
 #[cfg(test)]
-fn centers_are_points(centers: &[f32], points: &[f32], dims: usize) -> bool {
+pub(crate) fn centers_are_points(centers: &[f32], points: &[f32], dims: usize) -> bool {
     centers.chunks_exact(dims).all(|c| {
         points
             .chunks_exact(dims)
@@ -157,6 +261,28 @@ mod tests {
     }
 
     #[test]
+    fn plusplus_fallback_mask_covers_duplicates() {
+        // 3 distinct coordinate values over 9 rows: once all three are
+        // chosen, every remaining weight is exactly 0 and the fallback
+        // cursor must supply the other 4 centers from unchosen rows.
+        let mut pts = Vec::new();
+        for i in 0..9 {
+            pts.extend([(i % 3) as f32, 0.0]);
+        }
+        let c = initial_centers(&pts, 2, 7, InitMethod::KMeansPlusPlus, 5).unwrap();
+        assert_eq!(c.len(), 14);
+        assert!(centers_are_points(&c, &pts, 2));
+        // all three coordinate classes must appear among the centers
+        let mut seen = [0usize; 3];
+        for ch in c.chunks_exact(2) {
+            seen[ch[0] as usize] += 1;
+        }
+        assert!(seen.iter().all(|&n| n > 0), "{seen:?}");
+        // 7 centers from only 3 classes: the fallback must have fired
+        assert_eq!(seen[0] + seen[1] + seen[2], 7);
+    }
+
+    #[test]
     fn rejects_bad_k() {
         let pts = grid_points(3, 2);
         assert!(initial_centers(&pts, 2, 0, InitMethod::FirstK, 0).is_err());
@@ -166,7 +292,7 @@ mod tests {
     #[test]
     fn deterministic_per_seed() {
         let pts = grid_points(30, 2);
-        for m in [InitMethod::Random, InitMethod::KMeansPlusPlus] {
+        for m in [InitMethod::Random, InitMethod::KMeansPlusPlus, InitMethod::KMeansParallel] {
             let a = initial_centers(&pts, 2, 5, m, 9).unwrap();
             let b = initial_centers(&pts, 2, 5, m, 9).unwrap();
             assert_eq!(a, b, "{m:?}");
@@ -177,6 +303,38 @@ mod tests {
     fn parse() {
         assert_eq!(InitMethod::parse("kmeans++").unwrap(), InitMethod::KMeansPlusPlus);
         assert_eq!(InitMethod::parse("first-k").unwrap(), InitMethod::FirstK);
+        assert_eq!(InitMethod::parse("kmeans||").unwrap(), InitMethod::KMeansParallel);
+        assert_eq!(InitMethod::parse("kmeans-parallel").unwrap(), InitMethod::KMeansParallel);
+        assert_eq!(InitMethod::parse("auto").unwrap(), InitMethod::Auto);
         assert!(InitMethod::parse("zeros").is_err());
+    }
+
+    #[test]
+    fn as_str_roundtrips_through_parse() {
+        for m in [
+            InitMethod::FirstK,
+            InitMethod::Random,
+            InitMethod::KMeansPlusPlus,
+            InitMethod::KMeansParallel,
+            InitMethod::Auto,
+        ] {
+            assert_eq!(InitMethod::parse(m.as_str()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn auto_resolves_by_work_product() {
+        // small problems stay on classic ++
+        assert_eq!(InitMethod::Auto.resolve(1000, 8), InitMethod::KMeansPlusPlus);
+        // many centers but tiny M: still ++
+        assert_eq!(InitMethod::Auto.resolve(64, 64), InitMethod::KMeansPlusPlus);
+        // pipeline regime: large k·M goes parallel
+        let m = AUTO_PARALLEL_MIN_WORK / AUTO_PARALLEL_MIN_K;
+        assert_eq!(
+            InitMethod::Auto.resolve(m, AUTO_PARALLEL_MIN_K),
+            InitMethod::KMeansParallel
+        );
+        // concrete methods pass through untouched
+        assert_eq!(InitMethod::FirstK.resolve(1 << 30, 1 << 10), InitMethod::FirstK);
     }
 }

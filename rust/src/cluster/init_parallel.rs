@@ -1,0 +1,535 @@
+//! k-means‖ — scalable oversampled seeding (Bahmani et al. 2012,
+//! "Scalable K-Means++") plus the [`DataSource`]-driven entry point
+//! every init method shares, so seeding joins the out-of-core story.
+//!
+//! CONTRACT: bit-exact — output is bit-identical across worker counts,
+//! tile kernels, and resident-vs-streamed sources at any chunk size.
+//! The mechanics:
+//!
+//! * Every distance flows through the engine's per-point min-distance
+//!   fold ([`Engine::min_distance_update`]) — no cross-point float
+//!   reduction, so the worker decomposition cannot change a bit, and
+//!   the wide kernel replays the scalar summation order.
+//! * The potential φ = Σ d² folds in f64 over the engine's fixed
+//!   reduction blocks in index order; [`for_each_slab`] aligns slab
+//!   boundaries to block multiples, so streamed and resident passes
+//!   walk the identical addition sequence.
+//! * Bernoulli draws come from a deterministic per-(round, block)
+//!   [`Pcg32`] stream, one `next_f32` per point in index order —
+//!   independent of which thread or slab processes the block.
+//!
+//! The algorithm runs **one streamed pass per sampling round**: pass
+//! `r` first folds the candidates added in round `r-1` into the
+//! resident `d2` array (a candidate's own row collapses to exactly
+//! `0.0` — the norm-hoisted `|p|² − 2·p·p + |p|²` cancels bit-exactly —
+//! which both de-duplicates the candidate set and zeroes its sampling
+//! mass), then draws each point with `p = min(1, ℓ·k·d²(x)/φ)` using
+//! the φ measured by the *previous* pass.  φ is non-increasing, so the
+//! one-round-stale denominator only shrinks p — conservative, never
+//! over-samples — and saves a separate measurement pass.  Selected
+//! rows are copied out of the slab already in memory, so no gather
+//! pass exists either.  A final pass weighs each candidate by the
+//! number of rows it absorbs, and a weighted k-means++ re-clusters the
+//! small candidate set down to k.
+
+use crate::cluster::engine::{Engine, EngineOpts};
+use crate::cluster::init::InitMethod;
+use crate::data::source::{collect_dataset, for_each_slab, ChunkCursor, DataSource};
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// Oversampling factor ℓ: each sampling round draws an expected (and
+/// capped) `OVERSAMPLE · k` candidates — Bahmani et al.'s practical
+/// ℓ = 2k setting.
+pub const OVERSAMPLE: usize = 2;
+
+/// Master RNG stream for k-means‖: the first-center draw and the
+/// weighted re-cluster.  Per-point sampling uses [`block_stream`]
+/// streams instead, so the master draw count stays independent of M.
+const STREAM_MASTER: u64 = 0x7a11;
+
+/// Sampling rounds for an M-row input: ⌈log₂ M⌉ / 4, clamped to
+/// [2, 6].  Bahmani et al. show a constant handful of rounds matches
+/// k-means++ quality; the clamp keeps total oversampling work bounded
+/// at `6·ℓ·k` distance folds per point while still scaling gently
+/// with M.
+pub fn sampling_rounds(m: usize) -> usize {
+    let lg = (usize::BITS - m.max(1).leading_zeros()) as usize;
+    lg.div_ceil(4).clamp(2, 6)
+}
+
+/// The per-(round, block) sampling stream id.  Rounds are ≤ 7 and the
+/// block index occupies the low bits, so streams never collide within
+/// a run.
+fn block_stream(round: usize, block: u64) -> u64 {
+    0x6b8b_4567_0000_0000 ^ ((round as u64) << 44) ^ block
+}
+
+/// The oversampled candidate set k-means‖ re-clusters: global row
+/// indices, their rows, and the number of input rows nearest to each.
+#[derive(Debug, Clone)]
+pub struct Candidates {
+    /// Global row index of each candidate (all distinct).
+    pub idx: Vec<usize>,
+    /// Flat candidate rows, parallel to `idx`.
+    pub rows: Vec<f32>,
+    /// Rows of the input nearest to each candidate (ties to the
+    /// lowest candidate index) — the re-cluster weights.
+    pub weights: Vec<u32>,
+}
+
+/// Produce K initial centers from a [`DataSource`] without ever
+/// holding the dataset resident (except for [`InitMethod::KMeansPlusPlus`],
+/// which needs random row access and spills via [`collect_dataset`] —
+/// the documented fallback).  [`InitMethod::KMeansParallel`] streams
+/// one pass per sampling round.  Leaves the source exhausted; callers
+/// that keep reading must `reset()` it.
+pub fn initial_centers_source(
+    src: &mut dyn DataSource,
+    k: usize,
+    method: InitMethod,
+    seed: u64,
+    opts: EngineOpts,
+) -> Result<Vec<f32>> {
+    if k == 0 {
+        return Err(Error::Config("k must be > 0".into()));
+    }
+    let dims = src.dims();
+    if dims == 0 {
+        return Err(Error::Data("source reports dims = 0".into()));
+    }
+    match method {
+        InitMethod::FirstK => {
+            src.reset()?;
+            let mut cursor = ChunkCursor::new(src);
+            let mut out = Vec::with_capacity(k * dims);
+            let got = cursor.fill(&mut out, k)?;
+            if got < k {
+                return Err(Error::Config(format!("k={k} exceeds {got} points")));
+            }
+            Ok(out)
+        }
+        InitMethod::Random => {
+            let m = source_rows(src)?;
+            if k > m {
+                return Err(Error::Config(format!("k={k} exceeds {m} points")));
+            }
+            let mut rng = Pcg32::new(seed, 0x1417);
+            let idx = rng.sample_indices(m, k);
+            let slab_rows = opts.build_engine().stream_slab_rows();
+            gather_rows(src, dims, slab_rows, &idx)
+        }
+        InitMethod::KMeansPlusPlus => {
+            // classic ++ draws one weighted row per iteration — that
+            // needs random access, so this path spills (documented)
+            let ds = collect_dataset(src)?;
+            crate::cluster::init::initial_centers_with(ds.as_slice(), dims, k, method, seed, opts)
+        }
+        InitMethod::KMeansParallel => kmeans_parallel(src, dims, k, seed, opts),
+        InitMethod::Auto => {
+            let m = source_rows(src)?;
+            initial_centers_source(src, k, method.resolve(m, k), seed, opts)
+        }
+    }
+}
+
+/// The k-means‖ oversampling phase alone — exposed so the parity and
+/// property tests can pin the candidate-set invariants (count bounds,
+/// distinct indices, weight totals) that [`initial_centers_source`]
+/// consumes internally.  Bit-identical to the candidate set the full
+/// seeding uses for the same `(seed, k)`.
+pub fn oversample(
+    src: &mut dyn DataSource,
+    k: usize,
+    seed: u64,
+    opts: EngineOpts,
+) -> Result<Candidates> {
+    let dims = src.dims();
+    let mut master = Pcg32::new(seed, STREAM_MASTER);
+    oversample_with(src, dims, k, seed, opts, &mut master)
+}
+
+fn kmeans_parallel(
+    src: &mut dyn DataSource,
+    dims: usize,
+    k: usize,
+    seed: u64,
+    opts: EngineOpts,
+) -> Result<Vec<f32>> {
+    let mut master = Pcg32::new(seed, STREAM_MASTER);
+    let cands = oversample_with(src, dims, k, seed, opts, &mut master)?;
+    let engine = opts.build_engine();
+    weighted_plusplus(&cands.rows, dims, k, &cands.weights, &mut master, &engine)
+}
+
+fn oversample_with(
+    src: &mut dyn DataSource,
+    dims: usize,
+    k: usize,
+    seed: u64,
+    opts: EngineOpts,
+    master: &mut Pcg32,
+) -> Result<Candidates> {
+    let m = source_rows(src)?;
+    if k > m {
+        return Err(Error::Config(format!("k={k} exceeds {m} points")));
+    }
+    let engine = opts.build_engine();
+    let pblock = engine.point_block();
+    let slab_rows = engine.stream_slab_rows();
+    let lk = OVERSAMPLE * k;
+    let rounds = sampling_rounds(m);
+
+    let c0 = master.below(m);
+    let mut cand_rows = gather_rows(src, dims, slab_rows, &[c0])?;
+    let mut cand_idx = vec![c0];
+    let mut taken = vec![false; m];
+    taken[c0] = true;
+
+    // running min distance to the candidate set; candidates added in
+    // round r fold in during round r+1's pass
+    let mut d2 = vec![f32::INFINITY; m];
+    // start (in candidate rows) of the rows not yet folded into d2
+    let mut fold_from = 0usize;
+    // φ from the previous pass — ∞ means "not measured yet"
+    let mut phi_prev = f64::INFINITY;
+
+    // pass 0 folds c0 and measures φ (no draws — φ is still unknown);
+    // passes 1..=rounds sample
+    for round in 0..=rounds {
+        let new_cands = cand_rows[fold_from * dims..].to_vec();
+        fold_from = cand_rows.len() / dims;
+        let sample = round > 0 && phi_prev > 0.0 && phi_prev.is_finite();
+        let mut phi = 0.0f64;
+        let mut row0 = 0usize;
+        let mut picked_idx: Vec<usize> = Vec::new();
+        let mut picked_rows: Vec<f32> = Vec::new();
+        src.reset()?;
+        for_each_slab(src, slab_rows, |slab| {
+            let rows = slab.len() / dims;
+            let dd = &mut d2[row0..row0 + rows];
+            if !new_cands.is_empty() {
+                let pn = engine.point_norms(slab, dims);
+                engine.min_distance_update(slab, dims, &new_cands, &pn, dd);
+            }
+            // walk the slab in global reduction blocks: φ folds in
+            // index order, and each block draws from its own stream,
+            // so neither depends on slab/chunk geometry or threads
+            let mut b = 0usize;
+            while b < rows {
+                let cap = (pblock - (row0 + b) % pblock).min(rows - b);
+                let mut part = 0.0f64;
+                for &v in &dd[b..b + cap] {
+                    part += v as f64;
+                }
+                phi += part;
+                if sample {
+                    let gblock = ((row0 + b) / pblock) as u64;
+                    let mut rng = Pcg32::new(seed, block_stream(round, gblock));
+                    for i in 0..cap {
+                        let u = rng.next_f32();
+                        // stale-φ Bernoulli: p = min(1, ℓ·k·d²/φ_prev);
+                        // a candidate's own d² is exactly 0, so p = 0
+                        // and no index is ever picked twice
+                        let p = lk as f64 * (dd[b + i] as f64) / phi_prev;
+                        if (u as f64) < p {
+                            let gi = row0 + b + i;
+                            picked_idx.push(gi);
+                            picked_rows
+                                .extend_from_slice(&slab[(b + i) * dims..(b + i + 1) * dims]);
+                        }
+                    }
+                }
+                b += cap;
+            }
+            row0 += rows;
+            Ok(())
+        })?;
+        // cap each round at ℓ·k candidates (first in index order) so
+        // the total stays ≤ rounds·ℓ·k + 1
+        if picked_idx.len() > lk {
+            picked_idx.truncate(lk);
+            picked_rows.truncate(lk * dims);
+        }
+        for &gi in &picked_idx {
+            taken[gi] = true;
+        }
+        cand_idx.extend_from_slice(&picked_idx);
+        cand_rows.extend_from_slice(&picked_rows);
+        phi_prev = phi;
+        if phi == 0.0 {
+            break; // every row coincides with a candidate
+        }
+    }
+
+    // deterministic top-up: the sampler may land short of k (tiny φ,
+    // duplicate-heavy data, k close to M) — take the first unchosen
+    // rows in index order until k candidates exist
+    if cand_idx.len() < k {
+        let mut need = Vec::with_capacity(k - cand_idx.len());
+        let mut cursor = 0usize;
+        while cand_idx.len() + need.len() < k {
+            // fewer than k ≤ m rows are taken, so the cursor always
+            // lands on an unchosen row before running off the end
+            while taken[cursor] {
+                cursor += 1;
+            }
+            need.push(cursor);
+            taken[cursor] = true;
+            cursor += 1;
+        }
+        let extra = gather_rows(src, dims, slab_rows, &need)?;
+        cand_idx.extend_from_slice(&need);
+        cand_rows.extend_from_slice(&extra);
+    }
+
+    // weigh each candidate by the rows it absorbs (one more streamed
+    // pass); u32 counts merge exactly in any block grouping
+    let c = cand_idx.len();
+    let mut weights = vec![0u32; c];
+    let mut unused_inertia = 0.0f64;
+    src.reset()?;
+    for_each_slab(src, slab_rows, |slab| {
+        let _ = engine.assign_accumulate_stream(
+            slab,
+            dims,
+            &cand_rows,
+            &mut weights,
+            &mut unused_inertia,
+        );
+        Ok(())
+    })?;
+
+    Ok(Candidates { idx: cand_idx, rows: cand_rows, weights })
+}
+
+/// Weighted k-means++ over the (small, resident) candidate set: each
+/// candidate's D² mass is scaled by the rows it absorbed.  Same
+/// fallback-mask discipline as the classic path in
+/// [`crate::cluster::init`].
+fn weighted_plusplus(
+    cands: &[f32],
+    dims: usize,
+    k: usize,
+    weights: &[u32],
+    rng: &mut Pcg32,
+    engine: &Engine,
+) -> Result<Vec<f32>> {
+    let c = cands.len() / dims;
+    debug_assert!(k <= c, "re-cluster k={k} exceeds {c} candidates");
+    debug_assert_eq!(weights.len(), c);
+    let wf: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
+    let pn = engine.point_norms(cands, dims);
+    let mut chosen = Vec::with_capacity(k);
+    let mut taken = vec![false; c];
+    let mut cursor = 0usize;
+    let first = rng.weighted_index(&wf).unwrap_or(0);
+    chosen.push(first);
+    taken[first] = true;
+    let mut d2 = vec![f32::INFINITY; c];
+    let mut wd = vec![0.0f32; c];
+    while chosen.len() < k {
+        let last = *chosen.last().expect("chosen is never empty");
+        let lc = &cands[last * dims..(last + 1) * dims];
+        engine.min_distance_update(cands, dims, lc, &pn, &mut d2);
+        for i in 0..c {
+            wd[i] = wf[i] * d2[i];
+        }
+        match rng.weighted_index(&wd) {
+            Some(next) => {
+                chosen.push(next);
+                taken[next] = true;
+            }
+            None => {
+                while cursor < c && taken[cursor] {
+                    cursor += 1;
+                }
+                if cursor == c {
+                    return Err(Error::Cluster(
+                        "k-means|| re-cluster ran out of candidates".into(),
+                    ));
+                }
+                chosen.push(cursor);
+                taken[cursor] = true;
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(k * dims);
+    for &i in &chosen {
+        out.extend_from_slice(&cands[i * dims..(i + 1) * dims]);
+    }
+    Ok(out)
+}
+
+/// Row count of a source: the cheap hint when it exists, else one
+/// counting pass.
+fn source_rows(src: &mut dyn DataSource) -> Result<usize> {
+    if let Some(m) = src.len_hint() {
+        return Ok(m);
+    }
+    src.reset()?;
+    let mut rows = 0usize;
+    let mut buf = Vec::new();
+    loop {
+        let n = src.next_chunk(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        rows += n;
+    }
+    Ok(rows)
+}
+
+/// Copy the rows at `idx` (any order; duplicates allowed) out of one
+/// streamed pass, preserving `idx` order in the output.
+fn gather_rows(
+    src: &mut dyn DataSource,
+    dims: usize,
+    slab_rows: usize,
+    idx: &[usize],
+) -> Result<Vec<f32>> {
+    let mut want: Vec<(usize, usize)> =
+        idx.iter().copied().enumerate().map(|(slot, gi)| (gi, slot)).collect();
+    want.sort_unstable();
+    let mut out = vec![0.0f32; idx.len() * dims];
+    let mut row0 = 0usize;
+    let mut wi = 0usize;
+    src.reset()?;
+    for_each_slab(src, slab_rows, |slab| {
+        let rows = slab.len() / dims;
+        while wi < want.len() && want[wi].0 < row0 + rows {
+            let (gi, slot) = want[wi];
+            let li = gi - row0;
+            out[slot * dims..(slot + 1) * dims]
+                .copy_from_slice(&slab[li * dims..(li + 1) * dims]);
+            wi += 1;
+        }
+        row0 += rows;
+        Ok(())
+    })?;
+    if wi < want.len() {
+        return Err(Error::Data(format!(
+            "source ended at row {row0} before gathering row {}",
+            want[wi].0
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::init::{initial_centers, initial_centers_with};
+    use crate::data::source::{ChunkedOnly, SliceSource};
+
+    fn blobs(m_per: usize, dims: usize) -> Vec<f32> {
+        // two tight far-apart blobs, deterministic layout
+        let mut pts = Vec::with_capacity(2 * m_per * dims);
+        for i in 0..m_per {
+            for d in 0..dims {
+                pts.push((i % 7) as f32 * 1e-3 + d as f32);
+            }
+        }
+        for i in 0..m_per {
+            for d in 0..dims {
+                pts.push(500.0 + (i % 5) as f32 * 1e-3 + d as f32);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn parallel_matches_resident_entry() {
+        let pts = blobs(300, 3);
+        let a = initial_centers(&pts, 3, 8, InitMethod::KMeansParallel, 11).unwrap();
+        let mut src = SliceSource::new(&pts, 3).unwrap();
+        let b =
+            initial_centers_source(&mut src, 8, InitMethod::KMeansParallel, 11, EngineOpts::serial())
+                .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_prefers_spread() {
+        // both far blobs must be represented for any seed
+        let pts = blobs(200, 2);
+        for seed in 0..6 {
+            let c = initial_centers(&pts, 2, 4, InitMethod::KMeansParallel, seed).unwrap();
+            let lo = c.chunks_exact(2).filter(|p| p[0] < 250.0).count();
+            assert!(lo > 0 && lo < 4, "seed {seed}: one-sided centers {c:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_handles_all_duplicates() {
+        let pts = vec![1.0f32; 12]; // 6 identical 2-d points
+        let c = initial_centers(&pts, 2, 3, InitMethod::KMeansParallel, 0).unwrap();
+        assert_eq!(c, vec![1.0; 6]);
+    }
+
+    #[test]
+    fn parallel_handles_k_equals_m() {
+        let pts: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 6 rows × 2
+        let c = initial_centers(&pts, 2, 6, InitMethod::KMeansParallel, 3).unwrap();
+        assert_eq!(c.len(), 12);
+        // every input row must appear exactly once among the centers
+        let mut rows: Vec<&[f32]> = c.chunks_exact(2).collect();
+        rows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(rows.concat(), pts);
+    }
+
+    #[test]
+    fn oversample_respects_bounds() {
+        let pts = blobs(400, 2);
+        let m = pts.len() / 2;
+        let k = 12;
+        let mut src = SliceSource::new(&pts, 2).unwrap();
+        let cands = oversample(&mut src, k, 7, EngineOpts::serial()).unwrap();
+        assert!(cands.idx.len() >= k, "only {} candidates", cands.idx.len());
+        assert!(
+            cands.idx.len() <= sampling_rounds(m) * OVERSAMPLE * k + 1,
+            "{} candidates exceed the oversampling bound",
+            cands.idx.len()
+        );
+        // indices are distinct and the weights cover every input row
+        let mut idx = cands.idx.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), cands.idx.len());
+        let mut total = 0u64;
+        for &w in &cands.weights {
+            total += w as u64;
+        }
+        assert_eq!(total, m as u64);
+    }
+
+    #[test]
+    fn gather_rows_preserves_request_order() {
+        let pts: Vec<f32> = (0..20).map(|i| i as f32).collect(); // 10 rows × 2
+        let mut src = ChunkedOnly(SliceSource::new(&pts, 2).unwrap().with_chunk_rows(3));
+        let got = gather_rows(&mut src, 2, 4, &[7, 0, 7, 3]).unwrap();
+        assert_eq!(got, vec![14.0, 15.0, 0.0, 1.0, 14.0, 15.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn source_rows_counts_without_hint() {
+        let pts: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        struct NoHint<'a>(SliceSource<'a>);
+        impl DataSource for NoHint<'_> {
+            fn dims(&self) -> usize {
+                self.0.dims()
+            }
+            fn len_hint(&self) -> Option<usize> {
+                None
+            }
+            fn next_chunk(&mut self, out: &mut Vec<f32>) -> Result<usize> {
+                self.0.next_chunk(out)
+            }
+            fn reset(&mut self) -> Result<()> {
+                self.0.reset()
+            }
+        }
+        let mut src = NoHint(SliceSource::new(&pts, 3).unwrap().with_chunk_rows(2));
+        assert_eq!(source_rows(&mut src).unwrap(), 6);
+    }
+}

@@ -10,7 +10,7 @@
 //! empty clusters keeping their previous center.
 
 use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
-use crate::cluster::init::{initial_centers, InitMethod};
+use crate::cluster::init::{initial_centers_with, InitMethod};
 use crate::error::{Error, Result};
 use crate::kernel::KernelMode;
 
@@ -46,7 +46,7 @@ impl Default for KMeansConfig {
             k: 8,
             max_iters: 50,
             tol: 1e-6,
-            init: InitMethod::KMeansPlusPlus,
+            init: InitMethod::Auto,
             seed: 0,
             workers: 1,
             bounds: BoundsMode::Hamerly,
@@ -119,7 +119,8 @@ pub fn lloyd(points: &[f32], dims: usize, cfg: &KMeansConfig) -> Result<KMeansRe
     if cfg.k == 0 || cfg.k > m {
         return Err(Error::Config(format!("k={} invalid for {m} points", cfg.k)));
     }
-    let centers = initial_centers(points, dims, cfg.k, cfg.init, cfg.seed)?;
+    let centers =
+        initial_centers_with(points, dims, cfg.k, cfg.init, cfg.seed, cfg.engine_opts())?;
     lloyd_from_with(
         points,
         dims,

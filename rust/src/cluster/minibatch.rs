@@ -20,7 +20,8 @@
 //!   (pinned by `rust/tests/stream_parity.rs`).
 
 use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
-use crate::cluster::init::{initial_centers, InitMethod};
+use crate::cluster::init::{initial_centers_with, InitMethod};
+use crate::cluster::init_parallel::initial_centers_source;
 use crate::cluster::kmeans::KMeansResult;
 use crate::cluster::Clusterer;
 use crate::data::source::{for_each_slab, ChunkCursor, DataSource};
@@ -76,7 +77,7 @@ impl Default for MiniBatchKMeans {
         MiniBatchKMeans {
             batch_size: 1024,
             iters: 100,
-            init: InitMethod::KMeansPlusPlus,
+            init: InitMethod::Auto,
             seed: 0,
             k: 8,
             workers: 1,
@@ -130,19 +131,29 @@ impl MiniBatchKMeans {
             return Err(Error::Config("k must be > 0".into()));
         }
 
-        // 1. seed on the head of the stream: k-means++ (or the
-        // configured init) over the first max(batch_size, k) rows —
-        // fewer rows than k means the whole stream has fewer than k
-        src.reset()?;
-        let pool_rows = self.batch_size.max(k);
-        let mut pool = Vec::with_capacity(pool_rows.min(1 << 20) * dims);
-        ChunkCursor::new(src).fill(&mut pool, pool_rows)?;
-        let pool_m = pool.len() / dims;
-        if pool_m < k {
-            return Err(Error::Config(format!("k={k} invalid for {pool_m} points")));
-        }
-        let mut centers = initial_centers(&pool, dims, k, self.init, self.seed)?;
-        drop(pool);
+        // 1. seed the centers.  When the init resolves to k-means‖ the
+        // seeding itself streams — one pass per oversampling round over
+        // the *whole* source, no resident pool (the out-of-core story:
+        // sorted/grouped streams seed from every region, not just the
+        // head window).  `Auto` resolves against the full stream size
+        // when the source knows it; an unsized stream conservatively
+        // stays on the head-pool k-means++.  Other methods seed on the
+        // first max(batch_size, k) rows — fewer rows than k means the
+        // whole stream has fewer than k.
+        let resolved = self.init.resolve(src.len_hint().unwrap_or(0), k);
+        let mut centers = if resolved == InitMethod::KMeansParallel {
+            initial_centers_source(src, k, resolved, self.seed, self.engine_opts())?
+        } else {
+            src.reset()?;
+            let pool_rows = self.batch_size.max(k);
+            let mut pool = Vec::with_capacity(pool_rows.min(1 << 20) * dims);
+            ChunkCursor::new(src).fill(&mut pool, pool_rows)?;
+            let pool_m = pool.len() / dims;
+            if pool_m < k {
+                return Err(Error::Config(format!("k={k} invalid for {pool_m} points")));
+            }
+            initial_centers_with(&pool, dims, k, resolved, self.seed, self.engine_opts())?
+        };
 
         // 2. batch rounds: consecutive windows of exactly batch_size
         // rows, wrapping to the top of the stream at EOF; per-row
@@ -199,7 +210,8 @@ impl MiniBatchKMeans {
         }
         let b = self.batch_size.min(m);
         let mut rng = Pcg32::new(self.seed, 0xba7c);
-        let mut centers = initial_centers(points, dims, k, self.init, self.seed)?;
+        let mut centers =
+            initial_centers_with(points, dims, k, self.init, self.seed, self.engine_opts())?;
         let mut per_center_counts = vec![0u64; k];
 
         for _ in 0..self.iters {

@@ -11,6 +11,7 @@
 pub mod bisecting;
 pub mod engine;
 pub mod init;
+pub mod init_parallel;
 pub mod kmeans;
 pub mod minibatch;
 
@@ -20,7 +21,8 @@ pub use engine::{
 };
 pub use bisecting::BisectingKMeans;
 pub use minibatch::{MiniBatchKMeans, StreamFitResult};
-pub use init::InitMethod;
+pub use init::{initial_centers, initial_centers_with, InitMethod};
+pub use init_parallel::initial_centers_source;
 pub use kmeans::{lloyd, KMeansConfig, KMeansResult};
 
 use crate::data::Dataset;

@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use crate::cluster::BoundsMode;
+use crate::cluster::{BoundsMode, InitMethod};
 use crate::coordinator::remote::RemoteConfig;
 use crate::error::{Error, Result};
 use crate::kernel::KernelMode;
@@ -216,6 +216,10 @@ impl AppConfig {
                 self.pipeline.kernel =
                     KernelMode::parse(value.as_str().ok_or_else(|| bad("string"))?)?;
             }
+            "pipeline.init" => {
+                self.pipeline.init =
+                    InitMethod::parse(value.as_str().ok_or_else(|| bad("string"))?)?;
+            }
             "pipeline.seed" => {
                 self.pipeline.seed = value.as_usize().ok_or_else(|| bad("usize"))? as u64;
             }
@@ -376,6 +380,7 @@ mod tests {
             weighted_global = true
             bounds = "off"
             kernel = "wide"
+            init = "kmeans||"
             [server]
             queue_depth = 3
             model_cap = 5
@@ -389,12 +394,15 @@ mod tests {
         assert!(cfg.pipeline.weighted_global);
         assert_eq!(cfg.pipeline.bounds, BoundsMode::Off);
         assert_eq!(cfg.pipeline.kernel, KernelMode::Wide);
+        assert_eq!(cfg.pipeline.init, InitMethod::KMeansParallel);
         assert_eq!(cfg.queue_depth, 3);
         assert_eq!(cfg.model_cap, 5);
         assert_eq!(cfg.snapshot_dir, Some(PathBuf::from("/tmp/snaps")));
         let t = parse_toml_lite("[pipeline]\nbounds = \"banana\"\n").unwrap();
         assert!(AppConfig::from_table(&t).is_err());
         let t = parse_toml_lite("[pipeline]\nkernel = \"gpu\"\n").unwrap();
+        assert!(AppConfig::from_table(&t).is_err());
+        let t = parse_toml_lite("[pipeline]\ninit = \"sobol\"\n").unwrap();
         assert!(AppConfig::from_table(&t).is_err());
     }
 

@@ -117,6 +117,40 @@
 //! # let _ = model;
 //! ```
 //!
+//! ## Initialization
+//!
+//! Every fit seeds through one knob, [`cluster::InitMethod`], threaded
+//! from [`cluster::KMeansConfig`], [`cluster::MiniBatchKMeans`],
+//! [`cluster::BisectingKMeans`], and [`pipeline::PipelineConfig`] up
+//! to the config file (`pipeline.init`), the CLI (`--init`), and the
+//! fit wire call — and recorded in every model artifact
+//! ([`model::FitMeta::init`]) as provenance:
+//!
+//! * `firstk` / `random` — the trivial seeders (benches, baselines).
+//! * `kmeans++` — the classic incremental seeder.  Its per-center
+//!   min-distance sweep runs through the engine's parallel blocked
+//!   pass, but the k draws themselves are inherently serial: an
+//!   O(k·M·D) wall once k·M is large.
+//! * `kmeans||` — k-means‖ (Bahmani et al., 2012), the engine-parallel
+//!   seeder ([`cluster::init_parallel`]): ~log(M) rounds, each one
+//!   engine-parallel min-distance sweep that oversamples ~2·k
+//!   candidates via per-point Bernoulli draws, then a weighted
+//!   k-means++ re-cluster of the tiny candidate set down to k.  The
+//!   [`data::DataSource`] variant
+//!   ([`cluster::initial_centers_source`]) streams one pass per round,
+//!   so out-of-core fits seed from the whole stream, not a head
+//!   window.
+//! * `auto` (default) — `kmeans||` once k and k·M cross the crossover
+//!   thresholds, `kmeans++` otherwise (small problems keep the classic
+//!   bits).
+//!
+//! Seeding obeys the same reproducibility contract as the engine:
+//! bit-identical centers at any worker count, tile kernel, and source
+//! chunk size (per-(round, block) RNG streams, index-ordered f64 mass
+//! folds; `rust/tests/init_parity.rs` pins the grid, and
+//! `benches/init_quality.rs` tracks the wall-time win and seed
+//! quality).
+//!
 //! ## Invariants
 //!
 //! The guarantees above are not prose: each one is mechanically

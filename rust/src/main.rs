@@ -16,7 +16,7 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use parsample::cluster::{BoundsMode, EngineOpts};
+use parsample::cluster::{BoundsMode, EngineOpts, InitMethod};
 use parsample::config::AppConfig;
 use parsample::coordinator::SchedulerConfig;
 use parsample::data::source::{open_path_source, DataSource};
@@ -72,14 +72,15 @@ fn print_usage() {
          \x20 cluster   --data <iris|seeds|file.csv|file.bin> --k K [--scheme equal|unequal|random]\n\
          \x20           [--groups G] [--compression C] [--backend native|pjrt] [--workers W]\n\
          \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--artifacts DIR]\n\
-         \x20           [--seed S] [--config cfg.toml] [--eval] [--out FILE] [--join H:P,...]\n\
+         \x20           [--init firstk|random|kmeans++|kmeans|||auto] [--seed S]\n\
+         \x20           [--config cfg.toml] [--eval] [--out FILE] [--join H:P,...]\n\
          \x20 baseline  --data ... --k K [--iters N] [--seed S] [--workers W]\n\
-         \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--eval]\n\
+         \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--init ...] [--eval]\n\
          \x20           traditional k-means (single Lloyd loop on the blocked engine)\n\
          \x20 fit       --data ... --k K --out MODEL.json [--algo kmeans|minibatch|bisecting|pipeline]\n\
          \x20           [--iters N] [--seed S] [--workers W] [--bounds ...] [--kernel ...]\n\
-         \x20           [--scheme ...] [--compression C] [--groups G] [--chunk-rows N]\n\
-         \x20           [--join H:P,...]\n\
+         \x20           [--init ...] [--scheme ...] [--compression C] [--groups G]\n\
+         \x20           [--chunk-rows N] [--join H:P,...]\n\
          \x20           run the expensive clustering once; write a reusable model artifact\n\
          \x20 predict   --model MODEL.json --data ... [--workers W] [--kernel ...] [--eval]\n\
          \x20           [--out labels.txt] [--chunk-rows N]\n\
@@ -101,6 +102,11 @@ fn print_usage() {
          --kernel selects the engine's tile kernel: scalar (default), wide (8-lane\n\
          SIMD sweep, bit-identical to scalar), or auto (wide when the detected CPU\n\
          features warrant it).  PARSAMPLE_KERNEL=... overrides the default.\n\
+         --init selects the seeding: firstk, random, kmeans++ (classic incremental),\n\
+         kmeans|| (engine-parallel oversampling, ~log(M) streamed rounds), or auto\n\
+         (default: kmeans|| once k and k*M are large enough to pay for it).  Every\n\
+         method is bit-identical at any worker count, kernel, and chunk size;\n\
+         baseline defaults to kmeans++ so its published timings stay comparable.\n\
          --chunk-rows N streams the data instead of loading it: fit/predict pull the\n\
          file N rows at a time, with results bit-identical to the resident path at\n\
          any N; predict --out writes labels incrementally.  Truly out-of-core today:\n\
@@ -232,6 +238,7 @@ fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
         .global_iters(app.pipeline.global_iters)
         .bounds(app.pipeline.bounds)
         .kernel(app.pipeline.kernel)
+        .init(app.pipeline.init)
         .seed(app.pipeline.seed);
     if let Some(g) = app.pipeline.num_groups {
         b = b.num_groups(g);
@@ -268,6 +275,9 @@ fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
     }
     if let Some(km) = flags.get("kernel") {
         b = b.kernel(KernelMode::parse(km)?);
+    }
+    if let Some(i) = flags.get("init") {
+        b = b.init(InitMethod::parse(i)?);
     }
     if let Some(s) = flags.usize("seed")? {
         b = b.seed(s as u64);
@@ -352,6 +362,9 @@ fn cmd_fit(flags: &Flags) -> Result<()> {
     spec.engine = engine_opts_from_flags(flags, default_workers())?;
     if let Some(s) = flags.get("scheme") {
         spec.scheme = Some(Scheme::parse(s)?);
+    }
+    if let Some(i) = flags.get("init") {
+        spec.init = Some(InitMethod::parse(i)?);
     }
     spec.compression = flags.f32("compression")?;
     spec.num_groups = flags.usize("groups")?;
@@ -479,9 +492,15 @@ fn cmd_baseline(flags: &Flags) -> Result<()> {
         Some(s) => KernelMode::parse(s)?,
         None => KernelMode::session_default(),
     };
+    // the baseline stays k-means++ unless asked: its published timings
+    // are defined against the classic seeding
+    let init = match flags.get("init") {
+        Some(s) => InitMethod::parse(s)?,
+        None => InitMethod::KMeansPlusPlus,
+    };
     let t0 = std::time::Instant::now();
     let r = parsample::pipeline::traditional_kmeans_workers(
-        &data, k, iters, seed, 5, workers, bounds, kernel,
+        &data, k, iters, seed, 5, workers, bounds, kernel, init,
     )?;
     println!(
         "traditional kmeans: {} points, k={k}, {} iters | inertia {:.6} | {:.1} ms",

@@ -21,7 +21,7 @@
 use std::path::Path;
 
 use crate::cluster::engine::{Engine, EngineOpts};
-use crate::cluster::{BoundsMode, KernelMode};
+use crate::cluster::{BoundsMode, InitMethod, KernelMode};
 use crate::data::scaling::MinMaxScaler;
 use crate::data::source::{for_each_slab, DataSource};
 use crate::data::Dataset;
@@ -58,6 +58,11 @@ pub struct FitMeta {
     /// Engine knobs the fit ran with (provenance; predict-time knobs
     /// are retunable via [`FittedModel::set_engine_opts`]).
     pub engine: EngineOpts,
+    /// Seeding method the fit was *configured* with (provenance; may be
+    /// `auto`, which records the request rather than the data-dependent
+    /// resolution).  Artifacts written before this field existed load
+    /// as `kmeans++`, the old hard-wired behavior.
+    pub init: InitMethod,
 }
 
 /// Output of one batch prediction.
@@ -307,6 +312,7 @@ impl FittedModel {
             ("trained_on", Json::num(self.meta.trained_on as f64)),
             ("inertia", Json::num(self.meta.inertia)),
             ("iterations", Json::num(self.meta.iterations as f64)),
+            ("init", Json::str(self.meta.init.as_str())),
             ("engine", engine),
             ("centers", Json::Arr(centers)),
         ];
@@ -390,6 +396,12 @@ impl FittedModel {
                 .ok_or_else(|| Error::Model("missing inertia".into()))?,
             iterations: get_usize(v, "iterations")?,
             engine,
+            // absent in version-1 artifacts written before the knob
+            // existed: those fits always seeded with k-means++
+            init: match v.get("init").and_then(Json::as_str) {
+                Some(s) => InitMethod::parse(s)?,
+                None => InitMethod::KMeansPlusPlus,
+            },
         };
         FittedModel::new(meta, centers, scaler)
     }
@@ -451,6 +463,7 @@ mod tests {
             inertia: 1.25,
             iterations: 7,
             engine: EngineOpts::serial(),
+            init: InitMethod::KMeansPlusPlus,
         }
     }
 
@@ -550,6 +563,7 @@ mod tests {
                     bounds: BoundsMode::Off,
                     kernel: KernelMode::Wide,
                 },
+                init: InitMethod::KMeansParallel,
             },
             vec![0.1, -3.7e-5, 1.0e8, 2.5],
             Some(scaler),
@@ -566,6 +580,31 @@ mod tests {
         let (om, or) = m.scaler().unwrap().params();
         assert_eq!(bm, om);
         assert_eq!(br, or);
+    }
+
+    #[test]
+    fn missing_init_field_loads_as_plusplus() {
+        // pre-init-knob artifacts always seeded with k-means++; the
+        // absent field must load as exactly that, not as Auto
+        let mut v = model().to_json();
+        if let Json::Obj(map) = &mut v {
+            map.remove("init");
+        }
+        let back = FittedModel::from_json(&v).unwrap();
+        assert_eq!(back.meta().init, InitMethod::KMeansPlusPlus);
+        let mut v = model().to_json();
+        if let Json::Obj(map) = &mut v {
+            map.insert("init".into(), Json::str("kmeans||"));
+        }
+        assert_eq!(
+            FittedModel::from_json(&v).unwrap().meta().init,
+            InitMethod::KMeansParallel
+        );
+        let mut v = model().to_json();
+        if let Json::Obj(map) = &mut v {
+            map.insert("init".into(), Json::str("bogus"));
+        }
+        assert!(FittedModel::from_json(&v).is_err());
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub use crate::cluster::engine::EngineOpts;
 pub use artifact::{FitMeta, FittedModel, Prediction, SourcePrediction, MODEL_FORMAT, MODEL_VERSION};
 
 use crate::cluster::kmeans::{lloyd, KMeansConfig, KMeansResult};
-use crate::cluster::{BisectingKMeans, MiniBatchKMeans};
+use crate::cluster::{BisectingKMeans, InitMethod, MiniBatchKMeans};
 use crate::data::scaling::MinMaxScaler;
 use crate::data::source::{collect_dataset, DataSource, SliceSource};
 use crate::data::Dataset;
@@ -109,6 +109,7 @@ fn artifact_from_result(
     data: &Dataset,
     r: KMeansResult,
     engine: EngineOpts,
+    init: InitMethod,
     scaler: Option<MinMaxScaler>,
 ) -> Result<FittedModel> {
     FittedModel::new(
@@ -120,6 +121,7 @@ fn artifact_from_result(
             inertia: r.inertia,
             iterations: r.iterations,
             engine,
+            init,
         },
         r.centers,
         scaler,
@@ -133,7 +135,14 @@ impl ClusterModel for KMeans {
 
     fn fit(&self, data: &Dataset) -> Result<FittedModel> {
         let r = lloyd(data.as_slice(), data.dims(), &self.config)?;
-        artifact_from_result(self.algorithm(), data, r, self.config.engine_opts(), None)
+        artifact_from_result(
+            self.algorithm(),
+            data,
+            r,
+            self.config.engine_opts(),
+            self.config.init,
+            None,
+        )
     }
 }
 
@@ -165,6 +174,7 @@ impl ClusterModel for MiniBatchKMeans {
                 inertia: r.inertia,
                 iterations: r.iterations,
                 engine: self.engine_opts(),
+                init: self.init,
             },
             r.centers,
             None,
@@ -179,7 +189,7 @@ impl ClusterModel for BisectingKMeans {
 
     fn fit(&self, data: &Dataset) -> Result<FittedModel> {
         let r = self.run(data.as_slice(), data.dims(), self.k)?;
-        artifact_from_result(self.algorithm(), data, r, self.engine_opts(), None)
+        artifact_from_result(self.algorithm(), data, r, self.engine_opts(), self.init, None)
     }
 }
 
@@ -210,6 +220,7 @@ impl ClusterModel for SubclusterPipeline {
                 inertia: r.inertia,
                 iterations: r.global_iterations,
                 engine: cfg.engine_opts(),
+                init: cfg.init,
             },
             r.centers,
             scaler,
@@ -233,6 +244,7 @@ impl ClusterModel for SubclusterPipeline {
                 inertia: r.inertia,
                 iterations: r.global_iterations,
                 engine: self.config().engine_opts(),
+                init: self.config().init,
             },
             r.centers,
             r.scaler,
@@ -256,6 +268,9 @@ pub struct ModelSpec {
     pub seed: u64,
     /// Engine knobs for the fit (recorded as provenance).
     pub engine: EngineOpts,
+    /// Seeding method (`None` keeps each algorithm's default —
+    /// `Auto` for kmeans/minibatch/bisecting/pipeline).
+    pub init: Option<InitMethod>,
     /// Pipeline-only: partitioning scheme.
     pub scheme: Option<Scheme>,
     /// Pipeline-only: the paper's compression value c.
@@ -275,6 +290,7 @@ impl ModelSpec {
             iters: None,
             seed: 0,
             engine: EngineOpts::default(),
+            init: None,
             scheme: None,
             compression: None,
             num_groups: None,
@@ -292,6 +308,9 @@ impl ModelSpec {
                 if let Some(it) = self.iters {
                     cfg.max_iters = it;
                 }
+                if let Some(i) = self.init {
+                    cfg.init = i;
+                }
                 Ok(Box::new(KMeans { config: cfg }))
             }
             "minibatch" | "minibatch-kmeans" => {
@@ -300,6 +319,9 @@ impl ModelSpec {
                 if let Some(it) = self.iters {
                     cfg.iters = it;
                 }
+                if let Some(i) = self.init {
+                    cfg.init = i;
+                }
                 Ok(Box::new(cfg))
             }
             "bisecting" | "bisecting-kmeans" => {
@@ -307,6 +329,9 @@ impl ModelSpec {
                     .with_engine_opts(self.engine);
                 if let Some(it) = self.iters {
                     cfg.split_iters = it;
+                }
+                if let Some(i) = self.init {
+                    cfg.init = i;
                 }
                 Ok(Box::new(cfg))
             }
@@ -326,6 +351,9 @@ impl ModelSpec {
                 }
                 if let Some(it) = self.iters {
                     b = b.global_iters(it);
+                }
+                if let Some(i) = self.init {
+                    b = b.init(i);
                 }
                 if let Some(r) = &self.remote {
                     b = b.remote(r.clone());
@@ -458,5 +486,23 @@ mod tests {
         let m = spec.fit(&data).unwrap();
         assert_eq!(m.meta().engine.workers, 3);
         assert_eq!(m.engine_opts().workers, 3);
+    }
+
+    #[test]
+    fn spec_init_knob_is_recorded_per_algorithm() {
+        let data = blobs(200, 2, 6);
+        for name in ["kmeans", "minibatch", "bisecting", "pipeline"] {
+            let mut spec = ModelSpec::new(name, 2);
+            spec.num_groups = Some(2);
+            spec.compression = Some(4.0);
+            spec.init = Some(InitMethod::KMeansParallel);
+            let m = spec.fit(&data).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(m.meta().init, InitMethod::KMeansParallel, "{name}");
+            // None keeps the algorithm default (Auto everywhere)
+            let m = ModelSpec::new(name, 2).fit(&data);
+            if let Ok(m) = m {
+                assert_eq!(m.meta().init, InitMethod::Auto, "{name}");
+            }
+        }
     }
 }

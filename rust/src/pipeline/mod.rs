@@ -26,6 +26,7 @@ use std::path::PathBuf;
 
 use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
 use crate::cluster::kmeans::{lloyd_from_with, KMeansResult};
+use crate::cluster::InitMethod;
 use crate::coordinator::batcher::{Batcher, LocalResult};
 use crate::data::scaling::{MinMaxScaler, Scaler};
 use crate::data::Dataset;
@@ -77,6 +78,10 @@ pub struct PipelineConfig {
     /// Tile kernel for the engine sweeps (global stage + full
     /// assignment); the wide kernel is bit-identical to scalar.
     pub kernel: KernelMode,
+    /// Global-stage (and baseline) seeding method.  `Auto` picks
+    /// k-means‖ when k × pool-size is large enough for the engine-parallel
+    /// sweeps to pay off, else k-means++.
+    pub init: InitMethod,
     pub seed: u64,
     /// Distributed fit: dispatch local-stage groups to remote `serve`
     /// workers ([`crate::coordinator::remote`]).  `None` (or an empty
@@ -101,6 +106,7 @@ impl Default for PipelineConfig {
             weighted_global: false,
             bounds: BoundsMode::Hamerly,
             kernel: KernelMode::session_default(),
+            init: InitMethod::Auto,
             seed: 0,
             remote: None,
         }
@@ -231,6 +237,12 @@ impl PipelineConfigBuilder {
 
     pub fn seed(mut self, s: u64) -> Self {
         self.cfg.seed = s;
+        self
+    }
+
+    /// Seeding method for the global stage (and the CLI baselines).
+    pub fn init(mut self, i: InitMethod) -> Self {
+        self.cfg.init = i;
         self
     }
 
@@ -483,21 +495,22 @@ impl SubclusterPipeline {
         } else {
             vec![1.0; n_pool]
         };
-        // k-means++ is a randomized seeding; on small pools a couple of
-        // restarts (best-of by inertia) removes the seeding variance the
-        // Table-1 accuracy numbers are sensitive to.  Large pools (the
-        // T2/T3 global stage) get one shot — the sample is dense enough
-        // that seeding barely matters and restarts would double the
-        // dominant stage's cost.
+        // Seeding is randomized; on small pools a couple of restarts
+        // (best-of by inertia) removes the seeding variance the Table-1
+        // accuracy numbers are sensitive to.  Large pools (the T2/T3
+        // global stage) get one shot — the sample is dense enough that
+        // seeding barely matters and restarts would double the dominant
+        // stage's cost.
         let restarts: u64 = if n_pool <= GLOBAL_RESTART_POOL_LIMIT { 3 } else { 1 };
         let mut best: Option<KMeansResult> = None;
         for trial in 0..restarts {
-            let init = crate::cluster::init::initial_centers(
+            let init = crate::cluster::init::initial_centers_with(
                 pooled,
                 dims,
                 k,
-                crate::cluster::InitMethod::KMeansPlusPlus,
+                self.cfg.init,
                 self.cfg.seed ^ trial.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                self.cfg.engine_opts(),
             )?;
             let r = self.global_once(backend, pooled, &weights, &init, dims, n_pool, k)?;
             if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {
@@ -818,7 +831,7 @@ pub fn assign_full(
 
 /// The "traditional Kmeans" baseline every table compares against:
 /// full-dataset Lloyd in the original coordinates, k-means++ init,
-/// best-of-3 restarts by inertia (the strongest reasonable baseline —
+/// best-of-5 restarts by inertia (the strongest reasonable baseline —
 /// the paper's speedup claims are only meaningful against a baseline
 /// that isn't stuck in a bad optimum).
 pub fn traditional_kmeans(
@@ -851,13 +864,15 @@ pub fn traditional_kmeans_restarts(
         1,
         BoundsMode::default(),
         KernelMode::session_default(),
+        InitMethod::KMeansPlusPlus,
     )
 }
 
-/// [`traditional_kmeans_restarts`] with the engine worker, bounds, and
-/// kernel knobs exposed (the CLI `baseline --workers/--bounds/--kernel`
-/// path; results are bit-identical at every worker count, in both
-/// bounds modes, and under every tile kernel).
+/// [`traditional_kmeans_restarts`] with the engine worker, bounds,
+/// kernel, and seeding knobs exposed (the CLI `baseline
+/// --workers/--bounds/--kernel/--init` path; results are bit-identical
+/// at every worker count, in both bounds modes, and under every tile
+/// kernel).
 #[allow(clippy::too_many_arguments)]
 pub fn traditional_kmeans_workers(
     data: &Dataset,
@@ -868,6 +883,7 @@ pub fn traditional_kmeans_workers(
     workers: usize,
     bounds: BoundsMode,
     kernel: KernelMode,
+    init: InitMethod,
 ) -> Result<KMeansResult> {
     let mut best: Option<KMeansResult> = None;
     for trial in 0..restarts.max(1) {
@@ -875,7 +891,7 @@ pub fn traditional_kmeans_workers(
             k,
             max_iters,
             tol: 1e-6,
-            init: crate::cluster::InitMethod::KMeansPlusPlus,
+            init,
             seed: seed ^ trial.wrapping_mul(0x9e37_79b9_7f4a_7c15),
             workers,
             bounds,

@@ -665,6 +665,7 @@ fn run_fit(ctx: &HandlerCtx, job: FitJob) -> Result<String> {
         iters: job.iters,
         seed: job.seed,
         engine,
+        init: job.init,
         scheme: job.scheme,
         compression: job.compression,
         num_groups: job.num_groups,

@@ -29,7 +29,7 @@
 //! [`crate::coordinator::remote`].  Bit-parity across the wire holds
 //! because f32 → shortest-roundtrip f64 text → f32 is exact.
 
-use crate::cluster::{BoundsMode, KernelMode};
+use crate::cluster::{BoundsMode, InitMethod, KernelMode};
 use crate::coordinator::job::{JobRequest, JobResult};
 use crate::error::{Error, Result};
 use crate::model::{FittedModel, Prediction};
@@ -60,6 +60,8 @@ pub struct FitJob {
     /// server's control.
     pub bounds: Option<BoundsMode>,
     pub kernel: Option<KernelMode>,
+    /// Seeding method (`None` keeps the algorithm default).
+    pub init: Option<InitMethod>,
 }
 
 /// A `predict` request against a registered model.
@@ -284,6 +286,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 .and_then(Json::as_str)
                 .map(KernelMode::parse)
                 .transpose()?;
+            let init = v
+                .get("init")
+                .and_then(Json::as_str)
+                .map(InitMethod::parse)
+                .transpose()?;
             Ok(Request::Fit(FitJob {
                 name,
                 algorithm,
@@ -297,6 +304,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 num_groups: v.get("num_groups").and_then(Json::as_usize),
                 bounds,
                 kernel,
+                init,
             }))
         }
         "predict" => {
@@ -448,6 +456,7 @@ pub fn encode_fit_result(name: &str, model: &FittedModel, elapsed_ms: f64) -> St
         ("trained_on", Json::num(meta.trained_on as f64)),
         ("inertia", Json::num(meta.inertia)),
         ("iterations", Json::num(meta.iterations as f64)),
+        ("init", Json::str(meta.init.as_str())),
         ("elapsed_ms", Json::num(elapsed_ms)),
     ])
     .to_string()
@@ -586,6 +595,7 @@ pub fn encode_models(models: &[ModelInfo]) -> String {
                 ("dims", Json::num(m.dims as f64)),
                 ("trained_on", Json::num(m.trained_on as f64)),
                 ("inertia", Json::num(m.inertia)),
+                ("init", Json::str(m.init.as_str())),
             ])
         })
         .collect();
@@ -691,7 +701,7 @@ mod tests {
     fn parses_fit_request() {
         let line = r#"{"cmd":"fit","name":"prod","algorithm":"kmeans",
                        "points":[[1,2],[3,4],[5,6]],"k":2,"iters":9,"seed":7,
-                       "bounds":"off","kernel":"wide"}"#
+                       "bounds":"off","kernel":"wide","init":"kmeans||"}"#
             .replace('\n', " ");
         match parse_request(&line).unwrap() {
             Request::Fit(j) => {
@@ -704,10 +714,16 @@ mod tests {
                 assert_eq!(j.seed, 7);
                 assert_eq!(j.bounds, Some(BoundsMode::Off));
                 assert_eq!(j.kernel, Some(KernelMode::Wide));
+                assert_eq!(j.init, Some(InitMethod::KMeansParallel));
                 assert!(j.scheme.is_none());
             }
             other => panic!("wrong request {other:?}"),
         }
+        // a bad init spelling is a parse error, not a silent default
+        assert!(parse_request(
+            r#"{"cmd":"fit","name":"m","points":[[1,2]],"k":1,"init":"bogus"}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -722,7 +738,7 @@ mod tests {
                 assert_eq!(j.compression, Some(4.0));
                 assert_eq!(j.num_groups, Some(2));
                 assert_eq!(j.iters, None);
-                assert!(j.bounds.is_none() && j.kernel.is_none());
+                assert!(j.bounds.is_none() && j.kernel.is_none() && j.init.is_none());
             }
             other => panic!("wrong request {other:?}"),
         }
@@ -900,6 +916,7 @@ mod tests {
                 inertia: 1.5,
                 iterations: 4,
                 engine: EngineOpts::serial(),
+                init: InitMethod::KMeansParallel,
             },
             vec![0.0, 0.0, 1.0, 1.0],
             None,
@@ -910,6 +927,7 @@ mod tests {
         assert_eq!(v.get("name").unwrap().as_str(), Some("m"));
         assert_eq!(v.get("k").unwrap().as_usize(), Some(2));
         assert_eq!(v.get("trained_on").unwrap().as_usize(), Some(50));
+        assert_eq!(v.get("init").unwrap().as_str(), Some("kmeans||"));
         assert_eq!(v.get("elapsed_ms").unwrap().as_f64(), Some(12.5));
 
         let p = Prediction { labels: vec![0, 1, 1], counts: vec![1, 2], inertia: 0.25 };
@@ -925,12 +943,14 @@ mod tests {
             dims: 2,
             trained_on: 50,
             inertia: 1.5,
+            init: InitMethod::Auto,
         }];
         let v = Json::parse(&encode_models(&infos)).unwrap();
         assert_eq!(v.get("count").unwrap().as_usize(), Some(1));
         let row = &v.get("models").unwrap().as_arr().unwrap()[0];
         assert_eq!(row.get("name").unwrap().as_str(), Some("m"));
         assert_eq!(row.get("algorithm").unwrap().as_str(), Some("kmeans"));
+        assert_eq!(row.get("init").unwrap().as_str(), Some("auto"));
         let v = Json::parse(&encode_models(&[])).unwrap();
         assert_eq!(v.get("count").unwrap().as_usize(), Some(0));
     }

@@ -16,6 +16,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::cluster::InitMethod;
 use crate::model::FittedModel;
 
 /// Summary row for the `models` request.
@@ -27,6 +28,8 @@ pub struct ModelInfo {
     pub dims: usize,
     pub trained_on: usize,
     pub inertia: f64,
+    /// Seeding method the fit was configured with (provenance).
+    pub init: InitMethod,
 }
 
 /// One registered model plus its serve-time bookkeeping.
@@ -119,6 +122,7 @@ impl ModelRegistry {
                 dims: e.model.dims(),
                 trained_on: e.model.meta().trained_on,
                 inertia: e.model.meta().inertia,
+                init: e.model.meta().init,
             })
             .collect()
     }
@@ -147,6 +151,7 @@ mod tests {
                 inertia: tag as f64,
                 iterations: 1,
                 engine: EngineOpts::serial(),
+                init: InitMethod::KMeansPlusPlus,
             },
             vec![tag, tag],
             None,

@@ -1,0 +1,271 @@
+//! Seeding bit-parity suite — the acceptance contract of the
+//! k-means‖ initializer.
+//!
+//! Every `InitMethod` must produce **bit-identical** centers across
+//! worker counts, tile kernels, and resident-vs-streamed access at any
+//! chunk size (including chunk = 1 row and chunks that do not divide
+//! M).  The suite also pins the k-means‖ oversampling bounds, the
+//! degenerate edges (all-duplicate data, k = M), and the classic
+//! k-means++ duplicate-mass fallback.
+
+use parsample::cluster::init_parallel::{oversample, sampling_rounds, OVERSAMPLE};
+use parsample::cluster::{
+    initial_centers, initial_centers_source, initial_centers_with, BoundsMode, EngineOpts,
+    InitMethod, KernelMode, MiniBatchKMeans,
+};
+use parsample::data::source::{ChunkedOnly, SliceSource};
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::data::Dataset;
+
+fn blobs(m: usize, clusters: usize, dims: usize, seed: u64) -> Dataset {
+    make_blobs(&BlobSpec {
+        num_points: m,
+        num_clusters: clusters,
+        dims,
+        std: 0.2,
+        extent: 10.0,
+        seed,
+    })
+    .unwrap()
+}
+
+fn opts(workers: usize, kernel: KernelMode) -> EngineOpts {
+    EngineOpts { workers, bounds: BoundsMode::Off, kernel }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Acceptance: k-means‖ centers are bit-identical at every worker
+/// count × tile kernel.  The baseline is the serial scalar run.
+#[test]
+fn parallel_bit_identical_across_workers_and_kernels() {
+    let data = blobs(1500, 8, 3, 1);
+    let k = 16;
+    let seed = 42;
+    let baseline = initial_centers_with(
+        data.as_slice(),
+        data.dims(),
+        k,
+        InitMethod::KMeansParallel,
+        seed,
+        opts(1, KernelMode::Scalar),
+    )
+    .unwrap();
+    assert_eq!(baseline.len(), k * data.dims());
+    for workers in [1usize, 2, 8] {
+        for kernel in [KernelMode::Scalar, KernelMode::Wide] {
+            let got = initial_centers_with(
+                data.as_slice(),
+                data.dims(),
+                k,
+                InitMethod::KMeansParallel,
+                seed,
+                opts(workers, kernel),
+            )
+            .unwrap();
+            assert_eq!(
+                bits(&got),
+                bits(&baseline),
+                "workers={workers} kernel={kernel:?}"
+            );
+        }
+    }
+}
+
+/// Acceptance: every method seeds bit-identically from a `DataSource`
+/// at chunk sizes 1, a non-divisor of M, and larger than M —
+/// `ChunkedOnly` defeats the resident fast path, so the streamed slab
+/// walk is genuinely exercised.  The baseline is the resident slice.
+#[test]
+fn source_seeding_matches_resident_at_every_chunk_size() {
+    let data = blobs(900, 6, 2, 2);
+    let k = 12;
+    let seed = 7;
+    for method in [
+        InitMethod::FirstK,
+        InitMethod::Random,
+        InitMethod::KMeansPlusPlus,
+        InitMethod::KMeansParallel,
+    ] {
+        let resident = initial_centers_with(
+            data.as_slice(),
+            data.dims(),
+            k,
+            method,
+            seed,
+            opts(2, KernelMode::Wide),
+        )
+        .unwrap();
+        for chunk in [1usize, 37, 4096] {
+            let mut src = ChunkedOnly(
+                SliceSource::new(data.as_slice(), data.dims())
+                    .unwrap()
+                    .with_chunk_rows(chunk),
+            );
+            let streamed =
+                initial_centers_source(&mut src, k, method, seed, opts(2, KernelMode::Wide))
+                    .unwrap();
+            assert_eq!(
+                bits(&streamed),
+                bits(&resident),
+                "{method:?} chunk={chunk}"
+            );
+        }
+    }
+}
+
+/// Determinism replay: the same seed reproduces the same centers
+/// bit for bit; a different seed moves them.
+#[test]
+fn parallel_deterministic_per_seed() {
+    let data = blobs(800, 5, 3, 3);
+    let run = |seed| {
+        initial_centers(
+            data.as_slice(),
+            data.dims(),
+            10,
+            InitMethod::KMeansParallel,
+            seed,
+        )
+        .unwrap()
+    };
+    assert_eq!(bits(&run(11)), bits(&run(11)));
+    assert_ne!(bits(&run(11)), bits(&run(12)));
+}
+
+/// The oversampling contract: candidates are distinct input rows, at
+/// least k of them, at most rounds·ℓ·k + 1 (the +1 is the seed
+/// center), their rows match the input bytes, and the re-cluster
+/// weights partition all M points.
+#[test]
+fn oversample_respects_bounds_and_weights_partition_input() {
+    let data = blobs(2000, 10, 3, 4);
+    let (m, dims, k) = (2000usize, data.dims(), 12usize);
+    let mut src = SliceSource::of(&data);
+    let cand = oversample(&mut src, k, 9, opts(4, KernelMode::Scalar)).unwrap();
+    assert!(cand.idx.len() >= k, "{} candidates < k={k}", cand.idx.len());
+    let cap = sampling_rounds(m) * OVERSAMPLE * k + 1;
+    assert!(cand.idx.len() <= cap, "{} candidates > cap={cap}", cand.idx.len());
+    assert_eq!(cand.rows.len(), cand.idx.len() * dims);
+    assert_eq!(cand.weights.len(), cand.idx.len());
+    let mut sorted = cand.idx.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), cand.idx.len(), "duplicate candidate index");
+    for (slot, &gi) in cand.idx.iter().enumerate() {
+        assert!(gi < m);
+        assert_eq!(
+            bits(&cand.rows[slot * dims..(slot + 1) * dims]),
+            bits(&data.as_slice()[gi * dims..(gi + 1) * dims]),
+            "candidate {slot} row mismatch"
+        );
+    }
+    let total: u64 = cand.weights.iter().map(|&w| w as u64).sum();
+    assert_eq!(total, m as u64, "weights must partition all input rows");
+}
+
+/// Degenerate edge: every input row identical.  The self-distance
+/// cancellation zeroes the sampling mass after the first pick, so the
+/// run must still terminate and return k copies of the point.
+#[test]
+fn parallel_handles_all_duplicate_rows() {
+    let mut points = Vec::new();
+    for _ in 0..40 {
+        points.extend_from_slice(&[4.0f32, -1.5]);
+    }
+    let centers = initial_centers(&points, 2, 3, InitMethod::KMeansParallel, 0).unwrap();
+    assert_eq!(centers.len(), 6);
+    for c in centers.chunks(2) {
+        assert_eq!(bits(c), bits(&[4.0, -1.5]));
+    }
+}
+
+/// Degenerate edge: k = M.  Every input row must come back exactly
+/// once — the centers are a permutation of the input.
+#[test]
+fn parallel_k_equals_m_returns_permutation_of_input() {
+    let data = blobs(20, 4, 2, 5);
+    let dims = data.dims();
+    let centers =
+        initial_centers(data.as_slice(), dims, 20, InitMethod::KMeansParallel, 3).unwrap();
+    let mut got: Vec<Vec<u32>> = centers.chunks(dims).map(bits).collect();
+    let mut want: Vec<Vec<u32>> = data.as_slice().chunks(dims).map(bits).collect();
+    got.sort();
+    want.sort();
+    assert_eq!(got, want);
+}
+
+/// Regression: classic k-means++ on data whose distinct-point count is
+/// below k.  The duplicate-mass fallback must fill the remaining
+/// centers from untaken rows (covering every coordinate class) instead
+/// of scanning O(k²·M) or erroring out.
+#[test]
+fn plusplus_duplicate_mass_fallback_covers_all_classes() {
+    // 3 coordinate classes × 3 copies each; k = 7 > 3 distinct points.
+    let classes = [[0.0f32, 0.0], [5.0, 5.0], [-5.0, 5.0]];
+    let mut points = Vec::new();
+    for class in &classes {
+        for _ in 0..3 {
+            points.extend_from_slice(class);
+        }
+    }
+    let centers = initial_centers(&points, 2, 7, InitMethod::KMeansPlusPlus, 1).unwrap();
+    assert_eq!(centers.len(), 14);
+    for class in &classes {
+        assert!(
+            centers.chunks(2).any(|c| bits(c) == bits(class)),
+            "class {class:?} missing from fallback-filled centers"
+        );
+    }
+}
+
+/// `Auto` at small k·M is the classic k-means++ bit for bit — the
+/// default seeding of every pre-existing fixture is unchanged.
+#[test]
+fn auto_matches_plusplus_below_crossover() {
+    let data = blobs(300, 3, 2, 6);
+    let auto = initial_centers(data.as_slice(), data.dims(), 3, InitMethod::Auto, 9).unwrap();
+    let pp = initial_centers(
+        data.as_slice(),
+        data.dims(),
+        3,
+        InitMethod::KMeansPlusPlus,
+        9,
+    )
+    .unwrap();
+    assert_eq!(bits(&auto), bits(&pp));
+}
+
+/// Mini-batch `fit_stream` seeded by k-means‖ is chunk-size
+/// independent: the whole-stream seeding rounds and the batch rounds
+/// after them see the same rows no matter how the source chops them.
+#[test]
+fn minibatch_parallel_seeding_is_chunk_size_independent() {
+    let data = blobs(1200, 6, 2, 8);
+    let mb = MiniBatchKMeans {
+        k: 6,
+        init: InitMethod::KMeansParallel,
+        seed: 5,
+        batch_size: 256,
+        iters: 20,
+        workers: 2,
+        ..MiniBatchKMeans::default()
+    };
+    let baseline = {
+        let mut src = SliceSource::of(&data);
+        mb.fit_stream(&mut src).unwrap()
+    };
+    assert_eq!(baseline.rows, 1200);
+    for chunk in [1usize, 193, 4096] {
+        let mut src = ChunkedOnly(SliceSource::of(&data).with_chunk_rows(chunk));
+        let got = mb.fit_stream(&mut src).unwrap();
+        let ctx = format!("chunk={chunk}");
+        assert_eq!(bits(&got.centers), bits(&baseline.centers), "{ctx}");
+        assert_eq!(got.counts, baseline.counts, "{ctx}");
+        assert_eq!(got.inertia.to_bits(), baseline.inertia.to_bits(), "{ctx}");
+        assert_eq!(got.rows, baseline.rows, "{ctx}");
+        assert_eq!(got.iterations, baseline.iterations, "{ctx}");
+    }
+}
