@@ -44,7 +44,7 @@ fn ascii_preview(title: &str, data: &Dataset, groups: &[usize]) {
     }
     println!("\n{title}");
     for r in 0..H {
-        println!("  {}", std::str::from_utf8(&grid[r * W..(r + 1) * W]).unwrap());
+        println!("  {}", std::str::from_utf8(&grid[r * W..(r + 1) * W]).expect("grid bytes are ASCII digits"));
     }
 }
 
@@ -60,7 +60,7 @@ fn main() -> parsample::Result<()> {
     let proj = iris.project(&[1, 2])?;
 
     // "original dataset" panel: colour by true class
-    let class = iris.labels().unwrap().to_vec();
+    let class = iris.labels().expect("iris ships labels").to_vec();
     write_scatter(&format!("{out}/fig1_original.csv"), &proj, &class)?;
     ascii_preview("original (colour = class)", &proj, &class);
 

@@ -65,7 +65,7 @@ fn main() -> parsample::Result<()> {
                         extent: 10.0,
                         seed: id,
                     })
-                    .unwrap();
+                    .expect("blob spec is valid");
                     let points: Vec<String> = (0..data.len())
                         .map(|i| {
                             let r = data.row(i);

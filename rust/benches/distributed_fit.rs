@@ -38,7 +38,7 @@ fn pipeline_cfg(k: usize, remote: Option<RemoteConfig>) -> PipelineConfig {
     if let Some(r) = remote {
         b = b.remote(r);
     }
-    b.build().unwrap()
+    b.build().expect("pipeline config")
 }
 
 fn remote_cfg(workers: Vec<String>) -> RemoteConfig {

@@ -25,13 +25,13 @@ fn main() {
             extent: 50.0,
             seed: 1,
         })
-        .unwrap();
-        let scaled = MinMaxScaler::new().fit_transform(&data).unwrap();
+        .expect("dataset");
+        let scaled = MinMaxScaler::new().fit_transform(&data).expect("scale");
         let g = (m / 1500).clamp(2, 4096);
         for scheme in [Scheme::Equal, Scheme::Unequal, Scheme::Random] {
             let p = scheme.build(0);
             let stats = bench.run(&format!("partition/{}/{m}", p.name()), || {
-                p.partition(&scaled, g).unwrap()
+                p.partition(&scaled, g).expect("partition")
             });
             rows.push(vec![
                 p.name().into(),
@@ -56,7 +56,7 @@ fn main() {
         extent: 10.0,
         seed: 2,
     })
-    .unwrap();
+    .expect("dataset");
     let indices: Vec<usize> = (0..data.len()).step_by(2).collect();
     let mut rows = Vec::new();
     for (name, order) in [("row-major", MemoryOrder::RowMajor), ("col-major", MemoryOrder::ColMajor)] {
@@ -65,7 +65,7 @@ fn main() {
         });
         let flat = flatten(&data, &indices, order);
         let r = bench.run(&format!("reconstruct/{name}"), || {
-            black_box(reconstruct(&flat, indices.len(), data.dims(), order).unwrap())
+            black_box(reconstruct(&flat, indices.len(), data.dims(), order).expect("reconstruct"))
         });
         rows.push(vec![
             name.into(),
@@ -82,10 +82,10 @@ fn main() {
     // --- scaler ablation ---
     let mut rows = Vec::new();
     let s1 = bench.run("scaler/minmax", || {
-        MinMaxScaler::new().fit_transform(&data).unwrap()
+        MinMaxScaler::new().fit_transform(&data).expect("scale")
     });
     let s2 = bench.run("scaler/zscore", || {
-        ZScoreScaler::new().fit_transform(&data).unwrap()
+        ZScoreScaler::new().fit_transform(&data).expect("scale")
     });
     rows.push(vec!["min-max".into(), format!("{:.3}", s1.mean_ms())]);
     rows.push(vec!["z-score".into(), format!("{:.3}", s2.mean_ms())]);

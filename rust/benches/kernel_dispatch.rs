@@ -40,7 +40,7 @@ fn main() {
         eprintln!("skipping kernel_dispatch: run `make artifacts` first");
         return;
     }
-    let pjrt = PjrtBackend::load(&dir).unwrap();
+    let pjrt = PjrtBackend::load(&dir).expect("load artifacts");
     let native = NativeBackend::new(parsample::util::threadpool::default_workers());
     let bench = Bench::new(1, 5);
     let mut rows = Vec::new();
@@ -54,14 +54,14 @@ fn main() {
 
         // compile cost (one-time per process)
         let t0 = std::time::Instant::now();
-        pjrt.warm(&spec.name).unwrap();
+        pjrt.warm(&spec.name).expect("warm");
         let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let p = bench.run(&format!("pjrt/{}", spec.name), || {
-            pjrt.run_in_bucket(&spec.name, &batch).unwrap()
+            pjrt.run_in_bucket(&spec.name, &batch).expect("device batch")
         });
         let nv = bench.run(&format!("native/{}", spec.name), || {
-            native.run_batch(&batch).unwrap()
+            native.run_batch(&batch).expect("native batch")
         });
         rows.push(vec![
             spec.name.clone(),

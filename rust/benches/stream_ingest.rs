@@ -51,7 +51,7 @@ fn main() {
     let ds = make_blobs(&spec).expect("blob generation");
     let dir = std::env::temp_dir().join(format!("parsample_bench_stream_{}", std::process::id()));
     std::fs::create_dir_all(&dir).expect("bench tmp dir");
-    let plain = Dataset::new(ds.as_slice().to_vec(), d).unwrap();
+    let plain = Dataset::new(ds.as_slice().to_vec(), d).expect("dataset");
     let csv = dir.join("bench.csv");
     let bin = dir.join("bench.bin");
     save_csv(&plain, &csv).expect("write csv");
@@ -74,7 +74,7 @@ fn main() {
                 labels.extend_from_slice(ls);
                 Ok(())
             })
-            .unwrap_or_else(|e| panic!("{what}: {e}"));
+            .expect(what);
         assert_eq!(labels, resident.labels, "{what}: labels diverge");
         assert_eq!(p.counts, resident.counts, "{what}: counts diverge");
         assert_eq!(
@@ -84,11 +84,11 @@ fn main() {
         );
     };
     check(&mut ChunkedOnly(DatasetSource::new(plain.clone()).with_chunk_rows(chunk_rows)), "mem");
-    check(&mut CsvSource::open(&csv, None).unwrap().with_chunk_rows(chunk_rows), "csv");
-    check(&mut BinarySource::open(&bin).unwrap().with_chunk_rows(chunk_rows), "bin");
+    check(&mut CsvSource::open(&csv, None).expect("open csv").with_chunk_rows(chunk_rows), "csv");
+    check(&mut BinarySource::open(&bin).expect("open bin").with_chunk_rows(chunk_rows), "bin");
     // and the no-disk-at-all synthetic stream fits identically
     let stream_fit = {
-        let mut src = BlobSource::new(&spec).unwrap().with_chunk_rows(chunk_rows);
+        let mut src = BlobSource::new(&spec).expect("blob source").with_chunk_rows(chunk_rows);
         fitter.fit_source(&mut src).expect("stream fit")
     };
     assert_eq!(stream_fit.centers(), model.centers(), "blob-stream fit diverges");
@@ -96,7 +96,7 @@ fn main() {
     // ---- timings
     let bench = if smoke { Bench::new(0, 2) } else { Bench::new(1, 5) };
     let t_resident = bench.run("predict/resident", || {
-        black_box(model.predict_batch(ds.as_slice()).unwrap())
+        black_box(model.predict_batch(ds.as_slice()).expect("predict"))
     });
     let drain = |src: &mut dyn DataSource| {
         let mut n = 0usize;
@@ -105,22 +105,22 @@ fn main() {
                 n += ls.len();
                 Ok(())
             })
-            .unwrap();
+            .expect("stream predict");
         black_box((n, p.inertia))
     };
     let t_mem = bench.run("predict/stream-mem", || {
         drain(&mut ChunkedOnly(DatasetSource::new(plain.clone()).with_chunk_rows(chunk_rows)))
     });
     let t_csv = bench.run("predict/stream-csv", || {
-        drain(&mut CsvSource::open(&csv, None).unwrap().with_chunk_rows(chunk_rows))
+        drain(&mut CsvSource::open(&csv, None).expect("open csv").with_chunk_rows(chunk_rows))
     });
     let t_bin = bench.run("predict/stream-bin", || {
-        drain(&mut BinarySource::open(&bin).unwrap().with_chunk_rows(chunk_rows))
+        drain(&mut BinarySource::open(&bin).expect("open bin").with_chunk_rows(chunk_rows))
     });
-    let t_fit_res = bench.run("fit/minibatch-resident", || black_box(fitter.fit(&ds).unwrap()));
+    let t_fit_res = bench.run("fit/minibatch-resident", || black_box(fitter.fit(&ds).expect("fit")));
     let t_fit_blob = bench.run("fit/minibatch-blobstream", || {
-        let mut src = BlobSource::new(&spec).unwrap().with_chunk_rows(chunk_rows);
-        black_box(fitter.fit_source(&mut src).unwrap())
+        let mut src = BlobSource::new(&spec).expect("blob source").with_chunk_rows(chunk_rows);
+        black_box(fitter.fit_source(&mut src).expect("stream fit"))
     });
 
     let rows_per_s = |ms: f64| m as f64 / (ms / 1e3);

@@ -19,8 +19,8 @@ fn pipeline_labels(data: &Dataset, scheme: Scheme) -> Vec<u32> {
         .final_k(3)
         .weighted_global(true)
         .build()
-        .unwrap();
-    SubclusterPipeline::new(cfg).run(data).unwrap().labels
+        .expect("pipeline config");
+    SubclusterPipeline::new(cfg).run(data).expect("pipeline run").labels
 }
 
 fn main() {
@@ -30,17 +30,17 @@ fn main() {
         ("iris", builtin::iris(), [133u64, 138, 138]),
         ("seeds", builtin::seeds_sim(0), [187, 191, 191]),
     ] {
-        let truth = data.labels().unwrap().to_vec();
+        let truth = data.labels().expect("ground-truth labels").to_vec();
         let m = data.len();
 
         let stats = bench.run(&format!("{name}/standard_kmeans"), || {
-            traditional_kmeans(&data, 3, 100, 0).unwrap()
+            traditional_kmeans(&data, 3, 100, 0).expect("kmeans")
         });
-        let labels = traditional_kmeans(&data, 3, 100, 0).unwrap().labels;
+        let labels = traditional_kmeans(&data, 3, 100, 0).expect("kmeans").labels;
         rows.push(vec![
             name.into(),
             "standard".into(),
-            format!("{}/{m}", eval::correct_count(&labels, &truth).unwrap()),
+            format!("{}/{m}", eval::correct_count(&labels, &truth).expect("eval")),
             format!("{}", paper[0]),
             format!("{:.3}", stats.mean_ms()),
         ]);
@@ -56,7 +56,7 @@ fn main() {
             rows.push(vec![
                 name.into(),
                 label.into(),
-                format!("{}/{m}", eval::correct_count(&labels, &truth).unwrap()),
+                format!("{}/{m}", eval::correct_count(&labels, &truth).expect("eval")),
                 format!("{pc}"),
                 format!("{:.3}", stats.mean_ms()),
             ]);

@@ -28,10 +28,10 @@ fn main() {
     let mut rows = Vec::new();
     for &m in sizes {
         let k = m / 500;
-        let data = paper_scaling_dataset(m, 42).unwrap();
+        let data = paper_scaling_dataset(m, 42).expect("dataset");
 
         let t_trad = bench.run(&format!("traditional/{m}"), || {
-            traditional_kmeans_restarts(&data, k, 25, 0, 1).unwrap()
+            traditional_kmeans_restarts(&data, k, 25, 0, 1).expect("kmeans")
         });
 
         let cfg = PipelineConfig::builder()
@@ -40,9 +40,9 @@ fn main() {
             .final_k(k)
             .weighted_global(true)
             .build()
-            .unwrap();
+            .expect("pipeline config");
         let pipeline = SubclusterPipeline::new(cfg);
-        let t_par = bench.run(&format!("parallel/{m}"), || pipeline.run(&data).unwrap());
+        let t_par = bench.run(&format!("parallel/{m}"), || pipeline.run(&data).expect("pipeline run"));
 
         let paper_row = paper.iter().find(|(pm, _, _)| *pm == m);
         rows.push(vec![

@@ -16,7 +16,7 @@ fn main() {
     let m: usize = if full { 500_000 } else { 100_000 };
     let k = m / 500;
     let paper = [(5, "6.2"), (10, "5.76"), (15, "4.83"), (20, "(blank)")];
-    let data = paper_scaling_dataset(m, 42).unwrap();
+    let data = paper_scaling_dataset(m, 42).expect("dataset");
     let bench = Bench::heavy();
 
     let mut rows = Vec::new();
@@ -27,10 +27,10 @@ fn main() {
             .final_k(k)
             .weighted_global(true)
             .build()
-            .unwrap();
+            .expect("pipeline config");
         let pipeline = SubclusterPipeline::new(cfg);
-        let stats = bench.run(&format!("compression/{c}"), || pipeline.run(&data).unwrap());
-        let r = pipeline.run(&data).unwrap();
+        let stats = bench.run(&format!("compression/{c}"), || pipeline.run(&data).expect("pipeline run"));
+        let r = pipeline.run(&data).expect("pipeline run");
         rows.push(vec![
             format!("{c}"),
             format!("{:.2}", stats.mean_ms() / 1e3),

@@ -1,0 +1,418 @@
+//! Crate-wide call graph and the transitive determinism-taint rule.
+//!
+//! Built on [`super::parser`]'s per-file items: every non-test fn in
+//! the tree becomes a node, and call sites resolve to nodes with
+//! deliberately simple, documented rules (no type inference — this is
+//! a lint, so the resolution over-approximates and the allowlist
+//! absorbs the rare false positive):
+//!
+//! * **bare** `f(..)`: free fns in the caller's module; otherwise a
+//!   unique crate-wide free fn of that name; otherwise unresolved.
+//! * **qualified** `path::f(..)` (also `path::f` used as a value):
+//!   fns whose `impl` type equals the last path segment, or free fns
+//!   whose module path equals / suffix-matches the written path.
+//!   `Self::f` / `self::f` resolve into the caller's own impl;
+//!   `crate::a::b::f` requires the exact module path.
+//! * **method** `recv.f(..)`: a name in [`super::parser::STD_METHODS`]
+//!   is assumed to be std and left unresolved.  A call written
+//!   literally `self.f(..)` prefers the caller's own impl when it has
+//!   a method of that name.  Anything else fans out to *every*
+//!   impl-associated fn named `f` — the conservative direction for a
+//!   taint analysis.
+//!
+//! The `contract-taint` rule walks the graph from every contract
+//! region (file-level marker, marked fn, or marked block inside a fn)
+//! and requires each reachable fn to be contract-covered itself or to
+//! carry an explicit `// CONTRACT: bit-exact (leaf)` audit marker,
+//! which stops the walk at an audited boundary.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::parser::{is_std_method, parse_items, Call, CallKind, FileItems, FnItem};
+use super::{rule_id, Finding};
+
+/// One resolved call edge for the graph dump:
+/// `(caller qname, callee qname, file, line)`.
+pub type CallEdge = (String, String, String, usize);
+
+/// The parsed crate: files in sorted order, fns flattened in crate
+/// order, and a name table over non-test fns.
+pub(crate) struct CrateGraph {
+    pub files: Vec<FileItems>,
+    /// Global fn id → (file index, index into that file's `fns`).
+    pub fn_loc: Vec<(usize, usize)>,
+    /// Fn name → global ids of non-test fns, in crate order.
+    table: BTreeMap<String, Vec<usize>>,
+}
+
+impl CrateGraph {
+    /// Parse every `.rs` file under `root` (deterministic sorted walk,
+    /// same order as `lint_tree`).
+    pub fn build(root: &Path) -> Result<CrateGraph> {
+        let mut files = Vec::new();
+        collect_rs(root, &mut files)?;
+        files.sort();
+        let mut parsed = Vec::new();
+        for path in &files {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let src = std::fs::read_to_string(path).map_err(Error::Io)?;
+            parsed.push(parse_items(&rel, &src));
+        }
+        Ok(CrateGraph::from_files(parsed))
+    }
+
+    pub fn from_files(files: Vec<FileItems>) -> CrateGraph {
+        let mut fn_loc = Vec::new();
+        let mut table: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (fi, f) in files.iter().enumerate() {
+            for (ki, fnc) in f.fns.iter().enumerate() {
+                let gid = fn_loc.len();
+                fn_loc.push((fi, ki));
+                if !fnc.is_test {
+                    table.entry(fnc.name.clone()).or_default().push(gid);
+                }
+            }
+        }
+        CrateGraph { files, fn_loc, table }
+    }
+
+    pub fn fn_count(&self) -> usize {
+        self.fn_loc.len()
+    }
+
+    pub fn item(&self, gid: usize) -> &FnItem {
+        let (fi, ki) = self.fn_loc[gid];
+        &self.files[fi].fns[ki]
+    }
+
+    pub fn file_of(&self, gid: usize) -> &FileItems {
+        &self.files[self.fn_loc[gid].0]
+    }
+
+    /// Resolve one call site from `caller` to candidate fn ids.
+    // CONTRACT: bit-exact (leaf) — lint tooling, never on a compute
+    // path; the name-based method fan-out links `.resolve(...)` sites
+    // in contract code (e.g. `KernelMode::resolve`) to this fn too,
+    // and the leaf marker sanctions that false edge.
+    pub fn resolve(&self, caller: usize, call: &Call) -> Vec<usize> {
+        let Some(cands) = self.table.get(&call.name) else {
+            return Vec::new();
+        };
+        let caller_item = self.item(caller);
+        let caller_mod = caller_item.module.clone();
+        let caller_impl = caller_item.impl_of.clone();
+        match call.kind {
+            CallKind::Method => {
+                if is_std_method(&call.name) {
+                    return Vec::new();
+                }
+                if call.recv_self {
+                    if let Some(ci) = &caller_impl {
+                        let own: Vec<usize> = cands
+                            .iter()
+                            .copied()
+                            .filter(|&g| {
+                                let f = self.item(g);
+                                f.impl_of.as_ref() == Some(ci) && f.module == caller_mod
+                            })
+                            .collect();
+                        if !own.is_empty() {
+                            return own;
+                        }
+                    }
+                }
+                cands
+                    .iter()
+                    .copied()
+                    .filter(|&g| self.item(g).impl_of.is_some())
+                    .collect()
+            }
+            CallKind::Bare => {
+                let same: Vec<usize> = cands
+                    .iter()
+                    .copied()
+                    .filter(|&g| {
+                        let f = self.item(g);
+                        f.module == caller_mod && f.impl_of.is_none()
+                    })
+                    .collect();
+                if !same.is_empty() {
+                    return same;
+                }
+                let free: Vec<usize> = cands
+                    .iter()
+                    .copied()
+                    .filter(|&g| self.item(g).impl_of.is_none())
+                    .collect();
+                if free.len() == 1 {
+                    free
+                } else {
+                    Vec::new()
+                }
+            }
+            CallKind::Qual => {
+                let path = &call.path;
+                if path.is_empty() {
+                    return Vec::new();
+                }
+                if path.len() == 1 && (path[0] == "Self" || path[0] == "self") {
+                    return cands
+                        .iter()
+                        .copied()
+                        .filter(|&g| {
+                            let f = self.item(g);
+                            f.impl_of == caller_impl && f.module == caller_mod
+                        })
+                        .collect();
+                }
+                if path[0] == "crate" {
+                    let want = path[1..].join("::");
+                    let exact: Vec<usize> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&g| {
+                            let f = self.item(g);
+                            f.module == want && f.impl_of.is_none()
+                        })
+                        .collect();
+                    if !exact.is_empty() {
+                        return exact;
+                    }
+                    return cands
+                        .iter()
+                        .copied()
+                        .filter(|&g| {
+                            path.len() > 1
+                                && self.item(g).impl_of.as_deref() == path.last().map(String::as_str)
+                        })
+                        .collect();
+                }
+                let last = path.last().map(String::as_str);
+                let joined = path.join("::");
+                let suffix = format!("::{joined}");
+                cands
+                    .iter()
+                    .copied()
+                    .filter(|&g| {
+                        let f = self.item(g);
+                        if f.impl_of.as_deref() == last {
+                            true
+                        } else {
+                            f.impl_of.is_none()
+                                && (f.module == joined || f.module.ends_with(&suffix))
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Every resolved call edge in the crate from non-test fns — the
+    /// full graph dump, not just the taint-reachable slice.
+    pub fn all_edges(&self) -> Vec<CallEdge> {
+        let mut edges: BTreeSet<CallEdge> = BTreeSet::new();
+        for g in 0..self.fn_count() {
+            if self.item(g).is_test {
+                continue;
+            }
+            let rel = self.file_of(g).rel.clone();
+            let calls = self.item(g).calls.clone();
+            for call in &calls {
+                for tgt in self.resolve(g, call) {
+                    edges.insert((
+                        self.item(g).qname(),
+                        self.item(tgt).qname(),
+                        rel.clone(),
+                        call.line,
+                    ));
+                }
+            }
+        }
+        edges.into_iter().collect()
+    }
+
+    /// The `contract-taint` walk.  Returns the findings plus the set
+    /// of edges the walk traversed (a subset of [`Self::all_edges`]).
+    pub fn taint(&self) -> (Vec<Finding>, Vec<CallEdge>) {
+        let n = self.fn_count();
+        let mut seen = vec![false; n];
+        let mut via: Vec<Option<(String, String, usize)>> = vec![None; n];
+        let mut edges: BTreeSet<CallEdge> = BTreeSet::new();
+        // roots in crate order; the walk is an explicit stack, so the
+        // last root is expanded first — same order as the mirror of
+        // this pass used during development, kept for stable `via`
+        // attribution.
+        let mut frontier: Vec<usize> = (0..n)
+            .filter(|&g| {
+                let f = self.item(g);
+                !f.is_test && (f.in_contract || f.has_contract_block)
+            })
+            .collect();
+        let roots: Vec<bool> = (0..n)
+            .map(|g| {
+                let f = self.item(g);
+                !f.is_test && (f.in_contract || f.has_contract_block)
+            })
+            .collect();
+        while let Some(g) = frontier.pop() {
+            if seen[g] {
+                continue;
+            }
+            seen[g] = true;
+            if self.item(g).is_leaf {
+                continue;
+            }
+            let rel = self.file_of(g).rel.clone();
+            let qname = self.item(g).qname();
+            let calls = self.item(g).calls.clone();
+            for call in &calls {
+                for tgt in self.resolve(g, call) {
+                    edges.insert((qname.clone(), self.item(tgt).qname(), rel.clone(), call.line));
+                    if !seen[tgt] {
+                        if via[tgt].is_none() {
+                            via[tgt] = Some((qname.clone(), rel.clone(), call.line));
+                        }
+                        frontier.push(tgt);
+                    }
+                }
+            }
+        }
+        let mut findings = Vec::new();
+        for g in 0..n {
+            let f = self.item(g);
+            if seen[g] && !f.is_test && !f.in_contract && !f.is_leaf && !roots[g] {
+                let (vq, vf, vl) = via[g]
+                    .clone()
+                    .unwrap_or_else(|| ("?".to_string(), "?".to_string(), 0));
+                findings.push(Finding {
+                    rule: rule_id::CONTRACT_TAINT,
+                    file: self.file_of(g).rel.clone(),
+                    line: f.line,
+                    message: format!(
+                        "`{}` reachable from bit-exact contract (via `{vq}` at {vf}:{vl})",
+                        f.qname()
+                    ),
+                });
+            }
+        }
+        (findings, edges.into_iter().collect())
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).map_err(Error::Io)? {
+        let entry = entry.map_err(Error::Io)?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph_of(files: &[(&str, &str)]) -> CrateGraph {
+        CrateGraph::from_files(
+            files.iter().map(|(rel, src)| parse_items(rel, src)).collect(),
+        )
+    }
+
+    #[test]
+    fn taint_flags_transitive_helper() {
+        let g = graph_of(&[(
+            "lib.rs",
+            r#"
+// CONTRACT: bit-exact — root region.
+pub fn root() { helper(); }
+fn helper() { leafy(); }
+// CONTRACT: bit-exact (leaf) — audited.
+fn leafy() { unmarked_beyond_leaf(); }
+fn unmarked_beyond_leaf() {}
+"#,
+        )]);
+        let (findings, edges) = g.taint();
+        // helper is reached and uncovered; leafy stops the walk, so
+        // unmarked_beyond_leaf is never reached.
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, rule_id::CONTRACT_TAINT);
+        assert!(findings[0].message.contains("`helper`"));
+        assert!(edges.iter().any(|e| e.0 == "root" && e.1 == "helper"));
+        assert!(!edges.iter().any(|e| e.0 == "leafy"));
+    }
+
+    #[test]
+    fn bare_resolution_prefers_same_module() {
+        let g = graph_of(&[
+            ("m/a.rs", "pub fn f() {}\npub fn go() { f(); }\n"),
+            ("n/b.rs", "pub fn f() {}\n"),
+        ]);
+        let caller = (0..g.fn_count()).find(|&i| g.item(i).name == "go").unwrap();
+        let call = g.item(caller).calls[0].clone();
+        let tgts = g.resolve(caller, &call);
+        assert_eq!(tgts.len(), 1);
+        assert_eq!(g.item(tgts[0]).module, "m::a");
+    }
+
+    #[test]
+    fn self_method_prefers_own_impl() {
+        let g = graph_of(&[
+            (
+                "x.rs",
+                "struct A;\nimpl A {\n  fn part(&self) {}\n  fn go(&self) { self.part(); }\n}\n",
+            ),
+            ("y.rs", "struct B;\nimpl B {\n  fn part(&self) {}\n}\n"),
+        ]);
+        let caller = (0..g.fn_count()).find(|&i| g.item(i).name == "go").unwrap();
+        let call = g.item(caller).calls[0].clone();
+        let tgts = g.resolve(caller, &call);
+        assert_eq!(tgts.len(), 1);
+        assert_eq!(g.item(tgts[0]).impl_of.as_deref(), Some("A"));
+        // without a self receiver the same name fans out to both impls
+        let other = Call { recv_self: false, ..call };
+        assert_eq!(g.resolve(caller, &other).len(), 2);
+    }
+
+    #[test]
+    fn std_methods_never_resolve() {
+        let g = graph_of(&[(
+            "x.rs",
+            "struct A;\nimpl A {\n  fn len(&self) -> usize { 0 }\n  fn go(&self) { self.len(); }\n}\n",
+        )]);
+        let caller = (0..g.fn_count()).find(|&i| g.item(i).name == "go").unwrap();
+        let call = g.item(caller).calls[0].clone();
+        assert!(g.resolve(caller, &call).is_empty());
+    }
+
+    #[test]
+    fn qualified_resolution_matches_impl_and_module() {
+        let g = graph_of(&[
+            ("kernel/scalar.rs", "pub struct K;\nimpl K {\n  pub fn plan() {}\n}\n"),
+            ("util/free.rs", "pub fn helper() {}\n"),
+            (
+                "top.rs",
+                "pub fn go() { K::plan(); crate::util::free::helper(); }\n",
+            ),
+        ]);
+        let caller = (0..g.fn_count()).find(|&i| g.item(i).name == "go").unwrap();
+        let calls = g.item(caller).calls.clone();
+        let plan = calls.iter().find(|c| c.name == "plan").unwrap();
+        assert_eq!(g.resolve(caller, plan).len(), 1);
+        let helper = calls.iter().find(|c| c.name == "helper").unwrap();
+        let tgts = g.resolve(caller, helper);
+        assert_eq!(tgts.len(), 1);
+        assert_eq!(g.item(tgts[0]).module, "util::free");
+    }
+}

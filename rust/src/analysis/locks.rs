@@ -1,0 +1,547 @@
+//! Static lock-acquisition analysis: the `lock-order` and
+//! `blocking-under-lock` rules, plus the hand-parsed `locks.toml`
+//! registry of sanctioned lock orderings.
+//!
+//! Lock labels are `module::path/receiver`: the module owning the
+//! acquisition site joined with the receiver chain of the `.lock()`
+//! call (leading `self.` stripped), e.g. `coordinator::remote/state`.
+//! A guard-returning helper (a fn whose signature mentions
+//! `MutexGuard` and whose body takes exactly one direct lock)
+//! *provides* its lock's label: call sites of the helper count as
+//! acquisitions of that label, with the held region computed at the
+//! call site.
+//!
+//! Held regions are syntactic: a `let`-bound guard is held to the end
+//! of its enclosing block or an explicit `drop(guard)`; a temporary
+//! guard to the end of its statement.  Within a held region of `L1`,
+//! a direct acquisition of `L2` — or a call to a fn whose *effective*
+//! acquisition set (a fixpoint over the call graph) contains `L2` —
+//! observes the edge `L1 -> L2`.  Every observed edge must be
+//! declared in `locks.toml`, declared edges must still be observed
+//! (stale entries fail, exactly like `allow.toml`), and the observed
+//! edges must form a DAG.
+//!
+//! `blocking-under-lock` uses the same held regions: a call site
+//! named in [`super::parser::BLOCKING_CALLS`] — or a call to a fn
+//! whose effective blocking set is non-empty — inside a held region
+//! is a finding.  Condvar waits that atomically release the guard are
+//! the expected survivors and are routed through `allow.toml` with
+//! the protocol documented.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::callgraph::CrateGraph;
+use super::parser::{hold_end, let_binding, Acquire, CallKind};
+use super::{rule_id, Finding};
+
+/// One `[[order]]` entry from `locks.toml`.
+#[derive(Debug, Clone)]
+pub struct LockOrderEntry {
+    /// Label of the lock held first (outer).
+    pub first: String,
+    /// Label of the lock acquired while `first` is held (inner).
+    pub then: String,
+    /// Mandatory human justification.
+    pub reason: String,
+    /// Line in the registry file where the entry starts.
+    pub defined_at: usize,
+}
+
+/// The parsed sanctioned-orderings registry plus its source label.
+#[derive(Debug, Default)]
+pub struct LockRegistry {
+    pub entries: Vec<LockOrderEntry>,
+    pub source: String,
+}
+
+impl LockRegistry {
+    /// A registry that declares nothing.
+    pub fn empty() -> LockRegistry {
+        LockRegistry::default()
+    }
+
+    /// Load and parse `path`; `label` is reported in findings (the
+    /// repo convention is the root-relative `analysis/locks.toml`).
+    pub fn load(path: &Path, label: &str) -> Result<LockRegistry> {
+        let text = std::fs::read_to_string(path).map_err(Error::Io)?;
+        LockRegistry::parse(label, &text)
+    }
+
+    /// Parse registry text; same strict hand-parsed TOML subset as the
+    /// allowlist: `[[order]]` headers and quoted `key = "value"`.
+    pub fn parse(source: &str, text: &str) -> Result<LockRegistry> {
+        let bad = |ln: usize, msg: String| Error::Config(format!("{source}:{ln}: {msg}"));
+        let mut entries: Vec<LockOrderEntry> = Vec::new();
+        let mut cur: Option<LockOrderEntry> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let ln = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[order]]" {
+                if let Some(e) = cur.take() {
+                    finish(source, e, &mut entries)?;
+                }
+                cur = Some(LockOrderEntry {
+                    first: String::new(),
+                    then: String::new(),
+                    reason: String::new(),
+                    defined_at: ln,
+                });
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(bad(ln, format!("expected `key = value`, got `{line}`")));
+            };
+            let entry = cur
+                .as_mut()
+                .ok_or_else(|| bad(ln, "key outside an [[order]] block".to_string()))?;
+            let key = key.trim();
+            let value = value.trim();
+            let parsed = unquote(value)
+                .ok_or_else(|| bad(ln, format!("expected a double-quoted string, got `{value}`")))?;
+            match key {
+                "first" => entry.first = parsed,
+                "then" => entry.then = parsed,
+                "reason" => entry.reason = parsed,
+                other => return Err(bad(ln, format!("unknown key `{other}`"))),
+            }
+        }
+        if let Some(e) = cur.take() {
+            finish(source, e, &mut entries)?;
+        }
+        Ok(LockRegistry { entries, source: source.to_string() })
+    }
+}
+
+fn finish(source: &str, e: LockOrderEntry, entries: &mut Vec<LockOrderEntry>) -> Result<()> {
+    let bad = |msg: String| Error::Config(format!("{source}:{}: {msg}", e.defined_at));
+    if e.first.is_empty() {
+        return Err(bad("entry is missing `first`".to_string()));
+    }
+    if e.then.is_empty() {
+        return Err(bad("entry is missing `then`".to_string()));
+    }
+    if e.reason.is_empty() {
+        return Err(bad("entry is missing `reason` (justify or fix)".to_string()));
+    }
+    entries.push(e);
+    Ok(())
+}
+
+/// Drop a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> Option<String> {
+    let inner = v.strip_prefix('"')?.strip_suffix('"')?;
+    Some(inner.to_string())
+}
+
+/// One observed lock-nesting edge for the graph dump:
+/// `(first, then, file, line, observation count)`.
+pub type LockEdge = (String, String, String, usize, usize);
+
+/// Run the lock analysis over a parsed crate against a registry.
+/// Returns `(findings, observed lock edges)`.
+pub(crate) fn check_locks(graph: &CrateGraph, registry: &LockRegistry) -> (Vec<Finding>, Vec<LockEdge>) {
+    let n = graph.fn_count();
+    let mut findings = Vec::new();
+
+    // guard-returning helpers: fn name -> provided label (when the
+    // body takes exactly one direct lock).  Keyed by bare name — last
+    // definition in crate order wins, same as call-site resolution of
+    // a bare helper name would.
+    let mut guard_fns: BTreeMap<String, Option<String>> = BTreeMap::new();
+    for g in 0..n {
+        let f = graph.item(g);
+        if f.returns_guard && !f.is_test {
+            let label = if f.acquires.len() == 1 {
+                Some(label_of(&f.module, &f.acquires[0].label))
+            } else {
+                None
+            };
+            guard_fns.insert(f.name.clone(), label);
+        }
+    }
+
+    // effective acquire / blocking sets per fn (fixpoint over calls)
+    let mut eff_acq: Vec<BTreeSet<String>> = Vec::with_capacity(n);
+    let mut eff_blk: Vec<BTreeSet<String>> = Vec::with_capacity(n);
+    for g in 0..n {
+        let f = graph.item(g);
+        let mut acqs: BTreeSet<String> = f
+            .acquires
+            .iter()
+            .map(|a| label_of(&f.module, &a.label))
+            .collect();
+        for c in &f.calls {
+            if matches!(c.kind, CallKind::Bare | CallKind::Qual) {
+                if let Some(Some(lbl)) = guard_fns.get(&c.name) {
+                    acqs.insert(lbl.clone());
+                }
+            }
+        }
+        eff_acq.push(acqs);
+        eff_blk.push(f.blocking.iter().map(|b| b.name.clone()).collect());
+    }
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for g in 0..n {
+            let calls = graph.item(g).calls.clone();
+            for c in &calls {
+                for tgt in graph.resolve(g, c) {
+                    if !eff_acq[tgt].is_subset(&eff_acq[g]) {
+                        let add: Vec<String> = eff_acq[tgt].iter().cloned().collect();
+                        eff_acq[g].extend(add);
+                        changed = true;
+                    }
+                    if !eff_blk[tgt].is_subset(&eff_blk[g]) {
+                        let add: Vec<String> = eff_blk[tgt].iter().cloned().collect();
+                        eff_blk[g].extend(add);
+                        changed = true;
+                    }
+                }
+            }
+        }
+    }
+
+    // observed edges + blocking sites, per held region
+    let mut lock_edges: BTreeMap<(String, String), Vec<(String, usize)>> = BTreeMap::new();
+    let mut blocking_sites: Vec<(String, usize, String, String)> = Vec::new();
+    for g in 0..n {
+        let f = graph.item(g);
+        if f.is_test {
+            continue;
+        }
+        let file = graph.file_of(g);
+        let rel = file.rel.clone();
+        let toks = &file.toks;
+        // all acquisitions in this fn, incl. guard-helper call sites
+        let mut holds: Vec<(String, Acquire)> = f
+            .acquires
+            .iter()
+            .map(|a| (label_of(&f.module, &a.label), a.clone()))
+            .collect();
+        for c in &f.calls {
+            if matches!(c.kind, CallKind::Bare | CallKind::Qual) {
+                if let Some(Some(lbl)) = guard_fns.get(&c.name) {
+                    let binding = let_binding(toks, c.tpos);
+                    let end = hold_end(toks, c.tpos, binding.as_deref());
+                    holds.push((
+                        lbl.clone(),
+                        Acquire { label: lbl.clone(), line: c.line, tpos: c.tpos, end, binding },
+                    ));
+                }
+            }
+        }
+        for (l1, a) in &holds {
+            let (lo, hi) = (a.tpos, a.end);
+            for (l2, b) in &holds {
+                if b.tpos <= lo || b.tpos >= hi {
+                    continue;
+                }
+                lock_edges
+                    .entry((l1.clone(), l2.clone()))
+                    .or_default()
+                    .push((rel.clone(), b.line));
+            }
+            for b in &f.blocking {
+                if lo < b.tpos && b.tpos < hi {
+                    blocking_sites.push((rel.clone(), b.line, b.name.clone(), l1.clone()));
+                }
+            }
+            for c in &f.calls {
+                if !(lo < c.tpos && c.tpos < hi) {
+                    continue;
+                }
+                for tgt in graph.resolve(g, c) {
+                    for l2 in &eff_acq[tgt] {
+                        if l2 == l1 {
+                            continue;
+                        }
+                        lock_edges
+                            .entry((l1.clone(), l2.clone()))
+                            .or_default()
+                            .push((rel.clone(), c.line));
+                    }
+                    for nm in &eff_blk[tgt] {
+                        blocking_sites.push((
+                            rel.clone(),
+                            c.line,
+                            format!("{nm} via {}", graph.item(tgt).qname()),
+                            l1.clone(),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // registry check: every observed edge declared, no stale entries
+    let declared: BTreeSet<(&str, &str)> = registry
+        .entries
+        .iter()
+        .map(|e| (e.first.as_str(), e.then.as_str()))
+        .collect();
+    for ((l1, l2), sites) in &lock_edges {
+        if !declared.contains(&(l1.as_str(), l2.as_str())) {
+            let (file, line) = &sites[0];
+            findings.push(Finding {
+                rule: rule_id::LOCK_ORDER,
+                file: file.clone(),
+                line: *line,
+                message: format!("undeclared lock nesting `{l1}` -> `{l2}`"),
+            });
+        }
+    }
+    for e in &registry.entries {
+        if !lock_edges.contains_key(&(e.first.clone(), e.then.clone())) {
+            findings.push(Finding {
+                rule: rule_id::LOCK_ORDER,
+                file: registry.source.clone(),
+                line: e.defined_at,
+                message: format!("stale order entry `{}` -> `{}`", e.first, e.then),
+            });
+        }
+    }
+
+    // cycle check over the observed edges
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (l1, l2) in lock_edges.keys() {
+        adj.entry(l1).or_default().insert(l2);
+    }
+    let labels: Vec<&str> = adj.keys().copied().collect();
+    let mut state: BTreeMap<&str, u8> = BTreeMap::new();
+    for u in labels {
+        if state.get(u).copied().unwrap_or(0) == 0 {
+            cycle_dfs(u, &mut vec![u.to_string()], &adj, &mut state, &lock_edges, &mut findings);
+        }
+    }
+
+    for (rel, line, nm, l1) in &blocking_sites {
+        findings.push(Finding {
+            rule: rule_id::BLOCKING_UNDER_LOCK,
+            file: rel.clone(),
+            line: *line,
+            message: format!("blocking `{nm}` while holding `{l1}`"),
+        });
+    }
+
+    let edges_out: Vec<LockEdge> = lock_edges
+        .iter()
+        .map(|((l1, l2), sites)| {
+            (l1.clone(), l2.clone(), sites[0].0.clone(), sites[0].1, sites.len())
+        })
+        .collect();
+    (findings, edges_out)
+}
+
+fn label_of(module: &str, label: &str) -> String {
+    if module.is_empty() {
+        label.to_string()
+    } else {
+        format!("{module}/{label}")
+    }
+}
+
+fn cycle_dfs<'a>(
+    u: &'a str,
+    path: &mut Vec<String>,
+    adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+    state: &mut BTreeMap<&'a str, u8>,
+    edges: &BTreeMap<(String, String), Vec<(String, usize)>>,
+    findings: &mut Vec<Finding>,
+) {
+    state.insert(u, 1);
+    if let Some(vs) = adj.get(u) {
+        for &v in vs {
+            match state.get(v).copied().unwrap_or(0) {
+                1 => {
+                    let site = &edges[&(u.to_string(), v.to_string())][0];
+                    let mut cyc = path.clone();
+                    cyc.push(v.to_string());
+                    findings.push(Finding {
+                        rule: rule_id::LOCK_ORDER,
+                        file: site.0.clone(),
+                        line: site.1,
+                        message: format!("lock-order cycle: {}", cyc.join(" -> ")),
+                    });
+                }
+                0 => {
+                    path.push(v.to_string());
+                    cycle_dfs(v, path, adj, state, edges, findings);
+                    path.pop();
+                }
+                _ => {}
+            }
+        }
+    }
+    state.insert(u, 2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::parser::parse_items;
+
+    fn graph_of(files: &[(&str, &str)]) -> CrateGraph {
+        CrateGraph::from_files(
+            files.iter().map(|(rel, src)| parse_items(rel, src)).collect(),
+        )
+    }
+
+    #[test]
+    fn registry_parses_and_validates() {
+        let text = r#"
+# sanctioned orderings
+[[order]]
+first = "a/x"
+then = "b/y"
+reason = "y is a leaf"
+"#;
+        let reg = LockRegistry::parse("analysis/locks.toml", text).unwrap();
+        assert_eq!(reg.entries.len(), 1);
+        assert_eq!(reg.entries[0].first, "a/x");
+        assert_eq!(reg.entries[0].defined_at, 3);
+        assert!(LockRegistry::parse("l", "[[order]]\nfirst = \"a\"\nthen = \"b\"\n").is_err());
+        assert!(LockRegistry::parse("l", "first = \"a\"\n").is_err());
+        assert!(LockRegistry::parse(
+            "l",
+            "[[order]]\nfirst = \"a\"\nthen = \"b\"\nreason = \"r\"\nbogus = \"x\"\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn undeclared_nesting_is_flagged_and_declaration_clears_it() {
+        let src = r#"
+use std::sync::Mutex;
+pub struct S { a: Mutex<u32>, b: Mutex<u32> }
+pub fn nest(s: &S) {
+    let ga = s.a.lock().expect("poisoned");
+    let gb = s.b.lock().expect("poisoned");
+    let _ = (*ga, *gb);
+}
+"#;
+        let g = graph_of(&[("m.rs", src)]);
+        let (findings, edges) = check_locks(&g, &LockRegistry::empty());
+        assert_eq!(edges.len(), 1);
+        assert_eq!(edges[0].0, "m/a");
+        assert_eq!(edges[0].1, "m/b");
+        assert!(findings
+            .iter()
+            .any(|f| f.rule == rule_id::LOCK_ORDER && f.message.contains("undeclared")));
+        let reg = LockRegistry::parse(
+            "analysis/locks.toml",
+            "[[order]]\nfirst = \"m/a\"\nthen = \"m/b\"\nreason = \"ok\"\n",
+        )
+        .unwrap();
+        let (findings, _) = check_locks(&g, &reg);
+        assert!(findings.is_empty());
+    }
+
+    #[test]
+    fn stale_entry_is_flagged_at_its_definition() {
+        let g = graph_of(&[("m.rs", "pub fn quiet() {}\n")]);
+        let reg = LockRegistry::parse(
+            "analysis/locks.toml",
+            "[[order]]\nfirst = \"m/a\"\nthen = \"m/b\"\nreason = \"gone\"\n",
+        )
+        .unwrap();
+        let (findings, _) = check_locks(&g, &reg);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, rule_id::LOCK_ORDER);
+        assert_eq!(findings[0].file, "analysis/locks.toml");
+        assert_eq!(findings[0].line, 1);
+        assert!(findings[0].message.contains("stale"));
+    }
+
+    #[test]
+    fn cycle_is_flagged_even_when_declared() {
+        let src = r#"
+use std::sync::Mutex;
+pub struct S { a: Mutex<u32>, b: Mutex<u32> }
+pub fn ab(s: &S) {
+    let ga = s.a.lock().expect("poisoned");
+    let gb = s.b.lock().expect("poisoned");
+    let _ = (*ga, *gb);
+}
+pub fn ba(s: &S) {
+    let gb = s.b.lock().expect("poisoned");
+    let ga = s.a.lock().expect("poisoned");
+    let _ = (*ga, *gb);
+}
+"#;
+        let g = graph_of(&[("m.rs", src)]);
+        let reg = LockRegistry::parse(
+            "analysis/locks.toml",
+            "[[order]]\nfirst = \"m/a\"\nthen = \"m/b\"\nreason = \"r\"\n\n[[order]]\nfirst = \"m/b\"\nthen = \"m/a\"\nreason = \"r\"\n",
+        )
+        .unwrap();
+        let (findings, _) = check_locks(&g, &reg);
+        assert!(findings.iter().any(|f| f.message.contains("lock-order cycle")));
+    }
+
+    #[test]
+    fn blocking_under_lock_direct_and_via_call() {
+        let src = r#"
+use std::sync::Mutex;
+pub fn direct(m: &Mutex<std::sync::mpsc::Receiver<u32>>) {
+    let rx = m.lock().expect("poisoned");
+    let _ = rx.recv();
+}
+pub fn outer(m: &Mutex<u32>) {
+    let g = m.lock().expect("poisoned");
+    helper_that_blocks();
+    let _ = *g;
+}
+fn helper_that_blocks() {
+    let (_tx, rx) = std::sync::mpsc::channel::<u32>();
+    let _ = rx.recv();
+}
+"#;
+        let g = graph_of(&[("m.rs", src)]);
+        let (findings, _) = check_locks(&g, &LockRegistry::empty());
+        let blk: Vec<&Finding> =
+            findings.iter().filter(|f| f.rule == rule_id::BLOCKING_UNDER_LOCK).collect();
+        assert_eq!(blk.len(), 2);
+        assert!(blk.iter().any(|f| f.message.contains("blocking `recv` while")));
+        assert!(blk.iter().any(|f| f.message.contains("recv via helper_that_blocks")));
+    }
+
+    #[test]
+    fn guard_helper_call_site_counts_as_acquisition() {
+        let src = r#"
+use std::sync::{Mutex, MutexGuard};
+pub struct S { inner: Mutex<u32>, other: Mutex<u32> }
+fn grab(s: &S) -> MutexGuard<'_, u32> {
+    s.inner.lock().expect("poisoned")
+}
+pub fn nest(s: &S) {
+    let g = grab(s);
+    let h = s.other.lock().expect("poisoned");
+    let _ = (*g, *h);
+}
+"#;
+        let g = graph_of(&[("m.rs", src)]);
+        let (findings, edges) = check_locks(&g, &LockRegistry::empty());
+        assert!(edges.iter().any(|e| e.0 == "m/inner" && e.1 == "m/other"));
+        assert!(findings.iter().any(|f| f.message.contains("`m/inner` -> `m/other`")));
+    }
+}

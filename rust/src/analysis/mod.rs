@@ -20,7 +20,10 @@
 //! "Invariants" section of `lib.rs`.
 
 pub mod allow;
+pub mod callgraph;
 pub mod lexer;
+pub mod locks;
+pub mod parser;
 pub mod rules;
 
 use std::path::Path;
@@ -30,6 +33,8 @@ use crate::telemetry::events::EventLog;
 use crate::util::json::Json;
 
 pub use allow::{AllowEntry, Allowlist};
+pub use callgraph::CallEdge;
+pub use locks::{LockEdge, LockOrderEntry, LockRegistry};
 
 /// Stable rule identifiers — these appear in JSONL output, allowlist
 /// entries, and the `lib.rs` Invariants table, so they never change.
@@ -48,6 +53,15 @@ pub mod rule_id {
     pub const NO_PANIC: &str = "no-panic-path";
     /// Wire command without parse/encode/roundtrip-test coverage.
     pub const PROTOCOL_COVERAGE: &str = "protocol-coverage";
+    /// Fn reachable from a bit-exact contract region that is neither
+    /// contract-covered nor an audited `(leaf)`.
+    pub const CONTRACT_TAINT: &str = "contract-taint";
+    /// Observed lock nesting that `locks.toml` does not sanction, a
+    /// stale registry entry, or a cycle among observed nestings.
+    pub const LOCK_ORDER: &str = "lock-order";
+    /// Blocking call (I/O, channel recv, joins, waits) while a lock
+    /// guard is held.
+    pub const BLOCKING_UNDER_LOCK: &str = "blocking-under-lock";
     /// Allowlist entry that suppressed nothing.
     pub const UNUSED_ALLOW: &str = "unused-allow";
 
@@ -60,6 +74,9 @@ pub mod rule_id {
         CONTRACT_FORBIDDEN,
         NO_PANIC,
         PROTOCOL_COVERAGE,
+        CONTRACT_TAINT,
+        LOCK_ORDER,
+        BLOCKING_UNDER_LOCK,
         UNUSED_ALLOW,
     ];
 }
@@ -77,6 +94,19 @@ pub struct Finding {
     pub message: String,
 }
 
+/// The crate-wide graphs the call-graph pass derives, kept on the
+/// report so callers can dump them (`--graph-out`) next to findings.
+#[derive(Debug, Default)]
+pub struct GraphData {
+    /// Fn items parsed across the crate.
+    pub fns: usize,
+    /// Every resolved call edge: `(caller, callee, file, line)`.
+    pub call_edges: Vec<CallEdge>,
+    /// Every observed lock nesting:
+    /// `(first, then, file, line, observation count)`.
+    pub lock_edges: Vec<LockEdge>,
+}
+
 /// The outcome of linting a tree: surviving findings, allowlisted
 /// suppressions (finding + reason), and stale allow entries.
 #[derive(Debug, Default)]
@@ -89,6 +119,8 @@ pub struct LintReport {
     pub suppressed: Vec<(Finding, String)>,
     /// `unused-allow` findings — these also fail the build.
     pub unused_allow: Vec<Finding>,
+    /// Call / lock graphs from the crate-wide pass.
+    pub graph: GraphData,
 }
 
 impl LintReport {
@@ -115,23 +147,96 @@ pub fn lint_file(path: &Path) -> Result<Vec<Finding>> {
     Ok(lint_source(&path.to_string_lossy().replace('\\', "/"), &src))
 }
 
-/// Lint every `.rs` file under `root` (deterministic sorted walk) and
-/// apply the allowlist.
+/// Lint every `.rs` file under `root` (deterministic sorted walk),
+/// run the crate-wide call-graph pass, and apply the allowlist.
 pub fn lint_tree(root: &Path, allow: &Allowlist) -> Result<LintReport> {
+    lint_tree_with_aux(root, &[], allow)
+}
+
+/// [`lint_tree`] plus auxiliary trees (`benches/`, `examples/`) linted
+/// under the reduced [`rules::check_aux`] rule set.  All findings —
+/// per-file, crate-wide, and aux — share one allowlist application, so
+/// `unused-allow` accounting spans the whole sweep.
+///
+/// The crate-wide pass auto-loads `root/analysis/locks.toml` when
+/// present (missing file = empty registry: every observed nesting is
+/// then undeclared).  Aux dirs that do not exist are skipped silently
+/// — benches/examples are optional in fixture trees.
+pub fn lint_tree_with_aux(
+    root: &Path,
+    aux_dirs: &[std::path::PathBuf],
+    allow: &Allowlist,
+) -> Result<LintReport> {
+    lint_tree_full(root, aux_dirs, allow, None)
+}
+
+/// Full-control sweep: like [`lint_tree_with_aux`] but with an
+/// explicit lock-order registry (`Some`) instead of the
+/// `root/analysis/locks.toml` auto-load (`None`).
+pub fn lint_tree_full(
+    root: &Path,
+    aux_dirs: &[std::path::PathBuf],
+    allow: &Allowlist,
+    registry: Option<LockRegistry>,
+) -> Result<LintReport> {
     let mut files = Vec::new();
     collect_rs(root, &mut files)?;
     files.sort();
-    let mut report = LintReport { files: files.len(), ..LintReport::default() };
-    let mut used = vec![false; allow.entries.len()];
+    let mut pooled: Vec<Finding> = Vec::new();
     for f in &files {
-        for finding in lint_file(f)? {
-            match allow.entries.iter().position(|e| e.matches(&finding)) {
-                Some(idx) => {
-                    used[idx] = true;
-                    report.suppressed.push((finding, allow.entries[idx].reason.clone()));
-                }
-                None => report.findings.push(finding),
+        pooled.extend(lint_file(f)?);
+    }
+
+    let graph = callgraph::CrateGraph::build(root)?;
+    let registry = match registry {
+        Some(r) => r,
+        None => {
+            let locks_path = root.join("analysis").join("locks.toml");
+            if locks_path.is_file() {
+                LockRegistry::load(&locks_path, "analysis/locks.toml")?
+            } else {
+                LockRegistry::empty()
             }
+        }
+    };
+    let (taint_findings, _taint_edges) = graph.taint();
+    pooled.extend(taint_findings);
+    let (lock_findings, lock_edges) = locks::check_locks(&graph, &registry);
+    pooled.extend(lock_findings);
+    let graph_data = GraphData {
+        fns: graph.fn_count(),
+        call_edges: graph.all_edges(),
+        lock_edges,
+    };
+
+    let mut aux_files = 0usize;
+    for d in aux_dirs {
+        if !d.is_dir() {
+            continue;
+        }
+        let mut afiles = Vec::new();
+        collect_rs(d, &mut afiles)?;
+        afiles.sort();
+        aux_files += afiles.len();
+        for f in &afiles {
+            let src = std::fs::read_to_string(f).map_err(Error::Io)?;
+            pooled.extend(rules::check_aux(&f.to_string_lossy().replace('\\', "/"), &src));
+        }
+    }
+
+    let mut report = LintReport {
+        files: files.len() + aux_files,
+        graph: graph_data,
+        ..LintReport::default()
+    };
+    let mut used = vec![false; allow.entries.len()];
+    for finding in pooled {
+        match allow.entries.iter().position(|e| e.matches(&finding)) {
+            Some(idx) => {
+                used[idx] = true;
+                report.suppressed.push((finding, allow.entries[idx].reason.clone()));
+            }
+            None => report.findings.push(finding),
         }
     }
     report.unused_allow = allow.unused(&used);
@@ -183,6 +288,45 @@ pub fn emit_jsonl(report: &LintReport, log: &EventLog) {
             ("failing", Json::num(report.failing() as f64)),
             ("files", Json::num(report.files as f64)),
             ("suppressed", Json::num(report.suppressed.len() as f64)),
+        ],
+    );
+}
+
+/// Emit the crate graphs as reason-tagged JSONL: one `graph-call-edge`
+/// line per resolved call edge, one `graph-lock-edge` line per
+/// observed lock nesting, and a trailing `graph-summary` — the
+/// `--graph-out` wire format, same shape conventions as
+/// [`emit_jsonl`].
+pub fn emit_graph_jsonl(report: &LintReport, log: &EventLog) {
+    for (caller, callee, file, line) in &report.graph.call_edges {
+        log.emit(
+            "graph-call-edge",
+            vec![
+                ("callee", Json::str(callee.as_str())),
+                ("caller", Json::str(caller.as_str())),
+                ("file", Json::str(file.as_str())),
+                ("line", Json::num(*line as f64)),
+            ],
+        );
+    }
+    for (first, then, file, line, sites) in &report.graph.lock_edges {
+        log.emit(
+            "graph-lock-edge",
+            vec![
+                ("file", Json::str(file.as_str())),
+                ("first", Json::str(first.as_str())),
+                ("line", Json::num(*line as f64)),
+                ("sites", Json::num(*sites as f64)),
+                ("then", Json::str(then.as_str())),
+            ],
+        );
+    }
+    log.emit(
+        "graph-summary",
+        vec![
+            ("call_edges", Json::num(report.graph.call_edges.len() as f64)),
+            ("fns", Json::num(report.graph.fns as f64)),
+            ("lock_edges", Json::num(report.graph.lock_edges.len() as f64)),
         ],
     );
 }

@@ -1,0 +1,847 @@
+//! Item-level parser for the crate-wide lint pass.
+//!
+//! Sits between the token stream ([`super::lexer`]) and the call-graph
+//! analyses ([`super::callgraph`], [`super::locks`]).  This is still
+//! not a real Rust parser — it extracts exactly the facts the
+//! cross-file rules need, with documented best-effort rules:
+//!
+//! * **fn items** with their module path (derived from the file path
+//!   relative to the lint root), enclosing `impl` type, declaration
+//!   line, and flags: `#[test]`/`#[cfg(test)]` scope, contract-region
+//!   membership (file-level `//! CONTRACT: bit-exact`, a marker on the
+//!   fn, or an enclosing marked block), leaf markers
+//!   (`CONTRACT: bit-exact (leaf)`), and whether the signature returns
+//!   a `MutexGuard` (guard-helper detection for the lock pass).
+//! * **call sites**: bare `f(..)`, qualified `path::f(..)` (the path
+//!   is also captured when `path::f` is used as a value, e.g. passed
+//!   to a combinator), and method `recv.f(..)` calls, each with the
+//!   token position so the lock pass can test containment in a held
+//!   region.
+//! * **lock acquisitions**: every `.lock(` method call, labelled by
+//!   the receiver chain with a leading `self.` stripped (so
+//!   `self.inner.lock()` and `reg.inner.lock()` in the same module
+//!   agree on the label `inner`), plus the held region — see
+//!   [`hold_end`] for the exact model.
+//! * **blocking sites**: call names in [`BLOCKING_CALLS`] recorded by
+//!   name at the site, independent of resolution — `read` on a socket
+//!   and `read` on a `&[u8]` are indistinguishable here, which is the
+//!   conservative direction for a deadlock lint; false positives are
+//!   routed through `allow.toml` with a reason.
+
+use super::lexer::{tokenize, Tok, Token};
+
+pub(crate) const MARKER: &str = "CONTRACT: bit-exact";
+pub(crate) const LEAF_MARKER: &str = "CONTRACT: bit-exact (leaf)";
+
+/// Method names that never resolve into crate fns: common std-library
+/// method names whose fan-out would drown the graph in false edges.
+/// A method call with one of these names is left unresolved; anything
+/// else fans out to every impl-associated fn of that name (documented
+/// over-approximation).  Kept sorted for `binary_search`.
+pub(crate) const STD_METHODS: &[&str] = &[
+    "abs", "accept", "all", "and_then", "any", "args", "as_bytes",
+    "as_deref", "as_micros", "as_millis", "as_mut", "as_os_str", "as_ref",
+    "as_secs", "as_slice", "as_str", "available_parallelism",
+    "binary_search", "binary_search_by", "bytes", "ceil", "char_indices",
+    "chars", "checked_add", "checked_div", "checked_mul", "checked_sub",
+    "chunks", "chunks_exact", "chunks_mut", "clamp", "clear", "clone",
+    "clone_from_slice", "cloned", "cmp", "collect", "compare_exchange",
+    "components", "concat", "connect", "contains", "contains_key",
+    "copied", "copy_from_slice", "count", "dedup", "display", "drain",
+    "duration_since", "elapsed", "ends_with", "entry", "enumerate", "eq",
+    "err", "exists", "exp", "expect", "expect_err", "extend",
+    "extend_from_slice", "extension", "fetch_add", "fetch_or", "fetch_sub",
+    "file_name", "file_stem", "fill", "filter", "filter_map", "find",
+    "find_map", "finish", "first", "first_mut", "flat_map", "flatten",
+    "floor", "floor_char_boundary", "flush", "fmt", "fold", "for_each",
+    "from", "from_be_bytes", "from_bits", "from_le_bytes", "get",
+    "get_mut", "get_or_insert_with", "hash", "id", "insert", "into",
+    "into_iter", "is_char_boundary", "is_dir", "is_empty", "is_err",
+    "is_file", "is_finite", "is_infinite", "is_nan", "is_none",
+    "is_none_or", "is_ok", "is_ok_and", "is_some", "is_some_and", "iter",
+    "iter_mut", "join", "keys", "kind", "last", "last_mut",
+    "last_os_error", "leading_zeros", "len", "lines", "ln", "load",
+    "local_addr", "lock", "log10", "log2", "make_ascii_lowercase", "map",
+    "map_err", "map_or", "matches", "max", "max_by", "max_by_key",
+    "max_element", "metadata", "min", "min_by", "min_by_key",
+    "min_element", "mul_add", "name", "nanos", "ne", "next", "notify_all",
+    "notify_one", "nth", "ok", "ok_or", "ok_or_else", "or_default",
+    "or_else", "or_insert", "or_insert_with", "overflowing_add", "park",
+    "parse", "partial_cmp", "peek", "peer_addr", "pop", "position", "powf",
+    "powi", "product", "push", "raw_os_error", "read", "read_exact",
+    "read_line", "read_to_end", "read_to_string", "recv", "recv_timeout",
+    "remove", "repeat", "replace", "reserve", "resize", "retain", "rev",
+    "rewind", "rfind", "rotate_left", "rotate_right", "round", "rposition",
+    "saturating_add", "saturating_mul", "saturating_sub", "seek", "send",
+    "set_len", "set_nodelay", "set_nonblocking", "set_read_timeout",
+    "set_write_timeout", "shutdown", "skip", "skip_while", "sleep", "sort",
+    "sort_by", "sort_by_key", "sort_unstable", "sort_unstable_by", "spawn",
+    "split", "split_at", "split_at_mut", "split_first", "split_last",
+    "split_once", "split_whitespace", "splitn", "sqrt", "starts_with",
+    "step_by", "store", "stream_position", "strip_prefix", "strip_suffix",
+    "subsec_millis", "subsec_nanos", "sum", "swap", "swap_remove",
+    "sync_all", "take", "take_while", "to_ascii_lowercase", "to_be_bytes",
+    "to_bits", "to_le_bytes", "to_lowercase", "to_owned", "to_path_buf",
+    "to_str", "to_string", "to_string_lossy", "to_vec", "trailing_zeros",
+    "trim", "trim_end", "trim_end_matches", "trim_start",
+    "trim_start_matches", "truncate", "try_from", "try_into", "try_lock",
+    "try_recv", "unpark", "unwrap", "unwrap_or", "unwrap_or_default",
+    "unwrap_or_else", "values", "values_mut", "wait", "wait_timeout",
+    "wait_timeout_while", "wait_while", "windows", "wrapping_add",
+    "wrapping_mul", "wrapping_sub", "write", "write_all", "write_fmt",
+    "write_str", "zip",
+];
+
+/// Call-site names that count as blocking when they occur inside a
+/// held lock region.  Checked by name at the site (see module docs).
+/// Kept sorted for `binary_search`.
+pub(crate) const BLOCKING_CALLS: &[&str] = &[
+    "accept", "connect", "connect_timeout", "flush", "join", "read",
+    "read_exact", "read_line", "read_to_end", "read_to_string", "recv",
+    "recv_timeout", "sleep", "wait", "wait_timeout", "wait_timeout_while",
+    "wait_while", "write", "write_all",
+];
+
+pub(crate) fn is_std_method(name: &str) -> bool {
+    STD_METHODS.binary_search(&name).is_ok()
+}
+
+pub(crate) fn is_blocking_call(name: &str) -> bool {
+    BLOCKING_CALLS.binary_search(&name).is_ok()
+}
+
+/// Module path for a file path relative to the lint root:
+/// `cluster/engine.rs` → `cluster::engine`, `util/mod.rs` → `util`,
+/// `lib.rs` → `` (crate root), `bin/parsample_lint.rs` →
+/// `bin::parsample_lint`.
+pub(crate) fn module_of(rel: &str) -> String {
+    let p = rel.replace('\\', "/");
+    let p = p.strip_suffix(".rs").unwrap_or(&p);
+    let mut parts: Vec<&str> = p.split('/').collect();
+    if parts.last() == Some(&"mod") {
+        parts.pop();
+    }
+    if parts == ["lib"] {
+        return String::new();
+    }
+    parts.join("::")
+}
+
+/// How a call site is written, which decides the resolution rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CallKind {
+    /// `f(..)` — same-module free fns, else a unique crate-wide free fn.
+    Bare,
+    /// `path::f(..)` or `path::f` as a value — match `impl_of` against
+    /// the last path segment, or a module path suffix.
+    Qual,
+    /// `recv.f(..)` — `self.f()` prefers the enclosing impl; otherwise
+    /// fan-out over all impl-associated fns named `f` unless `f` is in
+    /// [`STD_METHODS`].
+    Method,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct Call {
+    pub kind: CallKind,
+    pub name: String,
+    /// Path segments before the name (`Qual` only).
+    pub path: Vec<String>,
+    pub line: usize,
+    /// Token index of the callee name (containment tests).
+    pub tpos: usize,
+    /// Method call written literally as `self.name(..)`.
+    pub recv_self: bool,
+}
+
+/// One `.lock()` acquisition with its held region.
+#[derive(Debug, Clone)]
+pub(crate) struct Acquire {
+    /// Receiver chain with leading `self.` stripped (`inner`,
+    /// `pending.0`), or a helper-provided label.
+    pub label: String,
+    pub line: usize,
+    pub tpos: usize,
+    /// Exclusive token index where the hold ends (see [`hold_end`]).
+    pub end: usize,
+    /// `let`-bound guard name, if the statement is a `let` binding.
+    pub binding: Option<String>,
+}
+
+/// A call site whose name is in [`BLOCKING_CALLS`].
+#[derive(Debug, Clone)]
+pub(crate) struct BlockSite {
+    pub name: String,
+    pub line: usize,
+    pub tpos: usize,
+}
+
+/// One `fn` item and the facts the crate-wide rules consume.
+#[derive(Debug, Clone)]
+pub(crate) struct FnItem {
+    pub name: String,
+    pub module: String,
+    pub impl_of: Option<String>,
+    pub line: usize,
+    pub is_test: bool,
+    /// Body is fully inside a contract region (file marker, fn marker,
+    /// or enclosing marked block).
+    pub in_contract: bool,
+    /// A marker region opens strictly inside the body — the fn is a
+    /// taint *root* but its own line is not contract-covered.
+    pub has_contract_block: bool,
+    /// Carries `CONTRACT: bit-exact (leaf)`: the taint walk stops here
+    /// (audited boundary); the body is still token-scanned because the
+    /// leaf marker lexically opens a contract region.
+    pub is_leaf: bool,
+    /// Signature mentions `MutexGuard` in its return position — the
+    /// lock pass treats calls to it as acquisitions of the single lock
+    /// its body takes.
+    pub returns_guard: bool,
+    pub calls: Vec<Call>,
+    pub acquires: Vec<Acquire>,
+    pub blocking: Vec<BlockSite>,
+}
+
+impl FnItem {
+    /// `module::Impl::name` — display name for findings and graph dump.
+    pub fn qname(&self) -> String {
+        let mut s = String::new();
+        if !self.module.is_empty() {
+            s.push_str(&self.module);
+            s.push_str("::");
+        }
+        if let Some(im) = &self.impl_of {
+            s.push_str(im);
+            s.push_str("::");
+        }
+        s.push_str(&self.name);
+        s
+    }
+}
+
+/// Everything the crate-wide pass keeps per file.  The token stream is
+/// retained so the lock pass can compute held regions for guard-helper
+/// call sites it only recognises after the whole crate is parsed.
+pub(crate) struct FileItems {
+    pub rel: String,
+    pub file_contract: bool,
+    pub fns: Vec<FnItem>,
+    pub toks: Vec<Token>,
+}
+
+fn comment_text(text: &str) -> &str {
+    text.trim_start_matches(['!', '/']).trim_start()
+}
+
+/// Mirror of `rules::scan_attribute`: `(end_index, is_test)`.
+fn scan_attribute(toks: &[Token], i: usize) -> (usize, bool) {
+    let mut j = i + 1;
+    if matches!(toks.get(j), Some(Token { tok: Tok::Punct('!'), .. })) {
+        j += 1;
+    }
+    if !matches!(toks.get(j), Some(Token { tok: Tok::Punct('['), .. })) {
+        return (i, false);
+    }
+    let mut depth = 0usize;
+    let mut content: Vec<&Tok> = Vec::new();
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            t => content.push(t),
+        }
+        j += 1;
+    }
+    let bare_test = content.len() == 1 && matches!(content[0], Tok::Ident(w) if w == "test");
+    let cfg_test = content.windows(4).any(|w| {
+        matches!(w[0], Tok::Ident(id) if id == "cfg")
+            && matches!(w[1], Tok::Punct('('))
+            && matches!(w[2], Tok::Ident(id) if id == "test")
+            && matches!(w[3], Tok::Punct(')'))
+    });
+    (j, bare_test || cfg_test)
+}
+
+/// Next non-comment token index from `idx` in direction `step`.
+fn code_idx(toks: &[Token], idx: usize, step: isize) -> Option<usize> {
+    let mut j = idx as isize;
+    loop {
+        j += step;
+        if j < 0 || j as usize >= toks.len() {
+            return None;
+        }
+        if !matches!(toks[j as usize].tok, Tok::Comment { .. }) {
+            return Some(j as usize);
+        }
+    }
+}
+
+/// Parse one file into items.  Two passes over the token stream: the
+/// first walks block structure (test/contract scopes, fn and impl
+/// spans, guard-returning signatures), the second attributes calls,
+/// acquisitions, and blocking sites to the innermost enclosing fn.
+pub(crate) fn parse_items(rel_path: &str, src: &str) -> FileItems {
+    let toks = tokenize(src);
+    let module = module_of(rel_path);
+    let file_contract = toks.iter().any(|t| match &t.tok {
+        Tok::Comment { text, inner_doc } => {
+            *inner_doc && comment_text(text).starts_with(MARKER)
+        }
+        _ => false,
+    });
+
+    let mut fns: Vec<FnItem> = Vec::new();
+    let n = toks.len();
+
+    struct Block {
+        is_test: bool,
+        is_contract: bool,
+        fn_idx: Option<usize>,
+        impl_of: Option<String>,
+    }
+    let mut stack: Vec<Block> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_contract = false;
+    let mut pending_leaf = false;
+    // fn awaiting its body `{` — already flag-resolved.
+    let mut pending_fn: Option<FnItem> = None;
+    let mut pending_impl: Option<String> = None;
+
+    let mut i = 0usize;
+    while i < n {
+        match &toks[i].tok {
+            Tok::Comment { text, inner_doc } => {
+                let ct = comment_text(text);
+                if !*inner_doc && ct.starts_with(MARKER) {
+                    pending_contract = true;
+                    if ct.starts_with(LEAF_MARKER) {
+                        pending_leaf = true;
+                    }
+                }
+            }
+            Tok::Punct('#') => {
+                let (end, is_test) = scan_attribute(&toks, i);
+                if is_test {
+                    pending_test = true;
+                }
+                i = end.max(i) + 1;
+                continue;
+            }
+            Tok::Punct('{') => {
+                let parent_test = stack.iter().any(|b| b.is_test);
+                let parent_contract = stack.iter().any(|b| b.is_contract);
+                let mut fn_idx = stack.last().and_then(|b| b.fn_idx);
+                if let Some(mut fi) = pending_fn.take() {
+                    fi.is_test = pending_test || parent_test;
+                    fi.in_contract = file_contract || pending_contract || parent_contract;
+                    fi.is_leaf = pending_leaf;
+                    fn_idx = Some(fns.len());
+                    fns.push(fi);
+                } else if pending_contract {
+                    // marker-opened block strictly inside a fn body
+                    if let Some(idx) = fn_idx {
+                        fns[idx].has_contract_block = true;
+                    }
+                }
+                let impl_of = pending_impl
+                    .take()
+                    .or_else(|| stack.last().and_then(|b| b.impl_of.clone()));
+                stack.push(Block {
+                    is_test: pending_test || parent_test,
+                    is_contract: pending_contract || parent_contract,
+                    fn_idx,
+                    impl_of,
+                });
+                pending_test = false;
+                pending_contract = false;
+                pending_leaf = false;
+            }
+            Tok::Punct('}') => {
+                stack.pop();
+                pending_test = false;
+                pending_contract = false;
+                pending_leaf = false;
+                pending_fn = None;
+                pending_impl = None;
+            }
+            Tok::Punct(';') => {
+                // trait fn declaration without a body, or statement end
+                pending_test = false;
+                pending_contract = false;
+                pending_leaf = false;
+                pending_fn = None;
+                pending_impl = None;
+            }
+            Tok::Ident(w) if w == "impl" => {
+                pending_impl = impl_self_type(&toks, i);
+            }
+            Tok::Ident(w) if w == "fn" => {
+                let line = toks[i].line;
+                if let Some(j) = code_idx(&toks, i, 1) {
+                    if let Tok::Ident(name) = &toks[j].tok {
+                        let enclosing_impl =
+                            stack.last().and_then(|b| b.impl_of.clone());
+                        let mut fi = FnItem {
+                            name: name.clone(),
+                            module: module.clone(),
+                            impl_of: enclosing_impl,
+                            line,
+                            is_test: false,
+                            in_contract: false,
+                            has_contract_block: false,
+                            is_leaf: false,
+                            returns_guard: false,
+                            calls: Vec::new(),
+                            acquires: Vec::new(),
+                            blocking: Vec::new(),
+                        };
+                        fi.returns_guard = signature_returns_guard(&toks, j);
+                        pending_fn = Some(fi);
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+
+    scan_bodies(&toks, &mut fns);
+    FileItems { rel: rel_path.replace('\\', "/"), file_contract, fns, toks }
+}
+
+/// The `impl` self type: last plain ident before the body `{` outside
+/// `<..>`, or the ident after `for` when present (`impl Trait for T`).
+/// A `where` clause ends the scan.
+fn impl_self_type(toks: &[Token], i: usize) -> Option<String> {
+    let mut angle = 0usize;
+    let mut last_ident: Option<String> = None;
+    let mut after_for: Option<String> = None;
+    let mut saw_for = false;
+    for t in &toks[i + 1..] {
+        match &t.tok {
+            Tok::Punct('<') => angle += 1,
+            Tok::Punct('>') => angle = angle.saturating_sub(1),
+            Tok::Punct('{') if angle == 0 => break,
+            Tok::Ident(w) if angle == 0 => {
+                if w == "for" {
+                    saw_for = true;
+                } else if w == "where" {
+                    break;
+                } else if saw_for {
+                    if after_for.is_none() {
+                        after_for = Some(w.clone());
+                    }
+                } else {
+                    last_ident = Some(w.clone());
+                }
+            }
+            _ => {}
+        }
+    }
+    after_for.or(last_ident)
+}
+
+/// Scan a fn signature (from the name token) for `MutexGuard` before
+/// the body `{` or a terminating `;`.
+fn signature_returns_guard(toks: &[Token], name_idx: usize) -> bool {
+    let mut par = 0isize;
+    for t in &toks[name_idx + 1..] {
+        match &t.tok {
+            Tok::Punct('(') => par += 1,
+            Tok::Punct(')') => par -= 1,
+            Tok::Punct('{') if par == 0 => break,
+            Tok::Punct(';') if par == 0 => break,
+            Tok::Ident(w) if w == "MutexGuard" => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Second pass: re-walk the block structure, attributing call sites,
+/// acquisitions, and blocking calls to the innermost enclosing fn.
+/// Fn bodies open in the same order as `fns` was built, so a simple
+/// queue pairs them back up.
+fn scan_bodies(toks: &[Token], fns: &mut [FnItem]) {
+    let n = toks.len();
+    // innermost owning fn per open block (None = not inside a fn)
+    let mut stack: Vec<Option<usize>> = Vec::new();
+    let mut qpos = 0usize;
+    let mut in_sig = false;
+    let mut sig_par = 0isize;
+
+    let mut i = 0usize;
+    while i < n {
+        match &toks[i].tok {
+            Tok::Comment { .. } => {}
+            Tok::Punct('#') => {
+                let (end, _) = scan_attribute(toks, i);
+                i = end.max(i) + 1;
+                continue;
+            }
+            Tok::Ident(w) if w == "fn" => {
+                in_sig = true;
+                sig_par = 0;
+            }
+            _ if in_sig => {
+                match &toks[i].tok {
+                    Tok::Punct('(') => sig_par += 1,
+                    Tok::Punct(')') => sig_par -= 1,
+                    Tok::Punct('{') if sig_par == 0 => {
+                        let idx = if qpos < fns.len() { Some(qpos) } else { None };
+                        qpos += 1;
+                        stack.push(idx);
+                        in_sig = false;
+                    }
+                    Tok::Punct(';') if sig_par == 0 => {
+                        in_sig = false;
+                    }
+                    _ => {}
+                }
+            }
+            Tok::Punct('{') => stack.push(stack.last().copied().flatten()),
+            Tok::Punct('}') => {
+                stack.pop();
+            }
+            Tok::Ident(name) => {
+                if let Some(owner) = stack.last().copied().flatten() {
+                    record_site(toks, i, name, &mut fns[owner]);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+
+    for fi in fns.iter_mut() {
+        for acq in fi.acquires.iter_mut() {
+            acq.end = hold_end(toks, acq.tpos, acq.binding.as_deref());
+        }
+    }
+}
+
+/// Classify one identifier occurrence inside a fn body and record the
+/// resulting call / acquisition / blocking site.
+fn record_site(toks: &[Token], i: usize, name: &str, owner: &mut FnItem) {
+    let line = toks[i].line;
+    let ni = code_idx(toks, i, 1);
+    let pi = code_idx(toks, i, -1);
+    let called = matches!(ni.map(|j| &toks[j].tok), Some(Tok::Punct('(')));
+    let dotted = matches!(pi.map(|j| &toks[j].tok), Some(Tok::Punct('.')));
+
+    // qualified path? walk backwards over `seg::` pairs
+    let mut path: Vec<String> = Vec::new();
+    if matches!(pi.map(|j| &toks[j].tok), Some(Tok::Punct(':'))) {
+        let mut k = pi.unwrap_or(0);
+        loop {
+            let c1 = match code_idx(toks, k, -1) {
+                Some(j) if matches!(toks[j].tok, Tok::Punct(':')) => j,
+                _ => break,
+            };
+            let c2 = match code_idx(toks, c1, -1) {
+                Some(j) => j,
+                None => break,
+            };
+            let seg = match &toks[c2].tok {
+                Tok::Ident(s) => s.clone(),
+                // `::<` turbofish or a leading `::` — not a path seg
+                _ => break,
+            };
+            path.insert(0, seg);
+            match code_idx(toks, c2, -1) {
+                Some(j) if matches!(toks[j].tok, Tok::Punct(':')) => k = j,
+                _ => break,
+            }
+        }
+    }
+
+    if called {
+        if !path.is_empty() {
+            owner.calls.push(Call {
+                kind: CallKind::Qual,
+                name: name.to_string(),
+                path,
+                line,
+                tpos: i,
+                recv_self: false,
+            });
+        } else if dotted {
+            let p2 = pi.and_then(|j| code_idx(toks, j, -1));
+            let mut recv_self =
+                matches!(p2.map(|j| &toks[j].tok), Some(Tok::Ident(w)) if w == "self");
+            if recv_self {
+                // `a.self` cannot occur, but `x.self_like` idents can't
+                // either; guard against a longer chain `y.self.f()`.
+                let p3 = p2.and_then(|j| code_idx(toks, j, -1));
+                if matches!(p3.map(|j| &toks[j].tok), Some(Tok::Punct('.'))) {
+                    recv_self = false;
+                }
+            }
+            owner.calls.push(Call {
+                kind: CallKind::Method,
+                name: name.to_string(),
+                path: Vec::new(),
+                line,
+                tpos: i,
+                recv_self,
+            });
+            if is_blocking_call(name) {
+                owner.blocking.push(BlockSite { name: name.to_string(), line, tpos: i });
+            }
+            if name == "lock" {
+                let label = receiver_chain(toks, i);
+                let binding = let_binding(toks, i);
+                owner.acquires.push(Acquire { label, line, tpos: i, end: 0, binding });
+            }
+        } else {
+            owner.calls.push(Call {
+                kind: CallKind::Bare,
+                name: name.to_string(),
+                path: Vec::new(),
+                line,
+                tpos: i,
+                recv_self: false,
+            });
+        }
+    } else if !path.is_empty() {
+        // `path::f` used as a value (fn reference)
+        owner.calls.push(Call {
+            kind: CallKind::Qual,
+            name: name.to_string(),
+            path,
+            line,
+            tpos: i,
+            recv_self: false,
+        });
+    }
+}
+
+/// Receiver idents before `.lock(`: `self.inner.lock()` → `inner`,
+/// `pending.0.lock()` → `pending.0`.  `<expr>` when the receiver is
+/// not a plain chain.
+fn receiver_chain(toks: &[Token], lock_idx: usize) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    let mut j = code_idx(toks, lock_idx, -1); // the `.`
+    while let Some(dj) = j {
+        if !matches!(toks[dj].tok, Tok::Punct('.')) {
+            break;
+        }
+        let k = match code_idx(toks, dj, -1) {
+            Some(k) => k,
+            None => break,
+        };
+        match &toks[k].tok {
+            Tok::Ident(w) => parts.insert(0, w.clone()),
+            Tok::Num(w) => parts.insert(0, w.clone()),
+            _ => break,
+        }
+        j = code_idx(toks, k, -1);
+    }
+    while parts.first().map(String::as_str) == Some("self") {
+        parts.remove(0);
+    }
+    if parts.is_empty() {
+        "<expr>".to_string()
+    } else {
+        parts.join(".")
+    }
+}
+
+/// `let [mut] NAME = ...lock()...` → `Some(NAME)`.  Scans backwards to
+/// the statement start (`;`, `{`, `}` at paren depth 0), then forward
+/// for the binding pattern.
+pub(crate) fn let_binding(toks: &[Token], lock_idx: usize) -> Option<String> {
+    let mut j = lock_idx as isize - 1;
+    let mut depth = 0usize;
+    while j >= 0 {
+        match &toks[j as usize].tok {
+            Tok::Punct(')') => depth += 1,
+            Tok::Punct('(') => {
+                depth = depth.saturating_sub(1);
+            }
+            Tok::Punct(';') | Tok::Punct('{') | Tok::Punct('}') if depth == 0 => break,
+            _ => {}
+        }
+        j -= 1;
+    }
+    let start = (j + 1) as usize;
+    let mut words: Vec<&str> = Vec::new();
+    for t in &toks[start..lock_idx] {
+        match &t.tok {
+            Tok::Ident(w) => {
+                words.push(w);
+                if words.len() >= 4 {
+                    break;
+                }
+            }
+            Tok::Punct('=') => break,
+            _ => {}
+        }
+    }
+    if words.first() == Some(&"let") {
+        words[1..].iter().find(|w| **w != "mut").map(|w| w.to_string())
+    } else {
+        None
+    }
+}
+
+/// Exclusive token index where a guard's hold ends.
+///
+/// * `let`-bound guard: the `}` closing the enclosing block, or an
+///   explicit `drop(NAME)`.
+/// * temporary guard: the first `;` at the acquisition's brace depth,
+///   or the `}` returning to (or below) it — which makes a guard in a
+///   `for`/`if let` header conservatively cover the whole body, the
+///   documented over-approximation.
+pub(crate) fn hold_end(toks: &[Token], tpos: usize, binding: Option<&str>) -> usize {
+    let n = toks.len();
+    let mut depth = 0isize;
+    let mut j = tpos + 1;
+    if let Some(bound) = binding {
+        while j < n {
+            match &toks[j].tok {
+                Tok::Punct('{') => depth += 1,
+                Tok::Punct('}') => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return j;
+                    }
+                }
+                Tok::Ident(w) if w == "drop" => {
+                    if let Some(k) = code_idx(toks, j, 1) {
+                        if matches!(toks[k].tok, Tok::Punct('(')) {
+                            if let Some(k2) = code_idx(toks, k, 1) {
+                                if matches!(&toks[k2].tok, Tok::Ident(w2) if w2 == bound) {
+                                    return j;
+                                }
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        return n;
+    }
+    while j < n {
+        match &toks[j].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                if depth <= 0 {
+                    return j;
+                }
+            }
+            Tok::Punct(';') if depth == 0 => return j,
+            _ => {}
+        }
+        j += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_of("cluster/engine.rs"), "cluster::engine");
+        assert_eq!(module_of("util/mod.rs"), "util");
+        assert_eq!(module_of("lib.rs"), "");
+        assert_eq!(module_of("bin/parsample_lint.rs"), "bin::parsample_lint");
+    }
+
+    #[test]
+    fn fn_items_and_flags() {
+        let src = r#"
+//! CONTRACT: bit-exact — whole file.
+pub fn covered() { helper(); }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { covered(); }
+}
+"#;
+        let fi = parse_items("demo.rs", src);
+        assert!(fi.file_contract);
+        let f = &fi.fns[0];
+        assert_eq!(f.name, "covered");
+        assert!(f.in_contract);
+        assert!(!f.is_test);
+        assert_eq!(f.calls.len(), 1);
+        assert_eq!(f.calls[0].name, "helper");
+        assert!(fi.fns[1].is_test);
+    }
+
+    #[test]
+    fn leaf_and_impl_capture() {
+        let src = r#"
+struct S;
+impl S {
+    // CONTRACT: bit-exact (leaf) — audited.
+    fn stop(&self) { self.go(); other.run(); }
+}
+impl Clone for S {
+    fn clone(&self) -> S { S }
+}
+"#;
+        let fi = parse_items("m.rs", src);
+        let stop = &fi.fns[0];
+        assert!(stop.is_leaf && stop.in_contract);
+        assert_eq!(stop.impl_of.as_deref(), Some("S"));
+        assert!(stop.calls[0].recv_self);
+        assert!(!stop.calls[1].recv_self);
+        assert_eq!(fi.fns[1].impl_of.as_deref(), Some("S"));
+    }
+
+    #[test]
+    fn lock_sites_and_hold_regions() {
+        let src = r#"
+fn f(m: &std::sync::Mutex<u32>) {
+    let g = m.lock().expect("poisoned");
+    let x = *g;
+    drop(g);
+    let _ = x;
+}
+fn temp(m: &std::sync::Mutex<u32>) {
+    *m.lock().expect("poisoned") += 1;
+    noop();
+}
+"#;
+        let fi = parse_items("m.rs", src);
+        let f = &fi.fns[0];
+        assert_eq!(f.acquires.len(), 1);
+        assert_eq!(f.acquires[0].label, "m");
+        assert_eq!(f.acquires[0].binding.as_deref(), Some("g"));
+        // hold ends at drop(g), before `let _ = x;`
+        assert!(matches!(&fi.toks[f.acquires[0].end].tok, Tok::Ident(w) if w == "drop"));
+        let t = &fi.fns[1];
+        assert_eq!(t.acquires[0].binding, None);
+        // temporary hold ends at the statement `;`
+        assert!(matches!(fi.toks[t.acquires[0].end].tok, Tok::Punct(';')));
+    }
+
+    #[test]
+    fn guard_helper_detected() {
+        let src = "fn lock<'a>(m: &'a Mutex<u32>) -> MutexGuard<'a, u32> { m.lock().unwrap() }";
+        let fi = parse_items("m.rs", src);
+        assert!(fi.fns[0].returns_guard);
+    }
+
+    #[test]
+    fn std_method_tables_sorted() {
+        assert!(STD_METHODS.windows(2).all(|w| w[0] < w[1]));
+        assert!(BLOCKING_CALLS.windows(2).all(|w| w[0] < w[1]));
+        assert!(is_std_method("shutdown"));
+        assert!(!is_std_method("plan"));
+        assert!(is_blocking_call("recv"));
+    }
+}

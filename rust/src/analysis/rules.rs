@@ -61,7 +61,7 @@ pub fn check(path: &str, src: &str) -> Vec<Finding> {
     let norm = path.replace('\\', "/");
     let toks = tokenize(src);
     let mut out = Vec::new();
-    main_pass(&norm, &toks, &mut out);
+    main_pass(&norm, &toks, &mut out, false);
     if CONTRACT_REQUIRED.iter().any(|s| norm.ends_with(s)) && !has_marker(&toks) {
         out.push(Finding {
             rule: rule_id::CONTRACT_ANNOTATION,
@@ -73,6 +73,22 @@ pub fn check(path: &str, src: &str) -> Vec<Finding> {
     if norm.ends_with("server/protocol.rs") {
         protocol_pass(&norm, &toks, &mut out);
     }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// The reduced rule set for auxiliary trees (`benches/`, `examples/`):
+/// `unsafe`-safety, condvar re-check, and poisoning discipline run in
+/// full; panic hygiene is relaxed to "give your panics context" —
+/// bare `.unwrap()` and `panic!`-family macros are findings, while
+/// `.expect("context")` is the sanctioned idiom.  Contract rules do
+/// not apply (benches measure; they are not on the determinism
+/// contract), and neither does the protocol pass.
+pub fn check_aux(path: &str, src: &str) -> Vec<Finding> {
+    let norm = path.replace('\\', "/");
+    let toks = tokenize(src);
+    let mut out = Vec::new();
+    main_pass(&norm, &toks, &mut out, true);
     out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     out
 }
@@ -150,12 +166,13 @@ fn scan_attribute(toks: &[Token], i: usize) -> (usize, bool) {
     (j, bare_test || cfg_test)
 }
 
-fn main_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>) {
-    let server_scope = ["/server/", "/coordinator/"]
-        .iter()
-        .any(|s| norm.contains(s))
-        || norm.starts_with("server/")
-        || norm.starts_with("coordinator/");
+fn main_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>, aux: bool) {
+    let server_scope = !aux
+        && (["/server/", "/coordinator/"]
+            .iter()
+            .any(|s| norm.contains(s))
+            || norm.starts_with("server/")
+            || norm.starts_with("coordinator/"));
     let mut stack: Vec<Block> = Vec::new();
     let mut pending_test = false;
     let mut pending_contract = false;
@@ -263,6 +280,16 @@ fn main_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>) {
                                     .to_string(),
                             });
                         }
+                        if aux && !in_test && dotted && called {
+                            out.push(Finding {
+                                rule: rule_id::NO_PANIC,
+                                file: norm.to_string(),
+                                line,
+                                message: "bare `.unwrap()` in bench/example code \
+                                          (chain `.expect(\"context\")` instead)"
+                                    .to_string(),
+                            });
+                        }
                     }
                     "expect" => {
                         if server_scope && !in_test && dotted && called {
@@ -296,10 +323,21 @@ fn main_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>) {
                                 ),
                             });
                         }
+                        if aux && !in_test && is_punct(next_code(toks, i), '!') {
+                            out.push(Finding {
+                                rule: rule_id::NO_PANIC,
+                                file: norm.to_string(),
+                                line,
+                                message: format!(
+                                    "`{w}!` in bench/example code \
+                                     (fail through `.expect(\"context\")` instead)"
+                                ),
+                            });
+                        }
                     }
                     _ => {}
                 }
-                if in_contract && !in_test {
+                if in_contract && !in_test && !aux {
                     if FORBIDDEN_IN_CONTRACT.contains(&w.as_str()) {
                         out.push(Finding {
                             rule: rule_id::CONTRACT_FORBIDDEN,

@@ -1,39 +1,69 @@
 //! `parsample-lint` — the invariant linter, run as a blocking CI gate.
 //!
 //! ```text
-//! cargo run --bin parsample-lint                      # lint src/ with src/analysis/allow.toml
-//! cargo run --bin parsample-lint -- --root src --out LINT_report.jsonl
+//! cargo run --bin parsample-lint                      # lint src/ (+ sibling benches/, examples/)
+//! cargo run --bin parsample-lint -- --root src --out LINT_report.jsonl \
+//!     --graph-out GRAPH_report.jsonl
 //! ```
 //!
-//! Exit codes: `0` clean, `1` findings (or stale allow entries), `2`
-//! usage / IO / allowlist-parse error.  Output is reason-tagged JSONL
-//! on stdout (`lint-finding`, `lint-allowed`, `lint-summary`) —
+//! Exit codes: `0` clean, `1` findings (or stale allow/locks entries),
+//! `2` usage / IO / allowlist-parse error.  Output is reason-tagged
+//! JSONL on stdout (`lint-finding`, `lint-allowed`, `lint-summary`) —
 //! machine-readable end to end, same convention as the distributed-fit
-//! event stream.
+//! event stream.  `--graph-out` additionally dumps the crate-wide call
+//! graph and observed lock nestings (`graph-call-edge`,
+//! `graph-lock-edge`, `graph-summary`) the cross-file rules were
+//! derived from, so CI archives the evidence next to the verdict.
+//!
+//! When `--root` ends in `src`, the sibling `benches/` and
+//! `examples/` trees are swept too — plus the workspace-level
+//! `../examples/` this repo actually uses (the reduced aux rule set:
+//! unsafe-safety, condvar, poisoning, and panic hygiene); `--aux DIR`
+//! adds more trees, `--no-default-aux` disables the defaults.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use parsample::analysis::{emit_jsonl, lint_tree, Allowlist};
+use parsample::analysis::{
+    emit_graph_jsonl, emit_jsonl, lint_tree_full, Allowlist, LockRegistry,
+};
 use parsample::telemetry::events::EventLog;
 
 struct Args {
     root: PathBuf,
     allow: Option<PathBuf>,
     out: Option<PathBuf>,
+    graph_out: Option<PathBuf>,
+    locks: Option<PathBuf>,
+    aux: Vec<PathBuf>,
+    no_default_aux: bool,
 }
 
 fn usage() -> &'static str {
     "usage: parsample-lint [--root DIR] [--allow FILE|none] [--out FILE]\n\
+     \x20                     [--graph-out FILE] [--locks FILE|none]\n\
+     \x20                     [--aux DIR ...] [--no-default-aux]\n\
      \n\
-     --root DIR     tree to lint (default: src, relative to CWD)\n\
-     --allow FILE   allowlist (default: src/analysis/allow.toml; `none` disables)\n\
-     --out FILE     also write the JSONL report to FILE"
+     --root DIR       tree to lint (default: src, relative to CWD)\n\
+     --allow FILE     allowlist (default: src/analysis/allow.toml; `none` disables)\n\
+     --out FILE       also write the JSONL report to FILE\n\
+     --graph-out FILE write the call/lock graph as JSONL to FILE\n\
+     --locks FILE     lock-order registry (default: ROOT/analysis/locks.toml;\n\
+     \x20                `none` for an empty registry)\n\
+     --aux DIR        also sweep DIR under the reduced bench/example rules\n\
+     --no-default-aux don't auto-sweep sibling benches/ and examples/"
 }
 
 fn parse_args(argv: &[String]) -> Result<Args, String> {
-    let mut args =
-        Args { root: PathBuf::from("src"), allow: None, out: None };
+    let mut args = Args {
+        root: PathBuf::from("src"),
+        allow: None,
+        out: None,
+        graph_out: None,
+        locks: None,
+        aux: Vec::new(),
+        no_default_aux: false,
+    };
     let mut it = argv.iter();
     while let Some(flag) = it.next() {
         let mut val = |name: &str| {
@@ -43,11 +73,25 @@ fn parse_args(argv: &[String]) -> Result<Args, String> {
             "--root" => args.root = PathBuf::from(val("--root")?),
             "--allow" => args.allow = Some(PathBuf::from(val("--allow")?)),
             "--out" => args.out = Some(PathBuf::from(val("--out")?)),
+            "--graph-out" => args.graph_out = Some(PathBuf::from(val("--graph-out")?)),
+            "--locks" => args.locks = Some(PathBuf::from(val("--locks")?)),
+            "--aux" => args.aux.push(PathBuf::from(val("--aux")?)),
+            "--no-default-aux" => args.no_default_aux = true,
             "--help" | "-h" => return Err(String::new()),
             other => return Err(format!("unknown flag `{other}`")),
         }
     }
     Ok(args)
+}
+
+/// Write the JSONL `emit` produces to `path` — the same lines that
+/// went to stdout, archived for CI.
+fn write_report(path: &PathBuf, emit: impl Fn(&EventLog)) -> Result<(), String> {
+    let log = EventLog::capture();
+    emit(&log);
+    let mut text = log.captured().join("\n");
+    text.push('\n');
+    std::fs::write(path, text).map_err(|e| format!("writing {}: {e}", path.display()))
 }
 
 fn main() -> ExitCode {
@@ -86,7 +130,30 @@ fn main() -> ExitCode {
             }
         }
     };
-    let report = match lint_tree(&args.root, &allow) {
+    let registry = match &args.locks {
+        Some(p) if p.as_os_str() == "none" => Some(LockRegistry::empty()),
+        Some(p) => match LockRegistry::load(p, &p.to_string_lossy().replace('\\', "/")) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!("parsample-lint: locks registry: {e}");
+                return ExitCode::from(2);
+            }
+        },
+        None => None, // lint_tree_full auto-loads ROOT/analysis/locks.toml
+    };
+    let mut aux = args.aux.clone();
+    if !args.no_default_aux && args.root.file_name().is_some_and(|n| n == "src") {
+        let parent = args.root.parent().map(PathBuf::from).unwrap_or_default();
+        aux.push(parent.join("benches"));
+        aux.push(parent.join("examples"));
+        // this workspace keeps examples/ one level above the crate
+        // (Cargo.toml: `path = "../examples/..."`); missing dirs are
+        // skipped, so probing both spots is harmless elsewhere
+        if let Some(grand) = parent.parent() {
+            aux.push(grand.join("examples"));
+        }
+    }
+    let report = match lint_tree_full(&args.root, &aux, &allow, registry) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("parsample-lint: {e}");
@@ -95,12 +162,14 @@ fn main() -> ExitCode {
     };
     emit_jsonl(&report, &EventLog::stdout());
     if let Some(out) = &args.out {
-        let log = EventLog::capture();
-        emit_jsonl(&report, &log);
-        let mut text = log.captured().join("\n");
-        text.push('\n');
-        if let Err(e) = std::fs::write(out, text) {
-            eprintln!("parsample-lint: writing {}: {e}", out.display());
+        if let Err(e) = write_report(out, |log| emit_jsonl(&report, log)) {
+            eprintln!("parsample-lint: {e}");
+            return ExitCode::from(2);
+        }
+    }
+    if let Some(gout) = &args.graph_out {
+        if let Err(e) = write_report(gout, |log| emit_graph_jsonl(&report, log)) {
+            eprintln!("parsample-lint: {e}");
             return ExitCode::from(2);
         }
     }

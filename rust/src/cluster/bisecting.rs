@@ -37,6 +37,11 @@ pub struct BisectingKMeans {
     /// Tile kernel for the per-split Lloyd loops and the final inertia
     /// sweep.
     pub kernel: KernelMode,
+    /// k-means‖ oversampling factor ℓ for splits that resolve to
+    /// k-means‖.  Default [`crate::cluster::init_parallel::OVERSAMPLE`].
+    pub init_oversample: usize,
+    /// k-means‖ sampling-round override; `None` = automatic schedule.
+    pub init_rounds: Option<usize>,
 }
 
 impl Default for BisectingKMeans {
@@ -50,6 +55,8 @@ impl Default for BisectingKMeans {
             workers: 1,
             bounds: BoundsMode::Hamerly,
             kernel: KernelMode::session_default(),
+            init_oversample: crate::cluster::init_parallel::OVERSAMPLE,
+            init_rounds: None,
         }
     }
 }
@@ -67,6 +74,11 @@ impl BisectingKMeans {
         self.bounds = opts.bounds;
         self.kernel = opts.kernel;
         self
+    }
+
+    /// The k-means‖ knobs as one [`crate::cluster::InitParams`].
+    pub fn init_params(&self) -> crate::cluster::InitParams {
+        crate::cluster::InitParams { oversample: self.init_oversample, rounds: self.init_rounds }
     }
 
     pub fn run(&self, points: &[f32], dims: usize, k: usize) -> Result<KMeansResult> {
@@ -111,6 +123,8 @@ impl BisectingKMeans {
                     workers: self.workers,
                     bounds: self.bounds,
                     kernel: self.kernel,
+                    init_oversample: self.init_oversample,
+                    init_rounds: self.init_rounds,
                 };
                 let r = lloyd(&sub, dims, &cfg)?;
                 if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {

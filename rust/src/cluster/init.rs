@@ -123,6 +123,32 @@ pub fn initial_centers_with(
     seed: u64,
     opts: EngineOpts,
 ) -> Result<Vec<f32>> {
+    initial_centers_with_params(
+        points,
+        dims,
+        k,
+        method,
+        seed,
+        opts,
+        super::init_parallel::InitParams::default(),
+    )
+}
+
+/// [`initial_centers_with`] plus explicit k-means‖ knobs
+/// ([`super::init_parallel::InitParams`]): oversampling factor ℓ and
+/// the sampling-round override.  Methods other than k-means‖ ignore
+/// them; the defaults are bit-identical to the knobless entry points
+/// (pinned by `rust/tests/init_parity.rs`).
+pub fn initial_centers_with_params(
+    points: &[f32],
+    dims: usize,
+    k: usize,
+    method: InitMethod,
+    seed: u64,
+    opts: EngineOpts,
+    params: super::init_parallel::InitParams,
+) -> Result<Vec<f32>> {
+    params.validate()?;
     let m = points.len() / dims;
     if k == 0 {
         return Err(Error::Config("k must be > 0".into()));
@@ -184,10 +210,12 @@ pub fn initial_centers_with(
         }
         InitMethod::KMeansParallel => {
             let mut src = crate::data::source::SliceSource::new(points, dims)?;
-            super::init_parallel::initial_centers_source(&mut src, k, method, seed, opts)
+            super::init_parallel::initial_centers_source_params(
+                &mut src, k, method, seed, opts, params,
+            )
         }
         InitMethod::Auto => {
-            initial_centers_with(points, dims, k, method.resolve(m, k), seed, opts)
+            initial_centers_with_params(points, dims, k, method.resolve(m, k), seed, opts, params)
         }
     }
 }

@@ -40,8 +40,58 @@ use crate::util::rng::Pcg32;
 
 /// Oversampling factor ℓ: each sampling round draws an expected (and
 /// capped) `OVERSAMPLE · k` candidates — Bahmani et al.'s practical
-/// ℓ = 2k setting.
+/// ℓ = 2k setting.  The default for [`InitParams::oversample`].
 pub const OVERSAMPLE: usize = 2;
+
+/// Cap on an explicit [`InitParams::rounds`] override: keeps total
+/// oversampling work bounded (each round costs one streamed pass and
+/// up to `ℓ·k` new candidates) and stays far inside the per-round
+/// stream-id space of [`block_stream`].
+pub const MAX_INIT_ROUNDS: usize = 16;
+
+/// Tunable knobs of the k-means‖ oversampling phase.  The defaults
+/// reproduce the crate's long-standing behavior bit-for-bit (pinned by
+/// `rust/tests/init_parity.rs`): ℓ = [`OVERSAMPLE`] and the
+/// data-sized automatic round count of [`sampling_rounds`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InitParams {
+    /// Oversampling factor ℓ: expected (and capped) `ℓ·k` candidate
+    /// draws per sampling round.  Must be ≥ 1.
+    pub oversample: usize,
+    /// Explicit sampling-round count, `None` for the automatic
+    /// ⌈log₂ M⌉/4 ∈ [2, 6] of [`sampling_rounds`].  An override must
+    /// lie in `1..=`[`MAX_INIT_ROUNDS`].
+    pub rounds: Option<usize>,
+}
+
+impl Default for InitParams {
+    fn default() -> Self {
+        InitParams { oversample: OVERSAMPLE, rounds: None }
+    }
+}
+
+impl InitParams {
+    /// Reject out-of-range knobs with a [`Error::Config`].
+    pub fn validate(&self) -> Result<()> {
+        if self.oversample == 0 {
+            return Err(Error::Config("init_oversample must be > 0".into()));
+        }
+        if let Some(r) = self.rounds {
+            if r == 0 || r > MAX_INIT_ROUNDS {
+                return Err(Error::Config(format!(
+                    "init_rounds must be in 1..={MAX_INIT_ROUNDS} (got {r})"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The round count for an M-row input: the override when set, else
+    /// the automatic schedule.
+    pub fn rounds_for(&self, m: usize) -> usize {
+        self.rounds.unwrap_or_else(|| sampling_rounds(m))
+    }
+}
 
 /// Master RNG stream for k-means‖: the first-center draw and the
 /// weighted re-cluster.  Per-point sampling uses [`block_stream`]
@@ -91,6 +141,22 @@ pub fn initial_centers_source(
     seed: u64,
     opts: EngineOpts,
 ) -> Result<Vec<f32>> {
+    initial_centers_source_params(src, k, method, seed, opts, InitParams::default())
+}
+
+/// [`initial_centers_source`] with explicit k-means‖ knobs.  The knobs
+/// only shape the candidate set (how much oversampling, how many
+/// streamed passes); every other method ignores them.  Defaults are
+/// bit-identical to the knobless entry point.
+pub fn initial_centers_source_params(
+    src: &mut dyn DataSource,
+    k: usize,
+    method: InitMethod,
+    seed: u64,
+    opts: EngineOpts,
+    params: InitParams,
+) -> Result<Vec<f32>> {
+    params.validate()?;
     if k == 0 {
         return Err(Error::Config("k must be > 0".into()));
     }
@@ -125,10 +191,10 @@ pub fn initial_centers_source(
             let ds = collect_dataset(src)?;
             crate::cluster::init::initial_centers_with(ds.as_slice(), dims, k, method, seed, opts)
         }
-        InitMethod::KMeansParallel => kmeans_parallel(src, dims, k, seed, opts),
+        InitMethod::KMeansParallel => kmeans_parallel(src, dims, k, seed, opts, params),
         InitMethod::Auto => {
             let m = source_rows(src)?;
-            initial_centers_source(src, k, method.resolve(m, k), seed, opts)
+            initial_centers_source_params(src, k, method.resolve(m, k), seed, opts, params)
         }
     }
 }
@@ -144,9 +210,22 @@ pub fn oversample(
     seed: u64,
     opts: EngineOpts,
 ) -> Result<Candidates> {
+    oversample_params(src, k, seed, opts, InitParams::default())
+}
+
+/// [`oversample`] with explicit k-means‖ knobs — the candidate-set
+/// counterpart of [`initial_centers_source_params`].
+pub fn oversample_params(
+    src: &mut dyn DataSource,
+    k: usize,
+    seed: u64,
+    opts: EngineOpts,
+    params: InitParams,
+) -> Result<Candidates> {
+    params.validate()?;
     let dims = src.dims();
     let mut master = Pcg32::new(seed, STREAM_MASTER);
-    oversample_with(src, dims, k, seed, opts, &mut master)
+    oversample_with(src, dims, k, seed, opts, params, &mut master)
 }
 
 fn kmeans_parallel(
@@ -155,9 +234,10 @@ fn kmeans_parallel(
     k: usize,
     seed: u64,
     opts: EngineOpts,
+    params: InitParams,
 ) -> Result<Vec<f32>> {
     let mut master = Pcg32::new(seed, STREAM_MASTER);
-    let cands = oversample_with(src, dims, k, seed, opts, &mut master)?;
+    let cands = oversample_with(src, dims, k, seed, opts, params, &mut master)?;
     let engine = opts.build_engine();
     weighted_plusplus(&cands.rows, dims, k, &cands.weights, &mut master, &engine)
 }
@@ -168,6 +248,7 @@ fn oversample_with(
     k: usize,
     seed: u64,
     opts: EngineOpts,
+    params: InitParams,
     master: &mut Pcg32,
 ) -> Result<Candidates> {
     let m = source_rows(src)?;
@@ -177,8 +258,8 @@ fn oversample_with(
     let engine = opts.build_engine();
     let pblock = engine.point_block();
     let slab_rows = engine.stream_slab_rows();
-    let lk = OVERSAMPLE * k;
-    let rounds = sampling_rounds(m);
+    let lk = params.oversample * k;
+    let rounds = params.rounds_for(m);
 
     let c0 = master.below(m);
     let mut cand_rows = gather_rows(src, dims, slab_rows, &[c0])?;

@@ -10,7 +10,8 @@
 //! empty clusters keeping their previous center.
 
 use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
-use crate::cluster::init::{initial_centers_with, InitMethod};
+use crate::cluster::init::{initial_centers_with_params, InitMethod};
+use crate::cluster::init_parallel::InitParams;
 use crate::error::{Error, Result};
 use crate::kernel::KernelMode;
 
@@ -38,6 +39,12 @@ pub struct KMeansConfig {
     /// `PARSAMPLE_KERNEL` overrides it; `Wide` is bit-identical, `Auto`
     /// picks by detected CPU features).
     pub kernel: KernelMode,
+    /// k-means‖ oversampling factor ℓ (only read when `init` resolves
+    /// to k-means‖).  Default [`crate::cluster::init_parallel::OVERSAMPLE`].
+    pub init_oversample: usize,
+    /// k-means‖ sampling-round override; `None` = the automatic
+    /// ⌈log₂ M⌉/4 ∈ [2, 6] schedule.
+    pub init_rounds: Option<usize>,
 }
 
 impl Default for KMeansConfig {
@@ -51,6 +58,8 @@ impl Default for KMeansConfig {
             workers: 1,
             bounds: BoundsMode::Hamerly,
             kernel: KernelMode::session_default(),
+            init_oversample: crate::cluster::init_parallel::OVERSAMPLE,
+            init_rounds: None,
         }
     }
 }
@@ -72,6 +81,11 @@ impl KMeansConfig {
         self
     }
 
+    /// The k-means‖ knobs as one [`InitParams`].
+    pub fn init_params(&self) -> InitParams {
+        InitParams { oversample: self.init_oversample, rounds: self.init_rounds }
+    }
+
     /// Config matching the AOT device executables: FirstK init, fixed
     /// iteration count, no early stop.  Bounds stay on — pruning is
     /// bit-identical, so device parity is unaffected.  The kernel is
@@ -88,6 +102,8 @@ impl KMeansConfig {
             workers: 1,
             bounds: BoundsMode::Hamerly,
             kernel: KernelMode::Scalar,
+            init_oversample: crate::cluster::init_parallel::OVERSAMPLE,
+            init_rounds: None,
         }
     }
 }
@@ -119,8 +135,15 @@ pub fn lloyd(points: &[f32], dims: usize, cfg: &KMeansConfig) -> Result<KMeansRe
     if cfg.k == 0 || cfg.k > m {
         return Err(Error::Config(format!("k={} invalid for {m} points", cfg.k)));
     }
-    let centers =
-        initial_centers_with(points, dims, cfg.k, cfg.init, cfg.seed, cfg.engine_opts())?;
+    let centers = initial_centers_with_params(
+        points,
+        dims,
+        cfg.k,
+        cfg.init,
+        cfg.seed,
+        cfg.engine_opts(),
+        cfg.init_params(),
+    )?;
     lloyd_from_with(
         points,
         dims,

@@ -20,8 +20,8 @@
 //!   (pinned by `rust/tests/stream_parity.rs`).
 
 use crate::cluster::engine::{BoundsMode, Engine, EngineOpts};
-use crate::cluster::init::{initial_centers_with, InitMethod};
-use crate::cluster::init_parallel::initial_centers_source;
+use crate::cluster::init::{initial_centers_with_params, InitMethod};
+use crate::cluster::init_parallel::{initial_centers_source_params, InitParams};
 use crate::cluster::kmeans::KMeansResult;
 use crate::cluster::Clusterer;
 use crate::data::source::{for_each_slab, ChunkCursor, DataSource};
@@ -70,6 +70,11 @@ pub struct MiniBatchKMeans {
     pub bounds: BoundsMode,
     /// Tile kernel for the final engine sweep.
     pub kernel: KernelMode,
+    /// k-means‖ oversampling factor ℓ (only read when `init` resolves
+    /// to k-means‖).  Default [`crate::cluster::init_parallel::OVERSAMPLE`].
+    pub init_oversample: usize,
+    /// k-means‖ sampling-round override; `None` = automatic schedule.
+    pub init_rounds: Option<usize>,
 }
 
 impl Default for MiniBatchKMeans {
@@ -83,6 +88,8 @@ impl Default for MiniBatchKMeans {
             workers: 1,
             bounds: BoundsMode::Hamerly,
             kernel: KernelMode::session_default(),
+            init_oversample: crate::cluster::init_parallel::OVERSAMPLE,
+            init_rounds: None,
         }
     }
 }
@@ -100,6 +107,11 @@ impl MiniBatchKMeans {
         self.bounds = opts.bounds;
         self.kernel = opts.kernel;
         self
+    }
+
+    /// The k-means‖ knobs as one [`InitParams`].
+    pub fn init_params(&self) -> InitParams {
+        InitParams { oversample: self.init_oversample, rounds: self.init_rounds }
     }
 
     /// Streaming fit: consume a [`DataSource`] in consecutive
@@ -142,7 +154,14 @@ impl MiniBatchKMeans {
         // whole stream has fewer than k.
         let resolved = self.init.resolve(src.len_hint().unwrap_or(0), k);
         let mut centers = if resolved == InitMethod::KMeansParallel {
-            initial_centers_source(src, k, resolved, self.seed, self.engine_opts())?
+            initial_centers_source_params(
+                src,
+                k,
+                resolved,
+                self.seed,
+                self.engine_opts(),
+                self.init_params(),
+            )?
         } else {
             src.reset()?;
             let pool_rows = self.batch_size.max(k);
@@ -152,7 +171,15 @@ impl MiniBatchKMeans {
             if pool_m < k {
                 return Err(Error::Config(format!("k={k} invalid for {pool_m} points")));
             }
-            initial_centers_with(&pool, dims, k, resolved, self.seed, self.engine_opts())?
+            initial_centers_with_params(
+                &pool,
+                dims,
+                k,
+                resolved,
+                self.seed,
+                self.engine_opts(),
+                self.init_params(),
+            )?
         };
 
         // 2. batch rounds: consecutive windows of exactly batch_size
@@ -211,7 +238,15 @@ impl MiniBatchKMeans {
         let b = self.batch_size.min(m);
         let mut rng = Pcg32::new(self.seed, 0xba7c);
         let mut centers =
-            initial_centers_with(points, dims, k, self.init, self.seed, self.engine_opts())?;
+            initial_centers_with_params(
+                points,
+                dims,
+                k,
+                self.init,
+                self.seed,
+                self.engine_opts(),
+                self.init_params(),
+            )?;
         let mut per_center_counts = vec![0u64; k];
 
         for _ in 0..self.iters {

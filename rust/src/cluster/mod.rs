@@ -21,8 +21,8 @@ pub use engine::{
 };
 pub use bisecting::BisectingKMeans;
 pub use minibatch::{MiniBatchKMeans, StreamFitResult};
-pub use init::{initial_centers, initial_centers_with, InitMethod};
-pub use init_parallel::initial_centers_source;
+pub use init::{initial_centers, initial_centers_with, initial_centers_with_params, InitMethod};
+pub use init_parallel::{initial_centers_source, initial_centers_source_params, InitParams};
 pub use kmeans::{lloyd, KMeansConfig, KMeansResult};
 
 use crate::data::Dataset;

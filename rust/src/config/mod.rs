@@ -220,6 +220,15 @@ impl AppConfig {
                 self.pipeline.init =
                     InitMethod::parse(value.as_str().ok_or_else(|| bad("string"))?)?;
             }
+            "pipeline.init_oversample" => {
+                self.pipeline.init_oversample =
+                    value.as_usize().ok_or_else(|| bad("usize"))?;
+            }
+            "pipeline.init_rounds" => {
+                // 0 keeps the automatic data-sized round schedule
+                let r = value.as_usize().ok_or_else(|| bad("usize"))?;
+                self.pipeline.init_rounds = if r == 0 { None } else { Some(r) };
+            }
             "pipeline.seed" => {
                 self.pipeline.seed = value.as_usize().ok_or_else(|| bad("usize"))? as u64;
             }
@@ -381,6 +390,8 @@ mod tests {
             bounds = "off"
             kernel = "wide"
             init = "kmeans||"
+            init_oversample = 4
+            init_rounds = 3
             [server]
             queue_depth = 3
             model_cap = 5
@@ -395,6 +406,8 @@ mod tests {
         assert_eq!(cfg.pipeline.bounds, BoundsMode::Off);
         assert_eq!(cfg.pipeline.kernel, KernelMode::Wide);
         assert_eq!(cfg.pipeline.init, InitMethod::KMeansParallel);
+        assert_eq!(cfg.pipeline.init_oversample, 4);
+        assert_eq!(cfg.pipeline.init_rounds, Some(3));
         assert_eq!(cfg.queue_depth, 3);
         assert_eq!(cfg.model_cap, 5);
         assert_eq!(cfg.snapshot_dir, Some(PathBuf::from("/tmp/snaps")));
@@ -404,6 +417,9 @@ mod tests {
         assert!(AppConfig::from_table(&t).is_err());
         let t = parse_toml_lite("[pipeline]\ninit = \"sobol\"\n").unwrap();
         assert!(AppConfig::from_table(&t).is_err());
+        // rounds = 0 is the spelled-out "automatic" default
+        let t = parse_toml_lite("[pipeline]\ninit_rounds = 0\n").unwrap();
+        assert_eq!(AppConfig::from_table(&t).unwrap().pipeline.init_rounds, None);
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //! 4. **pad** points with weight-0 rows and center slots with a far
 //!    sentinel (never wins an argmin against real data),
 //! 5. **unpack** device outputs back to per-group local centers.
+//!
+//! CONTRACT: bit-exact — routing, packing, and unpacking are pure
+//! functions of (manifest, group sizes); padded slots carry weight 0
+//! so batch shape never changes numeric output.
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};

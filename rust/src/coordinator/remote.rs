@@ -178,6 +178,12 @@ pub fn remote_local_stage(
 
 /// Drive the worker pool to resolution: every dispatch either has a
 /// remote [`DeviceOutput`] or is marked (`None`) for local fallback.
+// CONTRACT: bit-exact (leaf) — audited boundary: scheduling, retries,
+// and wall-clock backoff are timing-dependent, but each slot of the
+// returned vec is either the worker result for that dispatch index
+// (bit-identical to the local computation by the parity contract) or
+// `None`; WHICH worker computed it and WHEN can never leak into the
+// merge, which walks slots in index order.
 fn run_pool(cfg: &RemoteConfig, dispatches: &[Dispatch]) -> Vec<Option<DeviceOutput>> {
     let w = cfg.workers.len();
     if w == 0 || dispatches.is_empty() {

@@ -9,6 +9,10 @@
 //!   points, 7 attributes, 3 balanced classes).  Standard k-means
 //!   lands at ~89 % accuracy on it, matching the real dataset's regime
 //!   (187/210 in the paper).  Substitution documented in DESIGN.md §3.
+//!
+//! CONTRACT: bit-exact — Iris is embedded verbatim and the Seeds
+//! stand-in is regenerated from a fixed seed; `by_name` is a static
+//! match, so every built-in load is bit-identical run to run.
 
 use crate::data::loader::parse_csv;
 use crate::data::Dataset;

@@ -1,6 +1,9 @@
 //! The core `Dataset` container: a dense row-major f32 matrix with
 //! optional ground-truth labels (needed for the paper's Table-1
 //! "correctly clustered" counts).
+//!
+//! CONTRACT: bit-exact — a dense matrix with index access only;
+//! reached by every contract region that touches rows.
 
 use crate::error::{Error, Result};
 

@@ -1,5 +1,9 @@
 //! Dataset I/O: CSV (with optional trailing label column) and a raw
 //! little-endian f32 binary format for large synthetic workloads.
+//!
+//! CONTRACT: bit-exact — CSV and binary decoding are pure functions
+//! of the bytes read; row order is the file order, and all widths are
+//! explicit little-endian, never platform-dependent.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};

@@ -35,6 +35,10 @@
 //! size* — `rust/tests/stream_parity.rs` pins streaming fit/predict
 //! bit-identical to the resident paths for every source kind, chunk
 //! size, and [`crate::cluster::EngineOpts`] setting.
+//!
+//! CONTRACT: bit-exact — chunk boundaries and row order are fixed
+//! by the source definition, never by timing; the streaming seeding
+//! path (`init_parallel`) reaches every impl in this file.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};

@@ -186,12 +186,43 @@
 //!   encode fn, and named roundtrip tests that exist
 //!   (`protocol-coverage`).
 //!
+//! The per-file rules above are joined by three **whole-crate** rules
+//! that walk the item-level call graph the linter builds across every
+//! `.rs` file in the tree ([`analysis::GraphData`], exportable as
+//! JSONL via `parsample-lint --graph-out`):
+//!
+//! * **Determinism taint** (`contract-taint`) — the bit-exact contract
+//!   is transitive: every fn *reachable* from a `CONTRACT: bit-exact`
+//!   region must itself sit in a covered region.  A callee that is
+//!   deliberately outside the contract (telemetry, error formatting)
+//!   is marked at its definition with `// CONTRACT: bit-exact (leaf)`,
+//!   which sanctions the call edge and stops the walk — the leaf's own
+//!   callees are not visited.  Unmarked reachable fns are findings at
+//!   their definition site, with the offending call path in the
+//!   message.
+//! * **Lock order** (`lock-order`) — nested `.lock()` acquisitions are
+//!   collected into a static lock graph (labels are
+//!   `module::path/receiver.field`).  Every observed ordering must be
+//!   declared in the checked-in registry
+//!   `rust/src/analysis/locks.toml` (`[[order]]` entries with `first`,
+//!   `then`, and a mandatory `reason`); undeclared edges, cycles among
+//!   declared-or-observed edges, and stale registry entries all fail
+//!   the gate.
+//! * **Blocking under lock** (`blocking-under-lock`) — no
+//!   `recv`/`join`/`sleep`/file- or socket-I/O while a `MutexGuard` is
+//!   live, including interprocedurally: a fn that blocks internally is
+//!   a finding when called with a guard held.
+//!
 //! Exceptions go through `src/analysis/allow.toml`: narrowest possible
 //! match, mandatory `reason`, and stale entries fail the build
 //! (`unused-allow`) — the process is documented at the top of that
-//! file.  Findings stream as reason-tagged JSONL (`lint-finding`,
-//! `lint-allowed`, `lint-summary`) via [`telemetry::events::EventLog`],
-//! and CI archives the report as an artifact.
+//! file.  Lock-order exceptions are *not* allowlisted; they are
+//! declared orderings in `locks.toml`, so the registry stays the
+//! single source of truth for the crate's lock hierarchy.  Findings
+//! stream as reason-tagged JSONL (`lint-finding`, `lint-allowed`,
+//! `lint-summary`) via [`telemetry::events::EventLog`], and CI
+//! archives the report — plus the call/lock graph
+//! (`GRAPH_report.jsonl`) — as artifacts.
 
 pub mod analysis;
 pub mod cluster;

@@ -16,7 +16,7 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use parsample::cluster::{BoundsMode, EngineOpts, InitMethod};
+use parsample::cluster::{BoundsMode, EngineOpts, InitMethod, InitParams};
 use parsample::config::AppConfig;
 use parsample::coordinator::SchedulerConfig;
 use parsample::data::source::{open_path_source, DataSource};
@@ -73,9 +73,11 @@ fn print_usage() {
          \x20           [--groups G] [--compression C] [--backend native|pjrt] [--workers W]\n\
          \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--artifacts DIR]\n\
          \x20           [--init firstk|random|kmeans++|kmeans|||auto] [--seed S]\n\
+         \x20           [--init-oversample L] [--init-rounds R]\n\
          \x20           [--config cfg.toml] [--eval] [--out FILE] [--join H:P,...]\n\
          \x20 baseline  --data ... --k K [--iters N] [--seed S] [--workers W]\n\
-         \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--init ...] [--eval]\n\
+         \x20           [--bounds off|hamerly] [--kernel scalar|wide|auto] [--init ...]\n\
+         \x20           [--init-oversample L] [--init-rounds R] [--eval]\n\
          \x20           traditional k-means (single Lloyd loop on the blocked engine)\n\
          \x20 fit       --data ... --k K --out MODEL.json [--algo kmeans|minibatch|bisecting|pipeline]\n\
          \x20           [--iters N] [--seed S] [--workers W] [--bounds ...] [--kernel ...]\n\
@@ -107,6 +109,12 @@ fn print_usage() {
          (default: kmeans|| once k and k*M are large enough to pay for it).  Every\n\
          method is bit-identical at any worker count, kernel, and chunk size;\n\
          baseline defaults to kmeans++ so its published timings stay comparable.\n\
+         --init-oversample L and --init-rounds R tune the kmeans|| seeding: L is the\n\
+         per-round oversampling factor (expected L*k draws per round, default 2) and\n\
+         R pins the streamed sampling rounds (default/0: ceil(log2 M)/4 in [2, 6]).\n\
+         The defaults reproduce the automatic seeding bit-for-bit; other methods\n\
+         ignore both knobs.  Also available as pipeline.init_oversample and\n\
+         pipeline.init_rounds in --config.\n\
          --chunk-rows N streams the data instead of loading it: fit/predict pull the\n\
          file N rows at a time, with results bit-identical to the resident path at\n\
          any N; predict --out writes labels incrementally.  Truly out-of-core today:\n\
@@ -279,6 +287,11 @@ fn pipeline_config(flags: &Flags) -> Result<PipelineConfig> {
     if let Some(i) = flags.get("init") {
         b = b.init(InitMethod::parse(i)?);
     }
+    let ip = init_params_from_flags(flags)?;
+    b = b.init_oversample(ip.oversample);
+    if let Some(r) = ip.rounds {
+        b = b.init_rounds(r);
+    }
     if let Some(s) = flags.usize("seed")? {
         b = b.seed(s as u64);
     }
@@ -330,6 +343,20 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Shared `--init-oversample/--init-rounds` parsing (`--init-rounds 0`
+/// spells out the automatic round schedule).
+fn init_params_from_flags(flags: &Flags) -> Result<InitParams> {
+    let mut p = InitParams::default();
+    if let Some(l) = flags.usize("init-oversample")? {
+        p.oversample = l;
+    }
+    if let Some(r) = flags.usize("init-rounds")? {
+        p.rounds = if r == 0 { None } else { Some(r) };
+    }
+    p.validate()?;
+    Ok(p)
+}
+
 /// Shared `--workers/--bounds/--kernel` parsing for fit/predict.
 fn engine_opts_from_flags(flags: &Flags, default_w: usize) -> Result<EngineOpts> {
     let mut opts = EngineOpts::default().with_workers(default_w);
@@ -366,6 +393,7 @@ fn cmd_fit(flags: &Flags) -> Result<()> {
     if let Some(i) = flags.get("init") {
         spec.init = Some(InitMethod::parse(i)?);
     }
+    spec.init_params = init_params_from_flags(flags)?;
     spec.compression = flags.f32("compression")?;
     spec.num_groups = flags.usize("groups")?;
     spec.remote = remote_from_flags(flags);
@@ -500,7 +528,16 @@ fn cmd_baseline(flags: &Flags) -> Result<()> {
     };
     let t0 = std::time::Instant::now();
     let r = parsample::pipeline::traditional_kmeans_workers(
-        &data, k, iters, seed, 5, workers, bounds, kernel, init,
+        &data,
+        k,
+        iters,
+        seed,
+        5,
+        workers,
+        bounds,
+        kernel,
+        init,
+        init_params_from_flags(flags)?,
     )?;
     println!(
         "traditional kmeans: {} points, k={k}, {} iters | inertia {:.6} | {:.1} ms",

@@ -21,7 +21,7 @@
 use std::path::Path;
 
 use crate::cluster::engine::{Engine, EngineOpts};
-use crate::cluster::{BoundsMode, InitMethod, KernelMode};
+use crate::cluster::{BoundsMode, InitMethod, InitParams, KernelMode};
 use crate::data::scaling::MinMaxScaler;
 use crate::data::source::{for_each_slab, DataSource};
 use crate::data::Dataset;
@@ -63,6 +63,10 @@ pub struct FitMeta {
     /// resolution).  Artifacts written before this field existed load
     /// as `kmeans++`, the old hard-wired behavior.
     pub init: InitMethod,
+    /// k-means‖ knobs the fit was configured with (provenance, like
+    /// `init`).  Artifacts written before these fields existed load as
+    /// the defaults, which reproduce the old hard-wired behavior.
+    pub init_params: InitParams,
 }
 
 /// Output of one batch prediction.
@@ -162,6 +166,8 @@ impl FittedModel {
         self.meta.k
     }
 
+    // CONTRACT: bit-exact — trivial getter; on the taint graph via the
+    // call-graph pass's `.dims()` method fan-out from `for_each_slab`.
     pub fn dims(&self) -> usize {
         self.meta.dims
     }
@@ -313,9 +319,13 @@ impl FittedModel {
             ("inertia", Json::num(self.meta.inertia)),
             ("iterations", Json::num(self.meta.iterations as f64)),
             ("init", Json::str(self.meta.init.as_str())),
+            ("init_oversample", Json::num(self.meta.init_params.oversample as f64)),
             ("engine", engine),
             ("centers", Json::Arr(centers)),
         ];
+        if let Some(r) = self.meta.init_params.rounds {
+            fields.push(("init_rounds", Json::num(r as f64)));
+        }
         if let Some(s) = &self.scaler {
             let (mins, ranges) = s.params();
             fields.push((
@@ -402,6 +412,15 @@ impl FittedModel {
                 Some(s) => InitMethod::parse(s)?,
                 None => InitMethod::KMeansPlusPlus,
             },
+            // both absent in older artifacts: the defaults are exactly
+            // the knob values every pre-knob fit ran with
+            init_params: InitParams {
+                oversample: v
+                    .get("init_oversample")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(crate::cluster::init_parallel::OVERSAMPLE),
+                rounds: v.get("init_rounds").and_then(Json::as_usize),
+            },
         };
         FittedModel::new(meta, centers, scaler)
     }
@@ -464,6 +483,7 @@ mod tests {
             iterations: 7,
             engine: EngineOpts::serial(),
             init: InitMethod::KMeansPlusPlus,
+            init_params: InitParams::default(),
         }
     }
 
@@ -564,6 +584,7 @@ mod tests {
                     kernel: KernelMode::Wide,
                 },
                 init: InitMethod::KMeansParallel,
+                init_params: InitParams { oversample: 3, rounds: Some(4) },
             },
             vec![0.1, -3.7e-5, 1.0e8, 2.5],
             Some(scaler),

@@ -39,7 +39,7 @@ pub use crate::cluster::engine::EngineOpts;
 pub use artifact::{FitMeta, FittedModel, Prediction, SourcePrediction, MODEL_FORMAT, MODEL_VERSION};
 
 use crate::cluster::kmeans::{lloyd, KMeansConfig, KMeansResult};
-use crate::cluster::{BisectingKMeans, InitMethod, MiniBatchKMeans};
+use crate::cluster::{BisectingKMeans, InitMethod, InitParams, MiniBatchKMeans};
 use crate::data::scaling::MinMaxScaler;
 use crate::data::source::{collect_dataset, DataSource, SliceSource};
 use crate::data::Dataset;
@@ -110,6 +110,7 @@ fn artifact_from_result(
     r: KMeansResult,
     engine: EngineOpts,
     init: InitMethod,
+    init_params: InitParams,
     scaler: Option<MinMaxScaler>,
 ) -> Result<FittedModel> {
     FittedModel::new(
@@ -122,6 +123,7 @@ fn artifact_from_result(
             iterations: r.iterations,
             engine,
             init,
+            init_params,
         },
         r.centers,
         scaler,
@@ -141,6 +143,7 @@ impl ClusterModel for KMeans {
             r,
             self.config.engine_opts(),
             self.config.init,
+            self.config.init_params(),
             None,
         )
     }
@@ -175,6 +178,7 @@ impl ClusterModel for MiniBatchKMeans {
                 iterations: r.iterations,
                 engine: self.engine_opts(),
                 init: self.init,
+                init_params: self.init_params(),
             },
             r.centers,
             None,
@@ -189,7 +193,15 @@ impl ClusterModel for BisectingKMeans {
 
     fn fit(&self, data: &Dataset) -> Result<FittedModel> {
         let r = self.run(data.as_slice(), data.dims(), self.k)?;
-        artifact_from_result(self.algorithm(), data, r, self.engine_opts(), self.init, None)
+        artifact_from_result(
+            self.algorithm(),
+            data,
+            r,
+            self.engine_opts(),
+            self.init,
+            self.init_params(),
+            None,
+        )
     }
 }
 
@@ -221,6 +233,7 @@ impl ClusterModel for SubclusterPipeline {
                 iterations: r.global_iterations,
                 engine: cfg.engine_opts(),
                 init: cfg.init,
+                init_params: cfg.init_params(),
             },
             r.centers,
             scaler,
@@ -245,6 +258,7 @@ impl ClusterModel for SubclusterPipeline {
                 iterations: r.global_iterations,
                 engine: self.config().engine_opts(),
                 init: self.config().init,
+                init_params: self.config().init_params(),
             },
             r.centers,
             r.scaler,
@@ -271,6 +285,9 @@ pub struct ModelSpec {
     /// Seeding method (`None` keeps each algorithm's default —
     /// `Auto` for kmeans/minibatch/bisecting/pipeline).
     pub init: Option<InitMethod>,
+    /// k-means‖ knobs (oversampling factor, round override); the
+    /// default reproduces the automatic behavior bit-for-bit.
+    pub init_params: InitParams,
     /// Pipeline-only: partitioning scheme.
     pub scheme: Option<Scheme>,
     /// Pipeline-only: the paper's compression value c.
@@ -291,6 +308,7 @@ impl ModelSpec {
             seed: 0,
             engine: EngineOpts::default(),
             init: None,
+            init_params: InitParams::default(),
             scheme: None,
             compression: None,
             num_groups: None,
@@ -311,6 +329,8 @@ impl ModelSpec {
                 if let Some(i) = self.init {
                     cfg.init = i;
                 }
+                cfg.init_oversample = self.init_params.oversample;
+                cfg.init_rounds = self.init_params.rounds;
                 Ok(Box::new(KMeans { config: cfg }))
             }
             "minibatch" | "minibatch-kmeans" => {
@@ -322,6 +342,8 @@ impl ModelSpec {
                 if let Some(i) = self.init {
                     cfg.init = i;
                 }
+                cfg.init_oversample = self.init_params.oversample;
+                cfg.init_rounds = self.init_params.rounds;
                 Ok(Box::new(cfg))
             }
             "bisecting" | "bisecting-kmeans" => {
@@ -333,6 +355,8 @@ impl ModelSpec {
                 if let Some(i) = self.init {
                     cfg.init = i;
                 }
+                cfg.init_oversample = self.init_params.oversample;
+                cfg.init_rounds = self.init_params.rounds;
                 Ok(Box::new(cfg))
             }
             "pipeline" | "subcluster" | "subcluster-pipeline" => {
@@ -354,6 +378,10 @@ impl ModelSpec {
                 }
                 if let Some(i) = self.init {
                     b = b.init(i);
+                }
+                b = b.init_oversample(self.init_params.oversample);
+                if let Some(r) = self.init_params.rounds {
+                    b = b.init_rounds(r);
                 }
                 if let Some(r) = &self.remote {
                     b = b.remote(r.clone());

@@ -82,6 +82,11 @@ pub struct PipelineConfig {
     /// k-means‖ when k × pool-size is large enough for the engine-parallel
     /// sweeps to pay off, else k-means++.
     pub init: InitMethod,
+    /// k-means‖ oversampling factor ℓ (only read when `init` resolves
+    /// to k-means‖).  Default [`crate::cluster::init_parallel::OVERSAMPLE`].
+    pub init_oversample: usize,
+    /// k-means‖ sampling-round override; `None` = automatic schedule.
+    pub init_rounds: Option<usize>,
     pub seed: u64,
     /// Distributed fit: dispatch local-stage groups to remote `serve`
     /// workers ([`crate::coordinator::remote`]).  `None` (or an empty
@@ -107,6 +112,8 @@ impl Default for PipelineConfig {
             bounds: BoundsMode::Hamerly,
             kernel: KernelMode::session_default(),
             init: InitMethod::Auto,
+            init_oversample: crate::cluster::init_parallel::OVERSAMPLE,
+            init_rounds: None,
             seed: 0,
             remote: None,
         }
@@ -125,6 +132,13 @@ impl PipelineConfig {
         EngineOpts { workers: self.workers, bounds: self.bounds, kernel: self.kernel }
     }
 
+    /// The k-means‖ knobs as one [`crate::cluster::InitParams`].
+    // CONTRACT: bit-exact — pure field bundling; on the taint graph
+    // because the (covered) `validate` checks the knobs through it.
+    pub fn init_params(&self) -> crate::cluster::InitParams {
+        crate::cluster::InitParams { oversample: self.init_oversample, rounds: self.init_rounds }
+    }
+
     /// Set all three engine knobs from one [`EngineOpts`].
     pub fn with_engine_opts(mut self, opts: EngineOpts) -> Self {
         self.workers = opts.workers.max(1);
@@ -133,6 +147,9 @@ impl PipelineConfig {
         self
     }
 
+    // CONTRACT: bit-exact — pure input checks; on the taint graph via
+    // the call-graph pass's `.validate()` method fan-out from
+    // `PjrtBackend::run_in_bucket` (which validates its DeviceBatch).
     fn validate(&self) -> Result<()> {
         if self.final_k == 0 {
             return Err(Error::Config("final_k must be > 0".into()));
@@ -148,6 +165,7 @@ impl PipelineConfig {
         if self.global_iters == 0 {
             return Err(Error::Config("global_iters must be > 0".into()));
         }
+        self.init_params().validate()?;
         Ok(())
     }
 
@@ -243,6 +261,19 @@ impl PipelineConfigBuilder {
     /// Seeding method for the global stage (and the CLI baselines).
     pub fn init(mut self, i: InitMethod) -> Self {
         self.cfg.init = i;
+        self
+    }
+
+    /// k-means‖ oversampling factor ℓ (validated in `build`).
+    pub fn init_oversample(mut self, l: usize) -> Self {
+        self.cfg.init_oversample = l;
+        self
+    }
+
+    /// Explicit k-means‖ sampling-round count (validated in `build`);
+    /// the default `None` keeps the automatic data-sized schedule.
+    pub fn init_rounds(mut self, r: usize) -> Self {
+        self.cfg.init_rounds = Some(r);
         self
     }
 
@@ -504,13 +535,14 @@ impl SubclusterPipeline {
         let restarts: u64 = if n_pool <= GLOBAL_RESTART_POOL_LIMIT { 3 } else { 1 };
         let mut best: Option<KMeansResult> = None;
         for trial in 0..restarts {
-            let init = crate::cluster::init::initial_centers_with(
+            let init = crate::cluster::init::initial_centers_with_params(
                 pooled,
                 dims,
                 k,
                 self.cfg.init,
                 self.cfg.seed ^ trial.wrapping_mul(0x9e37_79b9_7f4a_7c15),
                 self.cfg.engine_opts(),
+                self.cfg.init_params(),
             )?;
             let r = self.global_once(backend, pooled, &weights, &init, dims, n_pool, k)?;
             if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {
@@ -865,6 +897,7 @@ pub fn traditional_kmeans_restarts(
         BoundsMode::default(),
         KernelMode::session_default(),
         InitMethod::KMeansPlusPlus,
+        crate::cluster::InitParams::default(),
     )
 }
 
@@ -884,6 +917,7 @@ pub fn traditional_kmeans_workers(
     bounds: BoundsMode,
     kernel: KernelMode,
     init: InitMethod,
+    init_params: crate::cluster::InitParams,
 ) -> Result<KMeansResult> {
     let mut best: Option<KMeansResult> = None;
     for trial in 0..restarts.max(1) {
@@ -896,6 +930,8 @@ pub fn traditional_kmeans_workers(
             workers,
             bounds,
             kernel,
+            init_oversample: init_params.oversample,
+            init_rounds: init_params.rounds,
         };
         let r = crate::cluster::lloyd(data.as_slice(), data.dims(), &cfg)?;
         if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {

@@ -1,6 +1,10 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and
 //! the rust runtime.  Shapes are explicit in the JSON so the runtime
 //! never parses HLO to size its buffers.
+//!
+//! CONTRACT: bit-exact — bucket selection (`pick`) is a pure
+//! function of the manifest order and group size; tie-breaks are by
+//! declaration order, never by map iteration.
 
 use std::path::{Path, PathBuf};
 

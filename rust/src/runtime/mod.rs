@@ -12,6 +12,9 @@
 //!   (init passed in, fixed iterations, empty centers kept,
 //!   argmin ties to lowest index).  Parity between the two is enforced
 //!   by `rust/tests/integration_runtime.rs`.
+//!
+//! CONTRACT: bit-exact — the `Backend` contract itself: same batch
+//! in, bit-identical `DeviceOutput` out, on either backend.
 
 pub mod manifest;
 pub mod native;

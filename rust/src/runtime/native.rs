@@ -7,6 +7,10 @@
 //! squared-euclidean in the |x|²−2x·c+|c|² expansion, argmin ties to
 //! the lowest index, weighted sums/counts, empty centers keep their
 //! value, `iters` full Lloyd steps then one final assignment pass.
+//!
+//! CONTRACT: bit-exact — this backend is the parity yardstick for
+//! the device path; accumulation order is fixed (ordered folds, no
+//! `.sum()`), worker count must not change a single bit.
 
 use crate::error::Result;
 use crate::runtime::{Backend, DeviceBatch, DeviceOutput};
@@ -157,7 +161,7 @@ fn assign_pass_const<const D: usize>(
     counts.iter_mut().for_each(|x| *x = 0.0);
     let mut cnorm = vec![0.0f32; k];
     for (c, cc) in centers.chunks_exact(D).enumerate() {
-        cnorm[c] = cc.iter().map(|x| x * x).sum();
+        cnorm[c] = cc.iter().fold(0.0f32, |acc, x| acc + x * x);
     }
     let mut inertia = 0.0f32;
     for i in 0..n {
@@ -171,7 +175,7 @@ fn assign_pass_const<const D: usize>(
         }
         let mut p = [0.0f32; D];
         p.copy_from_slice(&points[i * D..(i + 1) * D]);
-        let xn: f32 = p.iter().map(|x| x * x).sum();
+        let xn: f32 = p.iter().fold(0.0f32, |acc, x| acc + x * x);
         let mut best = (0usize, f32::INFINITY);
         for (c, cc) in centers.chunks_exact(D).enumerate() {
             let mut dot = 0.0f32;
@@ -210,7 +214,7 @@ fn assign_pass_dyn(
     let mut cnorm = vec![0.0f32; k];
     for c in 0..k {
         let cc = &centers[c * d..(c + 1) * d];
-        cnorm[c] = cc.iter().map(|x| x * x).sum();
+        cnorm[c] = cc.iter().fold(0.0f32, |acc, x| acc + x * x);
     }
     let mut inertia = 0.0f32;
     for i in 0..n {
@@ -220,11 +224,11 @@ fn assign_pass_dyn(
             continue;
         }
         let p = &points[i * d..(i + 1) * d];
-        let xn: f32 = p.iter().map(|x| x * x).sum();
+        let xn: f32 = p.iter().fold(0.0f32, |acc, x| acc + x * x);
         let mut best = (0usize, f32::INFINITY);
         for c in 0..k {
             let cc = &centers[c * d..(c + 1) * d];
-            let dot: f32 = p.iter().zip(cc).map(|(a, b)| a * b).sum();
+            let dot: f32 = p.iter().zip(cc).fold(0.0f32, |acc, (a, b)| acc + a * b);
             let dist = (xn - 2.0 * dot + cnorm[c]).max(0.0);
             if dist < best.1 {
                 best = (c, dist);

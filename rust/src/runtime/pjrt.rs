@@ -9,6 +9,10 @@
 //! that created it (the coordinator dispatch thread — device-level
 //! parallelism comes from batching B regions per dispatch, mirroring
 //! the paper's one-block-per-region CUDA launch, not from host threads).
+//!
+//! CONTRACT: bit-exact — one compiled executable per bucket shape;
+//! the executable cache is name-keyed lookup only (see allow.toml for
+//! the `HashMap` exception: iteration order is never observed).
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -12,6 +12,10 @@
 //! To run on a real device, vendor the `xla` crate and swap this
 //! module for it (`use xla;` in `runtime/pjrt.rs` and `error.rs` are
 //! the only two seams).
+//!
+//! CONTRACT: bit-exact — trivially: every entry point returns the
+//! same typed `unavailable` error; the shim exists so the pjrt path
+//! type-checks offline.
 
 use std::fmt;
 use std::path::Path;

@@ -666,6 +666,7 @@ fn run_fit(ctx: &HandlerCtx, job: FitJob) -> Result<String> {
         seed: job.seed,
         engine,
         init: job.init,
+        init_params: Default::default(),
         scheme: job.scheme,
         compression: job.compression,
         num_groups: job.num_groups,

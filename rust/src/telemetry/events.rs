@@ -77,6 +77,9 @@ impl EventLog {
 
     /// Emit one event line: `{"reason":<reason>, ...fields}` with
     /// `reason` always first, remaining keys in sorted order.
+    // CONTRACT: bit-exact (leaf) — telemetry is observation only: no
+    // value flows back to the caller, so rendering cannot perturb the
+    // numeric contract; the taint walk stops at this boundary.
     pub fn emit(&self, reason: &str, fields: Vec<(&str, Json)>) {
         if !self.enabled() {
             return;

@@ -44,6 +44,9 @@ impl Stats {
     }
 
     /// The standard output row.
+    // CONTRACT: bit-exact (leaf) — only on the taint graph through the
+    // call-graph pass's method-name fan-out (`Batcher::pack` calls
+    // `Dataset::row`); formatting timings is not contract work.
     pub fn row(&self) -> String {
         format!(
             "bench {} | n={} | mean {:.3} ms | median {:.3} ms | min {:.3} ms | max {:.3} ms",

@@ -4,6 +4,10 @@
 //! python/compile/aot.py) and the server wire protocol.  Supports the
 //! full JSON grammar except `\u` surrogate pairs beyond the BMP are
 //! passed through unvalidated; numbers parse as f64.
+//!
+//! CONTRACT: bit-exact — parsing and emission are pure string
+//! walks (no maps, no ambient state); the wire protocol and the
+//! reason-tagged event log both sit on the contract call graph.
 
 use std::collections::BTreeMap;
 use std::fmt;

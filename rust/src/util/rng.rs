@@ -4,6 +4,9 @@
 //! statistical quality, and — crucial for the experiment harness —
 //! fully deterministic across platforms so every table in
 //! EXPERIMENTS.md regenerates bit-identically from its seed.
+//!
+//! CONTRACT: bit-exact — every draw is a pure function of the
+//! seed/state; the k-means‖ seeding taint reaches all of this file.
 
 /// PCG-XSH-RR 64/32 (O'Neill 2014).
 #[derive(Debug, Clone)]
@@ -128,7 +131,9 @@ impl Pcg32 {
     /// Never returns a zero-weight index — k-means++ must not seed on
     /// an already-chosen duplicate point.
     pub fn weighted_index(&mut self, weights: &[f32]) -> Option<usize> {
-        let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+        let total: f64 = weights
+            .iter()
+            .fold(0.0f64, |acc, &w| acc + f64::from(w.max(0.0)));
         if total <= 0.0 {
             return None;
         }

@@ -18,6 +18,8 @@ use std::thread;
 /// Results come back in input order.  Panics in `f` are caught per-item
 /// and surfaced as `Err(msg)` so one bad region cannot take down the
 /// whole experiment run (failure-injection tests rely on this).
+// CONTRACT: bit-exact — slot `i` always holds `f(i, items[i])`: the
+// output is a pure reindexing of `f`, whatever the thread schedule.
 pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<Result<R, String>>
 where
     T: Sync,
@@ -70,6 +72,8 @@ where
     out.into_iter().map(|slot| slot.expect("worker missed a slot")).collect()
 }
 
+// CONTRACT: bit-exact — a deterministic wrapper: same (f, i, item)
+// in, same Ok/Err out; the catch only reifies a panic as a message.
 fn run_caught<T, R, F>(f: &F, i: usize, item: &T) -> Result<R, String>
 where
     F: Fn(usize, &T) -> R,
@@ -146,7 +150,8 @@ impl ThreadPool {
 
     /// Jobs queued or running right now.
     pub fn pending(&self) -> usize {
-        *self.pending.0.lock().expect("pending counter lock poisoned")
+        let (lock, _) = &*self.pending;
+        *lock.lock().expect("pending counter lock poisoned")
     }
 
     /// Block until every submitted job has finished.

@@ -1,0 +1,19 @@
+// Blocking-under-lock fixture: a channel recv directly under a held
+// guard, and the same by calling through a helper.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+pub fn bk_direct(m: &Mutex<Receiver<u32>>) -> u32 {
+    let rx = m.lock().expect("rx poisoned");
+    rx.recv().unwrap_or(0)
+}
+
+pub fn bk_via_call(m: &Mutex<u32>, rx: &Receiver<u32>) -> u32 {
+    let g = m.lock().expect("counter poisoned");
+    *g + bk_drain(rx)
+}
+
+fn bk_drain(rx: &Receiver<u32>) -> u32 {
+    rx.recv().unwrap_or(0)
+}

@@ -1,0 +1,22 @@
+// Lock-order fixture: two fns acquire the same two mutexes in
+// opposite orders — both nestings are undeclared (no locks.toml in
+// this subtree) and together they form a cycle.
+
+use std::sync::Mutex;
+
+pub struct LcState {
+    pub lc_a: Mutex<u32>,
+    pub lc_b: Mutex<u32>,
+}
+
+pub fn lc_forward(s: &LcState) -> u32 {
+    let ga = s.lc_a.lock().expect("lc_a poisoned");
+    let gb = s.lc_b.lock().expect("lc_b poisoned");
+    *ga + *gb
+}
+
+pub fn lc_backward(s: &LcState) -> u32 {
+    let gb = s.lc_b.lock().expect("lc_b poisoned");
+    let ga = s.lc_a.lock().expect("lc_a poisoned");
+    *ga + *gb
+}

@@ -1,0 +1,15 @@
+// Clean lock-order fixture: one nesting, declared in this subtree's
+// analysis/locks.toml (lint the `lock_order_ok` directory as a root).
+
+use std::sync::Mutex;
+
+pub struct LoState {
+    pub lo_outer: Mutex<u32>,
+    pub lo_inner: Mutex<u32>,
+}
+
+pub fn lo_nest(s: &LoState) -> u32 {
+    let go = s.lo_outer.lock().expect("lo_outer poisoned");
+    let gi = s.lo_inner.lock().expect("lo_inner poisoned");
+    *go + *gi
+}

@@ -1,0 +1,16 @@
+// Taint fixture: a contract-marked fn calls an unmarked same-module
+// helper — the helper is transitively on the bit-exact contract and
+// must be flagged.
+
+// CONTRACT: bit-exact — fixture root region.
+pub fn tb_root(xs: &[f32]) -> f32 {
+    tb_helper(xs)
+}
+
+pub fn tb_helper(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for x in xs {
+        acc += *x;
+    }
+    acc
+}

@@ -1,0 +1,22 @@
+// Clean taint fixture: everything reachable from the contract region
+// is either contract-covered itself or an audited leaf.
+
+// CONTRACT: bit-exact — fixture root region.
+pub fn tk_root(xs: &[f32]) -> f32 {
+    tk_covered(xs) + tk_boundary(xs.len())
+}
+
+// CONTRACT: bit-exact — covered helper, fold order fixed.
+pub fn tk_covered(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |acc, x| acc + x)
+}
+
+// CONTRACT: bit-exact (leaf) — audited boundary: returns a value
+// derived only from its argument; nothing beyond it is walked.
+pub fn tk_boundary(n: usize) -> f32 {
+    tk_unwalked(n)
+}
+
+pub fn tk_unwalked(n: usize) -> f32 {
+    n as f32
+}

@@ -269,3 +269,115 @@ fn minibatch_parallel_seeding_is_chunk_size_independent() {
         assert_eq!(got.iterations, baseline.iterations, "{ctx}");
     }
 }
+
+/// Acceptance of the `init_oversample`/`init_rounds` knobs: the
+/// explicit defaults are bit-identical to the knobless entry points
+/// (`InitParams::default()` *is* the long-standing hard-wired
+/// behavior), and out-of-range knobs are rejected up front.
+#[test]
+fn default_init_params_are_bit_identical_to_knobless_entry_points() {
+    use parsample::cluster::init_parallel::oversample_params;
+    use parsample::cluster::{
+        initial_centers_source_params, initial_centers_with_params, InitParams,
+    };
+
+    assert_eq!(InitParams::default(), InitParams { oversample: OVERSAMPLE, rounds: None });
+
+    let data = blobs(1200, 6, 3, 7);
+    let (dims, k, seed) = (data.dims(), 10usize, 21u64);
+    let knobless = initial_centers_with(
+        data.as_slice(),
+        dims,
+        k,
+        InitMethod::KMeansParallel,
+        seed,
+        opts(2, KernelMode::Scalar),
+    )
+    .unwrap();
+    let explicit = initial_centers_with_params(
+        data.as_slice(),
+        dims,
+        k,
+        InitMethod::KMeansParallel,
+        seed,
+        opts(2, KernelMode::Scalar),
+        InitParams::default(),
+    )
+    .unwrap();
+    assert_eq!(bits(&explicit), bits(&knobless));
+
+    let mut src = SliceSource::of(&data);
+    let streamed = initial_centers_source_params(
+        &mut src,
+        k,
+        InitMethod::KMeansParallel,
+        seed,
+        opts(2, KernelMode::Scalar),
+        InitParams::default(),
+    )
+    .unwrap();
+    assert_eq!(bits(&streamed), bits(&knobless));
+
+    let mut src = SliceSource::of(&data);
+    let base_cands = oversample(&mut src, k, seed, opts(1, KernelMode::Scalar)).unwrap();
+    let mut src = SliceSource::of(&data);
+    let param_cands =
+        oversample_params(&mut src, k, seed, opts(1, KernelMode::Scalar), InitParams::default())
+            .unwrap();
+    assert_eq!(param_cands.idx, base_cands.idx);
+    assert_eq!(bits(&param_cands.rows), bits(&base_cands.rows));
+    assert_eq!(param_cands.weights, base_cands.weights);
+}
+
+/// The knobs actually steer the oversampling phase: an explicit round
+/// count caps the candidate total at `rounds·ℓ·k + 1`, a larger ℓ
+/// raises the expected draw count, and invalid values error.
+#[test]
+fn explicit_init_params_change_the_candidate_schedule() {
+    use parsample::cluster::init_parallel::{oversample_params, MAX_INIT_ROUNDS};
+    use parsample::cluster::InitParams;
+
+    let data = blobs(2000, 10, 3, 4);
+    let k = 12usize;
+    let mut src = SliceSource::of(&data);
+    let two_rounds = oversample_params(
+        &mut src,
+        k,
+        9,
+        opts(1, KernelMode::Scalar),
+        InitParams { oversample: OVERSAMPLE, rounds: Some(2) },
+    )
+    .unwrap();
+    assert!(two_rounds.idx.len() >= k);
+    assert!(
+        two_rounds.idx.len() <= 2 * OVERSAMPLE * k + 1,
+        "{} candidates exceed the 2-round cap",
+        two_rounds.idx.len()
+    );
+
+    let mut src = SliceSource::of(&data);
+    let wide = oversample_params(
+        &mut src,
+        k,
+        9,
+        opts(1, KernelMode::Scalar),
+        InitParams { oversample: 4, rounds: Some(2) },
+    )
+    .unwrap();
+    assert!(
+        wide.idx.len() > two_rounds.idx.len(),
+        "l=4 drew {} candidates, no more than l=2's {}",
+        wide.idx.len(),
+        two_rounds.idx.len()
+    );
+
+    let mut src = SliceSource::of(&data);
+    let bad = InitParams { oversample: 0, rounds: None };
+    assert!(oversample_params(&mut src, k, 9, opts(1, KernelMode::Scalar), bad).is_err());
+    let mut src = SliceSource::of(&data);
+    let bad = InitParams { oversample: OVERSAMPLE, rounds: Some(0) };
+    assert!(oversample_params(&mut src, k, 9, opts(1, KernelMode::Scalar), bad).is_err());
+    let mut src = SliceSource::of(&data);
+    let bad = InitParams { oversample: OVERSAMPLE, rounds: Some(MAX_INIT_ROUNDS + 1) };
+    assert!(oversample_params(&mut src, k, 9, opts(1, KernelMode::Scalar), bad).is_err());
+}

@@ -143,6 +143,7 @@ fn prop_kmeans_inertia_monotone_in_iterations() {
                 workers: 1,
                 bounds: BoundsMode::Hamerly,
                 kernel: KernelMode::session_default(),
+                ..Default::default()
             };
             let r = lloyd(data.as_slice(), data.dims(), &cfg).unwrap();
             assert!(
