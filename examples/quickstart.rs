@@ -11,9 +11,12 @@
 //! against traditional k-means, then repeats the whole lifecycle
 //! **out-of-core**: fit and predict over a streaming `DataSource`
 //! without ever materializing the dataset, and check the results are
-//! bit-identical to the resident run.  Finishes **distributed**: two
+//! bit-identical to the resident run.  Goes **distributed**: two
 //! worker servers, a fit joined to the fleet, and the bit-identity
 //! check again — fault tolerance costs wall time, never bits.
+//! Finishes **served**: the artifact behind the event-driven server,
+//! answering binary-framed predicts over TCP with the exact bits of a
+//! local `predict_batch`.
 
 use parsample::data::builtin;
 use parsample::data::source::{BlobSource, CsvSource};
@@ -182,5 +185,36 @@ fn main() -> parsample::Result<()> {
     println!("fleet    : distributed and single-node fits are bit-identical");
     w1.shutdown();
     w2.shutdown();
+
+    // ---- serving: the model behind a socket, on the binary protocol ----
+    //
+    // 14. stand the artifact up behind the event-driven server.  One
+    //     listener speaks both JSON lines and the PSF1 binary framing
+    //     (negotiated by the first bytes; `serve --protocol` pins one);
+    //     binary predicts ship f32 rows in and u32 labels out as raw
+    //     little-endian bits — no text roundtrip touches the numbers
+    use parsample::server::frame::FrameClient;
+    use parsample::server::ServerConfig;
+    let cfg = ServerConfig {
+        preload: vec![("iris".to_string(), model.clone())],
+        ..ServerConfig::default()
+    };
+    let engine = cfg.engine;
+    let mut served = Server::start_with("127.0.0.1:0", cfg)?;
+    let mut client = FrameClient::connect(served.addr())?;
+    let (labels, counts, inertia) = client.predict("iris", data.as_slice(), data.dims())?;
+    println!(
+        "serve    : binary predict over TCP -> counts {counts:?}, inertia {inertia:.4}"
+    );
+
+    // 15. and the wire contract: the framed reply carries the exact
+    //     bits of a local predict — the protocol (and the server's
+    //     optional micro-batch coalescing) may change wall time, never
+    //     bytes
+    let local = model.predict_batch_with(data.as_slice(), engine)?;
+    assert_eq!(labels, local.labels);
+    assert_eq!(inertia.to_bits(), local.inertia.to_bits());
+    println!("serve    : wire and local predictions are bit-identical");
+    served.shutdown();
     Ok(())
 }

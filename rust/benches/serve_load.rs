@@ -1,0 +1,237 @@
+//! Bench: the serving subsystem under client load — predict
+//! throughput and tail latency vs connection count, JSON lines vs
+//! binary frames, micro-batch coalescing off and on.
+//!
+//! Every scenario runs against one reactor server preloaded with the
+//! same fitted model; each client's first reply is parity-gated
+//! against a local `predict_batch` (labels, counts, and inertia bits)
+//! before any time is recorded — the protocols and the coalescer may
+//! only change wall time, never bytes.  Results go to
+//! `BENCH_serve.json`.
+//!
+//! Profiles (rows per predict / requests per client):
+//!   PARSAMPLE_BENCH_SMOKE=1  →  32 / 60, 1–2 connections (CI rot-guard)
+//!   default                  →  64 / 400, 1–8 connections
+//!   PARSAMPLE_BENCH_FULL=1   →  64 / 2000, 1–16 connections
+
+use std::time::Instant;
+
+use parsample::cluster::EngineOpts;
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::model::{ClusterModel, FittedModel, KMeans, Prediction};
+use parsample::server::frame::FrameClient;
+use parsample::server::{Client, ProtocolMode, Server, ServerConfig};
+use parsample::telemetry::EventLog;
+use parsample::util::benchkit::{black_box, print_table};
+use parsample::util::json::Json;
+
+const DIMS: usize = 8;
+
+struct Scenario {
+    binary: bool,
+    coalesce_us: u64,
+    conns: usize,
+}
+
+struct Measured {
+    predicts_per_s: f64,
+    p50_us: u64,
+    p99_us: u64,
+}
+
+fn p_quantile(sorted_us: &[u64], q: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted_us.len() as f64 * q).ceil() as usize).max(1) - 1;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+fn assert_parity(labels: &[u32], counts: &[u32], inertia: f64, want: &Prediction, what: &str) {
+    assert_eq!(labels, want.labels.as_slice(), "{what}: labels diverge");
+    assert_eq!(counts, want.counts.as_slice(), "{what}: counts diverge");
+    assert_eq!(
+        inertia.to_bits(),
+        want.inertia.to_bits(),
+        "{what}: inertia diverges"
+    );
+}
+
+/// Run one scenario: `conns` clients hammer the server with
+/// `reqs`-per-client predicts of the same `chunk`; returns throughput
+/// and latency quantiles over every request.
+fn run_scenario(
+    sc: &Scenario,
+    model: &FittedModel,
+    chunk: &[f32],
+    reqs: usize,
+) -> Measured {
+    let cfg = ServerConfig {
+        coalesce_us: sc.coalesce_us,
+        protocol: ProtocolMode::Auto,
+        events: EventLog::off(),
+        preload: vec![("prod".to_string(), model.clone())],
+        ..ServerConfig::default()
+    };
+    let engine: EngineOpts = cfg.engine;
+    let mut server = Server::start_with("127.0.0.1:0", cfg).expect("server start");
+    let addr = server.addr();
+    let want = model.predict_batch_with(chunk, engine).expect("local predict");
+    let what = if sc.binary { "binary" } else { "json" };
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..sc.conns)
+            .map(|_| {
+                let want = &want;
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(reqs);
+                    if sc.binary {
+                        let mut client = FrameClient::connect(addr).expect("connect");
+                        for i in 0..reqs {
+                            let r0 = Instant::now();
+                            let (labels, counts, inertia) =
+                                client.predict("prod", chunk, DIMS).expect("predict");
+                            lat.push(r0.elapsed().as_micros() as u64);
+                            if i == 0 {
+                                assert_parity(&labels, &counts, inertia, want, what);
+                            }
+                            black_box(labels);
+                        }
+                    } else {
+                        let mut client = Client::connect(addr).expect("connect");
+                        let req = {
+                            let rows: Vec<String> = chunk
+                                .chunks(DIMS)
+                                .map(|r| {
+                                    let xs: Vec<String> =
+                                        r.iter().map(|x| format!("{x}")).collect();
+                                    format!("[{}]", xs.join(","))
+                                })
+                                .collect();
+                            format!(
+                                "{{\"cmd\":\"predict\",\"name\":\"prod\",\"points\":[{}]}}",
+                                rows.join(",")
+                            )
+                        };
+                        for i in 0..reqs {
+                            let r0 = Instant::now();
+                            let resp = client.call(&req).expect("predict");
+                            lat.push(r0.elapsed().as_micros() as u64);
+                            if i == 0 {
+                                let v = Json::parse(&resp).expect("json reply");
+                                let labels: Vec<u32> = v
+                                    .get("labels")
+                                    .and_then(Json::as_arr)
+                                    .expect("labels")
+                                    .iter()
+                                    .map(|l| l.as_usize().expect("label") as u32)
+                                    .collect();
+                                let counts: Vec<u32> = v
+                                    .get("counts")
+                                    .and_then(Json::as_arr)
+                                    .expect("counts")
+                                    .iter()
+                                    .map(|c| c.as_usize().expect("count") as u32)
+                                    .collect();
+                                let inertia =
+                                    v.get("inertia").and_then(Json::as_f64).expect("inertia");
+                                assert_parity(&labels, &counts, inertia, want, what);
+                            }
+                            black_box(resp);
+                        }
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    latencies.sort_unstable();
+    Measured {
+        predicts_per_s: (sc.conns * reqs) as f64 / wall_s,
+        p50_us: p_quantile(&latencies, 0.50),
+        p99_us: p_quantile(&latencies, 0.99),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("PARSAMPLE_BENCH_SMOKE").is_ok();
+    let full = std::env::var("PARSAMPLE_BENCH_FULL").is_ok();
+    let (rows_per_predict, reqs, conn_counts): (usize, usize, Vec<usize>) = if smoke {
+        (32, 60, vec![1, 2])
+    } else if full {
+        (64, 2_000, vec![1, 4, 16])
+    } else {
+        (64, 400, vec![1, 4, 8])
+    };
+
+    let data = make_blobs(&BlobSpec {
+        num_points: 4_000,
+        num_clusters: 8,
+        dims: DIMS,
+        std: 0.05,
+        extent: 10.0,
+        seed: 11,
+    })
+    .expect("blob generation");
+    let model = KMeans::new(8).fit(&data).expect("fit");
+    let chunk = &data.as_slice()[..rows_per_predict * DIMS];
+
+    let mut scenarios: Vec<Scenario> = Vec::new();
+    for &conns in &conn_counts {
+        for binary in [false, true] {
+            for coalesce_us in [0u64, 200] {
+                scenarios.push(Scenario { binary, coalesce_us, conns });
+            }
+        }
+    }
+
+    let mut table: Vec<Vec<String>> = Vec::new();
+    let mut results: Vec<Json> = Vec::new();
+    for sc in &scenarios {
+        let m = run_scenario(sc, &model, chunk, reqs);
+        table.push(vec![
+            if sc.binary { "binary" } else { "json" }.to_string(),
+            format!("{}", sc.conns),
+            if sc.coalesce_us == 0 { "off".to_string() } else { format!("{}us", sc.coalesce_us) },
+            format!("{:.0}", m.predicts_per_s),
+            format!("{}", m.p50_us),
+            format!("{}", m.p99_us),
+        ]);
+        results.push(Json::obj(vec![
+            ("protocol", Json::str(if sc.binary { "binary" } else { "json" })),
+            ("conns", Json::num(sc.conns as f64)),
+            ("coalesce_us", Json::num(sc.coalesce_us as f64)),
+            ("predicts_per_s", Json::num(m.predicts_per_s)),
+            ("p50_us", Json::num(m.p50_us as f64)),
+            ("p99_us", Json::num(m.p99_us as f64)),
+        ]));
+    }
+
+    print_table(
+        &format!(
+            "serve load (rows/predict={rows_per_predict}, reqs/client={reqs}, \
+             parity-gated, reactor loop)"
+        ),
+        &["protocol", "conns", "coalesce", "predicts/s", "p50 us", "p99 us"],
+        &table,
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serve_load")),
+        ("rows_per_predict", Json::num(rows_per_predict as f64)),
+        ("reqs_per_client", Json::num(reqs as f64)),
+        ("scenarios", Json::Arr(results)),
+    ]);
+    let out = "BENCH_serve.json";
+    match std::fs::write(out, json.to_string()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -71,7 +71,10 @@ pub fn check(path: &str, src: &str) -> Vec<Finding> {
         });
     }
     if norm.ends_with("server/protocol.rs") {
-        protocol_pass(&norm, &toks, &mut out);
+        protocol_pass(&norm, &toks, &WIRE_SPEC, &mut out);
+    }
+    if norm.ends_with("server/frame.rs") {
+        protocol_pass(&norm, &toks, &FRAME_SPEC, &mut out);
     }
     out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     out
@@ -420,7 +423,7 @@ fn check_lock_chain(norm: &str, toks: &[Token], i: usize, line: usize, out: &mut
     }
 }
 
-/// One parsed `WireCommand` registry entry.
+/// One parsed registry entry (`WireCommand` / `FrameCommand`).
 struct RegEntry {
     cmd: String,
     encode: String,
@@ -428,9 +431,37 @@ struct RegEntry {
     line: usize,
 }
 
-/// Protocol coverage: cross-check `parse_request`'s match arms, the
-/// `WIRE_COMMANDS` registry, and the fns/tests declared in the file.
-fn protocol_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>) {
+/// Shape of one command-registry file the coverage pass checks: the
+/// registry const, its entry struct, and the fn whose string-literal
+/// match arms are the file's parse surface.
+struct RegistrySpec {
+    registry: &'static str,
+    entry: &'static str,
+    parse_fn: &'static str,
+    /// Noun used in messages ("wire command" / "frame command").
+    noun: &'static str,
+}
+
+/// `server/protocol.rs`: JSON commands.
+const WIRE_SPEC: RegistrySpec = RegistrySpec {
+    registry: "WIRE_COMMANDS",
+    entry: "WireCommand",
+    parse_fn: "parse_request",
+    noun: "wire command",
+};
+
+/// `server/frame.rs`: binary-frame commands.
+const FRAME_SPEC: RegistrySpec = RegistrySpec {
+    registry: "FRAME_COMMANDS",
+    entry: "FrameCommand",
+    parse_fn: "opcode_of",
+    noun: "frame command",
+};
+
+/// Protocol coverage: cross-check the parse fn's match arms, the
+/// command registry, and the fns/tests declared in the file (which
+/// registry/parse fn is given by `spec`).
+fn protocol_pass(norm: &str, toks: &[Token], spec: &RegistrySpec, out: &mut Vec<Finding>) {
     let mut push = |line: usize, message: String| {
         out.push(Finding {
             rule: rule_id::PROTOCOL_COVERAGE,
@@ -485,7 +516,7 @@ fn protocol_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>) {
         let starts_parse_fn = matches!(&toks[i].tok, Tok::Ident(w) if w == "fn")
             && matches!(
                 next_code(toks, i),
-                Some(Token { tok: Tok::Ident(n), .. }) if n == "parse_request"
+                Some(Token { tok: Tok::Ident(n), .. }) if n == spec.parse_fn
             );
         if starts_parse_fn {
             found_parse = true;
@@ -519,17 +550,20 @@ fn protocol_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>) {
         i += 1;
     }
     if !found_parse {
-        push(1, "no `parse_request` fn found".to_string());
+        push(1, format!("no `{}` fn found", spec.parse_fn));
     }
-    // WIRE_COMMANDS registry entries
-    let entries = parse_registry(toks);
+    // registry entries
+    let entries = parse_registry(toks, spec);
     let Some(entries) = entries else {
-        push(1, "no `WIRE_COMMANDS` registry found".to_string());
+        push(1, format!("no `{}` registry found", spec.registry));
         return;
     };
     for (cmd, line) in &arms {
         if !entries.iter().any(|e| e.cmd == *cmd) {
-            push(*line, format!("wire command '{cmd}' parsed but missing from WIRE_COMMANDS"));
+            push(
+                *line,
+                format!("{} '{cmd}' parsed but missing from {}", spec.noun, spec.registry),
+            );
         }
     }
     for e in &entries {
@@ -550,12 +584,12 @@ fn protocol_pass(norm: &str, toks: &[Token], out: &mut Vec<Finding>) {
     }
 }
 
-/// Parse the `WIRE_COMMANDS` const initializer into entries, or `None`
-/// if the registry is absent.
-fn parse_registry(toks: &[Token]) -> Option<Vec<RegEntry>> {
+/// Parse the registry const initializer (`spec.registry`) into
+/// entries, or `None` if the registry is absent.
+fn parse_registry(toks: &[Token], spec: &RegistrySpec) -> Option<Vec<RegEntry>> {
     let start = toks
         .iter()
-        .position(|t| matches!(&t.tok, Tok::Ident(w) if w == "WIRE_COMMANDS"))?;
+        .position(|t| matches!(&t.tok, Tok::Ident(w) if w == spec.registry))?;
     // skip the type annotation: advance to the `=`, then the first `[`
     let mut i = start;
     while i < toks.len() && !matches!(toks[i].tok, Tok::Punct('=')) {
@@ -579,7 +613,7 @@ fn parse_registry(toks: &[Token]) -> Option<Vec<RegEntry>> {
                     break;
                 }
             }
-            Tok::Ident(w) if w == "WireCommand" && depth == 1 => {
+            Tok::Ident(w) if w == spec.entry && depth == 1 => {
                 if let Some(e) = cur.take() {
                     entries.push(e);
                 }

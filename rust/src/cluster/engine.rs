@@ -634,6 +634,43 @@ impl Engine {
         labels
     }
 
+    /// Labels plus each point's squared distance to its assigned
+    /// center — the per-point halves of [`Engine::assign_accumulate`]
+    /// before any reduction.  Both outputs are per-point and
+    /// position-independent: a row produces the same `(label, dist)`
+    /// bits wherever it sits in the buffer, which is what lets the
+    /// serving layer's micro-batcher concatenate many small predict
+    /// requests into one pass and then *replay* each request's inertia
+    /// fold exactly (sequential f64 adds within request-local blocks
+    /// of [`Engine::point_block`], block partials folded in order —
+    /// the same addition sequence [`Engine::assign_accumulate`] would
+    /// perform on the request alone; see `server/batch.rs`).
+    pub fn assign_with_distances(
+        &self,
+        points: &[f32],
+        dims: usize,
+        centers: &[f32],
+    ) -> (Vec<u32>, Vec<f32>) {
+        let m = points.len() / dims;
+        let pn = self.point_norms(points, dims);
+        let cnorm = center_norms(centers, dims);
+        let ctile = self.center_tile_for(dims);
+        let plan = self.kernel.resolve(dims).plan(centers, &cnorm, dims, ctile);
+        let plan: &dyn TilePlan = &*plan;
+        let blocks = self.blocks(m);
+        let parts = parallel_map(&blocks, self.workers, |_, &(lo, hi)| {
+            argmin_block(plan, points, dims, &pn, lo, hi)
+        });
+        let mut labels = Vec::with_capacity(m);
+        let mut dists = Vec::with_capacity(m);
+        for part in parts {
+            let (l, d) = part.expect("engine block cannot panic");
+            labels.extend(l);
+            dists.extend(d);
+        }
+        (labels, dists)
+    }
+
     /// Total within-cluster sum of squares against `centers` (no
     /// per-point buffers: chunk distances fold straight into the f64
     /// accumulator, in point order within each block).
@@ -1404,6 +1441,45 @@ mod tests {
         }
         assert_eq!(labels, reference.labels);
         assert_eq!(inertia.to_bits(), reference.inertia.to_bits());
+    }
+
+    #[test]
+    fn batched_distances_replay_per_request_inertia() {
+        // the micro-batcher's contract: run one pass over a
+        // concatenation of requests, then reproduce each request's
+        // labels / counts / inertia bit-for-bit from the per-point
+        // outputs — request-local fold in blocks of point_block,
+        // exactly like a standalone pass over the request alone
+        let pts = cloud(700, 3, 55);
+        // awkward request boundaries: not block-aligned, one tiny
+        let splits: [usize; 4] = [130, 1, 333, 236];
+        for workers in [1usize, 4] {
+            let e = Engine::new(workers);
+            let centers = pts[..6 * 3].to_vec();
+            let (labels, dists) = e.assign_with_distances(&pts, 3, &centers);
+            let pb = e.point_block();
+            let mut row = 0usize;
+            for &m in &splits {
+                let seg = &pts[row * 3..(row + m) * 3];
+                let reference = e.assign_accumulate(seg, 3, &centers);
+                assert_eq!(&labels[row..row + m], &reference.labels[..], "workers={workers}");
+                let mut replay = 0.0f64;
+                for chunk in dists[row..row + m].chunks(pb) {
+                    let mut part = 0.0f64;
+                    for &d in chunk {
+                        part += d as f64;
+                    }
+                    replay += part;
+                }
+                assert_eq!(
+                    replay.to_bits(),
+                    reference.inertia.to_bits(),
+                    "workers={workers} request rows={m}"
+                );
+                row += m;
+            }
+            assert_eq!(row, 700);
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::kernel::KernelMode;
 use crate::partition::Scheme;
 use crate::pipeline::PipelineConfig;
 use crate::runtime::BackendKind;
+use crate::server::ProtocolMode;
 use crate::telemetry::EventLog;
 
 /// One parsed `key = value`.
@@ -140,6 +141,13 @@ pub struct AppConfig {
     /// Registry snapshot directory (write on shutdown, reload on
     /// boot); `None` disables persistence.
     pub snapshot_dir: Option<PathBuf>,
+    /// Wire protocol(s) the server accepts (`auto` | `jsonl` | `binary`).
+    pub protocol: ProtocolMode,
+    /// Predict micro-batch coalescing window in microseconds (0 = off).
+    pub coalesce_us: u64,
+    /// Serve with the readiness reactor (default) instead of the
+    /// legacy thread-per-connection loop.
+    pub reactor: bool,
 }
 
 impl Default for AppConfig {
@@ -150,6 +158,9 @@ impl Default for AppConfig {
             queue_depth: 16,
             model_cap: crate::server::DEFAULT_MODEL_CAP,
             snapshot_dir: None,
+            protocol: ProtocolMode::Auto,
+            coalesce_us: 0,
+            reactor: true,
         }
     }
 }
@@ -244,6 +255,18 @@ impl AppConfig {
             "server.snapshot_dir" => {
                 self.snapshot_dir =
                     Some(PathBuf::from(value.as_str().ok_or_else(|| bad("string"))?));
+            }
+            "server.protocol" => {
+                let s = value.as_str().ok_or_else(|| bad("string"))?;
+                self.protocol = ProtocolMode::parse(s).ok_or_else(|| {
+                    Error::Config(format!("{key}: expected auto|jsonl|binary, got '{s}'"))
+                })?;
+            }
+            "server.coalesce_us" => {
+                self.coalesce_us = value.as_usize().ok_or_else(|| bad("usize"))? as u64;
+            }
+            "server.reactor" => {
+                self.reactor = value.as_bool().ok_or_else(|| bad("bool"))?;
             }
             "cluster.workers" => {
                 // comma-separated host:port list; empty disables the
@@ -420,6 +443,32 @@ mod tests {
         // rounds = 0 is the spelled-out "automatic" default
         let t = parse_toml_lite("[pipeline]\ninit_rounds = 0\n").unwrap();
         assert_eq!(AppConfig::from_table(&t).unwrap().pipeline.init_rounds, None);
+    }
+
+    #[test]
+    fn builds_serving_config() {
+        let t = parse_toml_lite(
+            r#"
+            [server]
+            protocol = "binary"
+            coalesce_us = 250
+            reactor = false
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_table(&t).unwrap();
+        assert_eq!(cfg.protocol, ProtocolMode::Binary);
+        assert_eq!(cfg.coalesce_us, 250);
+        assert!(!cfg.reactor);
+        // defaults: auto-negotiated protocol, coalescing off, reactor on
+        let cfg = AppConfig::default();
+        assert_eq!(cfg.protocol, ProtocolMode::Auto);
+        assert_eq!(cfg.coalesce_us, 0);
+        assert!(cfg.reactor);
+        let t = parse_toml_lite("[server]\nprotocol = \"carrier-pigeon\"\n").unwrap();
+        assert!(AppConfig::from_table(&t).is_err());
+        let t = parse_toml_lite("[server]\ncoalesce_us = \"soon\"\n").unwrap();
+        assert!(AppConfig::from_table(&t).is_err());
     }
 
     #[test]

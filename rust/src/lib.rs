@@ -151,6 +151,45 @@
 //! `benches/init_quality.rs` tracks the wall-time win and seed
 //! quality).
 //!
+//! ## Serving
+//!
+//! `parsample serve` is an event-driven model server.  One listener
+//! speaks two wire formats, negotiated per connection by the first
+//! bytes: JSON lines ([`server::protocol`]) and a length-prefixed
+//! binary framing opened by the `PSF1` preamble ([`server::frame`] —
+//! the full frame spec lives in that module's docs).  Binary predicts
+//! ship `f32` rows in and `u32` labels out as raw little-endian bits,
+//! so no text roundtrip ever touches the numbers; `--protocol
+//! auto|jsonl|binary` (config: `server.protocol`) pins one format.
+//!
+//! Connections are served by a readiness **reactor**
+//! (`server/reactor.rs`): one thread drives accept/read/write over
+//! non-blocking sockets via `poll(2)`, so idle connections cost a
+//! table slot instead of a parked thread.  Slow consumers hit a
+//! bounded per-connection write queue and have their read side paused
+//! (`backpressure` counter) rather than buffering without limit;
+//! heavy jobs (`cluster`/`fit`/`fit_group`) still run on their own
+//! threads behind the fit gate.  `--no-reactor` (config:
+//! `server.reactor = false`) falls back to the legacy
+//! thread-per-connection loop, which answers byte-identically.
+//!
+//! Predicts arriving within `--coalesce-us N` (config:
+//! `server.coalesce_us`, reactor only) are **coalesced** into one
+//! engine pass per model ([`server`]'s `batch` module).  Because the
+//! engine's reduction is blocked and order-deterministic, the packed
+//! pass replays each request's label slice, count bins, and f64
+//! inertia fold exactly — coalesced replies are bit-identical to
+//! per-request execution, which is pinned by
+//! `rust/tests/serve_concurrency.rs` across {JSON, binary} ×
+//! {coalescing on, off} × {reactor, legacy}.  Serving counters
+//! (connections, decoded frames, batch sizes, backpressure episodes —
+//! [`telemetry::ServeStats`]) ride the `stats` command next to the
+//! scheduler's, and every accept/close/batch/backpressure occurrence
+//! is a reason-tagged [`telemetry::events::EventLog`] event.
+//! `benches/serve_load.rs` tracks predicts/s and tail latency across
+//! protocol × connection count × coalescing (`BENCH_serve.json` in
+//! CI).
+//!
 //! ## Invariants
 //!
 //! The guarantees above are not prose: each one is mechanically
@@ -184,7 +223,10 @@
 //! * **Wire coverage** — every command in `server/protocol.rs` must be
 //!   registered in its `WIRE_COMMANDS` table with a parse arm, an
 //!   encode fn, and named roundtrip tests that exist
-//!   (`protocol-coverage`).
+//!   (`protocol-coverage`).  The same pass runs over the binary
+//!   protocol: `server/frame.rs` commands must be registered in
+//!   `FRAME_COMMANDS` with an `opcode_of` arm, their encode fn, and
+//!   roundtrip tests.
 //!
 //! The per-file rules above are joined by three **whole-crate** rules
 //! that walk the item-level call graph the linter builds across every

@@ -28,7 +28,7 @@ use parsample::model::{FittedModel, ModelSpec};
 use parsample::partition::Scheme;
 use parsample::pipeline::{PipelineConfig, SubclusterPipeline};
 use parsample::runtime::{BackendKind, Manifest};
-use parsample::server::{Server, ServerConfig};
+use parsample::server::{ProtocolMode, Server, ServerConfig};
 use parsample::util::threadpool::default_workers;
 
 fn main() -> ExitCode {
@@ -89,8 +89,9 @@ fn print_usage() {
          \x20           assign points with a saved model (no re-clustering)\n\
          \x20 generate  --size M [--seed S] --out FILE[.csv|.bin]          paper synthetic workload\n\
          \x20 partition --data ... --groups G [--scheme ...]               dump group sizes\n\
-         \x20 serve     [--addr HOST:PORT] [--backend ...] [--queue N]     JSON-lines job server\n\
+         \x20 serve     [--addr HOST:PORT] [--backend ...] [--queue N]     clustering job server\n\
          \x20           [--models m1.json,m2.json] [--model-cap N] [--snapshot-dir DIR]\n\
+         \x20           [--protocol auto|jsonl|binary] [--coalesce-us N] [--no-reactor]\n\
          \x20           protocol cmds: cluster (one-shot), fit/predict/models (serve-many),\n\
          \x20           ping, stats — fitted models live in an in-process LRU registry\n\
          \x20 buckets   [--artifacts DIR]                                  AOT bucket table\n\n\
@@ -123,6 +124,13 @@ fn print_usage() {
          random access and spill the stream into memory (documented fallback).\n\
          --snapshot-dir DIR persists the serve registry: models are written there on\n\
          shutdown and reloaded on boot, so a restarted server comes back warm.\n\
+         serve speaks two wire protocols on one port: JSON lines and a length-\n\
+         prefixed binary framing negotiated by a PSF1 preamble (--protocol pins one;\n\
+         see rust/src/server/frame.rs for the frame spec).  --coalesce-us N packs\n\
+         predicts arriving within N microseconds into one engine pass — labels are\n\
+         bit-identical to per-request execution (0 = off, the default).  --no-reactor\n\
+         falls back to the legacy thread-per-connection loop; also available as\n\
+         server.protocol / server.coalesce_us / server.reactor in --config.\n\
          --join H:P,... (pipeline algo only) distributes the local clustering stage\n\
          across running `parsample serve` workers, with per-dispatch deadlines,\n\
          retry/requeue with capped backoff, worker quarantine + re-admission, and\n\
@@ -656,6 +664,17 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     if let Some(dir) = &cfg.snapshot_dir {
         println!("registry snapshots: {} (write on shutdown, reload on boot)", dir.display());
     }
+    cfg.protocol = match flags.get("protocol") {
+        Some(s) => ProtocolMode::parse(s).ok_or_else(|| {
+            Error::Config(format!("--protocol: expected auto|jsonl|binary, got '{s}'"))
+        })?,
+        None => app.protocol,
+    };
+    cfg.coalesce_us = match flags.usize("coalesce-us")? {
+        Some(us) => us as u64,
+        None => app.coalesce_us,
+    };
+    cfg.reactor = !flags.bool("no-reactor") && app.reactor;
     if preload.len() > cfg.model_cap {
         return Err(Error::Config(format!(
             "--models lists {} models but the registry cap is {} (raise --model-cap)",
@@ -664,11 +683,17 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         )));
     }
     cfg.preload = preload;
+    let protocol = cfg.protocol;
+    let coalesce_us = cfg.coalesce_us;
+    let reactor = cfg.reactor;
     let server = Server::start_with(&addr, cfg)?;
     println!("parsample serving on {} (backend {:?})", server.addr(), backend);
     println!(
-        "protocol: one JSON object per line (cluster | fit | predict | models | ping | stats); \
-         see rust/src/server/protocol.rs"
+        "protocol {} (JSON lines: rust/src/server/protocol.rs; binary frames: \
+         rust/src/server/frame.rs), {} loop, predict coalescing {}",
+        protocol.as_str(),
+        if reactor { "reactor" } else { "thread-per-connection" },
+        if coalesce_us == 0 { "off".to_string() } else { format!("{coalesce_us}us") },
     );
     // serve until killed
     loop {

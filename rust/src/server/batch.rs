@@ -1,0 +1,492 @@
+//! Predict micro-batch coalescing: pack concurrent `predict` requests
+//! against the same model into one engine pass.
+//!
+//! Under many simultaneous clients the per-request engine dispatch
+//! (plan setup, thread fan-out) dominates small predicts.  The reactor
+//! therefore parks incoming predicts in a [`Coalescer`] for up to
+//! `server.coalesce_us` microseconds (0 disables coalescing), then
+//! hands the accumulated batch to [`execute`], which groups requests
+//! by model name (arrival order preserved), concatenates each group's
+//! rows into one buffer, runs a single
+//! [`Engine::assign_with_distances`] sweep, and scatters the label
+//! slices back per request.
+//!
+//! # Bit-exactness contract
+//!
+//! Coalescing must be invisible to clients: the labels, counts, and
+//! inertia of every reply are **bit-identical** to what the same
+//! request would have produced alone through the per-request path
+//! ([`FittedModel::predict_batch_with`]).  Labels and counts are
+//! position-independent per point, so slicing a shared pass is exact
+//! by construction.  Inertia is the one order-sensitive value: the
+//! per-request path folds each point's f32 distance into f64 partials
+//! over [`Engine::point_block`]-sized blocks anchored at the
+//! *request's* offset 0, merging partials in block order.
+//! [`fold_inertia`] replays exactly that fold over the request's slice
+//! of the shared distance buffer, so the f64 comes out bit-identical
+//! (pinned by `batched_distances_replay_per_request_inertia` in the
+//! engine and by `rust/tests/serve_concurrency.rs` over the wire).
+//!
+//! [`Engine::assign_with_distances`]: crate::cluster::Engine::assign_with_distances
+//! [`Engine::point_block`]: crate::cluster::Engine::point_block
+//! [`FittedModel::predict_batch_with`]: crate::model::FittedModel::predict_batch_with
+
+use std::time::{Duration, Instant};
+
+use crate::cluster::EngineOpts;
+use crate::telemetry::{EventLog, ServeStats};
+use crate::util::json::Json;
+
+use super::frame::{encode_error_frame, encode_labels_frame};
+use super::protocol::{encode_error, PredictJob, PredictionEncoder};
+use super::registry::ModelRegistry;
+
+/// One predict request parked for coalescing.
+pub(crate) struct PendingPredict {
+    /// Reactor connection token the reply routes back to.
+    pub conn: usize,
+    /// Per-connection sequence number (replies flush in request order).
+    pub seq: u64,
+    /// Reply encoding: binary labels frame vs JSON line.
+    pub binary: bool,
+    pub job: PredictJob,
+}
+
+/// A fully encoded reply ready for the connection's write queue.
+pub(crate) struct Reply {
+    pub conn: usize,
+    pub seq: u64,
+    pub bytes: Vec<u8>,
+}
+
+/// Arrival-ordered holding pen for predicts within the coalesce
+/// window.  Owned by the reactor thread (no locking); the reactor
+/// feeds [`Coalescer::timeout`] into its `poll` timeout so the window
+/// deadline wakes it even when no socket is ready.
+pub(crate) struct Coalescer {
+    window: Duration,
+    pending: Vec<PendingPredict>,
+    /// Deadline of the currently open window (set by the first push).
+    due: Option<Instant>,
+}
+
+impl Coalescer {
+    pub fn new(window_us: u64) -> Coalescer {
+        Coalescer {
+            window: Duration::from_micros(window_us),
+            pending: Vec::new(),
+            due: None,
+        }
+    }
+
+    /// False when `server.coalesce_us` is 0: predicts execute
+    /// immediately, batch-of-one.
+    pub fn enabled(&self) -> bool {
+        !self.window.is_zero()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Park a predict.  The first push of a window arms the deadline;
+    /// later pushes ride the same window (bounded delay per request).
+    pub fn push(&mut self, p: PendingPredict, now: Instant) {
+        if self.pending.is_empty() {
+            self.due = Some(now + self.window);
+        }
+        self.pending.push(p);
+    }
+
+    /// Time until the open window closes (None when nothing is
+    /// parked).  Zero once the deadline has passed.
+    pub fn timeout(&self, now: Instant) -> Option<Duration> {
+        self.due.map(|d| d.saturating_duration_since(now))
+    }
+
+    /// Has the open window expired?
+    pub fn is_due(&self, now: Instant) -> bool {
+        self.due.is_some_and(|d| now >= d)
+    }
+
+    /// Drain the parked batch (arrival order) and close the window.
+    pub fn take(&mut self) -> Vec<PendingPredict> {
+        self.due = None;
+        std::mem::take(&mut self.pending)
+    }
+}
+
+/// Replay the per-request inertia fold over one request's slice of
+/// the shared distance buffer: sequential f64 accumulation within
+/// `point_block`-sized chunks (anchored at the slice's start), chunk
+/// partials merged in order — exactly the reduction the per-request
+/// engine pass performs.
+fn fold_inertia(dists: &[f32], point_block: usize) -> f64 {
+    let mut total = 0.0f64;
+    for chunk in dists.chunks(point_block.max(1)) {
+        let mut partial = 0.0f64;
+        for &d in chunk {
+            partial += d as f64;
+        }
+        total += partial;
+    }
+    total
+}
+
+/// Encode the per-request error reply in the request's own protocol.
+fn error_reply(p: &PendingPredict, msg: &str) -> Reply {
+    let bytes = if p.binary {
+        encode_error_frame(msg)
+    } else {
+        let mut line = encode_error(None, msg).into_bytes();
+        line.push(b'\n');
+        line
+    };
+    Reply { conn: p.conn, seq: p.seq, bytes }
+}
+
+/// Validate one parked job against its model, mirroring the
+/// per-request path's messages exactly.  Ok(rows) on success.
+fn validate(job: &PredictJob, model_dims: usize) -> std::result::Result<usize, String> {
+    if job.dims != model_dims {
+        return Err(format!(
+            "points have {} dims, model '{}' expects {}",
+            job.dims, job.name, model_dims
+        ));
+    }
+    if job.points.is_empty() || job.points.len() % job.dims != 0 {
+        return Err(format!(
+            "points buffer of {} values is not a non-empty multiple of dims {}",
+            job.points.len(),
+            job.dims
+        ));
+    }
+    Ok(job.points.len() / job.dims)
+}
+
+/// Execute a drained batch: group by model name (arrival order), one
+/// engine pass per group, scatter encoded replies.  Invalid requests
+/// (unknown model, dim/shape mismatch) get per-request error replies
+/// with the same messages as the per-request path.  Replies come back
+/// in batch arrival order.
+pub(crate) fn execute(
+    batch: Vec<PendingPredict>,
+    registry: &ModelRegistry,
+    opts: EngineOpts,
+    stats: &ServeStats,
+    events: &EventLog,
+) -> Vec<Reply> {
+    use std::sync::atomic::Ordering;
+
+    if batch.is_empty() {
+        return Vec::new();
+    }
+    // Group indices by model name, preserving arrival order both
+    // across groups and within each.  Linear scan: batches are small
+    // (bounded by the window) and this avoids hashing.
+    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for (i, p) in batch.iter().enumerate() {
+        match groups.iter_mut().find(|(name, _)| *name == p.job.name) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((p.job.name.clone(), vec![i])),
+        }
+    }
+
+    let mut replies: Vec<Option<Reply>> = batch.iter().map(|_| None).collect();
+    for (name, idxs) in &groups {
+        let model = match registry.get(name) {
+            Some(m) => m,
+            None => {
+                let msg =
+                    format!("unknown model '{name}' (fit it first, or check cmd models)");
+                for &i in idxs {
+                    replies[i] = Some(error_reply(&batch[i], &msg));
+                }
+                continue;
+            }
+        };
+        let dims = model.dims();
+        // Validate each request; concatenate the valid rows.
+        let mut valid: Vec<(usize, usize, usize)> = Vec::new(); // (idx, lo, hi) in rows
+        let mut points: Vec<f32> = Vec::new();
+        let mut rows_total = 0usize;
+        for &i in idxs {
+            match validate(&batch[i].job, dims) {
+                Ok(rows) => {
+                    points.extend_from_slice(&batch[i].job.points);
+                    valid.push((i, rows_total, rows_total + rows));
+                    rows_total += rows;
+                }
+                Err(msg) => replies[i] = Some(error_reply(&batch[i], &msg)),
+            }
+        }
+        if valid.is_empty() {
+            continue;
+        }
+        let engine = opts.build_engine();
+        let (labels, dists) = engine.assign_with_distances(&points, dims, model.centers());
+        let pb = engine.point_block();
+        let k = model.k();
+        for &(i, lo, hi) in &valid {
+            let req_labels = &labels[lo..hi];
+            let mut counts = vec![0u32; k];
+            for &l in req_labels {
+                counts[l as usize] += 1;
+            }
+            let inertia = fold_inertia(&dists[lo..hi], pb);
+            let p = &batch[i];
+            let bytes = if p.binary {
+                encode_labels_frame(req_labels, &counts, inertia)
+            } else {
+                let mut enc = PredictionEncoder::new(name);
+                enc.push_labels(req_labels);
+                let mut line = enc.finish(&counts, inertia).into_bytes();
+                line.push(b'\n');
+                line
+            };
+            replies[i] = Some(Reply { conn: p.conn, seq: p.seq, bytes });
+        }
+        registry.note_predicts(name, valid.len() as u64);
+        events.emit(
+            "batch",
+            vec![
+                ("model", Json::str(name.as_str())),
+                ("requests", Json::num(valid.len() as f64)),
+                ("rows", Json::num(rows_total as f64)),
+            ],
+        );
+        stats.predict_batches.fetch_add(1, Ordering::Relaxed);
+        stats.batched_predicts.fetch_add(valid.len() as u64, Ordering::Relaxed);
+        stats.max_batch.fetch_max(valid.len() as u64, Ordering::Relaxed);
+    }
+    replies.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::InitMethod;
+    use crate::model::{FitMeta, FittedModel};
+    use crate::server::frame::decode_labels_frame;
+    use crate::util::json::Json as J;
+
+    fn cloud(n: usize, dims: usize, seed: u64) -> Vec<f32> {
+        let mut state = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+        let mut out = Vec::with_capacity(n * dims);
+        for _ in 0..n * dims {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            out.push(((state >> 40) as f32) / 1e6);
+        }
+        out
+    }
+
+    fn fitted(name_tag: f64, centers: Vec<f32>, dims: usize) -> FittedModel {
+        let k = centers.len() / dims;
+        FittedModel::new(
+            FitMeta {
+                algorithm: "kmeans".into(),
+                k,
+                dims,
+                trained_on: 10,
+                inertia: name_tag,
+                iterations: 1,
+                engine: EngineOpts::serial(),
+                init: InitMethod::KMeansPlusPlus,
+                init_params: crate::cluster::InitParams::default(),
+            },
+            centers,
+            None,
+        )
+        .expect("test model is valid")
+    }
+
+    fn pending(conn: usize, seq: u64, binary: bool, name: &str, points: Vec<f32>, dims: usize) -> PendingPredict {
+        PendingPredict {
+            conn,
+            seq,
+            binary,
+            job: PredictJob { name: name.into(), points, dims },
+        }
+    }
+
+    #[test]
+    fn coalescer_window_arms_on_first_push() {
+        let mut c = Coalescer::new(500);
+        assert!(c.enabled());
+        assert!(c.is_empty());
+        let t0 = Instant::now();
+        assert_eq!(c.timeout(t0), None);
+        assert!(!c.is_due(t0));
+        c.push(pending(0, 0, false, "m", vec![1.0, 2.0], 2), t0);
+        // second push does not extend the deadline
+        c.push(pending(1, 0, false, "m", vec![3.0, 4.0], 2), t0 + Duration::from_micros(200));
+        let left = c.timeout(t0 + Duration::from_micros(400)).expect("window armed");
+        assert!(left <= Duration::from_micros(100), "left={left:?}");
+        assert!(!c.is_due(t0 + Duration::from_micros(499)));
+        assert!(c.is_due(t0 + Duration::from_micros(500)));
+        let drained = c.take();
+        assert_eq!(drained.len(), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.timeout(t0), None);
+    }
+
+    #[test]
+    fn disabled_coalescer_reports_zero_window() {
+        let mut c = Coalescer::new(0);
+        assert!(!c.enabled());
+        let t0 = Instant::now();
+        c.push(pending(0, 0, false, "m", vec![1.0], 1), t0);
+        // window of zero is due immediately
+        assert!(c.is_due(t0));
+        assert_eq!(c.timeout(t0), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn batched_replies_are_bit_identical_to_per_request_path() {
+        let dims = 3;
+        let pts = cloud(240, dims, 7);
+        let centers = pts[..5 * dims].to_vec();
+        let registry = ModelRegistry::new(4);
+        registry.insert("m", fitted(0.0, centers, dims));
+        let opts = EngineOpts::default().with_workers(4);
+        let stats = ServeStats::default();
+        let events = EventLog::capture();
+
+        // Three requests with deliberately non-aligned row counts.
+        let reqs: Vec<Vec<f32>> = vec![
+            pts[..37 * dims].to_vec(),
+            pts[37 * dims..38 * dims].to_vec(),
+            pts[38 * dims..].to_vec(),
+        ];
+        let batch = vec![
+            pending(0, 0, true, "m", reqs[0].clone(), dims),
+            pending(1, 0, false, "m", reqs[1].clone(), dims),
+            pending(0, 1, true, "m", reqs[2].clone(), dims),
+        ];
+        let replies = execute(batch, &registry, opts, &stats, &events);
+        assert_eq!(replies.len(), 3);
+
+        let model = registry.get("m").expect("registered");
+        for (reply, req) in replies.iter().zip(&reqs) {
+            let reference = model.predict_batch_with(req, opts).expect("reference predict");
+            if reply.bytes[4] == crate::server::frame::OP_LABELS {
+                let body = &reply.bytes[5..];
+                let (labels, counts, inertia) = decode_labels_frame(body).expect("labels frame");
+                assert_eq!(labels, reference.labels);
+                assert_eq!(counts, reference.counts);
+                assert_eq!(inertia.to_bits(), reference.inertia.to_bits());
+            } else {
+                let line = std::str::from_utf8(&reply.bytes).expect("utf8 json");
+                let v = J::parse(line.trim_end()).expect("json reply");
+                let labels: Vec<u32> = v
+                    .get("labels")
+                    .and_then(|l| l.as_arr())
+                    .expect("labels array")
+                    .iter()
+                    .map(|x| x.as_usize().expect("label int") as u32)
+                    .collect();
+                assert_eq!(labels, reference.labels);
+            }
+        }
+        assert_eq!(stats.predict_batches.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(stats.batched_predicts.load(std::sync::atomic::Ordering::Relaxed), 3);
+        assert_eq!(stats.max_batch.load(std::sync::atomic::Ordering::Relaxed), 3);
+        assert_eq!(events.count("batch"), 1);
+    }
+
+    #[test]
+    fn mixed_models_group_in_arrival_order() {
+        let dims = 2;
+        let registry = ModelRegistry::new(4);
+        registry.insert("a", fitted(0.0, vec![0.0, 0.0, 10.0, 10.0], dims));
+        registry.insert("b", fitted(0.0, vec![-5.0, -5.0, 5.0, 5.0], dims));
+        let stats = ServeStats::default();
+        let events = EventLog::off();
+        let batch = vec![
+            pending(0, 0, false, "a", vec![0.1, 0.1], dims),
+            pending(1, 0, false, "b", vec![4.0, 4.0], dims),
+            pending(2, 0, false, "a", vec![9.0, 9.0], dims),
+        ];
+        let replies = execute(batch, &registry, EngineOpts::serial(), &stats, &events);
+        assert_eq!(replies.len(), 3);
+        // replies come back in arrival order with their routing intact
+        assert_eq!(
+            replies.iter().map(|r| r.conn).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        let label_of = |r: &Reply| {
+            let v = J::parse(std::str::from_utf8(&r.bytes).expect("utf8").trim_end())
+                .expect("json");
+            v.get("labels").and_then(|l| l.as_arr()).expect("arr")[0]
+                .as_usize()
+                .expect("int")
+        };
+        assert_eq!(label_of(&replies[0]), 0);
+        assert_eq!(label_of(&replies[1]), 1);
+        assert_eq!(label_of(&replies[2]), 1);
+        // two engine passes, one per model
+        assert_eq!(stats.predict_batches.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(stats.max_batch.load(std::sync::atomic::Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn invalid_requests_get_per_request_errors_with_parity_messages() {
+        let dims = 2;
+        let registry = ModelRegistry::new(4);
+        registry.insert("m", fitted(0.0, vec![0.0, 0.0], dims));
+        let stats = ServeStats::default();
+        let events = EventLog::off();
+        let batch = vec![
+            pending(0, 0, false, "ghost", vec![1.0, 1.0], dims),
+            pending(1, 0, false, "m", vec![1.0, 1.0, 1.0], 3),
+            pending(2, 0, true, "m", vec![], dims),
+            pending(3, 0, false, "m", vec![0.5, 0.5], dims),
+        ];
+        let replies = execute(batch, &registry, EngineOpts::serial(), &stats, &events);
+        assert_eq!(replies.len(), 4);
+        let err_text = |r: &Reply| {
+            String::from_utf8(r.bytes.clone()).expect("utf8 error line")
+        };
+        assert!(err_text(&replies[0])
+            .contains("unknown model 'ghost' (fit it first, or check cmd models)"));
+        assert!(err_text(&replies[1]).contains("points have 3 dims, model 'm' expects 2"));
+        // binary error frame carries the same message in its body
+        assert_eq!(replies[2].bytes[4], crate::server::frame::OP_ERROR);
+        assert!(String::from_utf8_lossy(&replies[2].bytes[5..])
+            .contains("points buffer of 0 values is not a non-empty multiple of dims 2"));
+        // the valid request still succeeds in the same batch
+        let v = J::parse(err_text(&replies[3]).trim_end()).expect("json");
+        assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(true));
+        // only the valid request counts toward batching stats
+        assert_eq!(stats.batched_predicts.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn fold_inertia_matches_blockwise_reference() {
+        let dists: Vec<f32> = (0..100).map(|i| (i as f32) * 0.31 + 0.07).collect();
+        // block size 32: partials over [0..32), [32..64), [64..96), [96..100)
+        let mut want = 0.0f64;
+        for chunk in dists.chunks(32) {
+            let mut p = 0.0f64;
+            for &d in chunk {
+                p += d as f64;
+            }
+            want += p;
+        }
+        assert_eq!(fold_inertia(&dists, 32).to_bits(), want.to_bits());
+        // degenerate block size clamps to 1
+        assert!(fold_inertia(&dists, 0).is_finite());
+        assert!(fold_inertia(&[], 32) == 0.0);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let registry = ModelRegistry::new(1);
+        let stats = ServeStats::default();
+        let events = EventLog::off();
+        assert!(execute(Vec::new(), &registry, EngineOpts::serial(), &stats, &events).is_empty());
+        assert_eq!(stats.predict_batches.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+}

@@ -1,0 +1,524 @@
+//! Length-prefixed binary frames: the JSON-lines alternative for the
+//! predict hot path.
+//!
+//! JSON text round-trips every f32 through shortest-roundtrip decimal
+//! — exact, but ~3× the bytes and a parse per value.  Frames ship the
+//! raw little-endian bits instead: the codec is bit-exact by
+//! construction, and a predict request is one `memcpy`-shaped decode.
+//! Frames decode into the same [`Request`] / [`PredictJob`] values as
+//! [`super::protocol::parse_request`], so everything downstream of the
+//! parse (dispatch, registry, engine, micro-batcher) is shared with
+//! the JSON path byte for byte.
+//!
+//! # Negotiation
+//!
+//! A connection opts into frames by sending the 4-byte magic preamble
+//! [`FRAME_MAGIC`] (`"PSF1"`) as its very first bytes.  JSON-lines
+//! requests start with `{` (or whitespace), which can never collide
+//! with `b'P'`, so existing clients keep working unchanged: a first
+//! byte other than `b'P'` selects JSON-lines mode immediately.  A
+//! first byte of `b'P'` whose following three bytes are not the rest
+//! of the magic is a protocol error (there is no way to resync) — the
+//! server answers with a JSON error line and closes.
+//!
+//! # Versioning
+//!
+//! The trailing `1` in the magic is the protocol version.  A future
+//! incompatible layout bumps it (`"PSF2"`); a server that does not
+//! speak the offered version rejects the preamble, so version skew
+//! fails loudly at connect time instead of corrupting mid-stream.
+//!
+//! # Wire layout
+//!
+//! After the preamble, both directions carry a sequence of frames:
+//!
+//! | offset | size | field                                          |
+//! |--------|------|------------------------------------------------|
+//! | 0      | 4    | `len` — u32 LE, bytes that follow (>= 1)       |
+//! | 4      | 1    | opcode                                         |
+//! | 5      | len-1| body                                           |
+//!
+//! `len` counts the opcode plus the body and is capped at
+//! [`MAX_FRAME_BYTES`] (the JSON path's [`super::MAX_REQUEST_BYTES`]
+//! line bound, applied before any admission check runs).  Request
+//! opcodes: [`OP_PING`] (empty body), [`OP_PREDICT`].  Response
+//! opcodes: [`OP_PONG`] (empty), [`OP_LABELS`], [`OP_ERROR`] (UTF-8
+//! message).  Unknown opcodes, short/overlong bodies, and oversized
+//! or zero-length frames are rejected with typed [`Error::Server`]
+//! values — never a panic (the `no-panic-path` lint holds this file
+//! to that).
+//!
+//! `predict` request body:
+//!
+//! | field     | size        | encoding                             |
+//! |-----------|-------------|--------------------------------------|
+//! | name_len  | 2           | u16 LE, 1..=[`MAX_MODEL_NAME`]       |
+//! | name      | name_len    | UTF-8                                |
+//! | dims      | 4           | u32 LE, >= 1                         |
+//! | rows      | 4           | u32 LE, >= 1                         |
+//! | points    | 4·rows·dims | f32 LE raw bits, row-major           |
+//!
+//! `labels` response body:
+//!
+//! | field   | size    | encoding                                   |
+//! |---------|---------|--------------------------------------------|
+//! | rows    | 4       | u32 LE                                     |
+//! | labels  | 4·rows  | u32 LE                                     |
+//! | k       | 4       | u32 LE                                     |
+//! | counts  | 4·k     | u32 LE                                     |
+//! | inertia | 8       | f64 LE raw bits                            |
+//!
+//! The command set is registered in [`FRAME_COMMANDS`] and
+//! cross-checked by the `protocol-coverage` lint family exactly like
+//! `protocol.rs`'s `WIRE_COMMANDS`: every registered command must
+//! have an [`opcode_of`] arm, a declared response encoder, and named
+//! `#[test]` roundtrip coverage in this file.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use crate::error::{Error, Result};
+
+use super::protocol::{PredictJob, Request, MAX_MODEL_NAME};
+use super::MAX_REQUEST_BYTES;
+
+/// Connection preamble that selects binary framing (version 1).
+pub const FRAME_MAGIC: [u8; 4] = *b"PSF1";
+
+/// Cap on one frame's `len` field — the binary analogue of the JSON
+/// path's [`super::MAX_REQUEST_BYTES`] line bound.
+pub const MAX_FRAME_BYTES: usize = MAX_REQUEST_BYTES;
+
+/// Request: liveness probe, empty body.
+pub const OP_PING: u8 = 0x01;
+/// Request: assign rows against a registered model.
+pub const OP_PREDICT: u8 = 0x02;
+/// Response to [`OP_PING`], empty body.
+pub const OP_PONG: u8 = 0x81;
+/// Response to [`OP_PREDICT`]: labels + counts + inertia.
+pub const OP_LABELS: u8 = 0x82;
+/// Response: UTF-8 error message (any request can fail).
+pub const OP_ERROR: u8 = 0x7f;
+
+/// One registered frame command (the binary mirror of
+/// [`super::protocol::WireCommand`], consumed by the coverage lint).
+pub struct FrameCommand {
+    /// Command name (shared vocabulary with the JSON commands).
+    pub cmd: &'static str,
+    /// Request opcode; [`opcode_of`] must map `cmd` to exactly this.
+    pub opcode: u8,
+    /// Response encoder fn declared in this file.
+    pub encode: &'static str,
+    /// Roundtrip `#[test]` fns in this file covering the command.
+    pub tests: &'static [&'static str],
+}
+
+/// Every binary-frame command the server answers.
+pub const FRAME_COMMANDS: &[FrameCommand] = &[
+    FrameCommand {
+        cmd: "ping",
+        opcode: OP_PING,
+        encode: "encode_pong_frame",
+        tests: &["ping_frame_roundtrips"],
+    },
+    FrameCommand {
+        cmd: "predict",
+        opcode: OP_PREDICT,
+        encode: "encode_labels_frame",
+        tests: &[
+            "predict_frame_roundtrips_exact_bits",
+            "labels_frame_roundtrips_exact_bits",
+            "malformed_predict_frames_are_rejected",
+        ],
+    },
+];
+
+/// Request opcode for a command name (the frame-side "parse arm"
+/// table the coverage lint cross-checks against [`FRAME_COMMANDS`]).
+pub fn opcode_of(cmd: &str) -> Option<u8> {
+    match cmd {
+        "ping" => Some(OP_PING),
+        "predict" => Some(OP_PREDICT),
+        _ => None,
+    }
+}
+
+fn le_u16(buf: &[u8], off: usize) -> Option<u16> {
+    let b = buf.get(off..off + 2)?;
+    Some(u16::from_le_bytes([b[0], b[1]]))
+}
+
+fn le_u32(buf: &[u8], off: usize) -> Option<u32> {
+    let b = buf.get(off..off + 4)?;
+    Some(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+/// Try to split one complete frame off the front of `buf`.
+///
+/// * `Ok(None)` — the buffer does not yet hold a whole frame; read
+///   more bytes and call again (truncation is only an error at EOF,
+///   which the caller sees as a closed connection mid-frame).
+/// * `Ok(Some((opcode, body, consumed)))` — one frame; the caller
+///   drains `consumed` bytes.
+/// * `Err` — unrecoverable framing error (zero-length or oversized
+///   `len`); the connection cannot be resynced and must be dropped.
+pub fn take_frame(buf: &[u8]) -> Result<Option<(u8, Vec<u8>, usize)>> {
+    let Some(len) = le_u32(buf, 0) else {
+        return Ok(None);
+    };
+    let len = len as usize;
+    if len == 0 {
+        return Err(Error::Server("zero-length frame".into()));
+    }
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::Server(format!(
+            "frame of {len} bytes exceeds the {MAX_FRAME_BYTES} byte cap"
+        )));
+    }
+    let Some(rest) = buf.get(4..4 + len) else {
+        return Ok(None);
+    };
+    Ok(Some((rest[0], rest[1..].to_vec(), 4 + len)))
+}
+
+/// Decode one request frame into the shared [`Request`] type.
+pub fn decode_request(opcode: u8, body: &[u8]) -> Result<Request> {
+    match opcode {
+        OP_PING => {
+            if !body.is_empty() {
+                return Err(Error::Server("ping frame carries a body".into()));
+            }
+            Ok(Request::Ping)
+        }
+        OP_PREDICT => Ok(Request::Predict(decode_predict_body(body)?)),
+        other => Err(Error::Server(format!("unknown request opcode 0x{other:02x}"))),
+    }
+}
+
+fn decode_predict_body(body: &[u8]) -> Result<PredictJob> {
+    let bad = |what: &str| Error::Server(format!("malformed predict frame: {what}"));
+    let name_len = le_u16(body, 0).ok_or_else(|| bad("missing name length"))? as usize;
+    if name_len == 0 || name_len > MAX_MODEL_NAME {
+        return Err(bad("model name length out of 1..=128"));
+    }
+    let name_bytes = body.get(2..2 + name_len).ok_or_else(|| bad("truncated name"))?;
+    let name = std::str::from_utf8(name_bytes)
+        .map_err(|_| bad("name is not valid utf-8"))?
+        .to_string();
+    let mut off = 2 + name_len;
+    let dims = le_u32(body, off).ok_or_else(|| bad("missing dims"))? as usize;
+    off += 4;
+    let rows = le_u32(body, off).ok_or_else(|| bad("missing rows"))? as usize;
+    off += 4;
+    if dims == 0 || rows == 0 {
+        return Err(bad("dims and rows must be >= 1"));
+    }
+    let expected = (rows as u64)
+        .checked_mul(dims as u64)
+        .and_then(|v| v.checked_mul(4))
+        .ok_or_else(|| bad("rows * dims overflows"))?;
+    let have = (body.len() - off) as u64;
+    if have != expected {
+        return Err(bad("row data length does not match rows * dims"));
+    }
+    let mut points = Vec::with_capacity(rows * dims);
+    let mut chunks = body[off..].chunks_exact(4);
+    for c in &mut chunks {
+        points.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(PredictJob { name, points, dims })
+}
+
+/// Assemble one frame: `[len:u32 LE][opcode][body]`.
+pub fn encode_frame(opcode: u8, body: &[u8]) -> Vec<u8> {
+    let len = (body.len() + 1) as u32;
+    let mut out = Vec::with_capacity(body.len() + 5);
+    out.extend_from_slice(&len.to_le_bytes());
+    out.push(opcode);
+    out.extend_from_slice(body);
+    out
+}
+
+/// Response to a ping.
+pub fn encode_pong_frame() -> Vec<u8> {
+    encode_frame(OP_PONG, &[])
+}
+
+/// Response to a predict: labels + counts + inertia, raw LE bits —
+/// the same values the JSON path's `PredictionEncoder` would emit as
+/// text, so the two protocols answer bit-identically.
+pub fn encode_labels_frame(labels: &[u32], counts: &[u32], inertia: f64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(4 + 4 * labels.len() + 4 + 4 * counts.len() + 8);
+    body.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+    for &l in labels {
+        body.extend_from_slice(&l.to_le_bytes());
+    }
+    body.extend_from_slice(&(counts.len() as u32).to_le_bytes());
+    for &c in counts {
+        body.extend_from_slice(&c.to_le_bytes());
+    }
+    body.extend_from_slice(&inertia.to_le_bytes());
+    encode_frame(OP_LABELS, &body)
+}
+
+/// Error response frame (UTF-8 message body).
+pub fn encode_error_frame(message: &str) -> Vec<u8> {
+    encode_frame(OP_ERROR, message.as_bytes())
+}
+
+/// Client-side predict request frame.
+pub fn encode_predict_frame(name: &str, points: &[f32], dims: usize) -> Result<Vec<u8>> {
+    if name.is_empty() || name.len() > MAX_MODEL_NAME {
+        return Err(Error::Server(format!(
+            "model name must be 1..={MAX_MODEL_NAME} bytes"
+        )));
+    }
+    if dims == 0 || points.is_empty() || points.len() % dims != 0 {
+        return Err(Error::Server(format!(
+            "points buffer of {} values is not a non-empty multiple of dims {dims}",
+            points.len()
+        )));
+    }
+    let mut body = Vec::with_capacity(2 + name.len() + 8 + 4 * points.len());
+    body.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    body.extend_from_slice(name.as_bytes());
+    body.extend_from_slice(&(dims as u32).to_le_bytes());
+    body.extend_from_slice(&((points.len() / dims) as u32).to_le_bytes());
+    for &x in points {
+        body.extend_from_slice(&x.to_le_bytes());
+    }
+    Ok(encode_frame(OP_PREDICT, &body))
+}
+
+/// Client-side decode of an [`OP_LABELS`] body.
+pub fn decode_labels_frame(body: &[u8]) -> Result<(Vec<u32>, Vec<u32>, f64)> {
+    let bad = |what: &str| Error::Server(format!("malformed labels frame: {what}"));
+    let rows = le_u32(body, 0).ok_or_else(|| bad("missing rows"))? as usize;
+    let mut off = 4;
+    let mut labels = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        labels.push(le_u32(body, off).ok_or_else(|| bad("truncated labels"))?);
+        off += 4;
+    }
+    let k = le_u32(body, off).ok_or_else(|| bad("missing k"))? as usize;
+    off += 4;
+    let mut counts = Vec::with_capacity(k);
+    for _ in 0..k {
+        counts.push(le_u32(body, off).ok_or_else(|| bad("truncated counts"))?);
+        off += 4;
+    }
+    let tail = body.get(off..).ok_or_else(|| bad("missing inertia"))?;
+    if tail.len() != 8 {
+        return Err(bad("inertia field is not 8 bytes"));
+    }
+    let inertia = f64::from_le_bytes([
+        tail[0], tail[1], tail[2], tail[3], tail[4], tail[5], tail[6], tail[7],
+    ]);
+    Ok((labels, counts, inertia))
+}
+
+/// Minimal blocking binary-protocol client for examples, tests, and
+/// the serve benches (the binary peer of [`super::Client`]).
+pub struct FrameClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl FrameClient {
+    /// Connect and send the magic preamble.
+    pub fn connect(addr: SocketAddr) -> Result<FrameClient> {
+        let mut stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Server(format!("connect {addr}: {e}")))?;
+        stream.write_all(&FRAME_MAGIC)?;
+        Ok(FrameClient { stream, buf: Vec::new() })
+    }
+
+    /// Send one request frame, read one response frame.
+    pub fn call(&mut self, frame: &[u8]) -> Result<(u8, Vec<u8>)> {
+        self.stream.write_all(frame)?;
+        self.stream.flush()?;
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some((opcode, body, consumed)) = take_frame(&self.buf)? {
+                self.buf.drain(..consumed);
+                return Ok((opcode, body));
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(Error::Server("connection closed mid-frame".into()));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        let (opcode, body) = self.call(&encode_frame(OP_PING, &[]))?;
+        match opcode {
+            OP_PONG => Ok(()),
+            OP_ERROR => Err(Error::Server(String::from_utf8_lossy(&body).into_owned())),
+            other => Err(Error::Server(format!("unexpected reply opcode 0x{other:02x}"))),
+        }
+    }
+
+    /// Predict `points` against registered model `name`; returns
+    /// `(labels, counts, inertia)` — the exact bits of a local
+    /// [`crate::model::FittedModel::predict_batch`].
+    pub fn predict(
+        &mut self,
+        name: &str,
+        points: &[f32],
+        dims: usize,
+    ) -> Result<(Vec<u32>, Vec<u32>, f64)> {
+        let req = encode_predict_frame(name, points, dims)?;
+        let (opcode, body) = self.call(&req)?;
+        match opcode {
+            OP_LABELS => decode_labels_frame(&body),
+            OP_ERROR => Err(Error::Server(String::from_utf8_lossy(&body).into_owned())),
+            other => Err(Error::Server(format!("unexpected reply opcode 0x{other:02x}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_command_table_is_wellformed() {
+        assert!(!FRAME_COMMANDS.is_empty());
+        for c in FRAME_COMMANDS {
+            assert!(!c.cmd.is_empty());
+            assert!(!c.encode.is_empty());
+            assert!(!c.tests.is_empty(), "'{}' must name roundtrip tests", c.cmd);
+            assert_eq!(opcode_of(c.cmd), Some(c.opcode), "'{}' opcode mismatch", c.cmd);
+        }
+        let mut ops: Vec<u8> = FRAME_COMMANDS.iter().map(|c| c.opcode).collect();
+        ops.sort_unstable();
+        ops.dedup();
+        assert_eq!(ops.len(), FRAME_COMMANDS.len(), "duplicate opcode");
+        assert_eq!(opcode_of("models"), None, "json-only command has no frame opcode");
+    }
+
+    #[test]
+    fn ping_frame_roundtrips() {
+        let f = encode_frame(OP_PING, &[]);
+        assert_eq!(f, vec![1, 0, 0, 0, OP_PING]);
+        let (op, body, consumed) = take_frame(&f).unwrap().expect("whole frame");
+        assert_eq!((op, body.as_slice(), consumed), (OP_PING, &[][..], 5));
+        assert!(matches!(decode_request(op, &body), Ok(Request::Ping)));
+        let pong = encode_pong_frame();
+        let (op, body, _) = take_frame(&pong).unwrap().expect("whole frame");
+        assert_eq!((op, body.len()), (OP_PONG, 0));
+        // a ping with a body is malformed, not a panic
+        assert!(decode_request(OP_PING, &[1]).is_err());
+    }
+
+    #[test]
+    fn predict_frame_roundtrips_exact_bits() {
+        // awkward bit patterns: -0.0, subnormal, max, tiny
+        let pts: Vec<f32> = vec![-0.0, f32::MIN_POSITIVE / 2.0, f32::MAX, 1e-45, 3.5, -7.25];
+        let f = encode_predict_frame("prod", &pts, 3).unwrap();
+        let (op, body, consumed) = take_frame(&f).unwrap().expect("whole frame");
+        assert_eq!(consumed, f.len());
+        let Ok(Request::Predict(job)) = decode_request(op, &body) else {
+            panic!("expected a predict request");
+        };
+        assert_eq!(job.name, "prod");
+        assert_eq!(job.dims, 3);
+        let got: Vec<u32> = job.points.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = pts.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want, "f32 codec must be bit-exact");
+    }
+
+    #[test]
+    fn labels_frame_roundtrips_exact_bits() {
+        let labels = vec![0u32, 2, 2, 1, u32::MAX];
+        let counts = vec![1u32, 1, 2];
+        let inertia = -0.125f64 + f64::MIN_POSITIVE;
+        let f = encode_labels_frame(&labels, &counts, inertia);
+        let (op, body, _) = take_frame(&f).unwrap().expect("whole frame");
+        assert_eq!(op, OP_LABELS);
+        let (l, c, i) = decode_labels_frame(&body).unwrap();
+        assert_eq!((l, c), (labels, counts));
+        assert_eq!(i.to_bits(), inertia.to_bits());
+    }
+
+    #[test]
+    fn partial_frames_ask_for_more_bytes() {
+        let f = encode_predict_frame("m", &[1.0, 2.0], 2).unwrap();
+        for cut in 0..f.len() {
+            assert!(
+                take_frame(&f[..cut]).unwrap().is_none(),
+                "prefix of {cut} bytes is not a whole frame"
+            );
+        }
+        // two frames back to back: the first splits off cleanly
+        let mut two = f.clone();
+        two.extend_from_slice(&encode_frame(OP_PING, &[]));
+        let (_, _, consumed) = take_frame(&two).unwrap().expect("first frame");
+        assert_eq!(consumed, f.len());
+    }
+
+    #[test]
+    fn oversized_and_zero_frames_are_rejected() {
+        let mut f = vec![0u8; 8];
+        f[..4].copy_from_slice(&(((MAX_FRAME_BYTES + 1) as u32).to_le_bytes()));
+        assert!(take_frame(&f).is_err(), "len over cap");
+        let zero = [0u8, 0, 0, 0];
+        assert!(take_frame(&zero).is_err(), "zero-length frame");
+    }
+
+    #[test]
+    fn malformed_predict_frames_are_rejected() {
+        // unknown opcode
+        assert!(decode_request(0x42, &[]).is_err());
+        // empty body
+        assert!(decode_request(OP_PREDICT, &[]).is_err());
+        // name length over the cap
+        let mut body = ((MAX_MODEL_NAME + 1) as u16).to_le_bytes().to_vec();
+        body.extend_from_slice(&vec![b'x'; MAX_MODEL_NAME + 1]);
+        assert!(decode_request(OP_PREDICT, &body).is_err());
+        // zero-length name
+        assert!(decode_request(OP_PREDICT, &[0, 0]).is_err());
+        // non-utf8 name
+        let mut body = 1u16.to_le_bytes().to_vec();
+        body.push(0xff);
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(decode_request(OP_PREDICT, &body).is_err());
+        // dims = 0
+        let mut body = 1u16.to_le_bytes().to_vec();
+        body.push(b'm');
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        assert!(decode_request(OP_PREDICT, &body).is_err());
+        // row data shorter than rows * dims
+        let mut body = 1u16.to_le_bytes().to_vec();
+        body.push(b'm');
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(decode_request(OP_PREDICT, &body).is_err());
+        // trailing bytes after the rows
+        let good = encode_predict_frame("m", &[1.0, 2.0], 2).unwrap();
+        let mut body = good[5..].to_vec();
+        body.push(0);
+        assert!(decode_request(OP_PREDICT, &body).is_err());
+    }
+
+    #[test]
+    fn error_frame_carries_utf8_message() {
+        let f = encode_error_frame("unknown model 'x'");
+        let (op, body, _) = take_frame(&f).unwrap().expect("whole frame");
+        assert_eq!(op, OP_ERROR);
+        assert_eq!(std::str::from_utf8(&body).unwrap(), "unknown model 'x'");
+    }
+
+    #[test]
+    fn magic_first_byte_is_not_json() {
+        assert_eq!(FRAME_MAGIC[0], b'P');
+        assert_ne!(FRAME_MAGIC[0], b'{');
+    }
+}

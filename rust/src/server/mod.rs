@@ -1,51 +1,80 @@
-//! Clustering job server: JSON-lines over TCP, bounded-queue
-//! backpressure, request latency telemetry, and a serve-many model
-//! registry (fit once, predict thousands of times).
+//! Clustering job server: JSON-lines or binary frames over TCP,
+//! bounded-queue backpressure, request latency telemetry, and a
+//! serve-many model registry (fit once, predict thousands of times).
 //!
-//! The offline image ships no async runtime (no tokio — DESIGN.md §3),
-//! so the server is a std::net accept loop with one handler thread per
-//! connection capped by the scheduler's bounded queue: when the
-//! dispatch queue is full, `cluster` requests get an immediate
-//! `{"ok":false,"error":"queue full"}` instead of piling up.
+//! The offline image ships no async runtime (no tokio — DESIGN.md §3).
+//! The default serving path is a readiness-driven **reactor**
+//! (`server/reactor.rs`): one thread multiplexes every connection over
+//! `poll(2)`, so ten thousand idle clients cost ten thousand fds, not
+//! ten thousand parked threads.  Heavy requests (`cluster`, `fit`,
+//! `fit_group`) still get a worker thread each — bounded by the
+//! scheduler's queue and the [`FitGate`] exactly as before — while
+//! `ping`/`stats`/`models`/`predict` are served on the reactor
+//! thread.  Setting [`ServerConfig::reactor`] to `false` restores the
+//! legacy thread-per-connection loop (also the fallback on non-unix
+//! targets); both paths produce bit-identical responses.
+//!
+//! Two wire protocols share every listener, negotiated by the first
+//! bytes of the connection (see `server/frame.rs` for the rule and
+//! the frame layout): JSON lines, unchanged, and a length-prefixed
+//! binary framing that ships predict rows as raw f32 and labels back
+//! as raw u32 — no float formatting on the hot path.
 //!
 //! Request lifecycles:
 //!
 //! * `cluster` — one-shot: runs the whole pipeline on the scheduler's
 //!   dispatch thread and returns everything.
 //! * `fit` / `predict` / `models` — serve-many: `fit` runs a
-//!   [`crate::model::ModelSpec`] on the handler thread and registers
+//!   [`crate::model::ModelSpec`] on a worker thread and registers
 //!   the [`FittedModel`] in an LRU-capped [`ModelRegistry`]; `predict`
 //!   assigns against a registered model with the server's engine knobs
 //!   (cheap — no re-clustering); `models` lists the registry.
 //!
-//! Fits run on handler threads (so the scheduler queue stays free for
-//! `cluster` jobs) but are *not* unbounded: a [`FitGate`] capped at the
-//! scheduler's queue depth rejects excess concurrent fits with an
-//! immediate `fit queue full` error, preserving the server's overload
-//! behaviour for its heaviest request type.
+//! Concurrent predicts can additionally be **coalesced**
+//! ([`ServerConfig::coalesce_us`], reactor only): requests against the
+//! same model arriving within the window are packed into one engine
+//! pass and the label slices scattered back, bit-identical to
+//! per-request execution (`server/batch.rs` documents the contract).
 //!
-//! Handler streams block in `read` with no poll interval: every live
-//! connection's socket is tracked in a shared table, and
-//! [`Server::shutdown`] closes them via `Shutdown::Both`, which makes
-//! a blocked read return immediately — no wakeup floor, no
-//! timeout-split byte accumulation.  A write timeout
-//! ([`WRITE_TIMEOUT`]) covers the other direction: a client that never
-//! drains its responses can't park a handler in `write_all` past the
-//! stop flag.  Finished handler threads are *joined*, not dropped, so
-//! a handler panic surfaces in the server's log instead of vanishing.
+//! Fits are *not* unbounded: a [`FitGate`] capped at the scheduler's
+//! queue depth rejects excess concurrent fits with an immediate
+//! `fit queue full` error, preserving the server's overload behaviour
+//! for its heaviest request type.
+//!
+//! On the legacy path, handler streams block in `read` with no poll
+//! interval: every live connection's socket is tracked in a shared
+//! table, and [`Server::shutdown`] closes them via `Shutdown::Both`,
+//! which makes a blocked read return immediately.  A write timeout
+//! ([`WRITE_TIMEOUT`]) covers the other direction.  On the reactor
+//! path, shutdown is a stop flag plus one byte down the reactor's
+//! wake pipe.  Worker/handler threads are *joined*, not dropped, so a
+//! panic surfaces in the server's log instead of vanishing.
 //!
 //! `fit_group` — the distributed-fit worker command — runs one
-//! partition group's local stage on the handler thread under the same
-//! [`FitGate`] as `fit`, reproducing the coordinator's dispatch
-//! planning exactly (strided init, unit weights, b=1 exact shape) so
-//! the returned centers are bit-identical to a local run.
+//! partition group's local stage under the same [`FitGate`] as `fit`,
+//! reproducing the coordinator's dispatch planning exactly (strided
+//! init, unit weights, b=1 exact shape) so the returned centers are
+//! bit-identical to a local run.
+//!
+//! Observability: a [`ServeStats`] counter set (connections, decoded
+//! frames, coalesced-batch sizes, backpressure episodes) rides the
+//! `stats` response next to the scheduler counters, and an optional
+//! reason-tagged JSONL [`EventLog`] traces `accept`/`close`/
+//! `fit_start`/`fit_done`/`evict`/`batch`/`backpressure` per
+//! occurrence.
 
+mod batch;
+pub mod frame;
 pub mod protocol;
+#[cfg(unix)]
+mod reactor;
 pub mod registry;
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -59,7 +88,8 @@ use crate::data::source::SliceSource;
 use crate::error::{Error, Result};
 use crate::model::{FittedModel, ModelSpec};
 use crate::runtime::{Backend, DeviceBatch, NativeBackend};
-use crate::telemetry::LatencyHistogram;
+use crate::telemetry::{EventLog, LatencyHistogram, ServeStats};
+use crate::util::json::Json;
 use crate::util::threadpool::default_workers;
 use protocol::{
     encode_error, encode_fit_group_result, encode_fit_result, encode_models, encode_pong,
@@ -88,6 +118,42 @@ pub const MAX_REQUEST_BYTES: usize = 64 << 20;
 /// Default registry capacity (named fitted models held in memory).
 pub const DEFAULT_MODEL_CAP: usize = 16;
 
+/// Which wire protocol(s) a listener speaks (see `server/frame.rs`
+/// for the negotiation rule and the binary frame layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProtocolMode {
+    /// Sniff the first bytes of each connection: the `PSF1` preamble
+    /// selects binary frames, anything else is JSON lines.
+    #[default]
+    Auto,
+    /// JSON lines only — no sniffing, a leading `P` is just a (bad)
+    /// JSON line.
+    JsonLines,
+    /// Binary frames only — connections must open with the `PSF1`
+    /// preamble or are rejected.
+    Binary,
+}
+
+impl ProtocolMode {
+    /// Parse the CLI/config spelling (`auto` | `jsonl` | `binary`).
+    pub fn parse(s: &str) -> Option<ProtocolMode> {
+        match s {
+            "auto" => Some(ProtocolMode::Auto),
+            "jsonl" | "json" => Some(ProtocolMode::JsonLines),
+            "binary" => Some(ProtocolMode::Binary),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ProtocolMode::Auto => "auto",
+            ProtocolMode::JsonLines => "jsonl",
+            ProtocolMode::Binary => "binary",
+        }
+    }
+}
+
 /// Full server configuration: the scheduler for one-shot `cluster`
 /// jobs plus the serve-many knobs.
 pub struct ServerConfig {
@@ -107,6 +173,19 @@ pub struct ServerConfig {
     /// back (explicit `preload` entries win name collisions) — a
     /// restarted server comes back warm instead of refitting.
     pub snapshot_dir: Option<PathBuf>,
+    /// Wire protocol(s) accepted on this listener.
+    pub protocol: ProtocolMode,
+    /// Predict micro-batch coalescing window in microseconds (0 =
+    /// off).  Reactor path only; responses are bit-identical either
+    /// way (`server/batch.rs`).
+    pub coalesce_us: u64,
+    /// Serve connections with the readiness reactor (default) instead
+    /// of the legacy thread-per-connection loop.  Ignored (always
+    /// legacy) on non-unix targets.
+    pub reactor: bool,
+    /// Reason-tagged JSONL event sink for server lifecycle events
+    /// (off by default; see [`EventLog`]).
+    pub events: Arc<EventLog>,
 }
 
 impl Default for ServerConfig {
@@ -117,6 +196,10 @@ impl Default for ServerConfig {
             model_cap: DEFAULT_MODEL_CAP,
             preload: Vec::new(),
             snapshot_dir: None,
+            protocol: ProtocolMode::Auto,
+            coalesce_us: 0,
+            reactor: true,
+            events: EventLog::off(),
         }
     }
 }
@@ -176,7 +259,8 @@ impl Drop for FitPermit<'_> {
     }
 }
 
-/// Everything a handler thread needs, shared across connections.
+/// Everything a handler thread (or the reactor) needs, shared across
+/// connections.
 struct HandlerCtx {
     scheduler: Arc<Scheduler>,
     registry: Arc<ModelRegistry>,
@@ -184,6 +268,9 @@ struct HandlerCtx {
     fits: FitGate,
     latency: Arc<LatencyHistogram>,
     stop: Arc<AtomicBool>,
+    protocol: ProtocolMode,
+    serve: Arc<ServeStats>,
+    events: Arc<EventLog>,
 }
 
 /// Live handler sockets, keyed by an opaque token.  [`Server::shutdown`]
@@ -234,6 +321,11 @@ pub struct Server {
     sockets: SocketTable,
     pub latency: Arc<LatencyHistogram>,
     snapshot_dir: Option<PathBuf>,
+    serve: Arc<ServeStats>,
+    /// Write end of the reactor's wake pipe (reactor path only):
+    /// shutdown writes a byte to pull the reactor out of `poll`.
+    #[cfg(unix)]
+    wake: Option<UnixStream>,
 }
 
 impl Server {
@@ -275,13 +367,67 @@ impl Server {
         }
 
         let sockets: SocketTable = Arc::new(Mutex::new(HashMap::new()));
+        let serve = Arc::new(ServeStats::default());
         let accept_stop = Arc::clone(&stop);
         let accept_latency = Arc::clone(&latency);
         let accept_registry = Arc::clone(&registry);
+        let accept_serve = Arc::clone(&serve);
+        let accept_events = Arc::clone(&cfg.events);
         let accept_sockets = Arc::clone(&sockets);
         let engine = cfg.engine;
+        let protocol = cfg.protocol;
         let scheduler_cfg = cfg.scheduler;
         let fit_cap = scheduler_cfg.queue_depth;
+
+        #[cfg(unix)]
+        if cfg.reactor {
+            let coalesce_us = cfg.coalesce_us;
+            listener
+                .set_nonblocking(true)
+                .map_err(|e| Error::Server(format!("set_nonblocking: {e}")))?;
+            let (wake_rx, wake_tx) = UnixStream::pair()
+                .map_err(|e| Error::Server(format!("wake pipe: {e}")))?;
+            wake_rx
+                .set_nonblocking(true)
+                .map_err(|e| Error::Server(format!("wake pipe: {e}")))?;
+            // wake writes must never block a worker thread; a full
+            // pipe already has a wakeup in flight
+            wake_tx
+                .set_nonblocking(true)
+                .map_err(|e| Error::Server(format!("wake pipe: {e}")))?;
+            let done_wake = wake_tx
+                .try_clone()
+                .map_err(|e| Error::Server(format!("wake pipe: {e}")))?;
+            let accept_handle = std::thread::spawn(move || {
+                // the scheduler (and its PJRT client) lives on this
+                // thread's children; one scheduler serves everything
+                let ctx = Arc::new(HandlerCtx {
+                    scheduler: Arc::new(Scheduler::start(scheduler_cfg)),
+                    registry: accept_registry,
+                    engine,
+                    fits: FitGate::new(fit_cap),
+                    latency: accept_latency,
+                    stop: accept_stop,
+                    protocol,
+                    serve: accept_serve,
+                    events: accept_events,
+                });
+                let done = Arc::new(reactor::DoneQueue::new(done_wake));
+                reactor::run(listener, ctx, coalesce_us, wake_rx, done);
+            });
+            return Ok(Server {
+                addr: bound,
+                stop,
+                accept_handle: Some(accept_handle),
+                registry,
+                sockets,
+                latency,
+                snapshot_dir,
+                serve,
+                wake: Some(wake_tx),
+            });
+        }
+
         let accept_handle = std::thread::spawn(move || {
             // the scheduler (and its PJRT client) lives on this thread's
             // children; one scheduler serves all connections
@@ -292,6 +438,9 @@ impl Server {
                 fits: FitGate::new(fit_cap),
                 latency: accept_latency,
                 stop: accept_stop,
+                protocol,
+                serve: accept_serve,
+                events: accept_events,
             });
             let mut handlers: Vec<JoinHandle<()>> = Vec::new();
             for stream in listener.incoming() {
@@ -304,9 +453,18 @@ impl Server {
                         // register before the handler thread exists so
                         // shutdown can never miss a just-accepted socket
                         let guard = SocketGuard::register(&accept_sockets, &stream);
+                        ctx.serve.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                        ctx.serve.connections_open.fetch_add(1, Ordering::Relaxed);
+                        let peer = stream
+                            .peer_addr()
+                            .map(|p| p.to_string())
+                            .unwrap_or_else(|_| "?".to_string());
+                        ctx.events.emit("accept", vec![("peer", Json::str(peer))]);
                         handlers.push(std::thread::spawn(move || {
                             let _guard = guard;
                             let _ = handle_connection(stream, &ctx);
+                            ctx.serve.connections_open.fetch_sub(1, Ordering::Relaxed);
+                            ctx.events.emit("close", vec![]);
                         }));
                     }
                     Err(_) => continue,
@@ -326,6 +484,9 @@ impl Server {
             sockets,
             latency,
             snapshot_dir,
+            serve,
+            #[cfg(unix)]
+            wake: None,
         })
     }
 
@@ -338,6 +499,12 @@ impl Server {
         &self.registry
     }
 
+    /// Server-level counters (connections, frames, coalesced batches,
+    /// backpressure) — also surfaced in the `stats` response.
+    pub fn stats(&self) -> &Arc<ServeStats> {
+        &self.serve
+    }
+
     /// Stop accepting, force-close every handler socket, and join the
     /// accept loop.  Closing the sockets (`Shutdown::Both`) makes
     /// blocked handler reads return immediately, so shutdown latency
@@ -347,7 +514,13 @@ impl Server {
     /// the next boot comes back warm.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // wake every handler parked in a blocking read
+        // reactor path: one byte down the wake pipe ends the poll loop
+        #[cfg(unix)]
+        if let Some(wake) = self.wake.as_ref() {
+            let mut writer: &UnixStream = wake;
+            let _ = writer.write(&[1u8]);
+        }
+        // legacy path: wake every handler parked in a blocking read
         for s in lock_table(&self.sockets).values() {
             let _ = s.shutdown(Shutdown::Both);
         }
@@ -497,8 +670,48 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
     stream
         .set_write_timeout(Some(WRITE_TIMEOUT))
         .map_err(|e| Error::Server(format!("set_write_timeout: {e}")))?;
+    // replies are single buffered writes; never Nagle-delay them
+    let _ = stream.set_nodelay(true);
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    // Protocol negotiation on the first bytes (same rule as the
+    // reactor; `server/frame.rs` documents it): the PSF1 preamble
+    // selects binary frames, anything else stays JSON lines.
+    let binary = match ctx.protocol {
+        ProtocolMode::JsonLines => false,
+        ProtocolMode::Auto | ProtocolMode::Binary => {
+            let first = {
+                let peeked = reader.fill_buf()?;
+                match peeked.first() {
+                    Some(&b) => b,
+                    None => return Ok(()), // EOF before any request
+                }
+            };
+            if first == frame::FRAME_MAGIC[0] || ctx.protocol == ProtocolMode::Binary {
+                let mut magic = [0u8; 4];
+                reader.read_exact(&mut magic)?;
+                if magic != frame::FRAME_MAGIC {
+                    if ctx.protocol == ProtocolMode::Binary {
+                        writer.write_all(&frame::encode_error_frame(
+                            "expected PSF1 frame preamble",
+                        ))?;
+                    } else {
+                        let err = encode_error(None, "bad frame preamble (expected PSF1)");
+                        writer.write_all(err.as_bytes())?;
+                        writer.write_all(b"\n")?;
+                    }
+                    writer.flush()?;
+                    return Ok(());
+                }
+                true
+            } else {
+                false
+            }
+        }
+    };
+    if binary {
+        return serve_frames(reader, &mut writer, ctx);
+    }
     // Accumulate raw bytes, not a String: UTF-8 is checked once per
     // complete line (read_line would reject a line wholesale, but the
     // raw buffer lets us answer with a proper error response).
@@ -541,6 +754,77 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
     Ok(())
 }
 
+/// Serve one binary-frame connection on the legacy (blocking) path.
+/// The frame protocol's request opcodes are `ping` and `predict`;
+/// predicts run through the micro-batcher as a batch of one, so the
+/// reply bytes are identical to the reactor path's.  A malformed
+/// length header gets an error frame and drops the connection (no way
+/// to resync); an undecodable body is answered and the stream
+/// continues, since framing is still intact.
+fn serve_frames(
+    mut reader: BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    ctx: &HandlerCtx,
+) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 64 << 10];
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match frame::take_frame(&buf) {
+            Ok(Some((opcode, body, consumed))) => {
+                buf.drain(..consumed);
+                ctx.serve.frames_decoded.fetch_add(1, Ordering::Relaxed);
+                let t0 = Instant::now();
+                let reply = match frame::decode_request(opcode, &body) {
+                    Ok(Request::Ping) => frame::encode_pong_frame(),
+                    Ok(Request::Predict(job)) => {
+                        let pending =
+                            batch::PendingPredict { conn: 0, seq: 0, binary: true, job };
+                        match batch::execute(
+                            vec![pending],
+                            &ctx.registry,
+                            ctx.engine,
+                            &ctx.serve,
+                            &ctx.events,
+                        )
+                        .pop()
+                        {
+                            Some(r) => r.bytes,
+                            None => frame::encode_error_frame(
+                                "internal: predict produced no reply",
+                            ),
+                        }
+                    }
+                    Ok(_) => frame::encode_error_frame(
+                        "opcode not supported on binary connections",
+                    ),
+                    Err(e) => frame::encode_error_frame(&e.to_string()),
+                };
+                ctx.latency.record(t0.elapsed());
+                writer.write_all(&reply)?;
+                writer.flush()?;
+            }
+            Ok(None) => {
+                // truncated frame: pull more bytes (blocks; shutdown's
+                // forced close makes this return 0)
+                let n = reader.read(&mut tmp)?;
+                if n == 0 {
+                    break; // clean EOF mid-frame
+                }
+                buf.extend_from_slice(&tmp[..n]);
+            }
+            Err(e) => {
+                writer.write_all(&frame::encode_error_frame(&e.to_string()))?;
+                writer.flush()?;
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Parse/dispatch one complete request line and write the response
 /// (empty lines are keep-alive no-ops).
 fn serve_line(buf: &[u8], ctx: &HandlerCtx, writer: &mut TcpStream) -> Result<()> {
@@ -560,14 +844,19 @@ fn serve_line(buf: &[u8], ctx: &HandlerCtx, writer: &mut TcpStream) -> Result<()
     Ok(())
 }
 
+/// The `stats` response: scheduler counters, then the serving-layer
+/// [`ServeStats`], then per-model predict counters.
+fn encode_stats_for(ctx: &HandlerCtx) -> String {
+    let mut counters = ctx.scheduler.counters.snapshot();
+    counters.extend(ctx.serve.snapshot());
+    encode_stats(&counters, &ctx.registry.predict_stats())
+}
+
 /// Parse and execute one request line.
 fn dispatch(line: &str, ctx: &HandlerCtx) -> String {
     match parse_request(line) {
         Ok(Request::Ping) => encode_pong(),
-        Ok(Request::Stats) => encode_stats(
-            &ctx.scheduler.counters.snapshot(),
-            &ctx.registry.predict_stats(),
-        ),
+        Ok(Request::Stats) => encode_stats_for(ctx),
         Ok(Request::Models) => encode_models(&ctx.registry.list()),
         Ok(Request::Cluster(job)) => {
             let id = job.id;
@@ -649,6 +938,14 @@ fn run_fit(ctx: &HandlerCtx, job: FitJob) -> Result<String> {
         .try_acquire()
         .ok_or_else(|| Error::Server("fit queue full".into()))?;
     let t0 = Instant::now();
+    ctx.events.emit(
+        "fit_start",
+        vec![
+            ("model", Json::str(job.name.as_str())),
+            ("k", Json::num(job.k as f64)),
+            ("points", Json::num((job.points.len() / job.dims.max(1)) as f64)),
+        ],
+    );
     let data = crate::data::Dataset::new(job.points, job.dims)?;
     // clients may pick bounds/kernel (bit-identical knobs), but the
     // worker count stays under the server's control
@@ -675,12 +972,21 @@ fn run_fit(ctx: &HandlerCtx, job: FitJob) -> Result<String> {
         remote: None,
     };
     let model = spec.fit(&data)?;
-    let response = encode_fit_result(&job.name, &model, t0.elapsed().as_secs_f64() * 1e3);
+    let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let response = encode_fit_result(&job.name, &model, elapsed_ms);
+    ctx.events.emit(
+        "fit_done",
+        vec![
+            ("model", Json::str(job.name.as_str())),
+            ("ms", Json::num(elapsed_ms)),
+        ],
+    );
     if let Some(evicted) = ctx.registry.insert(job.name, model) {
         // leave a server-side trace: the evicted model's owner will see
         // "unknown model" on its next predict, and this is the only
         // place that knows why
         eprintln!("parsample server: model cap reached; fit evicted '{evicted}'");
+        ctx.events.emit("evict", vec![("model", Json::str(evicted))]);
     }
     Ok(response)
 }

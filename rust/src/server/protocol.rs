@@ -917,6 +917,7 @@ mod tests {
                 iterations: 4,
                 engine: EngineOpts::serial(),
                 init: InitMethod::KMeansParallel,
+                init_params: crate::cluster::InitParams::default(),
             },
             vec![0.0, 0.0, 1.0, 1.0],
             None,

@@ -1,0 +1,821 @@
+//! Readiness-driven connection reactor: one thread multiplexes every
+//! client socket over `poll(2)` instead of parking a handler thread
+//! per connection.
+//!
+//! The offline image ships no async runtime and no libc *crate*, but
+//! the process is already linked against libc itself — so the reactor
+//! hand-declares the one syscall wrapper it needs (`poll`) and drives
+//! non-blocking `std::net` sockets with it.  Design points:
+//!
+//! * **The reactor thread owns all connection state.**  Sockets,
+//!   input buffers, pending-write queues, and the coalescer live in
+//!   plain (unshared) maps on the reactor thread, so the hot path
+//!   takes no locks at all.
+//! * **Heavy requests keep their threads.**  `cluster`, `fit`, and
+//!   `fit_group` spawn a worker thread exactly like the legacy path
+//!   (still bounded by the scheduler queue and the [`FitGate`]); the
+//!   worker pushes its encoded reply onto the [`DoneQueue`] and nudges
+//!   the reactor's wake pipe, which is the only cross-thread state.
+//! * **Replies flush in request order per connection.**  Every parsed
+//!   request takes a sequence number; out-of-order completions (a
+//!   quick `ping` behind a slow `fit`) park in a `BTreeMap` until
+//!   their turn.
+//! * **Slow consumers get bounded.**  A connection whose un-flushed
+//!   reply bytes exceed [`OUT_BUFFER_LIMIT`] stops being polled for
+//!   readability (one `backpressure` event + counter per episode)
+//!   until its queue drains — it cannot make the server buffer
+//!   unboundedly by sending requests faster than it reads replies.
+//! * **Predict coalescing rides the poll timeout.**  Parked predicts
+//!   set the `poll` timeout to the window deadline (millisecond
+//!   granularity), so the batch flushes on time even when no socket
+//!   is ready; see [`super::batch`] for the bit-exactness contract.
+//!
+//! Shutdown: [`super::Server::shutdown`] sets the stop flag and writes
+//! a wake byte; the reactor breaks out of `poll`, joins its heavy
+//! workers, and drops every connection.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::batch::{self, Coalescer, PendingPredict, Reply};
+use super::frame::{
+    decode_request, encode_error_frame, encode_pong_frame, take_frame, FRAME_MAGIC,
+};
+use super::protocol::{
+    encode_error, encode_models, encode_pong, encode_result, parse_request, Request,
+};
+use super::{join_handler, HandlerCtx, ProtocolMode, MAX_REQUEST_BYTES};
+
+/// Un-flushed reply bytes a connection may queue before the reactor
+/// stops reading from it (8 MiB).  Large enough for a multi-MiB
+/// labels reply to stream out, small enough that a client that never
+/// reads cannot hoard memory.
+pub(crate) const OUT_BUFFER_LIMIT: usize = 8 << 20;
+
+/// Read chunk per readiness notification.
+const READ_CHUNK: usize = 64 << 10;
+
+// --- poll(2) via the already-linked libc ---------------------------
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+const EINTR: i32 = 4;
+
+/// Layout-compatible with libc's `struct pollfd` (man poll(2)): three
+/// fields, C order, no padding.
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+extern "C" {
+    /// `int poll(struct pollfd *fds, nfds_t nfds, int timeout);` —
+    /// provided by the libc every Rust binary on this platform is
+    /// already linked against (`nfds_t` is `unsigned long` on Linux).
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+}
+
+/// Block until a registered fd is ready or `timeout_ms` elapses,
+/// retrying on EINTR.  Returns false on an unrecoverable poll error.
+fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> bool {
+    loop {
+        // SAFETY: `fds` is a live, exclusively borrowed slice of
+        // `PollFd`, which is repr(C) and layout-compatible with
+        // libc's `struct pollfd`; the length passed is exactly the
+        // slice's length, and poll(2) does not retain the pointer
+        // past the call.
+        let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
+        if n >= 0 {
+            return true;
+        }
+        if std::io::Error::last_os_error().raw_os_error() == Some(EINTR) {
+            continue;
+        }
+        return false;
+    }
+}
+
+// --- cross-thread reply delivery -----------------------------------
+
+/// Replies finished off-thread (fit/cluster workers), plus the wake
+/// pipe that pulls the reactor out of `poll` to collect them.  This
+/// is the reactor's *only* shared mutable state; the lock is held for
+/// a single push or swap, never across I/O or another lock.
+pub(crate) struct DoneQueue {
+    replies: Mutex<Vec<Reply>>,
+    wake: UnixStream,
+}
+
+impl DoneQueue {
+    pub(crate) fn new(wake: UnixStream) -> DoneQueue {
+        DoneQueue { replies: Mutex::new(Vec::new()), wake }
+    }
+
+    /// Queue a finished reply and wake the reactor.  The wake write
+    /// happens *after* the guard drops (end of the push statement), so
+    /// no lock is ever held across I/O; a full or closed wake pipe is
+    /// fine — a byte is already in flight or the reactor is gone.
+    pub(crate) fn push(&self, reply: Reply) {
+        self.replies.lock().unwrap_or_else(|p| p.into_inner()).push(reply);
+        let _ = (&self.wake).write(&[1u8]);
+    }
+
+    fn drain(&self) -> Vec<Reply> {
+        std::mem::take(&mut *self.replies.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+}
+
+// --- per-connection state ------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// Waiting for the first bytes to pick JSON lines vs binary
+    /// frames (see `server/frame.rs` for the negotiation rule).
+    Negotiating,
+    Json,
+    Binary,
+}
+
+struct Conn {
+    stream: TcpStream,
+    mode: Mode,
+    /// Raw bytes read but not yet parsed into a line/frame.
+    inbuf: Vec<u8>,
+    /// Encoded replies being flushed, `written` bytes already sent.
+    out: Vec<u8>,
+    written: usize,
+    /// Sequence number the *next parsed request* will take.
+    next_seq: u64,
+    /// Sequence number the next flushed reply must carry.
+    next_flush: u64,
+    /// Replies that completed ahead of an earlier request.
+    parked: BTreeMap<u64, Vec<u8>>,
+    /// Readability polling suspended until `out` drains.
+    paused: bool,
+    /// Peer closed its write side; serve what's in flight, then close.
+    eof: bool,
+    /// Protocol error: stop reading, close once replies flush.
+    closing: bool,
+    /// Remove immediately (I/O error).
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, mode: Mode) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        // Replies are single buffered writes; never Nagle-delay them.
+        stream.set_nodelay(true)?;
+        Ok(Conn {
+            stream,
+            mode,
+            inbuf: Vec::new(),
+            out: Vec::new(),
+            written: 0,
+            next_seq: 0,
+            next_flush: 0,
+            parked: BTreeMap::new(),
+            paused: false,
+            eof: false,
+            closing: false,
+            dead: false,
+        })
+    }
+
+    fn pending_out(&self) -> usize {
+        self.out.len() - self.written
+    }
+
+    /// Requests parsed but not yet flushed to `out`.
+    fn outstanding(&self) -> bool {
+        self.next_flush != self.next_seq
+    }
+
+    /// Park `bytes` as the reply to request `seq`, then flush every
+    /// consecutively ready reply into the write queue.
+    fn deliver(&mut self, seq: u64, bytes: Vec<u8>) {
+        self.parked.insert(seq, bytes);
+        while let Some(ready) = self.parked.remove(&self.next_flush) {
+            self.out.extend_from_slice(&ready);
+            self.next_flush += 1;
+        }
+    }
+
+    /// Should the reactor poll this connection for readability?
+    fn wants_read(&self) -> bool {
+        !self.paused && !self.closing && !self.eof && !self.dead
+    }
+
+    /// Done serving: peer gone or protocol error, nothing left to say.
+    fn finished(&self) -> bool {
+        self.dead || ((self.eof || self.closing) && !self.outstanding() && self.pending_out() == 0)
+    }
+}
+
+/// Drain `buf` through the first newline: the line (without the
+/// terminator) or `None` if no complete line is buffered yet.
+fn take_line(buf: &mut Vec<u8>) -> Option<Vec<u8>> {
+    let pos = buf.iter().position(|&b| b == b'\n')?;
+    let line: Vec<u8> = buf.drain(..=pos).take(pos).collect();
+    Some(line)
+}
+
+// --- the reactor ----------------------------------------------------
+
+pub(crate) struct Reactor {
+    listener: TcpListener,
+    ctx: Arc<HandlerCtx>,
+    conns: HashMap<usize, Conn>,
+    next_token: usize,
+    coalescer: Coalescer,
+    done: Arc<DoneQueue>,
+    wake_rx: UnixStream,
+    heavy: Vec<JoinHandle<()>>,
+}
+
+/// Run the accept/read/write loop until the stop flag is raised.
+/// Consumes the (already non-blocking) listener; joins every spawned
+/// heavy-request worker before returning.
+pub(crate) fn run(
+    listener: TcpListener,
+    ctx: Arc<HandlerCtx>,
+    coalesce_us: u64,
+    wake_rx: UnixStream,
+    done: Arc<DoneQueue>,
+) {
+    let mut r = Reactor {
+        listener,
+        ctx,
+        conns: HashMap::new(),
+        next_token: 0,
+        coalescer: Coalescer::new(coalesce_us),
+        done,
+        wake_rx,
+        heavy: Vec::new(),
+    };
+    r.run_loop();
+    for h in r.heavy.drain(..) {
+        join_handler(h);
+    }
+    for (_, c) in r.conns.drain() {
+        r.ctx.serve.connections_open.fetch_sub(1, Ordering::Relaxed);
+        drop(c);
+    }
+}
+
+impl Reactor {
+    fn run_loop(&mut self) {
+        loop {
+            let now = Instant::now();
+            if self.coalescer.is_due(now) {
+                self.flush_batch();
+            }
+            if self.ctx.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let (mut fds, tokens) = self.build_pollfds();
+            if !poll_fds(&mut fds, self.poll_timeout_ms(Instant::now())) {
+                break; // unrecoverable poll error: shut the server side down
+            }
+            if fds[1].revents != 0 {
+                self.drain_wake();
+            }
+            if self.ctx.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            for reply in self.done.drain() {
+                self.deliver_reply(reply);
+            }
+            if fds[0].revents & (POLLIN | POLLERR) != 0 {
+                self.accept_new();
+            }
+            for (slot, token) in tokens.iter().enumerate() {
+                let revents = fds[slot + 2].revents;
+                if revents == 0 {
+                    continue;
+                }
+                if revents & POLLNVAL != 0 {
+                    if let Some(c) = self.conns.get_mut(token) {
+                        c.dead = true;
+                    }
+                    continue;
+                }
+                if revents & (POLLIN | POLLHUP | POLLERR) != 0 {
+                    self.on_readable(*token);
+                }
+                if revents & POLLOUT != 0 {
+                    self.on_writable(*token);
+                }
+            }
+            self.reap_heavy();
+            self.sweep_finished();
+        }
+    }
+
+    /// Poll timeout: the coalesce deadline when predicts are parked
+    /// (rounded up to poll's millisecond granularity), a short reap
+    /// interval while heavy workers are in flight (belt-and-braces if
+    /// a wake write ever fails), else a long idle tick.
+    fn poll_timeout_ms(&self, now: Instant) -> i32 {
+        match self.coalescer.timeout(now) {
+            Some(left) => {
+                let ms = (left.as_micros().saturating_add(999) / 1000) as i32;
+                ms.clamp(0, 1000)
+            }
+            None if !self.heavy.is_empty() => 100,
+            None => 1000,
+        }
+    }
+
+    /// fds[0] = listener, fds[1] = wake pipe, fds[2..] = connections
+    /// (paired with the returned token list).
+    fn build_pollfds(&self) -> (Vec<PollFd>, Vec<usize>) {
+        let mut fds = Vec::with_capacity(self.conns.len() + 2);
+        fds.push(PollFd { fd: self.listener.as_raw_fd(), events: POLLIN, revents: 0 });
+        fds.push(PollFd { fd: self.wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+        let mut tokens = Vec::with_capacity(self.conns.len());
+        for (token, conn) in &self.conns {
+            let mut events = 0i16;
+            if conn.wants_read() {
+                events |= POLLIN;
+            }
+            if conn.pending_out() > 0 {
+                events |= POLLOUT;
+            }
+            fds.push(PollFd { fd: conn.stream.as_raw_fd(), events, revents: 0 });
+            tokens.push(*token);
+        }
+        (fds, tokens)
+    }
+
+    fn drain_wake(&mut self) {
+        let mut tmp = [0u8; 64];
+        loop {
+            match (&self.wake_rx).read(&mut tmp) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break, // WouldBlock: fully drained
+            }
+        }
+    }
+
+    fn accept_new(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let start_mode = match self.ctx.protocol {
+                        ProtocolMode::Auto => Mode::Negotiating,
+                        ProtocolMode::JsonLines => Mode::Json,
+                        ProtocolMode::Binary => Mode::Negotiating,
+                    };
+                    let Ok(conn) = Conn::new(stream, start_mode) else {
+                        continue;
+                    };
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    self.conns.insert(token, conn);
+                    self.ctx.serve.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                    self.ctx.serve.connections_open.fetch_add(1, Ordering::Relaxed);
+                    self.ctx.events.emit(
+                        "accept",
+                        vec![
+                            ("conn", Json::num(token as f64)),
+                            ("peer", Json::str(peer.to_string())),
+                        ],
+                    );
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break, // WouldBlock (or transient accept error): done for now
+            }
+        }
+    }
+
+    fn on_readable(&mut self, token: usize) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        let mut tmp = [0u8; READ_CHUNK];
+        loop {
+            // bound what one readiness event can buffer; the parser
+            // below rejects anything this large as oversized anyway
+            if conn.inbuf.len() > MAX_REQUEST_BYTES + FRAME_MAGIC.len() {
+                break;
+            }
+            match conn.stream.read(&mut tmp) {
+                Ok(0) => {
+                    conn.eof = true;
+                    break;
+                }
+                Ok(n) => conn.inbuf.extend_from_slice(&tmp[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+        self.process_input(token);
+        self.check_backpressure(token);
+    }
+
+    fn on_writable(&mut self, token: usize) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        while conn.written < conn.out.len() {
+            match conn.stream.write(&conn.out[conn.written..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    return;
+                }
+                Ok(n) => conn.written += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+        if conn.written == conn.out.len() {
+            conn.out.clear();
+            conn.written = 0;
+            if conn.paused {
+                conn.paused = false; // queue drained: resume reading
+            }
+        }
+    }
+
+    /// Parse everything parseable out of `inbuf` in the connection's
+    /// current mode, dispatching each complete request.
+    fn process_input(&mut self, token: usize) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return;
+            };
+            if conn.closing || conn.dead {
+                return;
+            }
+            match conn.mode {
+                Mode::Negotiating => {
+                    if conn.inbuf.is_empty() {
+                        return;
+                    }
+                    let forced_binary = self.ctx.protocol == ProtocolMode::Binary;
+                    if conn.inbuf[0] == FRAME_MAGIC[0] || forced_binary {
+                        if conn.inbuf.len() < FRAME_MAGIC.len() {
+                            return; // need the rest of the preamble
+                        }
+                        if conn.inbuf[..FRAME_MAGIC.len()] == FRAME_MAGIC {
+                            conn.inbuf.drain(..FRAME_MAGIC.len());
+                            conn.mode = Mode::Binary;
+                        } else if forced_binary {
+                            self.reject(token, true, "expected PSF1 frame preamble");
+                            return;
+                        } else {
+                            self.reject(token, false, "bad frame preamble (expected PSF1)");
+                            return;
+                        }
+                    } else {
+                        conn.mode = Mode::Json;
+                    }
+                }
+                Mode::Json => {
+                    let Some(line) = take_line(&mut conn.inbuf) else {
+                        if conn.inbuf.len() > MAX_REQUEST_BYTES {
+                            self.reject(token, false, "request line exceeds 64 MiB");
+                        }
+                        return;
+                    };
+                    if line.len() > MAX_REQUEST_BYTES {
+                        self.reject(token, false, "request line exceeds 64 MiB");
+                        return;
+                    }
+                    match std::str::from_utf8(&line) {
+                        Ok(text) if text.trim().is_empty() => {} // keep-alive no-op
+                        Ok(text) => match parse_request(text) {
+                            Ok(req) => self.handle_request(token, false, req),
+                            Err(e) => {
+                                let seq = self.next_seq(token);
+                                self.deliver_reply(Reply {
+                                    conn: token,
+                                    seq,
+                                    bytes: json_line(&encode_error(None, &e.to_string())),
+                                });
+                            }
+                        },
+                        Err(_) => {
+                            let seq = self.next_seq(token);
+                            self.deliver_reply(Reply {
+                                conn: token,
+                                seq,
+                                bytes: json_line(&encode_error(
+                                    None,
+                                    "request line is not valid utf-8",
+                                )),
+                            });
+                        }
+                    }
+                }
+                Mode::Binary => match take_frame(&conn.inbuf) {
+                    Ok(None) => return, // truncated frame: wait for more bytes
+                    Ok(Some((opcode, body, consumed))) => {
+                        conn.inbuf.drain(..consumed);
+                        self.ctx.serve.frames_decoded.fetch_add(1, Ordering::Relaxed);
+                        match decode_request(opcode, &body) {
+                            Ok(req) => self.handle_request(token, true, req),
+                            Err(e) => {
+                                let seq = self.next_seq(token);
+                                self.deliver_reply(Reply {
+                                    conn: token,
+                                    seq,
+                                    bytes: encode_error_frame(&e.to_string()),
+                                });
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // malformed length header: no way to resync
+                        self.reject(token, true, &e.to_string());
+                        return;
+                    }
+                },
+            }
+        }
+    }
+
+    fn next_seq(&mut self, token: usize) -> u64 {
+        match self.conns.get_mut(&token) {
+            Some(conn) => {
+                let seq = conn.next_seq;
+                conn.next_seq += 1;
+                seq
+            }
+            None => 0,
+        }
+    }
+
+    /// Queue a final error reply (in the connection's protocol) and
+    /// stop reading; the connection closes once the reply flushes.
+    fn reject(&mut self, token: usize, binary: bool, msg: &str) {
+        let seq = self.next_seq(token);
+        let bytes = if binary {
+            encode_error_frame(msg)
+        } else {
+            json_line(&encode_error(None, msg))
+        };
+        self.deliver_reply(Reply { conn: token, seq, bytes });
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.closing = true;
+        }
+    }
+
+    fn handle_request(&mut self, token: usize, binary: bool, req: Request) {
+        let seq = self.next_seq(token);
+        match req {
+            Request::Ping => {
+                let t0 = Instant::now();
+                let bytes = if binary {
+                    encode_pong_frame()
+                } else {
+                    json_line(&encode_pong())
+                };
+                self.ctx.latency.record(t0.elapsed());
+                self.deliver_reply(Reply { conn: token, seq, bytes });
+            }
+            Request::Stats => {
+                let t0 = Instant::now();
+                let bytes = json_line(&super::encode_stats_for(&self.ctx));
+                self.ctx.latency.record(t0.elapsed());
+                self.deliver_reply(Reply { conn: token, seq, bytes });
+            }
+            Request::Models => {
+                let t0 = Instant::now();
+                let bytes = json_line(&encode_models(&self.ctx.registry.list()));
+                self.ctx.latency.record(t0.elapsed());
+                self.deliver_reply(Reply { conn: token, seq, bytes });
+            }
+            Request::Predict(job) => {
+                let p = PendingPredict { conn: token, seq, binary, job };
+                if self.coalescer.enabled() {
+                    self.coalescer.push(p, Instant::now());
+                } else {
+                    let t0 = Instant::now();
+                    let replies = batch::execute(
+                        vec![p],
+                        &self.ctx.registry,
+                        self.ctx.engine,
+                        &self.ctx.serve,
+                        &self.ctx.events,
+                    );
+                    self.ctx.latency.record(t0.elapsed());
+                    for r in replies {
+                        self.deliver_reply(r);
+                    }
+                }
+            }
+            heavy @ (Request::Cluster(_) | Request::Fit(_) | Request::FitGroup(_)) => {
+                self.spawn_heavy(token, seq, heavy);
+            }
+        }
+    }
+
+    /// Run a cluster/fit/fit_group off-thread, exactly as the legacy
+    /// dispatch would, delivering the reply through the done queue.
+    /// (These only arrive on JSON connections — the binary protocol's
+    /// request opcodes are ping and predict.)
+    fn spawn_heavy(&mut self, token: usize, seq: u64, req: Request) {
+        let ctx = Arc::clone(&self.ctx);
+        let done = Arc::clone(&self.done);
+        self.heavy.push(std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let response = match req {
+                Request::Cluster(job) => {
+                    let id = job.id;
+                    let dims = job.dims;
+                    match ctx.scheduler.run_blocking(job) {
+                        Ok(result) => encode_result(&result, dims),
+                        Err(e) => encode_error(Some(id), &e.to_string()),
+                    }
+                }
+                Request::Fit(job) => match super::run_fit(&ctx, job) {
+                    Ok(response) => response,
+                    Err(e) => encode_error(None, &e.to_string()),
+                },
+                Request::FitGroup(job) => {
+                    let id = job.id;
+                    match super::run_fit_group(&ctx, job) {
+                        Ok(response) => response,
+                        Err(e) => encode_error(Some(id), &e.to_string()),
+                    }
+                }
+                _ => encode_error(None, "internal: light request routed to worker"),
+            };
+            ctx.latency.record(t0.elapsed());
+            done.push(Reply { conn: token, seq, bytes: json_line(&response) });
+        }));
+    }
+
+    /// Execute the parked predict batch (the coalesce window closed).
+    fn flush_batch(&mut self) {
+        let batch = self.coalescer.take();
+        if batch.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        let replies = batch::execute(
+            batch,
+            &self.ctx.registry,
+            self.ctx.engine,
+            &self.ctx.serve,
+            &self.ctx.events,
+        );
+        let elapsed = t0.elapsed();
+        for reply in replies {
+            self.ctx.latency.record(elapsed);
+            self.deliver_reply(reply);
+        }
+    }
+
+    fn deliver_reply(&mut self, reply: Reply) {
+        let token = reply.conn;
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.deliver(reply.seq, reply.bytes);
+        }
+        self.check_backpressure(token);
+    }
+
+    /// Pause reads on a connection whose write queue is over the
+    /// bound; one event + counter per pause episode.
+    fn check_backpressure(&mut self, token: usize) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        if !conn.paused && conn.pending_out() > OUT_BUFFER_LIMIT {
+            conn.paused = true;
+            self.ctx.serve.backpressure.fetch_add(1, Ordering::Relaxed);
+            self.ctx.events.emit(
+                "backpressure",
+                vec![
+                    ("conn", Json::num(token as f64)),
+                    ("queued", Json::num(conn.pending_out() as f64)),
+                ],
+            );
+        }
+    }
+
+    fn reap_heavy(&mut self) {
+        let mut live = Vec::with_capacity(self.heavy.len());
+        for h in self.heavy.drain(..) {
+            if h.is_finished() {
+                join_handler(h);
+            } else {
+                live.push(h);
+            }
+        }
+        self.heavy = live;
+    }
+
+    fn sweep_finished(&mut self) {
+        let finished: Vec<usize> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.finished())
+            .map(|(t, _)| *t)
+            .collect();
+        for token in finished {
+            self.conns.remove(&token);
+            self.ctx.serve.connections_open.fetch_sub(1, Ordering::Relaxed);
+            self.ctx.events.emit("close", vec![("conn", Json::num(token as f64))]);
+        }
+    }
+}
+
+/// A JSON response string as wire bytes (newline-terminated).
+fn json_line(response: &str) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(response.len() + 1);
+    bytes.extend_from_slice(response.as_bytes());
+    bytes.push(b'\n');
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pollfd_matches_libc_layout() {
+        // struct pollfd is {int, short, short}: 8 bytes, int-aligned
+        assert_eq!(std::mem::size_of::<PollFd>(), 8);
+        assert_eq!(std::mem::align_of::<PollFd>(), 4);
+    }
+
+    #[test]
+    fn take_line_splits_and_preserves_remainder() {
+        let mut buf = b"first\nsecond\npart".to_vec();
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b"first"[..]));
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b"second"[..]));
+        assert_eq!(take_line(&mut buf), None);
+        assert_eq!(buf, b"part");
+        let mut empty = b"\n".to_vec();
+        assert_eq!(take_line(&mut empty).as_deref(), Some(&b""[..]));
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn conn_orders_out_of_order_replies() {
+        // loopback socket just to satisfy Conn::new
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let client = std::net::TcpStream::connect(addr).expect("connect");
+        let (stream, _) = listener.accept().expect("accept");
+        drop(client);
+        let mut conn = Conn::new(stream, Mode::Json).expect("conn");
+        conn.next_seq = 3;
+        conn.deliver(1, b"b".to_vec());
+        assert_eq!(conn.pending_out(), 0, "seq 0 not delivered yet");
+        assert!(conn.outstanding());
+        conn.deliver(0, b"a".to_vec());
+        assert_eq!(conn.out, b"ab");
+        conn.deliver(2, b"c".to_vec());
+        assert_eq!(conn.out, b"abc");
+        assert!(!conn.outstanding());
+        assert!(!conn.finished());
+        conn.eof = true;
+        assert!(!conn.finished(), "flush before close");
+        conn.written = conn.out.len();
+        assert_eq!(conn.pending_out(), 0);
+        assert!(conn.finished());
+    }
+
+    #[test]
+    fn done_queue_push_wakes_and_drains() {
+        let (rx, tx) = UnixStream::pair().expect("pair");
+        rx.set_nonblocking(true).expect("nonblocking");
+        let q = DoneQueue::new(tx);
+        q.push(Reply { conn: 7, seq: 0, bytes: b"x".to_vec() });
+        q.push(Reply { conn: 7, seq: 1, bytes: b"y".to_vec() });
+        let mut tmp = [0u8; 8];
+        let n = (&rx).read(&mut tmp).expect("wake bytes pending");
+        assert!(n >= 1);
+        let drained = q.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].seq, 0);
+        assert!(q.drain().is_empty());
+    }
+}

@@ -152,6 +152,7 @@ mod tests {
                 iterations: 1,
                 engine: EngineOpts::serial(),
                 init: InitMethod::KMeansPlusPlus,
+                init_params: crate::cluster::InitParams::default(),
             },
             vec![tag, tag],
             None,

@@ -80,6 +80,46 @@ impl Counters {
     }
 }
 
+/// Serving-layer counter set (reactor + micro-batcher metrics),
+/// appended to the scheduler [`Counters`] in the `stats` response.
+/// Every counter is also observable as a reason-tagged JSONL event
+/// (`accept`, `close`, `frame`, `batch`, `backpressure`) when the
+/// server's [`EventLog`] sink is on — the counters are the cheap
+/// always-on aggregate, the events the per-occurrence trace.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Connections accepted since boot.
+    pub connections_accepted: AtomicU64,
+    /// Connections currently open.
+    pub connections_open: AtomicU64,
+    /// Binary frames successfully decoded (both request opcodes).
+    pub frames_decoded: AtomicU64,
+    /// Coalesced predict engine passes executed (a lone predict with
+    /// coalescing off counts as a batch of one).
+    pub predict_batches: AtomicU64,
+    /// Predict requests served through those passes.
+    pub batched_predicts: AtomicU64,
+    /// Largest number of requests packed into one pass.
+    pub max_batch: AtomicU64,
+    /// Times a slow consumer's connection hit the pending-write bound
+    /// and had its read side paused.
+    pub backpressure: AtomicU64,
+}
+
+impl ServeStats {
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("connections_accepted", self.connections_accepted.load(Ordering::Relaxed)),
+            ("connections_open", self.connections_open.load(Ordering::Relaxed)),
+            ("frames_decoded", self.frames_decoded.load(Ordering::Relaxed)),
+            ("predict_batches", self.predict_batches.load(Ordering::Relaxed)),
+            ("batched_predicts", self.batched_predicts.load(Ordering::Relaxed)),
+            ("max_batch", self.max_batch.load(Ordering::Relaxed)),
+            ("backpressure", self.backpressure.load(Ordering::Relaxed)),
+        ]
+    }
+}
+
 /// Fixed-bucket log-scale latency histogram (1 µs .. ~1000 s).
 #[derive(Debug)]
 pub struct LatencyHistogram {

@@ -1,0 +1,49 @@
+//! Fixture: every frame command is parsed, encoded, and roundtripped.
+
+pub struct FrameCommand {
+    pub cmd: &'static str,
+    pub encode: &'static str,
+    pub tests: &'static [&'static str],
+}
+
+pub const FRAME_COMMANDS: &[FrameCommand] = &[
+    FrameCommand { cmd: "ping", encode: "encode_pong_frame", tests: &["ping_frame_roundtrip"] },
+    FrameCommand { cmd: "predict", encode: "encode_labels_frame", tests: &["labels_roundtrip"] },
+];
+
+pub fn opcode_of(name: &str) -> Result<u8, String> {
+    match name {
+        "ping" => Ok(0x01),
+        "predict" => Ok(0x02),
+        other => Err(format!("unknown frame command {other}")),
+    }
+}
+
+pub fn encode_pong_frame() -> Vec<u8> {
+    vec![0x81]
+}
+
+pub fn encode_labels_frame(labels: &[u32]) -> Vec<u8> {
+    let mut out = vec![0x82];
+    for label in labels {
+        out.extend_from_slice(&label.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_frame_roundtrip() {
+        assert_eq!(opcode_of("ping"), Ok(0x01));
+        assert_eq!(encode_pong_frame(), vec![0x81]);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        assert_eq!(encode_labels_frame(&[1]), vec![0x82, 1, 0, 0, 0]);
+        assert!(opcode_of("predict").is_ok());
+    }
+}

@@ -75,6 +75,19 @@ fn protocol_drift_is_flagged_per_entry() {
     assert_eq!(hits("proto_ok/server/protocol.rs"), vec![]);
 }
 
+#[test]
+fn frame_registry_drift_is_flagged_per_entry() {
+    // Same coverage pass, parameterized for the binary-frame registry:
+    // line 10 has no roundtrip tests; line 12's entry has no opcode
+    // arm, a missing encode fn, and a test that is not a #[test] fn;
+    // line 19 parses an opcode absent from FRAME_COMMANDS.
+    let got = hits("frame_bad/server/frame.rs");
+    let want: Vec<(&str, usize)> =
+        [10, 12, 12, 12, 19].iter().map(|&l| (rule_id::PROTOCOL_COVERAGE, l)).collect();
+    assert_eq!(got, want);
+    assert_eq!(hits("frame_ok/server/frame.rs"), vec![]);
+}
+
 /// `(rule, line)` pairs from a full-tree lint of one fixture subtree —
 /// unlike [`hits`] this runs the crate-wide pass (taint, lock order),
 /// which per-file linting cannot see.
@@ -148,7 +161,7 @@ fn tree_lint_totals_and_allowlist_suppression() {
     // rules plus the crate-wide taint/lock pass (which also flags the
     // condvar fixtures' waits as blocking-under-lock).
     let bare = lint_tree(&fixtures(), &Allowlist::empty()).expect("tree lints");
-    assert_eq!(bare.findings.len(), 28, "findings: {:#?}", bare.findings);
+    assert_eq!(bare.findings.len(), 33, "findings: {:#?}", bare.findings);
     assert!(bare.suppressed.is_empty());
     assert!(bare.unused_allow.is_empty());
     assert!(!bare.clean());
@@ -160,7 +173,7 @@ fn tree_lint_totals_and_allowlist_suppression() {
     )
     .expect("allowlist parses");
     let report = lint_tree(&fixtures(), &allow).expect("tree lints");
-    assert_eq!(report.findings.len(), 27);
+    assert_eq!(report.findings.len(), 32);
     assert_eq!(report.suppressed.len(), 1);
     assert_eq!(report.suppressed[0].0.rule, rule_id::MUTEX_POISON);
     assert_eq!(report.suppressed[0].1, "fixture demo");

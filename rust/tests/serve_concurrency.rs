@@ -1,0 +1,360 @@
+//! Integration: the event-driven serving subsystem under concurrency —
+//! JSON-lines and binary-frame clients interleaved on one listener,
+//! predict micro-batch coalescing on and off, reactor and legacy
+//! loops, with every predict reply bit-identical to a local
+//! `FittedModel::predict_batch`, plus frame rejection, protocol
+//! pinning, idle-client shutdown, and serving counters.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+
+use parsample::cluster::EngineOpts;
+use parsample::data::synthetic::{make_blobs, BlobSpec};
+use parsample::model::{ClusterModel, FittedModel, KMeans};
+use parsample::server::frame::{self, FrameClient, OP_ERROR, OP_PING, OP_PONG, OP_PREDICT};
+use parsample::server::protocol::encode_prediction;
+use parsample::server::{Client, ProtocolMode, Server, ServerConfig};
+use parsample::telemetry::EventLog;
+use parsample::util::json::Json;
+
+const DIMS: usize = 3;
+
+/// Deterministic fitted model + the points it was trained on.
+fn fitted() -> (FittedModel, Vec<f32>) {
+    let data = make_blobs(&BlobSpec {
+        num_points: 600,
+        num_clusters: 4,
+        dims: DIMS,
+        std: 0.05,
+        extent: 10.0,
+        seed: 7,
+    })
+    .expect("blobs");
+    let model = KMeans::new(4).fit(&data).expect("fit");
+    let pts = data.as_slice().to_vec();
+    (model, pts)
+}
+
+/// A server preloaded with the model as "prod", plus the engine opts
+/// its predict path uses (for bit-exact local ground truth).
+fn serve(
+    model: &FittedModel,
+    reactor: bool,
+    coalesce_us: u64,
+    protocol: ProtocolMode,
+    events: Arc<EventLog>,
+) -> (Server, EngineOpts) {
+    let cfg = ServerConfig {
+        reactor,
+        coalesce_us,
+        protocol,
+        events,
+        preload: vec![("prod".to_string(), model.clone())],
+        ..ServerConfig::default()
+    };
+    let engine = cfg.engine;
+    let server = Server::start_with("127.0.0.1:0", cfg).expect("server start");
+    (server, engine)
+}
+
+fn points_json(points: &[f32]) -> String {
+    let rows: Vec<String> = points
+        .chunks(DIMS)
+        .map(|r| {
+            let xs: Vec<String> = r.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", xs.join(","))
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+/// The heart of the PR's acceptance criterion: N simultaneous clients,
+/// half JSON lines and half binary frames, against {reactor, legacy} ×
+/// {coalescing off, on} — every reply must carry the exact bits a
+/// local `predict_batch` produces (JSON compared as the whole response
+/// line against the canonical encoder, binary as raw label/count/
+/// inertia bits).
+#[test]
+fn mixed_protocol_clients_predict_bit_identically() {
+    let (model, pts) = fitted();
+    for (reactor, coalesce_us) in [(true, 0), (true, 1500), (false, 0)] {
+        let (server, engine) =
+            serve(&model, reactor, coalesce_us, ProtocolMode::Auto, EventLog::off());
+        let addr = server.addr();
+        // odd row counts so request boundaries never align with the
+        // engine's reduction blocks
+        let chunks: Vec<&[f32]> = vec![
+            &pts[..7 * DIMS],
+            &pts[7 * DIMS..20 * DIMS],
+            &pts[20 * DIMS..49 * DIMS],
+            &pts[49 * DIMS..110 * DIMS],
+        ];
+        std::thread::scope(|s| {
+            for t in 0..6 {
+                let model = &model;
+                let chunks = &chunks;
+                s.spawn(move || {
+                    if t % 2 == 0 {
+                        let mut client = FrameClient::connect(addr).expect("connect");
+                        for chunk in chunks.iter().cycle().skip(t).take(8) {
+                            let (labels, counts, inertia) =
+                                client.predict("prod", chunk, DIMS).expect("predict");
+                            let want = model.predict_batch_with(chunk, engine).expect("local");
+                            assert_eq!(labels, want.labels);
+                            assert_eq!(counts, want.counts);
+                            assert_eq!(
+                                inertia.to_bits(),
+                                want.inertia.to_bits(),
+                                "binary inertia drifted (reactor={reactor}, coalesce={coalesce_us})"
+                            );
+                        }
+                    } else {
+                        let mut client = Client::connect(addr).expect("connect");
+                        for chunk in chunks.iter().cycle().skip(t).take(8) {
+                            let req = format!(
+                                "{{\"cmd\":\"predict\",\"name\":\"prod\",\"points\":{}}}",
+                                points_json(chunk)
+                            );
+                            let got = client.call(&req).expect("predict");
+                            let want = model.predict_batch_with(chunk, engine).expect("local");
+                            assert_eq!(
+                                got,
+                                encode_prediction("prod", &want),
+                                "JSON reply drifted (reactor={reactor}, coalesce={coalesce_us})"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Coalescing accounting: simultaneous predicts released by a barrier
+/// all arrive inside one window; whatever grouping the reactor
+/// achieves, the counters must add up and every reply must still be
+/// exact.
+#[test]
+fn coalesced_predict_counters_add_up() {
+    let (model, pts) = fitted();
+    let (server, engine) =
+        serve(&model, true, 5_000, ProtocolMode::Auto, EventLog::off());
+    let addr = server.addr();
+    let n = 8;
+    let barrier = Arc::new(Barrier::new(n));
+    std::thread::scope(|s| {
+        for t in 0..n {
+            let barrier = Arc::clone(&barrier);
+            let model = &model;
+            let chunk = &pts[t * 5 * DIMS..(t * 5 + 5) * DIMS];
+            s.spawn(move || {
+                let mut client = FrameClient::connect(addr).expect("connect");
+                barrier.wait();
+                let (labels, counts, inertia) =
+                    client.predict("prod", chunk, DIMS).expect("predict");
+                let want = model.predict_batch_with(chunk, engine).expect("local");
+                assert_eq!(labels, want.labels);
+                assert_eq!(counts, want.counts);
+                assert_eq!(inertia.to_bits(), want.inertia.to_bits());
+            });
+        }
+    });
+    let stats = server.stats();
+    assert_eq!(stats.batched_predicts.load(Ordering::Relaxed), n as u64);
+    let batches = stats.predict_batches.load(Ordering::Relaxed);
+    assert!((1..=n as u64).contains(&batches), "batches={batches}");
+    let max_batch = stats.max_batch.load(Ordering::Relaxed);
+    assert!((1..=n as u64).contains(&max_batch), "max_batch={max_batch}");
+}
+
+/// Read one frame off a raw stream (test-side decoder).
+fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Option<(u8, Vec<u8>)> {
+    let mut tmp = [0u8; 4096];
+    loop {
+        if let Some((op, body, consumed)) = frame::take_frame(buf).expect("client-side frame") {
+            buf.drain(..consumed);
+            return Some((op, body));
+        }
+        let n = stream.read(&mut tmp).expect("read");
+        if n == 0 {
+            return None;
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+fn read_until_eof(stream: &mut TcpStream) -> Vec<u8> {
+    let mut out = Vec::new();
+    let _ = stream.read_to_end(&mut out);
+    out
+}
+
+/// Frame-level rejection on both serving loops: an undecodable body
+/// is answered and the connection survives; an unresyncable length
+/// header (zero-length, oversized) is answered and the connection is
+/// dropped; a bad preamble is answered in JSON and dropped.
+#[test]
+fn malformed_truncated_and_oversized_frames_are_rejected() {
+    let (model, _) = fitted();
+    for reactor in [true, false] {
+        let (server, _) = serve(&model, reactor, 0, ProtocolMode::Auto, EventLog::off());
+        let addr = server.addr();
+
+        // malformed predict body: error reply, stream still serves
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(&frame::FRAME_MAGIC).expect("magic");
+        s.write_all(&frame::encode_frame(OP_PREDICT, &[0xff])).expect("bad predict");
+        let mut buf = Vec::new();
+        let (op, body) = read_frame(&mut s, &mut buf).expect("reply");
+        assert_eq!(op, OP_ERROR, "reactor={reactor}");
+        assert!(
+            String::from_utf8_lossy(&body).contains("malformed predict frame"),
+            "reactor={reactor}: {}",
+            String::from_utf8_lossy(&body)
+        );
+        // unknown opcode: also answered, also survivable
+        s.write_all(&frame::encode_frame(0x55, &[])).expect("unknown opcode");
+        let (op, body) = read_frame(&mut s, &mut buf).expect("reply");
+        assert_eq!(op, OP_ERROR);
+        assert!(String::from_utf8_lossy(&body).contains("unknown request opcode"));
+        s.write_all(&frame::encode_frame(OP_PING, &[])).expect("ping");
+        let (op, _) = read_frame(&mut s, &mut buf).expect("reply");
+        assert_eq!(op, OP_PONG, "connection must survive decode errors");
+        drop(s);
+
+        // zero-length frame: answered, then dropped
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(&frame::FRAME_MAGIC).expect("magic");
+        s.write_all(&0u32.to_le_bytes()).expect("zero len");
+        let mut buf = Vec::new();
+        let (op, body) = read_frame(&mut s, &mut buf).expect("reply");
+        assert_eq!(op, OP_ERROR);
+        assert!(String::from_utf8_lossy(&body).contains("zero-length frame"));
+        assert!(read_frame(&mut s, &mut buf).is_none(), "unresyncable: must close");
+
+        // oversized frame: answered, then dropped — nothing close to
+        // the claimed payload is ever read
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(&frame::FRAME_MAGIC).expect("magic");
+        s.write_all(&((frame::MAX_FRAME_BYTES + 1) as u32).to_le_bytes()).expect("len");
+        let mut buf = Vec::new();
+        let (op, body) = read_frame(&mut s, &mut buf).expect("reply");
+        assert_eq!(op, OP_ERROR);
+        assert!(String::from_utf8_lossy(&body).contains("exceeds"));
+        assert!(read_frame(&mut s, &mut buf).is_none());
+
+        // bad preamble: JSON error (the peer never proved it speaks
+        // frames), then dropped
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(b"PSXX").expect("bad magic");
+        let reply = read_until_eof(&mut s);
+        let text = String::from_utf8_lossy(&reply);
+        let line = text.lines().next().expect("one reply line");
+        let v = Json::parse(line).expect("json error");
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        assert!(v.get("error").expect("error").as_str().expect("str").contains("PSF1"));
+    }
+}
+
+/// `--protocol` pins one wire format: a binary-only listener rejects
+/// JSON greetings with an error frame; a JSON-only listener treats
+/// the magic as a (bad) request line.
+#[test]
+fn pinned_protocols_reject_the_other_format() {
+    let (model, _) = fitted();
+    for reactor in [true, false] {
+        let (server, _) = serve(&model, reactor, 0, ProtocolMode::Binary, EventLog::off());
+        let mut s = TcpStream::connect(server.addr()).expect("connect");
+        s.write_all(b"{\"cmd\":\"ping\"}\n").expect("json hello");
+        let mut buf = Vec::new();
+        let (op, body) = read_frame(&mut s, &mut buf).expect("reply");
+        assert_eq!(op, OP_ERROR, "reactor={reactor}");
+        assert!(String::from_utf8_lossy(&body).contains("PSF1"));
+
+        let (server, _) = serve(&model, reactor, 0, ProtocolMode::JsonLines, EventLog::off());
+        let mut s = TcpStream::connect(server.addr()).expect("connect");
+        s.write_all(b"PSF1\n").expect("magic as a line");
+        let mut reply = Vec::new();
+        let mut tmp = [0u8; 1024];
+        while !reply.contains(&b'\n') {
+            let n = s.read(&mut tmp).expect("read");
+            assert!(n > 0, "server closed without answering");
+            reply.extend_from_slice(&tmp[..n]);
+        }
+        let text = String::from_utf8_lossy(&reply);
+        let v = Json::parse(text.lines().next().expect("line")).expect("json");
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "reactor={reactor}");
+    }
+}
+
+/// Reactor shutdown must not wait on idle connections — including a
+/// binary client that negotiated and then went silent.
+#[test]
+fn idle_clients_do_not_stall_reactor_shutdown() {
+    let (model, _) = fitted();
+    let (mut server, _) = serve(&model, true, 0, ProtocolMode::Auto, EventLog::off());
+    let addr = server.addr();
+    let mut idle_json = Client::connect(addr).expect("connect");
+    let _ = idle_json.call("{\"cmd\":\"ping\"}").expect("ping");
+    let mut idle_binary = FrameClient::connect(addr).expect("connect");
+    idle_binary.ping().expect("ping");
+    let t0 = std::time::Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(5),
+        "shutdown took {:?} with idle connections open",
+        t0.elapsed()
+    );
+    assert!(idle_binary.ping().is_err(), "idle binary connection must be dead");
+}
+
+/// Satellite: serving counters ride the existing `stats` command, and
+/// the reason-tagged event stream records accepts, batches, and
+/// closes.
+#[test]
+fn stats_and_events_surface_serving_counters() {
+    let (model, pts) = fitted();
+    let events = EventLog::capture();
+    let (server, _) = serve(&model, true, 0, ProtocolMode::Auto, Arc::clone(&events));
+    let addr = server.addr();
+
+    let mut binary = FrameClient::connect(addr).expect("connect");
+    binary.ping().expect("ping");
+    let _ = binary.predict("prod", &pts[..10 * DIMS], DIMS).expect("predict");
+    drop(binary);
+
+    let mut json = Client::connect(addr).expect("connect");
+    let req = format!(
+        "{{\"cmd\":\"predict\",\"name\":\"prod\",\"points\":{}}}",
+        points_json(&pts[..4 * DIMS])
+    );
+    let v = Json::parse(&json.call(&req).expect("predict")).expect("json");
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+
+    let stats = Json::parse(&json.call("{\"cmd\":\"stats\"}").expect("stats")).expect("json");
+    let field = |k: &str| stats.get(k).and_then(Json::as_usize).unwrap_or_else(|| {
+        panic!("stats missing {k}: {stats:?}")
+    });
+    assert!(field("connections_accepted") >= 2);
+    assert!(field("connections_open") >= 1);
+    assert!(field("frames_decoded") >= 2, "ping + predict frames");
+    assert!(field("predict_batches") >= 2);
+    assert!(field("batched_predicts") >= 2);
+    assert!(field("max_batch") >= 1);
+    // in-process view agrees with the wire view
+    assert_eq!(
+        server.stats().frames_decoded.load(Ordering::Relaxed) as usize,
+        field("frames_decoded")
+    );
+
+    // the dropped binary client's close is swept asynchronously
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while events.count("close") == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(events.count("accept") >= 2, "events: {:?}", events.captured());
+    assert!(events.count("batch") >= 2, "events: {:?}", events.captured());
+    assert!(events.count("close") >= 1, "events: {:?}", events.captured());
+}
